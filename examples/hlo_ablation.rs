@@ -1,0 +1,30 @@
+// L2 ablation: pallas-lowered vs plain-matmul HLO step programs.
+use snapse::compute::{StepBackend, StepBatch};
+use snapse::util::Rng;
+fn main() -> snapse::Result<()> {
+    let rt = snapse::runtime::PjRt::cpu()?;
+    let mut rng = Rng::new(1);
+    for (dir, tag) in [("artifacts", "pallas"), ("artifacts_matmul", "matmul")] {
+        let manifest = snapse::runtime::Manifest::load(std::path::Path::new(dir))?;
+        for (r, n, b) in [(64usize, 64usize, 512usize), (128, 128, 512), (16, 16, 512)] {
+            let data: Vec<i64> = (0..r * n).map(|_| rng.range(0, 6) as i64 - 3).collect();
+            let m = snapse::matrix::TransitionMatrix::from_row_major(r, n, data)?;
+            let mut be = snapse::compute::xla::backend_from_artifacts(rt.clone(), &m, &manifest)?;
+            let configs: Vec<i64> = (0..b * n).map(|_| rng.range(0, 20) as i64).collect();
+            let spikes: Vec<u8> = (0..b * r).map(|_| rng.chance(0.3) as u8).collect();
+            let batch = StepBatch { b, n, r, configs: &configs, spikes: &spikes };
+            // warmup
+            for _ in 0..3 { be.step_batch(&batch)?; }
+            let mut samples: Vec<u128> = Vec::new();
+            for _ in 0..60 {
+                let t = std::time::Instant::now();
+                let out = be.step_batch(&batch)?;
+                std::hint::black_box(&out);
+                samples.push(t.elapsed().as_nanos());
+            }
+            samples.sort();
+            println!("{tag:7} r{r} n{n} b{b}: median {:.1} µs", samples[30] as f64 / 1e3);
+        }
+    }
+    Ok(())
+}

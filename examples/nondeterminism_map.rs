@@ -1,0 +1,48 @@
+//! Ψ-explosion map (paper §4.2): how the count of valid spiking vectors
+//! per configuration — and with it the frontier — grows with system
+//! structure. The paper's Algorithm 2 materializes all Ψ strings; this
+//! example shows why the iterator + batching design matters.
+//!
+//! ```bash
+//! cargo run --release --example nondeterminism_map
+//! ```
+
+use snapse::engine::{applicable_rules, ConfigVector, ExploreOptions, Explorer};
+use snapse::util::fmt::Table;
+
+fn main() {
+    println!("Ψ at the initial configuration, by system structure:\n");
+    let mut t = Table::new(&["system", "neurons", "rules", "Ψ(C0)", "configs@d4", "Σψ@d4"]);
+    let mut systems = vec![
+        snapse::generators::paper_pi(),
+        snapse::generators::nat_generator(),
+        snapse::generators::counter_chain(6, 3),
+        snapse::generators::ring(6, 2),
+    ];
+    for k in [2u64, 3, 4] {
+        systems.push(snapse::generators::ring_with_branching(4, k, k));
+    }
+    for sys in &systems {
+        let c0 = ConfigVector::new(sys.initial_config());
+        let psi = applicable_rules(sys, &c0).psi();
+        let rep = Explorer::new(sys, ExploreOptions::breadth_first().max_depth(4)).run();
+        t.row(&[
+            sys.name.clone(),
+            sys.num_neurons().to_string(),
+            sys.num_rules().to_string(),
+            psi.to_string(),
+            rep.visited.len().to_string(),
+            rep.stats.psi_total.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Worst case: Ψ = k^m exactly, the paper's eq. (8)
+    println!("\nΨ(C0) for ring_branch(m, k, k) is k^m (paper eq. (8)):");
+    for (m, k) in [(4usize, 2u64), (4, 3), (6, 2), (8, 2)] {
+        let sys = snapse::generators::ring_with_branching(m, k, k);
+        let psi = applicable_rules(&sys, &ConfigVector::new(sys.initial_config())).psi();
+        println!("  m={m}, k={k}: Ψ = {psi} (= {k}^{m})");
+        assert_eq!(psi, (k as u128).pow(m as u32));
+    }
+}

@@ -1,0 +1,58 @@
+//! Quickstart: build an SN P system, explore it, analyze it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use snapse::prelude::*;
+
+fn main() -> snapse::Result<()> {
+    // 1. Build a system with the fluent API — the paper's Figure-1 Π.
+    let sys = SystemBuilder::new("quickstart_pi")
+        .neuron_labeled("σ1", 2, vec![Rule::threshold_guarded(2, 1, 1), Rule::b3(2)])
+        .neuron_labeled("σ2", 1, vec![Rule::b3(1)])
+        .neuron_labeled("σ3", 1, vec![Rule::b3(1), Rule::b3(2)])
+        .synapses(&[(0, 1), (0, 2), (1, 0), (1, 2)])
+        .output(2)
+        .build()?;
+    println!("{sys}");
+
+    // 2. Its spiking transition matrix (paper Definition 2 / eq. (1)).
+    let m = snapse::matrix::build_matrix(&sys);
+    println!("M_Π =\n{}", m.render());
+
+    // 3. One step of eq. (2): C1 = C0 + S·M.
+    let c1 = m.step(&[2, 1, 1], &[1, 0, 1, 1, 0])?;
+    println!("C0 = [2,1,1], S = <1,0,1,1,0>  ⇒  C1 = {c1:?}\n");
+
+    // 4. Explore the computation tree (Algorithm 1) to depth 6.
+    let mut explorer = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(6));
+    let report = explorer.run();
+    println!("{}", snapse::output::render_summary(&sys, &report));
+    println!("allGenCk = {}\n", report.render_all_gen_ck());
+
+    // 5. Same exploration through the parallel coordinator.
+    let mut coord = Coordinator::new(
+        &sys,
+        CoordinatorConfig { max_depth: Some(6), ..Default::default() },
+    );
+    let run = coord.run()?;
+    assert_eq!(run.visited.in_order(), report.visited.in_order());
+    println!(
+        "coordinator agrees: {} configs via {} workers, {:.0} steps/s",
+        run.visited.len(),
+        run.metrics.workers,
+        run.metrics.steps_per_sec()
+    );
+
+    // 6. What number set does the classical generator compute?
+    let gen = snapse::generators::nat_generator();
+    let set = snapse::engine::generated_set(&gen, 10);
+    println!("\nnat_gen generates (≤10): {:?}  — ℕ∖{{1}}", set);
+
+    // 7. A random walk (one physical run of the system).
+    let mut walk = snapse::engine::RandomWalk::new(&gen, 42);
+    let rec = walk.run(20);
+    println!("random walk (seed 42): output spikes at {:?}", rec.trace.times);
+    Ok(())
+}

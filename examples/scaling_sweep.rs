@@ -1,0 +1,92 @@
+//! E6 + E7 — the end-to-end driver: explore real workloads through the
+//! full stack (enumeration → batching → PJRT device execution → dedup)
+//! and report the headline metric, **steps/second**, host vs device,
+//! across system sizes. This is the quantitative evaluation the paper
+//! motivates (§1.3, §3) but does not tabulate.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example scaling_sweep
+//! ```
+
+use snapse::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use snapse::util::fmt::{human_rate, Table};
+
+fn run_one(
+    sys: &snapse::snp::SnpSystem,
+    backend: BackendChoice,
+    max_configs: usize,
+) -> snapse::Result<(usize, u64, f64, std::time::Duration)> {
+    let mut coord = Coordinator::new(
+        sys,
+        CoordinatorConfig {
+            max_configs: Some(max_configs),
+            backend,
+            batch_target: 512,
+            ..Default::default()
+        },
+    );
+    let rep = coord.run()?;
+    Ok((
+        rep.visited.len(),
+        rep.metrics.total_steps(),
+        rep.metrics.steps_per_sec(),
+        rep.metrics.total_elapsed,
+    ))
+}
+
+fn main() -> snapse::Result<()> {
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    if !have_artifacts {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts` for the device column");
+    }
+
+    println!("end-to-end exploration throughput (workload: branching rings)\n");
+    let mut table = Table::new(&[
+        "system", "R", "N", "configs", "steps", "host", "device", "speedup",
+    ]);
+    // wide rings: state-space size scales with m, branching stays ≤ 2^w
+    // (unbounded Ψ would exhaust memory before measuring anything useful)
+    for (m, w, budget) in [
+        (8usize, 4usize, 4_000usize),
+        (16, 5, 6_000),
+        (32, 5, 6_000),
+        (64, 6, 6_000),
+        (122, 6, 6_000), // R = 122+6 = 128: fits the largest artifact shape
+    ] {
+        let sys = snapse::generators::wide_ring(m, w, 3);
+        let r = sys.num_rules();
+        let n = sys.num_neurons();
+        let (cfgs, steps, host_rate, _) = run_one(&sys, BackendChoice::Host, budget)?;
+        let (dev_rate_str, speedup) = if have_artifacts {
+            match run_one(
+                &sys,
+                BackendChoice::Xla { artifacts: "artifacts".into() },
+                budget,
+            ) {
+                Ok((_, _, dev_rate, _)) => {
+                    (human_rate(dev_rate), format!("{:.2}x", dev_rate / host_rate))
+                }
+                Err(e) => (format!("n/a ({e})"), "-".into()),
+            }
+        } else {
+            ("n/a".into(), "-".into())
+        };
+        table.row(&[
+            sys.name.clone(),
+            r.to_string(),
+            n.to_string(),
+            cfgs.to_string(),
+            steps.to_string(),
+            human_rate(host_rate),
+            dev_rate_str,
+            speedup,
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\n(device = AOT JAX/Pallas step program on the PJRT CPU client — the\n\
+         paper's GPU role; see DESIGN.md §Hardware-Adaptation for the real-TPU\n\
+         VMEM/MXU estimates. Speedup shape, not absolute numbers, is the claim.)"
+    );
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Smoke test: the three-layer AOT bridge end to end.
+//!
+//! Loads the (R=5, N=3) paper-shape artifact (JAX/Pallas → HLO text),
+//! compiles it on the PJRT CPU client, and checks the paper's eq. (2)
+//! numbers, including a padded-shape round trip.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_smoke
+//! ```
+
+use snapse::compute::{StepBackend, StepBatch};
+
+fn main() -> snapse::Result<()> {
+    let rt = snapse::runtime::PjRt::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = snapse::runtime::Manifest::load(std::path::Path::new("artifacts"))?;
+    println!("manifest: {}", manifest.describe());
+
+    // exact-shape path: Π's (5, 3)
+    let sys = snapse::generators::paper_pi();
+    let m = snapse::matrix::build_matrix(&sys);
+    let mut be = snapse::compute::xla::backend_from_artifacts(rt.clone(), &m, &manifest)?;
+    assert_eq!(be.physical_shape(), (5, 3), "exact artifact preferred");
+    let cfg = [2i64, 1, 1, 2, 1, 1];
+    let spk = [1u8, 0, 1, 1, 0, 0, 1, 1, 1, 0];
+    let out = be.step_batch(&StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: &spk })?;
+    assert_eq!(out, vec![2, 1, 2, 1, 1, 2], "paper eq. (2) on device");
+    println!("exact-shape step OK: {out:?}");
+
+    // padded path: a 6-neuron ring (R=6, N=6) runs on the (8, 8) artifact
+    let ring = snapse::generators::ring(6, 2);
+    let rm = snapse::matrix::build_matrix(&ring);
+    let mut rbe = snapse::compute::xla::backend_from_artifacts(rt.clone(), &rm, &manifest)?;
+    assert_eq!(rbe.physical_shape(), (8, 8), "padded cover");
+    let rcfg: Vec<i64> = vec![2; 6];
+    let rspk: Vec<u8> = vec![1; 6];
+    let rout = rbe.step_batch(&StepBatch { b: 1, n: 6, r: 6, configs: &rcfg, spikes: &rspk })?;
+    assert_eq!(rout, vec![2; 6], "ring conserves spikes");
+    println!("padded-shape step OK: {rout:?} (waste {:.0}%)", rbe.padding_waste() * 100.0);
+
+    println!("runtime stats: {:?}", rt.stats());
+    println!("xla_smoke OK");
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT lowering: JAX/Pallas step programs → HLO text + manifest.
+
+Run once by ``make artifacts``; the Rust runtime consumes the output and
+Python never appears on the request path again.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: jax
+≥ 0.5 emits 64-bit instruction ids that the published xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly
+(see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts            # default grid
+    python -m compile.aot --out-dir ../artifacts --report   # VMEM/MXU table
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.snp_step import plan_tiles
+
+# Shapes lowered by default:
+#  - the paper's Π: (R, N) = (5, 3);
+#  - shipped generators' exact shapes (ring/counter/etc. used in examples);
+#  - a generic power-of-two grid for arbitrary systems via padding.
+DEFAULT_SHAPES = [
+    (5, 3),  # paper_pi / nat_gen (E1, E2, E5)
+    (4, 4),  # even_gen (4 rules, 3 neurons → padded grid handles; exact for ring:4:1? no)
+    (8, 8),
+    (16, 16),
+    (32, 32),
+    (64, 64),
+    (128, 128),
+]
+DEFAULT_BATCHES = [1, 8, 32, 128, 512]
+# K-step replay programs (B = 1), lowered for the paper shape.
+REPLAY_SHAPES = [(5, 3)]
+REPLAY_KS = [8, 32, 128]
+# Big shapes get a trimmed batch ladder to bound artifact count/compile RAM.
+MAX_ELEMS = 512 * 128  # cap B·N per artifact
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(r: int, n: int, b: int, variant: str = "pallas") -> str:
+    """Lower one step program at shape (B, R, N)."""
+    s_spec = jax.ShapeDtypeStruct((b, r), jnp.float32)
+    m_spec = jax.ShapeDtypeStruct((r, n), jnp.float32)
+    c_spec = jax.ShapeDtypeStruct((b, n), jnp.float32)
+    fn = model.step if variant == "pallas" else model.step_matmul
+    lowered = jax.jit(fn).lower(s_spec, m_spec, c_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_replay(r: int, n: int, k: int) -> str:
+    """Lower a K-step replay program (lax.scan over the Pallas kernel,
+    B = 1): verifies recorded walks on-device with ONE dispatch for the
+    whole trajectory — M is uploaded once and stays resident across all K
+    steps inside the program itself."""
+    s_spec = jax.ShapeDtypeStruct((k, 1, r), jnp.float32)
+    m_spec = jax.ShapeDtypeStruct((r, n), jnp.float32)
+    c_spec = jax.ShapeDtypeStruct((1, n), jnp.float32)
+    lowered = jax.jit(model.multi_step).lower(s_spec, m_spec, c_spec)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, shapes, batches, variant: str = "pallas") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for r, n in shapes:
+        for b in batches:
+            if b * n > MAX_ELEMS and b > 1:
+                continue
+            name = f"step_r{r}_n{n}_b{b}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            text = lower_step(r, n, b, variant)
+            with open(path, "w") as f:
+                f.write(text)
+            plan = plan_tiles(b, r, n)
+            entries.append(
+                {
+                    "kind": "step",
+                    "r": r,
+                    "n": n,
+                    "b": b,
+                    "path": name,
+                    "variant": variant,
+                    "vmem_bytes": plan.vmem_bytes,
+                    "flops": plan.flops,
+                    "mxu_bound": round(plan.mxu_utilization_bound, 4),
+                }
+            )
+            print(f"  wrote {name} ({len(text)} chars)")
+    # replay programs (scan over K steps, B = 1)
+    for r, n in REPLAY_SHAPES:
+        for k in REPLAY_KS:
+            name = f"replay_r{r}_n{n}_k{k}.hlo.txt"
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(lower_replay(r, n, k))
+            plan = plan_tiles(1, r, n)
+            entries.append(
+                {
+                    "kind": "replay",
+                    "r": r,
+                    "n": n,
+                    "b": 1,
+                    "k": k,
+                    "path": name,
+                    "variant": "pallas-scan",
+                    "vmem_bytes": plan.vmem_bytes,
+                    "flops": plan.flops * k,
+                }
+            )
+            print(f"  wrote {name}")
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts in {out_dir}")
+    return manifest
+
+
+def report(shapes, batches) -> None:
+    """Print the per-shape VMEM footprint / MXU-bound table (DESIGN §Perf).
+
+    interpret=True wallclock is NOT a TPU proxy; these structural numbers
+    are what we optimize (tile residency, MXU fill)."""
+    print(f"{'shape (B,R,N)':>18} {'tiles':>10} {'VMEM':>10} {'FLOPs':>12} {'MXU bound':>10}")
+    for r, n in shapes:
+        for b in batches:
+            if b * n > MAX_ELEMS and b > 1:
+                continue
+            p = plan_tiles(b, r, n)
+            print(
+                f"{f'({b},{r},{n})':>18} {f'{p.tb}x{p.tn}':>10} "
+                f"{p.vmem_bytes:>9}B {p.flops:>12} {p.mxu_utilization_bound:>10.3f}"
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variant", default="pallas", choices=["pallas", "matmul"])
+    ap.add_argument("--shapes", default=None, help="comma list rxn, e.g. 5x3,16x16")
+    ap.add_argument("--batches", default=None, help="comma list, e.g. 1,8,32")
+    ap.add_argument("--report", action="store_true", help="print VMEM/MXU table only")
+    args = ap.parse_args()
+
+    shapes = DEFAULT_SHAPES
+    if args.shapes:
+        shapes = [tuple(int(x) for x in s.split("x")) for s in args.shapes.split(",")]
+    batches = DEFAULT_BATCHES
+    if args.batches:
+        batches = [int(x) for x in args.batches.split(",")]
+
+    if args.report:
+        report(shapes, batches)
+        return
+    build(args.out_dir, shapes, batches, args.variant)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the step kernel — the CORE correctness signal.
+
+Everything the Pallas kernel (and the lowered HLO the Rust runtime
+executes) computes must match this, elementwise, exactly (f32 counts are
+integers far below 2**24).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def step_ref(s, m, c):
+    """C' = C + S·M in plain jnp."""
+    return c + jnp.dot(s, m, preferred_element_type=jnp.float32)
+
+
+def step_ref_numpy(s: np.ndarray, m: np.ndarray, c: np.ndarray) -> np.ndarray:
+    """Same oracle in int64 numpy — the no-float ground truth."""
+    return c.astype(np.int64) + s.astype(np.int64) @ m.astype(np.int64)
+
+
+def masked_step_ref(s, m, c, guard_min, guard_exact_mask):
+    """Oracle for the fused-applicability variant."""
+    owner = (np.asarray(m) < 0).astype(np.float32)
+    k = np.asarray(c) @ owner.T
+    ge = k >= np.asarray(guard_min)[None, :]
+    eq = k == np.asarray(guard_min)[None, :]
+    ok = np.where(np.asarray(guard_exact_mask)[None, :] > 0, eq, ge)
+    s_ok = np.asarray(s) * ok.astype(np.float32)
+    return np.asarray(c) + s_ok @ np.asarray(m)

@@ -1,0 +1,169 @@
+"""Layer 1 — the Pallas transition-step kernel.
+
+Computes the paper's eq. (2) for a whole frontier batch in one fused
+kernel::
+
+    C' = C + S · M        S: (B, R) 0/1,  M: (R, N),  C/C': (B, N)
+
+CUDA → TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper maps one
+GPU thread per product element and reduces; on TPU the natural unit is the
+MXU systolic array, so the whole batch is a single tiled matmul fused with
+the `C +` add (one VMEM round trip, no host staging between multiply and
+add — the paper did the add in a second kernel pass).
+
+Tiling: the batch (B) and neuron (N) axes are gridded into (TB, TN) VMEM
+tiles; the rule axis (R) is kept resident per tile pair and accumulated in
+one dot. `plan_tiles` reports the VMEM footprint so `aot.py --report` can
+check it against the ~16 MiB/core budget of a real TPU.
+
+The kernel MUST run with ``interpret=True`` here: real TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute. The lowered HLO
+is therefore plain XLA ops — identical numerics, same fusion structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class TilePlan:
+    """Tile sizes and the derived VMEM/MXU estimates for one shape."""
+
+    b: int
+    r: int
+    n: int
+    tb: int  # batch-axis tile
+    tn: int  # neuron-axis tile
+    grid: tuple
+
+    @property
+    def vmem_bytes(self) -> int:
+        """f32 bytes resident per grid step: S-tile + M-tile + C-tile + out."""
+        s_tile = self.tb * self.r
+        m_tile = self.r * self.tn
+        c_tile = self.tb * self.tn
+        return 4 * (s_tile + m_tile + 2 * c_tile)
+
+    @property
+    def flops(self) -> int:
+        """Matmul core: 2·B·R·N plus the B·N add."""
+        return 2 * self.b * self.r * self.n + self.b * self.n
+
+    @property
+    def mxu_utilization_bound(self) -> float:
+        """Fraction of an (128×128) MXU pass the tile shapes can fill —
+        the structural ceiling on utilization for this shape (small R or N
+        underfill the systolic array)."""
+        fill_k = min(self.r, 128) / 128.0
+        fill_n = min(self.tn, 128) / 128.0
+        fill_m = min(self.tb, 128) / 128.0
+        return fill_m * fill_k * fill_n
+
+
+VMEM_BUDGET = 16 * 1024 * 1024  # ≈ one TPU core's VMEM
+
+
+def plan_tiles(b: int, r: int, n: int, vmem_budget: int = VMEM_BUDGET) -> TilePlan:
+    """Choose (TB, TN) tiles.
+
+    Prefer whole-array tiles when the working set fits the VMEM budget —
+    a single grid step avoids the sequential grid loop entirely (measured
+    1.1–1.6× on CPU-PJRT, see EXPERIMENTS.md §Perf iteration 3, and one
+    MXU pass per call on TPU). Otherwise fall back to the largest
+    power-of-two divisor tiles that fit.
+    """
+    full = TilePlan(b=b, r=r, n=n, tb=b, tn=n, grid=(1, 1))
+    if full.vmem_bytes <= vmem_budget:
+        return full
+
+    def tiles_of(dim: int):
+        t = 1
+        out = [1]
+        while t * 2 <= dim and dim % (t * 2) == 0:
+            t *= 2
+            out.append(t)
+        return out
+
+    best = None
+    for tb in tiles_of(b):
+        for tn in tiles_of(n):
+            p = TilePlan(b=b, r=r, n=n, tb=tb, tn=tn, grid=(b // tb, n // tn))
+            if p.vmem_bytes <= vmem_budget:
+                score = (tb * tn, p.mxu_utilization_bound)
+                if best is None or score > best[0]:
+                    best = (score, p)
+    assert best is not None, f"no tile of ({b},{r},{n}) fits {vmem_budget}B VMEM"
+    return best[1]
+
+
+def _step_kernel(s_ref, m_ref, c_ref, out_ref):
+    """One (TB, TN) tile: out = c + s @ m, accumulated in f32."""
+    s = s_ref[...]
+    m = m_ref[...]
+    c = c_ref[...]
+    # jnp.dot on (TB, R) × (R, TN) lowers to the MXU on real TPUs;
+    # preferred_element_type pins the f32 accumulator (counts are exact).
+    acc = jnp.dot(s, m, preferred_element_type=jnp.float32)
+    out_ref[...] = c + acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def step_reference_shape(s, m, c):
+    """Non-pallas stand-in used only for shape inference in tests."""
+    return c + s @ m
+
+
+def step_pallas(s: jax.Array, m: jax.Array, c: jax.Array) -> jax.Array:
+    """The fused transition step as a Pallas call.
+
+    Arguments are f32 arrays: ``s`` (B, R), ``m`` (R, N), ``c`` (B, N).
+    Returns ``c + s @ m`` with shape (B, N).
+    """
+    b, r = s.shape
+    r2, n = m.shape
+    assert r == r2, f"rule-axis mismatch {r} vs {r2}"
+    assert c.shape == (b, n), f"config shape {c.shape} != {(b, n)}"
+    plan = plan_tiles(b, r, n)
+    return pl.pallas_call(
+        _step_kernel,
+        grid=plan.grid,
+        in_specs=[
+            # S: tile the batch axis, keep all R resident
+            pl.BlockSpec((plan.tb, r), lambda i, j: (i, 0)),
+            # M: keep all R resident, tile the neuron axis
+            pl.BlockSpec((r, plan.tn), lambda i, j: (0, j)),
+            # C: tile both
+            pl.BlockSpec((plan.tb, plan.tn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((plan.tb, plan.tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(s, m, c)
+
+
+def masked_step_pallas(s, m, c, guard_min, guard_exact_mask):
+    """Extension kernel (fused applicability recheck, E8 ablation).
+
+    Re-validates the spiking vector on-device before applying it:
+    a row of S is zeroed wherever its rule's guard is violated by C —
+    ``k ≥ guard_min[r]`` for threshold rules, ``k == guard_min[r]`` when
+    ``guard_exact_mask[r] == 1``. `owner` one-hot (R, N) maps rules to
+    their neuron, reusing M's sign structure: owner = (M < 0).
+
+    This is VPU elementwise work fused ahead of the MXU matmul — the part
+    the paper's host (Python) did between kernel launches.
+    """
+    owner = (m < 0).astype(jnp.float32)  # (R, N): rule r consumes in its neuron
+    # spike count of each rule's neuron, per batch row: (B, R)
+    k = c @ owner.T
+    ge = k >= guard_min[None, :]
+    eq = k == guard_min[None, :]
+    ok = jnp.where(guard_exact_mask[None, :] > 0, eq, ge)
+    s_ok = s * ok.astype(jnp.float32)
+    return step_pallas(s_ok, m, c)

@@ -1,0 +1,53 @@
+"""Layer 2 — the JAX step model lowered to the AOT artifacts.
+
+The "model" of this paper is the frontier transition program: given a
+batch of spiking vectors S, the system matrix M, and the batch's current
+configurations C, produce the next configurations. `step` calls the L1
+Pallas kernel so both lower into the same HLO module.
+
+Variants:
+
+- ``step``          — the production program (fused Pallas kernel).
+- ``step_matmul``   — plain-XLA variant (no Pallas), ablation baseline.
+- ``step_masked``   — step fused with on-device guard rechecking (E8).
+- ``multi_step``    — K chained steps with a shared M (scan; used to show
+  XLA keeps M device-resident across steps — the round-trip cost the
+  paper's §3.1 worries about disappears under AOT).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.snp_step import masked_step_pallas, step_pallas
+
+
+def step(s, m, c):
+    """C' = C + S·M (Pallas kernel). All args f32."""
+    return (step_pallas(s, m, c),)
+
+
+def step_matmul(s, m, c):
+    """Ablation: the same computation as a bare XLA dot+add."""
+    return (c + jnp.dot(s, m, preferred_element_type=jnp.float32),)
+
+
+def step_masked(s, m, c, guard_min, guard_exact_mask):
+    """Step with fused on-device applicability recheck."""
+    return (masked_step_pallas(s, m, c, guard_min, guard_exact_mask),)
+
+
+def multi_step(s_seq, m, c):
+    """Apply K spiking vectors in sequence: s_seq is (K, B, R).
+
+    M stays device-resident across the scan — one upload per call instead
+    of per step (the paper's host↔device traffic concern).
+    """
+
+    def body(carry, s):
+        nxt = step_pallas(s, m, carry)
+        return nxt, None
+
+    final, _ = jax.lax.scan(body, c, s_seq)
+    return (final,)

@@ -1,0 +1,61 @@
+"""AOT path tests: lowering produces loadable HLO text + a sane manifest."""
+
+import json
+import os
+
+import numpy as np
+
+from compile import aot
+from compile.kernels.snp_step import plan_tiles
+
+
+def test_lower_step_emits_hlo_text():
+    text = aot.lower_step(5, 3, 2)
+    assert text.startswith("HloModule")
+    # entry computation must take the three f32 arrays at the right shapes
+    assert "f32[2,5]" in text, "S (B,R)"
+    assert "f32[5,3]" in text, "M (R,N)"
+    assert "f32[2,3]" in text, "C (B,N)"
+    # lowered with return_tuple=True → tuple root
+    assert "(f32[2,3]" in text
+
+
+def test_matmul_variant_also_lowers():
+    text = aot.lower_step(5, 3, 1, variant="matmul")
+    assert text.startswith("HloModule")
+    assert "dot(" in text
+
+
+def test_build_writes_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build(out, shapes=[(5, 3)], batches=[1, 4])
+    steps = [e for e in manifest["entries"] if e["kind"] == "step"]
+    replays = [e for e in manifest["entries"] if e["kind"] == "replay"]
+    assert len(steps) == 2
+    assert len(replays) == len(aot.REPLAY_KS), "replay programs always emitted"
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    for e in on_disk["entries"]:
+        path = os.path.join(out, e["path"])
+        assert os.path.exists(path)
+        assert e["vmem_bytes"] > 0
+    for e in steps:
+        assert e["flops"] == 2 * e["b"] * e["r"] * e["n"] + e["b"] * e["n"]
+    for e in replays:
+        assert e["k"] in aot.REPLAY_KS
+
+
+def test_tile_plan_structure():
+    p = plan_tiles(512, 5, 3)
+    assert p.tb * p.grid[0] == 512
+    assert p.tn * p.grid[1] == 3
+    assert p.vmem_bytes <= 16 * 1024 * 1024, "fits the TPU VMEM budget"
+    # MXU bound is a fraction
+    assert 0 < p.mxu_utilization_bound <= 1.0
+    # bigger tiles fill the MXU better
+    assert plan_tiles(128, 128, 128).mxu_utilization_bound == 1.0
+
+
+def test_default_grid_has_paper_shape():
+    assert (5, 3) in aot.DEFAULT_SHAPES

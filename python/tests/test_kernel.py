@@ -1,0 +1,137 @@
+"""L1 kernel vs pure-jnp/numpy oracle — the core correctness signal.
+
+Hypothesis sweeps shapes and values; exactness is asserted (counts are
+small integers, f32-exact)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import masked_step_ref, step_ref, step_ref_numpy
+from compile.kernels.snp_step import (
+    masked_step_pallas,
+    plan_tiles,
+    step_pallas,
+)
+
+# The paper's Π matrix (eq. (1)).
+M_PI = np.array(
+    [[-1, 1, 1], [-2, 1, 1], [1, -1, 1], [0, 0, -1], [0, 0, -2]],
+    dtype=np.float32,
+)
+
+
+def _random_case(rng, b, r, n):
+    s = (rng.random((b, r)) < 0.4).astype(np.float32)
+    m = rng.integers(-4, 5, size=(r, n)).astype(np.float32)
+    c = rng.integers(0, 50, size=(b, n)).astype(np.float32)
+    return s, m, c
+
+
+def test_paper_eq2_single_row():
+    s = np.array([[1, 0, 1, 1, 0]], dtype=np.float32)
+    c = np.array([[2, 1, 1]], dtype=np.float32)
+    out = np.asarray(step_pallas(jnp.asarray(s), jnp.asarray(M_PI), jnp.asarray(c)))
+    np.testing.assert_array_equal(out, [[2, 1, 2]])
+
+
+def test_paper_eq2_second_vector():
+    s = np.array([[0, 1, 1, 1, 0]], dtype=np.float32)
+    c = np.array([[2, 1, 1]], dtype=np.float32)
+    out = np.asarray(step_pallas(jnp.asarray(s), jnp.asarray(M_PI), jnp.asarray(c)))
+    np.testing.assert_array_equal(out, [[1, 1, 2]])
+
+
+def test_zero_spiking_vector_is_identity():
+    s = np.zeros((4, 5), dtype=np.float32)
+    c = np.arange(12, dtype=np.float32).reshape(4, 3)
+    out = np.asarray(step_pallas(jnp.asarray(s), jnp.asarray(M_PI), jnp.asarray(c)))
+    np.testing.assert_array_equal(out, c)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    r=st.integers(1, 24),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_random_shapes(b, r, n, seed):
+    rng = np.random.default_rng(seed)
+    s, m, c = _random_case(rng, b, r, n)
+    got = np.asarray(step_pallas(jnp.asarray(s), jnp.asarray(m), jnp.asarray(c)))
+    want_jnp = np.asarray(step_ref(jnp.asarray(s), jnp.asarray(m), jnp.asarray(c)))
+    want_int = step_ref_numpy(s, m, c)
+    np.testing.assert_array_equal(got, want_jnp)
+    np.testing.assert_array_equal(got.astype(np.int64), want_int)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bpow=st.integers(0, 7),
+    npow=st.integers(0, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_tiled_pow2_shapes(bpow, npow, seed):
+    """Power-of-two shapes exercise the real multi-tile grid path."""
+    b, n, r = 2**bpow, 2**npow, 8
+    rng = np.random.default_rng(seed)
+    s, m, c = _random_case(rng, b, r, n)
+    got = np.asarray(step_pallas(jnp.asarray(s), jnp.asarray(m), jnp.asarray(c)))
+    np.testing.assert_array_equal(got.astype(np.int64), step_ref_numpy(s, m, c))
+    plan = plan_tiles(b, r, n)
+    assert plan.grid[0] * plan.tb == b
+    assert plan.grid[1] * plan.tn == n
+
+
+def test_counts_exact_up_to_large_values():
+    # f32 exactness claim: counts up to 2^20 survive the round trip
+    s = np.ones((1, 1), dtype=np.float32)
+    m = np.array([[1]], dtype=np.float32)
+    c = np.array([[float(2**20)]], dtype=np.float32)
+    out = np.asarray(step_pallas(jnp.asarray(s), jnp.asarray(m), jnp.asarray(c)))
+    assert out[0, 0] == 2**20 + 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 16), seed=st.integers(0, 2**31))
+def test_masked_step_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    r, n = 5, 3
+    s = (rng.random((b, r)) < 0.5).astype(np.float32)
+    c = rng.integers(0, 6, size=(b, n)).astype(np.float32)
+    guard_min = np.array([2, 2, 1, 1, 2], dtype=np.float32)
+    exact = np.array([0, 0, 0, 0, 0], dtype=np.float32)
+    got = np.asarray(
+        masked_step_pallas(
+            jnp.asarray(s), jnp.asarray(M_PI), jnp.asarray(c),
+            jnp.asarray(guard_min), jnp.asarray(exact),
+        )
+    )
+    want = masked_step_ref(s, M_PI, c, guard_min, exact)
+    np.testing.assert_array_equal(got, want.astype(np.float32))
+
+
+def test_masked_step_zeroes_inapplicable_rules():
+    # C = [1,1,1]: rules (1),(2) need ≥2 spikes in σ1 → their S bits drop
+    s = np.array([[1, 0, 1, 1, 0]], dtype=np.float32)
+    c = np.array([[1, 1, 1]], dtype=np.float32)
+    guard_min = np.array([2, 2, 1, 1, 2], dtype=np.float32)
+    exact = np.zeros(5, dtype=np.float32)
+    got = np.asarray(
+        masked_step_pallas(
+            jnp.asarray(s), jnp.asarray(M_PI), jnp.asarray(c),
+            jnp.asarray(guard_min), jnp.asarray(exact),
+        )
+    )
+    # only rules (3) and (4) survive: [1,1,1] + [1,-1,1] + [0,0,-1]
+    np.testing.assert_array_equal(got, [[2, 0, 1]])
+
+
+def test_shape_mismatch_raises():
+    s = jnp.zeros((2, 5))
+    m = jnp.zeros((4, 3))  # wrong R
+    c = jnp.zeros((2, 3))
+    with pytest.raises(AssertionError):
+        step_pallas(s, m, c)

@@ -1,0 +1,46 @@
+"""L2 model tests: variants agree, multi-step scan composes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import step_ref_numpy
+
+M_PI = np.array(
+    [[-1, 1, 1], [-2, 1, 1], [1, -1, 1], [0, 0, -1], [0, 0, -2]],
+    dtype=np.float32,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 16), seed=st.integers(0, 2**31))
+def test_step_and_matmul_variant_agree(b, seed):
+    rng = np.random.default_rng(seed)
+    s = (rng.random((b, 5)) < 0.4).astype(np.float32)
+    c = rng.integers(0, 10, size=(b, 3)).astype(np.float32)
+    (a,) = model.step(jnp.asarray(s), jnp.asarray(M_PI), jnp.asarray(c))
+    (bb,) = model.step_matmul(jnp.asarray(s), jnp.asarray(M_PI), jnp.asarray(c))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_multi_step_equals_iterated_single_steps():
+    rng = np.random.default_rng(0)
+    k, b = 6, 4
+    s_seq = (rng.random((k, b, 5)) < 0.3).astype(np.float32)
+    c = rng.integers(0, 10, size=(b, 3)).astype(np.float32)
+    (scan_out,) = model.multi_step(jnp.asarray(s_seq), jnp.asarray(M_PI), jnp.asarray(c))
+    cur = c.astype(np.int64)
+    for i in range(k):
+        cur = step_ref_numpy(s_seq[i], M_PI, cur.astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(scan_out).astype(np.int64), cur)
+
+
+def test_step_is_jittable_and_stable_under_jit():
+    s = jnp.asarray(np.eye(5, dtype=np.float32)[:2])
+    c = jnp.asarray(np.full((2, 3), 5, dtype=np.float32))
+    m = jnp.asarray(M_PI)
+    (eager,) = model.step(s, m, c)
+    (jitted,) = jax.jit(model.step)(s, m, c)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))

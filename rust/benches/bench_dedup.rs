@@ -1,0 +1,66 @@
+//! Visited-store (allGenCk) throughput ablation: the VisitedStore (std
+//! SipHash after measurement — see dedup.rs), an FxHash set, and the
+//! sharded concurrent store.
+
+mod harness;
+
+use snapse::engine::{ConfigVector, ShardedVisited, VisitedStore};
+use snapse::util::Rng;
+
+fn configs(n: usize, width: usize, seed: u64) -> Vec<ConfigVector> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| ConfigVector::new((0..width).map(|_| rng.range(0, 30) as u64).collect()))
+        .collect()
+}
+
+fn main() {
+    let (warmup, budget) = harness::budget_from_args();
+    let mut rows = Vec::new();
+    for width in [3usize, 16, 64] {
+        let items = configs(20_000, width, 42);
+        rows.push(harness::bench(
+            &format!("VisitedStore(std)   width={width}"),
+            warmup,
+            budget,
+            || {
+                let mut v = VisitedStore::new();
+                for c in &items {
+                    v.insert(c.clone());
+                }
+                std::hint::black_box(v.len());
+                items.len() as u64
+            },
+        ));
+        rows.push(harness::bench(
+            &format!("FxHashSet ablation  width={width}"),
+            warmup,
+            budget,
+            || {
+                let mut v: snapse::util::FxHashSet<ConfigVector> = Default::default();
+                let mut order: Vec<ConfigVector> = Vec::new();
+                for c in &items {
+                    if v.insert(c.clone()) {
+                        order.push(c.clone());
+                    }
+                }
+                std::hint::black_box(order.len());
+                items.len() as u64
+            },
+        ));
+        rows.push(harness::bench(
+            &format!("ShardedVisited(16)  width={width}"),
+            warmup,
+            budget,
+            || {
+                let v = ShardedVisited::new(4);
+                for (i, c) in items.iter().enumerate() {
+                    v.insert(c, i as u32);
+                }
+                std::hint::black_box(v.len());
+                items.len() as u64
+            },
+        ));
+    }
+    print!("{}", harness::render("visited-store inserts (configs/s)", &rows));
+}

@@ -1,0 +1,78 @@
+//! E1/E7 — end-to-end exploration benchmarks: the paper's §5 run itself,
+//! plus scaling workloads through explorer and coordinator.
+
+mod harness;
+
+use snapse::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use snapse::engine::{ExploreOptions, Explorer};
+
+fn main() {
+    let (warmup, budget) = harness::budget_from_args();
+    let mut rows = Vec::new();
+
+    // E1: the paper's exact workload — Π to depth 9 (45 configs).
+    let pi = snapse::generators::paper_pi();
+    rows.push(harness::bench("paper §5 run (Π, depth 9)", warmup, budget, || {
+        let rep = Explorer::new(&pi, ExploreOptions::breadth_first().max_depth(9)).run();
+        std::hint::black_box(rep.visited.len()) as u64
+    }));
+    rows.push(harness::bench("paper §5 run + tree (Fig. 4)", warmup, budget, || {
+        let rep =
+            Explorer::new(&pi, ExploreOptions::breadth_first().max_depth(9).with_tree()).run();
+        std::hint::black_box(rep.visited.len()) as u64
+    }));
+
+    // deep deterministic chain (items = steps)
+    let chain = snapse::generators::counter_chain(16, 64);
+    rows.push(harness::bench("counter_chain(16, 64) full", warmup, budget, || {
+        let rep = Explorer::new(&chain, ExploreOptions::breadth_first()).run();
+        std::hint::black_box(rep.stats.steps)
+    }));
+
+    // wide frontier workloads (items = steps evaluated)
+    for (m, w) in [(8usize, 4usize), (16, 5), (32, 5)] {
+        let sys = snapse::generators::wide_ring(m, w, 3);
+        let name = format!("wide_ring({m},{w}) budget 2k [explorer]");
+        rows.push(harness::bench(&name, warmup, budget, || {
+            let rep =
+                Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(2_000)).run();
+            std::hint::black_box(rep.stats.steps)
+        }));
+        let name = format!("wide_ring({m},{w}) budget 2k [coordinator]");
+        rows.push(harness::bench(&name, warmup, budget, || {
+            let mut coord = Coordinator::new(
+                &sys,
+                CoordinatorConfig { max_configs: Some(2_000), ..Default::default() },
+            );
+            let rep = coord.run().unwrap();
+            std::hint::black_box(rep.metrics.total_steps())
+        }));
+    }
+
+    // device-backed end-to-end (when artifacts exist)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let sys = snapse::generators::wide_ring(16, 5, 3);
+        rows.push(harness::bench(
+            "wide_ring(16,5) budget 2k [coordinator+xla]",
+            warmup.min(1),
+            budget,
+            || {
+                let mut coord = Coordinator::new(
+                    &sys,
+                    CoordinatorConfig {
+                        max_configs: Some(2_000),
+                        backend: BackendChoice::Xla { artifacts: "artifacts".into() },
+                        batch_target: 512,
+                        ..Default::default()
+                    },
+                );
+                let rep = coord.run().unwrap();
+                std::hint::black_box(rep.metrics.total_steps())
+            },
+        ));
+    } else {
+        eprintln!("(skipping xla rows: run `make artifacts`)");
+    }
+
+    print!("{}", harness::render("end-to-end exploration (items = steps)", &rows));
+}

@@ -1,0 +1,95 @@
+//! E6 — raw step throughput: `C' = C + S·M` rows/second by backend,
+//! shape, and batch size. This regenerates the paper's implicit
+//! host-vs-device comparison (§1, §3) as a table: who wins, where the
+//! crossover sits.
+
+mod harness;
+
+use snapse::compute::{HostBackend, StepBackend, StepBatch};
+use snapse::matrix::TransitionMatrix;
+use snapse::util::Rng;
+
+fn random_matrix(r: usize, n: usize, rng: &mut Rng) -> TransitionMatrix {
+    let data: Vec<i64> = (0..r * n)
+        .map(|_| if rng.chance(0.6) { 0 } else { rng.range(0, 8) as i64 - 4 })
+        .collect();
+    TransitionMatrix::from_row_major(r, n, data).unwrap()
+}
+
+fn main() {
+    let (warmup, budget) = harness::budget_from_args();
+    let mut rng = Rng::new(0xBE7C);
+    let manifest = snapse::runtime::Manifest::load(std::path::Path::new("artifacts")).ok();
+    let rt = manifest.as_ref().and_then(|_| snapse::runtime::PjRt::cpu().ok());
+
+    let shapes: &[(usize, usize)] = &[(5, 3), (16, 16), (64, 64), (128, 128)];
+    let batches: &[usize] = &[1, 32, 512];
+
+    let mut rows = Vec::new();
+    for &(r, n) in shapes {
+        let m = random_matrix(r, n, &mut rng);
+        for &b in batches {
+            let configs: Vec<i64> = (0..b * n).map(|_| rng.range(0, 20) as i64).collect();
+            let spikes: Vec<u8> = (0..b * r).map(|_| rng.chance(0.3) as u8).collect();
+            let batch = StepBatch { b, n, r, configs: &configs, spikes: &spikes };
+
+            let mut dense = HostBackend::dense(&m);
+            rows.push(harness::bench(
+                &format!("host-dense r{r} n{n} b{b}"),
+                warmup,
+                budget,
+                || {
+                    let out = dense.step_batch(&batch).unwrap();
+                    std::hint::black_box(&out);
+                    b as u64
+                },
+            ));
+            let mut sparse = HostBackend::sparse(&m);
+            rows.push(harness::bench(
+                &format!("host-csr   r{r} n{n} b{b}"),
+                warmup,
+                budget,
+                || {
+                    let out = sparse.step_batch(&batch).unwrap();
+                    std::hint::black_box(&out);
+                    b as u64
+                },
+            ));
+            if let (Some(rt), Some(man)) = (&rt, &manifest) {
+                if let Ok(mut xla) =
+                    snapse::compute::xla::backend_from_artifacts(rt.clone(), &m, man)
+                {
+                    rows.push(harness::bench(
+                        &format!("xla-device r{r} n{n} b{b}"),
+                        warmup,
+                        budget,
+                        || {
+                            let out = xla.step_batch(&batch).unwrap();
+                            std::hint::black_box(&out);
+                            b as u64
+                        },
+                    ));
+                }
+            }
+        }
+    }
+    print!("{}", harness::render("step throughput (rows/s)", &rows));
+
+    // crossover summary: device/host median ratio per case
+    println!("\ncrossover (xla vs host-dense, >1 = device wins):");
+    for &(r, n) in shapes {
+        for &b in batches {
+            let host = rows
+                .iter()
+                .find(|m| m.name == format!("host-dense r{r} n{n} b{b}"))
+                .map(|m| m.median_ns);
+            let dev = rows
+                .iter()
+                .find(|m| m.name == format!("xla-device r{r} n{n} b{b}"))
+                .map(|m| m.median_ns);
+            if let (Some(h), Some(d)) = (host, dev) {
+                println!("  r{r:<4} n{n:<4} b{b:<4}  {:.3}x", h / d);
+            }
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal benchmark harness (criterion is unavailable offline): warmup,
+//! fixed-duration sampling, median/mean/min reporting, throughput rows.
+
+use std::time::{Duration, Instant};
+
+/// One measured result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    /// Items processed per iteration (for throughput columns).
+    pub items_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn items_per_sec(&self) -> f64 {
+        self.items_per_iter / (self.median_ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` after `warmup` iterations; returns
+/// per-iteration stats. `f` returns the number of items it processed.
+pub fn bench<F: FnMut() -> u64>(name: &str, warmup: u32, budget: Duration, mut f: F) -> Measurement {
+    let mut items = 0u64;
+    for _ in 0..warmup {
+        items = f().max(items);
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        items = f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len() as u64,
+        median_ns: median,
+        mean_ns: mean,
+        min_ns: samples[0],
+        items_per_iter: items as f64,
+    }
+}
+
+/// Render a standard results table.
+pub fn render(title: &str, rows: &[Measurement]) -> String {
+    let mut out = format!("\n== {title} ==\n");
+    out.push_str(&format!(
+        "{:<42} {:>8} {:>12} {:>12} {:>12} {:>14}\n",
+        "case", "samples", "median", "mean", "min", "throughput"
+    ));
+    for m in rows {
+        out.push_str(&format!(
+            "{:<42} {:>8} {:>12} {:>12} {:>12} {:>14}\n",
+            m.name,
+            m.iters,
+            human_ns(m.median_ns),
+            human_ns(m.mean_ns),
+            human_ns(m.min_ns),
+            format!("{}/s", human_count(m.items_per_sec())),
+        ));
+    }
+    out
+}
+
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn human_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Parse `--quick` from argv: CI-friendly short runs.
+pub fn budget_from_args() -> (u32, Duration) {
+    if std::env::args().any(|a| a == "--quick") {
+        (1, Duration::from_millis(50))
+    } else {
+        (3, Duration::from_millis(400))
+    }
+}

@@ -1,0 +1,26 @@
+//! `snapse accept` — run the input-driven divisibility acceptor.
+
+use super::Args;
+use crate::error::{Error, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let d: u64 = args
+        .pos(0)
+        .ok_or_else(|| Error::parse("cli", 0, "accept needs <divisor> <number>"))?
+        .parse()
+        .map_err(|_| Error::parse("cli", 0, "bad divisor"))?;
+    let n: u64 = args
+        .pos(1)
+        .ok_or_else(|| Error::parse("cli", 0, "accept needs <divisor> <number>"))?
+        .parse()
+        .map_err(|_| Error::parse("cli", 0, "bad number"))?;
+    let sys = crate::generators::divisibility_acceptor(d);
+    let verdict = crate::generators::accepts(&sys, n)?;
+    println!(
+        "system `{}` fed the spike train encoding {n} (spikes at steps 1 and {}):",
+        sys.name,
+        n + 1
+    );
+    println!("{}", if verdict { "ACCEPT (counter drained to 0)" } else { "REJECT (counter non-empty at halt)" });
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! `snapse analyze` — determinism / confluence / boundedness report.
+
+use super::Args;
+use crate::error::{Error, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec = args.pos(0).ok_or_else(|| Error::parse("cli", 0, "analyze needs a <system>"))?;
+    let sys = super::load_system(spec)?;
+    let budget = args.opt_num::<usize>("configs")?.unwrap_or(10_000);
+    let hint = args.opt_num::<u64>("bound")?.unwrap_or(1_000);
+    let report = crate::engine::analyze(&sys, budget, hint);
+    println!("analysis of `{}` (budget {budget} configs):", sys.name);
+    print!("{}", report.render());
+    if report.exceeded_hint {
+        println!("note: some neuron exceeded the --bound hint of {hint}");
+    }
+    Ok(())
+}

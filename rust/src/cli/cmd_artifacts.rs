@@ -1,0 +1,25 @@
+//! `snapse artifacts` — inspect the AOT artifact manifest.
+
+use super::Args;
+use crate::error::Result;
+use crate::runtime::Manifest;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.opt("dir").unwrap_or("artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts in {}: {}", dir.display(), manifest.describe());
+    let mut t = crate::util::fmt::Table::new(&["r", "n", "b", "variant", "vmem", "flops", "path"]);
+    for e in manifest.entries() {
+        t.row(&[
+            e.rules.to_string(),
+            e.neurons.to_string(),
+            e.batch.to_string(),
+            e.variant.clone(),
+            e.vmem_bytes.to_string(),
+            e.flops.to_string(),
+            e.path.file_name().unwrap_or_default().to_string_lossy().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! `snapse generated` — exact generated-number-set computation (E3).
+
+use super::Args;
+use crate::engine::generated_set;
+use crate::error::{Error, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec =
+        args.pos(0).ok_or_else(|| Error::parse("cli", 0, "generated needs a <system>"))?;
+    let sys = super::load_system(spec)?;
+    if sys.output.is_none() {
+        return Err(Error::invalid_system("system has no output neuron"));
+    }
+    let max = args.opt_num::<u64>("max")?.unwrap_or(20);
+    let set = generated_set(&sys, max);
+    let items: Vec<String> = set.iter().map(|n| n.to_string()).collect();
+    println!(
+        "system `{}` generates (first-two-spike distances ≤ {max}): {{{}}}",
+        sys.name,
+        items.join(", ")
+    );
+    // characterize the complement for quick reading
+    let missing: Vec<String> =
+        (1..=max).filter(|n| !set.contains(n)).map(|n| n.to_string()).collect();
+    println!("not generated: {{{}}}", missing.join(", "));
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! `snapse info` — system description, matrix, and static stats.
+
+use super::Args;
+use crate::error::{Error, Result};
+use crate::matrix::build_matrix;
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec = args.pos(0).ok_or_else(|| Error::parse("cli", 0, "info needs a <system>"))?;
+    let sys = super::load_system(spec)?;
+    print!("{sys}");
+    let m = build_matrix(&sys);
+    println!("\nSpiking transition matrix M_Π ({}x{}):", m.rows(), m.cols());
+    print!("{}", m.render());
+    println!(
+        "row-major: {:?}",
+        m.as_row_major()
+    );
+    println!("sparsity: {:.1}%", m.sparsity() * 100.0);
+    if args.flag("dot") {
+        println!("\n{}", crate::output::dot::system_dot(&sys));
+    }
+    if args.flag("snpl") {
+        println!("\n{}", crate::parser::snpl::to_snpl(&sys));
+    }
+    Ok(())
+}

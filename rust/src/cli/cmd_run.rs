@@ -1,0 +1,109 @@
+//! `snapse run` — Algorithm 1 exploration.
+
+use super::Args;
+use crate::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use crate::engine::{ExploreOptions, Explorer};
+use crate::error::{Error, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec = args.pos(0).ok_or_else(|| Error::parse("cli", 0, "run needs a <system>"))?;
+    let sys = super::load_system(spec)?;
+    let depth = args.opt_num::<u32>("depth")?;
+    let configs = args.opt_num::<usize>("configs")?;
+
+    // Single-threaded explorer path (reference semantics, tree recording).
+    if args.flag("single-thread") || args.flag("paper-log") || args.opt("tree").is_some() {
+        let mut opts = ExploreOptions::breadth_first();
+        if let Some(d) = depth {
+            opts = opts.max_depth(d);
+        }
+        if let Some(c) = configs {
+            opts = opts.max_configs(c);
+        }
+        if args.opt("tree").is_some() {
+            opts = opts.with_tree();
+        }
+        let mut explorer = Explorer::new(&sys, opts);
+        let report = explorer.run();
+        if args.flag("paper-log") {
+            print!("{}", crate::output::render_paper_log(&sys, &report));
+        } else {
+            print!("{}", crate::output::render_summary(&sys, &report));
+        }
+        if let Some(path) = args.opt("tree") {
+            let tree = report.tree.as_ref().expect("tree recorded");
+            crate::output::write_dot(tree, &sys.name, std::path::Path::new(path))?;
+            eprintln!("wrote {path}");
+            if let Some(table) = crate::output::depth_table(&report) {
+                println!("{table}");
+            }
+        }
+        if args.flag("json") {
+            let j = crate::util::JsonValue::obj([
+                ("system", crate::util::JsonValue::str(sys.name.clone())),
+                (
+                    "all_gen_ck",
+                    crate::util::JsonValue::arr(
+                        report
+                            .visited
+                            .in_order()
+                            .iter()
+                            .map(|c| crate::util::JsonValue::str(c.to_string())),
+                    ),
+                ),
+                ("stop", crate::util::JsonValue::str(report.stop.to_string())),
+            ]);
+            println!("{}", j.to_string_pretty());
+        }
+        return Ok(());
+    }
+
+    // Coordinator path (parallel, optional XLA backend).
+    let backend = match args.opt("backend").unwrap_or("host") {
+        "host" => BackendChoice::Host,
+        "xla" => BackendChoice::Xla {
+            artifacts: std::path::PathBuf::from(args.opt("artifacts").unwrap_or("artifacts")),
+        },
+        other => return Err(Error::parse("cli", 0, format!("unknown backend `{other}`"))),
+    };
+    let cfg = CoordinatorConfig {
+        workers: args.opt_num::<usize>("workers")?.unwrap_or(0),
+        max_depth: depth,
+        max_configs: configs,
+        backend,
+        batch_target: args.opt_num::<usize>("batch")?.unwrap_or(256),
+    };
+    let mut coord = Coordinator::new(&sys, cfg);
+    let report = coord.run()?;
+    println!(
+        "system `{}`: {} configs, stop: {}  [{} backend, {} workers]",
+        sys.name,
+        report.visited.len(),
+        report.stop,
+        report.metrics.backend,
+        report.metrics.workers
+    );
+    println!(
+        "steps {} in {} batches, {:.0} steps/s, elapsed {:?}",
+        report.metrics.total_steps(),
+        report.metrics.total_batches(),
+        report.metrics.steps_per_sec(),
+        report.metrics.total_elapsed
+    );
+    if args.flag("levels") {
+        println!("{}", report.metrics.render_table());
+    }
+    if args.flag("json") {
+        let j = crate::util::JsonValue::obj([
+            ("system", crate::util::JsonValue::str(sys.name.clone())),
+            ("configs", crate::util::JsonValue::num(report.visited.len() as f64)),
+            ("stop", crate::util::JsonValue::str(report.stop.to_string())),
+            (
+                "steps_per_sec",
+                crate::util::JsonValue::num(report.metrics.steps_per_sec()),
+            ),
+        ]);
+        println!("{}", j.to_string_pretty());
+    }
+    Ok(())
+}

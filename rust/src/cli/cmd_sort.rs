@@ -1,0 +1,23 @@
+//! `snapse sort` — run the SN P sorter on a comma-separated value list.
+
+use super::Args;
+use crate::engine::{ExploreOptions, Explorer};
+use crate::error::{Error, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let list = args.pos(0).ok_or_else(|| Error::parse("cli", 0, "sort needs values, e.g. 3,1,2"))?;
+    let values: Vec<u64> = list
+        .split(',')
+        .map(|v| v.trim().parse::<u64>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| Error::parse("cli", 0, format!("bad value list `{list}`: {e}")))?;
+    let sys = crate::generators::sorter(&values);
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+    if !rep.stop.is_complete() || rep.halting_configs.len() != 1 {
+        return Err(Error::Coordinator("sorter did not converge".into()));
+    }
+    let sorted = crate::generators::sorted_output(rep.halting_configs[0].as_slice(), values.len());
+    println!("input:  {values:?}");
+    println!("sorted: {sorted:?} (descending; {} configs explored)", rep.visited.len());
+    Ok(())
+}

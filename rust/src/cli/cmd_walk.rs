@@ -1,0 +1,29 @@
+//! `snapse walk` — single-path random simulation.
+
+use super::Args;
+use crate::engine::RandomWalk;
+use crate::error::{Error, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec = args.pos(0).ok_or_else(|| Error::parse("cli", 0, "walk needs a <system>"))?;
+    let sys = super::load_system(spec)?;
+    let steps = args.opt_num::<usize>("steps")?.unwrap_or(50);
+    let seed = args.opt_num::<u64>("seed")?.unwrap_or(1);
+    let mut walk = RandomWalk::new(&sys, seed);
+    let record = walk.run(steps);
+    println!("system `{}`, seed {seed}, {} steps{}", sys.name, record.steps(),
+        if record.halted { " (halted)" } else { "" });
+    for (i, (c, s)) in record.path.iter().zip(record.choices.iter()).enumerate() {
+        println!("  t={i:<4} C={c}  fire {}", s.to_binary_string());
+    }
+    if let Some(last) = record.path.last() {
+        println!("  t={:<4} C={last}", record.steps());
+    }
+    if !record.trace.times.is_empty() {
+        println!("output spikes at steps {:?}", record.trace.times);
+        if let Some(g) = record.trace.generated() {
+            println!("generated number (first gap): {g}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,228 @@
+//! Command-line interface (hand-rolled parser; no network deps available).
+//!
+//! ```text
+//! snapse run <system> [--depth D] [--configs N] [--backend host|xla]
+//!                     [--artifacts DIR] [--workers W] [--paper-log]
+//!                     [--tree FILE.dot] [--json]
+//! snapse walk <system> [--steps N] [--seed S]
+//! snapse generated <system> [--max N]
+//! snapse info <system> [--dot]
+//! snapse artifacts [--dir DIR]
+//! ```
+//!
+//! `<system>` is a path to a `.snpl`/`.json` file, or a builtin spec:
+//! `paper_pi`, `nat_gen`, `even_gen`, `ring:M:CHARGE`,
+//! `counter:LEN:CHARGE`, `div:N:D`, `adder:W`, `random:SEED`.
+
+mod cmd_accept;
+mod cmd_analyze;
+mod cmd_artifacts;
+mod cmd_generated;
+mod cmd_info;
+mod cmd_run;
+mod cmd_sort;
+mod cmd_walk;
+
+use crate::error::{Error, Result};
+use crate::snp::SnpSystem;
+
+/// Parsed command line: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: std::collections::BTreeMap<String, String>,
+    flags: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (after the subcommand).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // value-taking if next token exists and isn't another flag
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        a.options.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => {
+                        a.flags.insert(name.to_string());
+                    }
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    /// Positional argument `i`.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// Option value.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Parsed numeric option.
+    pub fn opt_num<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::parse("cli", 0, format!("--{name} expects a number, got `{v}`"))),
+        }
+    }
+
+    /// Boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+}
+
+/// Resolve a `<system>` spec: builtin name or file path.
+pub fn load_system(spec: &str) -> Result<SnpSystem> {
+    // builtin specs
+    let parts: Vec<&str> = spec.split(':').collect();
+    let num = |i: usize| -> Result<u64> {
+        parts
+            .get(i)
+            .ok_or_else(|| Error::parse("cli", 0, format!("`{spec}` missing parameter {i}")))?
+            .parse()
+            .map_err(|_| Error::parse("cli", 0, format!("bad number in `{spec}`")))
+    };
+    match parts[0] {
+        "paper_pi" => return Ok(crate::generators::paper_pi()),
+        "nat_gen" => return Ok(crate::generators::nat_generator()),
+        "even_gen" => return Ok(crate::generators::even_generator()),
+        "ring" => return Ok(crate::generators::ring(num(1)? as usize, num(2)?)),
+        "ring_branch" => {
+            return Ok(crate::generators::ring_with_branching(
+                num(1)? as usize,
+                num(2)?,
+                num(3)?,
+            ))
+        }
+        "counter" => return Ok(crate::generators::counter_chain(num(1)? as usize, num(2)?)),
+        "div" => return Ok(crate::generators::divisibility_checker(num(1)?, num(2)?)),
+        "adder" => return Ok(crate::generators::bit_adder(num(1)? as usize)),
+        "random" => {
+            return Ok(crate::generators::random_system(
+                &crate::generators::RandomSystemParams::default(),
+                num(1)?,
+            ))
+        }
+        _ => {}
+    }
+    // file path
+    let path = std::path::Path::new(spec);
+    let text =
+        std::fs::read_to_string(path).map_err(|e| Error::io(path.display().to_string(), e))?;
+    if spec.ends_with(".json") {
+        crate::parser::system_from_json(&text)
+    } else {
+        crate::parser::parse_snpl(&text)
+    }
+}
+
+/// Top-level dispatch. Returns the process exit code.
+pub fn main_with_args(argv: &[String]) -> i32 {
+    let usage =
+        "usage: snapse <run|walk|generated|info|artifacts|analyze|sort|accept> …  (see --help)";
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        println!("{}", help_text());
+        return 0;
+    }
+    let cmd = argv[0].as_str();
+    let rest: Vec<String> = argv[1..].to_vec();
+    let result = Args::parse(&rest).and_then(|args| match cmd {
+        "run" => cmd_run::run(&args),
+        "walk" => cmd_walk::run(&args),
+        "generated" => cmd_generated::run(&args),
+        "info" => cmd_info::run(&args),
+        "artifacts" => cmd_artifacts::run(&args),
+        "analyze" => cmd_analyze::run(&args),
+        "sort" => cmd_sort::run(&args),
+        "accept" => cmd_accept::run(&args),
+        _ => Err(Error::parse("cli", 0, format!("unknown command `{cmd}`\n{usage}"))),
+    });
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn help_text() -> String {
+    let mut s = String::from(
+        "snapse — SN P system simulator (Cabarle–Adorna–Martínez-del-Amor 2011 reproduction)\n\n",
+    );
+    s.push_str("commands:\n");
+    s.push_str("  run <system>        explore the computation tree (Algorithm 1)\n");
+    s.push_str("      --depth D --configs N --workers W --backend host|xla\n");
+    s.push_str("      --artifacts DIR --paper-log --tree FILE.dot --json --single-thread\n");
+    s.push_str("  walk <system>       follow one random branch\n");
+    s.push_str("      --steps N --seed S\n");
+    s.push_str("  generated <system>  compute the generated number set\n");
+    s.push_str("      --max N\n");
+    s.push_str("  info <system>       print the system, its matrix, and stats\n");
+    s.push_str("      --dot\n");
+    s.push_str("  artifacts           list AOT artifacts\n");
+    s.push_str("      --dir DIR\n");
+    s.push_str("  analyze <system>    determinism/confluence/boundedness report\n");
+    s.push_str("      --configs N --bound B\n");
+    s.push_str("  sort <v1,v2,…>      run the SN P spike sorter\n");
+    s.push_str("  accept <d> <n>      input-driven divisibility acceptor\n\n");
+    s.push_str("systems: a .snpl/.json path, or builtin:\n");
+    s.push_str("  paper_pi nat_gen even_gen ring:M:C ring_branch:M:C:K counter:L:C\n");
+    s.push_str("  div:N:D adder:W random:SEED\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parse_positional_options_flags() {
+        let a = args(&["paper_pi", "--depth", "9", "--paper-log"]);
+        assert_eq!(a.pos(0), Some("paper_pi"));
+        assert_eq!(a.opt_num::<u32>("depth").unwrap(), Some(9));
+        assert!(a.flag("paper-log"));
+        assert!(!a.flag("json"));
+        assert_eq!(a.opt("missing"), None);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = args(&["--depth", "x"]);
+        // "x" consumed as the value of --depth
+        assert!(a.opt_num::<u32>("depth").is_err());
+    }
+
+    #[test]
+    fn load_builtin_systems() {
+        assert_eq!(load_system("paper_pi").unwrap().name, "paper_pi");
+        assert_eq!(load_system("ring:4:2").unwrap().num_neurons(), 4);
+        assert_eq!(load_system("div:9:3").unwrap().name, "div_9_by_3");
+        assert_eq!(load_system("adder:3").unwrap().num_neurons(), 4);
+        assert!(load_system("ring:x:2").is_err());
+        assert!(load_system("/no/such/file.snpl").is_err());
+    }
+
+    #[test]
+    fn dispatch_unknown_command() {
+        assert_eq!(main_with_args(&["bogus".to_string()]), 1);
+        assert_eq!(main_with_args(&["help".to_string()]), 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Shape buckets: mapping dynamic frontier sizes onto the fixed shapes the
+//! AOT artifacts were lowered for.
+//!
+//! XLA executables are shape-specialized. `aot.py` lowers the step program
+//! at a grid of batch sizes per `(R, N)`; at runtime the batcher picks the
+//! smallest admissible batch bucket and pads with zero spiking vectors
+//! (a zero `S` row leaves its `C` row unchanged, so padding is discarded
+//! by slicing the output).
+
+/// One compiled shape: `(rules, neurons, batch)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Bucket {
+    /// Rule count `R`.
+    pub r: usize,
+    /// Neuron count `N`.
+    pub n: usize,
+    /// Batch capacity `B`.
+    pub b: usize,
+}
+
+impl Bucket {
+    /// Elements of padding wasted when running `used` rows in this bucket.
+    pub fn waste(&self, used: usize) -> usize {
+        self.b.saturating_sub(used)
+    }
+}
+
+/// Batch-size ladder policy for a fixed `(R, N)`.
+#[derive(Debug, Clone)]
+pub struct BucketPolicy {
+    r: usize,
+    n: usize,
+    ladder: Vec<usize>,
+}
+
+impl BucketPolicy {
+    /// Default ladder used by `aot.py`: powers of two from 1 to `max_b`.
+    pub fn pow2(r: usize, n: usize, max_b: usize) -> Self {
+        let mut ladder = Vec::new();
+        let mut b = 1;
+        while b <= max_b {
+            ladder.push(b);
+            b *= 2;
+        }
+        BucketPolicy { r, n, ladder }
+    }
+
+    /// Explicit ladder (must be sorted ascending).
+    pub fn explicit(r: usize, n: usize, mut ladder: Vec<usize>) -> Self {
+        ladder.sort_unstable();
+        ladder.dedup();
+        BucketPolicy { r, n, ladder }
+    }
+
+    /// Available batch capacities.
+    pub fn ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+
+    /// All buckets in the policy.
+    pub fn buckets(&self) -> impl Iterator<Item = Bucket> + '_ {
+        self.ladder.iter().map(move |&b| Bucket { r: self.r, n: self.n, b })
+    }
+
+    /// Smallest bucket with `capacity ≥ want`, or the largest bucket when
+    /// `want` exceeds the ladder (caller then splits the batch).
+    pub fn select(&self, want: usize) -> Option<Bucket> {
+        if self.ladder.is_empty() {
+            return None;
+        }
+        let b = self
+            .ladder
+            .iter()
+            .copied()
+            .find(|&b| b >= want)
+            .unwrap_or(*self.ladder.last().unwrap());
+        Some(Bucket { r: self.r, n: self.n, b })
+    }
+
+    /// Split `want` rows into bucket-sized chunks, greedy from the largest:
+    /// returns `(bucket, rows_used)` pairs covering `want` with minimal
+    /// total padding under the greedy policy.
+    pub fn plan(&self, mut want: usize) -> Vec<(Bucket, usize)> {
+        let mut plan = Vec::new();
+        if self.ladder.is_empty() || want == 0 {
+            return plan;
+        }
+        let max = *self.ladder.last().unwrap();
+        while want > max {
+            plan.push((Bucket { r: self.r, n: self.n, b: max }, max));
+            want -= max;
+        }
+        if want > 0 {
+            let b = self.select(want).unwrap();
+            plan.push((b, want));
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_ladder() {
+        let p = BucketPolicy::pow2(5, 3, 512);
+        assert_eq!(p.ladder(), &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512]);
+    }
+
+    #[test]
+    fn select_smallest_admissible() {
+        let p = BucketPolicy::pow2(5, 3, 512);
+        assert_eq!(p.select(1).unwrap().b, 1);
+        assert_eq!(p.select(3).unwrap().b, 4);
+        assert_eq!(p.select(512).unwrap().b, 512);
+        assert_eq!(p.select(513).unwrap().b, 512, "clamps to largest");
+    }
+
+    #[test]
+    fn plan_covers_demand() {
+        let p = BucketPolicy::pow2(5, 3, 8);
+        // 21 = 8 + 8 + 5→8
+        let plan = p.plan(21);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.iter().map(|(_, u)| u).sum::<usize>(), 21);
+        assert_eq!(plan[0].0.b, 8);
+        assert_eq!(plan[2].0.b, 8);
+        assert_eq!(plan[2].1, 5);
+    }
+
+    #[test]
+    fn plan_zero_and_waste() {
+        let p = BucketPolicy::pow2(5, 3, 8);
+        assert!(p.plan(0).is_empty());
+        let b = Bucket { r: 5, n: 3, b: 8 };
+        assert_eq!(b.waste(5), 3);
+        assert_eq!(b.waste(9), 0);
+    }
+
+    #[test]
+    fn explicit_ladder_sorted() {
+        let p = BucketPolicy::explicit(2, 2, vec![32, 1, 8, 8]);
+        assert_eq!(p.ladder(), &[1, 8, 32]);
+        assert_eq!(p.buckets().count(), 3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Pure-Rust step backend (the paper's host-only comparison point).
+//!
+//! Chooses CSR row-accumulation for sparse matrices (each fired rule
+//! touches `1 + out_degree` columns) and dense row-sum otherwise. This is
+//! also the oracle the XLA backend is tested against.
+
+use super::{StepBackend, StepBatch};
+use crate::error::Result;
+use crate::matrix::{CsrMatrix, TransitionMatrix};
+
+/// Density above which the dense path wins (measured in
+/// `benches/bench_step.rs`; see EXPERIMENTS.md §Perf).
+const DENSE_THRESHOLD: f64 = 0.25;
+
+enum Repr {
+    Dense(TransitionMatrix),
+    Sparse(CsrMatrix),
+}
+
+/// CPU step backend over a fixed transition matrix.
+pub struct HostBackend {
+    repr: Repr,
+    rows: usize,
+    cols: usize,
+}
+
+impl HostBackend {
+    /// Build from a matrix, choosing dense vs CSR by density.
+    pub fn new(m: &TransitionMatrix) -> Self {
+        let density = 1.0 - m.sparsity();
+        let repr = if density >= DENSE_THRESHOLD {
+            Repr::Dense(m.clone())
+        } else {
+            Repr::Sparse(m.to_csr())
+        };
+        HostBackend { repr, rows: m.rows(), cols: m.cols() }
+    }
+
+    /// Force the dense representation (benchmarks/ablations).
+    pub fn dense(m: &TransitionMatrix) -> Self {
+        HostBackend { repr: Repr::Dense(m.clone()), rows: m.rows(), cols: m.cols() }
+    }
+
+    /// Force the CSR representation (benchmarks/ablations).
+    pub fn sparse(m: &TransitionMatrix) -> Self {
+        HostBackend { repr: Repr::Sparse(m.to_csr()), rows: m.rows(), cols: m.cols() }
+    }
+
+    /// Which representation is active ("dense" / "csr").
+    pub fn repr_name(&self) -> &'static str {
+        match self.repr {
+            Repr::Dense(_) => "dense",
+            Repr::Sparse(_) => "csr",
+        }
+    }
+}
+
+impl StepBackend for HostBackend {
+    fn name(&self) -> &str {
+        "host"
+    }
+
+    fn step_batch(&mut self, batch: &StepBatch<'_>) -> Result<Vec<i64>> {
+        batch.validate()?;
+        if batch.n != self.cols || batch.r != self.rows {
+            return Err(crate::Error::shape(
+                format!("matrix {}x{}", self.rows, self.cols),
+                format!("batch r={} n={}", batch.r, batch.n),
+            ));
+        }
+        let mut out = batch.configs.to_vec();
+        match &self.repr {
+            Repr::Dense(m) => {
+                for b in 0..batch.b {
+                    let srow = &batch.spikes[b * batch.r..(b + 1) * batch.r];
+                    let orow = &mut out[b * batch.n..(b + 1) * batch.n];
+                    for (r, &s) in srow.iter().enumerate() {
+                        if s != 0 {
+                            let mrow = m.row(r);
+                            for (o, &v) in orow.iter_mut().zip(mrow) {
+                                *o += v;
+                            }
+                        }
+                    }
+                }
+            }
+            Repr::Sparse(m) => {
+                for b in 0..batch.b {
+                    let srow = &batch.spikes[b * batch.r..(b + 1) * batch.r];
+                    let orow = &mut out[b * batch.n..(b + 1) * batch.n];
+                    for (r, &s) in srow.iter().enumerate() {
+                        if s != 0 {
+                            m.accumulate_row(r, orow);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::build_matrix;
+    use crate::util::Rng;
+
+    fn m_pi() -> TransitionMatrix {
+        build_matrix(&crate::generators::paper_pi())
+    }
+
+    #[test]
+    fn single_row_matches_paper_eq2() {
+        let mut be = HostBackend::new(&m_pi());
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let out = be
+            .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: &spk })
+            .unwrap();
+        assert_eq!(out, vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn batch_of_two() {
+        let mut be = HostBackend::new(&m_pi());
+        let cfg = [2i64, 1, 1, 2, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0, 0, 1, 1, 1, 0];
+        let out = be
+            .step_batch(&StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: &spk })
+            .unwrap();
+        assert_eq!(out, vec![2, 1, 2, 1, 1, 2]);
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_randomized() {
+        let seed = 0xBEEF;
+        let mut rng = Rng::new(seed);
+        for case in 0..30 {
+            let r = rng.range(1, 20);
+            let n = rng.range(1, 20);
+            let data: Vec<i64> = (0..r * n)
+                .map(|_| if rng.chance(0.7) { 0 } else { rng.range(0, 10) as i64 - 5 })
+                .collect();
+            let m = TransitionMatrix::from_row_major(r, n, data).unwrap();
+            let b = rng.range(1, 16);
+            let cfg: Vec<i64> = (0..b * n).map(|_| rng.range(0, 50) as i64).collect();
+            let spk: Vec<u8> = (0..b * r).map(|_| rng.chance(0.4) as u8).collect();
+            let batch = StepBatch { b, n, r, configs: &cfg, spikes: &spk };
+            let dense = HostBackend::dense(&m).step_batch(&batch).unwrap();
+            let sparse = HostBackend::sparse(&m).step_batch(&batch).unwrap();
+            assert_eq!(dense, sparse, "seed {seed} case {case}");
+        }
+    }
+
+    #[test]
+    fn repr_selection_by_density() {
+        // Π's matrix is 73% dense → dense repr
+        assert_eq!(HostBackend::new(&m_pi()).repr_name(), "dense");
+        // a 1000-rule, 100-neuron near-empty matrix → csr
+        let m = TransitionMatrix::zeros(100, 100);
+        assert_eq!(HostBackend::new(&m).repr_name(), "csr");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut be = HostBackend::new(&m_pi());
+        let cfg = [1i64, 1];
+        let spk = [0u8; 5];
+        let bad = StepBatch { b: 1, n: 2, r: 5, configs: &cfg, spikes: &spk };
+        assert!(be.step_batch(&bad).is_err());
+    }
+}

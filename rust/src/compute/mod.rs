@@ -1,0 +1,91 @@
+//! Step backends — who evaluates `C_{k+1} = C_k + S_k · M_Π`.
+//!
+//! The paper splits work between a *host* (logic, enumeration) and a
+//! *device* (bulk arithmetic). [`StepBackend`] is that boundary: the
+//! engine/coordinator enumerate `(C_k, S_k)` pairs and hand dense batches
+//! to a backend.
+//!
+//! - [`HostBackend`] — pure Rust (dense or CSR), the paper's CPU-only
+//!   comparison point and the fallback when no artifact matches.
+//! - [`compute::xla::XlaBackend`](crate::compute::xla) — executes the
+//!   AOT-lowered JAX/Pallas program on the PJRT CPU client (the paper's
+//!   CUDA device role).
+
+mod bucket;
+mod host;
+pub mod replay;
+pub mod xla;
+
+pub use bucket::{Bucket, BucketPolicy};
+pub use host::HostBackend;
+pub use replay::{replay_on_device, verify_walk};
+pub use xla::XlaBackend;
+
+use crate::error::Result;
+
+/// A dense batch of step inputs.
+///
+/// `configs` is row-major `B × N` (i64 spike counts), `spikes` row-major
+/// `B × R` (0/1). Row `b` of the output is `configs[b] + spikes[b] · M`.
+#[derive(Debug, Clone, Copy)]
+pub struct StepBatch<'a> {
+    /// Batch size `B`.
+    pub b: usize,
+    /// Neuron count `N` (matrix columns).
+    pub n: usize,
+    /// Rule count `R` (matrix rows).
+    pub r: usize,
+    /// `B × N` row-major current configurations.
+    pub configs: &'a [i64],
+    /// `B × R` row-major spiking vectors (0/1).
+    pub spikes: &'a [u8],
+}
+
+impl<'a> StepBatch<'a> {
+    /// Validate the flat buffers against the declared shape.
+    pub fn validate(&self) -> Result<()> {
+        if self.configs.len() != self.b * self.n {
+            return Err(crate::Error::shape(
+                format!("configs {}x{}", self.b, self.n),
+                format!("{} elements", self.configs.len()),
+            ));
+        }
+        if self.spikes.len() != self.b * self.r {
+            return Err(crate::Error::shape(
+                format!("spikes {}x{}", self.b, self.r),
+                format!("{} elements", self.spikes.len()),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Evaluates batched transition steps.
+pub trait StepBackend: Send {
+    /// Human-readable backend name for reports.
+    fn name(&self) -> &str;
+
+    /// Compute `out[b] = configs[b] + spikes[b] · M` for every row; returns
+    /// a `B × N` row-major buffer.
+    fn step_batch(&mut self, batch: &StepBatch<'_>) -> Result<Vec<i64>>;
+
+    /// Preferred maximum batch size (the engine chunks larger frontiers).
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_validation() {
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let ok = StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: &spk };
+        assert!(ok.validate().is_ok());
+        let bad = StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: &spk };
+        assert!(bad.validate().is_err());
+    }
+}

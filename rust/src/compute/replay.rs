@@ -1,0 +1,119 @@
+//! On-device trajectory replay.
+//!
+//! A recorded random walk (K spiking vectors) is re-executed as ONE
+//! device dispatch through the AOT `replay_*` artifact — a `lax.scan`
+//! over the Pallas step kernel with `M` resident inside the program.
+//! Used to (a) verify recorded trajectories against an independent
+//! compute path and (b) demonstrate the K-steps-per-dispatch execution
+//! model (the paper's per-step host↔device round trip, amortized K×).
+
+use crate::engine::{ConfigVector, WalkRecord};
+use crate::error::{Error, Result};
+use crate::runtime::{Arg, Manifest, PjRt};
+use crate::snp::SnpSystem;
+
+/// Replay `record` on the device; returns the final configuration as
+/// computed by the scan artifact. Pads the trajectory to the smallest
+/// lowered K with zero spiking vectors (identity steps).
+pub fn replay_on_device(
+    rt: &std::sync::Arc<PjRt>,
+    manifest: &Manifest,
+    sys: &SnpSystem,
+    record: &WalkRecord,
+) -> Result<ConfigVector> {
+    let r = sys.num_rules();
+    let n = sys.num_neurons();
+    let entries = manifest.replay_entries(r, n);
+    if entries.is_empty() {
+        return Err(Error::artifact(format!(
+            "no replay artifact for R={r} N={n} ({})",
+            manifest.describe()
+        )));
+    }
+    let steps = record.choices.len();
+    let max_k = entries.last().unwrap().steps;
+    let matrix: crate::matrix::TransitionMatrix = crate::matrix::build_matrix(sys);
+    let mut current = record.path[0].clone();
+    let mut done = 0usize;
+    // compile-once cache for the chunk loop
+    let mut compiled: std::collections::HashMap<usize, crate::runtime::StepExecutable> =
+        std::collections::HashMap::new();
+    // chunk the trajectory over the largest artifact; within a chunk pick
+    // the smallest K that covers the remainder
+    while done < steps {
+        let want = (steps - done).min(max_k);
+        let entry = entries
+            .iter()
+            .find(|e| e.steps >= want)
+            .unwrap_or_else(|| entries.last().unwrap());
+        let k = entry.steps;
+        let exec = match compiled.get(&k) {
+            Some(&e) => e,
+            None => {
+                let e = rt.compile_step(&entry.path)?;
+                compiled.insert(k, e);
+                e
+            }
+        };
+        // S sequence (k, 1, r): recorded vectors then zero padding
+        let mut s_seq = vec![0f32; k * r];
+        for (i, s) in record.choices[done..done + want].iter().enumerate() {
+            for rule in s.fired_rules() {
+                s_seq[i * r + rule] = 1.0;
+            }
+        }
+        let c0: Vec<f32> = current.as_slice().iter().map(|&x| x as f32).collect();
+        let out = rt.execute_f32(
+            exec,
+            vec![
+                Arg::Host { data: s_seq, dims: vec![k, 1, r] },
+                Arg::Host { data: matrix.to_f32_row_major(), dims: vec![r, n] },
+                Arg::Host { data: c0, dims: vec![1, n] },
+            ],
+        )?;
+        if out.len() != n {
+            return Err(Error::shape(format!("replay output {n}"), format!("{}", out.len())));
+        }
+        let signed: Vec<i64> = out.iter().map(|&v| v.round() as i64).collect();
+        current = ConfigVector::from_signed(&signed)?;
+        done += want;
+    }
+    Ok(current)
+}
+
+/// Verify a walk end-to-end on the device: replayed final configuration
+/// must equal the recorded one. Returns the replayed config.
+pub fn verify_walk(
+    rt: &std::sync::Arc<PjRt>,
+    manifest: &Manifest,
+    sys: &SnpSystem,
+    record: &WalkRecord,
+) -> Result<ConfigVector> {
+    let replayed = replay_on_device(rt, manifest, sys, record)?;
+    let expected = record.path.last().expect("non-empty path");
+    if &replayed != expected {
+        return Err(Error::Coordinator(format!(
+            "device replay diverged: host {expected}, device {replayed}"
+        )));
+    }
+    Ok(replayed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_replay_artifact_is_clean_error() {
+        let manifest = Manifest::parse(
+            std::path::Path::new("/x"),
+            r#"{"entries":[{"kind":"step","r":5,"n":3,"b":1,"path":"s.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        let rt = PjRt::cpu().unwrap();
+        let sys = crate::generators::paper_pi();
+        let rec = crate::engine::RandomWalk::new(&sys, 1).run(5);
+        let err = replay_on_device(&rt, &manifest, &sys, &rec).unwrap_err();
+        assert!(err.to_string().contains("no replay artifact"));
+    }
+}

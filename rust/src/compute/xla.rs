@@ -1,0 +1,214 @@
+//! XLA/PJRT step backend — the paper's "device side".
+//!
+//! Executes the AOT-lowered JAX/Pallas step program (`artifacts/*.hlo.txt`)
+//! on the PJRT CPU client. The program computes
+//! `C' = C + S · M` for a whole `B × R` spiking batch in one device call —
+//! the same host→device→host round trip the paper performs per step with
+//! CUDA (Listing 1), minus the per-element thread bookkeeping: on
+//! XLA/TPU the batch is a single MXU matmul.
+//!
+//! Inputs (f32, exact for counts < 2²⁴): `S (B×R)`, `M (R×N)`, `C (B×N)`.
+//! Output: `C' (B×N)`.
+//!
+//! **Generic buckets**: when no artifact exists for the system's exact
+//! `(R, N)`, the smallest lowered shape `(R', N') ≥ (R, N)` is used with
+//! zero padding — zero rule rows never fire and zero neuron columns
+//! receive nothing, so results are exact after slicing (the paper pads to
+//! square matrices the same way, §6).
+
+use super::{StepBackend, StepBatch};
+use crate::error::{Error, Result};
+use crate::matrix::TransitionMatrix;
+use crate::runtime::{DeviceBuffer, PjRt, StepExecutable};
+
+/// Device-backed step backend with a fixed matrix and a bucket ladder of
+/// compiled executables.
+pub struct XlaBackend {
+    rt: std::sync::Arc<PjRt>,
+    /// The padded matrix, uploaded ONCE and kept device-resident — the
+    /// host↔device traffic optimization the paper's §3.1 calls for.
+    matrix_dev: DeviceBuffer,
+    /// Logical shape (the system's).
+    r: usize,
+    n: usize,
+    /// Physical (lowered) shape.
+    rp: usize,
+    np: usize,
+    /// Compiled executables by batch capacity, ascending.
+    execs: Vec<(usize, StepExecutable)>,
+}
+
+impl XlaBackend {
+    /// Build from a runtime handle and matrix; `execs` must be the
+    /// executables lowered for the physical shape `(rp, np)` at one or
+    /// more batch sizes, with `rp ≥ matrix.rows()`, `np ≥ matrix.cols()`.
+    pub fn new(
+        rt: std::sync::Arc<PjRt>,
+        matrix: &TransitionMatrix,
+        rp: usize,
+        np: usize,
+        mut execs: Vec<(usize, StepExecutable)>,
+    ) -> Result<Self> {
+        let (r, n) = (matrix.rows(), matrix.cols());
+        if execs.is_empty() {
+            return Err(Error::artifact("XlaBackend needs at least one compiled executable"));
+        }
+        if rp < r || np < n {
+            return Err(Error::shape(format!("physical ≥ {r}x{n}"), format!("{rp}x{np}")));
+        }
+        execs.sort_by_key(|(b, _)| *b);
+        // zero-pad the matrix into the physical shape and upload once
+        let mut matrix_f32 = vec![0f32; rp * np];
+        for row in 0..r {
+            for (col, &v) in matrix.row(row).iter().enumerate() {
+                matrix_f32[row * np + col] = v as f32;
+            }
+        }
+        let matrix_dev = rt.upload(matrix_f32, vec![rp, np])?;
+        Ok(XlaBackend { rt, matrix_dev, r, n, rp, np, execs })
+    }
+
+    /// The available batch capacities (ascending).
+    pub fn capacities(&self) -> Vec<usize> {
+        self.execs.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Largest compiled batch.
+    pub fn max_capacity(&self) -> usize {
+        self.execs.last().map(|(b, _)| *b).unwrap_or(0)
+    }
+
+    /// Physical (padded) shape in use.
+    pub fn physical_shape(&self) -> (usize, usize) {
+        (self.rp, self.np)
+    }
+
+    /// Fraction of device work wasted on shape padding (0 = exact fit).
+    pub fn padding_waste(&self) -> f64 {
+        1.0 - (self.r * self.n) as f64 / (self.rp * self.np) as f64
+    }
+
+    fn exec_for(&self, want: usize) -> (usize, StepExecutable) {
+        self.execs
+            .iter()
+            .copied()
+            .find(|(b, _)| *b >= want)
+            .unwrap_or_else(|| *self.execs.last().unwrap())
+    }
+
+    /// Run one padded sub-batch of at most `cap` rows.
+    fn run_chunk(
+        &self,
+        cap: usize,
+        exec: &StepExecutable,
+        b_used: usize,
+        configs: &[i64],
+        spikes: &[u8],
+        out: &mut Vec<i64>,
+    ) -> Result<()> {
+        debug_assert!(b_used <= cap);
+        // Pad batch rows AND rule/neuron columns: zero spiking rows leave C
+        // untouched; padded C rows/cols are zeros and sliced away.
+        let mut s_f32 = vec![0f32; cap * self.rp];
+        for b in 0..b_used {
+            for i in 0..self.r {
+                s_f32[b * self.rp + i] = spikes[b * self.r + i] as f32;
+            }
+        }
+        let mut c_f32 = vec![0f32; cap * self.np];
+        for b in 0..b_used {
+            for j in 0..self.n {
+                c_f32[b * self.np + j] = configs[b * self.n + j] as f32;
+            }
+        }
+        let result = self
+            .rt
+            .execute_step(exec, s_f32, self.matrix_dev, c_f32, cap, self.rp, self.np)?;
+        for b in 0..b_used {
+            for j in 0..self.n {
+                let v = result[b * self.np + j];
+                let vi = v.round() as i64;
+                // counts are small integers; drift means a kernel bug
+                debug_assert!((v - vi as f32).abs() < 1e-3, "non-integral device result {v}");
+                out.push(vi);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl StepBackend for XlaBackend {
+    fn name(&self) -> &str {
+        "xla"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_capacity()
+    }
+
+    fn step_batch(&mut self, batch: &StepBatch<'_>) -> Result<Vec<i64>> {
+        batch.validate()?;
+        if batch.n != self.n || batch.r != self.r {
+            return Err(Error::shape(
+                format!("matrix {}x{}", self.r, self.n),
+                format!("batch r={} n={}", batch.r, batch.n),
+            ));
+        }
+        let mut out = Vec::with_capacity(batch.b * batch.n);
+        let max = self.max_capacity();
+        let mut row = 0usize;
+        while row < batch.b {
+            let take = (batch.b - row).min(max);
+            let (cap, exec) = self.exec_for(take);
+            self.run_chunk(
+                cap,
+                &exec,
+                take,
+                &batch.configs[row * self.n..(row + take) * self.n],
+                &batch.spikes[row * self.r..(row + take) * self.r],
+                &mut out,
+            )?;
+            row += take;
+        }
+        Ok(out)
+    }
+}
+
+/// Build an [`XlaBackend`] for a matrix from the artifact manifest: exact
+/// `(R, N)` when lowered, else the smallest padded cover.
+pub fn backend_from_artifacts(
+    rt: std::sync::Arc<PjRt>,
+    matrix: &TransitionMatrix,
+    manifest: &crate::runtime::Manifest,
+) -> Result<XlaBackend> {
+    let r = matrix.rows();
+    let n = matrix.cols();
+    let entries = manifest.padded_entries(r, n);
+    if entries.is_empty() {
+        return Err(Error::artifact(format!(
+            "no step artifact covering R={r} N={n}; run `make artifacts` \
+             (available: {})",
+            manifest.describe()
+        )));
+    }
+    let (rp, np) = (entries[0].rules, entries[0].neurons);
+    let mut execs = Vec::new();
+    for e in entries {
+        let exec = rt.compile_step(&e.path)?;
+        execs.push((e.batch, exec));
+    }
+    XlaBackend::new(rt, matrix, rp, np, execs)
+}
+
+// Full round-trip coverage (compile + execute + padding) lives in
+// tests/backend_equiv.rs, which requires `make artifacts`.
+#[cfg(test)]
+mod tests {
+    use crate::compute::Bucket;
+
+    #[test]
+    fn bucket_type_reexported() {
+        let b = Bucket { r: 5, n: 3, b: 8 };
+        assert_eq!(b.waste(6), 2);
+    }
+}

@@ -1,0 +1,153 @@
+//! The dynamic batcher: packs `(C, S)` rows into backend dispatches.
+//!
+//! Rows accumulate in flat buffers; [`Batcher::run`] slices them into
+//! chunks of at most `target` rows (and at most the backend's own
+//! `max_batch`), preserving order so the fold stage sees deterministic
+//! results.
+
+use crate::compute::{StepBackend, StepBatch};
+use crate::engine::ConfigVector;
+use crate::error::Result;
+
+/// Order-preserving batch accumulator.
+pub struct Batcher {
+    n: usize,
+    r: usize,
+    target: usize,
+    configs: Vec<i64>,
+    spikes: Vec<u8>,
+    rows: usize,
+}
+
+impl Batcher {
+    /// New batcher for `(R, N)` with a per-dispatch row target.
+    pub fn new(n: usize, r: usize, target: usize) -> Self {
+        Batcher::with_capacity(n, r, target, 0)
+    }
+
+    /// New batcher with pre-sized buffers for `rows` rows.
+    pub fn with_capacity(n: usize, r: usize, target: usize, rows: usize) -> Self {
+        Batcher {
+            n,
+            r,
+            target: target.max(1),
+            configs: Vec::with_capacity(rows * n),
+            spikes: Vec::with_capacity(rows * r),
+            rows: 0,
+        }
+    }
+
+    /// Append pre-flattened rows (from a worker's expansion).
+    pub fn push_rows(&mut self, configs: &[i64], spikes: &[u8], rows: usize) {
+        debug_assert_eq!(configs.len(), rows * self.n);
+        debug_assert_eq!(spikes.len(), rows * self.r);
+        self.configs.extend_from_slice(configs);
+        self.spikes.extend_from_slice(spikes);
+        self.rows += rows;
+    }
+
+    /// Append a single row.
+    pub fn push(&mut self, config: &ConfigVector, spiking: &[u8]) {
+        debug_assert_eq!(config.len(), self.n);
+        debug_assert_eq!(spiking.len(), self.r);
+        self.configs.extend(config.as_slice().iter().map(|&x| x as i64));
+        self.spikes.extend_from_slice(spiking);
+        self.rows += 1;
+    }
+
+    /// Pending rows.
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    /// No rows pending?
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Dispatch everything; returns `(child configs in row order,
+    /// rows evaluated, dispatch count)`.
+    pub fn run(self, backend: &mut dyn StepBackend) -> Result<(Vec<ConfigVector>, u64, u64)> {
+        let total = self.rows;
+        let mut out = Vec::with_capacity(total);
+        let mut batches = 0u64;
+        let cap = self.target.min(backend.max_batch()).max(1);
+        let mut row = 0usize;
+        while row < total {
+            let take = (total - row).min(cap);
+            let batch = StepBatch {
+                b: take,
+                n: self.n,
+                r: self.r,
+                configs: &self.configs[row * self.n..(row + take) * self.n],
+                spikes: &self.spikes[row * self.r..(row + take) * self.r],
+            };
+            let result = backend.step_batch(&batch)?;
+            batches += 1;
+            for b in 0..take {
+                out.push(ConfigVector::from_signed(&result[b * self.n..(b + 1) * self.n])?);
+            }
+            row += take;
+        }
+        Ok((out, total as u64, batches))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::HostBackend;
+    use crate::matrix::build_matrix;
+
+    #[test]
+    fn batches_respect_target_and_preserve_order() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let mut batcher = Batcher::new(3, 5, 2);
+        let c0 = ConfigVector::from(vec![2, 1, 1]);
+        // five identical rows with alternating spiking vectors
+        for i in 0..5u32 {
+            let s: &[u8] = if i % 2 == 0 { &[1, 0, 1, 1, 0] } else { &[0, 1, 1, 1, 0] };
+            batcher.push(&c0, s);
+        }
+        assert_eq!(batcher.len(), 5);
+        let mut backend = HostBackend::new(&m);
+        let (out, steps, batches) = batcher.run(&mut backend).unwrap();
+        assert_eq!(steps, 5);
+        assert_eq!(batches, 3, "ceil(5/2)");
+        let names: Vec<String> = out.iter().map(|c| c.to_string()).collect();
+        assert_eq!(names, vec!["2-1-2", "1-1-2", "2-1-2", "1-1-2", "2-1-2"]);
+    }
+
+    #[test]
+    fn empty_batcher_runs_clean() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let batcher = Batcher::new(3, 5, 8);
+        assert!(batcher.is_empty());
+        let mut backend = HostBackend::new(&m);
+        let (out, steps, batches) = batcher.run(&mut backend).unwrap();
+        assert!(out.is_empty());
+        assert_eq!((steps, batches), (0, 0));
+    }
+
+    #[test]
+    fn push_rows_bulk_matches_push_single() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let c0 = ConfigVector::from(vec![2, 1, 1]);
+        let spk = [1u8, 0, 1, 1, 0];
+        let mut a = Batcher::new(3, 5, 8);
+        a.push(&c0, &spk);
+        a.push(&c0, &spk);
+        let mut b = Batcher::with_capacity(3, 5, 8, 2);
+        let flat_c = [2i64, 1, 1, 2, 1, 1];
+        let flat_s = [1u8, 0, 1, 1, 0, 1, 0, 1, 1, 0];
+        b.push_rows(&flat_c, &flat_s, 2);
+        let mut be = HostBackend::new(&m);
+        let ra = a.run(&mut be).unwrap();
+        let mut be2 = HostBackend::new(&m);
+        let rb = b.run(&mut be2).unwrap();
+        assert_eq!(ra.0, rb.0);
+    }
+}

@@ -1,0 +1,290 @@
+//! The coordinator: a multi-worker, batch-dispatching exploration
+//! pipeline — the production version of [`crate::engine::Explorer`].
+//!
+//! Level-synchronous parallel BFS:
+//!
+//! 1. **Expand** (parallel): the current level is partitioned across
+//!    worker threads; each computes applicability and enumerates valid
+//!    spiking vectors (paper Algorithm 2) into flat batch buffers.
+//! 2. **Step** (device): the batcher packs pairs into shape buckets and
+//!    dispatches them to the step backend (host or XLA/PJRT).
+//! 3. **Fold** (parallel): results are deduplicated in a sharded visited
+//!    store; newly discovered configurations — tagged for deterministic
+//!    ordering — form the next level.
+//!
+//! The result is bit-identical to the single-threaded explorer (same
+//! visited set, same BFS level structure) regardless of worker count —
+//! asserted by `tests/coordinator_e2e.rs`.
+
+mod batcher;
+mod metrics;
+mod queue;
+mod worker;
+
+pub use batcher::Batcher;
+pub use metrics::{LevelMetrics, Metrics};
+pub use queue::LevelQueue;
+pub use worker::{LevelDriver, LevelOutcome};
+
+use crate::compute::{HostBackend, StepBackend};
+use crate::engine::{ConfigVector, StopReason, VisitedStore};
+use crate::error::Result;
+use crate::matrix::{build_matrix, TransitionMatrix};
+use crate::snp::SnpSystem;
+
+/// Which backend evaluates step batches.
+pub enum BackendChoice {
+    /// Pure-Rust host backend.
+    Host,
+    /// XLA/PJRT device backend over AOT artifacts.
+    Xla {
+        /// Artifacts directory (containing `manifest.json`).
+        artifacts: std::path::PathBuf,
+    },
+    /// Caller-supplied backend.
+    Custom(Box<dyn StepBackend>),
+}
+
+impl std::fmt::Debug for BackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendChoice::Host => write!(f, "Host"),
+            BackendChoice::Xla { artifacts } => write!(f, "Xla({})", artifacts.display()),
+            BackendChoice::Custom(_) => write!(f, "Custom"),
+        }
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads for expand/fold (0 = available parallelism).
+    pub workers: usize,
+    /// Depth bound (None = unbounded).
+    pub max_depth: Option<u32>,
+    /// Distinct-configuration budget.
+    pub max_configs: Option<usize>,
+    /// Backend for step evaluation.
+    pub backend: BackendChoice,
+    /// Target rows per backend dispatch.
+    pub batch_target: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 0,
+            max_depth: None,
+            max_configs: None,
+            backend: BackendChoice::Host,
+            batch_target: 256,
+        }
+    }
+}
+
+/// Outcome of a coordinated run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// All distinct configurations in deterministic BFS order.
+    pub visited: VisitedStore,
+    /// Stop reason.
+    pub stop: StopReason,
+    /// Halting configurations found.
+    pub halting: Vec<ConfigVector>,
+    /// Per-level and aggregate metrics.
+    pub metrics: Metrics,
+}
+
+/// The coordinator.
+pub struct Coordinator<'a> {
+    sys: &'a SnpSystem,
+    matrix: TransitionMatrix,
+    cfg: CoordinatorConfig,
+}
+
+impl<'a> Coordinator<'a> {
+    /// Create over a system.
+    pub fn new(sys: &'a SnpSystem, cfg: CoordinatorConfig) -> Self {
+        Coordinator { sys, matrix: build_matrix(sys), cfg }
+    }
+
+    /// The number of worker threads that will be used.
+    pub fn effective_workers(&self) -> usize {
+        if self.cfg.workers > 0 {
+            self.cfg.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+
+    /// Run from the initial configuration.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.run_from(ConfigVector::new(self.sys.initial_config()))
+    }
+
+    /// Run from a given configuration.
+    pub fn run_from(&mut self, c0: ConfigVector) -> Result<RunReport> {
+        // Build the backend.
+        let mut backend: Box<dyn StepBackend> = match &mut self.cfg.backend {
+            BackendChoice::Host => Box::new(HostBackend::new(&self.matrix)),
+            BackendChoice::Xla { artifacts } => {
+                let rt = crate::runtime::PjRt::cpu()?;
+                let manifest = crate::runtime::Manifest::load(artifacts)?;
+                Box::new(crate::compute::xla::backend_from_artifacts(
+                    rt,
+                    &self.matrix,
+                    &manifest,
+                )?)
+            }
+            BackendChoice::Custom(b) => {
+                // take ownership; replace with Host to keep cfg valid
+                let owned = std::mem::replace(b, Box::new(HostBackend::new(&self.matrix)));
+                owned
+            }
+        };
+        let workers = self.effective_workers();
+        let driver = worker::LevelDriver::new(
+            self.sys,
+            &self.matrix,
+            workers,
+            self.cfg.batch_target,
+        );
+        let mut visited = VisitedStore::new();
+        visited.insert(c0.clone());
+        let mut level = vec![c0];
+        let mut halting: Vec<ConfigVector> = Vec::new();
+        let mut metrics = Metrics::default();
+        let mut stop = StopReason::Exhausted;
+        let mut depth = 0u32;
+        let start = std::time::Instant::now();
+
+        while !level.is_empty() {
+            if let Some(maxd) = self.cfg.max_depth {
+                if depth >= maxd {
+                    stop = StopReason::MaxDepth;
+                    break;
+                }
+            }
+            if let Some(maxc) = self.cfg.max_configs {
+                if visited.len() >= maxc {
+                    stop = StopReason::MaxConfigs;
+                    break;
+                }
+            }
+            let lvl = driver.process_level(
+                &level,
+                &mut *backend,
+                &mut visited,
+                &mut halting,
+                self.cfg.max_configs,
+            )?;
+            let truncated = lvl.truncated;
+            metrics.record_level(depth, &lvl);
+            level = lvl.next_level;
+            depth += 1;
+            if truncated {
+                stop = StopReason::MaxConfigs;
+                break;
+            }
+        }
+        if stop == StopReason::Exhausted
+            && !halting.is_empty()
+            && halting.iter().all(|c| c.is_zero())
+        {
+            stop = StopReason::ZeroConfig;
+        }
+        metrics.total_elapsed = start.elapsed();
+        metrics.backend = backend.name().to_string();
+        metrics.workers = workers;
+        Ok(RunReport { visited, stop, halting, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExploreOptions, Explorer};
+
+    #[test]
+    fn matches_single_threaded_explorer_on_paper_pi() {
+        let sys = crate::generators::paper_pi();
+        let mut coord = Coordinator::new(
+            &sys,
+            CoordinatorConfig { workers: 4, max_depth: Some(6), ..Default::default() },
+        );
+        let rep = coord.run().unwrap();
+        let single =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(6)).run();
+        assert_eq!(rep.visited.in_order(), single.visited.in_order());
+        assert_eq!(rep.stop, StopReason::MaxDepth);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_result() {
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let mut orders = Vec::new();
+        for w in [1, 2, 8] {
+            let mut coord = Coordinator::new(
+                &sys,
+                CoordinatorConfig { workers: w, ..Default::default() },
+            );
+            let rep = coord.run().unwrap();
+            orders.push(
+                rep.visited.in_order().iter().map(|c| c.to_string()).collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(orders[0], orders[1]);
+        assert_eq!(orders[1], orders[2]);
+    }
+
+    #[test]
+    fn finite_system_reports_zero_stop() {
+        let sys = crate::generators::counter_chain(3, 2);
+        let mut coord = Coordinator::new(&sys, CoordinatorConfig::default());
+        let rep = coord.run().unwrap();
+        assert_eq!(rep.stop, StopReason::ZeroConfig);
+        assert!(rep.metrics.levels.len() > 2);
+        assert_eq!(rep.metrics.backend, "host");
+    }
+
+    #[test]
+    fn max_configs_budget() {
+        let sys = crate::generators::paper_pi();
+        let mut coord = Coordinator::new(
+            &sys,
+            CoordinatorConfig { max_configs: Some(20), ..Default::default() },
+        );
+        let rep = coord.run().unwrap();
+        assert_eq!(rep.stop, StopReason::MaxConfigs);
+        assert!(rep.visited.len() >= 20);
+    }
+
+    #[test]
+    fn custom_backend_is_used() {
+        struct Probe(std::sync::Arc<std::sync::atomic::AtomicU64>);
+        impl StepBackend for Probe {
+            fn name(&self) -> &str {
+                "probe"
+            }
+            fn step_batch(&mut self, b: &crate::compute::StepBatch<'_>) -> Result<Vec<i64>> {
+                self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                // delegate to a throwaway host backend
+                let m = crate::matrix::build_matrix(&crate::generators::paper_pi());
+                HostBackend::new(&m).step_batch(b)
+            }
+        }
+        let calls = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let sys = crate::generators::paper_pi();
+        let mut coord = Coordinator::new(
+            &sys,
+            CoordinatorConfig {
+                max_depth: Some(3),
+                backend: BackendChoice::Custom(Box::new(Probe(calls.clone()))),
+                ..Default::default()
+            },
+        );
+        let rep = coord.run().unwrap();
+        assert!(calls.load(std::sync::atomic::Ordering::Relaxed) > 0);
+        assert_eq!(rep.metrics.backend, "probe");
+    }
+}

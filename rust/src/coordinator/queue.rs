@@ -1,0 +1,77 @@
+//! Level queue with spill accounting — bounds frontier memory and reports
+//! high-water marks (large systems can have millions of configs per
+//! level; the coordinator needs to know when it is the memory bottleneck).
+
+use crate::engine::ConfigVector;
+
+/// FIFO of BFS levels with peak-size tracking.
+#[derive(Debug, Default)]
+pub struct LevelQueue {
+    current: Vec<ConfigVector>,
+    peak_level: usize,
+    total_enqueued: u64,
+}
+
+impl LevelQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        LevelQueue::default()
+    }
+
+    /// Install the next level.
+    pub fn replace(&mut self, level: Vec<ConfigVector>) {
+        self.peak_level = self.peak_level.max(level.len());
+        self.total_enqueued += level.len() as u64;
+        self.current = level;
+    }
+
+    /// Borrow the current level.
+    pub fn current(&self) -> &[ConfigVector] {
+        &self.current
+    }
+
+    /// Is the frontier empty?
+    pub fn is_empty(&self) -> bool {
+        self.current.is_empty()
+    }
+
+    /// Largest level seen.
+    pub fn peak_level(&self) -> usize {
+        self.peak_level
+    }
+
+    /// Total configurations ever enqueued.
+    pub fn total_enqueued(&self) -> u64 {
+        self.total_enqueued
+    }
+
+    /// Approximate bytes held by the current level.
+    pub fn approx_bytes(&self) -> usize {
+        self.current
+            .iter()
+            .map(|c| c.len() * std::mem::size_of::<u64>() + std::mem::size_of::<ConfigVector>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(v: &[u64]) -> ConfigVector {
+        ConfigVector::from(v.to_vec())
+    }
+
+    #[test]
+    fn tracks_peak_and_total() {
+        let mut q = LevelQueue::new();
+        q.replace(vec![c(&[1]), c(&[2])]);
+        q.replace(vec![c(&[3]), c(&[4]), c(&[5])]);
+        q.replace(vec![c(&[6])]);
+        assert_eq!(q.peak_level(), 3);
+        assert_eq!(q.total_enqueued(), 6);
+        assert!(!q.is_empty());
+        assert_eq!(q.current().len(), 1);
+        assert!(q.approx_bytes() > 0);
+    }
+}

@@ -1,0 +1,312 @@
+//! Level-synchronous parallel expansion (the coordinator's hot path).
+//!
+//! A level is processed in bounded **windows** so that frontier blow-ups
+//! (Ψ can be exponential, paper §4.2) never materialize a whole level's
+//! row set in memory: expand a window of parents in parallel → dispatch
+//! its rows through the batcher → fold (dedup) → next window, with the
+//! configuration budget checked between windows.
+
+use std::time::Instant;
+
+use super::batcher::Batcher;
+use super::metrics::LevelMetrics;
+use crate::compute::StepBackend;
+use crate::engine::{applicable_rules_into, ApplicabilityMap, ConfigVector, SpikingEnumeration, VisitedStore};
+use crate::error::Result;
+use crate::matrix::TransitionMatrix;
+use crate::snp::SnpSystem;
+
+/// Output of one worker's expansion over its slice of the window:
+/// flat `(C, S)` buffers plus halting configs, tagged with the parent's
+/// window index for deterministic folding.
+struct Expansion {
+    configs: Vec<i64>,
+    spikes: Vec<u8>,
+    rows: usize,
+    halting: Vec<(u32, ConfigVector)>,
+    psi_total: u128,
+}
+
+/// Processes one BFS level: windowed parallel expand → batched step →
+/// ordered fold.
+pub struct LevelDriver<'a> {
+    sys: &'a SnpSystem,
+    #[allow(dead_code)]
+    matrix: &'a TransitionMatrix,
+    workers: usize,
+    batch_target: usize,
+    /// Parents expanded per window (bounds peak row memory together with
+    /// the per-config Ψ).
+    window_parents: usize,
+}
+
+/// What a processed level yields.
+pub struct LevelOutcome {
+    /// Newly discovered configurations in deterministic order.
+    pub next_level: Vec<ConfigVector>,
+    /// Rows evaluated.
+    pub steps: u64,
+    /// Backend dispatches.
+    pub batches: u64,
+    /// Σ Ψ of the level.
+    pub psi_total: u128,
+    /// True when the level was cut short by the configuration budget.
+    pub truncated: bool,
+    /// Time in the expand phase.
+    pub expand_time: std::time::Duration,
+    /// Time in the step phase.
+    pub step_time: std::time::Duration,
+    /// Time in the fold phase.
+    pub fold_time: std::time::Duration,
+}
+
+impl<'a> LevelDriver<'a> {
+    /// Create a driver.
+    pub fn new(
+        sys: &'a SnpSystem,
+        matrix: &'a TransitionMatrix,
+        workers: usize,
+        batch_target: usize,
+    ) -> Self {
+        LevelDriver {
+            sys,
+            matrix,
+            workers: workers.max(1),
+            batch_target: batch_target.max(1),
+            window_parents: 4096,
+        }
+    }
+
+    /// Override the window size (testing / tuning).
+    pub fn with_window(mut self, parents: usize) -> Self {
+        self.window_parents = parents.max(1);
+        self
+    }
+
+    /// Expand, evaluate and fold one level.
+    ///
+    /// `budget`: stop expanding further windows once the visited store
+    /// holds at least this many configurations (resource bound, paper
+    /// criterion 2 stays exact when `None`).
+    pub fn process_level(
+        &self,
+        level: &[ConfigVector],
+        backend: &mut dyn StepBackend,
+        visited: &mut VisitedStore,
+        halting: &mut Vec<ConfigVector>,
+        budget: Option<usize>,
+    ) -> Result<LevelOutcome> {
+        let n = self.sys.num_neurons();
+        let r = self.sys.num_rules();
+        let mut out = LevelOutcome {
+            next_level: Vec::new(),
+            steps: 0,
+            batches: 0,
+            psi_total: 0,
+            truncated: false,
+            expand_time: Default::default(),
+            step_time: Default::default(),
+            fold_time: Default::default(),
+        };
+
+        for window in level.chunks(self.window_parents) {
+            if let Some(b) = budget {
+                if visited.len() >= b {
+                    out.truncated = true;
+                    break;
+                }
+            }
+            // --- expand (parallel over slices of the window) --------------
+            let t0 = Instant::now();
+            let chunk = window.len().div_ceil(self.workers).max(1);
+            let expansions: Vec<Expansion> = if self.workers == 1 || window.len() < 64 {
+                vec![self.expand_slice(window, 0, r)]
+            } else {
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::new();
+                    for (w, slice) in window.chunks(chunk).enumerate() {
+                        let base = (w * chunk) as u32;
+                        handles.push(scope.spawn(move || self.expand_slice(slice, base, r)));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("expand worker panicked"))
+                        .collect()
+                })
+            };
+            out.expand_time += t0.elapsed();
+
+            // --- step (batched through the backend) -----------------------
+            let t1 = Instant::now();
+            let total_rows: usize = expansions.iter().map(|e| e.rows).sum();
+            let mut batcher = Batcher::with_capacity(n, r, self.batch_target, total_rows);
+            let mut halts: Vec<(u32, ConfigVector)> = Vec::new();
+            for e in &expansions {
+                out.psi_total += e.psi_total;
+                batcher.push_rows(&e.configs, &e.spikes, e.rows);
+            }
+            for e in expansions {
+                halts.extend(e.halting);
+            }
+            let (results, steps, batches) = batcher.run(backend)?;
+            out.steps += steps;
+            out.batches += batches;
+            out.step_time += t1.elapsed();
+
+            // --- fold (ordered dedup) --------------------------------------
+            let t2 = Instant::now();
+            halts.sort_by_key(|(i, _)| *i);
+            halting.extend(halts.into_iter().map(|(_, c)| c));
+            for child in results {
+                if visited.insert(child.clone()) {
+                    out.next_level.push(child);
+                }
+            }
+            out.fold_time += t2.elapsed();
+        }
+        Ok(out)
+    }
+
+    fn expand_slice(&self, slice: &[ConfigVector], base: u32, r: usize) -> Expansion {
+        let mut e = Expansion {
+            configs: Vec::new(),
+            spikes: Vec::new(),
+            rows: 0,
+            halting: Vec::new(),
+            psi_total: 0,
+        };
+        let mut map = ApplicabilityMap::default();
+        for (i, config) in slice.iter().enumerate() {
+            let idx = base + i as u32;
+            applicable_rules_into(self.sys, config, &mut map);
+            if map.is_halting() {
+                e.halting.push((idx, config.clone()));
+                continue;
+            }
+            e.psi_total += map.psi();
+            let mut en = SpikingEnumeration::new(&map, r);
+            while en.fill_next(&mut e.spikes) {
+                e.configs.extend(config.as_slice().iter().map(|&x| x as i64));
+                e.rows += 1;
+            }
+        }
+        e
+    }
+}
+
+impl From<&LevelOutcome> for LevelMetrics {
+    fn from(o: &LevelOutcome) -> LevelMetrics {
+        LevelMetrics {
+            new_configs: o.next_level.len() as u64,
+            steps: o.steps,
+            batches: o.batches,
+            psi_total: o.psi_total,
+            expand_time: o.expand_time,
+            step_time: o.step_time,
+            fold_time: o.fold_time,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::HostBackend;
+    use crate::matrix::build_matrix;
+
+    #[test]
+    fn single_level_matches_paper() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let driver = LevelDriver::new(&sys, &m, 2, 4);
+        let mut backend = HostBackend::new(&m);
+        let mut visited = VisitedStore::new();
+        let c0 = ConfigVector::from(vec![2, 1, 1]);
+        visited.insert(c0.clone());
+        let mut halting = Vec::new();
+        let out = driver
+            .process_level(&[c0], &mut backend, &mut visited, &mut halting, None)
+            .unwrap();
+        let names: Vec<String> = out.next_level.iter().map(|c| c.to_string()).collect();
+        assert_eq!(names, vec!["2-1-2", "1-1-2"]);
+        assert_eq!(out.steps, 2);
+        assert_eq!(out.psi_total, 2);
+        assert!(halting.is_empty());
+        assert!(!out.truncated);
+    }
+
+    #[test]
+    fn halting_configs_collected_in_order() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let driver = LevelDriver::new(&sys, &m, 3, 4);
+        let mut backend = HostBackend::new(&m);
+        let mut visited = VisitedStore::new();
+        let mut halting = Vec::new();
+        let level = vec![
+            ConfigVector::from(vec![1, 0, 0]),
+            ConfigVector::from(vec![2, 1, 1]),
+            ConfigVector::from(vec![0, 0, 0]),
+        ];
+        for c in &level {
+            visited.insert(c.clone());
+        }
+        driver
+            .process_level(&level, &mut backend, &mut visited, &mut halting, None)
+            .unwrap();
+        assert_eq!(
+            halting.iter().map(|c| c.to_string()).collect::<Vec<_>>(),
+            vec!["1-0-0", "0-0-0"]
+        );
+    }
+
+    #[test]
+    fn budget_truncates_between_windows() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let driver = LevelDriver::new(&sys, &m, 1, 4).with_window(1);
+        let mut backend = HostBackend::new(&m);
+        let mut visited = VisitedStore::new();
+        let mut halting = Vec::new();
+        // two-parent level with a budget that is already met
+        let level = vec![
+            ConfigVector::from(vec![2, 1, 1]),
+            ConfigVector::from(vec![2, 1, 2]),
+        ];
+        for c in &level {
+            visited.insert(c.clone());
+        }
+        let out = driver
+            .process_level(&level, &mut backend, &mut visited, &mut halting, Some(2))
+            .unwrap();
+        assert!(out.truncated);
+        assert!(out.next_level.is_empty());
+    }
+
+    #[test]
+    fn window_size_does_not_change_results() {
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let m = build_matrix(&sys);
+        let mut runs = Vec::new();
+        for window in [1usize, 2, 1024] {
+            let driver = LevelDriver::new(&sys, &m, 2, 8).with_window(window);
+            let mut backend = HostBackend::new(&m);
+            let mut visited = VisitedStore::new();
+            let c0 = ConfigVector::new(sys.initial_config());
+            visited.insert(c0.clone());
+            let mut halting = Vec::new();
+            let mut level = vec![c0];
+            while !level.is_empty() {
+                let out = driver
+                    .process_level(&level, &mut backend, &mut visited, &mut halting, None)
+                    .unwrap();
+                level = out.next_level;
+            }
+            runs.push(
+                visited.in_order().iter().map(|c| c.to_string()).collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[1], runs[2]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Static & dynamic analysis of SN P systems: the verification questions
+//! a simulator user asks before trusting a run.
+//!
+//! - **determinism** — does any reachable configuration branch (Ψ > 1)?
+//! - **confluence** — do all halting runs end in the same configuration?
+//! - **boundedness** — do spike counts stay below a bound on every
+//!   reachable configuration (⇒ the reachability graph is finite)?
+//! - **conservation** — static per-rule spike balance (lower/upper bound
+//!   on the change of total spikes per step).
+
+use super::config::ConfigVector;
+use super::explorer::{ExploreOptions, Explorer};
+use super::stop::StopReason;
+use crate::snp::SnpSystem;
+
+/// Result of [`analyze`].
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    /// Explored exhaustively (bounds not hit)?
+    pub complete: bool,
+    /// Number of distinct configurations reached.
+    pub reachable: usize,
+    /// Largest Ψ observed (1 ⇒ deterministic within the explored region).
+    pub max_branching: u128,
+    /// Halting configurations found.
+    pub halting: Vec<ConfigVector>,
+    /// All halting configurations identical?
+    pub confluent: bool,
+    /// Largest spike count seen in any neuron.
+    pub max_spikes: u64,
+    /// Static bounds on Δ(total spikes) per step: (min, max) over rules.
+    pub delta_bounds: (i64, i64),
+    /// Does some neuron's count grow beyond `bound_hint` (within the
+    /// explored region)?
+    pub exceeded_hint: bool,
+}
+
+impl AnalysisReport {
+    /// Deterministic within the explored region?
+    pub fn deterministic(&self) -> bool {
+        self.max_branching <= 1
+    }
+
+    /// Render a human summary.
+    pub fn render(&self) -> String {
+        format!(
+            "reachable: {}{}\nmax branching Ψ: {}{}\nhalting configs: {}{}\n\
+             max spike count: {}\nΔ spikes per rule: [{}, {}]\n",
+            self.reachable,
+            if self.complete { " (complete)" } else { " (bounded run)" },
+            self.max_branching,
+            if self.deterministic() { " — deterministic" } else { " — non-deterministic" },
+            self.halting.len(),
+            if self.halting.is_empty() {
+                String::new()
+            } else if self.confluent {
+                format!(" — confluent at {}", self.halting[0])
+            } else {
+                " — NOT confluent".to_string()
+            },
+            self.max_spikes,
+            self.delta_bounds.0,
+            self.delta_bounds.1,
+        )
+    }
+}
+
+/// Static per-rule spike-balance bounds: applying rule `r` of neuron `j`
+/// changes the total spike count by `produced·out_degree(j) − consumed`.
+pub fn delta_bounds(sys: &SnpSystem) -> (i64, i64) {
+    let mut lo = 0i64;
+    let mut hi = 0i64;
+    for (_, j, rule) in sys.rules() {
+        let delta =
+            rule.produced as i64 * sys.out_degree(j) as i64 - rule.consumed as i64;
+        lo = lo.min(delta);
+        hi = hi.max(delta);
+    }
+    (lo, hi)
+}
+
+/// Explore up to `max_configs` and answer the standard questions.
+/// `bound_hint` flags configurations whose per-neuron count exceeds it.
+pub fn analyze(sys: &SnpSystem, max_configs: usize, bound_hint: u64) -> AnalysisReport {
+    let mut explorer =
+        Explorer::new(sys, ExploreOptions::breadth_first().max_configs(max_configs));
+    let report = explorer.run();
+    // recompute max branching by re-walking the visited set (cheap, and
+    // keeps the explorer lean)
+    let mut max_branching = 0u128;
+    let mut max_spikes = 0u64;
+    let mut exceeded = false;
+    for c in report.visited.in_order() {
+        let map = super::applicability::applicable_rules(sys, c);
+        if !map.is_halting() {
+            max_branching = max_branching.max(map.psi());
+        }
+        for j in 0..c.len() {
+            max_spikes = max_spikes.max(c.get(j));
+            exceeded |= c.get(j) > bound_hint;
+        }
+    }
+    let confluent = match report.halting_configs.split_first() {
+        None => true,
+        Some((first, rest)) => rest.iter().all(|c| c == first),
+    };
+    AnalysisReport {
+        complete: matches!(report.stop, StopReason::Exhausted | StopReason::ZeroConfig),
+        reachable: report.visited.len(),
+        max_branching,
+        halting: report.halting_configs,
+        confluent,
+        max_spikes,
+        delta_bounds: delta_bounds(sys),
+        exceeded_hint: exceeded,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_chain_is_deterministic_and_confluent() {
+        let sys = crate::generators::counter_chain(4, 3);
+        let rep = analyze(&sys, 10_000, 100);
+        assert!(rep.complete);
+        assert!(rep.deterministic());
+        assert!(rep.confluent);
+        assert_eq!(rep.halting.len(), 1);
+        assert!(rep.halting[0].is_zero());
+        // head rule keeps a deficit (consume 1 emit 1 → Δ0); tail loses 1
+        assert_eq!(rep.delta_bounds, (-1, 0));
+    }
+
+    #[test]
+    fn paper_pi_is_nondeterministic() {
+        let sys = crate::generators::paper_pi();
+        let rep = analyze(&sys, 300, 100);
+        assert!(!rep.complete, "Π is unbounded");
+        assert!(!rep.deterministic());
+        assert!(rep.max_branching >= 4, "Ψ=4 at 2-1-2");
+    }
+
+    #[test]
+    fn ring_is_conservative() {
+        // uniform ring: every neuron fires 1 and receives 1 → the uniform
+        // state is a fixed point (one reachable config, fully conservative)
+        let sys = crate::generators::ring(5, 2);
+        let rep = analyze(&sys, 10_000, 100);
+        assert_eq!(rep.delta_bounds, (0, 0), "every rule conserves spikes");
+        assert!(rep.complete);
+        assert_eq!(rep.reachable, 1, "uniform charge is a fixed point");
+        assert_eq!(rep.max_spikes, 2);
+    }
+
+    #[test]
+    fn adder_is_confluent_but_branching() {
+        // guards are exact and disjoint per neuron: deterministic
+        let sys = crate::generators::bit_adder(3);
+        let rep = analyze(&sys, 10_000, 100);
+        assert!(rep.deterministic());
+        assert!(rep.confluent);
+    }
+
+    #[test]
+    fn bound_hint_detection() {
+        let sys = crate::generators::paper_pi();
+        let rep = analyze(&sys, 100, 3);
+        assert!(rep.exceeded_hint, "σ3 grows past 3");
+        let rep2 = analyze(&sys, 100, 10_000);
+        assert!(!rep2.exceeded_hint);
+    }
+
+    #[test]
+    fn nonconfluent_system_detected() {
+        use crate::snp::{Rule, SystemBuilder};
+        // one neuron, two rules with different consumption → two distinct
+        // halting configs
+        let sys = SystemBuilder::new("fork")
+            .neuron(2, vec![Rule::exact(2, 1), Rule { guard: crate::snp::Guard::Exact(2), consumed: 1, produced: 1 }])
+            .neuron(0, vec![])
+            .synapse(0, 1)
+            .build()
+            .unwrap();
+        let rep = analyze(&sys, 1_000, 100);
+        assert!(!rep.deterministic());
+        assert!(!rep.confluent);
+    }
+}

@@ -1,0 +1,146 @@
+//! Rule applicability (part II of the paper's Algorithm 1 / step II-1 of
+//! Algorithm 2: the `tmp` marking).
+//!
+//! Given a configuration, compute per neuron which rules may fire. The
+//! paper marks applicable rules in a mutated copy of `r` (`tmp`); we
+//! return the global rule ids in a flat CSR layout (one allocation, reused
+//! across configurations on the hot path via [`applicable_rules_into`]).
+
+use super::config::ConfigVector;
+use crate::snp::SnpSystem;
+
+/// Applicable rules per neuron: `neuron(j)` lists **global** rule ids of
+/// neuron `j` whose guard admits the neuron's current count. Flat CSR
+/// storage so recomputation reuses the buffers.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ApplicabilityMap {
+    /// Applicable global rule ids, grouped by neuron.
+    ids: Vec<u32>,
+    /// `ids[off[j]..off[j+1]]` = neuron `j`'s applicable rules.
+    off: Vec<u32>,
+}
+
+impl ApplicabilityMap {
+    /// Applicable rule ids of neuron `j`.
+    #[inline]
+    pub fn neuron(&self, j: usize) -> &[u32] {
+        &self.ids[self.off[j] as usize..self.off[j + 1] as usize]
+    }
+
+    /// Number of neurons.
+    #[inline]
+    pub fn num_neurons(&self) -> usize {
+        self.off.len().saturating_sub(1)
+    }
+
+    /// The paper's Ψ (eq. (8)) extended to idle neurons: the number of
+    /// valid spiking vectors, `Π_j max(1, |applicable_j|)`.
+    pub fn psi(&self) -> u128 {
+        (0..self.num_neurons())
+            .map(|j| self.neuron(j).len().max(1) as u128)
+            .product()
+    }
+
+    /// True when **no** neuron can fire — the configuration is halting
+    /// (the paper's computation-tree leaves).
+    pub fn is_halting(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The paper's ω for neuron `j`: how many of its rules satisfy E.
+    pub fn omega(&self, j: usize) -> usize {
+        self.neuron(j).len()
+    }
+}
+
+/// Compute the applicability map of `config` under `sys`.
+pub fn applicable_rules(sys: &SnpSystem, config: &ConfigVector) -> ApplicabilityMap {
+    let mut map = ApplicabilityMap::default();
+    applicable_rules_into(sys, config, &mut map);
+    map
+}
+
+/// Recompute into an existing map, reusing its buffers (hot path).
+pub fn applicable_rules_into(sys: &SnpSystem, config: &ConfigVector, map: &mut ApplicabilityMap) {
+    debug_assert_eq!(config.len(), sys.num_neurons());
+    map.ids.clear();
+    map.off.clear();
+    map.off.push(0);
+    for (j, neuron) in sys.neurons.iter().enumerate() {
+        let k = config.get(j);
+        let base = sys.rules_of(j).start as u32;
+        for (l, r) in neuron.rules.iter().enumerate() {
+            if r.applicable(k) {
+                map.ids.push(base + l as u32);
+            }
+        }
+        map.off.push(map.ids.len() as u32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_c0_marking() {
+        // Π at C0 = [2,1,1]: rules (1),(2) in σ1; (3) in σ2; (4) in σ3 — the
+        // paper's tmp = [[1,2],[1],[1,0]] marking, Ψ = 2.
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(vec![2, 1, 1]));
+        assert_eq!(map.neuron(0), &[0, 1]);
+        assert_eq!(map.neuron(1), &[2]);
+        assert_eq!(map.neuron(2), &[3]);
+        assert_eq!(map.psi(), 2);
+        assert_eq!(map.omega(0), 2);
+        assert_eq!(map.omega(2), 1);
+        assert!(!map.is_halting());
+    }
+
+    #[test]
+    fn threshold_admits_higher_counts() {
+        // At [2,1,2] neuron 3 holds 2 spikes: BOTH a→a and a^2→a fire
+        // (validated against the paper's §5 successor sets).
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(vec![2, 1, 2]));
+        assert_eq!(map.neuron(2), &[3, 4]);
+        assert_eq!(map.psi(), 4);
+    }
+
+    #[test]
+    fn idle_neuron_contributes_factor_one() {
+        // At [1,1,2]: σ1 cannot fire (needs ≥2), Ψ = 1·1·2 = 2.
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(vec![1, 1, 2]));
+        assert_eq!(map.neuron(0), &[] as &[u32]);
+        assert_eq!(map.psi(), 2);
+    }
+
+    #[test]
+    fn halting_configuration() {
+        // [1,0,0]: σ1 has 1 (<2), σ2/σ3 empty — the dead config the paper
+        // reaches at depth 5 ('1-0-0').
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(vec![1, 0, 0]));
+        assert!(map.is_halting());
+        assert_eq!(map.psi(), 1);
+    }
+
+    #[test]
+    fn zero_vector_is_halting() {
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(vec![0, 0, 0]));
+        assert!(map.is_halting());
+    }
+
+    #[test]
+    fn reuse_buffer_matches_fresh() {
+        let sys = crate::generators::paper_pi();
+        let mut reused = ApplicabilityMap::default();
+        for cfg in [[2u64, 1, 1], [2, 1, 2], [1, 0, 0], [0, 1, 9]] {
+            let c = ConfigVector::from(cfg.to_vec());
+            applicable_rules_into(&sys, &c, &mut reused);
+            assert_eq!(reused, applicable_rules(&sys, &c), "cfg {cfg:?}");
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Configuration vectors `C_k` (paper §2.2).
+
+use std::fmt;
+
+/// The number of spikes in every neuron at one instant — the paper's
+/// `C_k`. Displayed in the paper's `allGenCk` notation, e.g. `2-1-1`.
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ConfigVector(Vec<u64>);
+
+impl ConfigVector {
+    /// Wrap a spike-count vector.
+    pub fn new(counts: Vec<u64>) -> Self {
+        ConfigVector(counts)
+    }
+
+    /// Number of neurons.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// True for the 0-neuron vector (degenerate).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Spike count of neuron `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        self.0[i]
+    }
+
+    /// Raw counts.
+    #[inline]
+    pub fn as_slice(&self) -> &[u64] {
+        &self.0
+    }
+
+    /// The paper's stopping criterion 1: every neuron empty.
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.0.iter().all(|&c| c == 0)
+    }
+
+    /// Total spikes in the system.
+    #[inline]
+    pub fn total_spikes(&self) -> u64 {
+        self.0.iter().sum()
+    }
+
+    /// Parse the paper's `2-1-1` notation.
+    pub fn parse_dashed(s: &str) -> crate::Result<ConfigVector> {
+        let counts: std::result::Result<Vec<u64>, _> =
+            s.split('-').map(|p| p.trim().parse::<u64>()).collect();
+        counts
+            .map(ConfigVector)
+            .map_err(|e| crate::Error::parse("config vector", 0, format!("`{s}`: {e}")))
+    }
+
+    /// Build from a signed step result, checking non-negativity (the
+    /// semantics guarantee it; a violation indicates a backend bug).
+    pub fn from_signed(v: &[i64]) -> crate::Result<ConfigVector> {
+        let mut out = Vec::with_capacity(v.len());
+        for &x in v {
+            if x < 0 {
+                return Err(crate::Error::Coordinator(format!(
+                    "negative spike count {x} in step result {v:?}"
+                )));
+            }
+            out.push(x as u64);
+        }
+        Ok(ConfigVector(out))
+    }
+}
+
+impl From<Vec<u64>> for ConfigVector {
+    fn from(v: Vec<u64>) -> Self {
+        ConfigVector(v)
+    }
+}
+
+impl fmt::Display for ConfigVector {
+    /// The paper's `allGenCk` format: counts joined by `-`, e.g. `2-1-1`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for c in &self.0 {
+            if !first {
+                write!(f, "-")?;
+            }
+            write!(f, "{c}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for ConfigVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "C<{self}>")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_paper_notation() {
+        let c = ConfigVector::from(vec![2, 1, 1]);
+        assert_eq!(c.to_string(), "2-1-1");
+        assert_eq!(format!("{c:?}"), "C<2-1-1>");
+    }
+
+    #[test]
+    fn parse_dashed_roundtrip() {
+        let c = ConfigVector::parse_dashed("2-0-10").unwrap();
+        assert_eq!(c.as_slice(), &[2, 0, 10]);
+        assert_eq!(c.to_string(), "2-0-10");
+        assert!(ConfigVector::parse_dashed("2-x-1").is_err());
+    }
+
+    #[test]
+    fn zero_detection() {
+        assert!(ConfigVector::from(vec![0, 0, 0]).is_zero());
+        assert!(!ConfigVector::from(vec![0, 1, 0]).is_zero());
+        assert_eq!(ConfigVector::from(vec![2, 1, 1]).total_spikes(), 4);
+    }
+
+    #[test]
+    fn from_signed_rejects_negative() {
+        assert!(ConfigVector::from_signed(&[1, -1]).is_err());
+        assert_eq!(ConfigVector::from_signed(&[3, 0]).unwrap().as_slice(), &[3, 0]);
+    }
+
+    #[test]
+    fn hash_eq() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(ConfigVector::from(vec![2, 1, 1]));
+        assert!(s.contains(&ConfigVector::from(vec![2, 1, 1])));
+        assert!(!s.contains(&ConfigVector::from(vec![1, 1, 2])));
+    }
+}

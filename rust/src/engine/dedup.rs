@@ -1,0 +1,202 @@
+//! The visited-configuration store (the paper's `allGenCk` list).
+//!
+//! Algorithm 1's stopping criterion 2 requires remembering every generated
+//! `C_k` and refusing to re-expand repeats. The paper keeps a Python list
+//! of dash-joined strings; we keep a hash set plus an insertion
+//! order so reports can print `allGenCk` exactly as the paper does.
+
+use super::config::ConfigVector;
+
+/// Insertion-ordered set of configurations.
+///
+/// Hasher choice is measured, not assumed: `benches/bench_dedup.rs`
+/// compares FxHash, SipHash (std) and the sharded store on narrow and
+/// wide configuration keys — std's SipHash wins or ties on every width
+/// for this key shape (multi-word `Vec<u64>`), so the store uses it.
+#[derive(Debug, Default)]
+pub struct VisitedStore {
+    set: std::collections::HashSet<ConfigVector>,
+    order: Vec<ConfigVector>,
+}
+
+impl VisitedStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        VisitedStore::default()
+    }
+
+    /// Insert; returns `true` if the configuration was new.
+    pub fn insert(&mut self, c: ConfigVector) -> bool {
+        if self.set.insert(c.clone()) {
+            self.order.push(c);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, c: &ConfigVector) -> bool {
+        self.set.contains(c)
+    }
+
+    /// Number of distinct configurations seen.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    /// True when nothing has been inserted.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Insertion order — the paper's `allGenCk`.
+    #[inline]
+    pub fn in_order(&self) -> &[ConfigVector] {
+        &self.order
+    }
+
+    /// Render as the paper prints it: `['2-1-1', '2-1-2', …]`.
+    pub fn render_all_gen_ck(&self) -> String {
+        let items: Vec<String> = self.order.iter().map(|c| format!("'{c}'")).collect();
+        format!("[{}]", items.join(", "))
+    }
+}
+
+/// A sharded visited store for the multi-threaded coordinator: shard by
+/// hash so concurrent frontier workers contend on different locks.
+#[derive(Debug)]
+pub struct ShardedVisited {
+    shards: Vec<std::sync::Mutex<std::collections::HashMap<ConfigVector, u32>>>,
+    mask: usize,
+}
+
+impl ShardedVisited {
+    /// Create with `2^log2_shards` shards.
+    pub fn new(log2_shards: u32) -> Self {
+        let n = 1usize << log2_shards;
+        ShardedVisited {
+            shards: (0..n)
+                .map(|_| std::sync::Mutex::new(std::collections::HashMap::new()))
+                .collect(),
+            mask: n - 1,
+        }
+    }
+
+    fn shard_of(&self, c: &ConfigVector) -> usize {
+        use std::hash::{BuildHasher, Hash, Hasher};
+        let mut h = crate::util::FxBuildHasher.build_hasher();
+        c.hash(&mut h);
+        (h.finish() as usize) & self.mask
+    }
+
+    /// Insert with a sequence tag; returns `true` when new.
+    pub fn insert(&self, c: &ConfigVector, tag: u32) -> bool {
+        let s = self.shard_of(c);
+        let mut guard = self.shards[s].lock().unwrap();
+        if guard.contains_key(c) {
+            false
+        } else {
+            guard.insert(c.clone(), tag);
+            true
+        }
+    }
+
+    /// Membership test.
+    pub fn contains(&self, c: &ConfigVector) -> bool {
+        let s = self.shard_of(c);
+        self.shards[s].lock().unwrap().contains_key(c)
+    }
+
+    /// Total entries across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// True when no entries exist.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain into a tag-sorted vector (restores deterministic order).
+    pub fn into_ordered(self) -> Vec<ConfigVector> {
+        let mut all: Vec<(u32, ConfigVector)> = Vec::new();
+        for s in self.shards {
+            let m = s.into_inner().unwrap();
+            all.extend(m.into_iter().map(|(c, t)| (t, c)));
+        }
+        all.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        all.into_iter().map(|(_, c)| c).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(v: &[u64]) -> ConfigVector {
+        ConfigVector::from(v.to_vec())
+    }
+
+    #[test]
+    fn insert_dedups_and_keeps_order() {
+        let mut v = VisitedStore::new();
+        assert!(v.insert(c(&[2, 1, 1])));
+        assert!(v.insert(c(&[2, 1, 2])));
+        assert!(!v.insert(c(&[2, 1, 1])), "repeat rejected");
+        assert_eq!(v.len(), 2);
+        assert!(v.contains(&c(&[2, 1, 2])));
+        assert_eq!(v.in_order()[0], c(&[2, 1, 1]));
+    }
+
+    #[test]
+    fn renders_like_paper() {
+        let mut v = VisitedStore::new();
+        v.insert(c(&[2, 1, 1]));
+        v.insert(c(&[2, 1, 2]));
+        v.insert(c(&[1, 1, 2]));
+        assert_eq!(v.render_all_gen_ck(), "['2-1-1', '2-1-2', '1-1-2']");
+    }
+
+    #[test]
+    fn sharded_basic() {
+        let s = ShardedVisited::new(4);
+        assert!(s.insert(&c(&[1, 2]), 0));
+        assert!(!s.insert(&c(&[1, 2]), 1));
+        assert!(s.contains(&c(&[1, 2])));
+        assert!(!s.contains(&c(&[2, 1])));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn sharded_ordered_drain() {
+        let s = ShardedVisited::new(2);
+        s.insert(&c(&[3]), 2);
+        s.insert(&c(&[1]), 0);
+        s.insert(&c(&[2]), 1);
+        let v = s.into_ordered();
+        assert_eq!(v, vec![c(&[1]), c(&[2]), c(&[3])]);
+    }
+
+    #[test]
+    fn sharded_concurrent_inserts() {
+        use std::sync::Arc;
+        let s = Arc::new(ShardedVisited::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250u64 {
+                    s.insert(&ConfigVector::from(vec![t, i % 100]), (t * 250 + i) as u32);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 400, "4 threads × 100 distinct keys");
+    }
+}

@@ -1,0 +1,450 @@
+//! Computation-tree exploration — the paper's **Algorithm 1**.
+//!
+//! Starting from `C₀`, repeatedly: (II) enumerate all valid spiking
+//! vectors of each frontier configuration (Algorithm 2), (III) evaluate
+//! `C' = C + S·M` for the whole frontier **as one device batch**, and
+//! (IV) keep only configurations never seen before (`allGenCk` dedup),
+//! until a stopping criterion fires.
+//!
+//! The paper's CUDA host dispatched one kernel per configuration; we batch
+//! every `(C, S)` pair of the frontier into as few backend calls as
+//! possible — the batching the paper's §6 lists as future work ("deeper
+//! understanding … for very large systems").
+
+use std::time::{Duration, Instant};
+
+use super::applicability::{applicable_rules_into, ApplicabilityMap};
+use super::config::ConfigVector;
+use super::dedup::VisitedStore;
+use super::spiking::{SpikingEnumeration, SpikingVector};
+use super::stop::StopReason;
+use super::tree::ComputationTree;
+use crate::compute::{HostBackend, StepBackend, StepBatch};
+use crate::matrix::{build_matrix, TransitionMatrix};
+use crate::snp::SnpSystem;
+
+/// Breadth-first (the paper's level order) or depth-first expansion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchOrder {
+    /// Level-by-level, matching the paper's `allGenCk` order.
+    BreadthFirst,
+    /// Stack order; lower peak frontier memory, different visit order.
+    DepthFirst,
+}
+
+/// Exploration options (builder-style).
+#[derive(Debug, Clone)]
+pub struct ExploreOptions {
+    /// Expansion order.
+    pub order: SearchOrder,
+    /// Do not expand configurations at depth ≥ this (root = 0).
+    pub max_depth: Option<u32>,
+    /// Stop once this many distinct configurations were generated.
+    pub max_configs: Option<usize>,
+    /// Wall-clock budget.
+    pub time_budget: Option<Duration>,
+    /// Record the full computation tree (paper Fig. 4); costs memory.
+    pub record_tree: bool,
+    /// Chunk size cap for backend batches (default: backend's own max).
+    pub batch_cap: Option<usize>,
+}
+
+impl ExploreOptions {
+    /// BFS with no bounds.
+    pub fn breadth_first() -> Self {
+        ExploreOptions {
+            order: SearchOrder::BreadthFirst,
+            max_depth: None,
+            max_configs: None,
+            time_budget: None,
+            record_tree: false,
+            batch_cap: None,
+        }
+    }
+
+    /// DFS with no bounds.
+    pub fn depth_first() -> Self {
+        ExploreOptions { order: SearchOrder::DepthFirst, ..ExploreOptions::breadth_first() }
+    }
+
+    /// Limit expansion depth.
+    pub fn max_depth(mut self, d: u32) -> Self {
+        self.max_depth = Some(d);
+        self
+    }
+
+    /// Limit the number of generated configurations.
+    pub fn max_configs(mut self, n: usize) -> Self {
+        self.max_configs = Some(n);
+        self
+    }
+
+    /// Limit wall-clock time.
+    pub fn time_budget(mut self, d: Duration) -> Self {
+        self.time_budget = Some(d);
+        self
+    }
+
+    /// Record the computation tree.
+    pub fn with_tree(mut self) -> Self {
+        self.record_tree = true;
+        self
+    }
+
+    /// Cap backend batch size.
+    pub fn batch_cap(mut self, b: usize) -> Self {
+        self.batch_cap = Some(b);
+        self
+    }
+}
+
+/// Counters accumulated during a run.
+#[derive(Debug, Clone, Default)]
+pub struct ExploreStats {
+    /// Configurations expanded (applicability + enumeration done).
+    pub expanded: u64,
+    /// `(C, S)` pairs evaluated.
+    pub steps: u64,
+    /// Backend invocations.
+    pub batches: u64,
+    /// Σ Ψ over expanded configurations.
+    pub psi_total: u128,
+    /// Halting configurations encountered.
+    pub halting: u64,
+    /// Wall-clock time.
+    pub elapsed: Duration,
+}
+
+/// Result of an exploration.
+#[derive(Debug)]
+pub struct ExploreReport {
+    /// Every distinct configuration, in generation order (`allGenCk`).
+    pub visited: VisitedStore,
+    /// Why the run stopped.
+    pub stop: StopReason,
+    /// Deepest level whose configurations were generated.
+    pub depth_reached: u32,
+    /// Halting (leaf) configurations, in discovery order.
+    pub halting_configs: Vec<ConfigVector>,
+    /// The computation tree, when requested.
+    pub tree: Option<ComputationTree>,
+    /// Counters.
+    pub stats: ExploreStats,
+}
+
+impl ExploreReport {
+    /// The paper's final printout: `allGenCk = ['2-1-1', …]`.
+    pub fn render_all_gen_ck(&self) -> String {
+        self.visited.render_all_gen_ck()
+    }
+}
+
+/// Work item: a configuration awaiting expansion.
+struct Pending {
+    config: ConfigVector,
+    depth: u32,
+    node: usize, // tree node id (0 when tree off)
+}
+
+/// The explorer. Owns the matrix and a step backend.
+pub struct Explorer<'a> {
+    sys: &'a SnpSystem,
+    matrix: TransitionMatrix,
+    backend: Box<dyn StepBackend>,
+    opts: ExploreOptions,
+}
+
+impl<'a> Explorer<'a> {
+    /// Explorer over the host backend.
+    pub fn new(sys: &'a SnpSystem, opts: ExploreOptions) -> Self {
+        let matrix = build_matrix(sys);
+        let backend = Box::new(HostBackend::new(&matrix));
+        Explorer { sys, matrix, backend, opts }
+    }
+
+    /// Explorer over a custom backend (e.g. the XLA device backend).
+    pub fn with_backend(
+        sys: &'a SnpSystem,
+        opts: ExploreOptions,
+        backend: Box<dyn StepBackend>,
+    ) -> Self {
+        let matrix = build_matrix(sys);
+        Explorer { sys, matrix, backend, opts }
+    }
+
+    /// The transition matrix in use.
+    pub fn matrix(&self) -> &TransitionMatrix {
+        &self.matrix
+    }
+
+    /// Run from the system's initial configuration.
+    pub fn run(&mut self) -> ExploreReport {
+        self.run_from(ConfigVector::new(self.sys.initial_config()))
+    }
+
+    /// Run from an arbitrary start configuration.
+    pub fn run_from(&mut self, c0: ConfigVector) -> ExploreReport {
+        let start = Instant::now();
+        let n = self.sys.num_neurons();
+        let r = self.sys.num_rules();
+        let batch_cap = self
+            .opts
+            .batch_cap
+            .unwrap_or_else(|| self.backend.max_batch())
+            .clamp(1, 1 << 20);
+
+        let mut visited = VisitedStore::new();
+        let mut tree = if self.opts.record_tree { Some(ComputationTree::new()) } else { None };
+        let mut halting_configs = Vec::new();
+        let mut stats = ExploreStats::default();
+        let mut depth_reached = 0u32;
+        let mut saw_zero = false;
+
+        visited.insert(c0.clone());
+        let root_node = tree.as_mut().map(|t| t.set_root(c0.clone())).unwrap_or(0);
+        let mut queue: std::collections::VecDeque<Pending> = std::collections::VecDeque::new();
+        queue.push_back(Pending { config: c0, depth: 0, node: root_node });
+
+        // Reusable batch buffers.
+        let mut cfg_buf: Vec<i64> = Vec::new();
+        let mut spk_buf: Vec<u8> = Vec::new();
+        // (parent node, parent depth) per batch row.
+        let mut meta: Vec<(usize, u32)> = Vec::new();
+        // spiking vectors per row, recorded only when the tree is on
+        let mut spk_meta: Vec<SpikingVector> = Vec::new();
+        let record_tree = tree.is_some();
+        // reusable applicability buffer (hot path, one per run)
+        let mut map = ApplicabilityMap::default();
+
+        let mut stop = StopReason::Exhausted;
+        let mut depth_bounded = false;
+        'outer: while !queue.is_empty() {
+            if let Some(budget) = self.opts.time_budget {
+                if start.elapsed() > budget {
+                    stop = StopReason::Timeout;
+                    break 'outer;
+                }
+            }
+            if let Some(maxc) = self.opts.max_configs {
+                if visited.len() >= maxc {
+                    stop = StopReason::MaxConfigs;
+                    break 'outer;
+                }
+            }
+            // Fill one batch from the queue.
+            cfg_buf.clear();
+            spk_buf.clear();
+            meta.clear();
+            spk_meta.clear();
+            while meta.len() < batch_cap {
+                let Some(pending) = (match self.opts.order {
+                    SearchOrder::BreadthFirst => queue.pop_front(),
+                    SearchOrder::DepthFirst => queue.pop_back(),
+                }) else {
+                    break;
+                };
+                if let Some(maxd) = self.opts.max_depth {
+                    if pending.depth >= maxd {
+                        depth_bounded = true;
+                        continue;
+                    }
+                }
+                applicable_rules_into(self.sys, &pending.config, &mut map);
+                stats.expanded += 1;
+                if map.is_halting() {
+                    stats.halting += 1;
+                    saw_zero |= pending.config.is_zero();
+                    halting_configs.push(pending.config.clone());
+                    continue;
+                }
+                stats.psi_total += map.psi();
+                // NOTE: a single configuration may exceed batch_cap by
+                // itself (huge Ψ); we let the buffer grow — backends
+                // chunk internally.
+                if record_tree {
+                    for s in SpikingEnumeration::new(&map, r) {
+                        cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
+                        spk_buf.extend(s.to_bytes());
+                        meta.push((pending.node, pending.depth));
+                        spk_meta.push(s);
+                    }
+                } else {
+                    // hot path: write rows straight into the batch buffer
+                    let mut e = SpikingEnumeration::new(&map, r);
+                    while e.fill_next(&mut spk_buf) {
+                        cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
+                        meta.push((pending.node, pending.depth));
+                    }
+                }
+            }
+            if meta.is_empty() {
+                continue;
+            }
+            // Evaluate the batch.
+            let b = meta.len();
+            let batch = StepBatch { b, n, r, configs: &cfg_buf, spikes: &spk_buf };
+            let out = self
+                .backend
+                .step_batch(&batch)
+                .expect("step backend failed (shape-checked input)");
+            stats.batches += 1;
+            stats.steps += b as u64;
+            // Fold results.
+            for (row, (parent_node, parent_depth)) in meta.drain(..).enumerate() {
+                let child = ConfigVector::from_signed(&out[row * n..(row + 1) * n])
+                    .expect("semantics guarantee non-negative counts");
+                let depth = parent_depth + 1;
+                let is_new = visited.insert(child.clone());
+                if let Some(t) = tree.as_mut() {
+                    t.add_edge(parent_node, spk_meta[row].clone(), child.clone());
+                }
+                if is_new {
+                    depth_reached = depth_reached.max(depth);
+                    let node = tree
+                        .as_ref()
+                        .and_then(|t| t.node_of(&child))
+                        .unwrap_or(0);
+                    queue.push_back(Pending { config: child, depth, node });
+                }
+            }
+        }
+
+        if stop == StopReason::Exhausted && depth_bounded {
+            stop = StopReason::MaxDepth;
+        }
+        if stop == StopReason::Exhausted && saw_zero && halting_configs.iter().all(|c| c.is_zero())
+        {
+            stop = StopReason::ZeroConfig;
+        }
+        stats.elapsed = start.elapsed();
+        ExploreReport { visited, stop, depth_reached, halting_configs, tree, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(v: &[u64]) -> ConfigVector {
+        ConfigVector::from(v.to_vec())
+    }
+
+    #[test]
+    fn paper_first_level() {
+        // C0 = 2-1-1 ⇒ level 1 = {2-1-2, 1-1-2} in that order (paper §5).
+        let sys = crate::generators::paper_pi();
+        let mut e = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(1));
+        let rep = e.run();
+        assert_eq!(
+            rep.visited.in_order(),
+            &[c(&[2, 1, 1]), c(&[2, 1, 2]), c(&[1, 1, 2])],
+            "exact paper order"
+        );
+        assert_eq!(rep.stop, StopReason::MaxDepth);
+    }
+
+    #[test]
+    fn paper_depth_three_prefix() {
+        // Verified by hand from the paper's §5 log: depths 0..3.
+        let sys = crate::generators::paper_pi();
+        let mut e = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3));
+        let rep = e.run();
+        let names: Vec<String> = rep.visited.in_order().iter().map(|c| c.to_string()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "2-1-1", "2-1-2", "1-1-2", "2-1-3", "1-1-3", "2-0-2", "2-0-1", "2-1-4",
+                "1-1-4", "2-0-3", "1-1-1", "0-1-2", "0-1-1"
+            ],
+            "matches the paper's allGenCk prefix"
+        );
+    }
+
+    #[test]
+    fn dfs_explores_same_set_as_bfs() {
+        let sys = crate::generators::paper_pi();
+        let bfs = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(60)).run();
+        // DFS with a generous config budget reaches a superset/subset that,
+        // when both run to exhaustion on a finite system, must be equal.
+        // Π is infinite, so instead compare a finite system:
+        let fin = crate::generators::divisibility_checker(6, 3);
+        let a = Explorer::new(&fin, ExploreOptions::breadth_first()).run();
+        let b = Explorer::new(&fin, ExploreOptions::depth_first()).run();
+        let mut sa: Vec<String> = a.visited.in_order().iter().map(|c| c.to_string()).collect();
+        let mut sb: Vec<String> = b.visited.in_order().iter().map(|c| c.to_string()).collect();
+        sa.sort();
+        sb.sort();
+        assert_eq!(sa, sb, "order differs, set must not");
+        assert!(bfs.visited.len() >= 50);
+    }
+
+    #[test]
+    fn finite_system_exhausts() {
+        // A two-neuron one-shot system: σ1 fires once into σ2, σ2 forgets.
+        let sys = crate::snp::SystemBuilder::new("oneshot")
+            .neuron(1, vec![crate::snp::Rule::b3(1)])
+            .neuron(0, vec![crate::snp::Rule::forget(1)])
+            .synapse(0, 1)
+            .build()
+            .unwrap();
+        let mut e = Explorer::new(&sys, ExploreOptions::breadth_first().with_tree());
+        let rep = e.run();
+        // 1-0 → 0-1 → 0-0: three configs, zero-vector end.
+        assert_eq!(rep.visited.len(), 3);
+        assert_eq!(rep.stop, StopReason::ZeroConfig);
+        assert_eq!(rep.halting_configs, vec![c(&[0, 0])]);
+        let tree = rep.tree.unwrap();
+        assert_eq!(tree.num_nodes(), 3);
+        assert_eq!(tree.num_edges(), 2);
+    }
+
+    #[test]
+    fn max_configs_bound() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(10)).run();
+        assert_eq!(rep.stop, StopReason::MaxConfigs);
+        assert!(rep.visited.len() >= 10);
+    }
+
+    #[test]
+    fn tree_records_cross_edges() {
+        let sys = crate::generators::paper_pi();
+        let rep =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(2).with_tree()).run();
+        let tree = rep.tree.unwrap();
+        // From 2-1-2, firing (1)(3)(5) returns to 2-1-2 — a cross edge.
+        assert!(tree.edges().iter().any(|e| !e.discovered), "repeat edges recorded");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3)).run();
+        assert!(rep.stats.expanded >= 7);
+        assert!(rep.stats.steps >= rep.stats.expanded as u64);
+        assert!(rep.stats.batches >= 1);
+        assert!(rep.stats.psi_total >= rep.stats.steps as u128);
+        assert!(rep.stats.elapsed.as_nanos() > 0);
+    }
+
+    #[test]
+    fn small_batch_cap_equivalent() {
+        let sys = crate::generators::paper_pi();
+        let a = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(5)).run();
+        let b =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(5).batch_cap(2)).run();
+        assert_eq!(a.visited.in_order(), b.visited.in_order(), "batching must not change results");
+        assert!(b.stats.batches > a.stats.batches);
+    }
+
+    #[test]
+    fn run_from_alternate_start() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(1))
+            .run_from(c(&[1, 0, 0]));
+        // 1-0-0 is halting: only itself in the visited set.
+        assert_eq!(rep.visited.len(), 1);
+        assert_eq!(rep.halting_configs, vec![c(&[1, 0, 0])]);
+        assert_eq!(rep.stop, StopReason::Exhausted);
+    }
+}

@@ -1,0 +1,161 @@
+//! Input spike trains — the `in` neuron of Definition 1.
+//!
+//! An SN P system may designate an input neuron that receives spikes from
+//! the environment at specified steps (this is how SN P systems *accept*
+//! numbers: the input encodes a value as the distance between spikes).
+//! The paper's simulator handles only closed systems; we support open
+//! ones in the single-run simulators (random walk / direct oracle) where
+//! time is explicit.
+
+use super::config::ConfigVector;
+use crate::error::{Error, Result};
+use crate::snp::SnpSystem;
+
+/// Spikes delivered to the input neuron, indexed by step (step 1 = first
+/// transition).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct InputSchedule {
+    deliveries: Vec<u64>,
+}
+
+impl InputSchedule {
+    /// No input.
+    pub fn empty() -> Self {
+        InputSchedule::default()
+    }
+
+    /// From a per-step delivery vector: `deliveries[t-1]` spikes arrive at
+    /// step `t`.
+    pub fn from_deliveries(deliveries: Vec<u64>) -> Self {
+        InputSchedule { deliveries }
+    }
+
+    /// Encode a number `n` as the classical two-spike train: one spike at
+    /// step 1 and one at step `n + 1` (distance n).
+    pub fn encode_number(n: u64) -> Self {
+        let mut deliveries = vec![0; (n + 1) as usize];
+        deliveries[0] = 1;
+        deliveries[n as usize] = 1;
+        InputSchedule { deliveries }
+    }
+
+    /// Spikes arriving at step `t` (1-based).
+    #[inline]
+    pub fn at(&self, t: usize) -> u64 {
+        if t == 0 {
+            0
+        } else {
+            self.deliveries.get(t - 1).copied().unwrap_or(0)
+        }
+    }
+
+    /// Steps with at least one delivery.
+    pub fn spike_steps(&self) -> Vec<usize> {
+        self.deliveries
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d > 0)
+            .map(|(i, _)| i + 1)
+            .collect()
+    }
+
+    /// Last step with a delivery (0 when empty).
+    pub fn horizon(&self) -> usize {
+        self.deliveries
+            .iter()
+            .rposition(|&d| d > 0)
+            .map(|i| i + 1)
+            .unwrap_or(0)
+    }
+
+    /// Add the step-`t` delivery to `config` (requires an input neuron
+    /// when any delivery is non-zero).
+    pub fn apply(&self, sys: &SnpSystem, config: &mut Vec<i64>, t: usize) -> Result<()> {
+        let d = self.at(t);
+        if d == 0 {
+            return Ok(());
+        }
+        let Some(input) = sys.input else {
+            return Err(Error::invalid_system(
+                "input schedule given but the system has no input neuron",
+            ));
+        };
+        config[input] += d as i64;
+        Ok(())
+    }
+}
+
+/// One synchronous step with input: `C' = C + S·M + I_t`.
+pub fn step_with_input(
+    sys: &SnpSystem,
+    matrix: &crate::matrix::TransitionMatrix,
+    config: &ConfigVector,
+    spiking: &super::spiking::SpikingVector,
+    schedule: &InputSchedule,
+    t: usize,
+) -> Result<ConfigVector> {
+    let mut next = matrix.step(config.as_slice(), &spiking.to_bytes())?;
+    schedule.apply(sys, &mut next, t)?;
+    ConfigVector::from_signed(&next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snp::{Rule, SystemBuilder};
+
+    /// A relay: input neuron forwards each spike to a counter neuron.
+    fn relay() -> SnpSystem {
+        SystemBuilder::new("relay")
+            .neuron_labeled("in", 0, vec![Rule::b3(1)])
+            .neuron_labeled("count", 0, vec![])
+            .synapse(0, 1)
+            .input(0)
+            .output(1)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn encode_number_places_two_spikes() {
+        let s = InputSchedule::encode_number(4);
+        assert_eq!(s.spike_steps(), vec![1, 5]);
+        assert_eq!(s.horizon(), 5);
+        assert_eq!(s.at(1), 1);
+        assert_eq!(s.at(2), 0);
+        assert_eq!(s.at(5), 1);
+        assert_eq!(s.at(99), 0);
+    }
+
+    #[test]
+    fn apply_requires_input_neuron() {
+        let sys = crate::generators::paper_pi(); // no input neuron
+        let sched = InputSchedule::from_deliveries(vec![1]);
+        let mut cfg = vec![2i64, 1, 1];
+        assert!(sched.apply(&sys, &mut cfg, 1).is_err());
+        // zero delivery is fine even without an input neuron
+        assert!(InputSchedule::empty().apply(&sys, &mut cfg, 1).is_ok());
+    }
+
+    #[test]
+    fn relay_counts_delivered_spikes() {
+        let sys = relay();
+        let m = crate::matrix::build_matrix(&sys);
+        let sched = InputSchedule::from_deliveries(vec![1, 0, 1, 1]);
+        let mut c = ConfigVector::from(vec![0, 0]);
+        for t in 1..=8usize {
+            // the relay fires whenever it holds a spike
+            let map = crate::engine::applicable_rules(&sys, &c);
+            let s = if map.is_halting() {
+                super::super::spiking::SpikingVector::zeros(sys.num_rules())
+            } else {
+                crate::engine::SpikingEnumeration::new(&map, sys.num_rules())
+                    .next()
+                    .unwrap()
+            };
+            c = step_with_input(&sys, &m, &c, &s, &sched, t).unwrap();
+        }
+        // all 3 delivered spikes forwarded to the counter
+        assert_eq!(c.as_slice(), &[0, 3]);
+    }
+}

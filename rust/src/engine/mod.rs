@@ -1,0 +1,27 @@
+//! The simulation engine: configuration/spiking vectors, the paper's
+//! Algorithm 2 (valid spiking-vector enumeration) and Algorithm 1
+//! (computation-tree exploration with dedup and stopping criteria).
+
+pub mod analysis;
+mod applicability;
+mod config;
+mod dedup;
+mod explorer;
+pub mod input;
+mod random_walk;
+mod spiking;
+mod stop;
+pub mod trace;
+pub mod tree;
+
+pub use analysis::{analyze, AnalysisReport};
+pub use applicability::{applicable_rules, applicable_rules_into, ApplicabilityMap};
+pub use input::InputSchedule;
+pub use config::ConfigVector;
+pub use dedup::{ShardedVisited, VisitedStore};
+pub use explorer::{ExploreOptions, Explorer, ExploreReport, SearchOrder};
+pub use random_walk::{RandomWalk, WalkRecord};
+pub use spiking::{SpikingEnumeration, SpikingVector};
+pub use stop::StopReason;
+pub use trace::{generated_set, SpikeTrace};
+pub use tree::ComputationTree;

@@ -1,0 +1,199 @@
+//! Random-walk simulation: follow ONE non-deterministic branch, choosing
+//! uniformly among valid spiking vectors each step.
+//!
+//! This is how a physical SN P system actually runs (the exploration of
+//! Algorithms 1/2 is the *verifier's* view); it produces spike trains and
+//! long-horizon workloads for the benchmarks.
+
+use super::applicability::applicable_rules;
+use super::config::ConfigVector;
+use super::spiking::{SpikingEnumeration, SpikingVector};
+use super::trace::{output_fires, SpikeTrace};
+use crate::matrix::{build_matrix, TransitionMatrix};
+use crate::snp::SnpSystem;
+use crate::util::Rng;
+
+/// Result of a walk.
+#[derive(Debug, Clone)]
+pub struct WalkRecord {
+    /// Configurations visited, starting with `C₀`.
+    pub path: Vec<ConfigVector>,
+    /// Spiking vector chosen at each step (`path.len() - 1` entries).
+    pub choices: Vec<SpikingVector>,
+    /// Output-neuron spike times (1-based steps).
+    pub trace: SpikeTrace,
+    /// True if the walk ended in a halting configuration (vs. step bound).
+    pub halted: bool,
+}
+
+impl WalkRecord {
+    /// Number of steps taken.
+    pub fn steps(&self) -> usize {
+        self.choices.len()
+    }
+}
+
+/// Random-walk simulator over a fixed system.
+pub struct RandomWalk<'a> {
+    sys: &'a SnpSystem,
+    matrix: TransitionMatrix,
+    rng: Rng,
+}
+
+impl<'a> RandomWalk<'a> {
+    /// Create with a seed (deterministic given the seed).
+    pub fn new(sys: &'a SnpSystem, seed: u64) -> Self {
+        RandomWalk { sys, matrix: build_matrix(sys), rng: Rng::new(seed) }
+    }
+
+    /// Walk up to `max_steps` from the initial configuration.
+    pub fn run(&mut self, max_steps: usize) -> WalkRecord {
+        self.run_from(ConfigVector::new(self.sys.initial_config()), max_steps)
+    }
+
+    /// Walk with an input spike train (Definition 1's `in` neuron): at
+    /// each step `t`, `schedule.at(t)` spikes are delivered after the
+    /// synchronous rule application. The walk keeps ticking through
+    /// halting configurations while deliveries remain (an idle open
+    /// system still receives input).
+    pub fn run_with_input(
+        &mut self,
+        schedule: &super::input::InputSchedule,
+        max_steps: usize,
+    ) -> crate::Result<WalkRecord> {
+        let r = self.sys.num_rules();
+        let mut path = vec![ConfigVector::new(self.sys.initial_config())];
+        let mut choices = Vec::new();
+        let mut trace = SpikeTrace::default();
+        let mut halted = false;
+        for step in 1..=max_steps {
+            let current = path.last().unwrap();
+            let map = applicable_rules(self.sys, current);
+            let s = if map.is_halting() {
+                if step > schedule.horizon() {
+                    halted = true;
+                    break;
+                }
+                SpikingVector::zeros(r)
+            } else {
+                let psi = map.psi().min(u64::MAX as u128) as u64;
+                let pick = self.rng.below(psi);
+                SpikingEnumeration::new(&map, r).nth(pick as usize).expect("pick < psi")
+            };
+            if output_fires(self.sys, &s) {
+                trace.record(step as u64);
+            }
+            let next = super::input::step_with_input(
+                self.sys,
+                &self.matrix,
+                current,
+                &s,
+                schedule,
+                step,
+            )?;
+            path.push(next);
+            choices.push(s);
+        }
+        Ok(WalkRecord { path, choices, trace, halted })
+    }
+
+    /// Walk up to `max_steps` from `c0`.
+    pub fn run_from(&mut self, c0: ConfigVector, max_steps: usize) -> WalkRecord {
+        let r = self.sys.num_rules();
+        let mut path = vec![c0];
+        let mut choices = Vec::new();
+        let mut trace = SpikeTrace::default();
+        let mut halted = false;
+        for step in 1..=max_steps {
+            let current = path.last().unwrap();
+            let map = applicable_rules(self.sys, current);
+            if map.is_halting() {
+                halted = true;
+                break;
+            }
+            // Uniform choice among the Ψ valid vectors: index directly into
+            // the odometer (no materialization).
+            let psi = map.psi().min(u64::MAX as u128) as u64;
+            let pick = self.rng.below(psi);
+            let s = SpikingEnumeration::new(&map, r)
+                .nth(pick as usize)
+                .expect("pick < psi");
+            if output_fires(self.sys, &s) {
+                trace.record(step as u64);
+            }
+            let next = self
+                .matrix
+                .step(current.as_slice(), &s.to_bytes())
+                .expect("shapes fixed");
+            path.push(ConfigVector::from_signed(&next).expect("non-negative"));
+            choices.push(s);
+        }
+        WalkRecord { path, choices, trace, halted }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Note: although Π as a generator runs forever on SOME branch, a
+        // random path may well fall into the dead configuration 1-0-0
+        // (visible in the paper's Fig. 4) — so we only assert determinism.
+        let sys = crate::generators::paper_pi();
+        let a = RandomWalk::new(&sys, 7).run(50);
+        let b = RandomWalk::new(&sys, 7).run(50);
+        assert_eq!(a.path, b.path);
+        assert_eq!(a.choices.len() + 1, a.path.len());
+        if a.halted {
+            assert!(a.choices.len() < 50);
+        } else {
+            assert_eq!(a.choices.len(), 50);
+        }
+    }
+
+    #[test]
+    fn walk_respects_transition_relation() {
+        // every consecutive pair must be reproducible via the matrix step
+        let sys = crate::generators::paper_pi();
+        let w = RandomWalk::new(&sys, 11).run(30);
+        let m = crate::matrix::build_matrix(&sys);
+        for (i, s) in w.choices.iter().enumerate() {
+            let next = m.step(w.path[i].as_slice(), &s.to_bytes()).unwrap();
+            assert_eq!(ConfigVector::from_signed(&next).unwrap(), w.path[i + 1]);
+        }
+    }
+
+    #[test]
+    fn halting_walk_stops_early() {
+        let sys = crate::generators::counter_chain(3, 2);
+        let w = RandomWalk::new(&sys, 1).run(1000);
+        assert!(w.halted);
+        assert!(w.steps() < 1000);
+        assert!(w.path.last().unwrap().is_zero());
+    }
+
+    #[test]
+    fn nat_generator_walks_produce_valid_gaps() {
+        // every completed walk of the generator yields first-gap ≥ 2
+        let sys = crate::generators::nat_generator();
+        let mut seen_gaps = std::collections::BTreeSet::new();
+        for seed in 0..40 {
+            let w = RandomWalk::new(&sys, seed).run(60);
+            if let Some(g) = w.trace.generated() {
+                assert!(g >= 2, "seed {seed}: generated {g}");
+                seen_gaps.insert(g);
+            }
+        }
+        assert!(seen_gaps.len() >= 3, "walks explore several branches: {seen_gaps:?}");
+    }
+
+    #[test]
+    fn output_spike_times_recorded() {
+        let sys = crate::generators::nat_generator();
+        let w = RandomWalk::new(&sys, 3).run(40);
+        // the generator's first spike is always at step 1
+        assert_eq!(w.trace.times.first(), Some(&1));
+    }
+}

@@ -1,0 +1,280 @@
+//! Spiking vectors and their enumeration — the paper's **Algorithm 2**.
+//!
+//! A spiking vector `S_k` is a {0,1} string over the system's total rule
+//! order: `S_k[i] = 1` iff rule `i` fires this step. Validity requires
+//! **at most one** fired rule per neuron, and **exactly one** in each
+//! neuron with ≥1 applicable rule (non-determinism is the choice among
+//! them; a neuron may not stay silent when it can fire).
+//!
+//! The paper materializes all valid vectors via string concatenation
+//! (`tmp2`/`tmp3` lists); we expose an **odometer iterator** over the
+//! cartesian product instead — identical enumeration order (first neuron's
+//! choice varies slowest, matching the paper's pair-and-distribute order),
+//! but O(R) memory regardless of Ψ.
+
+use std::fmt;
+
+use super::applicability::ApplicabilityMap;
+use crate::util::BitVec;
+
+/// A valid spiking vector (packed bits over rule ids).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct SpikingVector(BitVec);
+
+impl SpikingVector {
+    /// From a packed bit vector.
+    pub fn new(bits: BitVec) -> Self {
+        SpikingVector(bits)
+    }
+
+    /// All-zero vector of `r` rules (the padding vector: `C' = C`).
+    pub fn zeros(r: usize) -> Self {
+        SpikingVector(BitVec::zeros(r))
+    }
+
+    /// From 0/1 bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        SpikingVector(BitVec::from(bytes))
+    }
+
+    /// Number of rules (vector length).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// True if no rule fires.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.0.count_ones() == 0
+    }
+
+    /// Is rule `i` fired?
+    #[inline]
+    pub fn fires(&self, i: usize) -> bool {
+        self.0.get(i)
+    }
+
+    /// Fired rule ids in increasing order.
+    pub fn fired_rules(&self) -> impl Iterator<Item = usize> + '_ {
+        self.0.ones()
+    }
+
+    /// Expand to 0/1 bytes (device marshalling).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.0.iter().map(|b| b as u8).collect()
+    }
+
+    /// The paper's `{1,0}` string rendering, e.g. `10110`.
+    pub fn to_binary_string(&self) -> String {
+        self.0.to_binary_string()
+    }
+}
+
+impl fmt::Debug for SpikingVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "S<{}>", self.to_binary_string())
+    }
+}
+
+impl fmt::Display for SpikingVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_binary_string())
+    }
+}
+
+/// Enumeration of all valid spiking vectors for one configuration —
+/// Algorithm 2 as a lazy iterator.
+pub struct SpikingEnumeration<'a> {
+    map: &'a ApplicabilityMap,
+    num_rules: usize,
+    /// Neurons with ≥1 applicable rule (only these have a choice digit).
+    active: Vec<usize>,
+    /// Odometer over `active` (index into each neuron's applicable list).
+    odometer: Vec<usize>,
+    done: bool,
+}
+
+impl<'a> SpikingEnumeration<'a> {
+    /// Start enumerating for `map` over `num_rules` total rules.
+    ///
+    /// If the configuration is halting (no neuron can fire) the iterator is
+    /// empty: a halted system performs no step (it does **not** yield the
+    /// zero vector).
+    pub fn new(map: &'a ApplicabilityMap, num_rules: usize) -> Self {
+        let active: Vec<usize> =
+            (0..map.num_neurons()).filter(|&j| !map.neuron(j).is_empty()).collect();
+        let done = active.is_empty();
+        let odometer = vec![0; active.len()];
+        SpikingEnumeration { map, num_rules, active, odometer, done }
+    }
+
+    /// The number of vectors this enumeration yields (the paper's Ψ), or 0
+    /// when halting.
+    pub fn psi(&self) -> u128 {
+        if self.active.is_empty() {
+            0
+        } else {
+            self.map.psi()
+        }
+    }
+
+    /// Allocation-free variant of `next`: append the next vector's 0/1
+    /// bytes (length = num_rules) to `out`; returns `false` when the
+    /// enumeration is exhausted (nothing appended). This is the engine's
+    /// hot path — one `memset`-style extend instead of a `BitVec` +
+    /// `Vec<u8>` allocation per vector.
+    pub fn fill_next(&mut self, out: &mut Vec<u8>) -> bool {
+        if self.done {
+            return false;
+        }
+        let start = out.len();
+        out.resize(start + self.num_rules, 0);
+        let row = &mut out[start..];
+        for (slot, &j) in self.active.iter().enumerate() {
+            let rule = self.map.neuron(j)[self.odometer[slot]];
+            row[rule as usize] = 1;
+        }
+        self.advance();
+        true
+    }
+
+    #[inline]
+    fn advance(&mut self) {
+        // last active neuron varies fastest (the paper's pair-and-
+        // distribute order — first neuron slowest)
+        let mut slot = self.active.len();
+        loop {
+            if slot == 0 {
+                self.done = true;
+                break;
+            }
+            slot -= 1;
+            self.odometer[slot] += 1;
+            if self.odometer[slot] < self.map.neuron(self.active[slot]).len() {
+                break;
+            }
+            self.odometer[slot] = 0;
+        }
+    }
+}
+
+impl<'a> Iterator for SpikingEnumeration<'a> {
+    type Item = SpikingVector;
+
+    fn next(&mut self) -> Option<SpikingVector> {
+        if self.done {
+            return None;
+        }
+        // Emit current odometer state.
+        let mut bits = BitVec::zeros(self.num_rules);
+        for (slot, &j) in self.active.iter().enumerate() {
+            let rule = self.map.neuron(j)[self.odometer[slot]];
+            bits.set(rule as usize, true);
+        }
+        self.advance();
+        Some(SpikingVector(bits))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let psi = self.psi().min(usize::MAX as u128) as usize;
+        (0, Some(psi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{applicable_rules, ConfigVector};
+
+    fn enumerate(cfg: &[u64]) -> Vec<String> {
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(cfg.to_vec()));
+        SpikingEnumeration::new(&map, sys.num_rules())
+            .map(|s| s.to_binary_string())
+            .collect()
+    }
+
+    #[test]
+    fn paper_tmp3_exactly() {
+        // §4.2 worked example: C0 = [2,1,1] ⇒ tmp3 = [10110, 01110].
+        assert_eq!(enumerate(&[2, 1, 1]), vec!["10110", "01110"]);
+    }
+
+    #[test]
+    fn four_way_branching_at_2_1_2() {
+        // σ1 ∈ {(1),(2)}, σ2 = (3), σ3 ∈ {(4),(5)} ⇒ Ψ = 4, first neuron
+        // varies slowest.
+        assert_eq!(
+            enumerate(&[2, 1, 2]),
+            vec!["10110", "10101", "01110", "01101"]
+        );
+    }
+
+    #[test]
+    fn halting_yields_nothing() {
+        assert_eq!(enumerate(&[1, 0, 0]), Vec::<String>::new());
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(vec![1, 0, 0]));
+        let e = SpikingEnumeration::new(&map, sys.num_rules());
+        assert_eq!(e.psi(), 0);
+    }
+
+    #[test]
+    fn psi_matches_count() {
+        let sys = crate::generators::paper_pi();
+        for cfg in [[2u64, 1, 1], [2, 1, 2], [1, 1, 2], [2, 0, 2]] {
+            let map = applicable_rules(&sys, &ConfigVector::from(cfg.to_vec()));
+            let e = SpikingEnumeration::new(&map, sys.num_rules());
+            let psi = e.psi();
+            assert_eq!(e.count() as u128, psi, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn one_rule_per_neuron_invariant() {
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(vec![2, 1, 2]));
+        for s in SpikingEnumeration::new(&map, sys.num_rules()) {
+            for j in 0..sys.num_neurons() {
+                let fired: Vec<usize> =
+                    s.fired_rules().filter(|&r| sys.rules_of(j).contains(&r)).collect();
+                assert!(fired.len() <= 1, "neuron {j} fired {fired:?}");
+                if !map.neuron(j).is_empty() {
+                    assert_eq!(fired.len(), 1, "active neuron {j} must fire");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_next_matches_iterator() {
+        let sys = crate::generators::paper_pi();
+        for cfg in [[2u64, 1, 1], [2, 1, 2], [1, 1, 2], [1, 0, 0]] {
+            let map = applicable_rules(&sys, &ConfigVector::from(cfg.to_vec()));
+            let via_iter: Vec<Vec<u8>> = SpikingEnumeration::new(&map, sys.num_rules())
+                .map(|s| s.to_bytes())
+                .collect();
+            let mut buf = Vec::new();
+            let mut e = SpikingEnumeration::new(&map, sys.num_rules());
+            let mut count = 0;
+            while e.fill_next(&mut buf) {
+                count += 1;
+            }
+            assert_eq!(count, via_iter.len(), "cfg {cfg:?}");
+            let flat: Vec<u8> = via_iter.into_iter().flatten().collect();
+            assert_eq!(buf, flat, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn vector_accessors() {
+        let s = SpikingVector::from_bytes(&[1, 0, 1, 1, 0]);
+        assert_eq!(s.len(), 5);
+        assert!(s.fires(0) && !s.fires(1));
+        assert_eq!(s.fired_rules().collect::<Vec<_>>(), vec![0, 2, 3]);
+        assert_eq!(s.to_bytes(), vec![1, 0, 1, 1, 0]);
+        assert_eq!(format!("{s}"), "10110");
+        assert!(SpikingVector::zeros(3).is_empty());
+    }
+}

@@ -1,0 +1,71 @@
+//! Stopping criteria (paper §4.1).
+//!
+//! The paper stops when (1) a zero configuration vector is reached, or
+//! (2) every produced `C_k` repeats an earlier one (re-expanding would
+//! only loop). Production use needs resource bounds too; each gets its
+//! own reason so reports can say exactly why a run ended.
+
+use std::fmt;
+
+/// Why an exploration ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Criterion 2: the frontier drained — every successor of every
+    /// explored configuration was already visited (or halting). The
+    /// computation tree is exhausted.
+    Exhausted,
+    /// Criterion 1 (special case of Exhausted the paper calls out): the
+    /// run reached the all-zero configuration and nothing else remained.
+    ZeroConfig,
+    /// Depth bound hit (`max_depth`).
+    MaxDepth,
+    /// Node-count bound hit (`max_configs`).
+    MaxConfigs,
+    /// Wall-clock budget hit.
+    Timeout,
+}
+
+impl StopReason {
+    /// Did the run end because the state space was fully explored
+    /// (either paper criterion), rather than a resource bound?
+    pub fn is_complete(&self) -> bool {
+        matches!(self, StopReason::Exhausted | StopReason::ZeroConfig)
+    }
+}
+
+impl fmt::Display for StopReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StopReason::Exhausted => {
+                write!(f, "No more Cks to use (infinite loop/s otherwise). Stop.")
+            }
+            StopReason::ZeroConfig => write!(f, "Zero configuration vector reached. Stop."),
+            StopReason::MaxDepth => write!(f, "Depth bound reached. Stop."),
+            StopReason::MaxConfigs => write!(f, "Configuration budget reached. Stop."),
+            StopReason::Timeout => write!(f, "Time budget reached. Stop."),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_wording_for_criterion_2() {
+        // Must match the paper's printed stop line verbatim.
+        assert_eq!(
+            StopReason::Exhausted.to_string(),
+            "No more Cks to use (infinite loop/s otherwise). Stop."
+        );
+    }
+
+    #[test]
+    fn completeness_classification() {
+        assert!(StopReason::Exhausted.is_complete());
+        assert!(StopReason::ZeroConfig.is_complete());
+        assert!(!StopReason::MaxDepth.is_complete());
+        assert!(!StopReason::MaxConfigs.is_complete());
+        assert!(!StopReason::Timeout.is_complete());
+    }
+}

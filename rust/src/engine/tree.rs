@@ -1,0 +1,250 @@
+//! The computation tree (paper Figure 4).
+//!
+//! Nodes are configurations; an edge `(C, S, C')` records that firing
+//! spiking vector `S` in `C` yields `C'`. Because configurations dedup,
+//! the structure is a DAG rooted at `C₀` rendered as the paper's tree
+//! (repeat targets become cross-edges, drawn dashed in DOT).
+
+use super::config::ConfigVector;
+use super::spiking::SpikingVector;
+use crate::util::FxHashMap;
+
+/// Node handle.
+pub type NodeId = usize;
+
+/// One recorded transition.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    /// Source node.
+    pub from: NodeId,
+    /// Target node.
+    pub to: NodeId,
+    /// The spiking vector fired.
+    pub spiking: SpikingVector,
+    /// Whether `to` was first discovered through this edge (tree edge) or
+    /// already known (cross edge — the paper's "repeat" leaves).
+    pub discovered: bool,
+}
+
+/// The recorded computation DAG.
+#[derive(Debug, Default)]
+pub struct ComputationTree {
+    configs: Vec<ConfigVector>,
+    depth: Vec<u32>,
+    index: FxHashMap<ConfigVector, NodeId>,
+    edges: Vec<Edge>,
+    root: Option<NodeId>,
+}
+
+impl ComputationTree {
+    /// Empty tree.
+    pub fn new() -> Self {
+        ComputationTree::default()
+    }
+
+    /// Install the root configuration (depth 0).
+    pub fn set_root(&mut self, c: ConfigVector) -> NodeId {
+        let id = self.intern(c, 0);
+        self.root = Some(id);
+        id
+    }
+
+    /// Root node, if any.
+    pub fn root(&self) -> Option<NodeId> {
+        self.root
+    }
+
+    fn intern(&mut self, c: ConfigVector, depth: u32) -> NodeId {
+        if let Some(&id) = self.index.get(&c) {
+            return id;
+        }
+        let id = self.configs.len();
+        self.configs.push(c.clone());
+        self.depth.push(depth);
+        self.index.insert(c, id);
+        id
+    }
+
+    /// Record a transition; `from` must already exist.
+    pub fn add_edge(&mut self, from: NodeId, spiking: SpikingVector, to_config: ConfigVector) {
+        let new = !self.index.contains_key(&to_config);
+        let to = self.intern(to_config, self.depth[from] + 1);
+        self.edges.push(Edge { from, to, spiking, discovered: new });
+    }
+
+    /// Node count.
+    pub fn num_nodes(&self) -> usize {
+        self.configs.len()
+    }
+
+    /// Edge count (including cross edges).
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Configuration of a node.
+    pub fn config(&self, id: NodeId) -> &ConfigVector {
+        &self.configs[id]
+    }
+
+    /// BFS depth at which a node was discovered.
+    pub fn depth_of(&self, id: NodeId) -> u32 {
+        self.depth[id]
+    }
+
+    /// Look up a node by configuration.
+    pub fn node_of(&self, c: &ConfigVector) -> Option<NodeId> {
+        self.index.get(c).copied()
+    }
+
+    /// All edges.
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Outgoing edges of a node.
+    pub fn children(&self, id: NodeId) -> impl Iterator<Item = &Edge> {
+        self.edges.iter().filter(move |e| e.from == id)
+    }
+
+    /// Nodes per depth level: `histogram()[d]` = number of nodes first
+    /// discovered at depth `d`.
+    pub fn histogram(&self) -> Vec<usize> {
+        let maxd = self.depth.iter().copied().max().unwrap_or(0) as usize;
+        let mut h = vec![0usize; maxd + 1];
+        for &d in &self.depth {
+            h[d as usize] += 1;
+        }
+        h
+    }
+
+    /// Leaves: nodes with no outgoing edges (halting configs or frontier).
+    pub fn leaves(&self) -> Vec<NodeId> {
+        let mut has_out = vec![false; self.configs.len()];
+        for e in &self.edges {
+            has_out[e.from] = true;
+        }
+        (0..self.configs.len()).filter(|&i| !has_out[i]).collect()
+    }
+
+    /// Graphviz DOT export in the paper's Figure-4 style: nodes labelled
+    /// with the dashed configuration, discovery edges solid (labelled with
+    /// the spiking vector), repeat/cross edges dashed.
+    pub fn to_dot(&self, title: &str) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("digraph \"{title}\" {{\n"));
+        s.push_str("  rankdir=TB;\n  node [shape=box, fontname=\"monospace\"];\n");
+        for (id, c) in self.configs.iter().enumerate() {
+            let shape = if Some(id) == self.root { ", style=bold" } else { "" };
+            s.push_str(&format!("  n{id} [label=\"{c}\"{shape}];\n"));
+        }
+        for e in &self.edges {
+            let style = if e.discovered { "solid" } else { "dashed" };
+            s.push_str(&format!(
+                "  n{} -> n{} [label=\"{}\", style={style}];\n",
+                e.from,
+                e.to,
+                e.spiking.to_binary_string()
+            ));
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// JSON export (nodes, depths, edges) via the local JSON emitter.
+    pub fn to_json(&self) -> crate::util::JsonValue {
+        use crate::util::JsonValue as J;
+        J::obj([
+            (
+                "nodes",
+                J::arr(self.configs.iter().enumerate().map(|(i, c)| {
+                    J::obj([
+                        ("id", J::num(i as f64)),
+                        ("config", J::str(c.to_string())),
+                        ("depth", J::num(self.depth[i] as f64)),
+                    ])
+                })),
+            ),
+            (
+                "edges",
+                J::arr(self.edges.iter().map(|e| {
+                    J::obj([
+                        ("from", J::num(e.from as f64)),
+                        ("to", J::num(e.to as f64)),
+                        ("spiking", J::str(e.spiking.to_binary_string())),
+                        ("discovered", J::Bool(e.discovered)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(v: &[u64]) -> ConfigVector {
+        ConfigVector::from(v.to_vec())
+    }
+    fn s(bits: &[u8]) -> SpikingVector {
+        SpikingVector::from_bytes(bits)
+    }
+
+    fn small_tree() -> ComputationTree {
+        let mut t = ComputationTree::new();
+        let root = t.set_root(c(&[2, 1, 1]));
+        t.add_edge(root, s(&[1, 0, 1, 1, 0]), c(&[2, 1, 2]));
+        t.add_edge(root, s(&[0, 1, 1, 1, 0]), c(&[1, 1, 2]));
+        let n212 = t.node_of(&c(&[2, 1, 2])).unwrap();
+        t.add_edge(n212, s(&[1, 0, 1, 0, 1]), c(&[2, 1, 2])); // self cross edge
+        t
+    }
+
+    #[test]
+    fn nodes_edges_depths() {
+        let t = small_tree();
+        assert_eq!(t.num_nodes(), 3);
+        assert_eq!(t.num_edges(), 3);
+        assert_eq!(t.depth_of(t.root().unwrap()), 0);
+        let n = t.node_of(&c(&[1, 1, 2])).unwrap();
+        assert_eq!(t.depth_of(n), 1);
+        assert_eq!(t.histogram(), vec![1, 2]);
+    }
+
+    #[test]
+    fn discovery_vs_cross_edges() {
+        let t = small_tree();
+        let disc: Vec<bool> = t.edges().iter().map(|e| e.discovered).collect();
+        assert_eq!(disc, vec![true, true, false]);
+    }
+
+    #[test]
+    fn children_and_leaves() {
+        let t = small_tree();
+        let root = t.root().unwrap();
+        assert_eq!(t.children(root).count(), 2);
+        let leaves = t.leaves();
+        // 1-1-2 has no out edges
+        assert_eq!(leaves, vec![t.node_of(&c(&[1, 1, 2])).unwrap()]);
+    }
+
+    #[test]
+    fn dot_output_shape() {
+        let t = small_tree();
+        let dot = t.to_dot("pi");
+        assert!(dot.contains("digraph \"pi\""));
+        assert!(dot.contains("label=\"2-1-1\""));
+        assert!(dot.contains("style=dashed"), "cross edge rendered dashed");
+        assert!(dot.contains("label=\"10110\""));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let t = small_tree();
+        let j = t.to_json();
+        let parsed = crate::util::JsonValue::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("nodes").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(parsed.get("edges").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

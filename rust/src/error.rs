@@ -1,0 +1,119 @@
+//! Crate-wide error type.
+//!
+//! A single [`Error`] enum keeps the public API surface small; modules
+//! construct variants through the helper constructors so error text stays
+//! consistent.
+
+use std::fmt;
+
+/// Convenience alias used throughout the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors surfaced by the `snapse` public API.
+#[derive(Debug)]
+pub enum Error {
+    /// A system definition failed validation (bad synapse, empty neuron…).
+    InvalidSystem(String),
+    /// A unary regular expression failed to parse.
+    RegexParse { expr: String, pos: usize, msg: String },
+    /// A text input (paper format, `.snpl`, JSON) failed to parse.
+    Parse { what: String, line: usize, msg: String },
+    /// Dimension mismatch between vectors/matrices.
+    Shape { expected: String, got: String },
+    /// The XLA runtime reported an error (compile, transfer, execute).
+    Runtime(String),
+    /// An artifact (HLO file, manifest) was missing or malformed.
+    Artifact(String),
+    /// I/O error with file context.
+    Io { path: String, source: std::io::Error },
+    /// The coordinator hit an internal invariant violation.
+    Coordinator(String),
+    /// Feature requested at runtime that this build does not support.
+    Unsupported(String),
+}
+
+impl Error {
+    /// Invalid SN P system definition.
+    pub fn invalid_system(msg: impl Into<String>) -> Self {
+        Error::InvalidSystem(msg.into())
+    }
+    /// Parse failure at a known line.
+    pub fn parse(what: impl Into<String>, line: usize, msg: impl Into<String>) -> Self {
+        Error::Parse { what: what.into(), line, msg: msg.into() }
+    }
+    /// Shape mismatch.
+    pub fn shape(expected: impl Into<String>, got: impl Into<String>) -> Self {
+        Error::Shape { expected: expected.into(), got: got.into() }
+    }
+    /// Runtime (XLA/PJRT) failure.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    /// Artifact lookup/load failure.
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    /// I/O failure tagged with the offending path.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidSystem(m) => write!(f, "invalid SN P system: {m}"),
+            Error::RegexParse { expr, pos, msg } => {
+                write!(f, "unary regex parse error in `{expr}` at {pos}: {msg}")
+            }
+            Error::Parse { what, line, msg } => {
+                write!(f, "parse error in {what} (line {line}): {msg}")
+            }
+            Error::Shape { expected, got } => {
+                write!(f, "shape mismatch: expected {expected}, got {got}")
+            }
+            Error::Runtime(m) => write!(f, "xla runtime: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Unsupported(m) => write!(f, "unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Runtime(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants_are_prefixed() {
+        let e = Error::invalid_system("neuron 3 has no rules");
+        assert!(e.to_string().contains("invalid SN P system"));
+        let e = Error::shape("(2,3)", "(3,2)");
+        assert!(e.to_string().contains("expected (2,3)"));
+        let e = Error::parse("paper r file", 4, "dangling '$'");
+        assert!(e.to_string().contains("line 4"));
+    }
+
+    #[test]
+    fn io_error_carries_source() {
+        use std::error::Error as _;
+        let e = Error::io("/nope", std::io::Error::new(std::io::ErrorKind::NotFound, "x"));
+        assert!(e.source().is_some());
+    }
+}

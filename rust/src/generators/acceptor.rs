@@ -1,0 +1,111 @@
+//! Number acceptors — open systems driven by an input spike train.
+//!
+//! A number `n` is presented classically as two input spikes `n` steps
+//! apart ([`crate::engine::InputSchedule::encode_number`]). The acceptor
+//! decides a predicate on `n` by the configuration it halts in.
+
+use crate::snp::{Rule, SnpSystem, SystemBuilder};
+
+/// Accepts numbers divisible by `d` (d ≥ 2): halts with an **empty**
+/// counter neuron iff `d | n`.
+///
+/// Classical input module (Ionescu–Păun–Yokomori): the input neuron
+/// relays each environment spike to a cross-coupled pair `c1 ↔ c2`, each
+/// with rules `a → a` and `a² → λ`. The first spike starts them
+/// oscillating (each refuels the other every step, `c1` also ticking the
+/// counter); the second spike makes both hold 2 simultaneously, so both
+/// forget and the clock dies — after exactly `n` ticks.
+///
+/// The counter holds a `(a^d)+`-guarded drain: while ticking it cycles
+/// its count within `1..=d` (it fires exactly when the count reaches a
+/// multiple of `d`), so once the clock dies it holds `n mod d` mapped
+/// into `1..=d`, draining to 0 precisely when `d | n`.
+pub fn divisibility_acceptor(d: u64) -> SnpSystem {
+    assert!(d >= 2);
+    SystemBuilder::new(format!("accept_div_{d}"))
+        .neuron_labeled("in", 0, vec![Rule::exact(1, 1)])
+        .neuron_labeled("c1", 0, vec![Rule::exact(1, 1), Rule::forget(2)])
+        .neuron_labeled("c2", 0, vec![Rule::exact(1, 1), Rule::forget(2)])
+        .neuron_labeled(
+            "counter",
+            0,
+            vec![Rule::spiking(&format!("(a^{d})+"), d, 1).expect("valid regex")],
+        )
+        .neuron_labeled("sink", 0, vec![])
+        .synapse(0, 1) // in → c1
+        .synapse(0, 2) // in → c2
+        .synapse(1, 2) // c1 → c2
+        .synapse(2, 1) // c2 → c1
+        .synapse(1, 3) // c1 → counter (one tick per oscillation step)
+        .synapse(3, 4) // counter → sink
+        .input(0)
+        .output(4)
+        .build()
+        .expect("well-formed")
+}
+
+/// Index of the counter neuron in [`divisibility_acceptor`].
+pub const ACCEPTOR_COUNTER: usize = 3;
+
+/// Run the acceptor on `n` and return the verdict (halting configuration
+/// has an empty counter). The system is deterministic, so one walk
+/// decides.
+pub fn accepts(sys: &SnpSystem, n: u64) -> crate::Result<bool> {
+    let schedule = crate::engine::InputSchedule::encode_number(n);
+    let mut walk = crate::engine::RandomWalk::new(sys, 0);
+    let record = walk.run_with_input(&schedule, 3 * n as usize + 24)?;
+    let last = record.path.last().unwrap();
+    Ok(record.halted && last.get(ACCEPTOR_COUNTER) == 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_multiples() {
+        let sys = divisibility_acceptor(3);
+        for n in [3u64, 6, 9, 12] {
+            assert!(accepts(&sys, n).unwrap(), "should accept {n}");
+        }
+    }
+
+    #[test]
+    fn rejects_non_multiples() {
+        let sys = divisibility_acceptor(3);
+        for n in [1u64, 2, 4, 5, 7, 8, 10] {
+            assert!(!accepts(&sys, n).unwrap(), "should reject {n}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_small_grid() {
+        for d in [2u64, 4, 5] {
+            let sys = divisibility_acceptor(d);
+            for n in 1..=15 {
+                assert_eq!(accepts(&sys, n).unwrap(), n % d == 0, "d={d} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_holds_n_mod_d_on_reject() {
+        let sys = divisibility_acceptor(4);
+        let schedule = crate::engine::InputSchedule::encode_number(10);
+        let rec = crate::engine::RandomWalk::new(&sys, 0)
+            .run_with_input(&schedule, 64)
+            .unwrap();
+        assert!(rec.halted);
+        assert_eq!(rec.path.last().unwrap().get(ACCEPTOR_COUNTER), 2, "10 mod 4");
+    }
+
+    #[test]
+    fn acceptor_is_deterministic() {
+        // all guards are disjoint per neuron → every walk identical
+        let sys = divisibility_acceptor(2);
+        let sched = crate::engine::InputSchedule::encode_number(4);
+        let a = crate::engine::RandomWalk::new(&sys, 1).run_with_input(&sched, 60).unwrap();
+        let b = crate::engine::RandomWalk::new(&sys, 99).run_with_input(&sched, 60).unwrap();
+        assert_eq!(a.path, b.path);
+    }
+}

@@ -1,0 +1,67 @@
+//! Counter chains: deterministic pipelines with long, thin computation
+//! trees — the deep-tree workload the paper's §4.1 warns about.
+
+use crate::snp::{Rule, SnpSystem, SystemBuilder};
+
+/// A chain of `len` neurons; neuron 0 starts with `charge` spikes and
+/// drains one per step into the chain, producing a computation path of
+/// length ≈ `charge + len` with branching factor 1.
+///
+/// Useful as the antithesis of wide trees: measures per-step overhead of
+/// the engine (applicability, enumeration, dedup) without branching.
+pub fn counter_chain(len: usize, charge: u64) -> SnpSystem {
+    assert!(len >= 2, "chain needs at least 2 neurons");
+    let mut b = SystemBuilder::new(format!("counter_chain_{len}_{charge}"));
+    // head: holds `charge`, emits one spike per step while k ≥ 1
+    b = b.neuron_labeled("head", charge, vec![Rule::threshold_guarded(1, 1, 1)]);
+    for i in 1..len {
+        let label = format!("c{i}");
+        // relay: fire exactly one spike when holding ≥ 1
+        b = b.neuron_labeled(label, 0, vec![Rule::b3(1)]);
+    }
+    let edges: Vec<(usize, usize)> = (0..len - 1).map(|i| (i, i + 1)).collect();
+    b.synapses(&edges).output(len - 1).build().expect("well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExploreOptions, Explorer};
+
+    #[test]
+    fn deterministic_single_path() {
+        let s = counter_chain(4, 3);
+        let rep = Explorer::new(&s, ExploreOptions::breadth_first().with_tree()).run();
+        assert!(rep.stop.is_complete());
+        // Every expanded config has Ψ = 1 (deterministic).
+        assert_eq!(rep.stats.psi_total, rep.stats.expanded as u128 - rep.stats.halting as u128);
+        let tree = rep.tree.unwrap();
+        // branching factor 1: edges = nodes - 1 + cross edges(0)
+        assert_eq!(tree.num_edges(), tree.num_nodes() - 1);
+    }
+
+    #[test]
+    fn drains_to_zero() {
+        let s = counter_chain(3, 2);
+        let rep = Explorer::new(&s, ExploreOptions::breadth_first()).run();
+        assert!(rep.halting_configs.iter().all(|c| c.is_zero()));
+        assert_eq!(rep.stop, crate::engine::StopReason::ZeroConfig);
+    }
+
+    #[test]
+    fn depth_scales_with_charge() {
+        let shallow = Explorer::new(&counter_chain(3, 2), ExploreOptions::breadth_first())
+            .run()
+            .depth_reached;
+        let deep = Explorer::new(&counter_chain(3, 8), ExploreOptions::breadth_first())
+            .run()
+            .depth_reached;
+        assert!(deep > shallow);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn rejects_tiny_chain() {
+        counter_chain(1, 1);
+    }
+}

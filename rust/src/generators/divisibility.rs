@@ -1,0 +1,82 @@
+//! Divisibility checker: decides `d | n` — a finite, verifiable decision
+//! workload with a known answer, used for end-to-end correctness tests.
+
+use crate::snp::{Rule, SnpSystem, SystemBuilder};
+
+/// Build a system that, started with `n` spikes in its work neuron,
+/// halts with exactly one spike in the output neuron iff `d` divides `n`
+/// (for `n ≥ 1`, `d ≥ 2`).
+///
+/// Construction: the work neuron consumes `d` spikes per step via an
+/// exact-multiples regex guard `(a^d)+` (fires only while the count is a
+/// positive multiple of `d`), sending one spike per consumed block to a
+/// tally neuron. If the count ever stops being a multiple (i.e. `d ∤ n`),
+/// the work neuron jams and the verdict neuron never fires.
+pub fn divisibility_checker(n: u64, d: u64) -> SnpSystem {
+    assert!(d >= 2, "divisor must be ≥ 2");
+    let guard = format!("(a^{d})+");
+    SystemBuilder::new(format!("div_{n}_by_{d}"))
+        .neuron_labeled(
+            "work",
+            n,
+            vec![Rule::spiking(&guard, d, 1).expect("valid regex")],
+        )
+        // tally accumulates n/d spikes, then the system stalls; verdict is
+        // "work neuron drained to zero".
+        .neuron_labeled("tally", 0, vec![])
+        .synapse(0, 1)
+        .output(1)
+        .build()
+        .expect("well-formed")
+}
+
+/// Did the run decide "divisible"? True iff some halting configuration has
+/// the work neuron empty.
+pub fn divisible_verdict(report: &crate::engine::ExploreReport) -> bool {
+    report.halting_configs.iter().any(|c| c.get(0) == 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExploreOptions, Explorer};
+
+    fn decide(n: u64, d: u64) -> bool {
+        let sys = divisibility_checker(n, d);
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+        assert!(rep.stop.is_complete());
+        divisible_verdict(&rep)
+    }
+
+    #[test]
+    fn divisible_cases() {
+        assert!(decide(9, 3));
+        assert!(decide(12, 4));
+        assert!(decide(10, 2));
+        assert!(decide(35, 7));
+    }
+
+    #[test]
+    fn non_divisible_cases() {
+        assert!(!decide(10, 3));
+        assert!(!decide(7, 2));
+        assert!(!decide(11, 5));
+    }
+
+    #[test]
+    fn tally_counts_quotient() {
+        let sys = divisibility_checker(12, 3);
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+        // final config: work drained, tally = 12/3
+        assert!(rep.halting_configs.iter().any(|c| c.as_slice() == [0, 4]));
+    }
+
+    #[test]
+    fn exhaustive_small_grid() {
+        for n in 1..=16 {
+            for d in 2..=5 {
+                assert_eq!(decide(n, d), n % d == 0, "n={n} d={d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! A library of SN P systems: the paper's Π plus classic constructions
+//! used as workloads for tests and benchmarks.
+
+mod acceptor;
+mod bitadder;
+mod counter;
+mod divisibility;
+mod even_gen;
+mod nat_gen;
+mod paper_pi;
+mod random_sys;
+mod ring;
+mod sorter;
+
+pub use acceptor::{accepts, divisibility_acceptor, ACCEPTOR_COUNTER};
+pub use bitadder::{adder_input, adder_output, bit_adder};
+pub use counter::counter_chain;
+pub use divisibility::{divisibility_checker, divisible_verdict};
+pub use even_gen::even_generator;
+pub use nat_gen::nat_generator;
+pub use paper_pi::paper_pi;
+pub use random_sys::{random_system, RandomSystemParams};
+pub use ring::{ring, ring_with_branching, wide_ring};
+pub use sorter::{sorted_output, sorter};
+
+#[cfg(test)]
+mod tests {
+    use crate::snp::validate;
+
+    #[test]
+    fn all_shipped_generators_validate() {
+        let systems = vec![
+            super::paper_pi(),
+            super::nat_generator(),
+            super::even_generator(),
+            super::divisibility_checker(9, 3),
+            super::counter_chain(5, 3),
+            super::ring(8, 2),
+            super::ring_with_branching(6, 2, 2),
+            super::wide_ring(8, 3, 2),
+            super::bit_adder(4),
+            super::sorter(&[3, 1, 2]),
+            super::divisibility_acceptor(3),
+            super::random_system(&super::RandomSystemParams::default(), 7),
+        ];
+        for s in systems {
+            validate(&s).unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! The classical ℕ∖{1} generator (Ionescu–Păun–Yokomori), the same
+//! computation as the paper's Π but in its textbook presentation.
+
+use crate::snp::{Rule, SnpSystem, SystemBuilder};
+
+/// Textbook natural-number generator: like [`super::paper_pi`] but with
+/// the output neuron's second rule being a *forgetting* rule, the form in
+/// the original SN P systems paper ([3] in the paper's references). Under
+/// exact-guard semantics the system emits its first spike at step 1 and a
+/// second spike after a non-deterministic delay n ≥ 2, generating n.
+pub fn nat_generator() -> SnpSystem {
+    SystemBuilder::new("nat_gen")
+        .neuron_labeled("σ1", 2, vec![Rule::threshold_guarded(2, 1, 1), Rule::b3(2)])
+        .neuron_labeled("σ2", 1, vec![Rule::b3(1)])
+        .neuron_labeled("σ3", 1, vec![Rule::exact(1, 1), Rule::forget(2)])
+        .synapses(&[(0, 1), (0, 2), (1, 0), (1, 2)])
+        .output(2)
+        .build()
+        .expect("well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snp::RuleKind;
+
+    #[test]
+    fn output_neuron_has_forgetting_rule() {
+        let s = nat_generator();
+        let rules: Vec<_> = s.rules().filter(|(_, j, _)| *j == 2).collect();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[1].2.kind(), RuleKind::Forgetting);
+    }
+
+    #[test]
+    fn differs_from_paper_pi_only_in_output_neuron() {
+        let a = super::super::paper_pi();
+        let b = nat_generator();
+        assert_eq!(a.synapses, b.synapses);
+        assert_eq!(a.initial_config(), b.initial_config());
+        assert_ne!(a.neurons[2].rules, b.neurons[2].rules);
+    }
+}

@@ -1,0 +1,51 @@
+//! The paper's Figure-1 system Π, which generates ℕ∖{1}.
+
+use crate::snp::{Rule, SnpSystem, SystemBuilder};
+
+/// Π from Figure 1 of the paper:
+///
+/// ```text
+/// σ1: a², rules (1) a²/a → a   (2) a² → a
+/// σ2: a,  rule  (3) a → a
+/// σ3: a,  rules (4) a → a      (5) a² → a     [output]
+/// syn = {(1,2), (1,3), (2,1), (2,3)}
+/// ```
+///
+/// Guards follow the paper's (b-3) threshold semantics (`k ≥ c`), which is
+/// what the published §5 trace exhibits. The spiking transition matrix of
+/// this system is exactly the paper's eq. (1); see
+/// `matrix::build::tests::paper_pi_matrix_matches_eq1`.
+pub fn paper_pi() -> SnpSystem {
+    SystemBuilder::new("paper_pi")
+        .neuron_labeled("σ1", 2, vec![Rule::threshold_guarded(2, 1, 1), Rule::b3(2)])
+        .neuron_labeled("σ2", 1, vec![Rule::b3(1)])
+        .neuron_labeled("σ3", 1, vec![Rule::b3(1), Rule::b3(2)])
+        .synapses(&[(0, 1), (0, 2), (1, 0), (1, 2)])
+        .output(2)
+        .build()
+        .expect("paper system is well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_figure_1() {
+        let s = paper_pi();
+        assert_eq!(s.initial_config(), vec![2, 1, 1]);
+        assert_eq!(s.num_rules(), 5);
+        assert_eq!(s.synapses, vec![(0, 1), (0, 2), (1, 0), (1, 2)]);
+        assert_eq!(s.output, Some(2));
+        assert_eq!(s.input, None, "Figure 1 has no input neuron");
+    }
+
+    #[test]
+    fn rule_1_consumes_one_but_needs_two() {
+        let s = paper_pi();
+        let r1 = s.rule(0);
+        assert_eq!(r1.consumed, 1);
+        assert!(!r1.applicable(1));
+        assert!(r1.applicable(2));
+    }
+}

@@ -1,0 +1,114 @@
+//! Seeded random SN P systems for property tests and benchmark sweeps.
+
+use crate::snp::{Neuron, Rule, SnpSystem};
+use crate::util::Rng;
+
+/// Parameters for [`random_system`].
+#[derive(Debug, Clone)]
+pub struct RandomSystemParams {
+    /// Number of neurons.
+    pub neurons: usize,
+    /// Rules per neuron (min, max).
+    pub rules_per_neuron: (usize, usize),
+    /// Initial spikes per neuron (min, max).
+    pub initial_spikes: (u64, u64),
+    /// Max spikes consumed by a rule.
+    pub max_consumed: u64,
+    /// Max spikes produced by a rule.
+    pub max_produced: u64,
+    /// Synapse probability per ordered pair.
+    pub synapse_p: f64,
+    /// Probability a rule is forgetting (exact guard, produce 0).
+    pub forget_p: f64,
+    /// Probability a (spiking) rule uses an exact guard instead of the
+    /// paper's threshold guard.
+    pub exact_p: f64,
+}
+
+impl Default for RandomSystemParams {
+    fn default() -> Self {
+        RandomSystemParams {
+            neurons: 6,
+            rules_per_neuron: (1, 3),
+            initial_spikes: (0, 3),
+            max_consumed: 3,
+            max_produced: 2,
+            synapse_p: 0.3,
+            forget_p: 0.15,
+            exact_p: 0.25,
+        }
+    }
+}
+
+/// Generate a seeded random system. The same `(params, seed)` always
+/// yields the same system; failures in property tests report the seed.
+pub fn random_system(params: &RandomSystemParams, seed: u64) -> SnpSystem {
+    let mut rng = Rng::new(seed);
+    let m = params.neurons.max(1);
+    let mut neurons = Vec::with_capacity(m);
+    for j in 0..m {
+        let nrules = rng.range(params.rules_per_neuron.0, params.rules_per_neuron.1);
+        let mut rules = Vec::with_capacity(nrules);
+        for _ in 0..nrules {
+            let consumed = rng.range(1, params.max_consumed as usize) as u64;
+            if rng.chance(params.forget_p) {
+                rules.push(Rule::forget(consumed));
+            } else {
+                let produced = rng.range(1, params.max_produced as usize) as u64;
+                if rng.chance(params.exact_p) {
+                    rules.push(Rule::exact(consumed, produced));
+                } else {
+                    // threshold guard ≥ consumed (possibly stricter)
+                    let min = consumed + rng.range(0, 1) as u64;
+                    rules.push(Rule::threshold_guarded(min, consumed, produced));
+                }
+            }
+        }
+        let spikes =
+            rng.range(params.initial_spikes.0 as usize, params.initial_spikes.1 as usize) as u64;
+        neurons.push(Neuron::labeled(format!("n{j}"), spikes, rules));
+    }
+    let mut synapses = Vec::new();
+    for f in 0..m {
+        for t in 0..m {
+            if f != t && rng.chance(params.synapse_p) {
+                synapses.push((f, t));
+            }
+        }
+    }
+    // ensure weak connectivity so spikes can move: add a ring fallback
+    if synapses.is_empty() && m >= 2 {
+        synapses.extend((0..m).map(|i| (i, (i + 1) % m)));
+    }
+    SnpSystem::new(format!("random_{seed}"), neurons, synapses, None, Some(m - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = RandomSystemParams::default();
+        let a = random_system(&p, 42);
+        let b = random_system(&p, 42);
+        assert_eq!(a, b);
+        let c = random_system(&p, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn random_systems_validate() {
+        let p = RandomSystemParams::default();
+        for seed in 0..100 {
+            let s = random_system(&p, seed);
+            crate::snp::validate(&s).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn respects_neuron_count() {
+        let p = RandomSystemParams { neurons: 12, ..Default::default() };
+        assert_eq!(random_system(&p, 1).num_neurons(), 12);
+    }
+}

@@ -1,0 +1,113 @@
+//! Ring topologies: scalable workloads with tunable width used by the
+//! scaling benchmarks (E7).
+
+use crate::snp::{Rule, SnpSystem, SystemBuilder};
+
+/// A directed ring of `m` neurons, each holding `charge` spikes and one
+/// deterministic rule `a^{≥1}/a → a`. Spikes circulate forever; the state
+/// space is finite (total spikes conserved), giving a medium-size
+/// reachability problem that scales smoothly with `m` and `charge`.
+pub fn ring(m: usize, charge: u64) -> SnpSystem {
+    assert!(m >= 2, "ring needs at least 2 neurons");
+    let mut b = SystemBuilder::new(format!("ring_{m}_{charge}"));
+    for i in 0..m {
+        b = b.neuron_labeled(format!("r{i}"), charge, vec![Rule::threshold_guarded(1, 1, 1)]);
+    }
+    let edges: Vec<(usize, usize)> = (0..m).map(|i| (i, (i + 1) % m)).collect();
+    b.synapses(&edges).output(m - 1).build().expect("well-formed")
+}
+
+/// A ring where every neuron has `k` rules consuming `1..=k` spikes —
+/// branching factor up to `k` per neuron, so Ψ grows to `k^m`: the
+/// wide-tree stress workload (the paper's Ψ-explosion in §4.2).
+pub fn ring_with_branching(m: usize, charge: u64, k: u64) -> SnpSystem {
+    assert!(m >= 2 && k >= 1);
+    let mut b = SystemBuilder::new(format!("ring_branch_{m}_{charge}_{k}"));
+    for i in 0..m {
+        let rules: Vec<Rule> = (1..=k).map(Rule::b3).collect();
+        b = b.neuron_labeled(format!("r{i}"), charge, rules);
+    }
+    let edges: Vec<(usize, usize)> = (0..m).map(|i| (i, (i + 1) % m)).collect();
+    b.synapses(&edges).output(m - 1).build().expect("well-formed")
+}
+
+/// A ring of `m` neurons where only the first `w` branch (2 rules each;
+/// the rest are deterministic): Ψ ≤ 2^w regardless of `m`, giving a
+/// workload whose *size* scales with `m` while its *branching* stays
+/// bounded — the shape needed for fair host-vs-device scaling sweeps
+/// (unbounded Ψ = 2^m would dominate any backend effect and exhaust
+/// memory, the blow-up the paper's §4.2 Ψ formula implies).
+pub fn wide_ring(m: usize, w: usize, charge: u64) -> SnpSystem {
+    assert!(m >= 2 && w <= m);
+    let mut b = SystemBuilder::new(format!("wide_ring_{m}_{w}_{charge}"));
+    for i in 0..m {
+        let rules: Vec<Rule> = if i < w {
+            vec![Rule::b3(1), Rule::b3(2)]
+        } else {
+            vec![Rule::b3(1)]
+        };
+        b = b.neuron_labeled(format!("r{i}"), charge, rules);
+    }
+    let edges: Vec<(usize, usize)> = (0..m).map(|i| (i, (i + 1) % m)).collect();
+    b.synapses(&edges).output(m - 1).build().expect("well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{applicable_rules, ConfigVector, ExploreOptions, Explorer};
+
+    #[test]
+    fn ring_conserves_spikes() {
+        let s = ring(4, 2);
+        let rep = Explorer::new(&s, ExploreOptions::breadth_first().max_configs(200)).run();
+        for c in rep.visited.in_order() {
+            assert_eq!(c.total_spikes(), 8, "ring conserves total spikes: {c}");
+        }
+    }
+
+    #[test]
+    fn deterministic_ring_is_narrow() {
+        let s = ring(4, 1);
+        let map = applicable_rules(&s, &ConfigVector::new(s.initial_config()));
+        assert_eq!(map.psi(), 1);
+    }
+
+    #[test]
+    fn wide_ring_psi_bounded_by_width() {
+        for (m, w) in [(8usize, 3usize), (32, 3), (64, 5)] {
+            let s = wide_ring(m, w, 2);
+            let psi = applicable_rules(&s, &ConfigVector::new(s.initial_config())).psi();
+            assert_eq!(psi, 1u128 << w, "m={m} w={w}");
+        }
+    }
+
+    #[test]
+    fn wide_ring_state_space_grows_with_m() {
+        let small = Explorer::new(&wide_ring(4, 2, 2), ExploreOptions::breadth_first().max_configs(2_000)).run();
+        let large = Explorer::new(&wide_ring(8, 2, 2), ExploreOptions::breadth_first().max_configs(2_000)).run();
+        assert!(large.visited.len() >= small.visited.len());
+    }
+
+    #[test]
+    fn branching_ring_psi() {
+        let s = ring_with_branching(3, 2, 2);
+        let map = applicable_rules(&s, &ConfigVector::new(s.initial_config()));
+        assert_eq!(map.psi(), 8, "2 choices per neuron, 3 neurons");
+    }
+
+    #[test]
+    fn branching_ring_explodes_then_closes() {
+        // k=2 rules consume 1 or 2 and always produce 1, so each active
+        // neuron's count moves within {1, 2} after one step: the reachable
+        // set is exactly {1,2}³ (8 states) and the run closes.
+        let s = ring_with_branching(3, 2, 2);
+        let rep = Explorer::new(&s, ExploreOptions::breadth_first().max_configs(5_000)).run();
+        assert!(rep.stop.is_complete(), "{:?}", rep.stop);
+        assert_eq!(rep.visited.len(), 8);
+        // wider charge ⇒ bigger space
+        let s = ring_with_branching(3, 3, 3);
+        let rep2 = Explorer::new(&s, ExploreOptions::breadth_first().max_configs(5_000)).run();
+        assert!(rep2.visited.len() > rep.visited.len());
+    }
+}

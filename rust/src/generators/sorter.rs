@@ -1,0 +1,110 @@
+//! Spike-count sorter — the classic SN P application (Ionescu–Sburlan):
+//! sort `n` numbers presented as initial spike counts.
+//!
+//! Construction: input neurons `In_i` hold the values `v_i` and emit one
+//! spike per step into **every** sorter column while non-empty, so after
+//! `t` steps exactly `|{i : v_i > t}|` inputs are still active. Column
+//! `S_j` receives one spike per active input per step and fires — exactly
+//! consuming what arrived — iff at least `j` inputs were active, feeding
+//! output `Out_j`. When everything drains, `Out_j` holds
+//! `|{t : #active(t) ≥ j}| = j`-th **largest** input: the outputs read
+//! out the sorted sequence.
+//!
+//! Layout (3n + … neurons): `In_0..n-1`, `S_1..n`, `Out_1..n`.
+
+use crate::snp::{Neuron, Rule, SnpSystem};
+
+/// Build a sorter for `values` (all ≥ 1; n = values.len() ≥ 2).
+pub fn sorter(values: &[u64]) -> SnpSystem {
+    let n = values.len();
+    assert!(n >= 2, "sorter needs at least two values");
+    assert!(values.iter().all(|&v| v >= 1), "values must be ≥ 1");
+    let mut neurons = Vec::with_capacity(3 * n);
+    let mut synapses = Vec::new();
+    // inputs: fire while non-empty (threshold ≥1, consume 1, produce 1)
+    for (i, &v) in values.iter().enumerate() {
+        neurons.push(Neuron::labeled(format!("In{i}"), v, vec![Rule::threshold_guarded(1, 1, 1)]));
+        for j in 0..n {
+            synapses.push((i, n + j)); // to every sorter column
+        }
+    }
+    // sorter column S_j (1-based j): holding exactly p spikes, it fires
+    // into Out_j when p ≥ j and *forgets* when 0 < p < j — the column must
+    // clear every step or stale spikes from earlier (wider) steps would
+    // pile up and fire spuriously later (exact guards are disjoint, so
+    // the column stays deterministic)
+    for j in 1..=n {
+        let mut rules: Vec<Rule> = (1..j).map(|p| Rule::forget(p as u64)).collect();
+        rules.extend((j..=n).map(|p| Rule {
+            guard: crate::snp::Guard::Exact(p as u64),
+            consumed: p as u64,
+            produced: 1,
+        }));
+        neurons.push(Neuron::labeled(format!("S{j}"), 0, rules));
+        synapses.push((n + j - 1, 2 * n + j - 1));
+    }
+    // outputs: pure accumulators
+    for j in 1..=n {
+        neurons.push(Neuron::labeled(format!("Out{j}"), 0, vec![]));
+    }
+    SnpSystem::new(
+        format!("sorter_{n}"),
+        neurons,
+        synapses,
+        None,
+        Some(2 * n), // Out1 (the maximum) is the designated output
+    )
+}
+
+/// Read the sorted (descending) sequence out of a halting configuration.
+pub fn sorted_output(cfg: &[u64], n: usize) -> Vec<u64> {
+    cfg[2 * n..2 * n + n].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExploreOptions, Explorer};
+
+    fn sort_via_snp(values: &[u64]) -> Vec<u64> {
+        let sys = sorter(values);
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+        assert!(rep.stop.is_complete(), "{:?}", rep.stop);
+        assert_eq!(rep.halting_configs.len(), 1, "sorter is deterministic");
+        sorted_output(rep.halting_configs[0].as_slice(), values.len())
+    }
+
+    #[test]
+    fn sorts_small_vectors() {
+        assert_eq!(sort_via_snp(&[3, 1, 2]), vec![3, 2, 1]);
+        assert_eq!(sort_via_snp(&[5, 5, 2]), vec![5, 5, 2]);
+        assert_eq!(sort_via_snp(&[1, 4]), vec![4, 1]);
+        assert_eq!(sort_via_snp(&[2, 7, 4, 1]), vec![7, 4, 2, 1]);
+    }
+
+    #[test]
+    fn property_sorts_random_vectors() {
+        let mut rng = crate::util::Rng::new(0x5027);
+        for case in 0..25 {
+            let n = rng.range(2, 5);
+            let values: Vec<u64> = (0..n).map(|_| rng.range(1, 9) as u64).collect();
+            let mut expect = values.clone();
+            expect.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(sort_via_snp(&values), expect, "case {case}: {values:?}");
+        }
+    }
+
+    #[test]
+    fn analysis_confirms_determinism() {
+        let sys = sorter(&[3, 1, 2]);
+        let rep = crate::engine::analyze(&sys, 10_000, 1_000);
+        assert!(rep.deterministic());
+        assert!(rep.confluent);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two")]
+    fn rejects_singleton() {
+        sorter(&[1]);
+    }
+}

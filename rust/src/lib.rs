@@ -1,0 +1,60 @@
+//! # snapse — Spiking Neural P system simulation framework
+//!
+//! `snapse` reproduces *"Simulating Spiking Neural P systems without delays
+//! using GPUs"* (Cabarle, Adorna, Martínez-del-Amor, 2011) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **Layer 1 (Pallas)** — the batched transition kernel
+//!   `C_{k+1} = C_k + S_k · M_Π` (the paper's eq. (2)) authored as a Pallas
+//!   kernel and AOT-lowered into HLO text at build time.
+//! - **Layer 2 (JAX)** — the frontier-step compute graph (applicability
+//!   masking fused with the transition matmul) lowered per shape bucket.
+//! - **Layer 3 (Rust, this crate)** — everything else: the SN P system
+//!   model, the spiking-vector enumeration of the paper's Algorithm 2, the
+//!   computation-tree exploration of Algorithm 1, the PJRT runtime that
+//!   executes the AOT artifacts, and the coordinator that batches frontier
+//!   work onto them.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use snapse::prelude::*;
+//!
+//! // The paper's Figure-1 system Π, generating ℕ∖{1}.
+//! let sys = snapse::generators::paper_pi();
+//! let mut explorer = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(9));
+//! let report = explorer.run();
+//! assert!(report.visited.contains(&ConfigVector::from(vec![2, 1, 2])));
+//! ```
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`snp`] | SN P system model: neurons, rules, guards, unary regexes |
+//! | [`matrix`] | spiking transition matrix (paper Def. 2), dense + CSR |
+//! | [`engine`] | configuration/spiking vectors, Algorithm 1/2, trees, traces |
+//! | [`compute`] | step backends: pure-Rust host and XLA/PJRT device |
+//! | [`runtime`] | PJRT client, artifact manifest, executable cache |
+//! | [`coordinator`] | frontier pipeline: batching, workers, metrics |
+//! | [`baseline`] | direct (non-matrix) semantics — the correctness oracle |
+//! | [`parser`] | the paper's confVec/M/r file format, `.snpl` DSL, JSON |
+//! | [`generators`] | library of SN P systems (paper's Π, counters, rings…) |
+//! | [`output`] | run reports, DOT export, text tables |
+
+pub mod baseline;
+pub mod cli;
+pub mod compute;
+pub mod coordinator;
+pub mod engine;
+pub mod error;
+pub mod generators;
+pub mod matrix;
+pub mod output;
+pub mod parser;
+pub mod prelude;
+pub mod runtime;
+pub mod snp;
+pub mod util;
+
+pub use error::{Error, Result};

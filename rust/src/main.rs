@@ -1,0 +1,6 @@
+//! `snapse` binary entry point.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(snapse::cli::main_with_args(&argv));
+}

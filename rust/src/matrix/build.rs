@@ -1,0 +1,82 @@
+//! Construct `M_Π` from an [`SnpSystem`] (paper Definition 2).
+
+use super::TransitionMatrix;
+use crate::snp::SnpSystem;
+
+/// Build the spiking transition matrix of a system: rows follow the
+/// system's total rule order, columns its neuron order.
+///
+/// For rule `i` in neuron `s`:
+/// - column `s` gets `-consumed`;
+/// - every synaptic successor `j` of `s` gets `+produced`
+///   (0 for forgetting rules, which produce nothing);
+/// - all other columns stay 0.
+pub fn build_matrix(sys: &SnpSystem) -> TransitionMatrix {
+    let mut m = TransitionMatrix::zeros(sys.num_rules(), sys.num_neurons());
+    for (rid, s, rule) in sys.rules() {
+        m.set(rid, s, -(rule.consumed as i64));
+        if rule.produced > 0 {
+            for &t in sys.successors(s) {
+                m.set(rid, t as usize, rule.produced as i64);
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snp::{Rule, SystemBuilder};
+
+    #[test]
+    fn paper_pi_matrix_matches_eq1() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        assert_eq!(m.rows(), 5);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(
+            m.as_row_major(),
+            &[-1, 1, 1, -2, 1, 1, 1, -1, 1, 0, 0, -1, 0, 0, -2],
+            "must equal the paper's eq. (1)"
+        );
+    }
+
+    #[test]
+    fn forgetting_rule_row_has_no_production() {
+        let sys = SystemBuilder::new("t")
+            .neuron(2, vec![Rule::forget(2)])
+            .neuron(0, vec![])
+            .synapse(0, 1)
+            .build()
+            .unwrap();
+        let m = build_matrix(&sys);
+        assert_eq!(m.row(0), &[-2, 0], "forgetting rule consumes but never produces");
+    }
+
+    #[test]
+    fn production_respects_out_degree() {
+        // neuron 0 → {1, 2}; rule produces 3 to each successor
+        let sys = SystemBuilder::new("t")
+            .neuron(1, vec![Rule::threshold(1, 3)])
+            .neuron(0, vec![])
+            .neuron(0, vec![])
+            .synapses(&[(0, 1), (0, 2)])
+            .build()
+            .unwrap();
+        let m = build_matrix(&sys);
+        assert_eq!(m.row(0), &[-1, 3, 3]);
+    }
+
+    #[test]
+    fn isolated_neuron_row() {
+        // no outgoing synapses: spikes go to the environment only
+        let sys = SystemBuilder::new("t")
+            .neuron(1, vec![Rule::b3(1)])
+            .neuron(0, vec![])
+            .build()
+            .unwrap();
+        let m = build_matrix(&sys);
+        assert_eq!(m.row(0), &[-1, 0]);
+    }
+}

@@ -1,0 +1,208 @@
+//! The spiking transition matrix `M_Π` (paper Definition 2).
+//!
+//! `M_Π` is an `R × N` integer matrix (R = total rules, N = neurons) with
+//!
+//! ```text
+//! a_ij = -c  if rule i lives in neuron j and consumes c spikes
+//!      =  p  if rule i lives in neuron s ≠ j, (s,j) ∈ syn, producing p
+//!      =  0  otherwise
+//! ```
+//!
+//! and one simulation step is `C_{k+1} = C_k + S_k · M_Π` (eq. (2)).
+//! Row-major dense storage mirrors the paper's marshalling format (§3.1,
+//! eq. (3)); a CSR variant serves sparse systems where most rules touch
+//! only a handful of neurons.
+
+mod build;
+mod sparse;
+
+pub use build::build_matrix;
+pub use sparse::CsrMatrix;
+
+use crate::error::{Error, Result};
+
+/// Dense row-major `R × N` transition matrix over `i64`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransitionMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<i64>,
+}
+
+impl TransitionMatrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        TransitionMatrix { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Build from row-major data (the paper's eq. (3) layout).
+    pub fn from_row_major(rows: usize, cols: usize, data: Vec<i64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(
+                format!("{rows}x{cols} = {} elements", rows * cols),
+                format!("{} elements", data.len()),
+            ));
+        }
+        Ok(TransitionMatrix { rows, cols, data })
+    }
+
+    /// Number of rules (rows).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of neurons (columns).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// The raw row-major buffer (paper eq. (3)).
+    #[inline]
+    pub fn as_row_major(&self) -> &[i64] {
+        &self.data
+    }
+
+    /// Row-major copy as `f32` for device transfer (exact for |v| < 2²⁴).
+    pub fn to_f32_row_major(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// `y = c + s · M` for a single spiking vector `s` (0/1 per rule).
+    /// `c` and the result are length-N; `s` is length-R.
+    pub fn step(&self, c: &[u64], s: &[u8]) -> Result<Vec<i64>> {
+        if c.len() != self.cols {
+            return Err(Error::shape(format!("C len {}", self.cols), format!("{}", c.len())));
+        }
+        if s.len() != self.rows {
+            return Err(Error::shape(format!("S len {}", self.rows), format!("{}", s.len())));
+        }
+        let mut out: Vec<i64> = c.iter().map(|&x| x as i64).collect();
+        for (r, &sr) in s.iter().enumerate() {
+            if sr != 0 {
+                let row = self.row(r);
+                for (o, &v) in out.iter_mut().zip(row.iter()) {
+                    *o += v;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Sparsity ratio: fraction of zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&v| v == 0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    /// Convert to CSR.
+    pub fn to_csr(&self) -> CsrMatrix {
+        CsrMatrix::from_dense(self)
+    }
+
+    /// Pretty-print in the paper's parenthesized layout.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in 0..self.rows {
+            out.push_str(if r == 0 { "⎛" } else if r + 1 == self.rows { "⎝" } else { "⎜" });
+            for c in 0..self.cols {
+                out.push_str(&format!(" {:>4}", self.get(r, c)));
+            }
+            out.push_str(if r == 0 { " ⎞\n" } else if r + 1 == self.rows { " ⎠\n" } else { " ⎟\n" });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's eq. (1) matrix for Π.
+    pub(crate) fn m_pi() -> TransitionMatrix {
+        TransitionMatrix::from_row_major(
+            5,
+            3,
+            vec![-1, 1, 1, -2, 1, 1, 1, -1, 1, 0, 0, -1, 0, 0, -2],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn row_major_layout_matches_eq3() {
+        let m = m_pi();
+        assert_eq!(m.as_row_major(), &[-1, 1, 1, -2, 1, 1, 1, -1, 1, 0, 0, -1, 0, 0, -2]);
+        assert_eq!(m.get(0, 0), -1);
+        assert_eq!(m.get(1, 0), -2);
+        assert_eq!(m.get(4, 2), -2);
+        assert_eq!(m.row(2), &[1, -1, 1]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(TransitionMatrix::from_row_major(2, 2, vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn step_matches_paper_eq2() {
+        // C0 = [2,1,1]; S = <1,0,1,1,0> → C1 = [2,1,2]
+        let m = m_pi();
+        let c1 = m.step(&[2, 1, 1], &[1, 0, 1, 1, 0]).unwrap();
+        assert_eq!(c1, vec![2, 1, 2]);
+        // S = <0,1,1,1,0> → C1 = [1,1,2]
+        let c1b = m.step(&[2, 1, 1], &[0, 1, 1, 1, 0]).unwrap();
+        assert_eq!(c1b, vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn step_validates_shapes() {
+        let m = m_pi();
+        assert!(m.step(&[1, 1], &[0; 5]).is_err());
+        assert!(m.step(&[1, 1, 1], &[0; 4]).is_err());
+    }
+
+    #[test]
+    fn zero_spiking_vector_is_identity() {
+        let m = m_pi();
+        let c = m.step(&[4, 7, 9], &[0; 5]).unwrap();
+        assert_eq!(c, vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn sparsity_and_f32() {
+        let m = m_pi();
+        assert!((m.sparsity() - 4.0 / 15.0).abs() < 1e-12);
+        assert_eq!(m.to_f32_row_major()[3], -2.0);
+    }
+
+    #[test]
+    fn render_contains_entries() {
+        let s = m_pi().render();
+        assert!(s.contains("-2"));
+        assert_eq!(s.lines().count(), 5);
+    }
+}

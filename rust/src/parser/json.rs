@@ -1,0 +1,160 @@
+//! JSON import/export of systems (machine interchange with the Python
+//! build path and external tools).
+
+use crate::error::{Error, Result};
+use crate::snp::{Guard, Neuron, Rule, SnpSystem, UnaryRegex};
+use crate::util::JsonValue as J;
+
+/// Serialize a system to JSON.
+pub fn system_to_json(sys: &SnpSystem) -> J {
+    J::obj([
+        ("name", J::str(sys.name.clone())),
+        (
+            "neurons",
+            J::arr(sys.neurons.iter().map(|n| {
+                J::obj([
+                    ("label", J::str(n.label.clone())),
+                    ("spikes", J::num(n.initial_spikes as f64)),
+                    (
+                        "rules",
+                        J::arr(n.rules.iter().map(|r| {
+                            let (gk, gv) = match &r.guard {
+                                Guard::Threshold(c) => ("threshold", J::num(*c as f64)),
+                                Guard::Exact(c) => ("exact", J::num(*c as f64)),
+                                Guard::Regex(re) => ("regex", J::str(re.source())),
+                            };
+                            J::obj([
+                                ("guard_kind", J::str(gk)),
+                                ("guard", gv),
+                                ("consumed", J::num(r.consumed as f64)),
+                                ("produced", J::num(r.produced as f64)),
+                            ])
+                        })),
+                    ),
+                ])
+            })),
+        ),
+        (
+            "synapses",
+            J::arr(
+                sys.synapses
+                    .iter()
+                    .map(|&(f, t)| J::arr([J::num(f as f64), J::num(t as f64)])),
+            ),
+        ),
+        (
+            "input",
+            sys.input.map(|i| J::num(i as f64)).unwrap_or(J::Null),
+        ),
+        (
+            "output",
+            sys.output.map(|o| J::num(o as f64)).unwrap_or(J::Null),
+        ),
+    ])
+}
+
+/// Deserialize a system from JSON text.
+pub fn system_from_json(text: &str) -> Result<SnpSystem> {
+    let v = J::parse(text)?;
+    let bad = |m: &str| Error::parse("system json", 0, m.to_string());
+    let name = v.get("name").and_then(|x| x.as_str()).unwrap_or("unnamed").to_string();
+    let mut neurons = Vec::new();
+    for nj in v.get("neurons").and_then(|x| x.as_arr()).ok_or_else(|| bad("missing neurons"))? {
+        let label = nj.get("label").and_then(|x| x.as_str()).unwrap_or("").to_string();
+        let spikes =
+            nj.get("spikes").and_then(|x| x.as_usize()).ok_or_else(|| bad("bad spikes"))? as u64;
+        let mut rules = Vec::new();
+        for rj in nj.get("rules").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+            let kind = rj.get("guard_kind").and_then(|x| x.as_str()).unwrap_or("threshold");
+            let guard = match kind {
+                "threshold" => Guard::Threshold(
+                    rj.get("guard").and_then(|x| x.as_usize()).ok_or_else(|| bad("guard"))?
+                        as u64,
+                ),
+                "exact" => Guard::Exact(
+                    rj.get("guard").and_then(|x| x.as_usize()).ok_or_else(|| bad("guard"))?
+                        as u64,
+                ),
+                "regex" => Guard::Regex(UnaryRegex::parse(
+                    rj.get("guard").and_then(|x| x.as_str()).ok_or_else(|| bad("guard"))?,
+                )?),
+                other => return Err(bad(&format!("unknown guard kind `{other}`"))),
+            };
+            rules.push(Rule {
+                guard,
+                consumed: rj
+                    .get("consumed")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| bad("consumed"))? as u64,
+                produced: rj
+                    .get("produced")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| bad("produced"))? as u64,
+            });
+        }
+        neurons.push(Neuron::labeled(label, spikes, rules));
+    }
+    let mut synapses = Vec::new();
+    for sj in v.get("synapses").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+        let pair = sj.as_arr().ok_or_else(|| bad("synapse pair"))?;
+        if pair.len() != 2 {
+            return Err(bad("synapse pair arity"));
+        }
+        synapses.push((
+            pair[0].as_usize().ok_or_else(|| bad("synapse idx"))?,
+            pair[1].as_usize().ok_or_else(|| bad("synapse idx"))?,
+        ));
+    }
+    let get_io = |k: &str| v.get(k).and_then(|x| x.as_usize());
+    let sys = SnpSystem::new(name, neurons, synapses, get_io("input"), get_io("output"));
+    crate::snp::validate(&sys)?;
+    Ok(sys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_paper_pi() {
+        let sys = crate::generators::paper_pi();
+        let text = system_to_json(&sys).to_string_pretty();
+        let again = system_from_json(&text).unwrap();
+        assert_eq!(sys.neurons, again.neurons);
+        assert_eq!(sys.synapses, again.synapses);
+        assert_eq!(sys.output, again.output);
+        assert_eq!(sys.name, again.name);
+    }
+
+    #[test]
+    fn roundtrip_regex_and_forget() {
+        let sys = crate::generators::even_generator();
+        let text = system_to_json(&sys).to_string_compact();
+        let again = system_from_json(&text).unwrap();
+        assert_eq!(sys.neurons, again.neurons);
+    }
+
+    #[test]
+    fn roundtrip_all_generators() {
+        for sys in [
+            crate::generators::nat_generator(),
+            crate::generators::counter_chain(4, 2),
+            crate::generators::ring(5, 1),
+            crate::generators::bit_adder(3),
+        ] {
+            let again = system_from_json(&system_to_json(&sys).to_string_compact()).unwrap();
+            assert_eq!(sys.neurons, again.neurons, "{}", sys.name);
+            assert_eq!(sys.synapses, again.synapses, "{}", sys.name);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(system_from_json("{}").is_err());
+        assert!(system_from_json(r#"{"neurons": [{"spikes": "x"}]}"#).is_err());
+        assert!(
+            system_from_json(r#"{"neurons":[{"spikes":1,"rules":[]}],"synapses":[[0]]}"#)
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! Input formats.
+//!
+//! - [`paperfmt`] — the paper's three text files: `confVec` (blank-space
+//!   counts), `M` (row-major matrix), and `r` (blank-space rule
+//!   consumptions, `$`-delimited between neurons, eq. (4)).
+//! - [`snpl`] — the `.snpl` DSL: a readable single-file system description
+//!   with labels, full rule syntax, synapses and IO.
+//! - [`json`] — JSON import/export of systems (machine interchange).
+
+pub mod json;
+pub mod paperfmt;
+pub mod snpl;
+
+pub use json::{system_from_json, system_to_json};
+pub use paperfmt::{parse_paper_files, PaperInput};
+pub use snpl::parse_snpl;

@@ -1,0 +1,211 @@
+//! The paper's input format (§3.1, §4).
+//!
+//! Three whitespace-delimited text payloads:
+//!
+//! - **confVec** — `n₁ n₂ … nₘ`, e.g. `2 1 1`;
+//! - **M** — the transition matrix in row-major order (eq. (3)), e.g.
+//!   `-1 1 1 -2 1 1 1 -1 1 0 0 -1 0 0 -2`;
+//! - **r** — per-neuron rule consumptions, neurons separated by `$`
+//!   (eq. (4)): `2 2 $ 1 $ 1 2`.
+//!
+//! The paper's `r` file stores only the consumed count of each (b-3) rule;
+//! rule (1) of Π (`a²/a → a`) is stored as `2` ("it nevertheless consumes
+//! a spike since its regular expression is of the same type"), i.e. the
+//! file encodes the **guard**, and the consumption is recovered from the
+//! matrix diagonal block. We reconstruct a full [`SnpSystem`]: guards from
+//! `r` (threshold semantics), consumption/production/synapses from `M`.
+
+use crate::engine::ConfigVector;
+use crate::error::{Error, Result};
+use crate::matrix::TransitionMatrix;
+use crate::snp::{Neuron, Rule, SnpSystem};
+
+/// Parsed paper-format input.
+#[derive(Debug, Clone)]
+pub struct PaperInput {
+    /// Initial configuration.
+    pub config: ConfigVector,
+    /// The transition matrix.
+    pub matrix: TransitionMatrix,
+    /// Per-neuron guard thresholds (the `r` file).
+    pub rules: Vec<Vec<u64>>,
+}
+
+impl PaperInput {
+    /// Reconstruct an [`SnpSystem`] (threshold semantics).
+    ///
+    /// For rule `i` of neuron `j`: guard = `r[j][l]` (threshold),
+    /// consumed = `-M[i][j]`, produced = the common positive entry of row
+    /// `i` (0 if none), synapses = `{(j, t) | M[i][t] > 0}`.
+    pub fn to_system(&self, name: &str) -> Result<SnpSystem> {
+        let m = self.rules.len();
+        if self.config.len() != m {
+            return Err(Error::shape(
+                format!("confVec of {m} neurons"),
+                format!("{}", self.config.len()),
+            ));
+        }
+        let total_rules: usize = self.rules.iter().map(|v| v.len()).sum();
+        if self.matrix.rows() != total_rules || self.matrix.cols() != m {
+            return Err(Error::shape(
+                format!("M {total_rules}x{m}"),
+                format!("{}x{}", self.matrix.rows(), self.matrix.cols()),
+            ));
+        }
+        let mut synapses: Vec<(usize, usize)> = Vec::new();
+        let mut neurons = Vec::with_capacity(m);
+        let mut rid = 0usize;
+        for (j, guards) in self.rules.iter().enumerate() {
+            let mut rules = Vec::with_capacity(guards.len());
+            for &guard in guards {
+                let diag = self.matrix.get(rid, j);
+                if diag >= 0 {
+                    return Err(Error::invalid_system(format!(
+                        "row {rid}: expected negative consumption at column {j}, got {diag}"
+                    )));
+                }
+                let consumed = (-diag) as u64;
+                let mut produced = 0u64;
+                for t in 0..m {
+                    let v = self.matrix.get(rid, t);
+                    if t != j && v > 0 {
+                        synapses.push((j, t));
+                        if produced != 0 && produced != v as u64 {
+                            return Err(Error::invalid_system(format!(
+                                "row {rid}: inconsistent production ({produced} vs {v})"
+                            )));
+                        }
+                        produced = v as u64;
+                    }
+                }
+                rules.push(Rule::threshold_guarded(guard.max(consumed), consumed, produced.max(
+                    // rules with no intra-system synapse still emit to the
+                    // environment (paper's σ3): production defaults to 1
+                    // for (b-3) rules, distinguishable from forgetting only
+                    // in richer formats.
+                    1,
+                )));
+                rid += 1;
+            }
+            neurons.push(Neuron::new(self.config.get(j), rules));
+        }
+        synapses.sort_unstable();
+        synapses.dedup();
+        let sys = SnpSystem::new(name, neurons, synapses, None, None);
+        crate::snp::validate(&sys)?;
+        Ok(sys)
+    }
+}
+
+/// Parse the three payloads (contents, not paths).
+pub fn parse_paper_files(conf_vec: &str, matrix: &str, rules: &str) -> Result<PaperInput> {
+    // confVec
+    let counts: Vec<u64> = split_numbers(conf_vec, "confVec")?;
+    let config = ConfigVector::from(counts);
+    // r file: `$`-delimited neurons
+    let mut per_neuron: Vec<Vec<u64>> = Vec::new();
+    for (i, part) in rules.split('$').enumerate() {
+        let vals: Vec<u64> = split_numbers(part, "r")
+            .map_err(|_| Error::parse("r file", i, format!("bad neuron segment `{part}`")))?;
+        if vals.is_empty() {
+            return Err(Error::parse("r file", i, "empty neuron segment"));
+        }
+        per_neuron.push(vals);
+    }
+    let total_rules: usize = per_neuron.iter().map(|v| v.len()).sum();
+    // M file: row-major, rows = total rules, cols = neurons
+    let flat: Vec<i64> = matrix
+        .split_whitespace()
+        .map(|t| t.parse::<i64>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| Error::parse("M file", 0, format!("{e}")))?;
+    let cols = config.len();
+    if flat.len() != total_rules * cols {
+        return Err(Error::shape(
+            format!("M with {total_rules}x{cols} = {} entries", total_rules * cols),
+            format!("{}", flat.len()),
+        ));
+    }
+    let matrix = TransitionMatrix::from_row_major(total_rules, cols, flat)?;
+    Ok(PaperInput { config, matrix, rules: per_neuron })
+}
+
+fn split_numbers(text: &str, what: &str) -> Result<Vec<u64>> {
+    text.split_whitespace()
+        .map(|t| {
+            t.parse::<u64>()
+                .map_err(|e| Error::parse(what.to_string(), 0, format!("`{t}`: {e}")))
+        })
+        .collect()
+}
+
+/// Read the three files from disk.
+pub fn load_paper_files(
+    conf_path: &std::path::Path,
+    m_path: &std::path::Path,
+    r_path: &std::path::Path,
+) -> Result<PaperInput> {
+    let read = |p: &std::path::Path| {
+        std::fs::read_to_string(p).map_err(|e| Error::io(p.display().to_string(), e))
+    };
+    parse_paper_files(&read(conf_path)?, &read(m_path)?, &read(r_path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CONF: &str = "2 1 1";
+    const M: &str = "-1 1 1 -2 1 1 1 -1 1 0 0 -1 0 0 -2";
+    const R: &str = "2 2 $ 1 $ 1 2";
+
+    #[test]
+    fn parses_paper_pi_files() {
+        let input = parse_paper_files(CONF, M, R).unwrap();
+        assert_eq!(input.config.as_slice(), &[2, 1, 1]);
+        assert_eq!(input.rules, vec![vec![2, 2], vec![1], vec![1, 2]]);
+        assert_eq!(input.matrix.rows(), 5);
+        assert_eq!(input.matrix.get(1, 0), -2);
+    }
+
+    #[test]
+    fn reconstructed_system_matches_paper_pi() {
+        let input = parse_paper_files(CONF, M, R).unwrap();
+        let sys = input.to_system("pi_from_files").unwrap();
+        let reference = crate::generators::paper_pi();
+        // structure must match
+        assert_eq!(sys.num_neurons(), 3);
+        assert_eq!(sys.num_rules(), 5);
+        assert_eq!(sys.synapses, reference.synapses);
+        assert_eq!(sys.initial_config(), reference.initial_config());
+        // and the rebuilt matrix must reproduce eq. (1) exactly
+        let m = crate::matrix::build_matrix(&sys);
+        assert_eq!(m.as_row_major(), crate::matrix::build_matrix(&reference).as_row_major());
+    }
+
+    #[test]
+    fn reconstructed_system_explores_identically() {
+        let input = parse_paper_files(CONF, M, R).unwrap();
+        let sys = input.to_system("pi_from_files").unwrap();
+        let reference = crate::generators::paper_pi();
+        use crate::engine::{ExploreOptions, Explorer};
+        let a = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(4)).run();
+        let b = Explorer::new(&reference, ExploreOptions::breadth_first().max_depth(4)).run();
+        assert_eq!(a.visited.in_order(), b.visited.in_order());
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(parse_paper_files("2 1", M, R).is_err(), "confVec arity");
+        assert!(parse_paper_files(CONF, "-1 1 1", R).is_err(), "short matrix");
+        assert!(parse_paper_files(CONF, M, "2 2 $ $ 1 2").is_err(), "empty neuron");
+        assert!(parse_paper_files("x", M, R).is_err(), "non-numeric");
+    }
+
+    #[test]
+    fn rejects_non_negative_diagonal() {
+        // rule row with +1 in its own column
+        let input = parse_paper_files("1 1", "1 1 -1 0", "1 $ 1").unwrap();
+        assert!(input.to_system("bad").is_err());
+    }
+}

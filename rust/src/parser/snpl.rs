@@ -1,0 +1,291 @@
+//! The `.snpl` DSL — a readable single-file system description.
+//!
+//! ```text
+//! # The paper's Figure-1 system.
+//! system paper_pi
+//!
+//! neuron s1 2            # name, initial spikes
+//!   rule >=2 / 1 -> 1    # threshold guard: fire when k ≥ 2, consume 1, produce 1
+//!   rule >=2 / 2 -> 1
+//! end
+//! neuron s2 1
+//!   rule >=1 / 1 -> 1
+//! end
+//! neuron s3 1 output
+//!   rule >=1 / 1 -> 1
+//!   rule >=2 / 2 -> 1
+//! end
+//!
+//! syn s1 s2
+//! syn s1 s3
+//! syn s2 s1
+//! syn s2 s3
+//! ```
+//!
+//! Guard forms: `>=N` (paper threshold), `==N` (exact), or a unary regex
+//! such as `a(aa)*`. `forget N` declares `aᴺ → λ`. `#` starts a comment.
+
+use crate::error::{Error, Result};
+use crate::snp::{Guard, Neuron, Rule, SnpSystem, UnaryRegex};
+
+/// Parse `.snpl` source into a validated system.
+pub fn parse_snpl(src: &str) -> Result<SnpSystem> {
+    let mut name = String::from("unnamed");
+    let mut neurons: Vec<Neuron> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    let mut synapses_raw: Vec<(String, String, usize)> = Vec::new();
+    let mut input: Option<usize> = None;
+    let mut output: Option<usize> = None;
+    let mut current: Option<(String, u64, bool, bool, Vec<Rule>)> = None;
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let kw = toks.next().unwrap();
+        let err = |msg: &str| Error::parse("snpl", lineno + 1, msg.to_string());
+        match kw {
+            "system" => {
+                name = toks.next().ok_or_else(|| err("system needs a name"))?.to_string();
+            }
+            "neuron" => {
+                if current.is_some() {
+                    return Err(err("nested neuron (missing `end`?)"));
+                }
+                let nname = toks.next().ok_or_else(|| err("neuron needs a name"))?.to_string();
+                if names.contains(&nname) {
+                    return Err(err(&format!("duplicate neuron `{nname}`")));
+                }
+                let spikes: u64 = toks
+                    .next()
+                    .ok_or_else(|| err("neuron needs an initial spike count"))?
+                    .parse()
+                    .map_err(|_| err("bad spike count"))?;
+                let mut is_in = false;
+                let mut is_out = false;
+                for t in toks {
+                    match t {
+                        "input" => is_in = true,
+                        "output" => is_out = true,
+                        other => return Err(err(&format!("unknown neuron flag `{other}`"))),
+                    }
+                }
+                current = Some((nname, spikes, is_in, is_out, Vec::new()));
+            }
+            "rule" => {
+                let cur = current.as_mut().ok_or_else(|| err("rule outside neuron"))?;
+                let rest: Vec<&str> = line["rule".len()..].trim().split("->").collect();
+                if rest.len() != 2 {
+                    return Err(err("rule needs `guard / consume -> produce`"));
+                }
+                let produced: u64 =
+                    rest[1].trim().parse().map_err(|_| err("bad produce count"))?;
+                let lhs: Vec<&str> = rest[0].split('/').map(|s| s.trim()).collect();
+                let (guard_text, consumed) = match lhs.len() {
+                    1 => (lhs[0], None),
+                    2 => (
+                        lhs[0],
+                        Some(lhs[1].parse::<u64>().map_err(|_| err("bad consume count"))?),
+                    ),
+                    _ => return Err(err("too many '/' in rule")),
+                };
+                let guard = parse_guard(guard_text)
+                    .map_err(|e| err(&format!("bad guard `{guard_text}`: {e}")))?;
+                let consumed = consumed.unwrap_or(match &guard {
+                    Guard::Threshold(c) | Guard::Exact(c) => *c,
+                    Guard::Regex(re) => re.lengths().min().unwrap_or(1).max(1),
+                });
+                cur.4.push(Rule { guard, consumed, produced });
+            }
+            "forget" => {
+                let cur = current.as_mut().ok_or_else(|| err("forget outside neuron"))?;
+                let s: u64 = toks
+                    .next()
+                    .ok_or_else(|| err("forget needs a count"))?
+                    .parse()
+                    .map_err(|_| err("bad forget count"))?;
+                cur.4.push(Rule::forget(s));
+            }
+            "end" => {
+                let (nname, spikes, is_in, is_out, rules) =
+                    current.take().ok_or_else(|| err("stray `end`"))?;
+                let id = neurons.len();
+                if is_in {
+                    input = Some(id);
+                }
+                if is_out {
+                    output = Some(id);
+                }
+                names.push(nname.clone());
+                neurons.push(Neuron::labeled(nname, spikes, rules));
+            }
+            "syn" => {
+                let from = toks.next().ok_or_else(|| err("syn needs two names"))?;
+                for to in toks {
+                    synapses_raw.push((from.to_string(), to.to_string(), lineno + 1));
+                }
+            }
+            other => return Err(err(&format!("unknown keyword `{other}`"))),
+        }
+    }
+    if current.is_some() {
+        return Err(Error::parse("snpl", src.lines().count(), "unterminated neuron block"));
+    }
+    let mut synapses = Vec::with_capacity(synapses_raw.len());
+    for (f, t, lineno) in synapses_raw {
+        let find = |n: &str| {
+            names
+                .iter()
+                .position(|x| x == n)
+                .ok_or_else(|| Error::parse("snpl", lineno, format!("unknown neuron `{n}`")))
+        };
+        synapses.push((find(&f)?, find(&t)?));
+    }
+    let sys = SnpSystem::new(name, neurons, synapses, input, output);
+    crate::snp::validate(&sys)?;
+    Ok(sys)
+}
+
+fn parse_guard(text: &str) -> Result<Guard> {
+    if let Some(n) = text.strip_prefix(">=") {
+        return Ok(Guard::Threshold(
+            n.trim().parse().map_err(|_| Error::parse("guard", 0, "bad threshold"))?,
+        ));
+    }
+    if let Some(n) = text.strip_prefix("==") {
+        return Ok(Guard::Exact(
+            n.trim().parse().map_err(|_| Error::parse("guard", 0, "bad exact count"))?,
+        ));
+    }
+    Ok(Guard::Regex(UnaryRegex::parse(text)?))
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Render a system back to `.snpl` (round-trip export).
+pub fn to_snpl(sys: &SnpSystem) -> String {
+    let mut out = format!("system {}\n\n", sys.name);
+    for (j, n) in sys.neurons.iter().enumerate() {
+        out.push_str(&format!("neuron {} {}", n.label, n.initial_spikes));
+        if sys.input == Some(j) {
+            out.push_str(" input");
+        }
+        if sys.output == Some(j) {
+            out.push_str(" output");
+        }
+        out.push('\n');
+        for r in &n.rules {
+            match r.kind() {
+                crate::snp::RuleKind::Forgetting => {
+                    out.push_str(&format!("  forget {}\n", r.consumed));
+                }
+                crate::snp::RuleKind::Spiking => {
+                    let guard = match &r.guard {
+                        Guard::Threshold(c) => format!(">={c}"),
+                        Guard::Exact(c) => format!("=={c}"),
+                        Guard::Regex(re) => re.source().to_string(),
+                    };
+                    out.push_str(&format!("  rule {guard} / {} -> {}\n", r.consumed, r.produced));
+                }
+            }
+        }
+        out.push_str("end\n");
+    }
+    out.push('\n');
+    for &(f, t) in &sys.synapses {
+        out.push_str(&format!("syn {} {}\n", sys.neurons[f].label, sys.neurons[t].label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PI: &str = r#"
+# the paper's Figure-1 system
+system paper_pi
+neuron s1 2
+  rule >=2 / 1 -> 1
+  rule >=2 / 2 -> 1
+end
+neuron s2 1
+  rule >=1 / 1 -> 1
+end
+neuron s3 1 output
+  rule >=1 / 1 -> 1
+  rule >=2 / 2 -> 1
+end
+syn s1 s2 s3
+syn s2 s1 s3
+"#;
+
+    #[test]
+    fn parses_paper_pi_and_matches_generator() {
+        let sys = parse_snpl(PI).unwrap();
+        let reference = crate::generators::paper_pi();
+        assert_eq!(sys.num_neurons(), 3);
+        assert_eq!(sys.synapses, reference.synapses);
+        assert_eq!(sys.initial_config(), vec![2, 1, 1]);
+        assert_eq!(sys.output, Some(2));
+        assert_eq!(
+            crate::matrix::build_matrix(&sys).as_row_major(),
+            crate::matrix::build_matrix(&reference).as_row_major()
+        );
+    }
+
+    #[test]
+    fn roundtrip_through_to_snpl() {
+        let sys = parse_snpl(PI).unwrap();
+        let again = parse_snpl(&to_snpl(&sys)).unwrap();
+        assert_eq!(sys.neurons, again.neurons);
+        assert_eq!(sys.synapses, again.synapses);
+        assert_eq!(sys.output, again.output);
+    }
+
+    #[test]
+    fn regex_guards_and_forget() {
+        let src = r#"
+system rg
+neuron a 3
+  rule a(aa)* / 1 -> 2
+  forget 2
+end
+neuron b 0 output
+end
+syn a b
+"#;
+        let sys = parse_snpl(src).unwrap();
+        assert!(matches!(sys.rule(0).guard, Guard::Regex(_)));
+        assert_eq!(sys.rule(0).produced, 2);
+        assert_eq!(sys.rule(1).kind(), crate::snp::RuleKind::Forgetting);
+        // roundtrip keeps the regex source
+        let again = parse_snpl(&to_snpl(&sys)).unwrap();
+        assert_eq!(sys.neurons, again.neurons);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(parse_snpl("neuron a").is_err(), "missing spikes");
+        assert!(parse_snpl("rule >=1 / 1 -> 1").is_err(), "rule outside neuron");
+        assert!(parse_snpl("neuron a 1\nrule >=1 / 1 -> 1").is_err(), "unterminated");
+        assert!(parse_snpl("neuron a 1\nend\nsyn a b").is_err(), "unknown neuron in syn");
+        assert!(parse_snpl("neuron a 1\nend\nneuron a 1\nend").is_err(), "duplicate");
+        assert!(parse_snpl("bogus").is_err(), "unknown keyword");
+        assert!(parse_snpl("neuron a 1\n  rule >=0 / 0 -> 1\nend").is_err(), "zero consume");
+    }
+
+    #[test]
+    fn implicit_consumption_from_guard() {
+        let src = "system t\nneuron a 2\n  rule ==2 -> 1\nend\nneuron b 0\nend\nsyn a b";
+        let sys = parse_snpl(src).unwrap();
+        assert_eq!(sys.rule(0).consumed, 2, "defaults to the guard count");
+    }
+}

@@ -1,0 +1,15 @@
+//! Convenience re-exports for downstream users.
+//!
+//! `use snapse::prelude::*;` brings in the types needed for the common
+//! build-system → explore → report loop.
+
+pub use crate::baseline::DirectSimulator;
+pub use crate::compute::{HostBackend, StepBackend, StepBatch};
+pub use crate::coordinator::{Coordinator, CoordinatorConfig};
+pub use crate::engine::{
+    ConfigVector, ExploreOptions, Explorer, ExploreReport, SearchOrder, SpikingVector,
+    StopReason,
+};
+pub use crate::error::{Error, Result};
+pub use crate::matrix::TransitionMatrix;
+pub use crate::snp::{Guard, Neuron, Rule, SnpSystem, SystemBuilder};

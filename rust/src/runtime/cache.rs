@@ -1,0 +1,109 @@
+//! Lazy compiled-executable cache.
+//!
+//! Compiling an HLO module costs milliseconds; the coordinator asks for
+//! the same `(R, N, B)` thousands of times. The cache compiles each
+//! artifact at most once per process and hands out the cheap
+//! [`StepExecutable`] handle.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::{Manifest, PjRt, StepExecutable};
+use crate::error::{Error, Result};
+
+/// Thread-safe compile-once cache keyed by `(rules, neurons, batch)`.
+pub struct ExecCache {
+    rt: std::sync::Arc<PjRt>,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(usize, usize, usize), StepExecutable>>,
+    misses: Mutex<u64>,
+}
+
+impl ExecCache {
+    /// Create over a runtime and manifest.
+    pub fn new(rt: std::sync::Arc<PjRt>, manifest: Manifest) -> Self {
+        ExecCache { rt, manifest, cache: Mutex::new(HashMap::new()), misses: Mutex::new(0) }
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Runtime handle.
+    pub fn runtime(&self) -> &std::sync::Arc<PjRt> {
+        &self.rt
+    }
+
+    /// Get-or-compile the executable for an exact `(r, n, b)`.
+    pub fn get(&self, r: usize, n: usize, b: usize) -> Result<StepExecutable> {
+        if let Some(&e) = self.cache.lock().unwrap().get(&(r, n, b)) {
+            return Ok(e);
+        }
+        let entry = self
+            .manifest
+            .step_entries(r, n)
+            .into_iter()
+            .find(|e| e.batch == b)
+            .ok_or_else(|| {
+                Error::artifact(format!(
+                    "no artifact for r={r} n={n} b={b} ({})",
+                    self.manifest.describe()
+                ))
+            })?;
+        let path: &Path = &entry.path;
+        let exec = self.rt.compile_step(path)?;
+        *self.misses.lock().unwrap() += 1;
+        self.cache.lock().unwrap().insert((r, n, b), exec);
+        Ok(exec)
+    }
+
+    /// Number of distinct artifacts compiled so far.
+    pub fn compiled_count(&self) -> u64 {
+        *self.misses.lock().unwrap()
+    }
+
+    /// Batch capacities available for `(r, n)` per the manifest.
+    pub fn capacities(&self, r: usize, n: usize) -> Vec<usize> {
+        self.manifest.step_entries(r, n).iter().map(|e| e.batch).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest_missing() -> Manifest {
+        Manifest::parse(
+            &PathBuf::from("/nonexistent"),
+            r#"{"entries":[{"r":5,"n":3,"b":1,"path":"missing.hlo.txt"}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn miss_on_unknown_shape() {
+        let rt = PjRt::cpu().unwrap();
+        let c = ExecCache::new(rt, manifest_missing());
+        let err = c.get(9, 9, 1).unwrap_err();
+        assert!(err.to_string().contains("no artifact"));
+        assert_eq!(c.compiled_count(), 0);
+    }
+
+    #[test]
+    fn compile_failure_propagates() {
+        let rt = PjRt::cpu().unwrap();
+        let c = ExecCache::new(rt, manifest_missing());
+        assert!(c.get(5, 3, 1).is_err(), "artifact file does not exist");
+    }
+
+    #[test]
+    fn capacities_reflect_manifest() {
+        let rt = PjRt::cpu().unwrap();
+        let c = ExecCache::new(rt, manifest_missing());
+        assert_eq!(c.capacities(5, 3), vec![1]);
+        assert!(c.capacities(1, 1).is_empty());
+    }
+}

@@ -1,0 +1,218 @@
+//! The artifact manifest (`artifacts/manifest.json`).
+//!
+//! `python/compile/aot.py` lowers the step program at a grid of shapes and
+//! records every artifact here. The Rust side never guesses shapes: it
+//! reads this manifest, picks buckets, and compiles lazily.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::JsonValue;
+
+/// One lowered step program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepEntry {
+    /// Artifact kind: `step` (single transition) or `replay` (K-step scan).
+    pub kind: String,
+    /// Rule count the program was lowered for.
+    pub rules: usize,
+    /// Neuron count.
+    pub neurons: usize,
+    /// Batch capacity.
+    pub batch: usize,
+    /// Scan length for `replay` programs (0 for plain steps).
+    pub steps: usize,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+    /// Kernel variant (`fused`, `matmul`, `pallas`); informational.
+    pub variant: String,
+    /// Estimated VMEM footprint in bytes (from aot.py's BlockSpec report).
+    pub vmem_bytes: u64,
+    /// FLOPs per invocation (2·B·R·N for the matmul core).
+    pub flops: u64,
+}
+
+impl StepEntry {
+    fn key(&self) -> (String, usize, usize, usize, usize) {
+        (self.kind.clone(), self.rules, self.neurons, self.batch, self.steps)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    dir: PathBuf,
+    entries: Vec<StepEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Manifest::parse(dir, &text)
+    }
+
+    /// Load from the conventional location (`$SNAPSE_ARTIFACTS` or
+    /// `./artifacts`), if present.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("SNAPSE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Manifest::load(Path::new(&dir))
+    }
+
+    /// Parse manifest JSON rooted at `dir`.
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = JsonValue::parse(text)?;
+        let entries_json = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| Error::artifact("manifest missing `entries` array"))?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for (i, e) in entries_json.iter().enumerate() {
+            let field = |k: &str| -> Result<usize> {
+                e.get(k)
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| Error::artifact(format!("entry {i}: missing/invalid `{k}`")))
+            };
+            let rel = e
+                .get("path")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::artifact(format!("entry {i}: missing `path`")))?;
+            entries.push(StepEntry {
+                kind: e.get("kind").and_then(|x| x.as_str()).unwrap_or("step").to_string(),
+                rules: field("r")?,
+                neurons: field("n")?,
+                batch: field("b")?,
+                steps: e.get("k").and_then(|x| x.as_usize()).unwrap_or(0),
+                path: dir.join(rel),
+                variant: e
+                    .get("variant")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("fused")
+                    .to_string(),
+                vmem_bytes: e.get("vmem_bytes").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+                flops: e.get("flops").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            });
+        }
+        entries.sort_by_key(|e| e.key());
+        entries.dedup_by_key(|e| e.key());
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Root directory of the artifacts.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All entries (sorted by `(r, n, b)`).
+    pub fn entries(&self) -> &[StepEntry] {
+        &self.entries
+    }
+
+    /// Step artifacts for an exact `(R, N)`, ascending batch.
+    pub fn step_entries(&self, rules: usize, neurons: usize) -> Vec<&StepEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "step" && e.rules == rules && e.neurons == neurons)
+            .collect()
+    }
+
+    /// Replay (K-step scan) artifacts for an exact `(R, N)`, ascending K.
+    pub fn replay_entries(&self, rules: usize, neurons: usize) -> Vec<&StepEntry> {
+        let mut v: Vec<&StepEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "replay" && e.rules == rules && e.neurons == neurons)
+            .collect();
+        v.sort_by_key(|e| e.steps);
+        v
+    }
+
+    /// Smallest lowered `(R', N') ≥ (R, N)` usable with zero-padding of
+    /// rules/neurons (generic buckets). Returns entries grouped by that
+    /// shape, ascending batch.
+    pub fn padded_entries(&self, rules: usize, neurons: usize) -> Vec<&StepEntry> {
+        // Find the minimal (r', n') covering the request.
+        let best = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "step" && e.rules >= rules && e.neurons >= neurons)
+            .map(|e| (e.rules, e.neurons))
+            .min();
+        match best {
+            None => Vec::new(),
+            Some((r, n)) => self.step_entries(r, n),
+        }
+    }
+
+    /// One-line summary for error messages.
+    pub fn describe(&self) -> String {
+        if self.entries.is_empty() {
+            return "no entries".to_string();
+        }
+        let shapes: Vec<String> = {
+            let mut set: Vec<(usize, usize)> =
+                self.entries.iter().map(|e| (e.rules, e.neurons)).collect();
+            set.dedup();
+            set.iter().map(|(r, n)| format!("r{r}n{n}")).collect()
+        };
+        format!("{} entries over shapes [{}]", self.entries.len(), shapes.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"kind":"step","r":5,"n":3,"b":8,"path":"step_r5_n3_b8.hlo.txt","variant":"fused","vmem_bytes":4096,"flops":240},
+        {"kind":"step","r":5,"n":3,"b":1,"path":"step_r5_n3_b1.hlo.txt"},
+        {"kind":"step","r":16,"n":16,"b":32,"path":"step_r16_n16_b32.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_sort() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert_eq!(m.entries().len(), 3);
+        let e = m.step_entries(5, 3);
+        assert_eq!(e.len(), 2);
+        assert_eq!(e[0].batch, 1, "ascending batch");
+        assert_eq!(e[1].batch, 8);
+        assert_eq!(e[1].path, Path::new("/x/step_r5_n3_b8.hlo.txt"));
+        assert_eq!(e[1].vmem_bytes, 4096);
+    }
+
+    #[test]
+    fn missing_shape_is_empty() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert!(m.step_entries(7, 7).is_empty());
+    }
+
+    #[test]
+    fn padded_lookup_finds_cover() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        let e = m.padded_entries(7, 7);
+        assert_eq!(e.len(), 1);
+        assert_eq!((e[0].rules, e[0].neurons), (16, 16));
+        // exact shape preferred when it exists
+        let e = m.padded_entries(5, 3);
+        assert_eq!((e[0].rules, e[0].neurons), (5, 3));
+    }
+
+    #[test]
+    fn describe_and_errors() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert!(m.describe().contains("3 entries"));
+        assert!(Manifest::parse(Path::new("/x"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/x"), r#"{"entries":[{"r":1}]}"#).is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/definitely/missing")).is_err());
+    }
+}

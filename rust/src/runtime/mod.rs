@@ -1,0 +1,319 @@
+//! The PJRT runtime service.
+//!
+//! Loads AOT artifacts (`artifacts/*.hlo.txt`, produced once by
+//! `python/compile/aot.py`) and executes them. The `xla` crate's client is
+//! `Rc`-based and **not** thread-safe, so all XLA interaction is confined
+//! to one dedicated service thread; [`PjRt`] is a cheap, `Send + Sync`
+//! handle that forwards compile/execute requests over a channel. This
+//! mirrors the paper's host/device split: the coordinator (host) owns
+//! logic and enumeration, the runtime thread (device proxy) owns bulk
+//! arithmetic.
+
+mod cache;
+mod manifest;
+
+pub use cache::ExecCache;
+pub use manifest::{Manifest, StepEntry};
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+use crate::error::{Error, Result};
+
+/// Handle to a compiled executable living on the runtime thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StepExecutable(usize);
+
+/// Handle to an f32 array kept resident on the device (uploaded once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceBuffer(usize);
+
+/// One argument to an executable: host data (uploaded per call) or a
+/// device-resident buffer (uploaded once via [`PjRt::upload`] — how the
+/// transition matrix M_Π stays on the device across steps, removing the
+/// per-call traffic the paper's §3.1 worries about).
+#[derive(Debug, Clone)]
+pub enum Arg {
+    /// Row-major payload + dims, transferred host→device for this call.
+    Host {
+        /// Row-major payload.
+        data: Vec<f32>,
+        /// Dimensions.
+        dims: Vec<usize>,
+    },
+    /// Previously uploaded device-resident array.
+    Device(DeviceBuffer),
+}
+
+enum Request {
+    Compile { path: PathBuf, reply: mpsc::Sender<Result<StepExecutable>> },
+    Upload { data: Vec<f32>, dims: Vec<usize>, reply: mpsc::Sender<Result<DeviceBuffer>> },
+    Execute { exec: StepExecutable, args: Vec<Arg>, reply: mpsc::Sender<Result<Vec<f32>>> },
+    Stats { reply: mpsc::Sender<RuntimeStats> },
+    Shutdown,
+}
+
+/// Counters maintained by the runtime thread.
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeStats {
+    /// Number of compile calls served.
+    pub compiles: u64,
+    /// Number of execute calls served.
+    pub executes: u64,
+    /// Total f32 elements transferred host→device.
+    pub elements_in: u64,
+    /// Total f32 elements transferred device→host.
+    pub elements_out: u64,
+}
+
+/// `Send + Sync` handle to the XLA service thread.
+pub struct PjRt {
+    // `mpsc::Sender` is `Send` but not `Sync`; the mutex makes the handle
+    // shareable across coordinator workers (send is a few ns, uncontended).
+    tx: std::sync::Mutex<mpsc::Sender<Request>>,
+    join: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+    platform: String,
+}
+
+impl PjRt {
+    /// Start the runtime service on the PJRT CPU client.
+    pub fn cpu() -> Result<std::sync::Arc<PjRt>> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+        let join = std::thread::Builder::new()
+            .name("xla-runtime".into())
+            .spawn(move || service_loop(rx, ready_tx))
+            .map_err(|e| Error::runtime(format!("spawn xla-runtime: {e}")))?;
+        let platform = ready_rx
+            .recv()
+            .map_err(|_| Error::runtime("xla-runtime thread died during init"))??;
+        Ok(std::sync::Arc::new(PjRt {
+            tx: std::sync::Mutex::new(tx),
+            join: std::sync::Mutex::new(Some(join)),
+            platform,
+        }))
+    }
+
+    /// PJRT platform name (e.g. `cpu`).
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Load + compile an HLO-text artifact; returns a handle.
+    pub fn compile_step(&self, path: &Path) -> Result<StepExecutable> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Compile { path: path.to_path_buf(), reply })
+            .map_err(|_| Error::runtime("xla-runtime thread gone"))?;
+        rx.recv().map_err(|_| Error::runtime("xla-runtime dropped reply"))?
+    }
+
+    /// Upload an f32 array once; the returned handle can be passed to any
+    /// number of subsequent executions as [`Arg::Device`].
+    pub fn upload(&self, data: Vec<f32>, dims: Vec<usize>) -> Result<DeviceBuffer> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Upload { data, dims, reply })
+            .map_err(|_| Error::runtime("xla-runtime thread gone"))?;
+        rx.recv().map_err(|_| Error::runtime("xla-runtime dropped reply"))?
+    }
+
+    /// Execute an arbitrary compiled program with f32 array args; returns
+    /// the flattened first output (programs are lowered with
+    /// `return_tuple=True` and a single result).
+    pub fn execute_f32(&self, exec: StepExecutable, args: Vec<Arg>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Execute { exec, args, reply })
+            .map_err(|_| Error::runtime("xla-runtime thread gone"))?;
+        rx.recv().map_err(|_| Error::runtime("xla-runtime dropped reply"))?
+    }
+
+    /// Execute a step program: `C' = step(S, M, C)` with
+    /// `S: B×R` (host, per call), `M` (device-resident), `C: B×N` (host)
+    /// → `C': B×N`. Buffers `s` and `c` are consumed (no extra copy).
+    pub fn execute_step(
+        &self,
+        exec: &StepExecutable,
+        s: Vec<f32>,
+        m: DeviceBuffer,
+        c: Vec<f32>,
+        b: usize,
+        r: usize,
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(s.len(), b * r);
+        debug_assert_eq!(c.len(), b * n);
+        let out = self.execute_f32(
+            *exec,
+            vec![
+                Arg::Host { data: s, dims: vec![b, r] },
+                Arg::Device(m),
+                Arg::Host { data: c, dims: vec![b, n] },
+            ],
+        )?;
+        if out.len() != b * n {
+            return Err(Error::shape(format!("step output {b}x{n}"), format!("{}", out.len())));
+        }
+        Ok(out)
+    }
+
+    /// Fetch runtime counters.
+    pub fn stats(&self) -> RuntimeStats {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.lock().unwrap().send(Request::Stats { reply }).is_err() {
+            return RuntimeStats::default();
+        }
+        rx.recv().unwrap_or_default()
+    }
+}
+
+impl Drop for PjRt {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The service loop: owns the (non-Send) client and all executables.
+fn service_loop(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<String>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(c.platform_name()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(Error::runtime(format!("PjRtClient::cpu: {e}"))));
+            return;
+        }
+    };
+    let mut execs: Vec<xla::PjRtLoadedExecutable> = Vec::new();
+    let mut buffers: Vec<xla::PjRtBuffer> = Vec::new();
+    let mut stats = RuntimeStats::default();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Request::Compile { path, reply } => {
+                let result = (|| -> Result<StepExecutable> {
+                    let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                        Error::artifact(format!("load {}: {e}", path.display()))
+                    })?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| Error::runtime(format!("compile {}: {e}", path.display())))?;
+                    execs.push(exe);
+                    stats.compiles += 1;
+                    Ok(StepExecutable(execs.len() - 1))
+                })();
+                let _ = reply.send(result);
+            }
+            Request::Upload { data, dims, reply } => {
+                let result = (|| -> Result<DeviceBuffer> {
+                    let buf = client
+                        .buffer_from_host_buffer::<f32>(&data, &dims, None)
+                        .map_err(|e| Error::runtime(format!("upload: {e}")))?;
+                    stats.elements_in += data.len() as u64;
+                    buffers.push(buf);
+                    Ok(DeviceBuffer(buffers.len() - 1))
+                })();
+                let _ = reply.send(result);
+            }
+            Request::Execute { exec, args, reply } => {
+                let result = (|| -> Result<Vec<f32>> {
+                    let exe = execs
+                        .get(exec.0)
+                        .ok_or_else(|| Error::runtime(format!("bad exec id {}", exec.0)))?;
+                    // Realize every arg as a device buffer; host args are
+                    // transferred now, device args are already resident.
+                    let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+                    let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+                    for a in &args {
+                        match a {
+                            Arg::Host { data, dims } => {
+                                stats.elements_in += data.len() as u64;
+                                let buf = client
+                                    .buffer_from_host_buffer::<f32>(data, dims, None)
+                                    .map_err(|e| Error::runtime(format!("transfer: {e}")))?;
+                                owned.push(buf);
+                            }
+                            Arg::Device(_) => {}
+                        }
+                    }
+                    let mut owned_it = owned.iter();
+                    for a in &args {
+                        match a {
+                            Arg::Host { .. } => refs.push(owned_it.next().unwrap()),
+                            Arg::Device(id) => {
+                                let buf = buffers.get(id.0).ok_or_else(|| {
+                                    Error::runtime(format!("bad buffer id {}", id.0))
+                                })?;
+                                refs.push(buf);
+                            }
+                        }
+                    }
+                    let out = exe
+                        .execute_b::<&xla::PjRtBuffer>(&refs)
+                        .map_err(|e| Error::runtime(format!("execute: {e}")))?;
+                    let lit = out[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| Error::runtime(format!("readback: {e}")))?;
+                    // Programs are lowered with return_tuple=True → 1-tuple.
+                    let first = lit
+                        .to_tuple1()
+                        .map_err(|e| Error::runtime(format!("tuple unwrap: {e}")))?;
+                    let v = first
+                        .to_vec::<f32>()
+                        .map_err(|e| Error::runtime(format!("to_vec: {e}")))?;
+                    stats.executes += 1;
+                    stats.elements_out += v.len() as u64;
+                    Ok(v)
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need a live PJRT client and artifacts live in
+    // tests/backend_equiv.rs; here we only exercise the handle plumbing
+    // that doesn't require artifacts.
+
+    #[test]
+    fn cpu_runtime_boots_and_reports_platform() {
+        let rt = PjRt::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+        let st = rt.stats();
+        assert_eq!(st.compiles, 0);
+        assert_eq!(st.executes, 0);
+    }
+
+    #[test]
+    fn compile_missing_artifact_errors() {
+        let rt = PjRt::cpu().unwrap();
+        let err = rt.compile_step(Path::new("/nonexistent/х.hlo.txt")).unwrap_err();
+        assert!(err.to_string().contains("artifact"), "{err}");
+    }
+
+    #[test]
+    fn handle_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjRt>();
+        assert_send_sync::<StepExecutable>();
+    }
+}

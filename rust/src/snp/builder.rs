@@ -1,0 +1,126 @@
+//! Fluent construction of SN P systems.
+//!
+//! ```
+//! use snapse::snp::{Rule, SystemBuilder};
+//!
+//! // The paper's Figure-1 system Π.
+//! let sys = SystemBuilder::new("pi")
+//!     .neuron_labeled("σ1", 2, vec![Rule::threshold_guarded(2, 1, 1), Rule::b3(2)])
+//!     .neuron_labeled("σ2", 1, vec![Rule::b3(1)])
+//!     .neuron_labeled("σ3", 1, vec![Rule::b3(1), Rule::b3(2)])
+//!     .synapses(&[(0, 1), (0, 2), (1, 0), (1, 2)])
+//!     .output(2)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(sys.num_rules(), 5);
+//! ```
+
+use super::neuron::Neuron;
+use super::rule::Rule;
+use super::system::{NeuronId, SnpSystem};
+use super::validate::validate;
+use crate::error::Result;
+
+/// Builder for [`SnpSystem`]; validates on [`SystemBuilder::build`].
+#[derive(Debug, Default)]
+pub struct SystemBuilder {
+    name: String,
+    neurons: Vec<Neuron>,
+    synapses: Vec<(NeuronId, NeuronId)>,
+    input: Option<NeuronId>,
+    output: Option<NeuronId>,
+}
+
+impl SystemBuilder {
+    /// Start a named system.
+    pub fn new(name: impl Into<String>) -> Self {
+        SystemBuilder { name: name.into(), ..Default::default() }
+    }
+
+    /// Add a neuron; returns the builder (neuron ids are assigned in call
+    /// order, starting at 0).
+    pub fn neuron(mut self, initial_spikes: u64, rules: Vec<Rule>) -> Self {
+        self.neurons.push(Neuron::new(initial_spikes, rules));
+        self
+    }
+
+    /// Add a labeled neuron.
+    pub fn neuron_labeled(
+        mut self,
+        label: impl Into<String>,
+        initial_spikes: u64,
+        rules: Vec<Rule>,
+    ) -> Self {
+        self.neurons.push(Neuron::labeled(label, initial_spikes, rules));
+        self
+    }
+
+    /// Add one synapse.
+    pub fn synapse(mut self, from: NeuronId, to: NeuronId) -> Self {
+        self.synapses.push((from, to));
+        self
+    }
+
+    /// Add many synapses.
+    pub fn synapses(mut self, edges: &[(NeuronId, NeuronId)]) -> Self {
+        self.synapses.extend_from_slice(edges);
+        self
+    }
+
+    /// Mark the input neuron.
+    pub fn input(mut self, id: NeuronId) -> Self {
+        self.input = Some(id);
+        self
+    }
+
+    /// Mark the output neuron.
+    pub fn output(mut self, id: NeuronId) -> Self {
+        self.output = Some(id);
+        self
+    }
+
+    /// Validate and build.
+    pub fn build(self) -> Result<SnpSystem> {
+        let sys = SnpSystem::new(self.name, self.neurons, self.synapses, self.input, self.output);
+        validate(&sys)?;
+        Ok(sys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_assigns_ids_in_order() {
+        let s = SystemBuilder::new("t")
+            .neuron(1, vec![Rule::b3(1)])
+            .neuron(0, vec![])
+            .synapse(0, 1)
+            .build()
+            .unwrap();
+        assert_eq!(s.num_neurons(), 2);
+        assert!(s.has_synapse(0, 1));
+    }
+
+    #[test]
+    fn builder_rejects_bad_synapse() {
+        let e = SystemBuilder::new("t")
+            .neuron(1, vec![Rule::b3(1)])
+            .synapse(0, 5)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("synapse"));
+    }
+
+    #[test]
+    fn builder_rejects_self_loop() {
+        let e = SystemBuilder::new("t")
+            .neuron(1, vec![Rule::b3(1)])
+            .neuron(1, vec![Rule::b3(1)])
+            .synapse(1, 1)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("self-loop"));
+    }
+}

@@ -1,0 +1,32 @@
+//! The SN P system model (paper Definition 1).
+//!
+//! An SN P system **without delays** is `Π = (O, σ₁…σₘ, syn, in, out)` with
+//! a single-object alphabet `O = {a}`, neurons `σᵢ = (nᵢ, Rᵢ)` holding an
+//! initial spike count and a finite rule set, a synapse digraph `syn`, and
+//! optional input/output neurons. Rules are:
+//!
+//! - **(b-1) spiking**: `E/aᶜ → aᵖ` — applicable when the neuron's spike
+//!   count `k` satisfies the guard (classically `aᵏ ∈ L(E)` and `k ≥ c`);
+//!   consumes `c`, sends `p` spikes along every outgoing synapse.
+//! - **(b-2) forgetting**: `aˢ → λ` — applicable when `k == s`; consumes
+//!   `s`, produces nothing.
+//! - **(b-3)**: `aᵏ → a` with `E = aᶜ, k ≥ c` — the form the paper's
+//!   simulator implements; we model its guard as [`Guard::Threshold`]
+//!   (validated against the paper's published §5 trace).
+//!
+//! The guard generalization lives in [`regex`] (unary regular expressions
+//! compiled to semilinear sets), covering the paper's "future work" item.
+
+mod builder;
+mod neuron;
+pub mod regex;
+mod rule;
+mod system;
+mod validate;
+
+pub use builder::SystemBuilder;
+pub use neuron::Neuron;
+pub use regex::{SemilinearSet, UnaryRegex};
+pub use rule::{Guard, Rule, RuleKind};
+pub use system::{NeuronId, RuleId, SnpSystem};
+pub use validate::validate;

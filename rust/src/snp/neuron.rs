@@ -1,0 +1,60 @@
+//! Neurons: `σᵢ = (nᵢ, Rᵢ)`.
+
+use super::rule::Rule;
+
+/// A neuron — an initial spike count plus an ordered rule list.
+///
+/// Rule order matters: the paper imposes a *total order* on all rules in
+/// the system (rows of the transition matrix); within a neuron the order
+/// here is the neuron-local segment of that total order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Neuron {
+    /// Human-readable label (used in reports/DOT; defaults to `σ{i}`).
+    pub label: String,
+    /// Initial number of spikes `nᵢ ≥ 0`.
+    pub initial_spikes: u64,
+    /// The neuron's rules, in total-order sequence.
+    pub rules: Vec<Rule>,
+}
+
+impl Neuron {
+    /// Neuron with a default label.
+    pub fn new(initial_spikes: u64, rules: Vec<Rule>) -> Self {
+        Neuron { label: String::new(), initial_spikes, rules }
+    }
+
+    /// Neuron with an explicit label.
+    pub fn labeled(label: impl Into<String>, initial_spikes: u64, rules: Vec<Rule>) -> Self {
+        Neuron { label: label.into(), initial_spikes, rules }
+    }
+
+    /// Indices (neuron-local) of rules applicable at spike count `k`.
+    pub fn applicable_rules(&self, k: u64) -> Vec<usize> {
+        self.rules
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.applicable(k))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applicable_rules_filters() {
+        // Π's neuron 1: a^2/a→a and a^2→a — both need k ≥ 2.
+        let n = Neuron::new(2, vec![Rule::threshold_guarded(2, 1, 1), Rule::b3(2)]);
+        assert_eq!(n.applicable_rules(2), vec![0, 1]);
+        assert_eq!(n.applicable_rules(1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn labels() {
+        let n = Neuron::labeled("out", 0, vec![Rule::b3(1)]);
+        assert_eq!(n.label, "out");
+        assert_eq!(n.initial_spikes, 0);
+    }
+}

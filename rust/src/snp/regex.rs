@@ -1,0 +1,850 @@
+//! Unary regular expressions over the alphabet `{a}` and their semilinear
+//! normal form.
+//!
+//! Rule guards in SN P systems are regular expressions `E` over a single
+//! letter. Languages over a unary alphabet are characterized by their
+//! length sets, and regular unary languages are exactly the **semilinear**
+//! (ultimately periodic) subsets of ℕ: finite unions of arithmetic
+//! progressions `{offset + period·t | t ≥ 0}`. Compiling `E` to that normal
+//! form gives O(#progressions) membership tests — no automaton needed on
+//! the hot path — and makes equality/containment decidable for tests.
+//!
+//! Syntax accepted by [`UnaryRegex::parse`]:
+//!
+//! ```text
+//! expr    := term ('|' term)*          union
+//! term    := factor*                   concatenation (length addition)
+//! factor  := atom ('*' | '+' | '^' INT)?
+//! atom    := 'a' | '(' expr ')'
+//! ```
+//!
+//! Examples: `a^2`, `a(aa)*` (odd counts), `a^3(a^2)+`, `a*|a^5`.
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// An arithmetic progression `{offset + period·t | t ≥ 0}`.
+/// `period == 0` denotes the singleton `{offset}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Progression {
+    /// First element of the progression.
+    pub offset: u64,
+    /// Common difference; 0 for singletons.
+    pub period: u64,
+}
+
+impl Progression {
+    /// Singleton `{n}`.
+    pub fn singleton(n: u64) -> Self {
+        Progression { offset: n, period: 0 }
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, n: u64) -> bool {
+        if n < self.offset {
+            return false;
+        }
+        if self.period == 0 {
+            return n == self.offset;
+        }
+        (n - self.offset) % self.period == 0
+    }
+}
+
+/// A semilinear subset of ℕ: a finite union of [`Progression`]s, kept in a
+/// canonical (sorted, deduplicated, subsumption-reduced) form.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct SemilinearSet {
+    progs: Vec<Progression>,
+}
+
+impl SemilinearSet {
+    /// The empty set.
+    pub fn empty() -> Self {
+        SemilinearSet { progs: Vec::new() }
+    }
+
+    /// The singleton `{n}`.
+    pub fn singleton(n: u64) -> Self {
+        SemilinearSet { progs: vec![Progression::singleton(n)] }
+    }
+
+    /// `{offset + period·t | t ≥ 0}`.
+    pub fn progression(offset: u64, period: u64) -> Self {
+        SemilinearSet { progs: vec![Progression { offset, period }] }.normalized()
+    }
+
+    /// All `n ≥ lo` (i.e. `{lo, lo+1, …}`) — the paper's threshold guard.
+    pub fn at_least(lo: u64) -> Self {
+        SemilinearSet::progression(lo, 1)
+    }
+
+    /// Build from raw progressions.
+    pub fn from_progressions(progs: impl IntoIterator<Item = Progression>) -> Self {
+        SemilinearSet { progs: progs.into_iter().collect() }.normalized()
+    }
+
+    /// The underlying progressions (canonical order).
+    pub fn progressions(&self) -> &[Progression] {
+        &self.progs
+    }
+
+    /// True when no natural number is a member.
+    pub fn is_empty(&self) -> bool {
+        self.progs.is_empty()
+    }
+
+    /// Membership test — the hot-path operation.
+    #[inline]
+    pub fn contains(&self, n: u64) -> bool {
+        self.progs.iter().any(|p| p.contains(n))
+    }
+
+    /// Union of two sets.
+    pub fn union(&self, other: &SemilinearSet) -> SemilinearSet {
+        SemilinearSet {
+            progs: self.progs.iter().chain(other.progs.iter()).copied().collect(),
+        }
+        .normalized()
+    }
+
+    /// Minkowski sum `{x + y | x ∈ A, y ∈ B}` — concatenation of unary
+    /// languages adds lengths.
+    pub fn add(&self, other: &SemilinearSet) -> SemilinearSet {
+        let mut progs = Vec::with_capacity(self.progs.len() * other.progs.len());
+        for p in &self.progs {
+            for q in &other.progs {
+                progs.extend(sum_two(p, q));
+            }
+        }
+        SemilinearSet { progs }.normalized()
+    }
+
+    /// Kleene star: `A* = {0} ∪ A ∪ A+A ∪ …`.
+    pub fn star(&self) -> SemilinearSet {
+        self.plus().union(&SemilinearSet::singleton(0))
+    }
+
+    /// Kleene plus: one or more repetitions.
+    ///
+    /// For each progression with first element `o` and internal period `d`,
+    /// sums of `t ≥ 1` elements form `{t·o + period-multiples}`; the overall
+    /// closure has eventual period `g = gcd` over all offsets and periods.
+    /// We enumerate exactly (BFS over residues) up to the point where the
+    /// set becomes periodic, giving a provably correct normal form.
+    pub fn plus(&self) -> SemilinearSet {
+        if self.progs.is_empty() {
+            return SemilinearSet::empty();
+        }
+        // g = gcd of all offsets and periods = eventual period of A+.
+        let mut g = 0u64;
+        for p in &self.progs {
+            g = gcd(g, p.offset);
+            g = gcd(g, p.period);
+        }
+        if g == 0 {
+            // A = {0}; A+ = {0}.
+            return SemilinearSet::singleton(0);
+        }
+        // Every element of A+ is a multiple of g; work in units of g.
+        // Elements of A (in units): offsets o_i + d_i·t. A+ is closed under
+        // addition and generated by A. Beyond the Frobenius-style bound
+        // B = (max offset unit)² + (max unit)², membership stabilizes to
+        // "every multiple of g' " where g' = gcd of attainable units.
+        // Simpler exact approach: saturate reachable residue classes with a
+        // bounded dynamic program. Bound: max_base² + 2·max_base is enough
+        // for numerical semigroup conductors (Chicken McNugget bound on two
+        // generators; we saturate until closure with a safety margin).
+        let units: Vec<(u64, u64)> = self
+            .progs
+            .iter()
+            .map(|p| (p.offset / g, p.period / g))
+            .collect();
+        let max_base = units.iter().map(|&(o, _)| o).max().unwrap_or(0).max(1);
+        let bound = (max_base * max_base + 2 * max_base + 2) as usize;
+        // reachable[n] = n (in units) is a sum of ≥1 elements of A/g.
+        // Generators with period d contribute o, o+d, o+2d, ... — within the
+        // bound we only need o + k·d ≤ bound.
+        let mut gens: Vec<u64> = Vec::new();
+        for &(o, d) in &units {
+            if d == 0 {
+                if o as usize <= bound {
+                    gens.push(o);
+                }
+            } else {
+                let mut v = o;
+                while (v as usize) <= bound {
+                    gens.push(v);
+                    v += d;
+                }
+            }
+        }
+        gens.sort_unstable();
+        gens.dedup();
+        let mut reach = vec![false; bound + 1];
+        for &v in &gens {
+            if (v as usize) <= bound {
+                reach[v as usize] = true;
+            }
+        }
+        for n in 0..=bound {
+            if !reach[n] {
+                continue;
+            }
+            for &v in &gens {
+                let m = n + v as usize;
+                if m <= bound {
+                    reach[m] = true;
+                }
+            }
+        }
+        // Determine the tail period: beyond half the bound the reachable
+        // set should be periodic with period = gcd of generators.
+        let mut gp = 0u64;
+        for &v in &gens {
+            gp = gcd(gp, v);
+        }
+        // Degenerate: A ⊆ {0} in units ⇒ A+ = A.
+        if gens.is_empty() {
+            return self.clone();
+        }
+        let gp = gp.max(1);
+        // Find the frontier F after which every multiple of gp is reachable.
+        let frontier = {
+            let mut f = 0usize;
+            let mut n = bound;
+            loop {
+                let is_mult = (n as u64) % gp == 0;
+                if is_mult && !reach[n] {
+                    f = n + 1;
+                    break;
+                }
+                if n == 0 {
+                    break;
+                }
+                n -= 1;
+            }
+            f
+        };
+        // Emit singletons below the frontier + one progression for the tail.
+        let mut progs: Vec<Progression> = Vec::new();
+        for (n, &r) in reach.iter().enumerate().take(frontier.min(bound + 1)) {
+            if r {
+                progs.push(Progression::singleton(n as u64 * g));
+            }
+        }
+        // tail start: first multiple of gp at/after frontier
+        let tail_start = {
+            let f = frontier as u64;
+            f.div_ceil(gp) * gp
+        };
+        progs.push(Progression { offset: tail_start * g, period: gp * g });
+        SemilinearSet { progs }.normalized()
+    }
+
+    /// Smallest member, if any.
+    pub fn min(&self) -> Option<u64> {
+        self.progs.iter().map(|p| p.offset).min()
+    }
+
+    /// True if the set is finite (all progressions are singletons).
+    pub fn is_finite(&self) -> bool {
+        self.progs.iter().all(|p| p.period == 0)
+    }
+
+    /// Enumerate members `< limit` in increasing order (for tests/UI).
+    pub fn members_below(&self, limit: u64) -> Vec<u64> {
+        let mut v: Vec<u64> = (0..limit).filter(|&n| self.contains(n)).collect();
+        v.dedup();
+        v
+    }
+
+    /// Canonicalize: sort, dedup, drop progressions subsumed by another,
+    /// and coalesce singletons that extend a progression downward
+    /// (`{o} ∪ {o+d + d·t}` → `{o + d·t}`).
+    fn normalized(mut self) -> Self {
+        self.progs.sort_unstable();
+        self.progs.dedup();
+        let progs = std::mem::take(&mut self.progs);
+        let mut kept: Vec<Progression> = Vec::with_capacity(progs.len());
+        for p in progs {
+            let subsumed = kept.iter().any(|q| subsumes(q, &p));
+            if !subsumed {
+                kept.retain(|q| !subsumes(&p, q));
+                kept.push(p);
+            }
+        }
+        // coalesce: a singleton exactly one period below a progression
+        // extends it; iterate to fixpoint (each pass shrinks the list)
+        loop {
+            let mut changed = false;
+            'scan: for i in 0..kept.len() {
+                if kept[i].period == 0 {
+                    continue;
+                }
+                let (off, per) = (kept[i].offset, kept[i].period);
+                if off < per {
+                    continue;
+                }
+                for j in 0..kept.len() {
+                    if i != j && kept[j].period == 0 && kept[j].offset == off - per {
+                        kept[i].offset = off - per;
+                        kept.remove(j);
+                        changed = true;
+                        break 'scan;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        kept.sort_unstable();
+        SemilinearSet { progs: kept }
+    }
+}
+
+/// Exact Minkowski sum of two progressions.
+///
+/// With periods `d1, d2` the sum is `o1+o2 + {d1·t + d2·s | t,s ≥ 0}`, and
+/// the brace is the numerical semigroup ⟨d1, d2⟩ (after dividing by
+/// `g = gcd`): NOT simply `{k·g}` — it has gaps below the Frobenius
+/// conductor `(d1/g − 1)(d2/g − 1)`. We enumerate the sporadic elements
+/// exactly and emit one periodic tail from the conductor on.
+fn sum_two(p: &Progression, q: &Progression) -> Vec<Progression> {
+    let o = p.offset + q.offset;
+    if p.period == 0 && q.period == 0 {
+        return vec![Progression::singleton(o)];
+    }
+    if p.period == 0 || q.period == 0 {
+        return vec![Progression { offset: o, period: p.period.max(q.period) }];
+    }
+    let g = gcd(p.period, q.period);
+    let (u1, u2) = (p.period / g, q.period / g);
+    if u1 == 1 || u2 == 1 {
+        // one period divides the other: no gaps
+        return vec![Progression { offset: o, period: g }];
+    }
+    // conductor of ⟨u1, u2⟩ (coprime): all n ≥ (u1-1)(u2-1) representable
+    let conductor = ((u1 - 1) * (u2 - 1)) as usize;
+    let mut reach = vec![false; conductor + 1];
+    let mut t = 0u64;
+    while (t * u1) as usize <= conductor {
+        let mut v = t * u1;
+        while (v as usize) <= conductor {
+            reach[v as usize] = true;
+            v += u2;
+        }
+        t += 1;
+    }
+    let mut out: Vec<Progression> = reach
+        .iter()
+        .enumerate()
+        .take(conductor)
+        .filter(|&(_, &r)| r)
+        .map(|(n, _)| Progression::singleton(o + n as u64 * g))
+        .collect();
+    out.push(Progression { offset: o + conductor as u64 * g, period: g });
+    out
+}
+
+/// Does progression `a` contain every element of progression `b`?
+fn subsumes(a: &Progression, b: &Progression) -> bool {
+    if b.period == 0 {
+        return a.contains(b.offset);
+    }
+    if a.period == 0 {
+        return false;
+    }
+    // b ⊆ a  iff  b.offset ∈ a  and  a.period | b.period
+    a.contains(b.offset) && b.period % a.period == 0
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+impl fmt::Display for SemilinearSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.progs.is_empty() {
+            return write!(f, "∅");
+        }
+        let parts: Vec<String> = self
+            .progs
+            .iter()
+            .map(|p| {
+                if p.period == 0 {
+                    format!("{{{}}}", p.offset)
+                } else {
+                    format!("{{{}+{}t}}", p.offset, p.period)
+                }
+            })
+            .collect();
+        write!(f, "{}", parts.join("∪"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------------
+
+/// A parsed unary regular expression, carrying both the source text and the
+/// compiled [`SemilinearSet`] of word lengths.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct UnaryRegex {
+    source: String,
+    lengths: SemilinearSet,
+}
+
+impl UnaryRegex {
+    /// Parse an expression such as `a^2(a)*` or `a(aa)+|a^5`.
+    pub fn parse(expr: &str) -> Result<UnaryRegex> {
+        let mut p = RegexParser { s: expr.as_bytes(), i: 0, src: expr };
+        let set = p.expr()?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err(p.err("trailing characters"));
+        }
+        Ok(UnaryRegex { source: expr.to_string(), lengths: set })
+    }
+
+    /// The compiled length set `{n | aⁿ ∈ L(E)}`.
+    pub fn lengths(&self) -> &SemilinearSet {
+        &self.lengths
+    }
+
+    /// Membership: `aⁿ ∈ L(E)`.
+    #[inline]
+    pub fn matches(&self, n: u64) -> bool {
+        self.lengths.contains(n)
+    }
+
+    /// Original source text.
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+}
+
+impl fmt::Display for UnaryRegex {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.source)
+    }
+}
+
+struct RegexParser<'a> {
+    s: &'a [u8],
+    i: usize,
+    src: &'a str,
+}
+
+impl<'a> RegexParser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        Error::RegexParse { expr: self.src.to_string(), pos: self.i, msg: msg.to_string() }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn expr(&mut self) -> Result<SemilinearSet> {
+        let mut acc = self.term()?;
+        while self.peek() == Some(b'|') {
+            self.i += 1;
+            let rhs = self.term()?;
+            acc = acc.union(&rhs);
+        }
+        Ok(acc)
+    }
+
+    fn term(&mut self) -> Result<SemilinearSet> {
+        // empty term = empty word = {0}
+        let mut acc = SemilinearSet::singleton(0);
+        loop {
+            match self.peek() {
+                Some(b'a') | Some(b'(') => {
+                    let f = self.factor()?;
+                    acc = acc.add(&f);
+                }
+                _ => return Ok(acc),
+            }
+        }
+    }
+
+    fn factor(&mut self) -> Result<SemilinearSet> {
+        let base = self.atom()?;
+        match self.peek() {
+            Some(b'*') => {
+                self.i += 1;
+                Ok(base.star())
+            }
+            Some(b'+') => {
+                self.i += 1;
+                Ok(base.plus())
+            }
+            Some(b'^') => {
+                self.i += 1;
+                let n = self.integer()?;
+                // a^n = n-fold concatenation
+                let mut acc = SemilinearSet::singleton(0);
+                for _ in 0..n {
+                    acc = acc.add(&base);
+                }
+                // allow a^2* / a^2+ suffix
+                match self.peek() {
+                    Some(b'*') => {
+                        self.i += 1;
+                        Ok(acc.star())
+                    }
+                    Some(b'+') => {
+                        self.i += 1;
+                        Ok(acc.plus())
+                    }
+                    _ => Ok(acc),
+                }
+            }
+            _ => Ok(base),
+        }
+    }
+
+    fn atom(&mut self) -> Result<SemilinearSet> {
+        match self.peek() {
+            Some(b'a') => {
+                self.i += 1;
+                Ok(SemilinearSet::singleton(1))
+            }
+            Some(b'(') => {
+                self.i += 1;
+                let inner = self.expr()?;
+                if self.peek() != Some(b')') {
+                    return Err(self.err("expected ')'"));
+                }
+                self.i += 1;
+                Ok(inner)
+            }
+            _ => Err(self.err("expected 'a' or '('")),
+        }
+    }
+
+    fn integer(&mut self) -> Result<u64> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        if start == self.i {
+            return Err(self.err("expected integer after '^'"));
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .unwrap()
+            .parse()
+            .map_err(|_| self.err("integer overflow"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn lens(expr: &str, upto: u64) -> Vec<u64> {
+        UnaryRegex::parse(expr).unwrap().lengths().members_below(upto)
+    }
+
+    #[test]
+    fn atoms_and_powers() {
+        assert_eq!(lens("a", 5), vec![1]);
+        assert_eq!(lens("a^3", 10), vec![3]);
+        assert_eq!(lens("aa", 10), vec![2]);
+        assert_eq!(lens("a^2a", 10), vec![3]);
+    }
+
+    #[test]
+    fn star_plus() {
+        assert_eq!(lens("a*", 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(lens("a+", 5), vec![1, 2, 3, 4]);
+        assert_eq!(lens("(aa)*", 9), vec![0, 2, 4, 6, 8]);
+        assert_eq!(lens("(aa)+", 9), vec![2, 4, 6, 8]);
+        assert_eq!(lens("a(aa)*", 10), vec![1, 3, 5, 7, 9], "odd numbers");
+        assert_eq!(lens("a^2(a^3)*", 15), vec![2, 5, 8, 11, 14]);
+    }
+
+    #[test]
+    fn union() {
+        assert_eq!(lens("a|a^4", 6), vec![1, 4]);
+        assert_eq!(lens("a^2|a^3|a^5", 7), vec![2, 3, 5]);
+        // union with overlap canonicalizes: a* already covers a^3
+        let r = UnaryRegex::parse("a*|a^3").unwrap();
+        assert_eq!(*r.lengths(), SemilinearSet::at_least(0));
+        assert_eq!(r.lengths().progressions().len(), 1);
+    }
+
+    #[test]
+    fn two_generator_plus_frobenius() {
+        // (a^2|a^3)+ = {2,3,4,...} — 1 is the only unreachable positive sum.
+        assert_eq!(lens("(a^2|a^3)+", 10), vec![2, 3, 4, 5, 6, 7, 8, 9]);
+        // (a^3|a^5)+ : numerical semigroup <3,5> = {3,5,6,8,9,10,11,...}
+        assert_eq!(lens("(a^3|a^5)+", 13), vec![3, 5, 6, 8, 9, 10, 11, 12]);
+    }
+
+    #[test]
+    fn nested_groups() {
+        // ((aa)*a)+ — sums of odd numbers = all numbers ≥1
+        assert_eq!(lens("((aa)*a)+", 7), vec![1, 2, 3, 4, 5, 6]);
+        // (a^2(a^4)*)+ — sums of even numbers ≡ 2 mod 4... = all even ≥ 2
+        assert_eq!(lens("(a^2(a^4)*)+", 13), vec![2, 4, 6, 8, 10, 12]);
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        assert_eq!(lens("()", 3), vec![0], "empty group = empty word");
+        assert_eq!(lens("()*", 3), vec![0]);
+        assert_eq!(lens("a^0", 3), vec![0]);
+    }
+
+    #[test]
+    fn display_and_source_roundtrip() {
+        let r = UnaryRegex::parse("a^2(a)*").unwrap();
+        assert_eq!(r.to_string(), "a^2(a)*");
+        assert_eq!(format!("{}", r.lengths()), "{2+1t}");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(UnaryRegex::parse("b").is_err());
+        assert!(UnaryRegex::parse("(a").is_err());
+        assert!(UnaryRegex::parse("a^").is_err());
+        assert!(UnaryRegex::parse("a)").is_err());
+    }
+
+    #[test]
+    fn threshold_helper() {
+        let s = SemilinearSet::at_least(2);
+        assert!(!s.contains(0) && !s.contains(1));
+        assert!(s.contains(2) && s.contains(100));
+    }
+
+    #[test]
+    fn subsumption_reduces() {
+        // {3} ⊆ {1+2t}; union should keep one progression
+        let s = SemilinearSet::progression(1, 2).union(&SemilinearSet::singleton(3));
+        assert_eq!(s.progressions().len(), 1);
+        // {4} ⊄ {1+2t}
+        let s = SemilinearSet::progression(1, 2).union(&SemilinearSet::singleton(4));
+        assert_eq!(s.progressions().len(), 2);
+    }
+
+    #[test]
+    fn minkowski_sum() {
+        let a = SemilinearSet::progression(1, 2); // odd
+        let b = SemilinearSet::singleton(2);
+        let c = a.add(&b); // odd + 2 = odd ≥ 3
+        assert_eq!(c.members_below(10), vec![3, 5, 7, 9]);
+    }
+
+    /// Property test: the semilinear compilation agrees with a brute-force
+    /// NFA-style evaluator on randomly generated expressions.
+    #[test]
+    fn property_matches_brute_force() {
+        let seed = 0xC0FFEE;
+        let mut rng = Rng::new(seed);
+        for case in 0..300 {
+            let expr = random_expr(&mut rng, 3);
+            let parsed = match UnaryRegex::parse(&expr) {
+                Ok(p) => p,
+                Err(e) => panic!("seed {seed} case {case}: `{expr}` failed to parse: {e}"),
+            };
+            let truth = brute_force_lengths(&expr, 40);
+            for n in 0..40u64 {
+                assert_eq!(
+                    parsed.matches(n),
+                    truth.contains(&n),
+                    "seed {seed} case {case}: `{expr}` at n={n} (truth {truth:?}, got {})",
+                    parsed.lengths()
+                );
+            }
+        }
+    }
+
+    /// Random expression generator for the property test.
+    fn random_expr(rng: &mut Rng, depth: usize) -> String {
+        if depth == 0 || rng.chance(0.3) {
+            return match rng.range(0, 2) {
+                0 => "a".to_string(),
+                1 => format!("a^{}", rng.range(1, 5)),
+                _ => "aa".to_string(),
+            };
+        }
+        match rng.range(0, 4) {
+            0 => format!("{}{}", random_expr(rng, depth - 1), random_expr(rng, depth - 1)),
+            1 => format!("({})|({})", random_expr(rng, depth - 1), random_expr(rng, depth - 1)),
+            2 => format!("({})*", random_expr(rng, depth - 1)),
+            3 => format!("({})+", random_expr(rng, depth - 1)),
+            _ => format!("({})^{}", random_expr(rng, depth - 1), rng.range(0, 3)),
+        }
+    }
+
+    /// Brute force: dynamic programming over reachable lengths ≤ limit.
+    /// Mirrors the grammar exactly but operates on explicit length sets.
+    fn brute_force_lengths(expr: &str, limit: u64) -> Vec<u64> {
+        struct P<'a> {
+            s: &'a [u8],
+            i: usize,
+            limit: u64,
+        }
+        impl<'a> P<'a> {
+            fn peek(&mut self) -> Option<u8> {
+                while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+                    self.i += 1;
+                }
+                self.s.get(self.i).copied()
+            }
+            fn expr(&mut self) -> Vec<u64> {
+                let mut acc = self.term();
+                while self.peek() == Some(b'|') {
+                    self.i += 1;
+                    let rhs = self.term();
+                    acc.extend(rhs);
+                    acc.sort_unstable();
+                    acc.dedup();
+                }
+                acc
+            }
+            fn term(&mut self) -> Vec<u64> {
+                let mut acc = vec![0u64];
+                while matches!(self.peek(), Some(b'a') | Some(b'(')) {
+                    let f = self.factor();
+                    let mut next = Vec::new();
+                    for &x in &acc {
+                        for &y in &f {
+                            if x + y <= self.limit {
+                                next.push(x + y);
+                            }
+                        }
+                    }
+                    next.sort_unstable();
+                    next.dedup();
+                    acc = next;
+                }
+                acc
+            }
+            fn closure(&self, base: &[u64], include_zero: bool) -> Vec<u64> {
+                let mut reach = vec![false; self.limit as usize + 1];
+                let mut out = Vec::new();
+                if include_zero {
+                    reach[0] = true;
+                }
+                // BFS closure under addition of base elements (≥1 use)
+                let mut frontier: Vec<u64> = base.iter().copied().filter(|&x| x <= self.limit).collect();
+                for &x in &frontier {
+                    reach[x as usize] = true;
+                }
+                while let Some(x) = frontier.pop() {
+                    for &b in base {
+                        let y = x + b;
+                        if y <= self.limit && !reach[y as usize] {
+                            reach[y as usize] = true;
+                            frontier.push(y);
+                        }
+                    }
+                }
+                for (n, &r) in reach.iter().enumerate() {
+                    if r {
+                        out.push(n as u64);
+                    }
+                }
+                out
+            }
+            fn factor(&mut self) -> Vec<u64> {
+                let base = self.atom();
+                match self.peek() {
+                    Some(b'*') => {
+                        self.i += 1;
+                        self.closure(&base, true)
+                    }
+                    Some(b'+') => {
+                        self.i += 1;
+                        // A+ must include zero iff 0 ∈ A
+                        let z = base.contains(&0);
+                        self.closure(&base, z)
+                    }
+                    Some(b'^') => {
+                        self.i += 1;
+                        let mut n = 0u64;
+                        while self.peek().map(|c| c.is_ascii_digit()).unwrap_or(false) {
+                            n = n * 10 + (self.s[self.i] - b'0') as u64;
+                            self.i += 1;
+                        }
+                        let mut acc = vec![0u64];
+                        for _ in 0..n {
+                            let mut next = Vec::new();
+                            for &x in &acc {
+                                for &y in &base {
+                                    if x + y <= self.limit {
+                                        next.push(x + y);
+                                    }
+                                }
+                            }
+                            next.sort_unstable();
+                            next.dedup();
+                            acc = next;
+                        }
+                        match self.peek() {
+                            Some(b'*') => {
+                                self.i += 1;
+                                self.closure(&acc, true)
+                            }
+                            Some(b'+') => {
+                                self.i += 1;
+                                let z = acc.contains(&0);
+                                self.closure(&acc, z)
+                            }
+                            _ => acc,
+                        }
+                    }
+                    _ => base,
+                }
+            }
+            fn atom(&mut self) -> Vec<u64> {
+                match self.peek() {
+                    Some(b'a') => {
+                        self.i += 1;
+                        vec![1]
+                    }
+                    Some(b'(') => {
+                        self.i += 1;
+                        let inner = self.expr();
+                        assert_eq!(self.peek(), Some(b')'));
+                        self.i += 1;
+                        inner
+                    }
+                    c => panic!("bad atom {c:?}"),
+                }
+            }
+        }
+        let mut p = P { s: expr.as_bytes(), i: 0, limit };
+        p.expr()
+    }
+
+    /// `plus()` on sets whose A+ includes 0 iff 0 ∈ A.
+    #[test]
+    fn plus_zero_membership() {
+        let z = SemilinearSet::singleton(0);
+        assert!(z.plus().contains(0));
+        let one = SemilinearSet::singleton(1);
+        assert!(!one.plus().contains(0));
+        assert!(one.plus().contains(1));
+    }
+}

@@ -1,0 +1,202 @@
+//! Rules and applicability guards.
+
+use std::fmt;
+
+use super::regex::{SemilinearSet, UnaryRegex};
+
+/// The applicability guard of a rule — when may it fire, given the
+/// neuron's current spike count `k`?
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Guard {
+    /// The paper's (b-3) semantics: applicable iff `k ≥ c` where `c` is the
+    /// consumed count. Validated against the published §5 trace of Π (e.g.
+    /// a neuron holding 2 spikes may fire `a → a`).
+    Threshold(u64),
+    /// Classical `E = aᶜ` membership: applicable iff `k == c`.
+    Exact(u64),
+    /// Full (b-1) semantics: applicable iff `aᵏ ∈ L(E)` for a unary regular
+    /// expression `E`, compiled to a semilinear length set.
+    Regex(UnaryRegex),
+}
+
+impl Guard {
+    /// Does a neuron holding `k` spikes satisfy this guard?
+    #[inline]
+    pub fn admits(&self, k: u64) -> bool {
+        match self {
+            Guard::Threshold(c) => k >= *c,
+            Guard::Exact(c) => k == *c,
+            Guard::Regex(re) => re.matches(k),
+        }
+    }
+
+    /// The guard's length set as a semilinear set (for analysis/export).
+    pub fn lengths(&self) -> SemilinearSet {
+        match self {
+            Guard::Threshold(c) => SemilinearSet::at_least(*c),
+            Guard::Exact(c) => SemilinearSet::singleton(*c),
+            Guard::Regex(re) => re.lengths().clone(),
+        }
+    }
+}
+
+impl fmt::Display for Guard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Guard::Threshold(c) => write!(f, "a^{{≥{c}}}"),
+            Guard::Exact(c) => write!(f, "a^{c}"),
+            Guard::Regex(re) => write!(f, "{re}"),
+        }
+    }
+}
+
+/// Whether a rule spikes or forgets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RuleKind {
+    /// (b-1)/(b-3): produce `p ≥ 1` spikes along every outgoing synapse.
+    Spiking,
+    /// (b-2): `aˢ → λ` — remove spikes, produce nothing.
+    Forgetting,
+}
+
+/// A rule `E/aᶜ → aᵖ` (spiking) or `aˢ → λ` (forgetting).
+///
+/// `consumed` is `c` (resp. `s`); `produced` is `p` (0 for forgetting
+/// rules). The guard decides applicability from the neuron's spike count.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Rule {
+    /// Applicability guard (E).
+    pub guard: Guard,
+    /// Spikes consumed when the rule fires (`c`, or `s` for forgetting).
+    pub consumed: u64,
+    /// Spikes produced to each synaptic successor (`p`; 0 = forgetting).
+    pub produced: u64,
+}
+
+impl Rule {
+    /// The paper's (b-3) rule `aᵏ → a` with threshold guard `k ≥ c`:
+    /// consume `c`, produce 1.
+    pub fn b3(consumed: u64) -> Rule {
+        Rule { guard: Guard::Threshold(consumed), consumed, produced: 1 }
+    }
+
+    /// A (b-3)-style rule with explicit production `aᶜ → aᵖ` (threshold
+    /// guard), e.g. for spike multipliers.
+    pub fn threshold(consumed: u64, produced: u64) -> Rule {
+        Rule { guard: Guard::Threshold(consumed), consumed, produced }
+    }
+
+    /// Threshold-guarded rule whose guard minimum differs from its
+    /// consumption, the paper's `a^2/a → a` shape: `guard_min = 2`,
+    /// `consumed = 1`, `produced = p`.
+    pub fn threshold_guarded(guard_min: u64, consumed: u64, produced: u64) -> Rule {
+        Rule { guard: Guard::Threshold(guard_min), consumed, produced }
+    }
+
+    /// Classical spiking rule `E/aᶜ → aᵖ` with a regex guard.
+    pub fn spiking(expr: &str, consumed: u64, produced: u64) -> crate::Result<Rule> {
+        Ok(Rule { guard: Guard::Regex(UnaryRegex::parse(expr)?), consumed, produced })
+    }
+
+    /// Spiking rule with exact guard `aᶜ/aᶜ → aᵖ` — fires only at exactly
+    /// `consumed` spikes.
+    pub fn exact(consumed: u64, produced: u64) -> Rule {
+        Rule { guard: Guard::Exact(consumed), consumed, produced }
+    }
+
+    /// Forgetting rule `aˢ → λ` (classical exact guard).
+    pub fn forget(s: u64) -> Rule {
+        Rule { guard: Guard::Exact(s), consumed: s, produced: 0 }
+    }
+
+    /// Rule kind.
+    pub fn kind(&self) -> RuleKind {
+        if self.produced == 0 {
+            RuleKind::Forgetting
+        } else {
+            RuleKind::Spiking
+        }
+    }
+
+    /// Applicability at spike count `k`: guard holds **and** the neuron can
+    /// pay the consumption (`k ≥ consumed`, always implied by Threshold but
+    /// not by arbitrary regex guards).
+    #[inline]
+    pub fn applicable(&self, k: u64) -> bool {
+        self.guard.admits(k) && k >= self.consumed
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind() {
+            RuleKind::Forgetting => write!(f, "a^{} -> λ", self.consumed),
+            RuleKind::Spiking => {
+                write!(f, "{}/a^{} -> a", self.guard, self.consumed)?;
+                if self.produced != 1 {
+                    write!(f, "^{}", self.produced)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b3_threshold_semantics() {
+        // Paper: neuron 3 of Π holds 2 spikes; rule a→a (c=1) is applicable.
+        let r = Rule::b3(1);
+        assert!(r.applicable(1));
+        assert!(r.applicable(2));
+        assert!(!r.applicable(0));
+        let r2 = Rule::b3(2);
+        assert!(!r2.applicable(1));
+        assert!(r2.applicable(2) && r2.applicable(7));
+    }
+
+    #[test]
+    fn exact_guard() {
+        let r = Rule::exact(2, 1);
+        assert!(!r.applicable(1));
+        assert!(r.applicable(2));
+        assert!(!r.applicable(3));
+    }
+
+    #[test]
+    fn regex_guard_requires_payment() {
+        // guard matches k ∈ {0,2,4,...} but consumption is 2: k=0 must not fire
+        let r = Rule::spiking("(aa)*", 2, 1).unwrap();
+        assert!(!r.applicable(0), "cannot pay c=2 with k=0");
+        assert!(r.applicable(2));
+        assert!(!r.applicable(3));
+        assert!(r.applicable(4));
+    }
+
+    #[test]
+    fn forgetting_is_exact_and_produces_nothing() {
+        let r = Rule::forget(3);
+        assert_eq!(r.kind(), RuleKind::Forgetting);
+        assert!(r.applicable(3));
+        assert!(!r.applicable(4));
+        assert_eq!(r.produced, 0);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Rule::b3(2).to_string(), "a^{≥2}/a^2 -> a");
+        assert_eq!(Rule::forget(1).to_string(), "a^1 -> λ");
+        assert_eq!(Rule::threshold(1, 3).to_string(), "a^{≥1}/a^1 -> a^3");
+        let r = Rule::spiking("a(aa)*", 1, 1).unwrap();
+        assert_eq!(r.to_string(), "a(aa)*/a^1 -> a");
+    }
+
+    #[test]
+    fn guard_lengths_export() {
+        assert_eq!(Guard::Threshold(2).lengths().members_below(5), vec![2, 3, 4]);
+        assert_eq!(Guard::Exact(2).lengths().members_below(5), vec![2]);
+    }
+}

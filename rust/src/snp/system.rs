@@ -1,0 +1,280 @@
+//! The full SN P system `Π = (O, σ₁…σₘ, syn, in, out)`.
+
+use std::fmt;
+
+use super::neuron::Neuron;
+use super::rule::Rule;
+
+/// Index of a neuron within a system (0-based; the paper is 1-based).
+pub type NeuronId = usize;
+/// Index of a rule within the system's total rule order (0-based).
+pub type RuleId = usize;
+
+/// An SN P system without delays.
+///
+/// Synapses are stored both as an edge list (the paper's `syn` set) and as
+/// a CSR-style adjacency for O(out-degree) traversal. Rules carry a total
+/// order: rule `r` of neuron `j` occupies one global row of the transition
+/// matrix, in neuron order then neuron-local order, exactly as in the
+/// paper's Figure 1 numbering (1)–(5).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnpSystem {
+    /// System name (reports, artifacts).
+    pub name: String,
+    /// Neurons in index order.
+    pub neurons: Vec<Neuron>,
+    /// Synapse edge list `(from, to)`, deduplicated, no self-loops.
+    pub synapses: Vec<(NeuronId, NeuronId)>,
+    /// Optional input neuron (the paper's `in`).
+    pub input: Option<NeuronId>,
+    /// Optional output neuron (the paper's `out`); its spikes to the
+    /// environment define the system's result.
+    pub output: Option<NeuronId>,
+    /// CSR adjacency: `succ[adj_off[i]..adj_off[i+1]]` = successors of i.
+    adj_off: Vec<u32>,
+    succ: Vec<u32>,
+    /// Global rule order: `(neuron, local_rule_index)` per global row.
+    rule_index: Vec<(NeuronId, usize)>,
+    /// Per-neuron offset into the global rule order.
+    rule_off: Vec<u32>,
+}
+
+impl SnpSystem {
+    /// Assemble a system. Use [`super::SystemBuilder`] for a fluent API;
+    /// this constructor canonicalizes synapses and builds the indices.
+    pub fn new(
+        name: impl Into<String>,
+        neurons: Vec<Neuron>,
+        mut synapses: Vec<(NeuronId, NeuronId)>,
+        input: Option<NeuronId>,
+        output: Option<NeuronId>,
+    ) -> Self {
+        synapses.sort_unstable();
+        synapses.dedup();
+        let m = neurons.len();
+        // CSR adjacency
+        let mut adj_off = vec![0u32; m + 1];
+        for &(f, _) in &synapses {
+            adj_off[f + 1] += 1;
+        }
+        for i in 0..m {
+            adj_off[i + 1] += adj_off[i];
+        }
+        let mut succ = vec![0u32; synapses.len()];
+        let mut cursor = adj_off.clone();
+        for &(f, t) in &synapses {
+            succ[cursor[f] as usize] = t as u32;
+            cursor[f] += 1;
+        }
+        // global rule order
+        let mut rule_index = Vec::new();
+        let mut rule_off = Vec::with_capacity(m + 1);
+        rule_off.push(0u32);
+        for (j, n) in neurons.iter().enumerate() {
+            for l in 0..n.rules.len() {
+                rule_index.push((j, l));
+            }
+            rule_off.push(rule_index.len() as u32);
+        }
+        let mut sys = SnpSystem {
+            name: name.into(),
+            neurons,
+            synapses,
+            input,
+            output,
+            adj_off,
+            succ,
+            rule_index,
+            rule_off,
+        };
+        for (j, n) in sys.neurons.iter_mut().enumerate() {
+            if n.label.is_empty() {
+                n.label = format!("σ{}", j + 1);
+            }
+        }
+        sys
+    }
+
+    /// Number of neurons `m`.
+    #[inline]
+    pub fn num_neurons(&self) -> usize {
+        self.neurons.len()
+    }
+
+    /// Total number of rules across all neurons (matrix rows).
+    #[inline]
+    pub fn num_rules(&self) -> usize {
+        self.rule_index.len()
+    }
+
+    /// Successor neurons of `i` (targets of synapses out of `i`).
+    #[inline]
+    pub fn successors(&self, i: NeuronId) -> &[u32] {
+        &self.succ[self.adj_off[i] as usize..self.adj_off[i + 1] as usize]
+    }
+
+    /// Out-degree of neuron `i`.
+    #[inline]
+    pub fn out_degree(&self, i: NeuronId) -> usize {
+        (self.adj_off[i + 1] - self.adj_off[i]) as usize
+    }
+
+    /// Does the synapse `(from, to)` exist?
+    pub fn has_synapse(&self, from: NeuronId, to: NeuronId) -> bool {
+        self.successors(from).contains(&(to as u32))
+    }
+
+    /// Map a global rule id to `(neuron, local index)`.
+    #[inline]
+    pub fn rule_location(&self, rid: RuleId) -> (NeuronId, usize) {
+        self.rule_index[rid]
+    }
+
+    /// Global rule-id range `[start, end)` owned by neuron `j`.
+    #[inline]
+    pub fn rules_of(&self, j: NeuronId) -> std::ops::Range<usize> {
+        self.rule_off[j] as usize..self.rule_off[j + 1] as usize
+    }
+
+    /// The rule with global id `rid`.
+    #[inline]
+    pub fn rule(&self, rid: RuleId) -> &Rule {
+        let (j, l) = self.rule_index[rid];
+        &self.neurons[j].rules[l]
+    }
+
+    /// Iterate `(global_id, neuron, &rule)` in total order.
+    pub fn rules(&self) -> impl Iterator<Item = (RuleId, NeuronId, &Rule)> {
+        self.rule_index
+            .iter()
+            .enumerate()
+            .map(move |(rid, &(j, l))| (rid, j, &self.neurons[j].rules[l]))
+    }
+
+    /// Initial configuration vector `C₀ = (n₁, …, nₘ)`.
+    pub fn initial_config(&self) -> Vec<u64> {
+        self.neurons.iter().map(|n| n.initial_spikes).collect()
+    }
+
+    /// Largest `consumed`/`produced` across rules — used for bucket sizing
+    /// and overflow analysis.
+    pub fn max_rule_magnitude(&self) -> u64 {
+        self.rules()
+            .map(|(_, _, r)| r.consumed.max(r.produced))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl fmt::Display for SnpSystem {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "SN P system `{}`: {} neurons, {} rules, {} synapses",
+            self.name,
+            self.num_neurons(),
+            self.num_rules(),
+            self.synapses.len()
+        )?;
+        for (j, n) in self.neurons.iter().enumerate() {
+            let succs: Vec<String> = self
+                .successors(j)
+                .iter()
+                .map(|&t| self.neurons[t as usize].label.clone())
+                .collect();
+            let io = match (self.input == Some(j), self.output == Some(j)) {
+                (true, true) => " [in,out]",
+                (true, false) => " [in]",
+                (false, true) => " [out]",
+                _ => "",
+            };
+            writeln!(f, "  {}{io}: a^{} -> {{{}}}", n.label, n.initial_spikes, succs.join(","))?;
+            for (l, r) in n.rules.iter().enumerate() {
+                let rid = self.rule_off[j] as usize + l;
+                writeln!(f, "    ({}) {}", rid + 1, r)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snp::Rule;
+
+    fn pi() -> SnpSystem {
+        crate::generators::paper_pi()
+    }
+
+    #[test]
+    fn paper_pi_shape() {
+        let s = pi();
+        assert_eq!(s.num_neurons(), 3);
+        assert_eq!(s.num_rules(), 5);
+        assert_eq!(s.synapses.len(), 4);
+        assert_eq!(s.initial_config(), vec![2, 1, 1]);
+        assert_eq!(s.output, Some(2));
+    }
+
+    #[test]
+    fn rule_total_order_matches_paper() {
+        let s = pi();
+        // (1) a^2/a→a, (2) a^2→a in σ1; (3) a→a in σ2; (4) a→a, (5) a^2→a in σ3
+        assert_eq!(s.rule_location(0), (0, 0));
+        assert_eq!(s.rule_location(1), (0, 1));
+        assert_eq!(s.rule_location(2), (1, 0));
+        assert_eq!(s.rule_location(3), (2, 0));
+        assert_eq!(s.rule_location(4), (2, 1));
+        assert_eq!(s.rules_of(0), 0..2);
+        assert_eq!(s.rules_of(2), 3..5);
+        assert_eq!(s.rule(1).consumed, 2);
+    }
+
+    #[test]
+    fn adjacency_csr() {
+        let s = pi();
+        assert_eq!(s.successors(0), &[1, 2]);
+        assert_eq!(s.successors(1), &[0, 2]);
+        assert_eq!(s.successors(2), &[] as &[u32]);
+        assert!(s.has_synapse(0, 1));
+        assert!(!s.has_synapse(2, 0));
+        assert_eq!(s.out_degree(0), 2);
+        assert_eq!(s.out_degree(2), 0);
+    }
+
+    #[test]
+    fn synapse_dedup_and_labels() {
+        let s = SnpSystem::new(
+            "t",
+            vec![Neuron::new(1, vec![Rule::b3(1)]), Neuron::new(0, vec![])],
+            vec![(0, 1), (0, 1)],
+            None,
+            None,
+        );
+        assert_eq!(s.synapses.len(), 1);
+        assert_eq!(s.neurons[0].label, "σ1");
+    }
+
+    #[test]
+    fn display_contains_rules() {
+        let text = pi().to_string();
+        assert!(text.contains("3 neurons, 5 rules"));
+        assert!(text.contains("(1)"));
+        assert!(text.contains("[out]"));
+    }
+
+    #[test]
+    fn rules_iterator_order() {
+        let s = pi();
+        let ids: Vec<usize> = s.rules().map(|(rid, _, _)| rid).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        let neurons: Vec<usize> = s.rules().map(|(_, j, _)| j).collect();
+        assert_eq!(neurons, vec![0, 0, 1, 2, 2]);
+    }
+
+    #[test]
+    fn max_rule_magnitude() {
+        assert_eq!(pi().max_rule_magnitude(), 2);
+    }
+}

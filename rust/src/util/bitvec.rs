@@ -1,0 +1,160 @@
+//! Compact bit vector used for spiking vectors in hot paths.
+//!
+//! Spiking vectors are {0,1} strings over the system's rule ordering (the
+//! paper's §2.2). For small systems a `Vec<u8>` is fine, but exploration
+//! enumerates Ψ vectors per configuration, so the batcher stores them
+//! packed 64-per-word.
+
+/// A fixed-length packed bit vector.
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zero bit vector of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Build from an iterator of booleans.
+    pub fn from_bools(bits: impl IntoIterator<Item = bool>) -> Self {
+        let mut v = BitVec::zeros(0);
+        for b in bits {
+            v.push(b);
+        }
+        v
+    }
+
+    /// Length in bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the vector has zero length.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one bit.
+    pub fn push(&mut self, bit: bool) {
+        let (w, b) = (self.len / 64, self.len % 64);
+        if w == self.words.len() {
+            self.words.push(0);
+        }
+        if bit {
+            self.words[w] |= 1 << b;
+        }
+        self.len += 1;
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i` to `bit`.
+    #[inline]
+    pub fn set(&mut self, i: usize, bit: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if bit {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate bits in order.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Indices of set bits, in increasing order.
+    pub fn ones(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len).filter(move |&i| self.get(i))
+    }
+
+    /// Render as the paper's `{1,0}` string, e.g. `10110`.
+    pub fn to_binary_string(&self) -> String {
+        self.iter().map(|b| if b { '1' } else { '0' }).collect()
+    }
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec({})", self.to_binary_string())
+    }
+}
+
+impl From<&[u8]> for BitVec {
+    fn from(bytes: &[u8]) -> Self {
+        BitVec::from_bools(bytes.iter().map(|&b| b != 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_roundtrip() {
+        let pattern = [true, false, true, true, false];
+        let v = BitVec::from_bools(pattern);
+        assert_eq!(v.len(), 5);
+        for (i, &b) in pattern.iter().enumerate() {
+            assert_eq!(v.get(i), b, "bit {i}");
+        }
+        assert_eq!(v.to_binary_string(), "10110");
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn crosses_word_boundary() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(63, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert_eq!(v.count_ones(), 4);
+        assert_eq!(v.ones().collect::<Vec<_>>(), vec![0, 63, 64, 129]);
+    }
+
+    #[test]
+    fn set_clear() {
+        let mut v = BitVec::zeros(10);
+        v.set(3, true);
+        assert!(v.get(3));
+        v.set(3, false);
+        assert!(!v.get(3));
+        assert_eq!(v.count_ones(), 0);
+    }
+
+    #[test]
+    fn eq_and_hash_consistent() {
+        let a = BitVec::from_bools([true, false, true]);
+        let b = BitVec::from_bools([true, false, true]);
+        let c = BitVec::from_bools([true, true, true]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut set = std::collections::HashSet::new();
+        set.insert(a);
+        assert!(set.contains(&b));
+    }
+
+    #[test]
+    fn from_u8_slice() {
+        let v = BitVec::from(&[1u8, 0, 1, 1, 0][..]);
+        assert_eq!(v.to_binary_string(), "10110");
+    }
+}

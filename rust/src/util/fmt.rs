@@ -1,0 +1,150 @@
+//! Text-table rendering for CLI reports and bench output.
+//!
+//! Benches print paper-style rows; this keeps the formatting consistent
+//! (right-aligned numerics, padded headers) without a tabulation crate.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header arity; excess is truncated, missing
+    /// cells are blank).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        let mut r: Vec<String> = cells.iter().take(self.headers.len()).cloned().collect();
+        r.resize(self.headers.len(), String::new());
+        self.rows.push(r);
+        self
+    }
+
+    /// Convenience: row from `Display` items.
+    pub fn row_display<T: std::fmt::Display>(&mut self, cells: &[T]) -> &mut Self {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v)
+    }
+
+    /// Render with a header underline; numeric-looking cells right-aligned.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let numeric: Vec<bool> = (0..ncol)
+            .map(|c| {
+                !self.rows.is_empty()
+                    && self.rows.iter().all(|r| {
+                        let s = r[c].trim();
+                        s.is_empty()
+                            || s.parse::<f64>().is_ok()
+                            || s.ends_with('x')
+                                && s[..s.len() - 1].parse::<f64>().is_ok()
+                    })
+            })
+            .collect();
+        let mut out = String::new();
+        let fmt_cell = |s: &str, w: usize, right: bool| -> String {
+            let pad = w.saturating_sub(s.chars().count());
+            if right {
+                format!("{}{}", " ".repeat(pad), s)
+            } else {
+                format!("{}{}", s, " ".repeat(pad))
+            }
+        };
+        for (c, h) in self.headers.iter().enumerate() {
+            if c > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&fmt_cell(h, widths[c], numeric[c]));
+        }
+        out.push('\n');
+        for (c, w) in widths.iter().enumerate() {
+            if c > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&"-".repeat(*w));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            for c in 0..ncol {
+                if c > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&fmt_cell(&row[c], widths[c], numeric[c]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Human format for a duration in nanoseconds (bench output).
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Human format for a rate (items/second).
+pub fn human_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} k/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["name", "count"]);
+        t.row(&["alpha".into(), "5".into()]);
+        t.row(&["b".into(), "12345".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // numeric column right-aligned: "5" should be padded left
+        assert!(lines[2].ends_with("    5"), "got {:?}", lines[2]);
+        assert!(lines[3].ends_with("12345"));
+    }
+
+    #[test]
+    fn short_rows_padded() {
+        let mut t = Table::new(&["a", "b", "c"]);
+        t.row(&["x".into()]);
+        assert!(t.render().lines().count() == 3);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_ns(512.0), "512 ns");
+        assert_eq!(human_ns(2_500.0), "2.50 µs");
+        assert_eq!(human_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(human_ns(1.5e9), "1.500 s");
+        assert_eq!(human_rate(2.5e6), "2.50 M/s");
+        assert_eq!(human_rate(950.0), "950.0 /s");
+    }
+}

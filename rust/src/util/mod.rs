@@ -1,0 +1,117 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline, so the usual helper crates (`rand`,
+//! `serde`, `fxhash`…) are replaced with minimal, well-tested local
+//! implementations.
+
+pub mod bitvec;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+
+pub use bitvec::BitVec;
+pub use json::JsonValue;
+pub use rng::Rng;
+
+/// FxHash-style mixing hasher (Firefox/rustc's hash), used for the visited
+/// store: much faster than SipHash for the short integer keys we hash and
+/// DoS resistance is irrelevant for a local simulator.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl std::hash::Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, b: u8) {
+        self.add_to_hash(b as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add_to_hash(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add_to_hash(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add_to_hash(n as u64);
+    }
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(SEED);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`]; plug into `HashMap::with_hasher`.
+#[derive(Default, Clone)]
+pub struct FxBuildHasher;
+
+impl std::hash::BuildHasher for FxBuildHasher {
+    type Hasher = FxHasher;
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+/// HashMap keyed with the fast local hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+/// HashSet keyed with the fast local hasher.
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::{BuildHasher, Hash, Hasher};
+
+    #[test]
+    fn fxhash_is_deterministic_and_spreads() {
+        let bh = FxBuildHasher;
+        let h = |v: &[i32]| {
+            let mut hs = bh.build_hasher();
+            v.hash(&mut hs);
+            hs.finish()
+        };
+        assert_eq!(h(&[1, 2, 3]), h(&[1, 2, 3]));
+        assert_ne!(h(&[1, 2, 3]), h(&[3, 2, 1]));
+        assert_ne!(h(&[0]), h(&[1]));
+        // Nearby keys should not collide (smoke test over a small grid).
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..16 {
+            for b in 0..16 {
+                assert!(seen.insert(h(&[a, b])), "collision at ({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn fxhashmap_basic() {
+        let mut m: FxHashMap<Vec<i32>, usize> = FxHashMap::default();
+        m.insert(vec![2, 1, 1], 0);
+        m.insert(vec![2, 1, 2], 1);
+        assert_eq!(m[&vec![2, 1, 1]], 0);
+        assert_eq!(m.len(), 2);
+    }
+}

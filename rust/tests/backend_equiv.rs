@@ -1,0 +1,161 @@
+//! Backend equivalence: the XLA/PJRT device path must agree bit-for-bit
+//! with the pure-Rust host path on every workload. Requires
+//! `make artifacts` (tests are skipped with a notice when absent, so
+//! `cargo test` stays green on a fresh checkout).
+
+use snapse::compute::{HostBackend, StepBackend, StepBatch};
+use snapse::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use snapse::matrix::build_matrix;
+use snapse::runtime::{Manifest, PjRt};
+use snapse::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(std::path::Path::new("artifacts")).ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match manifest() {
+            Some(m) => m,
+            None => {
+                eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn xla_matches_host_on_paper_pi_batches() {
+    let manifest = require_artifacts!();
+    let rt = PjRt::cpu().unwrap();
+    let sys = snapse::generators::paper_pi();
+    let m = build_matrix(&sys);
+    let mut host = HostBackend::new(&m);
+    let mut xla = snapse::compute::xla::backend_from_artifacts(rt, &m, &manifest).unwrap();
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..20 {
+        let b = rng.range(1, 40);
+        let configs: Vec<i64> = (0..b * 3).map(|_| rng.range(0, 12) as i64).collect();
+        // build per-neuron-valid spiking rows
+        let mut spikes = vec![0u8; b * 5];
+        for row in 0..b {
+            for (neuron, rules) in [(0usize, 0..2usize), (1, 2..3), (2, 3..5)] {
+                let _ = neuron;
+                if rng.chance(0.7) {
+                    let pick = rng.range(rules.start, rules.end - 1);
+                    spikes[row * 5 + pick] = 1;
+                }
+            }
+        }
+        let batch = StepBatch { b, n: 3, r: 5, configs: &configs, spikes: &spikes };
+        let h = host.step_batch(&batch).unwrap();
+        let x = xla.step_batch(&batch).unwrap();
+        assert_eq!(h, x, "case {case} (b={b})");
+    }
+}
+
+#[test]
+fn xla_matches_host_on_padded_shapes() {
+    let manifest = require_artifacts!();
+    let rt = PjRt::cpu().unwrap();
+    // 6-neuron ring: (R, N) = (6, 6) → padded onto the (8, 8) artifact
+    let sys = snapse::generators::ring(6, 2);
+    let m = build_matrix(&sys);
+    let mut host = HostBackend::new(&m);
+    let mut xla = snapse::compute::xla::backend_from_artifacts(rt, &m, &manifest).unwrap();
+    assert_eq!(xla.physical_shape(), (8, 8));
+    let mut rng = Rng::new(77);
+    for _ in 0..10 {
+        let b = rng.range(1, 20);
+        let configs: Vec<i64> = (0..b * 6).map(|_| rng.range(0, 5) as i64).collect();
+        let spikes: Vec<u8> = (0..b * 6).map(|_| rng.chance(0.5) as u8).collect();
+        let batch = StepBatch { b, n: 6, r: 6, configs: &configs, spikes: &spikes };
+        assert_eq!(host.step_batch(&batch).unwrap(), xla.step_batch(&batch).unwrap());
+    }
+}
+
+#[test]
+fn full_exploration_identical_host_vs_xla() {
+    let _ = require_artifacts!();
+    let sys = snapse::generators::paper_pi();
+    let mut host_coord = Coordinator::new(
+        &sys,
+        CoordinatorConfig { max_depth: Some(8), ..Default::default() },
+    );
+    let host_rep = host_coord.run().unwrap();
+    let mut xla_coord = Coordinator::new(
+        &sys,
+        CoordinatorConfig {
+            max_depth: Some(8),
+            backend: BackendChoice::Xla { artifacts: "artifacts".into() },
+            ..Default::default()
+        },
+    );
+    let xla_rep = xla_coord.run().unwrap();
+    assert_eq!(
+        host_rep.visited.in_order(),
+        xla_rep.visited.in_order(),
+        "device and host explorations must be bit-identical"
+    );
+    assert_eq!(xla_rep.metrics.backend, "xla");
+}
+
+#[test]
+fn exploration_on_branching_ring_device_path() {
+    let _ = require_artifacts!();
+    // R = N = 8: exact artifact shape, heavy Ψ branching
+    let sys = snapse::generators::ring_with_branching(8, 1, 1);
+    let mut host = Coordinator::new(&sys, CoordinatorConfig::default());
+    let h = host.run().unwrap();
+    let mut dev = Coordinator::new(
+        &sys,
+        CoordinatorConfig {
+            backend: BackendChoice::Xla { artifacts: "artifacts".into() },
+            ..Default::default()
+        },
+    );
+    let d = dev.run().unwrap();
+    assert_eq!(h.visited.in_order(), d.visited.in_order());
+    assert_eq!(h.stop, d.stop);
+}
+
+#[test]
+fn device_replay_matches_host_walks() {
+    let manifest = require_artifacts!();
+    let rt = PjRt::cpu().unwrap();
+    for sys in [snapse::generators::paper_pi(), snapse::generators::nat_generator()] {
+        for seed in 0..6u64 {
+            for steps in [3usize, 8, 20, 50] {
+                let rec = snapse::engine::RandomWalk::new(&sys, seed).run(steps);
+                let replayed =
+                    snapse::compute::replay_on_device(&rt, &manifest, &sys, &rec).unwrap();
+                assert_eq!(
+                    &replayed,
+                    rec.path.last().unwrap(),
+                    "{} seed {seed} steps {steps}",
+                    sys.name
+                );
+                // verify_walk agrees (and errors would carry context)
+                snapse::compute::verify_walk(&rt, &manifest, &sys, &rec).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn runtime_stats_track_traffic() {
+    let manifest = require_artifacts!();
+    let rt = PjRt::cpu().unwrap();
+    let sys = snapse::generators::paper_pi();
+    let m = build_matrix(&sys);
+    let mut xla =
+        snapse::compute::xla::backend_from_artifacts(rt.clone(), &m, &manifest).unwrap();
+    let configs = vec![2i64, 1, 1];
+    let spikes = vec![1u8, 0, 1, 1, 0];
+    let _ =
+        xla.step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: &spikes });
+    let stats = rt.stats();
+    assert!(stats.executes >= 1);
+    assert!(stats.elements_in > 0 && stats.elements_out > 0);
+}

@@ -1,0 +1,108 @@
+//! Coordinator end-to-end: determinism across worker counts, batch sizes
+//! and window sizes; equivalence with the single-threaded explorer; and
+//! budget behaviour under Ψ-explosions.
+
+use snapse::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use snapse::engine::{ExploreOptions, Explorer, StopReason};
+
+fn run_names(sys: &snapse::snp::SnpSystem, cfg: CoordinatorConfig) -> Vec<String> {
+    let mut coord = Coordinator::new(sys, cfg);
+    let rep = coord.run().unwrap();
+    rep.visited.in_order().iter().map(|c| c.to_string()).collect()
+}
+
+#[test]
+fn identical_across_worker_counts_and_batch_targets() {
+    let sys = snapse::generators::wide_ring(6, 3, 2);
+    let baseline = run_names(&sys, CoordinatorConfig::default());
+    for workers in [1usize, 2, 4, 16] {
+        for batch in [1usize, 7, 64, 4096] {
+            let got = run_names(
+                &sys,
+                CoordinatorConfig { workers, batch_target: batch, ..Default::default() },
+            );
+            assert_eq!(got, baseline, "workers={workers} batch={batch}");
+        }
+    }
+}
+
+#[test]
+fn equals_single_threaded_explorer_on_generators() {
+    for sys in [
+        snapse::generators::paper_pi(),
+        snapse::generators::nat_generator(),
+        snapse::generators::counter_chain(5, 3),
+        snapse::generators::ring(6, 2),
+        snapse::generators::even_generator(),
+    ] {
+        let single =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(400)).run();
+        let coord = run_names(
+            &sys,
+            CoordinatorConfig { max_configs: Some(400), workers: 3, ..Default::default() },
+        );
+        let single_names: Vec<String> =
+            single.visited.in_order().iter().map(|c| c.to_string()).collect();
+        // both stop at ≥400 configs; compare the common prefix
+        let common = single_names.len().min(coord.len());
+        assert!(common >= 300.min(single_names.len()), "{}", sys.name);
+        assert_eq!(&single_names[..common], &coord[..common], "{}", sys.name);
+    }
+}
+
+#[test]
+fn psi_explosion_respects_budget_without_oom() {
+    // Ψ(C0) = 2^14: one configuration fans out to 16384 children; the
+    // windowed pipeline must stay within the budget's neighborhood.
+    let sys = snapse::generators::ring_with_branching(14, 2, 2);
+    let mut coord = Coordinator::new(
+        &sys,
+        CoordinatorConfig { max_configs: Some(1_000), ..Default::default() },
+    );
+    let rep = coord.run().unwrap();
+    assert_eq!(rep.stop, StopReason::MaxConfigs);
+    // one window may overshoot by its own fan-out, but not unboundedly
+    assert!(rep.visited.len() < 40_000, "got {}", rep.visited.len());
+}
+
+#[test]
+fn metrics_are_consistent() {
+    let sys = snapse::generators::paper_pi();
+    let mut coord = Coordinator::new(
+        &sys,
+        CoordinatorConfig { max_depth: Some(7), ..Default::default() },
+    );
+    let rep = coord.run().unwrap();
+    let m = &rep.metrics;
+    assert_eq!(m.levels.len(), 7);
+    assert_eq!(m.total_new_configs() + 1, rep.visited.len() as u64, "+1 root");
+    assert!(m.total_steps() >= m.total_new_configs());
+    assert!(m.total_batches() >= m.levels.len() as u64 - 1);
+    assert!(m.steps_per_sec() > 0.0);
+    let table = m.render_table();
+    assert_eq!(table.lines().count(), 2 + m.levels.len());
+}
+
+#[test]
+fn halting_and_stop_reasons_match_explorer() {
+    let sys = snapse::generators::counter_chain(4, 3);
+    let single = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+    let mut coord = Coordinator::new(&sys, CoordinatorConfig::default());
+    let rep = coord.run().unwrap();
+    assert_eq!(rep.stop, single.stop);
+    assert_eq!(rep.halting, single.halting_configs);
+}
+
+#[test]
+fn xla_backend_choice_reports_missing_artifacts_cleanly() {
+    let sys = snapse::generators::paper_pi();
+    let mut coord = Coordinator::new(
+        &sys,
+        CoordinatorConfig {
+            backend: BackendChoice::Xla { artifacts: "/definitely/missing".into() },
+            ..Default::default()
+        },
+    );
+    let err = coord.run().unwrap_err();
+    assert!(err.to_string().contains("io error") || err.to_string().contains("artifact"));
+}

@@ -1,0 +1,71 @@
+//! E3 — integration test: the ℕ∖{1} generation claim.
+
+use snapse::engine::{generated_set, RandomWalk};
+
+#[test]
+fn nat_generator_generates_exactly_n_minus_one() {
+    let sys = snapse::generators::nat_generator();
+    let set = generated_set(&sys, 30);
+    let expect: std::collections::BTreeSet<u64> = (2..=30).collect();
+    assert_eq!(set, expect);
+}
+
+#[test]
+fn one_is_never_generated() {
+    let sys = snapse::generators::nat_generator();
+    assert!(!generated_set(&sys, 50).contains(&1));
+}
+
+#[test]
+fn random_walks_only_realize_members_of_the_generated_set() {
+    // soundness: every first-gap observed on any random path must be in
+    // the exact generated set
+    let sys = snapse::generators::nat_generator();
+    let set = generated_set(&sys, 60);
+    for seed in 0..80 {
+        let rec = RandomWalk::new(&sys, seed).run(80);
+        if let Some(g) = rec.trace.generated() {
+            assert!(set.contains(&g), "seed {seed} realized non-member {g}");
+        }
+    }
+}
+
+#[test]
+fn random_walks_cover_small_members() {
+    // completeness (statistical): small members show up within 300 seeds
+    let sys = snapse::generators::nat_generator();
+    let mut seen = std::collections::BTreeSet::new();
+    for seed in 0..300 {
+        if let Some(g) = RandomWalk::new(&sys, seed).run(40).trace.generated() {
+            seen.insert(g);
+        }
+    }
+    for n in 2..=4u64 {
+        assert!(seen.contains(&n), "gap {n} never realized in 300 walks: {seen:?}");
+    }
+}
+
+#[test]
+fn paper_pi_b3_recast_degenerates_to_gap_one() {
+    // The all-spiking (b-3) Π fires σ3 every step it holds spikes: the
+    // only achievable first-gap is 1. Documented in EXPERIMENTS.md E3.
+    let sys = snapse::generators::paper_pi();
+    let set = generated_set(&sys, 15);
+    assert_eq!(set.into_iter().collect::<Vec<_>>(), vec![1]);
+}
+
+#[test]
+fn divisibility_verdicts_match_arithmetic() {
+    use snapse::engine::{ExploreOptions, Explorer};
+    for n in [6u64, 9, 10, 14, 15, 21, 22] {
+        for d in [2u64, 3, 7] {
+            let sys = snapse::generators::divisibility_checker(n, d);
+            let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+            assert_eq!(
+                snapse::generators::divisible_verdict(&rep),
+                n % d == 0,
+                "{d} | {n}"
+            );
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! E5 — integration test: paper Definition 2 / eq. (1) / eq. (2).
+
+use snapse::matrix::{build_matrix, TransitionMatrix};
+use snapse::parser::parse_paper_files;
+
+#[test]
+fn eq1_matrix_from_all_construction_paths() {
+    let expect: &[i64] = &[-1, 1, 1, -2, 1, 1, 1, -1, 1, 0, 0, -1, 0, 0, -2];
+    // path 1: the programmatic generator
+    let m1 = build_matrix(&snapse::generators::paper_pi());
+    assert_eq!(m1.as_row_major(), expect);
+    // path 2: the paper's three input files
+    let input =
+        parse_paper_files("2 1 1", "-1 1 1 -2 1 1 1 -1 1 0 0 -1 0 0 -2", "2 2 $ 1 $ 1 2")
+            .unwrap();
+    assert_eq!(input.matrix.as_row_major(), expect);
+    let m2 = build_matrix(&input.to_system("from_files").unwrap());
+    assert_eq!(m2.as_row_major(), expect);
+    // path 3: the .snpl DSL
+    let snpl = r#"
+system pi
+neuron s1 2
+  rule >=2 / 1 -> 1
+  rule >=2 / 2 -> 1
+end
+neuron s2 1
+  rule >=1 / 1 -> 1
+end
+neuron s3 1 output
+  rule >=1 / 1 -> 1
+  rule >=2 / 2 -> 1
+end
+syn s1 s2 s3
+syn s2 s1 s3
+"#;
+    let m3 = build_matrix(&snapse::parser::parse_snpl(snpl).unwrap());
+    assert_eq!(m3.as_row_major(), expect);
+}
+
+#[test]
+fn eq2_both_published_transitions() {
+    let m = build_matrix(&snapse::generators::paper_pi());
+    assert_eq!(m.step(&[2, 1, 1], &[1, 0, 1, 1, 0]).unwrap(), vec![2, 1, 2]);
+    assert_eq!(m.step(&[2, 1, 1], &[0, 1, 1, 1, 0]).unwrap(), vec![1, 1, 2]);
+}
+
+#[test]
+fn row_major_marshalling_is_eq3() {
+    // eq. (3): the row-major flattening the paper feeds the GPU
+    let m = build_matrix(&snapse::generators::paper_pi());
+    let f32s = m.to_f32_row_major();
+    assert_eq!(
+        f32s,
+        vec![-1., 1., 1., -2., 1., 1., 1., -1., 1., 0., 0., -1., 0., 0., -2.]
+    );
+}
+
+#[test]
+fn padding_to_square_preserves_steps() {
+    // the paper pads non-square matrices with zeros (§6); verify zero
+    // rows/columns never change results
+    let m = build_matrix(&snapse::generators::paper_pi());
+    let mut padded = TransitionMatrix::zeros(8, 8);
+    for r in 0..5 {
+        for c in 0..3 {
+            padded.set(r, c, m.get(r, c));
+        }
+    }
+    let out = padded.step(&[2, 1, 1, 0, 0, 0, 0, 0], &[1, 0, 1, 1, 0, 0, 0, 0]).unwrap();
+    assert_eq!(&out[..3], &[2, 1, 2]);
+    assert_eq!(&out[3..], &[0, 0, 0, 0, 0]);
+}
+
+#[test]
+fn matrix_row_semantics_by_rule_kind() {
+    // forgetting rules: negative diagonal, no production anywhere
+    let sys = snapse::generators::nat_generator();
+    let m = build_matrix(&sys);
+    // rule (5) of nat_gen is a²→λ in σ3
+    assert_eq!(m.row(4), &[0, 0, -2]);
+}

@@ -1,0 +1,91 @@
+//! E1 — integration test: the paper's §5 `allGenCk` reproduction.
+
+use snapse::engine::{ConfigVector, ExploreOptions, Explorer, StopReason};
+
+/// The paper's §5 final `allGenCk`, verbatim (48 entries).
+const PAPER_ALL_GEN_CK: &[&str] = &[
+    "2-1-1", "2-1-2", "1-1-2", "2-1-3", "1-1-3", "2-0-2", "2-0-1", "2-1-4", "1-1-4", "2-0-3",
+    "1-1-1", "0-1-2", "0-1-1", "2-1-5", "1-1-5", "2-0-4", "0-1-3", "1-0-2", "1-0-1", "2-1-6",
+    "1-1-6", "2-0-5", "0-1-4", "1-0-3", "1-0-0", "2-1-7", "1-1-7", "2-0-6", "0-1-5", "1-0-4",
+    "2-1-8", "1-1-8", "2-0-7", "0-1-6", "1-0-5", "2-1-9", "1-1-9", "2-0-8", "0-1-7", "1-0-6",
+    "2-1-10", "1-1-10", "2-0-9", "0-1-8", "1-0-7", "0-1-9", "1-0-8", "1-0-9",
+];
+
+#[test]
+fn bfs_depth9_reproduces_the_first_45_entries_in_order() {
+    let sys = snapse::generators::paper_pi();
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(9)).run();
+    let ours: Vec<String> = rep.visited.in_order().iter().map(|c| c.to_string()).collect();
+    assert_eq!(ours.len(), 45);
+    assert_eq!(
+        ours,
+        PAPER_ALL_GEN_CK[..45].iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        "exact order match with the paper's published log"
+    );
+    assert_eq!(rep.stop, StopReason::MaxDepth);
+}
+
+#[test]
+fn all_48_paper_configs_are_reachable() {
+    let sys = snapse::generators::paper_pi();
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(11)).run();
+    for name in PAPER_ALL_GEN_CK {
+        let c = ConfigVector::parse_dashed(name).unwrap();
+        assert!(rep.visited.contains(&c), "paper config {name} not reached");
+    }
+}
+
+#[test]
+fn paper_tail_entries_come_from_the_depth9_frontier() {
+    // The paper's last three entries ('0-1-9', '1-0-8', '1-0-9') are the
+    // children of 2-0-9 / 0-1-8 / 0-1-9 — i.e. its final level was only
+    // partially expanded. Verify the parentage claims.
+    let sys = snapse::generators::paper_pi();
+    let m = snapse::matrix::build_matrix(&sys);
+    // 2-0-9, firing rules (2)(4): [2,0,9] + [-2,1,1] + [0,0,-1] = [0,1,9]
+    let child = m.step(&[2, 0, 9], &[0, 1, 0, 1, 0]).unwrap();
+    assert_eq!(child, vec![0, 1, 9]);
+    // 0-1-8, firing rules (3)(4): [0,1,8] + [1,-1,1] + [0,0,-1] = [1,0,8]
+    let child = m.step(&[0, 1, 8], &[0, 0, 1, 1, 0]).unwrap();
+    assert_eq!(child, vec![1, 0, 8]);
+    // 0-1-9, firing rules (3)(4): [0,1,9] + [1,-1,1] + [0,0,-1] = [1,0,9]
+    let child = m.step(&[0, 1, 9], &[0, 0, 1, 1, 0]).unwrap();
+    assert_eq!(child, vec![1, 0, 9]);
+}
+
+#[test]
+fn paper_log_rendering_matches_section5_fields() {
+    let sys = snapse::generators::paper_pi();
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(9)).run();
+    let log = snapse::output::render_paper_log(&sys, &rep);
+    // the fields the paper prints
+    assert!(log.contains("Initial configuration vector: 211"));
+    assert!(log.contains("Number of neurons for the SN P system is 3"));
+    assert!(log.contains("['2', '2', '$', '1', '$', '1', '2']"), "the r file rendering");
+    assert!(log.contains("'10110', '01110'"), "C0's valid spiking vectors");
+    assert!(log.contains("'2-1-1', '2-1-2', '1-1-2'"), "allGenCk prefix");
+}
+
+#[test]
+fn unbounded_exploration_would_not_terminate_fast() {
+    // Π generates an infinite set; with a 500-config budget the run must
+    // stop on the budget, not on exhaustion.
+    let sys = snapse::generators::paper_pi();
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(500)).run();
+    assert_eq!(rep.stop, StopReason::MaxConfigs);
+    assert!(rep.visited.len() >= 500);
+}
+
+#[test]
+fn dfs_reaches_the_same_45_set_as_bfs_at_depth9() {
+    let sys = snapse::generators::paper_pi();
+    let bfs = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(9)).run();
+    let dfs = Explorer::new(&sys, ExploreOptions::depth_first().max_depth(9)).run();
+    let mut a: Vec<String> = bfs.visited.in_order().iter().map(|c| c.to_string()).collect();
+    let mut b: Vec<String> = dfs.visited.in_order().iter().map(|c| c.to_string()).collect();
+    a.sort();
+    b.sort();
+    // DFS with a depth bound reaches a subset of the BFS-depth-9 cone that
+    // includes all shallow nodes; on Π they coincide exactly.
+    assert_eq!(a, b);
+}

@@ -1,0 +1,119 @@
+//! Parser integration: every format round-trips and all formats agree.
+
+use snapse::engine::{ExploreOptions, Explorer};
+use snapse::generators::{random_system, RandomSystemParams};
+use snapse::parser::{parse_paper_files, parse_snpl, system_from_json, system_to_json};
+
+#[test]
+fn json_roundtrip_on_100_random_systems() {
+    let params = RandomSystemParams::default();
+    for seed in 0..100 {
+        let sys = random_system(&params, seed);
+        let text = system_to_json(&sys).to_string_compact();
+        let again = system_from_json(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(sys.neurons, again.neurons, "seed {seed}");
+        assert_eq!(sys.synapses, again.synapses, "seed {seed}");
+        assert_eq!(sys.input, again.input, "seed {seed}");
+        assert_eq!(sys.output, again.output, "seed {seed}");
+    }
+}
+
+#[test]
+fn snpl_roundtrip_on_random_systems() {
+    let params = RandomSystemParams::default();
+    for seed in 0..60 {
+        let sys = random_system(&params, seed);
+        let text = snapse::parser::snpl::to_snpl(&sys);
+        let again = parse_snpl(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(sys.neurons, again.neurons, "seed {seed}");
+        assert_eq!(sys.synapses, again.synapses, "seed {seed}");
+    }
+}
+
+#[test]
+fn three_formats_explore_identically() {
+    // the same system through builder / paper files / snpl must produce
+    // identical computation trees
+    let from_builder = snapse::generators::paper_pi();
+    let from_files =
+        parse_paper_files("2 1 1", "-1 1 1 -2 1 1 1 -1 1 0 0 -1 0 0 -2", "2 2 $ 1 $ 1 2")
+            .unwrap()
+            .to_system("pi")
+            .unwrap();
+    let from_json =
+        system_from_json(&system_to_json(&from_builder).to_string_compact()).unwrap();
+    let explore = |sys: &snapse::snp::SnpSystem| {
+        Explorer::new(sys, ExploreOptions::breadth_first().max_depth(7))
+            .run()
+            .visited
+            .in_order()
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+    };
+    let a = explore(&from_builder);
+    assert_eq!(a, explore(&from_files));
+    assert_eq!(a, explore(&from_json));
+}
+
+#[test]
+fn paper_file_loading_from_disk() {
+    let dir = std::env::temp_dir().join("snapse_paperfmt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("confVec"), "2 1 1").unwrap();
+    std::fs::write(dir.join("M"), "-1 1 1 -2 1 1 1 -1 1 0 0 -1 0 0 -2").unwrap();
+    std::fs::write(dir.join("r"), "2 2 $ 1 $ 1 2").unwrap();
+    let input = snapse::parser::paperfmt::load_paper_files(
+        &dir.join("confVec"),
+        &dir.join("M"),
+        &dir.join("r"),
+    )
+    .unwrap();
+    assert_eq!(input.config.as_slice(), &[2, 1, 1]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shipped_snpl_files_parse_and_match_generators() {
+    // the files under examples/systems/ must stay in sync with the
+    // programmatic generators
+    let pi_text = std::fs::read_to_string("examples/systems/paper_pi.snpl").unwrap();
+    let pi = parse_snpl(&pi_text).unwrap();
+    assert_eq!(
+        snapse::matrix::build_matrix(&pi).as_row_major(),
+        snapse::matrix::build_matrix(&snapse::generators::paper_pi()).as_row_major()
+    );
+    let nat_text = std::fs::read_to_string("examples/systems/nat_gen.snpl").unwrap();
+    let nat = parse_snpl(&nat_text).unwrap();
+    let reference = snapse::generators::nat_generator();
+    // labels differ (ascii vs σ); compare structure
+    for (a, b) in nat.neurons.iter().zip(reference.neurons.iter()) {
+        assert_eq!(a.initial_spikes, b.initial_spikes);
+        assert_eq!(a.rules, b.rules);
+    }
+
+    // the paper-format triplet reconstructs Π as well
+    let input = snapse::parser::paperfmt::load_paper_files(
+        std::path::Path::new("examples/systems/paper_confVec"),
+        std::path::Path::new("examples/systems/paper_M"),
+        std::path::Path::new("examples/systems/paper_r"),
+    )
+    .unwrap();
+    let sys = input.to_system("pi").unwrap();
+    assert_eq!(
+        snapse::matrix::build_matrix(&sys).as_row_major(),
+        snapse::matrix::build_matrix(&pi).as_row_major()
+    );
+}
+
+#[test]
+fn cli_loads_snpl_files() {
+    let dir = std::env::temp_dir().join("snapse_cli_load_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pi.snpl");
+    let sys = snapse::generators::paper_pi();
+    std::fs::write(&path, snapse::parser::snpl::to_snpl(&sys)).unwrap();
+    let loaded = snapse::cli::load_system(path.to_str().unwrap()).unwrap();
+    assert_eq!(loaded.num_rules(), 5);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,123 @@
+//! Failure injection: the runtime must fail cleanly (typed errors, no
+//! panics, no poisoned state) on corrupt artifacts and misuse.
+
+use snapse::runtime::{Arg, Manifest, PjRt};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("snapse_faults_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn corrupt_hlo_text_fails_cleanly() {
+    let dir = tmpdir("corrupt");
+    let path = dir.join("bad.hlo.txt");
+    std::fs::write(&path, "HloModule nonsense\n\nENTRY {]").unwrap();
+    let rt = PjRt::cpu().unwrap();
+    let err = rt.compile_step(&path).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("artifact") || msg.contains("runtime"), "{msg}");
+    // the runtime thread must survive the failure
+    assert!(!rt.platform().is_empty());
+    assert_eq!(rt.stats().compiles, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn empty_file_fails_cleanly() {
+    let dir = tmpdir("empty");
+    let path = dir.join("empty.hlo.txt");
+    std::fs::write(&path, "").unwrap();
+    let rt = PjRt::cpu().unwrap();
+    assert!(rt.compile_step(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn executing_with_wrong_arity_fails_cleanly() {
+    // valid artifact, wrong argument count/shape
+    let Ok(manifest) = Manifest::load(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let rt = PjRt::cpu().unwrap();
+    let entry = &manifest.step_entries(5, 3)[0];
+    let exec = rt.compile_step(&entry.path).unwrap();
+    // one arg instead of three
+    let err = rt
+        .execute_f32(exec, vec![Arg::Host { data: vec![0.0; 5], dims: vec![1, 5] }])
+        .unwrap_err();
+    assert!(err.to_string().contains("runtime"), "{err}");
+    // runtime still serves correct requests afterwards
+    let ok = rt.execute_f32(
+        exec,
+        vec![
+            Arg::Host { data: vec![0.0; 5], dims: vec![1, 5] },
+            Arg::Host { data: vec![0.0; 15], dims: vec![5, 3] },
+            Arg::Host { data: vec![7.0, 8.0, 9.0], dims: vec![1, 3] },
+        ],
+    );
+    assert_eq!(ok.unwrap(), vec![7.0, 8.0, 9.0]);
+}
+
+#[test]
+fn bad_device_buffer_id_fails_cleanly() {
+    let Ok(manifest) = Manifest::load(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let rt = PjRt::cpu().unwrap();
+    let entry = &manifest.step_entries(5, 3)[0];
+    let exec = rt.compile_step(&entry.path).unwrap();
+    // upload a buffer on a DIFFERENT runtime, then use its id here — the
+    // handle indexes this runtime's (empty) table
+    let other = PjRt::cpu().unwrap();
+    let foreign = other.upload(vec![0.0; 15], vec![5, 3]).unwrap();
+    let err = rt
+        .execute_f32(
+            exec,
+            vec![
+                Arg::Host { data: vec![0.0; 5], dims: vec![1, 5] },
+                Arg::Device(foreign),
+                Arg::Host { data: vec![0.0; 3], dims: vec![1, 3] },
+            ],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("bad buffer id"), "{err}");
+}
+
+#[test]
+fn upload_shape_mismatch_fails() {
+    let rt = PjRt::cpu().unwrap();
+    assert!(rt.upload(vec![1.0, 2.0, 3.0], vec![2, 2]).is_err());
+}
+
+#[test]
+fn manifest_entry_pointing_nowhere() {
+    let dir = tmpdir("dangling");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"entries":[{"kind":"step","r":5,"n":3,"b":1,"path":"missing.hlo.txt"}]}"#,
+    )
+    .unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = PjRt::cpu().unwrap();
+    let sys = snapse::generators::paper_pi();
+    let m = snapse::matrix::build_matrix(&sys);
+    let err = match snapse::compute::xla::backend_from_artifacts(rt, &m, &manifest) {
+        Err(e) => e,
+        Ok(_) => panic!("dangling artifact path must fail"),
+    };
+    assert!(err.to_string().contains("artifact"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_manifest_variants() {
+    let p = std::path::Path::new("/x");
+    assert!(Manifest::parse(p, "not json").is_err());
+    assert!(Manifest::parse(p, r#"{"entries": 42}"#).is_err());
+    assert!(Manifest::parse(p, r#"{"entries":[{"r":"five"}]}"#).is_err());
+    assert!(Manifest::parse(p, r#"{"entries":[{"r":5,"n":3,"b":1}]}"#).is_err(), "no path");
+}

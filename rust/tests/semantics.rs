@@ -1,0 +1,141 @@
+//! E8 — property suite: matrix semantics ≡ direct semantics, across guard
+//! kinds, seeds printed for replay.
+
+use snapse::baseline::DirectSimulator;
+use snapse::engine::{applicable_rules, ConfigVector, ExploreOptions, Explorer};
+use snapse::generators::{random_system, RandomSystemParams};
+use snapse::snp::{Rule, SystemBuilder};
+
+#[test]
+fn property_reachable_sets_agree_on_200_random_systems() {
+    let params = RandomSystemParams::default();
+    for seed in 0..200u64 {
+        let sys = random_system(&params, seed);
+        let sim = DirectSimulator::new(&sys);
+        let (direct, complete) = sim.reachable(300);
+        let mut opts = ExploreOptions::breadth_first();
+        if !complete {
+            opts = opts.max_configs(300);
+        }
+        let rep = Explorer::new(&sys, opts).run();
+        if complete {
+            let a: std::collections::BTreeSet<_> = direct.iter().collect();
+            let b: std::collections::BTreeSet<_> = rep.visited.in_order().iter().collect();
+            assert_eq!(a, b, "seed {seed}");
+        } else {
+            for (i, (x, y)) in direct.iter().zip(rep.visited.in_order()).enumerate().take(150)
+            {
+                assert_eq!(x, y, "seed {seed} diverges at BFS position {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn property_psi_equals_choice_product() {
+    let params = RandomSystemParams::default();
+    for seed in 200..280u64 {
+        let sys = random_system(&params, seed);
+        let sim = DirectSimulator::new(&sys);
+        let c0 = ConfigVector::new(sys.initial_config());
+        let map = applicable_rules(&sys, &c0);
+        let choices = sim.choices(&c0);
+        if map.is_halting() {
+            assert!(choices.is_empty(), "seed {seed}");
+        } else {
+            assert_eq!(choices.len() as u128, map.psi(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn property_spike_conservation_invariant() {
+    // for systems whose every rule has produced·out_degree == consumed,
+    // total spikes are invariant along every reachable configuration
+    for m in [3usize, 5, 8] {
+        let sys = snapse::generators::ring(m, 2);
+        let total: u64 = sys.initial_config().iter().sum();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(500)).run();
+        for c in rep.visited.in_order() {
+            assert_eq!(c.total_spikes(), total, "ring({m}) config {c}");
+        }
+    }
+}
+
+#[test]
+fn property_monotone_drain_invariant() {
+    // forgetting-free systems with consumed ≥ produced·out_degree never
+    // gain spikes
+    let sys = snapse::generators::counter_chain(5, 4);
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+    let start: u64 = sys.initial_config().iter().sum();
+    for c in rep.visited.in_order() {
+        assert!(c.total_spikes() <= start);
+    }
+}
+
+#[test]
+fn exact_guard_blocks_above_threshold() {
+    // a^2 exact: 3 spikes must NOT fire (vs threshold semantics)
+    let exact = SystemBuilder::new("exact")
+        .neuron(3, vec![Rule::exact(2, 1)])
+        .neuron(0, vec![])
+        .synapse(0, 1)
+        .build()
+        .unwrap();
+    let map = applicable_rules(&exact, &ConfigVector::from(vec![3, 0]));
+    assert!(map.is_halting());
+
+    let thresh = SystemBuilder::new("thresh")
+        .neuron(3, vec![Rule::b3(2)])
+        .neuron(0, vec![])
+        .synapse(0, 1)
+        .build()
+        .unwrap();
+    let map = applicable_rules(&thresh, &ConfigVector::from(vec![3, 0]));
+    assert_eq!(map.psi(), 1);
+}
+
+#[test]
+fn regex_guard_system_full_reachability() {
+    // even_gen (regex guards) explored by both engines
+    let sys = snapse::generators::even_generator();
+    let sim = DirectSimulator::new(&sys);
+    let (direct, complete) = sim.reachable(100);
+    assert!(complete);
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+    let a: std::collections::BTreeSet<_> = direct.iter().collect();
+    let b: std::collections::BTreeSet<_> = rep.visited.in_order().iter().collect();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn forgetting_rules_consume_without_producing() {
+    let sys = SystemBuilder::new("forget")
+        .neuron(2, vec![Rule::forget(2)])
+        .neuron(0, vec![])
+        .synapse(0, 1)
+        .build()
+        .unwrap();
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+    let names: Vec<String> = rep.visited.in_order().iter().map(|c| c.to_string()).collect();
+    assert_eq!(names, vec!["2-0", "0-0"]);
+    assert_eq!(rep.stop, snapse::engine::StopReason::ZeroConfig);
+}
+
+#[test]
+fn mixed_guard_neuron_nondeterminism() {
+    // one neuron with exact(1), threshold(1): at k=1 both fire → Ψ=2;
+    // at k=2 only the threshold rule fires → Ψ=1
+    let sys = SystemBuilder::new("mixed")
+        .neuron(1, vec![Rule::exact(1, 1), Rule::b3(1)])
+        .neuron(0, vec![])
+        .synapse(0, 1)
+        .build()
+        .unwrap();
+    let m1 = applicable_rules(&sys, &ConfigVector::from(vec![1, 0]));
+    assert_eq!(m1.psi(), 2);
+    let m2 = applicable_rules(&sys, &ConfigVector::from(vec![2, 0]));
+    assert_eq!(m2.psi(), 1);
+    assert_eq!(m2.neuron(0), &[1]);
+}

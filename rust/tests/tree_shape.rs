@@ -1,0 +1,92 @@
+//! E2 — integration test: the Figure-4 computation tree.
+
+use snapse::engine::{ConfigVector, ExploreOptions, Explorer};
+
+fn pi_tree(depth: u32) -> snapse::engine::ComputationTree {
+    let sys = snapse::generators::paper_pi();
+    Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(depth).with_tree())
+        .run()
+        .tree
+        .unwrap()
+}
+
+#[test]
+fn figure4_top_levels() {
+    // Figure 4 shows: 2-1-1 → {2-1-2, 1-1-2}; 2-1-2 → {2-1-3, 1-1-3, and
+    // repeats of 2-1-2/1-1-2}; 1-1-2 → {2-0-2, 2-0-1}.
+    let t = pi_tree(2);
+    let root = t.root().unwrap();
+    let c = |s: &str| ConfigVector::parse_dashed(s).unwrap();
+
+    let kids: Vec<String> = t.children(root).map(|e| t.config(e.to).to_string()).collect();
+    assert_eq!(kids, vec!["2-1-2", "1-1-2"]);
+
+    let n212 = t.node_of(&c("2-1-2")).unwrap();
+    let mut kids212: Vec<String> =
+        t.children(n212).map(|e| t.config(e.to).to_string()).collect();
+    kids212.sort();
+    kids212.dedup();
+    assert_eq!(kids212, vec!["1-1-2", "1-1-3", "2-1-2", "2-1-3"]);
+
+    let n112 = t.node_of(&c("1-1-2")).unwrap();
+    let kids112: Vec<String> =
+        t.children(n112).map(|e| t.config(e.to).to_string()).collect();
+    assert_eq!(kids112, vec!["2-0-2", "2-0-1"]);
+}
+
+#[test]
+fn per_depth_discovery_histogram() {
+    // Verified against the BFS levels of the paper's allGenCk: 1 root,
+    // 2 at depth 1, 4 at depth 2, 6 at depth 3, then 6,6 and 5s.
+    let t = pi_tree(9);
+    assert_eq!(t.histogram(), vec![1, 2, 4, 6, 6, 6, 5, 5, 5, 5]);
+    assert_eq!(t.num_nodes(), 45);
+}
+
+#[test]
+fn cross_edges_mark_repeats() {
+    // Fig. 4 draws repeated configurations as leaves; we record them as
+    // cross (non-discovery) edges. 2-1-2 firing (1)(3)(5) loops to itself.
+    let t = pi_tree(2);
+    let c = |s: &str| ConfigVector::parse_dashed(s).unwrap();
+    let n212 = t.node_of(&c("2-1-2")).unwrap();
+    let self_loop = t
+        .edges()
+        .iter()
+        .any(|e| e.from == n212 && e.to == n212 && !e.discovered);
+    assert!(self_loop, "2-1-2 →(10101) 2-1-2 recorded as cross edge");
+}
+
+#[test]
+fn dot_export_is_well_formed() {
+    let t = pi_tree(3);
+    let dot = t.to_dot("pi");
+    assert!(dot.starts_with("digraph"));
+    assert!(dot.ends_with("}\n"));
+    let nodes = dot.lines().filter(|l| l.contains("[label=") && !l.contains("->")).count();
+    assert_eq!(nodes, t.num_nodes());
+    let edges = dot.lines().filter(|l| l.contains(" -> ")).count();
+    assert_eq!(edges, t.num_edges());
+}
+
+#[test]
+fn json_export_has_all_nodes_and_depths() {
+    let t = pi_tree(3);
+    let j = t.to_json();
+    let parsed = snapse::util::JsonValue::parse(&j.to_string_compact()).unwrap();
+    let nodes = parsed.get("nodes").unwrap().as_arr().unwrap();
+    assert_eq!(nodes.len(), t.num_nodes());
+    // root at depth 0
+    assert_eq!(nodes[0].get("depth").unwrap().as_usize(), Some(0));
+    assert_eq!(nodes[0].get("config").unwrap().as_str(), Some("2-1-1"));
+}
+
+#[test]
+fn leaves_are_halting_or_frontier() {
+    let sys = snapse::generators::counter_chain(3, 2);
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first().with_tree()).run();
+    let t = rep.tree.unwrap();
+    let leaves = t.leaves();
+    assert_eq!(leaves.len(), 1, "deterministic chain has one leaf");
+    assert!(t.config(leaves[0]).is_zero());
+}
