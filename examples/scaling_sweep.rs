@@ -11,14 +11,27 @@
 use snapse::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use snapse::util::fmt::{human_rate, Table};
 
+/// `--workers N` on the command line sets the pool size (0 = all cores).
+fn workers_arg() -> usize {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--workers" {
+            return args.next().and_then(|v| v.parse().ok()).unwrap_or(0);
+        }
+    }
+    0
+}
+
 fn run_one(
     sys: &snapse::snp::SnpSystem,
     backend: BackendChoice,
     max_configs: usize,
+    workers: usize,
 ) -> snapse::Result<(usize, u64, f64, std::time::Duration)> {
     let mut coord = Coordinator::new(
         sys,
         CoordinatorConfig {
+            workers,
             max_configs: Some(max_configs),
             backend,
             batch_target: 512,
@@ -39,8 +52,12 @@ fn main() -> snapse::Result<()> {
     if !have_artifacts {
         eprintln!("NOTE: artifacts/ missing — run `make artifacts` for the device column");
     }
+    let workers = workers_arg();
 
-    println!("end-to-end exploration throughput (workload: branching rings)\n");
+    println!(
+        "end-to-end exploration throughput (workload: branching rings, workers = {})\n",
+        if workers == 0 { "all cores".to_string() } else { workers.to_string() }
+    );
     let mut table = Table::new(&[
         "system", "R", "N", "configs", "steps", "host", "device", "speedup",
     ]);
@@ -56,12 +73,13 @@ fn main() -> snapse::Result<()> {
         let sys = snapse::generators::wide_ring(m, w, 3);
         let r = sys.num_rules();
         let n = sys.num_neurons();
-        let (cfgs, steps, host_rate, _) = run_one(&sys, BackendChoice::Host, budget)?;
+        let (cfgs, steps, host_rate, _) = run_one(&sys, BackendChoice::Host, budget, workers)?;
         let (dev_rate_str, speedup) = if have_artifacts {
             match run_one(
                 &sys,
                 BackendChoice::Xla { artifacts: "artifacts".into() },
                 budget,
+                workers,
             ) {
                 Ok((_, _, dev_rate, _)) => {
                     (human_rate(dev_rate), format!("{:.2}x", dev_rate / host_rate))

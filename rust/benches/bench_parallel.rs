@@ -1,0 +1,134 @@
+//! E9 — pipelined parallel exploration speedup.
+//!
+//! Measures the wall-clock of complete ≥10k-configuration explorations
+//! through `Explorer` at 1 (serial reference), 2, 4 and 8 workers, on
+//! wide-frontier workloads where the evaluate stage dominates — the
+//! regime the sharded pipeline targets. A deterministic chain at
+//! `divisibility_checker` scale is included as the honest lower bound:
+//! a 1-wide frontier has no extractable parallelism, so its row shows
+//! pipeline overhead, not speedup.
+//!
+//! Results are written to `BENCH_parallel.json` (the acceptance record
+//! for the parallel-pipeline PR) in addition to the stdout table.
+//!
+//! ```bash
+//! cargo bench --bench bench_parallel            # full (10k configs)
+//! cargo bench --bench bench_parallel -- --quick # CI-sized
+//! ```
+
+mod harness;
+
+use std::time::Instant;
+
+use snapse::engine::{ExploreOptions, Explorer};
+use snapse::snp::SnpSystem;
+use snapse::util::JsonValue;
+
+const WORKERS: [usize; 3] = [2, 4, 8];
+
+/// Best (minimum) wall-clock of `runs` full explorations; returns
+/// `(seconds, visited, steps)`.
+fn measure(sys: &SnpSystem, budget: usize, workers: usize, runs: u32) -> (f64, usize, u64) {
+    let mut best = f64::INFINITY;
+    let mut visited = 0usize;
+    let mut steps = 0u64;
+    for _ in 0..runs {
+        let t = Instant::now();
+        let rep = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first().max_configs(budget).workers(workers),
+        )
+        .run();
+        let secs = t.elapsed().as_secs_f64();
+        std::hint::black_box(rep.visited.len());
+        if secs < best {
+            best = secs;
+        }
+        visited = rep.visited.len();
+        steps = rep.stats.steps;
+    }
+    (best, visited, steps)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (budget, runs) = if quick { (2_000usize, 1u32) } else { (10_000usize, 3u32) };
+
+    // wide-frontier workloads: thousands of rows per level, so the
+    // evaluate stage (C + S·M, conversion, dedup pre-filter) dominates
+    let workloads: Vec<SnpSystem> = vec![
+        snapse::generators::wide_ring(32, 5, 3),
+        snapse::generators::wide_ring(64, 6, 3),
+        // deterministic chain at the same scale (n/d = budget configs):
+        // frontier width 1 ⇒ no parallelism to extract, by construction
+        snapse::generators::divisibility_checker(2 * budget as u64, 2),
+    ];
+
+    println!(
+        "\n== parallel exploration speedup (budget {budget} configs, best of {runs}) ==\n"
+    );
+    println!(
+        "{:<26} {:>8} {:>9} {:>11} {:>9} {:>9} {:>9}",
+        "system", "configs", "steps", "serial", "2w", "4w", "8w"
+    );
+
+    let mut json_rows: Vec<JsonValue> = Vec::new();
+    let mut speedup4_best = 0.0f64;
+    for sys in &workloads {
+        let (serial_s, configs, steps) = measure(sys, budget, 1, runs);
+        let mut per_worker = Vec::new();
+        for w in WORKERS {
+            let (s, _, _) = measure(sys, budget, w, runs);
+            per_worker.push((w, s));
+        }
+        let speedup = |s: f64| serial_s / s;
+        let s4 = per_worker.iter().find(|(w, _)| *w == 4).map(|(_, s)| *s).unwrap();
+        // the chain workload is the honest lower bound, not the claim
+        if sys.name.starts_with("wide_ring") {
+            speedup4_best = speedup4_best.max(speedup(s4));
+        }
+        println!(
+            "{:<26} {:>8} {:>9} {:>11} {:>8.2}x {:>8.2}x {:>8.2}x",
+            sys.name,
+            configs,
+            steps,
+            harness::human_ns(serial_s * 1e9),
+            speedup(per_worker[0].1),
+            speedup(per_worker[1].1),
+            speedup(per_worker[2].1),
+        );
+        json_rows.push(JsonValue::obj([
+            ("system", JsonValue::str(sys.name.clone())),
+            ("configs", JsonValue::num(configs as f64)),
+            ("steps", JsonValue::num(steps as f64)),
+            ("serial_s", JsonValue::num(serial_s)),
+            (
+                "workers",
+                JsonValue::arr(per_worker.iter().map(|(w, s)| {
+                    JsonValue::obj([
+                        ("workers", JsonValue::num(*w as f64)),
+                        ("seconds", JsonValue::num(*s)),
+                        ("speedup", JsonValue::num(serial_s / *s)),
+                    ])
+                })),
+            ),
+        ]));
+    }
+
+    let doc = JsonValue::obj([
+        ("bench", JsonValue::str("bench_parallel".to_string())),
+        ("budget_configs", JsonValue::num(budget as f64)),
+        ("runs_per_point", JsonValue::num(runs as f64)),
+        ("quick", JsonValue::num(quick as u8 as f64)),
+        ("best_wide_ring_speedup_at_4_workers", JsonValue::num(speedup4_best)),
+        ("workloads", JsonValue::arr(json_rows)),
+    ]);
+    let out = doc.to_string_pretty();
+    match std::fs::write("BENCH_parallel.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_parallel.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_parallel.json: {e}"),
+    }
+    println!(
+        "best wide_ring speedup at 4 workers: {speedup4_best:.2}x (target ≥ 2.00x)"
+    );
+}

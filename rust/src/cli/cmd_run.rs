@@ -10,8 +10,11 @@ pub fn run(args: &Args) -> Result<()> {
     let sys = super::load_system(spec)?;
     let depth = args.opt_num::<u32>("depth")?;
     let configs = args.opt_num::<usize>("configs")?;
+    let workers = args.opt_num::<usize>("workers")?;
 
-    // Single-threaded explorer path (reference semantics, tree recording).
+    // Explorer path (reference semantics, tree recording). `--workers N`
+    // engages the pipelined parallel engine; `--single-thread` or tree
+    // recording pin the serial reference path.
     if args.flag("single-thread") || args.flag("paper-log") || args.opt("tree").is_some() {
         let mut opts = ExploreOptions::breadth_first();
         if let Some(d) = depth {
@@ -22,6 +25,11 @@ pub fn run(args: &Args) -> Result<()> {
         }
         if args.opt("tree").is_some() {
             opts = opts.with_tree();
+        }
+        if !args.flag("single-thread") {
+            if let Some(w) = workers {
+                opts = opts.workers(w);
+            }
         }
         let mut explorer = Explorer::new(&sys, opts);
         let report = explorer.run();
@@ -67,7 +75,7 @@ pub fn run(args: &Args) -> Result<()> {
         other => return Err(Error::parse("cli", 0, format!("unknown backend `{other}`"))),
     };
     let cfg = CoordinatorConfig {
-        workers: args.opt_num::<usize>("workers")?.unwrap_or(0),
+        workers: workers.unwrap_or(0),
         max_depth: depth,
         max_configs: configs,
         backend,

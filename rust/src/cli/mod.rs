@@ -165,7 +165,7 @@ fn help_text() -> String {
     );
     s.push_str("commands:\n");
     s.push_str("  run <system>        explore the computation tree (Algorithm 1)\n");
-    s.push_str("      --depth D --configs N --workers W --backend host|xla\n");
+    s.push_str("      --depth D --configs N --workers W (0 = all cores) --backend host|xla\n");
     s.push_str("      --artifacts DIR --paper-log --tree FILE.dot --json --single-thread\n");
     s.push_str("  walk <system>       follow one random branch\n");
     s.push_str("      --steps N --seed S\n");

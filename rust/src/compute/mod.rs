@@ -13,11 +13,13 @@
 
 mod bucket;
 mod host;
+pub mod pool;
 pub mod replay;
 pub mod xla;
 
 pub use bucket::{Bucket, BucketPolicy};
 pub use host::HostBackend;
+pub use pool::{BackendFactory, BackendPool, HostBackendFactory, PooledBackend, XlaBackendFactory};
 pub use replay::{replay_on_device, verify_walk};
 pub use xla::XlaBackend;
 
@@ -56,6 +58,14 @@ impl<'a> StepBatch<'a> {
                 format!("{} elements", self.spikes.len()),
             ));
         }
+        // Spiking vectors are {0,1} strings (paper §2.3); anything else
+        // would silently corrupt `S · M` on every backend.
+        if let Some(pos) = self.spikes.iter().position(|&s| s > 1) {
+            return Err(crate::Error::shape(
+                "spiking entries in {0, 1}".to_string(),
+                format!("spikes[{pos}] = {}", self.spikes[pos]),
+            ));
+        }
         Ok(())
     }
 }
@@ -87,5 +97,14 @@ mod tests {
         assert!(ok.validate().is_ok());
         let bad = StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: &spk };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn non_binary_spiking_entries_rejected() {
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 2, 1, 0];
+        let bad = StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: &spk };
+        let err = bad.validate().unwrap_err();
+        assert!(err.to_string().contains("spikes[2] = 2"), "{err}");
     }
 }

@@ -1,0 +1,276 @@
+//! Backend factories and the worker backend pool.
+//!
+//! The paper's host/device split (§3) was plumbed through the engine as a
+//! single `Box<dyn StepBackend>` — one device queue, one blocking caller.
+//! That serialized the evaluate stage of Algorithm 1 no matter how many
+//! expansion workers ran. This module is the compute side of the sharded
+//! pipeline refactor:
+//!
+//! - [`BackendFactory`] describes *how to make* a step backend, so N
+//!   workers can each own an independent instance (host dense, host CSR,
+//!   or XLA — the XLA instances share one PJRT service thread but keep
+//!   separate device-resident matrices and executables).
+//! - [`BackendPool`] owns the instances and checks them out to workers
+//!   ([`BackendPool::acquire`] blocks until one is free; the guard returns
+//!   it on drop). The engine's pipelined explorer and the coordinator's
+//!   parallel step phase both draw from a pool instead of sharing one
+//!   `&mut dyn StepBackend`.
+//!
+//! Determinism is unaffected: backends are pure functions of their input
+//! batch, so *which* pooled instance evaluates a chunk never changes the
+//! result — only fold order matters, and that is fixed upstream.
+
+use std::sync::{Condvar, Mutex};
+
+use super::{HostBackend, StepBackend};
+use crate::error::Result;
+use crate::matrix::TransitionMatrix;
+
+/// Resolve a requested worker count: `0` means all available
+/// parallelism (fallback 4 when the platform can't report it). The one
+/// policy shared by the explorer and the coordinator.
+pub fn resolve_workers(requested: usize) -> usize {
+    match requested {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        w => w,
+    }
+}
+
+/// Builds independent [`StepBackend`] instances for pool workers.
+pub trait BackendFactory: Send + Sync {
+    /// Backend name for reports (matches the instances' `name()`).
+    fn label(&self) -> &str;
+
+    /// Create a fresh, independently usable backend instance.
+    fn create(&self) -> Result<Box<dyn StepBackend>>;
+}
+
+/// Factory for the pure-Rust host backend (dense/CSR chosen by density).
+pub struct HostBackendFactory {
+    matrix: TransitionMatrix,
+}
+
+impl HostBackendFactory {
+    /// Factory over a transition matrix.
+    pub fn new(matrix: TransitionMatrix) -> Self {
+        HostBackendFactory { matrix }
+    }
+}
+
+impl BackendFactory for HostBackendFactory {
+    fn label(&self) -> &str {
+        "host"
+    }
+
+    fn create(&self) -> Result<Box<dyn StepBackend>> {
+        Ok(Box::new(HostBackend::new(&self.matrix)))
+    }
+}
+
+/// Factory for XLA/PJRT device backends over AOT artifacts. All instances
+/// share one [`PjRt`](crate::runtime::PjRt) service handle; each `create`
+/// compiles its own executables and uploads its own device-resident
+/// matrix, so pooled instances never contend on mutable state.
+pub struct XlaBackendFactory {
+    rt: std::sync::Arc<crate::runtime::PjRt>,
+    matrix: TransitionMatrix,
+    manifest: crate::runtime::Manifest,
+}
+
+impl XlaBackendFactory {
+    /// Factory over a runtime handle, matrix and artifact manifest.
+    pub fn new(
+        rt: std::sync::Arc<crate::runtime::PjRt>,
+        matrix: TransitionMatrix,
+        manifest: crate::runtime::Manifest,
+    ) -> Self {
+        XlaBackendFactory { rt, matrix, manifest }
+    }
+}
+
+impl BackendFactory for XlaBackendFactory {
+    fn label(&self) -> &str {
+        "xla"
+    }
+
+    fn create(&self) -> Result<Box<dyn StepBackend>> {
+        let backend = super::xla::backend_from_artifacts(
+            self.rt.clone(),
+            &self.matrix,
+            &self.manifest,
+        )?;
+        Ok(Box::new(backend))
+    }
+}
+
+/// A checked-out pool backend; returns to the pool on drop.
+pub struct PooledBackend<'a> {
+    pool: &'a BackendPool,
+    backend: Option<Box<dyn StepBackend>>,
+}
+
+impl std::ops::Deref for PooledBackend<'_> {
+    type Target = dyn StepBackend;
+    fn deref(&self) -> &Self::Target {
+        self.backend.as_deref().expect("pooled backend present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledBackend<'_> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        self.backend.as_deref_mut().expect("pooled backend present until drop")
+    }
+}
+
+impl Drop for PooledBackend<'_> {
+    fn drop(&mut self) {
+        if let Some(b) = self.backend.take() {
+            self.pool.release(b);
+        }
+    }
+}
+
+/// A fixed set of step backends checked out to worker threads.
+pub struct BackendPool {
+    name: String,
+    slots: Mutex<Vec<Box<dyn StepBackend>>>,
+    freed: Condvar,
+    size: usize,
+    max_batch: usize,
+}
+
+impl BackendPool {
+    /// Build a pool of `n` independent instances from a factory.
+    pub fn build(factory: &dyn BackendFactory, n: usize) -> Result<BackendPool> {
+        let n = n.max(1);
+        let mut slots: Vec<Box<dyn StepBackend>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            slots.push(factory.create()?);
+        }
+        Ok(BackendPool::from_backends(factory.label().to_string(), slots))
+    }
+
+    /// Wrap caller-supplied backends (e.g. a single custom instance).
+    ///
+    /// # Panics
+    /// When `backends` is empty.
+    pub fn from_backends(name: String, backends: Vec<Box<dyn StepBackend>>) -> BackendPool {
+        assert!(!backends.is_empty(), "backend pool needs at least one instance");
+        let size = backends.len();
+        let max_batch = backends.iter().map(|b| b.max_batch()).min().unwrap_or(usize::MAX);
+        BackendPool { name, slots: Mutex::new(backends), freed: Condvar::new(), size, max_batch }
+    }
+
+    /// Backend name for reports.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of instances (free or checked out).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Smallest preferred batch size across instances.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Instances currently available (not checked out).
+    pub fn available(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// Check a backend out, blocking until one is free.
+    pub fn acquire(&self) -> PooledBackend<'_> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            if let Some(b) = slots.pop() {
+                return PooledBackend { pool: self, backend: Some(b) };
+            }
+            slots = self.freed.wait(slots).unwrap();
+        }
+    }
+
+    /// Check a backend out without blocking.
+    pub fn try_acquire(&self) -> Option<PooledBackend<'_>> {
+        let b = self.slots.lock().unwrap().pop()?;
+        Some(PooledBackend { pool: self, backend: Some(b) })
+    }
+
+    fn release(&self, backend: Box<dyn StepBackend>) {
+        self.slots.lock().unwrap().push(backend);
+        self.freed.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::StepBatch;
+    use crate::matrix::build_matrix;
+
+    fn pool(n: usize) -> BackendPool {
+        let m = build_matrix(&crate::generators::paper_pi());
+        BackendPool::build(&HostBackendFactory::new(m), n).unwrap()
+    }
+
+    #[test]
+    fn checkout_and_return() {
+        let p = pool(2);
+        assert_eq!(p.size(), 2);
+        assert_eq!(p.available(), 2);
+        {
+            let _a = p.acquire();
+            let _b = p.acquire();
+            assert_eq!(p.available(), 0);
+            assert!(p.try_acquire().is_none());
+        }
+        assert_eq!(p.available(), 2, "guards return instances on drop");
+    }
+
+    #[test]
+    fn pooled_instances_evaluate_batches() {
+        let p = pool(1);
+        let mut be = p.acquire();
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let out = be
+            .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: &spk })
+            .unwrap();
+        assert_eq!(out, vec![2, 1, 2]);
+        assert_eq!(be.name(), "host");
+    }
+
+    #[test]
+    fn acquire_blocks_until_release() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let p = std::sync::Arc::new(pool(1));
+        let got = std::sync::Arc::new(AtomicBool::new(false));
+        let guard = p.acquire();
+        let (p2, got2) = (p.clone(), got.clone());
+        let h = std::thread::spawn(move || {
+            let _b = p2.acquire(); // blocks until the main thread releases
+            got2.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!got.load(Ordering::SeqCst), "acquire must block while checked out");
+        drop(guard);
+        h.join().unwrap();
+        assert!(got.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn factory_labels() {
+        let m = build_matrix(&crate::generators::paper_pi());
+        let f = HostBackendFactory::new(m);
+        assert_eq!(f.label(), "host");
+        assert_eq!(pool(3).name(), "host");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one instance")]
+    fn empty_pool_rejected() {
+        let _ = BackendPool::from_backends("none".into(), Vec::new());
+    }
+}

@@ -33,6 +33,8 @@ pub fn replay_on_device(
     let steps = record.choices.len();
     let max_k = entries.last().unwrap().steps;
     let matrix: crate::matrix::TransitionMatrix = crate::matrix::build_matrix(sys);
+    // checked f32 marshalling: fail loudly on entries outside the exact range
+    let matrix_f32 = matrix.try_to_f32_row_major()?;
     let mut current = record.path[0].clone();
     let mut done = 0usize;
     // compile-once cache for the chunk loop
@@ -67,7 +69,7 @@ pub fn replay_on_device(
             exec,
             vec![
                 Arg::Host { data: s_seq, dims: vec![k, 1, r] },
-                Arg::Host { data: matrix.to_f32_row_major(), dims: vec![r, n] },
+                Arg::Host { data: matrix_f32.clone(), dims: vec![r, n] },
                 Arg::Host { data: c0, dims: vec![1, n] },
             ],
         )?;

@@ -57,12 +57,12 @@ impl XlaBackend {
             return Err(Error::shape(format!("physical ≥ {r}x{n}"), format!("{rp}x{np}")));
         }
         execs.sort_by_key(|(b, _)| *b);
-        // zero-pad the matrix into the physical shape and upload once
+        // marshal through f32 with the exactness check (|v| < 2²⁴), then
+        // zero-pad into the physical shape and upload once
+        let flat = matrix.try_to_f32_row_major()?;
         let mut matrix_f32 = vec![0f32; rp * np];
         for row in 0..r {
-            for (col, &v) in matrix.row(row).iter().enumerate() {
-                matrix_f32[row * np + col] = v as f32;
-            }
+            matrix_f32[row * np..row * np + n].copy_from_slice(&flat[row * n..(row + 1) * n]);
         }
         let matrix_dev = rt.upload(matrix_f32, vec![rp, np])?;
         Ok(XlaBackend { rt, matrix_dev, r, n, rp, np, execs })

@@ -3,9 +3,15 @@
 //! Rows accumulate in flat buffers; [`Batcher::run`] slices them into
 //! chunks of at most `target` rows (and at most the backend's own
 //! `max_batch`), preserving order so the fold stage sees deterministic
-//! results.
+//! results. [`Batcher::run_pool`] does the same across a
+//! [`BackendPool`] — chunks evaluate concurrently on independent backend
+//! instances and reassemble in row order, so the output is identical to
+//! the serial dispatch for any worker count.
 
-use crate::compute::{StepBackend, StepBatch};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::compute::{BackendPool, StepBackend, StepBatch};
 use crate::engine::ConfigVector;
 use crate::error::Result;
 
@@ -91,6 +97,69 @@ impl Batcher {
         }
         Ok((out, total as u64, batches))
     }
+
+    /// Dispatch everything across a backend pool: chunks of at most
+    /// `target` rows evaluate concurrently on up to `workers` pooled
+    /// instances; results reassemble in row order (bit-identical to
+    /// [`Batcher::run`] on one instance).
+    pub fn run_pool(
+        self,
+        pool: &BackendPool,
+        workers: usize,
+    ) -> Result<(Vec<ConfigVector>, u64, u64)> {
+        let total = self.rows;
+        if total == 0 {
+            return Ok((Vec::new(), 0, 0));
+        }
+        let cap = self.target.min(pool.max_batch()).max(1);
+        let chunks = total.div_ceil(cap);
+        let workers = workers.min(pool.size()).min(chunks).max(1);
+        if workers == 1 {
+            let mut backend = pool.acquire();
+            return self.run(&mut *backend);
+        }
+        let mut init: Vec<Option<Result<Vec<ConfigVector>>>> = Vec::new();
+        init.resize_with(chunks, || None);
+        let slots = Mutex::new(init);
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut backend = pool.acquire();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= chunks {
+                            break;
+                        }
+                        let row = i * cap;
+                        let take = (total - row).min(cap);
+                        let batch = StepBatch {
+                            b: take,
+                            n: self.n,
+                            r: self.r,
+                            configs: &self.configs[row * self.n..(row + take) * self.n],
+                            spikes: &self.spikes[row * self.r..(row + take) * self.r],
+                        };
+                        let res = backend.step_batch(&batch).and_then(|out| {
+                            let mut v = Vec::with_capacity(take);
+                            for b in 0..take {
+                                v.push(ConfigVector::from_signed(
+                                    &out[b * self.n..(b + 1) * self.n],
+                                )?);
+                            }
+                            Ok(v)
+                        });
+                        slots.lock().unwrap()[i] = Some(res);
+                    }
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(total);
+        for slot in slots.into_inner().unwrap() {
+            out.extend(slot.expect("every chunk claimed by a worker")?);
+        }
+        Ok((out, total as u64, chunks as u64))
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +198,34 @@ mod tests {
         let (out, steps, batches) = batcher.run(&mut backend).unwrap();
         assert!(out.is_empty());
         assert_eq!((steps, batches), (0, 0));
+    }
+
+    #[test]
+    fn pool_dispatch_matches_serial_dispatch() {
+        use crate::compute::{BackendPool, HostBackendFactory};
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let c0 = ConfigVector::from(vec![2, 1, 1]);
+        let fill = |batcher: &mut Batcher| {
+            for i in 0..23u32 {
+                let s: &[u8] = if i % 2 == 0 { &[1, 0, 1, 1, 0] } else { &[0, 1, 1, 1, 0] };
+                batcher.push(&c0, s);
+            }
+        };
+        let mut serial = Batcher::new(3, 5, 4);
+        fill(&mut serial);
+        let mut backend = HostBackend::new(&m);
+        let (want, steps, _) = serial.run(&mut backend).unwrap();
+        assert_eq!(steps, 23);
+        for workers in [1usize, 2, 4] {
+            let pool = BackendPool::build(&HostBackendFactory::new(m.clone()), workers).unwrap();
+            let mut batcher = Batcher::new(3, 5, 4);
+            fill(&mut batcher);
+            let (got, steps, batches) = batcher.run_pool(&pool, workers).unwrap();
+            assert_eq!(steps, 23);
+            assert_eq!(batches, 6, "ceil(23/4)");
+            assert_eq!(got, want, "workers={workers}");
+        }
     }
 
     #[test]

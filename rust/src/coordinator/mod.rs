@@ -6,8 +6,9 @@
 //! 1. **Expand** (parallel): the current level is partitioned across
 //!    worker threads; each computes applicability and enumerates valid
 //!    spiking vectors (paper Algorithm 2) into flat batch buffers.
-//! 2. **Step** (device): the batcher packs pairs into shape buckets and
-//!    dispatches them to the step backend (host or XLA/PJRT).
+//! 2. **Step** (parallel, device): the batcher chunks the rows and
+//!    dispatches them concurrently across a [`BackendPool`] of
+//!    independent step backends (host or XLA/PJRT), one per worker.
 //! 3. **Fold** (parallel): results are deduplicated in a sharded visited
 //!    store; newly discovered configurations — tagged for deterministic
 //!    ordering — form the next level.
@@ -26,7 +27,9 @@ pub use metrics::{LevelMetrics, Metrics};
 pub use queue::LevelQueue;
 pub use worker::{LevelDriver, LevelOutcome};
 
-use crate::compute::{HostBackend, StepBackend};
+use crate::compute::{
+    BackendPool, HostBackend, HostBackendFactory, StepBackend, XlaBackendFactory,
+};
 use crate::engine::{ConfigVector, StopReason, VisitedStore};
 use crate::error::Result;
 use crate::matrix::{build_matrix, TransitionMatrix};
@@ -110,11 +113,7 @@ impl<'a> Coordinator<'a> {
 
     /// The number of worker threads that will be used.
     pub fn effective_workers(&self) -> usize {
-        if self.cfg.workers > 0 {
-            self.cfg.workers
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        }
+        crate::compute::pool::resolve_workers(self.cfg.workers)
     }
 
     /// Run from the initial configuration.
@@ -124,25 +123,30 @@ impl<'a> Coordinator<'a> {
 
     /// Run from a given configuration.
     pub fn run_from(&mut self, c0: ConfigVector) -> Result<RunReport> {
-        // Build the backend.
-        let mut backend: Box<dyn StepBackend> = match &mut self.cfg.backend {
-            BackendChoice::Host => Box::new(HostBackend::new(&self.matrix)),
+        let workers = self.effective_workers();
+        // Build the backend pool: one independent instance per worker, so
+        // the step phase can dispatch chunks concurrently.
+        let pool: BackendPool = match &mut self.cfg.backend {
+            BackendChoice::Host => {
+                BackendPool::build(&HostBackendFactory::new(self.matrix.clone()), workers)?
+            }
             BackendChoice::Xla { artifacts } => {
                 let rt = crate::runtime::PjRt::cpu()?;
                 let manifest = crate::runtime::Manifest::load(artifacts)?;
-                Box::new(crate::compute::xla::backend_from_artifacts(
-                    rt,
-                    &self.matrix,
-                    &manifest,
-                )?)
+                BackendPool::build(
+                    &XlaBackendFactory::new(rt, self.matrix.clone(), manifest),
+                    workers,
+                )?
             }
             BackendChoice::Custom(b) => {
-                // take ownership; replace with Host to keep cfg valid
+                // take ownership; replace with Host to keep cfg valid —
+                // a single instance cannot be replicated, so the pool has
+                // one slot and the step phase runs serially over it
                 let owned = std::mem::replace(b, Box::new(HostBackend::new(&self.matrix)));
-                owned
+                let name = owned.name().to_string();
+                BackendPool::from_backends(name, vec![owned])
             }
         };
-        let workers = self.effective_workers();
         let driver = worker::LevelDriver::new(
             self.sys,
             &self.matrix,
@@ -173,7 +177,7 @@ impl<'a> Coordinator<'a> {
             }
             let lvl = driver.process_level(
                 &level,
-                &mut *backend,
+                &pool,
                 &mut visited,
                 &mut halting,
                 self.cfg.max_configs,
@@ -194,7 +198,7 @@ impl<'a> Coordinator<'a> {
             stop = StopReason::ZeroConfig;
         }
         metrics.total_elapsed = start.elapsed();
-        metrics.backend = backend.name().to_string();
+        metrics.backend = pool.name().to_string();
         metrics.workers = workers;
         Ok(RunReport { visited, stop, halting, metrics })
     }

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use super::batcher::Batcher;
 use super::metrics::LevelMetrics;
-use crate::compute::StepBackend;
+use crate::compute::BackendPool;
 use crate::engine::{applicable_rules_into, ApplicabilityMap, ConfigVector, SpikingEnumeration, VisitedStore};
 use crate::error::Result;
 use crate::matrix::TransitionMatrix;
@@ -85,13 +85,17 @@ impl<'a> LevelDriver<'a> {
 
     /// Expand, evaluate and fold one level.
     ///
+    /// The step phase draws from `pool`: each window's rows are chunked
+    /// and evaluated concurrently on up to `workers` pooled backend
+    /// instances (order-preserving, so results stay deterministic).
+    ///
     /// `budget`: stop expanding further windows once the visited store
     /// holds at least this many configurations (resource bound, paper
     /// criterion 2 stays exact when `None`).
     pub fn process_level(
         &self,
         level: &[ConfigVector],
-        backend: &mut dyn StepBackend,
+        pool: &BackendPool,
         visited: &mut VisitedStore,
         halting: &mut Vec<ConfigVector>,
         budget: Option<usize>,
@@ -136,7 +140,7 @@ impl<'a> LevelDriver<'a> {
             };
             out.expand_time += t0.elapsed();
 
-            // --- step (batched through the backend) -----------------------
+            // --- step (batched across the backend pool) -------------------
             let t1 = Instant::now();
             let total_rows: usize = expansions.iter().map(|e| e.rows).sum();
             let mut batcher = Batcher::with_capacity(n, r, self.batch_target, total_rows);
@@ -148,7 +152,7 @@ impl<'a> LevelDriver<'a> {
             for e in expansions {
                 halts.extend(e.halting);
             }
-            let (results, steps, batches) = batcher.run(backend)?;
+            let (results, steps, batches) = batcher.run_pool(pool, self.workers)?;
             out.steps += steps;
             out.batches += batches;
             out.step_time += t1.elapsed();
@@ -211,21 +215,25 @@ impl From<&LevelOutcome> for LevelMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compute::HostBackend;
+    use crate::compute::HostBackendFactory;
     use crate::matrix::build_matrix;
+
+    fn pool(m: &TransitionMatrix, n: usize) -> BackendPool {
+        BackendPool::build(&HostBackendFactory::new(m.clone()), n).unwrap()
+    }
 
     #[test]
     fn single_level_matches_paper() {
         let sys = crate::generators::paper_pi();
         let m = build_matrix(&sys);
         let driver = LevelDriver::new(&sys, &m, 2, 4);
-        let mut backend = HostBackend::new(&m);
+        let backends = pool(&m, 2);
         let mut visited = VisitedStore::new();
         let c0 = ConfigVector::from(vec![2, 1, 1]);
         visited.insert(c0.clone());
         let mut halting = Vec::new();
         let out = driver
-            .process_level(&[c0], &mut backend, &mut visited, &mut halting, None)
+            .process_level(&[c0], &backends, &mut visited, &mut halting, None)
             .unwrap();
         let names: Vec<String> = out.next_level.iter().map(|c| c.to_string()).collect();
         assert_eq!(names, vec!["2-1-2", "1-1-2"]);
@@ -240,7 +248,7 @@ mod tests {
         let sys = crate::generators::paper_pi();
         let m = build_matrix(&sys);
         let driver = LevelDriver::new(&sys, &m, 3, 4);
-        let mut backend = HostBackend::new(&m);
+        let backends = pool(&m, 3);
         let mut visited = VisitedStore::new();
         let mut halting = Vec::new();
         let level = vec![
@@ -252,7 +260,7 @@ mod tests {
             visited.insert(c.clone());
         }
         driver
-            .process_level(&level, &mut backend, &mut visited, &mut halting, None)
+            .process_level(&level, &backends, &mut visited, &mut halting, None)
             .unwrap();
         assert_eq!(
             halting.iter().map(|c| c.to_string()).collect::<Vec<_>>(),
@@ -265,7 +273,7 @@ mod tests {
         let sys = crate::generators::paper_pi();
         let m = build_matrix(&sys);
         let driver = LevelDriver::new(&sys, &m, 1, 4).with_window(1);
-        let mut backend = HostBackend::new(&m);
+        let backends = pool(&m, 1);
         let mut visited = VisitedStore::new();
         let mut halting = Vec::new();
         // two-parent level with a budget that is already met
@@ -277,7 +285,7 @@ mod tests {
             visited.insert(c.clone());
         }
         let out = driver
-            .process_level(&level, &mut backend, &mut visited, &mut halting, Some(2))
+            .process_level(&level, &backends, &mut visited, &mut halting, Some(2))
             .unwrap();
         assert!(out.truncated);
         assert!(out.next_level.is_empty());
@@ -290,7 +298,7 @@ mod tests {
         let mut runs = Vec::new();
         for window in [1usize, 2, 1024] {
             let driver = LevelDriver::new(&sys, &m, 2, 8).with_window(window);
-            let mut backend = HostBackend::new(&m);
+            let backends = pool(&m, 2);
             let mut visited = VisitedStore::new();
             let c0 = ConfigVector::new(sys.initial_config());
             visited.insert(c0.clone());
@@ -298,7 +306,7 @@ mod tests {
             let mut level = vec![c0];
             while !level.is_empty() {
                 let out = driver
-                    .process_level(&level, &mut backend, &mut visited, &mut halting, None)
+                    .process_level(&level, &backends, &mut visited, &mut halting, None)
                     .unwrap();
                 level = out.next_level;
             }

@@ -66,8 +66,97 @@ impl VisitedStore {
     }
 }
 
+/// Hash-striped membership store for the pipelined explorer.
+///
+/// The paper's `allGenCk` check is the serial choke point of Algorithm 1:
+/// every generated configuration funnels through one set. Here the key
+/// space is striped across `2^log2_shards` independently locked shards so
+/// evaluation workers can run **duplicate pre-filtering** (`contains`)
+/// concurrently with the fold thread's authoritative `insert`s — readers
+/// and the writer only collide when they hash to the same stripe.
+///
+/// Protocol (this is what keeps the output byte-identical to the serial
+/// explorer): workers may only *drop definite duplicates* — a config
+/// already present can never become "new" later, so dropping it is safe in
+/// any interleaving. Newness itself is decided solely by the fold thread,
+/// which inserts in canonical (chunk-seq, row) order; insertion order is
+/// tracked outside this store by the fold's [`VisitedStore`].
+#[derive(Debug)]
+pub struct ShardedVisitedStore {
+    shards: Vec<std::sync::Mutex<crate::util::FxHashSet<ConfigVector>>>,
+    mask: usize,
+}
+
+impl ShardedVisitedStore {
+    /// Create with `2^log2_shards` stripes.
+    pub fn new(log2_shards: u32) -> Self {
+        let n = 1usize << log2_shards;
+        ShardedVisitedStore {
+            shards: (0..n)
+                .map(|_| std::sync::Mutex::new(crate::util::FxHashSet::default()))
+                .collect(),
+            mask: n - 1,
+        }
+    }
+
+    /// Default stripe count (64): enough to make reader/writer collisions
+    /// rare at typical worker counts without wasting memory.
+    pub fn with_default_shards() -> Self {
+        ShardedVisitedStore::new(6)
+    }
+
+    fn shard_of(&self, c: &ConfigVector) -> usize {
+        use std::hash::{BuildHasher, Hash, Hasher};
+        let mut h = crate::util::FxBuildHasher.build_hasher();
+        c.hash(&mut h);
+        // The inner FxHashSet buckets on the LOW bits of this same hash;
+        // selecting the stripe from bits 32.. keeps stripe choice and
+        // bucket choice uncorrelated (low-bit striping would cluster every
+        // stripe's keys into 1/shards of its table's buckets).
+        ((h.finish() >> 32) as usize) & self.mask
+    }
+
+    /// Number of stripes.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Insert; returns `true` when the configuration was new.
+    pub fn insert(&self, c: &ConfigVector) -> bool {
+        let s = self.shard_of(c);
+        let mut guard = self.shards[s].lock().unwrap();
+        if guard.contains(c) {
+            false
+        } else {
+            guard.insert(c.clone());
+            true
+        }
+    }
+
+    /// Membership test (lock-striped; safe concurrently with `insert`).
+    pub fn contains(&self, c: &ConfigVector) -> bool {
+        let s = self.shard_of(c);
+        self.shards[s].lock().unwrap().contains(c)
+    }
+
+    /// Total entries across stripes.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// True when no entries exist.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// A sharded visited store for the multi-threaded coordinator: shard by
 /// hash so concurrent frontier workers contend on different locks.
+///
+/// Kept separate from [`ShardedVisitedStore`]: this one carries per-entry
+/// sequence tags for [`ShardedVisited::into_ordered`], and its inner
+/// `HashMap` uses std's seeded SipHash, so low-bit FxHash striping cannot
+/// correlate with its bucket choice.
 #[derive(Debug)]
 pub struct ShardedVisited {
     shards: Vec<std::sync::Mutex<std::collections::HashMap<ConfigVector, u32>>>,
@@ -159,6 +248,48 @@ mod tests {
         v.insert(c(&[2, 1, 2]));
         v.insert(c(&[1, 1, 2]));
         assert_eq!(v.render_all_gen_ck(), "['2-1-1', '2-1-2', '1-1-2']");
+    }
+
+    #[test]
+    fn striped_store_basic() {
+        let s = ShardedVisitedStore::with_default_shards();
+        assert_eq!(s.shard_count(), 64);
+        assert!(s.is_empty());
+        assert!(s.insert(&c(&[2, 1, 1])));
+        assert!(!s.insert(&c(&[2, 1, 1])), "repeat rejected");
+        assert!(s.contains(&c(&[2, 1, 1])));
+        assert!(!s.contains(&c(&[1, 1, 2])));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn striped_store_concurrent_readers_and_writer() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let s = Arc::new(ShardedVisitedStore::new(3));
+        let hits = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            // one writer inserting 500 keys…
+            scope.spawn(|| {
+                for i in 0..500u64 {
+                    s.insert(&ConfigVector::from(vec![i, i % 7]));
+                }
+            });
+            // …while three readers probe the same key space
+            for _ in 0..3 {
+                let s = Arc::clone(&s);
+                let hits = Arc::clone(&hits);
+                scope.spawn(move || {
+                    for i in 0..500u64 {
+                        if s.contains(&ConfigVector::from(vec![i, i % 7])) {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(s.len(), 500);
+        assert!(s.contains(&ConfigVector::from(vec![499, 499 % 7])));
     }
 
     #[test]

@@ -10,6 +10,19 @@
 //! every `(C, S)` pair of the frontier into as few backend calls as
 //! possible — the batching the paper's §6 lists as future work ("deeper
 //! understanding … for very large systems").
+//!
+//! Two execution modes share this interface:
+//!
+//! - **serial reference path** (`workers == 1`, the default): one backend,
+//!   one thread, the exact expand→evaluate→fold loop of the paper — this
+//!   is the semantics oracle every other path is tested against.
+//! - **pipelined parallel path** (`workers > 1`): expansion runs on the
+//!   main thread while a pool of workers (each owning its own
+//!   [`StepBackend`] from a [`BackendFactory`]) evaluates chunks
+//!   concurrently and pre-filters duplicates through a hash-striped
+//!   [`ShardedVisitedStore`](super::ShardedVisitedStore); results fold in
+//!   canonical (chunk, row) order, so `allGenCk` is byte-identical to the
+//!   serial path for every worker count (see [`super::parallel`]).
 
 use std::time::{Duration, Instant};
 
@@ -19,7 +32,7 @@ use super::dedup::VisitedStore;
 use super::spiking::{SpikingEnumeration, SpikingVector};
 use super::stop::StopReason;
 use super::tree::ComputationTree;
-use crate::compute::{HostBackend, StepBackend, StepBatch};
+use crate::compute::{BackendFactory, HostBackendFactory, StepBackend, StepBatch};
 use crate::matrix::{build_matrix, TransitionMatrix};
 use crate::snp::SnpSystem;
 
@@ -39,14 +52,22 @@ pub struct ExploreOptions {
     pub order: SearchOrder,
     /// Do not expand configurations at depth ≥ this (root = 0).
     pub max_depth: Option<u32>,
-    /// Stop once this many distinct configurations were generated.
+    /// Stop once this many distinct configurations were generated. The
+    /// bound is exact: folding stops enqueuing the moment the cap is hit,
+    /// so `visited.len()` never exceeds it.
     pub max_configs: Option<usize>,
     /// Wall-clock budget.
     pub time_budget: Option<Duration>,
     /// Record the full computation tree (paper Fig. 4); costs memory.
+    /// Forces the serial path (the tree is an inherently ordered record).
     pub record_tree: bool,
-    /// Chunk size cap for backend batches (default: backend's own max).
+    /// Chunk size cap for backend batches (default: backend's own max on
+    /// the serial path; a pipeline-tuned chunk size on the parallel path).
     pub batch_cap: Option<usize>,
+    /// Evaluation worker threads: `1` = the serial reference path,
+    /// `0` = all available parallelism, `N > 1` = pipelined parallel
+    /// exploration over a pool of `N` backends.
+    pub workers: usize,
 }
 
 impl ExploreOptions {
@@ -59,6 +80,7 @@ impl ExploreOptions {
             time_budget: None,
             record_tree: false,
             batch_cap: None,
+            workers: 1,
         }
     }
 
@@ -73,7 +95,7 @@ impl ExploreOptions {
         self
     }
 
-    /// Limit the number of generated configurations.
+    /// Limit the number of generated configurations (exact).
     pub fn max_configs(mut self, n: usize) -> Self {
         self.max_configs = Some(n);
         self
@@ -96,6 +118,12 @@ impl ExploreOptions {
         self.batch_cap = Some(b);
         self
     }
+
+    /// Use `n` evaluation workers (0 = available parallelism).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
 }
 
 /// Counters accumulated during a run.
@@ -113,6 +141,8 @@ pub struct ExploreStats {
     pub halting: u64,
     /// Wall-clock time.
     pub elapsed: Duration,
+    /// Worker threads used (1 = serial path).
+    pub workers: usize,
 }
 
 /// Result of an exploration.
@@ -146,35 +176,73 @@ struct Pending {
     node: usize, // tree node id (0 when tree off)
 }
 
-/// The explorer. Owns the matrix and a step backend.
+/// Where the explorer gets its step backend(s).
+enum BackendSource {
+    /// One caller-supplied instance; restricts the run to the serial path.
+    Single(Box<dyn StepBackend>),
+    /// A factory — the parallel path creates one instance per worker; the
+    /// serial path creates a single instance per run.
+    Factory(std::sync::Arc<dyn BackendFactory>),
+}
+
+/// The explorer. Owns the matrix and a backend source.
 pub struct Explorer<'a> {
     sys: &'a SnpSystem,
     matrix: TransitionMatrix,
-    backend: Box<dyn StepBackend>,
+    source: BackendSource,
     opts: ExploreOptions,
 }
 
 impl<'a> Explorer<'a> {
-    /// Explorer over the host backend.
+    /// Explorer over the host backend (factory-backed: `workers > 1`
+    /// engages the pipelined parallel path).
     pub fn new(sys: &'a SnpSystem, opts: ExploreOptions) -> Self {
         let matrix = build_matrix(sys);
-        let backend = Box::new(HostBackend::new(&matrix));
-        Explorer { sys, matrix, backend, opts }
+        let source =
+            BackendSource::Factory(std::sync::Arc::new(HostBackendFactory::new(matrix.clone())));
+        Explorer { sys, matrix, source, opts }
     }
 
-    /// Explorer over a custom backend (e.g. the XLA device backend).
+    /// Explorer over one custom backend instance. A single instance cannot
+    /// be replicated across workers, so this constructor always runs the
+    /// serial reference path; use [`Explorer::with_factory`] for parallel
+    /// custom backends.
     pub fn with_backend(
         sys: &'a SnpSystem,
         opts: ExploreOptions,
         backend: Box<dyn StepBackend>,
     ) -> Self {
         let matrix = build_matrix(sys);
-        Explorer { sys, matrix, backend, opts }
+        Explorer { sys, matrix, source: BackendSource::Single(backend), opts }
+    }
+
+    /// Explorer over a backend factory (e.g.
+    /// [`XlaBackendFactory`](crate::compute::XlaBackendFactory)); each
+    /// worker of the parallel path owns an instance built from it.
+    ///
+    /// # Panics
+    /// [`Explorer::run`]/[`Explorer::run_from`] panic if the factory
+    /// fails to create an instance (e.g. missing artifacts) — the
+    /// explorer's report-returning API has no error channel. Use the
+    /// [`Coordinator`](crate::coordinator::Coordinator), which returns
+    /// `Result`, when backend construction failure must be recoverable.
+    pub fn with_factory(
+        sys: &'a SnpSystem,
+        opts: ExploreOptions,
+        factory: std::sync::Arc<dyn BackendFactory>,
+    ) -> Self {
+        let matrix = build_matrix(sys);
+        Explorer { sys, matrix, source: BackendSource::Factory(factory), opts }
     }
 
     /// The transition matrix in use.
     pub fn matrix(&self) -> &TransitionMatrix {
         &self.matrix
+    }
+
+    /// Worker threads a run would use (resolves `workers == 0`).
+    pub fn effective_workers(&self) -> usize {
+        crate::compute::pool::resolve_workers(self.opts.workers)
     }
 
     /// Run from the system's initial configuration.
@@ -184,141 +252,174 @@ impl<'a> Explorer<'a> {
 
     /// Run from an arbitrary start configuration.
     pub fn run_from(&mut self, c0: ConfigVector) -> ExploreReport {
-        let start = Instant::now();
-        let n = self.sys.num_neurons();
-        let r = self.sys.num_rules();
-        let batch_cap = self
-            .opts
-            .batch_cap
-            .unwrap_or_else(|| self.backend.max_batch())
-            .clamp(1, 1 << 20);
+        let workers = self.effective_workers();
+        if workers > 1 && !self.opts.record_tree {
+            if let BackendSource::Factory(factory) = &self.source {
+                return super::parallel::run_pipelined(
+                    self.sys,
+                    factory.as_ref(),
+                    &self.opts,
+                    workers,
+                    c0,
+                );
+            }
+        }
+        let mut created;
+        let backend: &mut dyn StepBackend = match &mut self.source {
+            BackendSource::Single(b) => &mut **b,
+            BackendSource::Factory(f) => {
+                created = f.create().expect("backend factory failed");
+                &mut *created
+            }
+        };
+        run_serial(self.sys, backend, &self.opts, c0)
+    }
+}
 
-        let mut visited = VisitedStore::new();
-        let mut tree = if self.opts.record_tree { Some(ComputationTree::new()) } else { None };
-        let mut halting_configs = Vec::new();
-        let mut stats = ExploreStats::default();
-        let mut depth_reached = 0u32;
-        let mut saw_zero = false;
+/// The serial reference path: the paper's Algorithm 1, one thread, one
+/// backend. Every other execution mode is tested against this.
+fn run_serial(
+    sys: &SnpSystem,
+    backend: &mut dyn StepBackend,
+    opts: &ExploreOptions,
+    c0: ConfigVector,
+) -> ExploreReport {
+    let start = Instant::now();
+    let n = sys.num_neurons();
+    let r = sys.num_rules();
+    let batch_cap = opts.batch_cap.unwrap_or_else(|| backend.max_batch()).clamp(1, 1 << 20);
 
-        visited.insert(c0.clone());
-        let root_node = tree.as_mut().map(|t| t.set_root(c0.clone())).unwrap_or(0);
-        let mut queue: std::collections::VecDeque<Pending> = std::collections::VecDeque::new();
-        queue.push_back(Pending { config: c0, depth: 0, node: root_node });
+    let mut visited = VisitedStore::new();
+    let mut tree = if opts.record_tree { Some(ComputationTree::new()) } else { None };
+    let mut halting_configs = Vec::new();
+    let mut stats = ExploreStats { workers: 1, ..ExploreStats::default() };
+    let mut depth_reached = 0u32;
+    let mut saw_zero = false;
 
-        // Reusable batch buffers.
-        let mut cfg_buf: Vec<i64> = Vec::new();
-        let mut spk_buf: Vec<u8> = Vec::new();
-        // (parent node, parent depth) per batch row.
-        let mut meta: Vec<(usize, u32)> = Vec::new();
-        // spiking vectors per row, recorded only when the tree is on
-        let mut spk_meta: Vec<SpikingVector> = Vec::new();
-        let record_tree = tree.is_some();
-        // reusable applicability buffer (hot path, one per run)
-        let mut map = ApplicabilityMap::default();
+    visited.insert(c0.clone());
+    let root_node = tree.as_mut().map(|t| t.set_root(c0.clone())).unwrap_or(0);
+    let mut queue: std::collections::VecDeque<Pending> = std::collections::VecDeque::new();
+    queue.push_back(Pending { config: c0, depth: 0, node: root_node });
 
-        let mut stop = StopReason::Exhausted;
-        let mut depth_bounded = false;
-        'outer: while !queue.is_empty() {
-            if let Some(budget) = self.opts.time_budget {
-                if start.elapsed() > budget {
-                    stop = StopReason::Timeout;
-                    break 'outer;
+    // Reusable batch buffers.
+    let mut cfg_buf: Vec<i64> = Vec::new();
+    let mut spk_buf: Vec<u8> = Vec::new();
+    // (parent node, parent depth) per batch row.
+    let mut meta: Vec<(usize, u32)> = Vec::new();
+    // spiking vectors per row, recorded only when the tree is on
+    let mut spk_meta: Vec<SpikingVector> = Vec::new();
+    let record_tree = tree.is_some();
+    // reusable applicability buffer (hot path, one per run)
+    let mut map = ApplicabilityMap::default();
+
+    let mut stop = StopReason::Exhausted;
+    let mut depth_bounded = false;
+    'outer: while !queue.is_empty() {
+        if let Some(budget) = opts.time_budget {
+            if start.elapsed() > budget {
+                stop = StopReason::Timeout;
+                break 'outer;
+            }
+        }
+        if let Some(maxc) = opts.max_configs {
+            if visited.len() >= maxc {
+                stop = StopReason::MaxConfigs;
+                break 'outer;
+            }
+        }
+        // Fill one batch from the queue.
+        cfg_buf.clear();
+        spk_buf.clear();
+        meta.clear();
+        spk_meta.clear();
+        while meta.len() < batch_cap {
+            let Some(pending) = (match opts.order {
+                SearchOrder::BreadthFirst => queue.pop_front(),
+                SearchOrder::DepthFirst => queue.pop_back(),
+            }) else {
+                break;
+            };
+            if let Some(maxd) = opts.max_depth {
+                if pending.depth >= maxd {
+                    depth_bounded = true;
+                    continue;
                 }
             }
-            if let Some(maxc) = self.opts.max_configs {
+            applicable_rules_into(sys, &pending.config, &mut map);
+            stats.expanded += 1;
+            if map.is_halting() {
+                stats.halting += 1;
+                saw_zero |= pending.config.is_zero();
+                halting_configs.push(pending.config.clone());
+                continue;
+            }
+            stats.psi_total += map.psi();
+            // NOTE: a single configuration may exceed batch_cap by
+            // itself (huge Ψ); we let the buffer grow — backends
+            // chunk internally.
+            if record_tree {
+                for s in SpikingEnumeration::new(&map, r) {
+                    cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
+                    spk_buf.extend(s.to_bytes());
+                    meta.push((pending.node, pending.depth));
+                    spk_meta.push(s);
+                }
+            } else {
+                // hot path: write rows straight into the batch buffer
+                let mut e = SpikingEnumeration::new(&map, r);
+                while e.fill_next(&mut spk_buf) {
+                    cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
+                    meta.push((pending.node, pending.depth));
+                }
+            }
+        }
+        if meta.is_empty() {
+            continue;
+        }
+        // Evaluate the batch.
+        let b = meta.len();
+        let batch = StepBatch { b, n, r, configs: &cfg_buf, spikes: &spk_buf };
+        let out = backend
+            .step_batch(&batch)
+            .expect("step backend failed (shape-checked input)");
+        stats.batches += 1;
+        stats.steps += b as u64;
+        // Fold results; the configuration budget is enforced here, per
+        // row, so the cap is exact rather than batch-granular.
+        for (row, (parent_node, parent_depth)) in meta.drain(..).enumerate() {
+            if let Some(maxc) = opts.max_configs {
                 if visited.len() >= maxc {
                     stop = StopReason::MaxConfigs;
                     break 'outer;
                 }
             }
-            // Fill one batch from the queue.
-            cfg_buf.clear();
-            spk_buf.clear();
-            meta.clear();
-            spk_meta.clear();
-            while meta.len() < batch_cap {
-                let Some(pending) = (match self.opts.order {
-                    SearchOrder::BreadthFirst => queue.pop_front(),
-                    SearchOrder::DepthFirst => queue.pop_back(),
-                }) else {
-                    break;
-                };
-                if let Some(maxd) = self.opts.max_depth {
-                    if pending.depth >= maxd {
-                        depth_bounded = true;
-                        continue;
-                    }
-                }
-                applicable_rules_into(self.sys, &pending.config, &mut map);
-                stats.expanded += 1;
-                if map.is_halting() {
-                    stats.halting += 1;
-                    saw_zero |= pending.config.is_zero();
-                    halting_configs.push(pending.config.clone());
-                    continue;
-                }
-                stats.psi_total += map.psi();
-                // NOTE: a single configuration may exceed batch_cap by
-                // itself (huge Ψ); we let the buffer grow — backends
-                // chunk internally.
-                if record_tree {
-                    for s in SpikingEnumeration::new(&map, r) {
-                        cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
-                        spk_buf.extend(s.to_bytes());
-                        meta.push((pending.node, pending.depth));
-                        spk_meta.push(s);
-                    }
-                } else {
-                    // hot path: write rows straight into the batch buffer
-                    let mut e = SpikingEnumeration::new(&map, r);
-                    while e.fill_next(&mut spk_buf) {
-                        cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
-                        meta.push((pending.node, pending.depth));
-                    }
-                }
+            let child = ConfigVector::from_signed(&out[row * n..(row + 1) * n])
+                .expect("semantics guarantee non-negative counts");
+            let depth = parent_depth + 1;
+            let is_new = visited.insert(child.clone());
+            if let Some(t) = tree.as_mut() {
+                t.add_edge(parent_node, spk_meta[row].clone(), child.clone());
             }
-            if meta.is_empty() {
-                continue;
-            }
-            // Evaluate the batch.
-            let b = meta.len();
-            let batch = StepBatch { b, n, r, configs: &cfg_buf, spikes: &spk_buf };
-            let out = self
-                .backend
-                .step_batch(&batch)
-                .expect("step backend failed (shape-checked input)");
-            stats.batches += 1;
-            stats.steps += b as u64;
-            // Fold results.
-            for (row, (parent_node, parent_depth)) in meta.drain(..).enumerate() {
-                let child = ConfigVector::from_signed(&out[row * n..(row + 1) * n])
-                    .expect("semantics guarantee non-negative counts");
-                let depth = parent_depth + 1;
-                let is_new = visited.insert(child.clone());
-                if let Some(t) = tree.as_mut() {
-                    t.add_edge(parent_node, spk_meta[row].clone(), child.clone());
-                }
-                if is_new {
-                    depth_reached = depth_reached.max(depth);
-                    let node = tree
-                        .as_ref()
-                        .and_then(|t| t.node_of(&child))
-                        .unwrap_or(0);
-                    queue.push_back(Pending { config: child, depth, node });
-                }
+            if is_new {
+                depth_reached = depth_reached.max(depth);
+                let node = tree
+                    .as_ref()
+                    .and_then(|t| t.node_of(&child))
+                    .unwrap_or(0);
+                queue.push_back(Pending { config: child, depth, node });
             }
         }
-
-        if stop == StopReason::Exhausted && depth_bounded {
-            stop = StopReason::MaxDepth;
-        }
-        if stop == StopReason::Exhausted && saw_zero && halting_configs.iter().all(|c| c.is_zero())
-        {
-            stop = StopReason::ZeroConfig;
-        }
-        stats.elapsed = start.elapsed();
-        ExploreReport { visited, stop, depth_reached, halting_configs, tree, stats }
     }
+
+    if stop == StopReason::Exhausted && depth_bounded {
+        stop = StopReason::MaxDepth;
+    }
+    if stop == StopReason::Exhausted && saw_zero && halting_configs.iter().all(|c| c.is_zero())
+    {
+        stop = StopReason::ZeroConfig;
+    }
+    stats.elapsed = start.elapsed();
+    ExploreReport { visited, stop, depth_reached, halting_configs, tree, stats }
 }
 
 #[cfg(test)]
@@ -399,11 +500,17 @@ mod tests {
     }
 
     #[test]
-    fn max_configs_bound() {
+    fn max_configs_bound_is_exact() {
+        // the budget is enforced during folding, so the cap is an exact
+        // window, not "first batch boundary past the cap"
         let sys = crate::generators::paper_pi();
         let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(10)).run();
         assert_eq!(rep.stop, StopReason::MaxConfigs);
-        assert!(rep.visited.len() >= 10);
+        assert_eq!(rep.visited.len(), 10, "cap must not overshoot");
+        // and the capped prefix is a prefix of the uncapped BFS order
+        let full = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(40)).run();
+        assert_eq!(full.visited.len(), 40);
+        assert_eq!(&full.visited.in_order()[..10], rep.visited.in_order());
     }
 
     #[test]
@@ -425,6 +532,7 @@ mod tests {
         assert!(rep.stats.batches >= 1);
         assert!(rep.stats.psi_total >= rep.stats.steps as u128);
         assert!(rep.stats.elapsed.as_nanos() > 0);
+        assert_eq!(rep.stats.workers, 1);
     }
 
     #[test]
@@ -446,5 +554,59 @@ mod tests {
         assert_eq!(rep.visited.len(), 1);
         assert_eq!(rep.halting_configs, vec![c(&[1, 0, 0])]);
         assert_eq!(rep.stop, StopReason::Exhausted);
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_paper_prefix() {
+        let sys = crate::generators::paper_pi();
+        let serial = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3)).run();
+        let par =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3).workers(4)).run();
+        assert_eq!(par.visited.in_order(), serial.visited.in_order());
+        assert_eq!(par.stop, serial.stop);
+        assert_eq!(par.depth_reached, serial.depth_reached);
+        assert_eq!(par.stats.workers, 4);
+    }
+
+    #[test]
+    fn parallel_cap_is_exact_and_order_stable() {
+        let sys = crate::generators::paper_pi();
+        let serial = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(37)).run();
+        let par = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_configs(37).workers(3),
+        )
+        .run();
+        assert_eq!(serial.visited.len(), 37);
+        assert_eq!(par.visited.in_order(), serial.visited.in_order());
+        assert_eq!(par.stop, StopReason::MaxConfigs);
+    }
+
+    #[test]
+    fn with_tree_falls_back_to_serial_path() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(2).with_tree().workers(8),
+        )
+        .run();
+        assert!(rep.tree.is_some(), "tree recording works regardless of workers");
+        assert_eq!(rep.stats.workers, 1, "tree recording runs the serial path");
+    }
+
+    #[test]
+    fn with_backend_runs_serial_custom_instance() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let backend = Box::new(crate::compute::HostBackend::sparse(&m));
+        let mut e = Explorer::with_backend(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(3).workers(4),
+            backend,
+        );
+        let rep = e.run();
+        let reference = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3)).run();
+        assert_eq!(rep.visited.in_order(), reference.visited.in_order());
+        assert_eq!(rep.stats.workers, 1, "single instances cannot be pooled");
     }
 }

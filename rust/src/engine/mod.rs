@@ -8,6 +8,7 @@ mod config;
 mod dedup;
 mod explorer;
 pub mod input;
+mod parallel;
 mod random_walk;
 mod spiking;
 mod stop;
@@ -18,7 +19,7 @@ pub use analysis::{analyze, AnalysisReport};
 pub use applicability::{applicable_rules, applicable_rules_into, ApplicabilityMap};
 pub use input::InputSchedule;
 pub use config::ConfigVector;
-pub use dedup::{ShardedVisited, VisitedStore};
+pub use dedup::{ShardedVisited, ShardedVisitedStore, VisitedStore};
 pub use explorer::{ExploreOptions, Explorer, ExploreReport, SearchOrder};
 pub use random_walk::{RandomWalk, WalkRecord};
 pub use spiking::{SpikingEnumeration, SpikingVector};

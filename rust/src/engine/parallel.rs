@@ -1,0 +1,457 @@
+//! The pipelined parallel exploration engine (Algorithm 1, sharded).
+//!
+//! The paper calls the simulation "inherently and maximally parallel",
+//! yet its host loop — and our serial reference path — expands, evaluates
+//! and dedups strictly in sequence. This module overlaps those stages:
+//!
+//! ```text
+//!  main thread                 worker 1..N (each owns a pooled backend)
+//!  ───────────                 ───────────────────────────────────────
+//!  pop frontier, enumerate S   ┌─ evaluate chunk (C + S·M)
+//!  rows into chunk buffers ──▶ │  convert rows, pre-filter duplicates
+//!  …                           └─ send (seq, fresh children) ──▶
+//!  fold results in seq order ◀─┘
+//!  (authoritative dedup, enqueue, budget)
+//! ```
+//!
+//! **Determinism.** The output must reproduce the paper's `allGenCk`
+//! byte-for-byte at any worker count. Three rules guarantee it:
+//!
+//! 1. Chunks are numbered in the order the main thread creates them, and
+//!    the fold consumes results in exactly that (chunk-seq, row) order —
+//!    a reorder buffer holds early arrivals.
+//! 2. Newness is decided only by the fold thread. Evaluation workers may
+//!    drop rows already present in the hash-striped
+//!    [`ShardedVisitedStore`] (a config already seen can never become new,
+//!    in any interleaving), which removes most duplicate traffic from the
+//!    serial fold without letting workers race on insertion order.
+//! 3. BFS consumes the frontier strictly FIFO, so batch *boundaries* do
+//!    not affect the global row order; pipelining ahead is safe. DFS
+//!    order does depend on batch boundaries (children must return to the
+//!    stack before the next pop), so DFS runs rounds lock-step with the
+//!    serial reference — parallelism then comes from splitting each
+//!    round's rows across the worker pool.
+//!
+//! Under a `max_configs` cap the visited prefix still matches the serial
+//! path exactly (the cap is enforced per-row at fold time); only
+//! auxiliary outputs of never-folded chunks (late halting configs,
+//! expansion counters) may differ from the serial run's truncation point.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::applicability::{applicable_rules_into, ApplicabilityMap};
+use super::config::ConfigVector;
+use super::dedup::{ShardedVisitedStore, VisitedStore};
+use super::explorer::{ExploreOptions, ExploreReport, ExploreStats, SearchOrder};
+use super::spiking::SpikingEnumeration;
+use super::stop::StopReason;
+use crate::compute::{BackendFactory, BackendPool, StepBatch};
+use crate::snp::SnpSystem;
+
+/// Rows per dispatched chunk when the caller didn't pin `batch_cap`.
+const DEFAULT_CHUNK_ROWS: usize = 512;
+/// Hard ceiling on round size (matches the serial path's clamp).
+const MAX_ROUND_ROWS: usize = 1 << 20;
+
+/// A unit of evaluation work: contiguous rows in frontier order.
+struct WorkChunk {
+    seq: u64,
+    rows: usize,
+    /// `rows × N` parent configurations.
+    configs: Vec<i64>,
+    /// `rows × R` spiking vectors.
+    spikes: Vec<u8>,
+    /// Child depth per row (parent depth + 1).
+    depths: Vec<u32>,
+}
+
+/// A chunk's surviving children, in row order. `error` carries a backend
+/// failure to the main thread, which panics there (matching the serial
+/// path) — a worker-side panic would strand its seq and hang the fold.
+struct ChunkResult {
+    seq: u64,
+    fresh: Vec<(u32, ConfigVector)>,
+    error: Option<String>,
+}
+
+/// Frontier entry (no tree bookkeeping on the parallel path).
+struct PendingP {
+    config: ConfigVector,
+    depth: u32,
+}
+
+/// In-construction chunk buffers.
+struct ChunkBuf {
+    configs: Vec<i64>,
+    spikes: Vec<u8>,
+    depths: Vec<u32>,
+    halting: Vec<ConfigVector>,
+}
+
+impl ChunkBuf {
+    fn new() -> Self {
+        ChunkBuf { configs: Vec::new(), spikes: Vec::new(), depths: Vec::new(), halting: Vec::new() }
+    }
+
+    fn rows(&self) -> usize {
+        self.depths.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.depths.is_empty() && self.halting.is_empty()
+    }
+}
+
+/// Run the pipelined exploration. Called by
+/// [`Explorer::run_from`](super::Explorer::run_from) when `workers > 1`
+/// and no computation tree is requested.
+pub(crate) fn run_pipelined(
+    sys: &SnpSystem,
+    factory: &dyn BackendFactory,
+    opts: &ExploreOptions,
+    workers: usize,
+    c0: ConfigVector,
+) -> ExploreReport {
+    let start = Instant::now();
+    let n = sys.num_neurons();
+    let r = sys.num_rules();
+    let pool = BackendPool::build(factory, workers).expect("backend factory failed");
+    // BFS: batch boundaries are order-neutral → pipeline-tuned chunks.
+    // DFS: rounds must match the serial batch structure → round cap from
+    // the backend (as the serial path does), chunked for the pool.
+    let (round_cap, chunk_target) = match opts.order {
+        SearchOrder::BreadthFirst => {
+            let c = opts.batch_cap.unwrap_or(DEFAULT_CHUNK_ROWS).clamp(1, MAX_ROUND_ROWS);
+            (c, c)
+        }
+        SearchOrder::DepthFirst => {
+            let rc = opts.batch_cap.unwrap_or_else(|| pool.max_batch()).clamp(1, MAX_ROUND_ROWS);
+            (rc, rc.min(DEFAULT_CHUNK_ROWS))
+        }
+    };
+    let max_inflight = (workers as u64).saturating_mul(3).max(2);
+
+    let store = ShardedVisitedStore::with_default_shards();
+    let mut visited = VisitedStore::new();
+    visited.insert(c0.clone());
+    store.insert(&c0);
+
+    let mut stats = ExploreStats { workers, ..ExploreStats::default() };
+    let mut halting_configs: Vec<ConfigVector> = Vec::new();
+    let mut depth_reached = 0u32;
+    let mut saw_zero = false;
+    let mut depth_bounded = false;
+    let mut stop = StopReason::Exhausted;
+
+    let mut queue: std::collections::VecDeque<PendingP> = std::collections::VecDeque::new();
+    queue.push_back(PendingP { config: c0, depth: 0 });
+
+    // set on early stop so workers discard queued chunks instead of
+    // evaluating results nobody will fold
+    let cancel = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        let (work_tx, work_rx) = mpsc::channel::<WorkChunk>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (res_tx, res_rx) = mpsc::channel::<ChunkResult>();
+        for _ in 0..workers {
+            let work_rx = Arc::clone(&work_rx);
+            let res_tx = res_tx.clone();
+            let pool = &pool;
+            let store = &store;
+            let cancel = &cancel;
+            scope.spawn(move || {
+                let mut backend = pool.acquire();
+                loop {
+                    // hold the lock across recv: exactly one idle worker
+                    // waits productively, the rest queue on the mutex
+                    let msg = work_rx.lock().unwrap().recv();
+                    let Ok(chunk) = msg else { break };
+                    if cancel.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let batch = StepBatch {
+                        b: chunk.rows,
+                        n,
+                        r,
+                        configs: &chunk.configs,
+                        spikes: &chunk.spikes,
+                    };
+                    let result = match backend.step_batch(&batch) {
+                        Err(e) => ChunkResult {
+                            seq: chunk.seq,
+                            fresh: Vec::new(),
+                            error: Some(format!("step backend failed: {e}")),
+                        },
+                        Ok(out) => {
+                            let mut fresh = Vec::with_capacity(chunk.rows);
+                            let mut error = None;
+                            for row in 0..chunk.rows {
+                                match ConfigVector::from_signed(&out[row * n..(row + 1) * n]) {
+                                    Err(e) => {
+                                        error = Some(format!("negative step result: {e}"));
+                                        break;
+                                    }
+                                    Ok(child) => {
+                                        // definite-duplicate pre-filter (rule 2)
+                                        if !store.contains(&child) {
+                                            fresh.push((chunk.depths[row], child));
+                                        }
+                                    }
+                                }
+                            }
+                            ChunkResult { seq: chunk.seq, fresh, error }
+                        }
+                    };
+                    let failed = result.error.is_some();
+                    if res_tx.send(result).is_err() || failed {
+                        break; // main thread stopped early, or backend broke
+                    }
+                }
+            });
+        }
+        // main thread keeps no sender: when every worker exits, recv fails
+        // loudly instead of deadlocking
+        drop(res_tx);
+
+        let mut next_seq: u64 = 0;
+        let mut next_fold: u64 = 0;
+        let mut ready: std::collections::HashMap<u64, Vec<(u32, ConfigVector)>> =
+            std::collections::HashMap::new();
+        let mut halting_by_seq: std::collections::HashMap<u64, Vec<ConfigVector>> =
+            std::collections::HashMap::new();
+        let mut map = ApplicabilityMap::default();
+
+        'outer: loop {
+            // ---- fold every result available, in canonical seq order ----
+            while let Ok(res) = res_rx.try_recv() {
+                if let Some(err) = res.error {
+                    panic!("{err}"); // scope unwinds: channels drop, workers exit
+                }
+                ready.insert(res.seq, res.fresh);
+            }
+            while let Some(fresh) = ready.remove(&next_fold) {
+                if let Some(h) = halting_by_seq.remove(&next_fold) {
+                    halting_configs.extend(h);
+                }
+                for (depth, child) in fresh {
+                    if let Some(maxc) = opts.max_configs {
+                        if visited.len() >= maxc {
+                            stop = StopReason::MaxConfigs;
+                            break 'outer;
+                        }
+                    }
+                    if visited.insert(child.clone()) {
+                        store.insert(&child);
+                        depth_reached = depth_reached.max(depth);
+                        queue.push_back(PendingP { config: child, depth });
+                    }
+                }
+                next_fold += 1;
+            }
+
+            let outstanding = next_seq - next_fold;
+            let can_build = !queue.is_empty()
+                && match opts.order {
+                    SearchOrder::BreadthFirst => outstanding < max_inflight,
+                    SearchOrder::DepthFirst => outstanding == 0,
+                };
+            if can_build {
+                // the serial path runs these checks before every fill
+                if let Some(budget) = opts.time_budget {
+                    if start.elapsed() > budget {
+                        stop = StopReason::Timeout;
+                        break 'outer;
+                    }
+                }
+                if let Some(maxc) = opts.max_configs {
+                    if visited.len() >= maxc {
+                        stop = StopReason::MaxConfigs;
+                        break 'outer;
+                    }
+                }
+                // ---- build one round: pop frontier, enumerate rows ----
+                let mut round_rows = 0usize;
+                let mut chunk = ChunkBuf::new();
+                while round_rows < round_cap {
+                    let Some(pending) = (match opts.order {
+                        SearchOrder::BreadthFirst => queue.pop_front(),
+                        SearchOrder::DepthFirst => queue.pop_back(),
+                    }) else {
+                        break;
+                    };
+                    if let Some(maxd) = opts.max_depth {
+                        if pending.depth >= maxd {
+                            depth_bounded = true;
+                            continue;
+                        }
+                    }
+                    applicable_rules_into(sys, &pending.config, &mut map);
+                    stats.expanded += 1;
+                    if map.is_halting() {
+                        stats.halting += 1;
+                        saw_zero |= pending.config.is_zero();
+                        chunk.halting.push(pending.config);
+                        continue;
+                    }
+                    stats.psi_total += map.psi();
+                    let before = chunk.rows();
+                    let mut e = SpikingEnumeration::new(&map, r);
+                    while e.fill_next(&mut chunk.spikes) {
+                        chunk
+                            .configs
+                            .extend(pending.config.as_slice().iter().map(|&x| x as i64));
+                        chunk.depths.push(pending.depth + 1);
+                    }
+                    round_rows += chunk.rows() - before;
+                    if chunk.rows() >= chunk_target {
+                        let full = std::mem::replace(&mut chunk, ChunkBuf::new());
+                        dispatch(
+                            full,
+                            &mut next_seq,
+                            &work_tx,
+                            &mut ready,
+                            &mut halting_by_seq,
+                            &mut stats,
+                        );
+                    }
+                }
+                if !chunk.is_empty() {
+                    dispatch(
+                        chunk,
+                        &mut next_seq,
+                        &work_tx,
+                        &mut ready,
+                        &mut halting_by_seq,
+                        &mut stats,
+                    );
+                }
+                continue;
+            }
+            if outstanding > 0 {
+                // nothing buildable: block for the next worker result
+                let res = res_rx.recv().expect("evaluation workers gone");
+                if let Some(err) = res.error {
+                    panic!("{err}");
+                }
+                ready.insert(res.seq, res.fresh);
+                continue;
+            }
+            break; // frontier drained, nothing in flight: exhausted
+        }
+        // On early stop this makes workers drop (not evaluate) whatever
+        // is still queued; on exhaustion the channel is already empty.
+        cancel.store(true, Ordering::Release);
+        drop(work_tx); // wakes blocked workers; scope joins them
+    });
+
+    if stop == StopReason::Exhausted && depth_bounded {
+        stop = StopReason::MaxDepth;
+    }
+    if stop == StopReason::Exhausted && saw_zero && halting_configs.iter().all(|c| c.is_zero()) {
+        stop = StopReason::ZeroConfig;
+    }
+    stats.elapsed = start.elapsed();
+    ExploreReport { visited, stop, depth_reached, halting_configs, tree: None, stats }
+}
+
+/// Assign the next seq to a finished chunk and hand it to the workers
+/// (or straight to the reorder buffer when it carries no rows).
+fn dispatch(
+    chunk: ChunkBuf,
+    next_seq: &mut u64,
+    work_tx: &mpsc::Sender<WorkChunk>,
+    ready: &mut std::collections::HashMap<u64, Vec<(u32, ConfigVector)>>,
+    halting_by_seq: &mut std::collections::HashMap<u64, Vec<ConfigVector>>,
+    stats: &mut ExploreStats,
+) {
+    let seq = *next_seq;
+    *next_seq += 1;
+    if !chunk.halting.is_empty() {
+        halting_by_seq.insert(seq, chunk.halting);
+    }
+    let rows = chunk.depths.len();
+    if rows == 0 {
+        // halting-only chunk: nothing to evaluate, fold it directly
+        ready.insert(seq, Vec::new());
+        return;
+    }
+    stats.steps += rows as u64;
+    stats.batches += 1;
+    work_tx
+        .send(WorkChunk {
+            seq,
+            rows,
+            configs: chunk.configs,
+            spikes: chunk.spikes,
+            depths: chunk.depths,
+        })
+        .unwrap_or_else(|_| panic!("evaluation workers gone"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::explorer::{ExploreOptions, Explorer};
+    use super::super::stop::StopReason;
+
+    /// The cross-cutting invariant: identical output at every worker
+    /// count, both orders, on a branching workload.
+    #[test]
+    fn worker_count_never_changes_output() {
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        for make in [ExploreOptions::breadth_first, ExploreOptions::depth_first] {
+            let baseline = Explorer::new(&sys, make()).run();
+            for w in [2usize, 3, 8] {
+                let rep = Explorer::new(&sys, make().workers(w)).run();
+                assert_eq!(
+                    rep.visited.in_order(),
+                    baseline.visited.in_order(),
+                    "workers={w}"
+                );
+                assert_eq!(rep.stop, baseline.stop, "workers={w}");
+                assert_eq!(rep.halting_configs, baseline.halting_configs, "workers={w}");
+                assert_eq!(rep.depth_reached, baseline.depth_reached, "workers={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_config_stop_detected_in_parallel() {
+        let sys = crate::generators::counter_chain(3, 2);
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().workers(4)).run();
+        let serial = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+        assert_eq!(rep.stop, serial.stop);
+        assert_eq!(rep.stop, StopReason::ZeroConfig);
+        assert_eq!(rep.visited.in_order(), serial.visited.in_order());
+    }
+
+    #[test]
+    fn tiny_chunks_still_deterministic() {
+        // batch_cap 1 forces a chunk per row — maximal reorder pressure
+        let sys = crate::generators::paper_pi();
+        let serial =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(4)).run();
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(4).batch_cap(1).workers(8),
+        )
+        .run();
+        assert_eq!(rep.visited.in_order(), serial.visited.in_order());
+    }
+
+    #[test]
+    fn timeout_stops_parallel_run() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first()
+                .workers(2)
+                .time_budget(std::time::Duration::from_millis(0)),
+        )
+        .run();
+        assert_eq!(rep.stop, StopReason::Timeout);
+    }
+}

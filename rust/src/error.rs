@@ -90,12 +90,6 @@ impl std::error::Error for Error {
     }
 }
 
-impl From<anyhow::Error> for Error {
-    fn from(e: anyhow::Error) -> Self {
-        Error::Runtime(format!("{e:#}"))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -89,6 +89,25 @@ impl TransitionMatrix {
         self.data.iter().map(|&v| v as f32).collect()
     }
 
+    /// Checked variant of [`TransitionMatrix::to_f32_row_major`]: fails
+    /// when any entry's magnitude is ≥ 2²⁴, i.e. outside the range where
+    /// every integer is exactly representable in `f32`. The device path
+    /// marshals through `f32`, so such entries would silently lose
+    /// precision — this is the guard the unchecked variant's doc comment
+    /// only warns about.
+    pub fn try_to_f32_row_major(&self) -> Result<Vec<f32>> {
+        const F32_EXACT: i64 = 1 << 24;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v <= -F32_EXACT || v >= F32_EXACT {
+                return Err(Error::shape(
+                    "matrix entries with |v| < 2^24 (exact in f32)",
+                    format!("entry ({}, {}) = {v}", i / self.cols, i % self.cols),
+                ));
+            }
+        }
+        Ok(self.to_f32_row_major())
+    }
+
     /// `y = c + s · M` for a single spiking vector `s` (0/1 per rule).
     /// `c` and the result are length-N; `s` is length-R.
     pub fn step(&self, c: &[u64], s: &[u8]) -> Result<Vec<i64>> {
@@ -197,6 +216,22 @@ mod tests {
         let m = m_pi();
         assert!((m.sparsity() - 4.0 / 15.0).abs() < 1e-12);
         assert_eq!(m.to_f32_row_major()[3], -2.0);
+    }
+
+    #[test]
+    fn try_f32_rejects_inexact_entries() {
+        let ok = m_pi();
+        assert_eq!(ok.try_to_f32_row_major().unwrap(), ok.to_f32_row_major());
+        // boundary: 2^24 - 1 is exact, 2^24 is rejected (and so is -2^24)
+        let edge =
+            TransitionMatrix::from_row_major(1, 2, vec![(1 << 24) - 1, -((1 << 24) - 1)])
+                .unwrap();
+        assert!(edge.try_to_f32_row_major().is_ok());
+        let big = TransitionMatrix::from_row_major(2, 2, vec![0, 0, 1 << 24, 0]).unwrap();
+        let err = big.try_to_f32_row_major().unwrap_err();
+        assert!(err.to_string().contains("(1, 0)"), "{err}");
+        let neg = TransitionMatrix::from_row_major(1, 1, vec![-(1 << 24)]).unwrap();
+        assert!(neg.try_to_f32_row_major().is_err());
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! build-system → explore → report loop.
 
 pub use crate::baseline::DirectSimulator;
-pub use crate::compute::{HostBackend, StepBackend, StepBatch};
+pub use crate::compute::{
+    BackendFactory, BackendPool, HostBackend, HostBackendFactory, StepBackend, StepBatch,
+};
 pub use crate::coordinator::{Coordinator, CoordinatorConfig};
 pub use crate::engine::{
     ConfigVector, ExploreOptions, Explorer, ExploreReport, SearchOrder, SpikingVector,

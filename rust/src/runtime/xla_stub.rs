@@ -1,0 +1,196 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The build environment has no network and no XLA shared library, so the
+//! real PJRT client cannot be linked. This module mirrors the small slice
+//! of the `xla` crate API that [`super`] (the runtime service thread)
+//! consumes, with the same shapes and error discipline:
+//!
+//! - the client boots and reports a platform name (handle plumbing,
+//!   artifact lookup, manifest parsing and every failure-injection path
+//!   stay fully testable),
+//! - artifact loading validates HLO text headers and fails cleanly on
+//!   missing/empty/garbage files,
+//! - host-buffer staging validates shapes,
+//! - **compilation always fails** with a clear message — executing a step
+//!   program requires the real bindings.
+//!
+//! To run the true device path, replace the `use xla_stub as xla;` alias
+//! in `runtime/mod.rs` with the real `xla` crate and add it to
+//! `Cargo.toml`; no other code changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: a message, `Display`-compatible with the real crate's.
+#[derive(Debug, Clone)]
+pub struct StubError(String);
+
+impl fmt::Display for StubError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for StubError {}
+
+type StubResult<T> = std::result::Result<T, StubError>;
+
+/// Parsed (header-checked) HLO text module.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file; validates the `HloModule` header.
+    pub fn from_text_file(path: &Path) -> StubResult<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| StubError(format!("read {}: {e}", path.display())))?;
+        if text.trim().is_empty() {
+            return Err(StubError(format!("{}: empty HLO module text", path.display())));
+        }
+        if !text.trim_start().starts_with("HloModule") {
+            return Err(StubError(format!(
+                "{}: not an HLO text module (missing `HloModule` header)",
+                path.display()
+            )));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Wrapper around a proto, mirroring `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Build from a loaded proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer handle (shape-checked at staging time).
+pub struct PjRtBuffer {
+    #[allow(dead_code)]
+    elems: usize,
+}
+
+impl PjRtBuffer {
+    /// Read back to host. Unreachable in the stub (nothing compiles).
+    pub fn to_literal_sync(&self) -> StubResult<Literal> {
+        Err(StubError("stub device buffer has no contents".into()))
+    }
+}
+
+/// Host-side literal (readback container).
+pub struct Literal;
+
+impl Literal {
+    /// Unwrap a 1-tuple result.
+    pub fn to_tuple1(self) -> StubResult<Literal> {
+        Err(StubError("stub literal is empty".into()))
+    }
+
+    /// Flatten to a typed vector.
+    pub fn to_vec<T: Copy + Default>(&self) -> StubResult<Vec<T>> {
+        Err(StubError("stub literal is empty".into()))
+    }
+}
+
+/// Compiled-program handle, mirroring `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed device buffers. Unreachable in the stub.
+    pub fn execute_b<T>(&self, _args: &[T]) -> StubResult<Vec<Vec<PjRtBuffer>>> {
+        Err(StubError("stub executable cannot run".into()))
+    }
+}
+
+/// The PJRT client handle.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// Boot the (stub) CPU client. Always succeeds so that handle
+    /// plumbing, artifact lookup and failure paths remain testable
+    /// without the XLA runtime installed.
+    pub fn cpu() -> StubResult<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu-stub" })
+    }
+
+    /// Platform name, e.g. `cpu-stub`.
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    /// Compile an HLO computation. Always fails in the stub: executing
+    /// AOT artifacts needs the real `xla` bindings.
+    pub fn compile(&self, _comp: &XlaComputation) -> StubResult<PjRtLoadedExecutable> {
+        Err(StubError(
+            "offline stub cannot compile HLO; link the real `xla` crate to run device \
+             artifacts"
+                .into(),
+        ))
+    }
+
+    /// Stage a host buffer on the (stub) device; validates the shape.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> StubResult<PjRtBuffer> {
+        let want: usize = dims.iter().product();
+        if want != data.len() {
+            return Err(StubError(format!(
+                "host buffer has {} elements but dims {:?} want {}",
+                data.len(),
+                dims,
+                want
+            )));
+        }
+        Ok(PjRtBuffer { elems: data.len() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_boots_with_platform_name() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+    }
+
+    #[test]
+    fn hlo_header_is_validated() {
+        let dir = std::env::temp_dir().join("snapse_stub_hlo");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.hlo.txt");
+        std::fs::write(&good, "HloModule step\n\nENTRY main {}\n").unwrap();
+        assert!(HloModuleProto::from_text_file(&good).is_ok());
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(&bad, "not hlo at all").unwrap();
+        assert!(HloModuleProto::from_text_file(&bad).is_err());
+        assert!(HloModuleProto::from_text_file(&dir.join("missing.hlo.txt")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn staging_checks_shapes() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[2, 1], None).is_ok());
+        assert!(c.buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[3], None).is_err());
+    }
+
+    #[test]
+    fn compile_is_unsupported_offline() {
+        let c = PjRtClient::cpu().unwrap();
+        let p = HloModuleProto { text: "HloModule x".into() };
+        let err = c.compile(&XlaComputation::from_proto(&p)).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}

@@ -26,6 +26,29 @@ macro_rules! require_artifacts {
 }
 
 #[test]
+fn non_binary_spiking_buffers_rejected_by_every_backend() {
+    // StepBatch::validate enforces {0,1} spiking entries; the host backend
+    // (and through the shared validation, the device backend) must reject
+    // a buffer with a stray 2 instead of silently computing 2·M rows.
+    let sys = snapse::generators::paper_pi();
+    let m = build_matrix(&sys);
+    let mut host = HostBackend::new(&m);
+    let configs = vec![2i64, 1, 1];
+    let good = vec![1u8, 0, 1, 1, 0];
+    assert!(host
+        .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: &good })
+        .is_ok());
+    let bad = vec![1u8, 0, 2, 1, 0];
+    let err = host
+        .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: &bad })
+        .unwrap_err();
+    assert!(err.to_string().contains("spikes[2] = 2"), "{err}");
+    // the batch validates independently of any backend too
+    let batch = StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: &bad };
+    assert!(batch.validate().is_err());
+}
+
+#[test]
 fn xla_matches_host_on_paper_pi_batches() {
     let manifest = require_artifacts!();
     let rt = PjRt::cpu().unwrap();

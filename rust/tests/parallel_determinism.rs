@@ -1,0 +1,104 @@
+//! Parallel determinism: the pipelined engine must reproduce the serial
+//! reference path byte-for-byte — same `allGenCk` (visited order), same
+//! stop reason — at every worker count, in both search orders, bounded
+//! and unbounded. This is the property that makes `--workers N` safe to
+//! default on: parallelism may only change wall-clock time, never output.
+
+use snapse::engine::{ExploreOptions, Explorer, SearchOrder, StopReason};
+use snapse::snp::SnpSystem;
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn names(sys: &SnpSystem, opts: ExploreOptions) -> (Vec<String>, StopReason) {
+    let rep = Explorer::new(sys, opts).run();
+    (
+        rep.visited.in_order().iter().map(|c| c.to_string()).collect(),
+        rep.stop,
+    )
+}
+
+fn opts(order: SearchOrder) -> ExploreOptions {
+    match order {
+        SearchOrder::BreadthFirst => ExploreOptions::breadth_first(),
+        SearchOrder::DepthFirst => ExploreOptions::depth_first(),
+    }
+}
+
+/// Every worker count must agree with workers=1 (the serial path).
+fn assert_identical(sys: &SnpSystem, make: impl Fn() -> ExploreOptions, label: &str) {
+    let (baseline, base_stop) = names(sys, make().workers(1));
+    for w in WORKER_COUNTS {
+        let (got, stop) = names(sys, make().workers(w));
+        assert_eq!(got, baseline, "{label}: workers={w} changed allGenCk");
+        assert_eq!(stop, base_stop, "{label}: workers={w} changed stop reason");
+    }
+}
+
+#[test]
+fn paper_pi_bfs_and_dfs_bounded_by_depth() {
+    let sys = snapse::generators::paper_pi();
+    for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+        assert_identical(&sys, || opts(order).max_depth(6), &format!("paper_pi {order:?}"));
+    }
+}
+
+#[test]
+fn paper_pi_bfs_and_dfs_bounded_by_configs() {
+    // the exact config cap must truncate the very same prefix everywhere
+    let sys = snapse::generators::paper_pi();
+    for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+        assert_identical(
+            &sys,
+            || opts(order).max_configs(120),
+            &format!("paper_pi cap {order:?}"),
+        );
+    }
+}
+
+#[test]
+fn divisibility_checker_exhaustive_runs() {
+    // finite systems, run to exhaustion — the strongest form of the
+    // property (no bound masks a divergence)
+    for (n, d) in [(24u64, 3u64), (36, 4), (35, 7), (10, 3)] {
+        let sys = snapse::generators::divisibility_checker(n, d);
+        for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+            assert_identical(&sys, || opts(order), &format!("div {n}/{d} {order:?}"));
+        }
+    }
+}
+
+#[test]
+fn branching_workload_with_tiny_chunks() {
+    // batch_cap 1 maximizes chunk count and reorder-buffer pressure
+    let sys = snapse::generators::ring_with_branching(4, 2, 2);
+    for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+        assert_identical(&sys, || opts(order).batch_cap(1), &format!("ring {order:?}"));
+        assert_identical(&sys, || opts(order).batch_cap(7), &format!("ring b7 {order:?}"));
+    }
+}
+
+#[test]
+fn paper_prefix_reproduced_at_every_worker_count() {
+    // the acceptance bar: the paper's §5 allGenCk prefix, byte-for-byte,
+    // regardless of parallelism
+    let sys = snapse::generators::paper_pi();
+    let want = [
+        "2-1-1", "2-1-2", "1-1-2", "2-1-3", "1-1-3", "2-0-2", "2-0-1", "2-1-4", "1-1-4",
+        "2-0-3", "1-1-1", "0-1-2", "0-1-1",
+    ];
+    for w in WORKER_COUNTS {
+        let (got, _) = names(&sys, ExploreOptions::breadth_first().max_depth(3).workers(w));
+        assert_eq!(got, want, "workers={w}");
+    }
+}
+
+#[test]
+fn halting_configs_stable_on_uncapped_runs() {
+    let sys = snapse::generators::divisibility_checker(30, 5);
+    let base = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+    for w in WORKER_COUNTS {
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().workers(w)).run();
+        assert_eq!(rep.halting_configs, base.halting_configs, "workers={w}");
+        assert_eq!(rep.depth_reached, base.depth_reached, "workers={w}");
+    }
+}
