@@ -1,0 +1,166 @@
+//! E10 — serve-daemon latency and throughput: cold vs warm, concurrent
+//! clients, single-flight dedup.
+//!
+//! Boots an in-process daemon on an ephemeral loopback port and measures
+//! over real TCP:
+//!
+//! - **cold**: first query for a system (runs the exploration);
+//! - **warm**: repeats of the same query (content-addressed cache hit);
+//! - **throughput**: T concurrent clients hammering a warm entry;
+//! - **single-flight**: N concurrent cold clients for one fresh system —
+//!   the daemon must run exactly one exploration.
+//!
+//! Results go to `BENCH_serve.json` plus a stdout table.
+//!
+//! ```bash
+//! cargo run --release --example serve_bench            # full
+//! cargo run --release --example serve_bench -- --quick # CI-sized
+//! ```
+
+use std::time::Instant;
+
+use snapse::serve::{client, ServeConfig, Server};
+use snapse::util::JsonValue;
+
+fn ms(secs: f64) -> f64 {
+    (secs * 1e6).round() / 1e3
+}
+
+fn main() -> snapse::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (warm_reps, clients, queries_per_client) =
+        if quick { (20u32, 4usize, 5u32) } else { (200u32, 8usize, 25u32) };
+
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        explore_workers: 1,
+        handler_threads: 8,
+        cache_capacity: 256,
+    })?;
+    let addr = server.local_addr()?.to_string();
+    let state = server.state();
+    let server_thread = std::thread::spawn(move || server.run());
+    println!("serve_bench: daemon on {addr}\n");
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    println!(
+        "{:<34} {:>12} {:>12} {:>10}",
+        "query", "cold", "warm p50", "speedup"
+    );
+
+    // -- cold vs warm latency per endpoint --------------------------------
+    let cases: Vec<(&str, &str, String)> = vec![
+        ("run paper_pi depth=9", "/v1/run", r#"{"system":"paper_pi","depth":9}"#.into()),
+        (
+            "run wide_ring:16:4:3 cfg=2000",
+            "/v1/run",
+            r#"{"system":"wide_ring:16:4:3","configs":2000}"#.into(),
+        ),
+        ("generated nat_gen max=12", "/v1/generated", r#"{"system":"nat_gen","max":12}"#.into()),
+        ("analyze div:60:6", "/v1/analyze", r#"{"system":"div:60:6"}"#.into()),
+    ];
+    for (label, path, body) in &cases {
+        let t = Instant::now();
+        let (status, resp) = client::post(&addr, path, body)?;
+        let cold_s = t.elapsed().as_secs_f64();
+        assert_eq!(status, 200, "{resp}");
+        assert!(resp.contains("\"cache\":\"miss\""), "first query must be cold: {resp}");
+
+        let mut samples: Vec<f64> = Vec::with_capacity(warm_reps as usize);
+        for _ in 0..warm_reps {
+            let t = Instant::now();
+            let (status, resp) = client::post(&addr, path, body)?;
+            samples.push(t.elapsed().as_secs_f64());
+            assert_eq!(status, 200);
+            assert!(resp.contains("\"cache\":\"hit\""), "repeat must hit: {resp}");
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let warm_p50 = samples[samples.len() / 2];
+        println!(
+            "{:<34} {:>10.3}ms {:>10.3}ms {:>9.1}x",
+            label,
+            ms(cold_s),
+            ms(warm_p50),
+            cold_s / warm_p50.max(1e-9)
+        );
+        rows.push(JsonValue::obj([
+            ("query", JsonValue::str(label.to_string())),
+            ("cold_s", JsonValue::num(cold_s)),
+            ("warm_p50_s", JsonValue::num(warm_p50)),
+            ("warm_min_s", JsonValue::num(samples[0])),
+            ("speedup", JsonValue::num(cold_s / warm_p50.max(1e-9))),
+        ]));
+    }
+
+    // -- concurrent warm throughput ---------------------------------------
+    let body = r#"{"system":"paper_pi","depth":9}"#;
+    let t = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                for _ in 0..queries_per_client {
+                    let (status, _) = client::post(&addr, "/v1/run", body).unwrap();
+                    assert_eq!(status, 200);
+                }
+            });
+        }
+    });
+    let wall = t.elapsed().as_secs_f64();
+    let total = clients as f64 * f64::from(queries_per_client);
+    let rps = total / wall;
+    println!(
+        "\nwarm throughput: {clients} clients x {queries_per_client} queries = {total:.0} reqs in {:.3}s  ({rps:.0} req/s)",
+        wall
+    );
+
+    // -- single-flight under concurrent cold load -------------------------
+    let fresh = r#"{"system":"ring_branch:6:2:2","configs":3000}"#;
+    let before = state.cache.stats.computations.load(std::sync::atomic::Ordering::Relaxed);
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let (status, _) = client::post(&addr, "/v1/run", fresh).unwrap();
+                assert_eq!(status, 200);
+            });
+        }
+    });
+    let flights = state.cache.stats.computations.load(std::sync::atomic::Ordering::Relaxed)
+        - before;
+    println!(
+        "single-flight: {clients} concurrent cold clients -> {flights} exploration(s)"
+    );
+    assert_eq!(flights, 1, "single-flight must dedup concurrent cold queries");
+
+    let doc = JsonValue::obj([
+        ("bench", JsonValue::str("serve_bench")),
+        ("quick", JsonValue::num(u8::from(quick) as f64)),
+        ("cold_vs_warm", JsonValue::arr(rows)),
+        (
+            "warm_throughput",
+            JsonValue::obj([
+                ("clients", JsonValue::num(clients as f64)),
+                ("total_requests", JsonValue::num(total)),
+                ("wall_s", JsonValue::num(wall)),
+                ("requests_per_sec", JsonValue::num(rps)),
+            ]),
+        ),
+        (
+            "single_flight",
+            JsonValue::obj([
+                ("concurrent_cold_clients", JsonValue::num(clients as f64)),
+                ("explorations", JsonValue::num(flights as f64)),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_serve.json", doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_serve.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_serve.json: {e}"),
+    }
+
+    let (status, _) = client::post(&addr, "/v1/shutdown", "")?;
+    assert_eq!(status, 200);
+    server_thread.join().expect("server thread")?;
+    Ok(())
+}

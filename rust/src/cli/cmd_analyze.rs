@@ -8,7 +8,12 @@ pub fn run(args: &Args) -> Result<()> {
     let sys = super::load_system(spec)?;
     let budget = args.opt_num::<usize>("configs")?.unwrap_or(10_000);
     let hint = args.opt_num::<u64>("bound")?.unwrap_or(1_000);
-    let report = crate::engine::analyze(&sys, budget, hint);
+    let workers = args.opt_num::<usize>("workers")?.unwrap_or(1);
+    let report = crate::engine::analyze_with_workers(&sys, budget, hint, workers);
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+        return Ok(());
+    }
     println!("analysis of `{}` (budget {budget} configs):", sys.name);
     print!("{}", report.render());
     if report.exceeded_hint {

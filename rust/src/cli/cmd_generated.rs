@@ -1,7 +1,7 @@
 //! `snapse generated` — exact generated-number-set computation (E3).
 
 use super::Args;
-use crate::engine::generated_set;
+use crate::engine::generated_set_with_workers;
 use crate::error::{Error, Result};
 
 pub fn run(args: &Args) -> Result<()> {
@@ -12,7 +12,8 @@ pub fn run(args: &Args) -> Result<()> {
         return Err(Error::invalid_system("system has no output neuron"));
     }
     let max = args.opt_num::<u64>("max")?.unwrap_or(20);
-    let set = generated_set(&sys, max);
+    let workers = args.opt_num::<usize>("workers")?.unwrap_or(1);
+    let set = generated_set_with_workers(&sys, max, workers);
     let items: Vec<String> = set.iter().map(|n| n.to_string()).collect();
     println!(
         "system `{}` generates (first-two-spike distances ≤ {max}): {{{}}}",

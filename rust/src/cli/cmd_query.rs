@@ -1,0 +1,155 @@
+//! `snapse query` — client for the serve daemon (no curl needed).
+//!
+//! ```text
+//! snapse query run paper_pi --addr 127.0.0.1:7878 --depth 9
+//! snapse query generated my_system.snpl --max 20
+//! snapse query analyze counter:4:3 --configs 5000 --bound 100
+//! snapse query info paper_pi --report-only
+//! snapse query stats | health | shutdown
+//! ```
+//!
+//! `<system>` resolution happens **client-side**: a builtin spec is sent
+//! by name; a `.snpl`/`.json` path is read here and its *contents* are
+//! sent inline (the daemon never touches server-side files). Identical
+//! systems hash to one cache entry regardless of the source form.
+
+use super::Args;
+use crate::error::{Error, Result};
+use crate::serve::client;
+use crate::util::JsonValue as J;
+
+pub fn run(args: &Args) -> Result<()> {
+    let endpoint =
+        args.pos(0).ok_or_else(|| Error::parse("cli", 0, "query needs an <endpoint>"))?;
+    let addr = args.opt("addr").unwrap_or("127.0.0.1:7878");
+
+    let (status, body) = match endpoint {
+        "health" => client::get(addr, "/healthz")?,
+        "stats" => client::get(addr, "/v1/stats")?,
+        "shutdown" => client::post(addr, "/v1/shutdown", "")?,
+        "run" | "generated" | "analyze" | "info" => {
+            let spec = args.pos(1).ok_or_else(|| {
+                Error::parse("cli", 0, format!("query {endpoint} needs a <system>"))
+            })?;
+            let request = build_query_body(endpoint, spec, args)?;
+            client::post(addr, &format!("/v1/{endpoint}"), &request.to_string_compact())?
+        }
+        other => {
+            return Err(Error::parse(
+                "cli",
+                0,
+                format!(
+                    "unknown endpoint `{other}` (expected run|generated|analyze|info|stats|health|shutdown)"
+                ),
+            ))
+        }
+    };
+
+    if status != 200 {
+        eprintln!("{body}");
+        return Err(Error::runtime(format!("server at {addr} returned HTTP {status}")));
+    }
+    print_response(&body, args)
+}
+
+/// Assemble the JSON query body: inline system + the endpoint's options.
+fn build_query_body(endpoint: &str, spec: &str, args: &Args) -> Result<J> {
+    let (system, format) = system_payload(spec)?;
+    let mut fields: Vec<(&'static str, J)> =
+        vec![("system", system), ("format", J::str(format))];
+    match endpoint {
+        "run" => {
+            if let Some(d) = args.opt_num::<u32>("depth")? {
+                fields.push(("depth", J::num(f64::from(d))));
+            }
+            if let Some(c) = args.opt_num::<u64>("configs")? {
+                fields.push(("configs", J::num(c as f64)));
+            }
+            if let Some(m) = args.opt("mode") {
+                fields.push(("mode", J::str(m)));
+            }
+        }
+        "generated" => {
+            if let Some(m) = args.opt_num::<u64>("max")? {
+                fields.push(("max", J::num(m as f64)));
+            }
+        }
+        "analyze" => {
+            if let Some(c) = args.opt_num::<u64>("configs")? {
+                fields.push(("configs", J::num(c as f64)));
+            }
+            if let Some(b) = args.opt_num::<u64>("bound")? {
+                fields.push(("bound", J::num(b as f64)));
+            }
+        }
+        _ => {}
+    }
+    Ok(J::obj(fields))
+}
+
+/// Client-side system resolution: builtin spec by name, file by content.
+fn system_payload(spec: &str) -> Result<(J, &'static str)> {
+    if crate::generators::from_spec(spec)?.is_some() {
+        return Ok((J::str(spec), "spec"));
+    }
+    let text = std::fs::read_to_string(spec).map_err(|e| Error::io(spec, e))?;
+    let format = if spec.ends_with(".json") { "json" } else { "snpl" };
+    Ok((J::str(text), format))
+}
+
+fn print_response(body: &str, args: &Args) -> Result<()> {
+    if args.flag("raw") {
+        println!("{body}");
+        return Ok(());
+    }
+    let parsed = J::parse(body)
+        .map_err(|e| Error::runtime(format!("unparseable server response: {e}")))?;
+    if args.flag("report-only") {
+        let report = parsed
+            .get("report")
+            .ok_or_else(|| Error::runtime("response has no `report` field"))?;
+        println!("{}", report.to_string_compact());
+    } else {
+        println!("{}", parsed.to_string_pretty());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn builds_run_body_from_builtin_spec() {
+        let a = args(&["run", "paper_pi", "--depth", "6", "--mode", "dfs"]);
+        let body = build_query_body("run", "paper_pi", &a).unwrap();
+        assert_eq!(body.get("system").unwrap().as_str(), Some("paper_pi"));
+        assert_eq!(body.get("format").unwrap().as_str(), Some("spec"));
+        assert_eq!(body.get("depth").unwrap().as_usize(), Some(6));
+        assert_eq!(body.get("mode").unwrap().as_str(), Some("dfs"));
+        assert_eq!(body.get("max"), None, "run ignores generated's options");
+    }
+
+    #[test]
+    fn file_payload_sends_contents_inline() {
+        let dir = std::env::temp_dir().join("snapse_query_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sys.snpl");
+        let text = crate::parser::snpl::to_snpl(&crate::generators::paper_pi());
+        std::fs::write(&path, &text).unwrap();
+        let (payload, format) = system_payload(path.to_str().unwrap()).unwrap();
+        assert_eq!(format, "snpl");
+        assert_eq!(payload.as_str(), Some(text.as_str()), "contents, not the path");
+        assert!(system_payload("/no/such/file.snpl").is_err());
+    }
+
+    #[test]
+    fn unknown_endpoint_is_an_error() {
+        let a = args(&["teleport", "paper_pi"]);
+        assert!(run(&a).is_err());
+    }
+}

@@ -47,21 +47,8 @@ pub fn run(args: &Args) -> Result<()> {
             }
         }
         if args.flag("json") {
-            let j = crate::util::JsonValue::obj([
-                ("system", crate::util::JsonValue::str(sys.name.clone())),
-                (
-                    "all_gen_ck",
-                    crate::util::JsonValue::arr(
-                        report
-                            .visited
-                            .in_order()
-                            .iter()
-                            .map(|c| crate::util::JsonValue::str(c.to_string())),
-                    ),
-                ),
-                ("stop", crate::util::JsonValue::str(report.stop.to_string())),
-            ]);
-            println!("{}", j.to_string_pretty());
+            // the same deterministic rendering the serve daemon caches
+            println!("{}", report.to_json(&sys.name).to_string_pretty());
         }
         return Ok(());
     }

@@ -1,0 +1,28 @@
+//! `snapse serve` — boot the exploration-serving daemon.
+
+use super::Args;
+use crate::error::Result;
+use crate::serve::{ServeConfig, Server};
+
+pub fn run(args: &Args) -> Result<()> {
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        addr: args.opt("addr").unwrap_or(&defaults.addr).to_string(),
+        explore_workers: args.opt_num::<usize>("workers")?.unwrap_or(defaults.explore_workers),
+        handler_threads: args.opt_num::<usize>("threads")?.unwrap_or(defaults.handler_threads),
+        cache_capacity: args
+            .opt_num::<usize>("cache-capacity")?
+            .unwrap_or(defaults.cache_capacity),
+    };
+    let server = Server::bind(cfg.clone())?;
+    let addr = server.local_addr()?;
+    // one parseable readiness line (the CI smoke job and scripts wait on it)
+    println!("snapse serve: listening on {addr}");
+    println!(
+        "  {} handler threads, {} explore worker(s) per query, cache capacity {}",
+        cfg.handler_threads, cfg.explore_workers, cfg.cache_capacity
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    server.run()
+}

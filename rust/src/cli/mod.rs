@@ -5,13 +5,19 @@
 //!                     [--artifacts DIR] [--workers W] [--paper-log]
 //!                     [--tree FILE.dot] [--json]
 //! snapse walk <system> [--steps N] [--seed S]
-//! snapse generated <system> [--max N]
+//! snapse generated <system> [--max N] [--workers W]
+//! snapse analyze <system> [--configs N] [--bound B] [--workers W] [--json]
 //! snapse info <system> [--dot]
 //! snapse artifacts [--dir DIR]
+//! snapse serve [--addr H:P] [--workers W] [--threads T] [--cache-capacity N]
+//! snapse query <run|generated|analyze|info|stats|health|shutdown> [<system>]
+//!              [--addr H:P] [--depth D] [--configs N] [--mode bfs|dfs]
+//!              [--max N] [--bound B] [--raw] [--report-only]
 //! ```
 //!
 //! `<system>` is a path to a `.snpl`/`.json` file, or a builtin spec:
 //! `paper_pi`, `nat_gen`, `even_gen`, `ring:M:CHARGE`,
+//! `ring_branch:M:CHARGE:K`, `wide_ring:M:W:CHARGE`,
 //! `counter:LEN:CHARGE`, `div:N:D`, `adder:W`, `random:SEED`.
 
 mod cmd_accept;
@@ -19,7 +25,9 @@ mod cmd_analyze;
 mod cmd_artifacts;
 mod cmd_generated;
 mod cmd_info;
+mod cmd_query;
 mod cmd_run;
+mod cmd_serve;
 mod cmd_sort;
 mod cmd_walk;
 
@@ -86,37 +94,9 @@ impl Args {
 
 /// Resolve a `<system>` spec: builtin name or file path.
 pub fn load_system(spec: &str) -> Result<SnpSystem> {
-    // builtin specs
-    let parts: Vec<&str> = spec.split(':').collect();
-    let num = |i: usize| -> Result<u64> {
-        parts
-            .get(i)
-            .ok_or_else(|| Error::parse("cli", 0, format!("`{spec}` missing parameter {i}")))?
-            .parse()
-            .map_err(|_| Error::parse("cli", 0, format!("bad number in `{spec}`")))
-    };
-    match parts[0] {
-        "paper_pi" => return Ok(crate::generators::paper_pi()),
-        "nat_gen" => return Ok(crate::generators::nat_generator()),
-        "even_gen" => return Ok(crate::generators::even_generator()),
-        "ring" => return Ok(crate::generators::ring(num(1)? as usize, num(2)?)),
-        "ring_branch" => {
-            return Ok(crate::generators::ring_with_branching(
-                num(1)? as usize,
-                num(2)?,
-                num(3)?,
-            ))
-        }
-        "counter" => return Ok(crate::generators::counter_chain(num(1)? as usize, num(2)?)),
-        "div" => return Ok(crate::generators::divisibility_checker(num(1)?, num(2)?)),
-        "adder" => return Ok(crate::generators::bit_adder(num(1)? as usize)),
-        "random" => {
-            return Ok(crate::generators::random_system(
-                &crate::generators::RandomSystemParams::default(),
-                num(1)?,
-            ))
-        }
-        _ => {}
+    // builtin specs (shared with the serve daemon)
+    if let Some(sys) = crate::generators::from_spec(spec)? {
+        return Ok(sys);
     }
     // file path
     let path = std::path::Path::new(spec);
@@ -132,7 +112,7 @@ pub fn load_system(spec: &str) -> Result<SnpSystem> {
 /// Top-level dispatch. Returns the process exit code.
 pub fn main_with_args(argv: &[String]) -> i32 {
     let usage =
-        "usage: snapse <run|walk|generated|info|artifacts|analyze|sort|accept> …  (see --help)";
+        "usage: snapse <run|walk|generated|info|artifacts|analyze|sort|accept|serve|query> …  (see --help)";
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
         println!("{}", help_text());
         return 0;
@@ -148,6 +128,8 @@ pub fn main_with_args(argv: &[String]) -> i32 {
         "analyze" => cmd_analyze::run(&args),
         "sort" => cmd_sort::run(&args),
         "accept" => cmd_accept::run(&args),
+        "serve" => cmd_serve::run(&args),
+        "query" => cmd_query::run(&args),
         _ => Err(Error::parse("cli", 0, format!("unknown command `{cmd}`\n{usage}"))),
     });
     match result {
@@ -170,18 +152,24 @@ fn help_text() -> String {
     s.push_str("  walk <system>       follow one random branch\n");
     s.push_str("      --steps N --seed S\n");
     s.push_str("  generated <system>  compute the generated number set\n");
-    s.push_str("      --max N\n");
+    s.push_str("      --max N --workers W\n");
     s.push_str("  info <system>       print the system, its matrix, and stats\n");
     s.push_str("      --dot\n");
     s.push_str("  artifacts           list AOT artifacts\n");
     s.push_str("      --dir DIR\n");
     s.push_str("  analyze <system>    determinism/confluence/boundedness report\n");
-    s.push_str("      --configs N --bound B\n");
+    s.push_str("      --configs N --bound B --workers W --json\n");
     s.push_str("  sort <v1,v2,…>      run the SN P spike sorter\n");
-    s.push_str("  accept <d> <n>      input-driven divisibility acceptor\n\n");
+    s.push_str("  accept <d> <n>      input-driven divisibility acceptor\n");
+    s.push_str("  serve               exploration-serving daemon (content-addressed cache)\n");
+    s.push_str("      --addr HOST:PORT --workers W --threads T --cache-capacity N\n");
+    s.push_str("  query <endpoint> [<system>]   client for a running daemon\n");
+    s.push_str("      endpoints: run generated analyze info stats health shutdown\n");
+    s.push_str("      --addr HOST:PORT --depth D --configs N --mode bfs|dfs --max N\n");
+    s.push_str("      --bound B --raw --report-only\n\n");
     s.push_str("systems: a .snpl/.json path, or builtin:\n");
-    s.push_str("  paper_pi nat_gen even_gen ring:M:C ring_branch:M:C:K counter:L:C\n");
-    s.push_str("  div:N:D adder:W random:SEED\n");
+    s.push_str("  paper_pi nat_gen even_gen ring:M:C ring_branch:M:C:K wide_ring:M:W:C\n");
+    s.push_str("  counter:L:C div:N:D adder:W random:SEED\n");
     s
 }
 

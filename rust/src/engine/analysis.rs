@@ -41,6 +41,30 @@ impl AnalysisReport {
         self.max_branching <= 1
     }
 
+    /// JSON rendering for `snapse analyze --json` and the serve cache.
+    /// Deterministic for a fixed system + bounds + worker count; on
+    /// budget-truncated runs the `halting`/`confluent` fields reflect the
+    /// execution mode's own truncation point (see [`analyze_with_workers`]
+    /// for the exact contract), while every visited-set-derived field is
+    /// identical at any worker count.
+    pub fn to_json(&self) -> crate::util::JsonValue {
+        use crate::util::JsonValue as J;
+        J::obj([
+            ("complete", J::Bool(self.complete)),
+            ("reachable", J::num(self.reachable as f64)),
+            ("deterministic", J::Bool(self.deterministic())),
+            ("max_branching", J::num(self.max_branching.min(1 << 53) as f64)),
+            ("halting", J::arr(self.halting.iter().map(|c| J::str(c.to_string())))),
+            ("confluent", J::Bool(self.confluent)),
+            ("max_spikes", J::num(self.max_spikes.min(1 << 53) as f64)),
+            (
+                "delta_bounds",
+                J::arr([J::num(self.delta_bounds.0 as f64), J::num(self.delta_bounds.1 as f64)]),
+            ),
+            ("exceeded_hint", J::Bool(self.exceeded_hint)),
+        ])
+    }
+
     /// Render a human summary.
     pub fn render(&self) -> String {
         format!(
@@ -82,9 +106,58 @@ pub fn delta_bounds(sys: &SnpSystem) -> (i64, i64) {
 /// Explore up to `max_configs` and answer the standard questions.
 /// `bound_hint` flags configurations whose per-neuron count exceeds it.
 pub fn analyze(sys: &SnpSystem, max_configs: usize, bound_hint: u64) -> AnalysisReport {
-    let mut explorer =
-        Explorer::new(sys, ExploreOptions::breadth_first().max_configs(max_configs));
-    let report = explorer.run();
+    analyze_with_workers(sys, max_configs, bound_hint, 1)
+}
+
+/// [`analyze`] with an explicit evaluation worker count (`0` = all
+/// available parallelism, `1` = the serial reference path). Every answer
+/// derived from the visited set — `reachable`, `max_branching`,
+/// `max_spikes`, `complete`, `exceeded_hint` — is identical at every
+/// worker count (the parallel explorer's visited set is byte-identical to
+/// the serial one). `halting`/`confluent` are identical too on *complete*
+/// runs; when the `max_configs` budget truncates the run, the halting
+/// list reflects the execution mode's own truncation point (see
+/// [`super::parallel`]) and may differ between worker counts.
+pub fn analyze_with_workers(
+    sys: &SnpSystem,
+    max_configs: usize,
+    bound_hint: u64,
+    workers: usize,
+) -> AnalysisReport {
+    let mut explorer = Explorer::new(
+        sys,
+        ExploreOptions::breadth_first().max_configs(max_configs).workers(workers),
+    );
+    summarize(sys, explorer.run(), bound_hint)
+}
+
+/// [`analyze_with_workers`] drawing backends from a caller-owned shared
+/// pool (the serve daemon's per-system pool); the pool size is the worker
+/// count. Takes the prebuilt transition matrix so the daemon — which
+/// already built it for hashing and pool construction — doesn't build it
+/// a third time.
+pub fn analyze_with_pool(
+    sys: &SnpSystem,
+    max_configs: usize,
+    bound_hint: u64,
+    pool: std::sync::Arc<crate::compute::BackendPool>,
+    matrix: crate::matrix::TransitionMatrix,
+) -> AnalysisReport {
+    let mut explorer = Explorer::with_pool_and_matrix(
+        sys,
+        ExploreOptions::breadth_first().max_configs(max_configs),
+        pool,
+        matrix,
+    );
+    summarize(sys, explorer.run(), bound_hint)
+}
+
+/// Post-process an exploration into the analysis answers.
+fn summarize(
+    sys: &SnpSystem,
+    report: super::explorer::ExploreReport,
+    bound_hint: u64,
+) -> AnalysisReport {
     // recompute max branching by re-walking the visited set (cheap, and
     // keeps the explorer lean)
     let mut max_branching = 0u128;
@@ -161,6 +234,48 @@ mod tests {
         let rep = analyze(&sys, 10_000, 100);
         assert!(rep.deterministic());
         assert!(rep.confluent);
+    }
+
+    #[test]
+    fn workers_do_not_change_answers() {
+        // capped run: the visited set (and everything derived from it) is
+        // byte-identical at any worker count; halting configs are only
+        // compared on complete runs (see json_rendering_is_deterministic)
+        // because a cap truncates the serial and pipelined fold at
+        // different auxiliary points.
+        let sys = crate::generators::paper_pi();
+        let serial = analyze(&sys, 200, 100);
+        let par = analyze_with_workers(&sys, 200, 100, 4);
+        assert_eq!(par.reachable, serial.reachable);
+        assert_eq!(par.max_branching, serial.max_branching);
+        assert_eq!(par.max_spikes, serial.max_spikes);
+        assert_eq!(par.complete, serial.complete);
+        assert_eq!(par.exceeded_hint, serial.exceeded_hint);
+    }
+
+    #[test]
+    fn pool_backed_analyze_matches() {
+        let sys = crate::generators::counter_chain(4, 3);
+        let m = crate::matrix::build_matrix(&sys);
+        let pool = std::sync::Arc::new(
+            crate::compute::BackendPool::build(
+                &crate::compute::HostBackendFactory::new(m.clone()),
+                2,
+            )
+            .unwrap(),
+        );
+        let a = analyze(&sys, 10_000, 100);
+        let b = analyze_with_pool(&sys, 10_000, 100, pool, m);
+        assert_eq!(a.to_json().to_string_compact(), b.to_json().to_string_compact());
+    }
+
+    #[test]
+    fn json_rendering_is_deterministic() {
+        let sys = crate::generators::counter_chain(4, 3);
+        let a = analyze(&sys, 10_000, 100).to_json().to_string_compact();
+        let b = analyze_with_workers(&sys, 10_000, 100, 3).to_json().to_string_compact();
+        assert_eq!(a, b, "same system + bounds must serialize identically");
+        assert!(a.contains("\"deterministic\":true"));
     }
 
     #[test]

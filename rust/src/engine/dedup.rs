@@ -293,6 +293,42 @@ mod tests {
     }
 
     #[test]
+    fn striped_store_overlapping_writers_admit_each_key_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // Many threads race `insert` over the SAME key space (every key
+        // contended by every thread, spread across all stripes): exactly
+        // one admission per key, none lost.
+        const KEYS: u64 = 1_000;
+        const THREADS: u64 = 8;
+        let s = ShardedVisitedStore::new(4);
+        let admitted = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let s = &s;
+                let admitted = &admitted;
+                scope.spawn(move || {
+                    // same keys, thread-dependent order → maximal overlap
+                    for i in 0..KEYS {
+                        let k = (i * (t + 1) + t) % KEYS;
+                        if s.insert(&ConfigVector::from(vec![k, k % 11, 7])) {
+                            admitted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            admitted.load(Ordering::Relaxed),
+            KEYS as usize,
+            "each key admitted exactly once across all threads"
+        );
+        assert_eq!(s.len(), KEYS as usize, "no lost inserts");
+        for i in 0..KEYS {
+            assert!(s.contains(&ConfigVector::from(vec![i, i % 11, 7])), "key {i} missing");
+        }
+    }
+
+    #[test]
     fn sharded_basic() {
         let s = ShardedVisited::new(4);
         assert!(s.insert(&c(&[1, 2]), 0));

@@ -167,6 +167,34 @@ impl ExploreReport {
     pub fn render_all_gen_ck(&self) -> String {
         self.visited.render_all_gen_ck()
     }
+
+    /// Deterministic JSON rendering of the result: the fields that are a
+    /// pure function of the system and the exploration options
+    /// (`allGenCk`, halting set, stop reason). `allGenCk`, its length and
+    /// the stop reason are byte-identical at every worker count; the
+    /// halting list is too on complete runs, while a `max_configs`-
+    /// truncated run reports the halting configs folded up to that
+    /// execution mode's own truncation point (see [`super::parallel`]).
+    /// Timing and pipeline counters are deliberately excluded — they vary
+    /// run to run. This rendering is what `snapse run --json` prints and
+    /// what the serve daemon caches by content hash.
+    pub fn to_json(&self, system: &str) -> crate::util::JsonValue {
+        use crate::util::JsonValue as J;
+        J::obj([
+            ("system", J::str(system)),
+            ("configs", J::num(self.visited.len() as f64)),
+            ("depth_reached", J::num(f64::from(self.depth_reached))),
+            (
+                "all_gen_ck",
+                J::arr(self.visited.in_order().iter().map(|c| J::str(c.to_string()))),
+            ),
+            (
+                "halting",
+                J::arr(self.halting_configs.iter().map(|c| J::str(c.to_string()))),
+            ),
+            ("stop", J::str(self.stop.to_string())),
+        ])
+    }
 }
 
 /// Work item: a configuration awaiting expansion.
@@ -183,6 +211,11 @@ enum BackendSource {
     /// A factory — the parallel path creates one instance per worker; the
     /// serial path creates a single instance per run.
     Factory(std::sync::Arc<dyn BackendFactory>),
+    /// A caller-owned shared pool (e.g. the serve daemon's per-system
+    /// pool): the parallel path checks instances out instead of building
+    /// its own, so concurrent explorations of one system reuse the same
+    /// backends. Parallelism is the pool size, not `opts.workers`.
+    Pool(std::sync::Arc<crate::compute::BackendPool>),
 }
 
 /// The explorer. Owns the matrix and a backend source.
@@ -235,14 +268,46 @@ impl<'a> Explorer<'a> {
         Explorer { sys, matrix, source: BackendSource::Factory(factory), opts }
     }
 
+    /// Explorer over a caller-owned shared
+    /// [`BackendPool`](crate::compute::BackendPool). The pool's
+    /// size — not `opts.workers` — decides the parallelism: a pool of one
+    /// runs the serial reference path on the pooled instance, a larger
+    /// pool engages the pipelined engine drawing from it. Used by the
+    /// serve daemon so concurrent queries against the same system share
+    /// one set of backends instead of constructing a pool per request.
+    pub fn with_pool(
+        sys: &'a SnpSystem,
+        opts: ExploreOptions,
+        pool: std::sync::Arc<crate::compute::BackendPool>,
+    ) -> Self {
+        let matrix = build_matrix(sys);
+        Explorer::with_pool_and_matrix(sys, opts, pool, matrix)
+    }
+
+    /// [`Explorer::with_pool`] reusing a prebuilt transition matrix — the
+    /// serve router builds `M_Π` once per request (content hash + pool
+    /// construction) and hands it on instead of rebuilding it here.
+    pub fn with_pool_and_matrix(
+        sys: &'a SnpSystem,
+        opts: ExploreOptions,
+        pool: std::sync::Arc<crate::compute::BackendPool>,
+        matrix: TransitionMatrix,
+    ) -> Self {
+        Explorer { sys, matrix, source: BackendSource::Pool(pool), opts }
+    }
+
     /// The transition matrix in use.
     pub fn matrix(&self) -> &TransitionMatrix {
         &self.matrix
     }
 
-    /// Worker threads a run would use (resolves `workers == 0`).
+    /// Worker threads a run would use (resolves `workers == 0`; a shared
+    /// pool pins the count to its size).
     pub fn effective_workers(&self) -> usize {
-        crate::compute::pool::resolve_workers(self.opts.workers)
+        match &self.source {
+            BackendSource::Pool(p) => p.size(),
+            _ => crate::compute::pool::resolve_workers(self.opts.workers),
+        }
     }
 
     /// Run from the system's initial configuration.
@@ -254,22 +319,33 @@ impl<'a> Explorer<'a> {
     pub fn run_from(&mut self, c0: ConfigVector) -> ExploreReport {
         let workers = self.effective_workers();
         if workers > 1 && !self.opts.record_tree {
-            if let BackendSource::Factory(factory) = &self.source {
-                return super::parallel::run_pipelined(
-                    self.sys,
-                    factory.as_ref(),
-                    &self.opts,
-                    workers,
-                    c0,
-                );
+            match &self.source {
+                BackendSource::Factory(factory) => {
+                    return super::parallel::run_pipelined(
+                        self.sys,
+                        factory.as_ref(),
+                        &self.opts,
+                        workers,
+                        c0,
+                    );
+                }
+                BackendSource::Pool(pool) => {
+                    return super::parallel::run_pipelined_on(self.sys, pool, &self.opts, c0);
+                }
+                BackendSource::Single(_) => {}
             }
         }
         let mut created;
+        let mut pooled;
         let backend: &mut dyn StepBackend = match &mut self.source {
             BackendSource::Single(b) => &mut **b,
             BackendSource::Factory(f) => {
                 created = f.create().expect("backend factory failed");
                 &mut *created
+            }
+            BackendSource::Pool(p) => {
+                pooled = p.acquire();
+                &mut *pooled
             }
         };
         run_serial(self.sys, backend, &self.opts, c0)
@@ -592,6 +668,44 @@ mod tests {
         .run();
         assert!(rep.tree.is_some(), "tree recording works regardless of workers");
         assert_eq!(rep.stats.workers, 1, "tree recording runs the serial path");
+    }
+
+    #[test]
+    fn with_pool_matches_factory_paths() {
+        let sys = crate::generators::paper_pi();
+        let reference = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3)).run();
+        let m = build_matrix(&sys);
+        // pool of one: serial reference path on the pooled instance
+        let pool1 = std::sync::Arc::new(
+            crate::compute::BackendPool::build(
+                &crate::compute::HostBackendFactory::new(m.clone()),
+                1,
+            )
+            .unwrap(),
+        );
+        let rep1 = Explorer::with_pool(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(3),
+            std::sync::Arc::clone(&pool1),
+        )
+        .run();
+        assert_eq!(rep1.visited.in_order(), reference.visited.in_order());
+        assert_eq!(rep1.stats.workers, 1);
+        assert_eq!(pool1.available(), 1, "serial path returns the pooled instance");
+        // pool of four: pipelined path drawing from the shared pool
+        let pool4 = std::sync::Arc::new(
+            crate::compute::BackendPool::build(&crate::compute::HostBackendFactory::new(m), 4)
+                .unwrap(),
+        );
+        let rep4 = Explorer::with_pool(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(3),
+            std::sync::Arc::clone(&pool4),
+        )
+        .run();
+        assert_eq!(rep4.visited.in_order(), reference.visited.in_order());
+        assert_eq!(rep4.stats.workers, 4, "pool size decides parallelism");
+        assert_eq!(pool4.available(), 4, "parallel path returns every instance");
     }
 
     #[test]

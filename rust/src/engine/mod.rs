@@ -15,7 +15,7 @@ mod stop;
 pub mod trace;
 pub mod tree;
 
-pub use analysis::{analyze, AnalysisReport};
+pub use analysis::{analyze, analyze_with_pool, analyze_with_workers, AnalysisReport};
 pub use applicability::{applicable_rules, applicable_rules_into, ApplicabilityMap};
 pub use input::InputSchedule;
 pub use config::ConfigVector;
@@ -24,5 +24,5 @@ pub use explorer::{ExploreOptions, Explorer, ExploreReport, SearchOrder};
 pub use random_walk::{RandomWalk, WalkRecord};
 pub use spiking::{SpikingEnumeration, SpikingVector};
 pub use stop::StopReason;
-pub use trace::{generated_set, SpikeTrace};
+pub use trace::{generated_set, generated_set_budgeted, generated_set_with_workers, SpikeTrace};
 pub use tree::ComputationTree;

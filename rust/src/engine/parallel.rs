@@ -115,10 +115,27 @@ pub(crate) fn run_pipelined(
     workers: usize,
     c0: ConfigVector,
 ) -> ExploreReport {
+    let pool = BackendPool::build(factory, workers).expect("backend factory failed");
+    run_pipelined_on(sys, &pool, opts, c0)
+}
+
+/// Run the pipelined exploration against a caller-owned pool (the serve
+/// daemon shares one pool per system across concurrent queries). The pool
+/// size is the worker count. Instances are checked out per *chunk*, not
+/// per thread, so two concurrent runs over one shared pool interleave
+/// chunk-by-chunk rather than the first run camping on every instance;
+/// an idle worker blocks on its run's work channel (and exits when it
+/// closes), never inside the pool.
+pub(crate) fn run_pipelined_on(
+    sys: &SnpSystem,
+    pool: &BackendPool,
+    opts: &ExploreOptions,
+    c0: ConfigVector,
+) -> ExploreReport {
+    let workers = pool.size();
     let start = Instant::now();
     let n = sys.num_neurons();
     let r = sys.num_rules();
-    let pool = BackendPool::build(factory, workers).expect("backend factory failed");
     // BFS: batch boundaries are order-neutral → pipeline-tuned chunks.
     // DFS: rounds must match the serial batch structure → round cap from
     // the backend (as the serial path does), chunked for the pool.
@@ -164,7 +181,6 @@ pub(crate) fn run_pipelined(
             let store = &store;
             let cancel = &cancel;
             scope.spawn(move || {
-                let mut backend = pool.acquire();
                 loop {
                     // hold the lock across recv: exactly one idle worker
                     // waits productively, the rest queue on the mutex
@@ -173,6 +189,13 @@ pub(crate) fn run_pipelined(
                     if cancel.load(Ordering::Acquire) {
                         break;
                     }
+                    // check an instance out per chunk (released at the end
+                    // of the iteration): on a dedicated pool the checkout
+                    // never blocks, and on a shared pool concurrent runs
+                    // interleave chunk-by-chunk instead of one run camping
+                    // on every instance — a worker with no work blocks on
+                    // the channel, never on the pool
+                    let mut backend = pool.acquire();
                     let batch = StepBatch {
                         b: chunk.rows,
                         n,

@@ -23,6 +23,39 @@ pub use random_sys::{random_system, RandomSystemParams};
 pub use ring::{ring, ring_with_branching, wide_ring};
 pub use sorter::{sorted_output, sorter};
 
+use crate::error::{Error, Result};
+use crate::snp::SnpSystem;
+
+/// Resolve a builtin system spec string such as `paper_pi`, `ring:4:2` or
+/// `div:9:3` (the grammar the CLI and the serve daemon share). Returns
+/// `Ok(None)` when the leading word names no builtin — callers that also
+/// accept file paths (the CLI) fall through to the filesystem, while the
+/// daemon maps `None` to a client error instead of touching server disks.
+pub fn from_spec(spec: &str) -> Result<Option<SnpSystem>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let num = |i: usize| -> Result<u64> {
+        parts
+            .get(i)
+            .ok_or_else(|| Error::parse("system spec", 0, format!("`{spec}` missing parameter {i}")))?
+            .parse()
+            .map_err(|_| Error::parse("system spec", 0, format!("bad number in `{spec}`")))
+    };
+    let sys = match parts[0] {
+        "paper_pi" => paper_pi(),
+        "nat_gen" => nat_generator(),
+        "even_gen" => even_generator(),
+        "ring" => ring(num(1)? as usize, num(2)?),
+        "ring_branch" => ring_with_branching(num(1)? as usize, num(2)?, num(3)?),
+        "wide_ring" => wide_ring(num(1)? as usize, num(2)? as usize, num(3)?),
+        "counter" => counter_chain(num(1)? as usize, num(2)?),
+        "div" => divisibility_checker(num(1)?, num(2)?),
+        "adder" => bit_adder(num(1)? as usize),
+        "random" => random_system(&RandomSystemParams::default(), num(1)?),
+        _ => return Ok(None),
+    };
+    Ok(Some(sys))
+}
+
 #[cfg(test)]
 mod tests {
     use crate::snp::validate;
@@ -46,5 +79,15 @@ mod tests {
         for s in systems {
             validate(&s).unwrap_or_else(|e| panic!("{}: {e}", s.name));
         }
+    }
+
+    #[test]
+    fn from_spec_resolves_builtins() {
+        assert_eq!(super::from_spec("paper_pi").unwrap().unwrap().name, "paper_pi");
+        assert_eq!(super::from_spec("ring:4:2").unwrap().unwrap().num_neurons(), 4);
+        assert_eq!(super::from_spec("wide_ring:8:3:2").unwrap().unwrap().name, "wide_ring_8_3_2");
+        assert!(super::from_spec("no_such_builtin").unwrap().is_none());
+        assert!(super::from_spec("ring:x:2").is_err(), "bad parameter is an error, not None");
+        assert!(super::from_spec("ring:4").is_err(), "missing parameter is an error");
     }
 }

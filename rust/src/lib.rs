@@ -41,6 +41,7 @@
 //! | [`parser`] | the paper's confVec/M/r file format, `.snpl` DSL, JSON |
 //! | [`generators`] | library of SN P systems (paper's Π, counters, rings…) |
 //! | [`output`] | run reports, DOT export, text tables |
+//! | [`serve`] | exploration-serving daemon: content-addressed report cache, HTTP/1.1 |
 
 pub mod baseline;
 pub mod cli;
@@ -54,6 +55,7 @@ pub mod output;
 pub mod parser;
 pub mod prelude;
 pub mod runtime;
+pub mod serve;
 pub mod snp;
 pub mod util;
 

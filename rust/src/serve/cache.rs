@@ -1,0 +1,357 @@
+//! The content-addressed report cache: LRU + single-flight.
+//!
+//! Keyed by [`CacheKey`] — the canonical system hash plus the exploration
+//! parameters `(kind, depth, max_configs, mode)`. Values are the
+//! *serialized* report bodies (`Arc<String>`), so a cache hit returns the
+//! exact bytes of the original computation — the byte-identity the serve
+//! protocol promises.
+//!
+//! **Single-flight**: when N clients ask for the same uncached key
+//! concurrently, exactly one computes; the rest block on the in-flight
+//! slot and receive the same `Arc`. The daemon's most expensive failure
+//! mode — a thundering herd re-exploring one viral system N times — is
+//! structurally impossible. Errors (and panics, via `catch_unwind`) are
+//! propagated to every waiter and never cached.
+//!
+//! Eviction is least-recently-used by scan: capacity is daemon-scale
+//! (hundreds), where an O(capacity) scan on insert is noise next to the
+//! exploration that produced the entry.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::{Error, Result};
+
+/// What a cached exploration is identified by.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Canonical system content hash ([`super::hash::system_hash`]).
+    pub system_hash: String,
+    /// Endpoint kind: `"run"`, `"generated"`, `"analyze"`, `"info"`.
+    pub kind: &'static str,
+    /// Depth bound (`run`).
+    pub depth: Option<u32>,
+    /// Configuration budget (`run`, `analyze`) or value bound (`generated`).
+    pub max_configs: Option<usize>,
+    /// Residual parameters: search order for `run` (`"bfs"`/`"dfs"`),
+    /// bound hint for `analyze`, empty otherwise.
+    pub mode: String,
+}
+
+/// How a request was satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Served from the LRU.
+    Hit,
+    /// This request ran the computation.
+    Miss,
+    /// Arrived while another request was computing the same key; waited
+    /// and shares that result (no computation of its own).
+    Coalesced,
+}
+
+impl CacheOutcome {
+    /// Wire spelling (the response envelope's `"cache"` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CacheOutcome::Hit => "hit",
+            CacheOutcome::Miss => "miss",
+            CacheOutcome::Coalesced => "coalesced",
+        }
+    }
+}
+
+/// Monotonic counters, exposed on `/v1/stats` and asserted by the e2e
+/// single-flight test.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    /// Served from the LRU.
+    pub hits: AtomicU64,
+    /// Ran the computation.
+    pub misses: AtomicU64,
+    /// Waited on another request's computation.
+    pub coalesced: AtomicU64,
+    /// Entries evicted to make room.
+    pub evictions: AtomicU64,
+    /// Computations actually executed (== successful + failed misses;
+    /// the single-flight invariant is `computations == misses`).
+    pub computations: AtomicU64,
+}
+
+struct Entry {
+    value: Arc<String>,
+    last_used: u64,
+}
+
+/// An in-flight computation other requests can wait on.
+struct Flight {
+    /// `None` while computing; `Some(Ok)` / `Some(Err)` once resolved.
+    result: Mutex<Option<std::result::Result<Arc<String>, String>>>,
+    done: Condvar,
+}
+
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    inflight: HashMap<CacheKey, Arc<Flight>>,
+    tick: u64,
+}
+
+/// The daemon's report cache.
+pub struct ReportCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    /// Counters (atomic: readable without the cache lock).
+    pub stats: CacheStats,
+}
+
+impl ReportCache {
+    /// Cache holding at most `capacity` reports (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        ReportCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner { map: HashMap::new(), inflight: HashMap::new(), tick: 0 }),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Return the cached value for `key`, or run `compute` (at most once
+    /// across all concurrent callers of the same key) and cache its
+    /// output. Errors propagate to every waiter and are not cached; a
+    /// panicking `compute` is caught and surfaced as a runtime error so
+    /// waiters never hang and the daemon never dies.
+    pub fn get_or_compute(
+        &self,
+        key: &CacheKey,
+        compute: impl FnOnce() -> Result<String>,
+    ) -> Result<(Arc<String>, CacheOutcome)> {
+        // fast path / single-flight admission under one lock
+        let flight = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(entry) = inner.map.get_mut(key) {
+                entry.last_used = tick;
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((Arc::clone(&entry.value), CacheOutcome::Hit));
+            }
+            if let Some(flight) = inner.inflight.get(key) {
+                Some(Arc::clone(flight))
+            } else {
+                // this caller computes; the flight is re-fetched from
+                // `inflight` at publish time
+                inner.inflight.insert(
+                    key.clone(),
+                    Arc::new(Flight { result: Mutex::new(None), done: Condvar::new() }),
+                );
+                None
+            }
+        };
+
+        if let Some(flight) = flight {
+            // someone else is computing: wait for their verdict
+            self.stats.coalesced.fetch_add(1, Ordering::Relaxed);
+            let mut slot = flight.result.lock().unwrap();
+            while slot.is_none() {
+                slot = flight.done.wait(slot).unwrap();
+            }
+            return match slot.as_ref().unwrap() {
+                Ok(v) => Ok((Arc::clone(v), CacheOutcome::Coalesced)),
+                Err(msg) => Err(Error::runtime(msg.clone())),
+            };
+        }
+
+        // this caller owns the flight
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        self.stats.computations.fetch_add(1, Ordering::Relaxed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(compute))
+            .unwrap_or_else(|panic| {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "computation panicked".to_string());
+                Err(Error::runtime(format!("computation panicked: {msg}")))
+            })
+            .map(Arc::new);
+
+        // publish: cache on success, resolve the flight either way
+        let flight = {
+            let mut inner = self.inner.lock().unwrap();
+            if let Ok(value) = &outcome {
+                inner.tick += 1;
+                let tick = inner.tick;
+                if inner.map.len() >= self.capacity && !inner.map.contains_key(key) {
+                    if let Some(lru) = inner
+                        .map
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(k, _)| k.clone())
+                    {
+                        inner.map.remove(&lru);
+                        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                inner
+                    .map
+                    .insert(key.clone(), Entry { value: Arc::clone(value), last_used: tick });
+            }
+            inner.inflight.remove(key).expect("flight registered above")
+        };
+        {
+            let mut slot = flight.result.lock().unwrap();
+            *slot = Some(match &outcome {
+                Ok(v) => Ok(Arc::clone(v)),
+                Err(e) => Err(e.to_string()),
+            });
+            flight.done.notify_all();
+        }
+        outcome.map(|v| (v, CacheOutcome::Miss))
+    }
+
+    /// Snapshot the counters plus the current entry count, as JSON (the
+    /// `/v1/stats` payload).
+    pub fn stats_json(&self) -> crate::util::JsonValue {
+        use crate::util::JsonValue as J;
+        let read = |c: &AtomicU64| J::num(c.load(Ordering::Relaxed) as f64);
+        J::obj([
+            ("hits", read(&self.stats.hits)),
+            ("misses", read(&self.stats.misses)),
+            ("coalesced", read(&self.stats.coalesced)),
+            ("evictions", read(&self.stats.evictions)),
+            ("computations", read(&self.stats.computations)),
+            ("entries", J::num(self.len() as f64)),
+            ("capacity", J::num(self.capacity as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(hash: &str, depth: Option<u32>) -> CacheKey {
+        CacheKey {
+            system_hash: hash.to_string(),
+            kind: "run",
+            depth,
+            max_configs: None,
+            mode: "bfs".to_string(),
+        }
+    }
+
+    #[test]
+    fn second_lookup_hits_with_identical_bytes() {
+        let cache = ReportCache::new(8);
+        let k = key("abc", Some(3));
+        let (v1, o1) = cache.get_or_compute(&k, || Ok("{\"x\":1}".to_string())).unwrap();
+        assert_eq!(o1, CacheOutcome::Miss);
+        let (v2, o2) = cache.get_or_compute(&k, || panic!("must not recompute")).unwrap();
+        assert_eq!(o2, CacheOutcome::Hit);
+        assert!(Arc::ptr_eq(&v1, &v2), "hit returns the same allocation — identical bytes");
+        assert_eq!(cache.stats.computations.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn distinct_params_are_distinct_entries() {
+        let cache = ReportCache::new(8);
+        cache.get_or_compute(&key("abc", Some(1)), || Ok("1".into())).unwrap();
+        cache.get_or_compute(&key("abc", Some(2)), || Ok("2".into())).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let cache = ReportCache::new(2);
+        let (a, b, c) = (key("a", None), key("b", None), key("c", None));
+        cache.get_or_compute(&a, || Ok("A".into())).unwrap();
+        cache.get_or_compute(&b, || Ok("B".into())).unwrap();
+        // touch `a`, making `b` the LRU victim
+        cache.get_or_compute(&a, || unreachable!()).unwrap();
+        cache.get_or_compute(&c, || Ok("C".into())).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats.evictions.load(Ordering::Relaxed), 1);
+        let (_, o) = cache.get_or_compute(&a, || Ok("A2".into())).unwrap();
+        assert_eq!(o, CacheOutcome::Hit, "recently used entry survived");
+        let (_, o) = cache.get_or_compute(&b, || Ok("B2".into())).unwrap();
+        assert_eq!(o, CacheOutcome::Miss, "LRU entry was evicted");
+    }
+
+    #[test]
+    fn errors_propagate_and_are_not_cached() {
+        let cache = ReportCache::new(4);
+        let k = key("e", None);
+        assert!(cache
+            .get_or_compute(&k, || Err(Error::runtime("boom")))
+            .is_err());
+        assert_eq!(cache.len(), 0, "errors are not cached");
+        let (_, o) = cache.get_or_compute(&k, || Ok("fine".into())).unwrap();
+        assert_eq!(o, CacheOutcome::Miss, "retry recomputes");
+    }
+
+    #[test]
+    fn panics_become_errors_not_hangs() {
+        let cache = ReportCache::new(4);
+        let k = key("p", None);
+        let err = cache
+            .get_or_compute(&k, || panic!("kernel exploded"))
+            .unwrap_err();
+        assert!(err.to_string().contains("kernel exploded"), "{err}");
+        // the flight was resolved and removed: next call computes fresh
+        let (_, o) = cache.get_or_compute(&k, || Ok("ok".into())).unwrap();
+        assert_eq!(o, CacheOutcome::Miss);
+    }
+
+    #[test]
+    fn single_flight_under_contention() {
+        let cache = Arc::new(ReportCache::new(8));
+        let computed = Arc::new(AtomicU64::new(0));
+        let k = key("contended", Some(9));
+        let mut results = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for _ in 0..8 {
+                let cache = Arc::clone(&cache);
+                let computed = Arc::clone(&computed);
+                let k = k.clone();
+                handles.push(scope.spawn(move || {
+                    cache
+                        .get_or_compute(&k, || {
+                            computed.fetch_add(1, Ordering::SeqCst);
+                            // widen the race window
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            Ok("{\"expensive\":true}".to_string())
+                        })
+                        .unwrap()
+                }));
+            }
+            for h in handles {
+                results.push(h.join().unwrap());
+            }
+        });
+        assert_eq!(computed.load(Ordering::SeqCst), 1, "exactly one computation");
+        assert_eq!(cache.stats.computations.load(Ordering::Relaxed), 1);
+        let first = &results[0].0;
+        for (v, _) in &results {
+            assert_eq!(v.as_str(), first.as_str(), "every waiter got the same bytes");
+        }
+        let misses = results.iter().filter(|(_, o)| *o == CacheOutcome::Miss).count();
+        assert_eq!(misses, 1, "exactly one request reports the miss");
+    }
+}

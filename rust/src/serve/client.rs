@@ -1,0 +1,77 @@
+//! Minimal blocking HTTP client for the daemon — used by `snapse query`,
+//! the e2e tests, the serve bench, and the CI smoke job, so the daemon is
+//! exercisable without curl.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Per-connection I/O timeout. Generous: a cold exploration on a loaded
+/// machine can take a while before the response starts.
+const IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// One `Connection: close` HTTP exchange. Returns `(status, body)`.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Error::runtime(format!("connect to {addr} failed: {e}")))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+
+    let payload = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(payload.as_bytes()))
+        .map_err(|e| Error::runtime(format!("write to {addr} failed: {e}")))?;
+
+    let mut raw = Vec::new();
+    stream
+        .read_to_end(&mut raw)
+        .map_err(|e| Error::runtime(format!("read from {addr} failed: {e}")))?;
+    parse_response(&raw)
+}
+
+/// `GET` helper.
+pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
+    request(addr, "GET", path, None)
+}
+
+/// `POST` helper with a JSON body.
+pub fn post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    request(addr, "POST", path, Some(body))
+}
+
+fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
+    let text = std::str::from_utf8(raw)
+        .map_err(|_| Error::runtime("response is not UTF-8"))?;
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| Error::runtime("response has no header/body separator"))?;
+    let status_line = head.lines().next().unwrap_or_default();
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| Error::runtime(format!("bad status line `{status_line}`")))?;
+    Ok((status, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_response_bytes() {
+        let raw = b"HTTP/1.1 200 OK\r\ncontent-length: 2\r\n\r\nhi";
+        assert_eq!(parse_response(raw).unwrap(), (200, "hi".to_string()));
+        let raw = b"HTTP/1.1 404 Not Found\r\n\r\n{\"error\":{}}";
+        assert_eq!(parse_response(raw).unwrap().0, 404);
+        assert!(parse_response(b"no separator").is_err());
+        assert!(parse_response(b"HTTP/1.1 abc\r\n\r\n").is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Content-addressed system identity.
+//!
+//! The serve daemon's cache must recognize that `paper_pi` given as a
+//! builtin spec, an `.snpl` file, or a JSON document is *one* system. The
+//! source text can't do that — names, labels, whitespace and rule
+//! spellings all differ — so the hash is computed over the **built
+//! canonical form** (the idea of canonical-form matrix representations,
+//! arXiv 2211.15156): the spiking transition matrix `M_Π`, the initial
+//! configuration `C₀`, the input/output designations, and each rule's
+//! guard *semantics* (its semilinear length set, which is kept in a
+//! canonical sorted/subsumption-reduced form — so `a^2(a)*` and the
+//! threshold guard `≥2` hash identically).
+//!
+//! Deliberately excluded: the system name, neuron labels, and synapses
+//! that can never carry spikes (they don't appear in `M_Π` and cannot
+//! affect any reachable configuration).
+//!
+//! The digest is 128 bits of FNV-1a (two seeded 64-bit streams), hex
+//! encoded. FNV is **not collision-resistant against adversaries**: a
+//! client able to submit crafted systems could construct a collision and
+//! poison the cache entry other clients of the colliding system read.
+//! That is accepted because the daemon's whole perimeter is trusted —
+//! there is no authentication, and any client that can reach it can
+//! already `POST /v1/shutdown`. Deployments serving untrusted tenants
+//! need an authenticating front end, at which point swapping this for a
+//! keyed/cryptographic hash is a one-function change ([`system_hash`]).
+
+use crate::matrix::{build_matrix, TransitionMatrix};
+use crate::snp::{Guard, SnpSystem};
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+const OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
+// second stream: FNV offset basis xored with an arbitrary odd constant so
+// the two 64-bit digests are decorrelated
+const OFFSET_B: u64 = 0xcbf2_9ce4_8422_2325 ^ 0x9e37_79b9_7f4a_7c15;
+
+/// Two independent FNV-1a streams fed identical bytes → a 128-bit digest.
+struct Fnv128 {
+    a: u64,
+    b: u64,
+}
+
+impl Fnv128 {
+    fn new() -> Self {
+        Fnv128 { a: OFFSET_A, b: OFFSET_B }
+    }
+
+    fn write_byte(&mut self, byte: u8) {
+        self.a = (self.a ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+        self.b = (self.b ^ u64::from(byte ^ 0x5a)).wrapping_mul(FNV_PRIME);
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        for byte in v.to_le_bytes() {
+            self.write_byte(byte);
+        }
+    }
+
+    fn write_i64(&mut self, v: i64) {
+        self.write_u64(v as u64);
+    }
+
+    /// Domain separator between fields (prevents e.g. a matrix entry
+    /// being read as a C₀ entry when shapes line up).
+    fn tag(&mut self, t: &str) {
+        for b in t.as_bytes() {
+            self.write_byte(*b);
+        }
+        self.write_byte(0xff);
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.a, self.b)
+    }
+}
+
+/// Canonical content hash of a built system (32 hex chars / 128 bits).
+/// Equal for every source form that builds to the same matrix, initial
+/// configuration, I/O designation and guard semantics.
+pub fn system_hash(sys: &SnpSystem) -> String {
+    system_hash_with_matrix(sys, &build_matrix(sys))
+}
+
+/// [`system_hash`] when the caller already built the transition matrix
+/// (the daemon builds it once per request for pool reuse).
+pub fn system_hash_with_matrix(sys: &SnpSystem, matrix: &TransitionMatrix) -> String {
+    let mut h = Fnv128::new();
+
+    h.tag("matrix");
+    h.write_u64(matrix.rows() as u64);
+    h.write_u64(matrix.cols() as u64);
+    for &v in matrix.as_row_major() {
+        h.write_i64(v);
+    }
+
+    h.tag("c0");
+    for v in sys.initial_config() {
+        h.write_u64(v);
+    }
+
+    // Option<usize> encoded as 0 = none, i+1 = neuron i
+    h.tag("io");
+    h.write_u64(sys.input.map_or(0, |i| i as u64 + 1));
+    h.write_u64(sys.output.map_or(0, |o| o as u64 + 1));
+
+    // guard semantics per rule, in the global rule order (the matrix rows
+    // carry consumed/produced; guards are the one semantic input M_Π
+    // cannot encode)
+    h.tag("guards");
+    for (_, j, rule) in sys.rules() {
+        h.write_u64(j as u64);
+        let lengths = rule.guard.lengths();
+        h.write_u64(lengths.progressions().len() as u64);
+        for p in lengths.progressions() {
+            h.write_u64(p.offset);
+            h.write_u64(p.period);
+        }
+    }
+
+    h.hex()
+}
+
+/// Do two guards have identical applicability semantics? (Convenience for
+/// tests/documentation; the hash uses the same canonical length sets.)
+pub fn guards_equivalent(a: &Guard, b: &Guard) -> bool {
+    a.lengths() == b.lengths()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_deterministic_and_shaped() {
+        let sys = crate::generators::paper_pi();
+        let h1 = system_hash(&sys);
+        let h2 = system_hash(&sys);
+        assert_eq!(h1, h2);
+        assert_eq!(h1.len(), 32);
+        assert!(h1.bytes().all(|b| b.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn source_form_does_not_matter() {
+        // builtin → .snpl round-trip → JSON round-trip: one hash
+        let builtin = crate::generators::paper_pi();
+        let snpl = crate::parser::parse_snpl(&crate::parser::snpl::to_snpl(&builtin)).unwrap();
+        let json = crate::parser::system_from_json(
+            &crate::parser::system_to_json(&builtin).to_string_compact(),
+        )
+        .unwrap();
+        let h = system_hash(&builtin);
+        assert_eq!(system_hash(&snpl), h, ".snpl round-trip must hash identically");
+        assert_eq!(system_hash(&json), h, "JSON round-trip must hash identically");
+    }
+
+    #[test]
+    fn name_is_excluded_but_semantics_are_not() {
+        let a = crate::generators::paper_pi();
+        let mut renamed = a.clone();
+        renamed.name = "totally_different".into();
+        assert_eq!(system_hash(&a), system_hash(&renamed), "names are not content");
+
+        let b = crate::generators::nat_generator();
+        assert_ne!(system_hash(&a), system_hash(&b), "different systems differ");
+
+        // same structure, different initial charge → different hash
+        let r2 = crate::generators::ring(4, 2);
+        let r3 = crate::generators::ring(4, 3);
+        assert_ne!(system_hash(&r2), system_hash(&r3));
+    }
+
+    #[test]
+    fn guard_spelling_does_not_matter() {
+        use crate::snp::{Rule, SystemBuilder};
+        // threshold ≥2 vs the regex a^2(a)* — same semilinear length set
+        let mk = |rule: Rule| {
+            SystemBuilder::new("g")
+                .neuron(2, vec![rule])
+                .neuron(0, vec![])
+                .synapse(0, 1)
+                .build()
+                .unwrap()
+        };
+        let thresh = mk(Rule::threshold_guarded(2, 1, 1));
+        let regex = mk(Rule {
+            guard: crate::snp::Guard::Regex(crate::snp::UnaryRegex::parse("aa(a)*").unwrap()),
+            consumed: 1,
+            produced: 1,
+        });
+        assert!(guards_equivalent(&thresh.rule(0).guard, &regex.rule(0).guard));
+        assert_eq!(system_hash(&thresh), system_hash(&regex));
+        // …while a genuinely different guard changes the hash
+        let exact = mk(Rule { guard: crate::snp::Guard::Exact(2), consumed: 1, produced: 1 });
+        assert_ne!(system_hash(&thresh), system_hash(&exact));
+    }
+
+    #[test]
+    fn output_designation_is_content() {
+        let a = crate::generators::paper_pi();
+        let mut no_out = a.clone();
+        no_out.output = None;
+        assert_ne!(system_hash(&a), system_hash(&no_out), "`generated` depends on out");
+    }
+}

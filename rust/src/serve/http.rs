@@ -1,0 +1,292 @@
+//! Minimal HTTP/1.1 request/response layer over `std::io`.
+//!
+//! The build is offline (no hyper/tokio), and the daemon's needs are
+//! narrow: short-lived `Connection: close` exchanges carrying JSON
+//! bodies. This module implements exactly that — request-line + headers +
+//! `Content-Length` body parsing with hard size caps, and response
+//! writing — and nothing else (no chunked encoding, no keep-alive, no
+//! TLS). Every parse failure maps to a structured 400 at the router, so a
+//! malformed request can never take the daemon down.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Reject request heads larger than this (64 KiB).
+pub const MAX_HEAD_BYTES: usize = 64 * 1024;
+/// Reject bodies larger than this (8 MiB — a generous ceiling for inline
+/// `.snpl`/JSON system definitions).
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Method verb, upper-case as sent (`GET`, `POST`, …).
+    pub method: String,
+    /// Decoded path without the query string (`/v1/run`).
+    pub path: String,
+    /// Percent-decoded query parameters.
+    pub query: BTreeMap<String, String>,
+    /// Raw body (UTF-8; the router parses JSON out of it).
+    pub body: String,
+}
+
+/// A response ready for [`write_response`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// Body text (JSON for every daemon endpoint).
+    pub body: String,
+    /// Additional headers beyond the standard set.
+    pub headers: Vec<(String, String)>,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response { status, body: body.into(), headers: Vec::new() }
+    }
+
+    /// Attach a header.
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.headers.push((name.to_string(), value.into()));
+        self
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::parse("http request", 0, msg)
+}
+
+/// Read one request from a stream (blocking; callers set socket
+/// timeouts). Enforces [`MAX_HEAD_BYTES`]/[`MAX_BODY_BYTES`].
+pub fn read_request(stream: &mut impl Read) -> Result<Request> {
+    // read byte-wise until the blank line; heads are tiny and the
+    // connection is per-request, so simplicity beats buffering cleverness
+    let mut head: Vec<u8> = Vec::with_capacity(512);
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() >= MAX_HEAD_BYTES {
+            return Err(bad("request head too large"));
+        }
+        match stream.read(&mut byte) {
+            Ok(0) => return Err(bad("connection closed mid-head")),
+            Ok(_) => head.push(byte[0]),
+            Err(e) => return Err(bad(format!("read failed: {e}"))),
+        }
+    }
+    let head_text =
+        std::str::from_utf8(&head).map_err(|_| bad("request head is not UTF-8"))?;
+    let mut lines = head_text.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| bad("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| bad("request line missing target"))?;
+    let version = parts.next().ok_or_else(|| bad("request line missing version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad(format!("unsupported protocol `{version}`")));
+    }
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad(format!("malformed header `{line}`")));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse()
+                .map_err(|_| bad(format!("bad content-length `{}`", value.trim())))?;
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(bad(format!("body of {content_length} bytes exceeds {MAX_BODY_BYTES}")));
+    }
+
+    let (path, query) = parse_target(target)?;
+
+    let mut body_bytes = vec![0u8; content_length];
+    let mut read = 0;
+    while read < content_length {
+        match stream.read(&mut body_bytes[read..]) {
+            Ok(0) => return Err(bad("connection closed mid-body")),
+            Ok(n) => read += n,
+            Err(e) => return Err(bad(format!("body read failed: {e}"))),
+        }
+    }
+    let body = String::from_utf8(body_bytes).map_err(|_| bad("body is not UTF-8"))?;
+
+    Ok(Request { method, path, query, body })
+}
+
+/// Split a request target into decoded path + query map.
+fn parse_target(target: &str) -> Result<(String, BTreeMap<String, String>)> {
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    let path = percent_decode(raw_path)?;
+    let mut query = BTreeMap::new();
+    if let Some(q) = raw_query {
+        for pair in q.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            query.insert(percent_decode(k)?, percent_decode(v)?);
+        }
+    }
+    Ok((path, query))
+}
+
+/// Decode `%XX` escapes and `+`-for-space.
+pub fn percent_decode(s: &str) -> Result<String> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes
+                    .get(i + 1..i + 3)
+                    .and_then(|h| std::str::from_utf8(h).ok())
+                    .and_then(|h| u8::from_str_radix(h, 16).ok())
+                    .ok_or_else(|| bad(format!("bad percent escape in `{s}`")))?;
+                out.push(hex);
+                i += 3;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).map_err(|_| bad("percent-decoded text is not UTF-8"))
+}
+
+/// Write a response (always `Connection: close`; the daemon's exchanges
+/// are one request per connection).
+pub fn write_response(stream: &mut impl Write, resp: &Response) -> std::io::Result<()> {
+    let mut out = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.body.len()
+    );
+    for (name, value) in &resp.headers {
+        out.push_str(name);
+        out.push_str(": ");
+        out.push_str(value);
+        out.push_str("\r\n");
+    }
+    out.push_str("\r\n");
+    stream.write_all(out.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(text: &str) -> Result<Request> {
+        read_request(&mut text.as_bytes())
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = req("GET /v1/stats?pretty=1&name=paper%20pi HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/stats");
+        assert_eq!(r.query.get("pretty").map(String::as_str), Some("1"));
+        assert_eq!(r.query.get("name").map(String::as_str), Some("paper pi"));
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let body = r#"{"system":"paper_pi"}"#;
+        let text = format!(
+            "POST /v1/run HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let r = req(&text).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/run");
+        assert_eq!(r.body, body);
+    }
+
+    #[test]
+    fn header_names_are_case_insensitive() {
+        let text = "POST /x HTTP/1.1\r\ncOnTeNt-LeNgTh: 2\r\n\r\nhi";
+        assert_eq!(req(text).unwrap().body, "hi");
+    }
+
+    #[test]
+    fn malformed_requests_are_errors_not_panics() {
+        assert!(req("").is_err(), "empty stream");
+        assert!(req("GARBAGE\r\n\r\n").is_err(), "no target/version");
+        assert!(req("GET /x SPDY/9\r\n\r\n").is_err(), "bad protocol");
+        assert!(req("GET /x HTTP/1.1\r\nnocolonheader\r\n\r\n").is_err(), "bad header");
+        assert!(
+            req("POST /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n").is_err(),
+            "bad content-length"
+        );
+        assert!(
+            req("POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort").is_err(),
+            "truncated body"
+        );
+        assert!(req("GET /%zz HTTP/1.1\r\n\r\n").is_err(), "bad escape");
+    }
+
+    #[test]
+    fn oversized_body_rejected_by_declared_length() {
+        let text = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let err = req(&text).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response::json(200, r#"{"ok":true}"#).with_header("x-snapse-cache", "hit");
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-length: 11\r\n"));
+        assert!(text.contains("x-snapse-cache: hit\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn percent_decode_basics() {
+        assert_eq!(percent_decode("a%2Fb+c").unwrap(), "a/b c");
+        assert_eq!(percent_decode("plain").unwrap(), "plain");
+        assert!(percent_decode("%4").is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! `snapse serve` — the concurrent exploration-serving daemon.
+//!
+//! The ROADMAP's serving-layer step: identical SN P systems should be
+//! explored **once** and served to everyone. A long-lived daemon owns
+//!
+//! - a content-addressed, single-flight [`ReportCache`] keyed by the
+//!   canonical system hash ([`hash::system_hash`]) plus exploration
+//!   parameters — `paper_pi` as a builtin spec, `.snpl` text or JSON all
+//!   land on one entry, and N concurrent cold requests trigger exactly
+//!   one exploration;
+//! - one shared [`BackendPool`](crate::compute::BackendPool) per system
+//!   (checked out by the pipelined explorer via
+//!   [`Explorer::with_pool`](crate::engine::Explorer::with_pool)), so
+//!   concurrent queries reuse backends instead of rebuilding them;
+//! - a hand-rolled, dependency-free HTTP/1.1 front end ([`http`]) on
+//!   `std::net::TcpListener` with a fixed handler-thread pool.
+//!
+//! Protocol (JSON bodies; see [`router`] for the full parameter set):
+//!
+//! ```text
+//! GET  /healthz                      liveness + uptime
+//! GET  /v1/stats                     cache/pool/request counters
+//! POST /v1/run        {"system","format"?,"depth"?,"configs"?,"mode"?}
+//! POST /v1/generated  {"system","format"?,"max"?}
+//! POST /v1/analyze    {"system","format"?,"configs"?,"bound"?}
+//! POST /v1/info       {"system","format"?}
+//! POST /v1/shutdown                  graceful drain + exit
+//! ```
+//!
+//! Every query response is `{"cache":"hit|miss|coalesced","hash":…,
+//! "report":…}` where the `report` bytes of a hit are identical to the
+//! miss that populated the entry.
+
+pub mod cache;
+pub mod client;
+pub mod hash;
+pub mod http;
+pub mod router;
+
+pub use cache::{CacheKey, CacheOutcome, ReportCache};
+pub use hash::system_hash;
+pub use router::ServeState;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Daemon configuration (the `snapse serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:7878` by default; port `0` = ephemeral).
+    pub addr: String,
+    /// Evaluation workers per exploration (`0` = all cores). Kept at 1 by
+    /// default: a serving daemon gets its parallelism from concurrent
+    /// requests, and over-subscribing cores helps no one.
+    pub explore_workers: usize,
+    /// Connection handler threads (also the bound on concurrent
+    /// explorations).
+    pub handler_threads: usize,
+    /// Report cache capacity (entries).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            explore_workers: 1,
+            handler_threads: 8,
+            cache_capacity: 256,
+        }
+    }
+}
+
+/// A bound daemon, ready to [`run`](Server::run).
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServeState>,
+    handler_threads: usize,
+}
+
+impl Server {
+    /// Bind the listen socket and build the shared state. Binding
+    /// separately from running lets callers learn the ephemeral port
+    /// (tests/benches bind `:0`) before serving starts.
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| Error::io(cfg.addr.clone(), e))?;
+        Ok(Server {
+            listener,
+            state: Arc::new(ServeState::new(cfg.explore_workers, cfg.cache_capacity)),
+            handler_threads: cfg.handler_threads.max(1),
+        })
+    }
+
+    /// The bound address (resolves an ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(|e| Error::io("listener", e))
+    }
+
+    /// Shared state handle (stats inspection in tests/benches).
+    pub fn state(&self) -> Arc<ServeState> {
+        Arc::clone(&self.state)
+    }
+
+    /// Serve until `POST /v1/shutdown`. Connections are accepted on the
+    /// calling thread and handled by a fixed pool; a shutdown request
+    /// sets the state flag and pokes the accept loop awake with a
+    /// loopback connection, so the daemon drains and returns cleanly.
+    pub fn run(self) -> Result<()> {
+        let addr = self.local_addr()?;
+        let state = Arc::clone(&self.state);
+        // Bounded queue: when handlers fall behind, the accept thread
+        // blocks on send, the kernel backlog fills, and excess clients are
+        // refused — load shedding instead of unbounded fd accumulation.
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(self.handler_threads * 4);
+        let rx = Arc::new(Mutex::new(rx));
+        std::thread::scope(|scope| {
+            for _ in 0..self.handler_threads {
+                let rx = Arc::clone(&rx);
+                let state = Arc::clone(&state);
+                scope.spawn(move || {
+                    loop {
+                        // hold the lock across recv: one idle handler
+                        // waits productively, the rest queue on the mutex
+                        let conn = rx.lock().unwrap().recv();
+                        let Ok(stream) = conn else { break };
+                        handle_connection(&state, stream, addr);
+                    }
+                });
+            }
+            loop {
+                let accepted = self.listener.accept();
+                if state.shutdown.load(Ordering::SeqCst) {
+                    break; // wake connection (or any racer) lands here
+                }
+                match accepted {
+                    Ok((stream, _)) => {
+                        if tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                    // transient failure (EMFILE under fd pressure, aborted
+                    // handshake): pause instead of busy-spinning
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            }
+            drop(tx); // handlers drain the queue, then exit
+        });
+        Ok(())
+    }
+}
+
+/// Serve one connection: parse, route, respond. A parse failure answers
+/// 400 with a structured body; nothing a client sends can panic the
+/// daemon (the router catches computation panics too).
+fn handle_connection(state: &ServeState, mut stream: TcpStream, addr: SocketAddr) {
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+    let response = match http::read_request(&mut stream) {
+        Ok(req) => router::route(state, &req),
+        Err(e) => router::error_response(&e),
+    };
+    let _ = http::write_response(&mut stream, &response);
+    if state.shutdown.load(Ordering::SeqCst) {
+        // poke the accept loop so it notices the flag
+        let _ = TcpStream::connect(addr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boots_serves_health_and_shuts_down() {
+        let server = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            handler_threads: 2,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.run());
+        let (status, body) = client::get(&addr, "/healthz").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"status\":\"ok\""));
+        let (status, _) = client::post(&addr, "/v1/shutdown", "").unwrap();
+        assert_eq!(status, 200);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn bind_failure_is_an_error() {
+        assert!(Server::bind(ServeConfig {
+            addr: "256.0.0.1:99999".to_string(),
+            ..ServeConfig::default()
+        })
+        .is_err());
+    }
+}

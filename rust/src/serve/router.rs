@@ -1,0 +1,591 @@
+//! Request routing: JSON queries in, cached reports out.
+//!
+//! Every exploration endpoint follows the same shape: parse the inline
+//! system (builtin spec, `.snpl` text, or JSON document — the daemon
+//! never reads server-side files), build its matrix, compute the
+//! canonical content hash, then answer through the single-flight
+//! [`ReportCache`]. The response envelope is assembled around the
+//! *stored* report string, so a hit is byte-identical to the miss that
+//! populated it:
+//!
+//! ```text
+//! {"cache":"hit","hash":"<32 hex>","report":{…exact cached bytes…}}
+//! ```
+//!
+//! Errors map [`crate::error::Error`] variants onto HTTP statuses and a
+//! structured `{"error":{"kind","message"}}` body — a malformed request
+//! is a 4xx response, never a dead daemon.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::cache::{CacheKey, CacheOutcome, ReportCache};
+use super::http::{Request, Response};
+use crate::compute::{BackendPool, HostBackendFactory};
+use crate::engine::{ExploreOptions, Explorer};
+use crate::error::{Error, Result};
+use crate::matrix::{build_matrix, TransitionMatrix};
+use crate::snp::SnpSystem;
+use crate::util::JsonValue as J;
+
+/// Configuration budget imposed when a `run` query gives neither `depth`
+/// nor `configs` — an unbounded exploration of an infinite system would
+/// otherwise pin a worker forever.
+pub const DEFAULT_RUN_BUDGET: usize = 10_000;
+/// Hard per-query ceiling on configuration budgets.
+pub const MAX_RUN_BUDGET: usize = 1_000_000;
+/// Hard ceiling on `generated` distance bounds (the product-space sweep
+/// grows with the bound).
+pub const MAX_GENERATED_BOUND: u64 = 10_000;
+
+/// Shared daemon state: the report cache, the per-system backend pools,
+/// and the lifecycle flags.
+pub struct ServeState {
+    /// Single-flight LRU of serialized reports.
+    pub cache: ReportCache,
+    /// Evaluation workers per exploration (`0` = all cores).
+    pub explore_workers: usize,
+    /// Daemon start time (uptime reporting).
+    pub started: Instant,
+    /// Total requests routed.
+    pub requests: AtomicU64,
+    /// Set by `POST /v1/shutdown`; the accept loop drains and exits.
+    pub shutdown: AtomicBool,
+    /// One shared [`BackendPool`] per system content hash: concurrent
+    /// queries against the same system draw from the same backends
+    /// instead of constructing a pool per request.
+    pools: Mutex<HashMap<String, (Arc<BackendPool>, u64)>>,
+    pool_tick: AtomicU64,
+}
+
+impl ServeState {
+    /// Fresh state with the given per-exploration worker count and cache
+    /// capacity.
+    pub fn new(explore_workers: usize, cache_capacity: usize) -> Self {
+        ServeState {
+            cache: ReportCache::new(cache_capacity),
+            explore_workers,
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            pools: Mutex::new(HashMap::new()),
+            pool_tick: AtomicU64::new(0),
+        }
+    }
+
+    /// The shared backend pool for a system, created on first use. Pool
+    /// count is bounded by the cache capacity (LRU eviction; an evicted
+    /// pool is rebuilt on demand — backends hold no result state).
+    pub fn pool_for(&self, system_hash: &str, matrix: &TransitionMatrix) -> Arc<BackendPool> {
+        let tick = self.pool_tick.fetch_add(1, Ordering::Relaxed) + 1;
+        {
+            let mut pools = self.pools.lock().unwrap();
+            if let Some((pool, last_used)) = pools.get_mut(system_hash) {
+                *last_used = tick;
+                return Arc::clone(pool);
+            }
+        }
+        // build OUTSIDE the lock — constructing N backends for a large
+        // matrix must not stall every other request on the pools mutex; a
+        // racing duplicate build is harmless (first insert wins, the
+        // loser's Arc is dropped)
+        let size = crate::compute::pool::resolve_workers(self.explore_workers);
+        let pool = Arc::new(
+            BackendPool::build(&HostBackendFactory::new(matrix.clone()), size)
+                .expect("host backend factory cannot fail"),
+        );
+        let mut pools = self.pools.lock().unwrap();
+        if let Some((existing, last_used)) = pools.get_mut(system_hash) {
+            *last_used = tick;
+            return Arc::clone(existing);
+        }
+        if pools.len() >= self.cache.capacity() {
+            if let Some(lru) =
+                pools.iter().min_by_key(|(_, (_, t))| *t).map(|(k, _)| k.clone())
+            {
+                pools.remove(&lru);
+            }
+        }
+        pools.insert(system_hash.to_string(), (Arc::clone(&pool), tick));
+        pool
+    }
+
+    /// Number of live per-system pools.
+    pub fn pool_count(&self) -> usize {
+        self.pools.lock().unwrap().len()
+    }
+}
+
+/// Dispatch one request. Never panics on client input; every error
+/// becomes a structured JSON response.
+pub fn route(state: &ServeState, req: &Request) -> Response {
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    let result = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Ok(health(state)),
+        ("GET", "/v1/stats") => Ok(stats(state)),
+        ("POST", "/v1/run") => run_query(state, &req.body),
+        ("POST", "/v1/generated") => generated_query(state, &req.body),
+        ("POST", "/v1/analyze") => analyze_query(state, &req.body),
+        ("POST", "/v1/info") => info_query(state, &req.body),
+        ("POST", "/v1/shutdown") => Ok(shutdown(state)),
+        (_, "/healthz" | "/v1/stats" | "/v1/run" | "/v1/generated" | "/v1/analyze"
+        | "/v1/info" | "/v1/shutdown") => Err(Error::Unsupported(format!(
+            "method {} not allowed on {}",
+            req.method, req.path
+        ))),
+        _ => Ok(not_found(&req.path)),
+    };
+    match result {
+        Ok(resp) => resp,
+        Err(e) => error_response(&e),
+    }
+}
+
+fn not_found(path: &str) -> Response {
+    let body = J::obj([(
+        "error",
+        J::obj([
+            ("kind", J::str("not_found")),
+            ("message", J::str(format!("no such endpoint `{path}`"))),
+        ]),
+    )]);
+    Response::json(404, body.to_string_compact())
+}
+
+/// Map an error onto a status + structured JSON body.
+pub fn error_response(e: &Error) -> Response {
+    let (status, kind) = match e {
+        Error::Parse { .. } => (400, "parse"),
+        Error::RegexParse { .. } => (400, "regex_parse"),
+        Error::InvalidSystem(_) => (400, "invalid_system"),
+        Error::Shape { .. } => (400, "shape"),
+        Error::Unsupported(_) => (405, "unsupported"),
+        Error::Io { .. } => (500, "io"),
+        Error::Runtime(_) => (500, "runtime"),
+        Error::Artifact(_) => (500, "artifact"),
+        Error::Coordinator(_) => (500, "coordinator"),
+    };
+    let body = J::obj([(
+        "error",
+        J::obj([("kind", J::str(kind)), ("message", J::str(e.to_string()))]),
+    )]);
+    Response::json(status, body.to_string_compact())
+}
+
+// -- request parsing -------------------------------------------------------
+
+fn parse_body(body: &str) -> Result<J> {
+    if body.trim().is_empty() {
+        return Err(Error::parse("query body", 0, "expected a JSON object body"));
+    }
+    let v = J::parse(body)?;
+    match v {
+        J::Obj(_) => Ok(v),
+        _ => Err(Error::parse("query body", 0, "body must be a JSON object")),
+    }
+}
+
+/// Resolve the inline system definition:
+/// `{"system": "...", "format": "spec"|"snpl"|"json"}` (`spec` default).
+fn load_system(body: &J) -> Result<SnpSystem> {
+    let system = body
+        .get("system")
+        .ok_or_else(|| Error::parse("query body", 0, "missing `system`"))?;
+    let format = match body.get("format") {
+        None => "spec",
+        Some(f) => f
+            .as_str()
+            .ok_or_else(|| Error::parse("query body", 0, "`format` must be a string"))?,
+    };
+    match format {
+        "spec" => {
+            let spec = system.as_str().ok_or_else(|| {
+                Error::parse("query body", 0, "`system` must be a builtin spec string")
+            })?;
+            crate::generators::from_spec(spec)?.ok_or_else(|| {
+                Error::parse(
+                    "query body",
+                    0,
+                    format!(
+                        "unknown builtin system `{spec}` — the daemon does not read \
+                         server-side files; send file contents with format \"snpl\" or \"json\""
+                    ),
+                )
+            })
+        }
+        "snpl" => {
+            let text = system.as_str().ok_or_else(|| {
+                Error::parse("query body", 0, "`system` must be .snpl source text")
+            })?;
+            crate::parser::parse_snpl(text)
+        }
+        "json" => match system {
+            J::Str(text) => crate::parser::system_from_json(text),
+            J::Obj(_) => crate::parser::system_from_json(&system.to_string_compact()),
+            _ => Err(Error::parse(
+                "query body",
+                0,
+                "`system` must be a JSON document (object or string)",
+            )),
+        },
+        other => Err(Error::parse("query body", 0, format!("unknown format `{other}`"))),
+    }
+}
+
+fn opt_u64(body: &J, key: &str) -> Result<Option<u64>> {
+    match body.get(key) {
+        None | Some(J::Null) => Ok(None),
+        Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+            Error::parse("query body", 0, format!("`{key}` must be a non-negative integer"))
+        }),
+    }
+}
+
+// -- endpoints -------------------------------------------------------------
+
+/// Assemble the response envelope around the cached report bytes.
+fn envelope(outcome: CacheOutcome, hash: &str, report: &str) -> Response {
+    let body =
+        format!("{{\"cache\":\"{}\",\"hash\":\"{hash}\",\"report\":{report}}}", outcome.as_str());
+    Response::json(200, body).with_header("x-snapse-cache", outcome.as_str())
+}
+
+fn run_query(state: &ServeState, raw: &str) -> Result<Response> {
+    let body = parse_body(raw)?;
+    let sys = load_system(&body)?;
+    let depth = match opt_u64(&body, "depth")? {
+        None => None,
+        Some(d) => Some(u32::try_from(d).map_err(|_| {
+            Error::parse("query body", 0, format!("`depth` {d} exceeds the 32-bit bound"))
+        })?),
+    };
+    // every run query carries an effective budget — a depth-only query on
+    // an infinite system must not pin a handler forever
+    let configs = Some(
+        opt_u64(&body, "configs")?.map_or(DEFAULT_RUN_BUDGET, |c| (c as usize).min(MAX_RUN_BUDGET)),
+    );
+    let mode = match body.get("mode") {
+        None => "bfs",
+        Some(m) => match m.as_str() {
+            Some("bfs") => "bfs",
+            Some("dfs") => "dfs",
+            _ => {
+                return Err(Error::parse(
+                    "query body",
+                    0,
+                    "`mode` must be \"bfs\" or \"dfs\"",
+                ))
+            }
+        },
+    };
+
+    let matrix = build_matrix(&sys);
+    let hash = super::hash::system_hash_with_matrix(&sys, &matrix);
+    let key = CacheKey {
+        system_hash: hash.clone(),
+        kind: "run",
+        depth,
+        max_configs: configs,
+        mode: mode.to_string(),
+    };
+    let (report, outcome) = state.cache.get_or_compute(&key, || {
+        // pool lookup only on actual computes — a cache hit must not
+        // rebuild an LRU-evicted pool it will never use
+        let pool = state.pool_for(&hash, &matrix);
+        let mut opts = match mode {
+            "dfs" => ExploreOptions::depth_first(),
+            _ => ExploreOptions::breadth_first(),
+        };
+        if let Some(d) = depth {
+            opts = opts.max_depth(d);
+        }
+        if let Some(c) = configs {
+            opts = opts.max_configs(c);
+        }
+        let rep = Explorer::with_pool_and_matrix(&sys, opts, pool, matrix).run();
+        Ok(rep.to_json(&sys.name).to_string_compact())
+    })?;
+    Ok(envelope(outcome, &hash, &report))
+}
+
+fn generated_query(state: &ServeState, raw: &str) -> Result<Response> {
+    let body = parse_body(raw)?;
+    let sys = load_system(&body)?;
+    if sys.output.is_none() {
+        return Err(Error::invalid_system("system has no output neuron"));
+    }
+    let max = opt_u64(&body, "max")?.unwrap_or(20).min(MAX_GENERATED_BOUND);
+    let hash = super::hash::system_hash_with_matrix(&sys, &build_matrix(&sys));
+    let key = CacheKey {
+        system_hash: hash.clone(),
+        kind: "generated",
+        depth: None,
+        max_configs: Some(max as usize),
+        mode: String::new(),
+    };
+    let workers = state.explore_workers;
+    // The sweep owns its matrix and pool (its product-space states don't
+    // map onto the shared exploration pools' batch shapes; single-flight
+    // bounds construction to once per cache entry). MAX_RUN_BUDGET caps
+    // the state space so a pathological system cannot pin a handler.
+    let (report, outcome) = state.cache.get_or_compute(&key, || {
+        let (set, complete) =
+            crate::engine::generated_set_budgeted(&sys, max, workers, MAX_RUN_BUDGET);
+        let missing: Vec<u64> = (1..=max).filter(|n| !set.contains(n)).collect();
+        let doc = J::obj([
+            ("system", J::str(sys.name.clone())),
+            ("max", J::num(max as f64)),
+            ("complete", J::Bool(complete)),
+            ("generated", J::arr(set.iter().map(|&n| J::num(n as f64)))),
+            ("not_generated", J::arr(missing.iter().map(|&n| J::num(n as f64)))),
+        ]);
+        Ok(doc.to_string_compact())
+    })?;
+    Ok(envelope(outcome, &hash, &report))
+}
+
+fn analyze_query(state: &ServeState, raw: &str) -> Result<Response> {
+    let body = parse_body(raw)?;
+    let sys = load_system(&body)?;
+    let budget =
+        opt_u64(&body, "configs")?.map_or(DEFAULT_RUN_BUDGET, |c| (c as usize).min(MAX_RUN_BUDGET));
+    let bound = opt_u64(&body, "bound")?.unwrap_or(1_000);
+    let matrix = build_matrix(&sys);
+    let hash = super::hash::system_hash_with_matrix(&sys, &matrix);
+    let key = CacheKey {
+        system_hash: hash.clone(),
+        kind: "analyze",
+        depth: None,
+        max_configs: Some(budget),
+        mode: format!("bound={bound}"),
+    };
+    let (report, outcome) = state.cache.get_or_compute(&key, || {
+        let pool = state.pool_for(&hash, &matrix);
+        let rep = crate::engine::analyze_with_pool(&sys, budget, bound, pool, matrix);
+        let doc = J::obj([
+            ("system", J::str(sys.name.clone())),
+            ("budget", J::num(budget as f64)),
+            ("bound", J::num(bound as f64)),
+            ("analysis", rep.to_json()),
+        ]);
+        Ok(doc.to_string_compact())
+    })?;
+    Ok(envelope(outcome, &hash, &report))
+}
+
+fn info_query(state: &ServeState, raw: &str) -> Result<Response> {
+    let body = parse_body(raw)?;
+    let sys = load_system(&body)?;
+    let matrix = build_matrix(&sys);
+    let hash = super::hash::system_hash_with_matrix(&sys, &matrix);
+    let key = CacheKey {
+        system_hash: hash.clone(),
+        kind: "info",
+        depth: None,
+        max_configs: None,
+        mode: String::new(),
+    };
+    let (report, outcome) = state.cache.get_or_compute(&key, || {
+        let doc = J::obj([
+            ("system", J::str(sys.name.clone())),
+            ("neurons", J::num(sys.num_neurons() as f64)),
+            ("rules", J::num(sys.num_rules() as f64)),
+            ("synapses", J::num(sys.synapses.len() as f64)),
+            (
+                "initial_config",
+                J::arr(sys.initial_config().iter().map(|&v| J::num(v as f64))),
+            ),
+            (
+                "matrix",
+                J::obj([
+                    ("rows", J::num(matrix.rows() as f64)),
+                    ("cols", J::num(matrix.cols() as f64)),
+                    (
+                        "row_major",
+                        J::arr(matrix.as_row_major().iter().map(|&v| J::num(v as f64))),
+                    ),
+                ]),
+            ),
+            ("sparsity", J::num(matrix.sparsity())),
+        ]);
+        Ok(doc.to_string_compact())
+    })?;
+    Ok(envelope(outcome, &hash, &report))
+}
+
+fn health(state: &ServeState) -> Response {
+    let doc = J::obj([
+        ("status", J::str("ok")),
+        ("uptime_s", J::num(state.started.elapsed().as_secs() as f64)),
+    ]);
+    Response::json(200, doc.to_string_compact())
+}
+
+fn stats(state: &ServeState) -> Response {
+    let doc = J::obj([
+        ("status", J::str("ok")),
+        ("uptime_s", J::num(state.started.elapsed().as_secs() as f64)),
+        ("requests", J::num(state.requests.load(Ordering::Relaxed) as f64)),
+        (
+            "explore_workers",
+            J::num(crate::compute::pool::resolve_workers(state.explore_workers) as f64),
+        ),
+        ("pools", J::num(state.pool_count() as f64)),
+        ("cache", state.cache.stats_json()),
+    ]);
+    Response::json(200, doc.to_string_compact())
+}
+
+fn shutdown(state: &ServeState) -> Response {
+    state.shutdown.store(true, Ordering::SeqCst);
+    Response::json(200, r#"{"status":"shutting-down"}"#.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            query: Default::default(),
+            body: String::new(),
+        }
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            query: Default::default(),
+            body: body.into(),
+        }
+    }
+
+    #[test]
+    fn health_and_stats_respond() {
+        let state = ServeState::new(1, 8);
+        let r = route(&state, &get("/healthz"));
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("\"status\":\"ok\""));
+        let r = route(&state, &get("/v1/stats"));
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("\"cache\""));
+        assert_eq!(state.requests.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn run_roundtrip_hits_cache_with_identical_report() {
+        let state = ServeState::new(1, 8);
+        let body = r#"{"system":"paper_pi","depth":4}"#;
+        let r1 = route(&state, &post("/v1/run", body));
+        assert_eq!(r1.status, 200, "{}", r1.body);
+        assert!(r1.body.starts_with("{\"cache\":\"miss\""), "{}", r1.body);
+        let r2 = route(&state, &post("/v1/run", body));
+        assert!(r2.body.starts_with("{\"cache\":\"hit\""), "{}", r2.body);
+        // everything after the cache marker — hash + report — is
+        // byte-identical between the miss and the hit
+        let tail = |b: &str| b[b.find("\"hash\"").unwrap()..].to_string();
+        assert_eq!(tail(&r1.body), tail(&r2.body));
+        assert_eq!(state.cache.stats.computations.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn source_forms_share_one_cache_entry() {
+        let state = ServeState::new(1, 8);
+        let r1 = route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":3}"#));
+        assert!(r1.body.contains("\"cache\":\"miss\""));
+        // the same system sent as a JSON document
+        let sys_json =
+            crate::parser::system_to_json(&crate::generators::paper_pi()).to_string_compact();
+        let body = format!(r#"{{"system":{sys_json},"format":"json","depth":3}}"#);
+        let r2 = route(&state, &post("/v1/run", &body));
+        assert!(
+            r2.body.contains("\"cache\":\"hit\""),
+            "JSON form must hit the spec form's entry: {}",
+            r2.body
+        );
+    }
+
+    #[test]
+    fn unbounded_run_gets_default_budget() {
+        let state = ServeState::new(1, 8);
+        // paper_pi is infinite: without the default budget this would hang
+        let r = route(&state, &post("/v1/run", r#"{"system":"paper_pi"}"#));
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("Configuration budget reached"), "{}", r.body);
+    }
+
+    #[test]
+    fn malformed_requests_get_structured_errors() {
+        let state = ServeState::new(1, 8);
+        let cases = [
+            post("/v1/run", ""),
+            post("/v1/run", "not json"),
+            post("/v1/run", "[1,2]"),
+            post("/v1/run", r#"{"depth":3}"#),
+            post("/v1/run", r#"{"system":"no_such_system"}"#),
+            post("/v1/run", r#"{"system":"paper_pi","mode":"sideways"}"#),
+            post("/v1/run", r#"{"system":"paper_pi","depth":-2}"#),
+            post("/v1/generated", r#"{"system":"ring:4:2"}"#), // no output neuron
+            post("/v1/nope", "{}"),
+        ];
+        for req in &cases {
+            let r = route(&state, req);
+            assert!(
+                (400..=404).contains(&r.status),
+                "{} {} → {}",
+                req.path,
+                req.body,
+                r.status
+            );
+            assert!(r.body.contains("\"error\""), "structured body: {}", r.body);
+        }
+        // wrong method → 405, still structured
+        let r = route(&state, &get("/v1/run"));
+        assert_eq!(r.status, 405);
+        assert!(r.body.contains("\"error\""));
+        // and the daemon still works afterwards
+        let r = route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":3}"#));
+        assert_eq!(r.status, 200);
+    }
+
+    #[test]
+    fn generated_analyze_info_all_cache() {
+        let state = ServeState::new(1, 8);
+        for (path, body) in [
+            ("/v1/generated", r#"{"system":"nat_gen","max":8}"#),
+            ("/v1/analyze", r#"{"system":"counter:4:3"}"#),
+            ("/v1/info", r#"{"system":"paper_pi"}"#),
+        ] {
+            let r1 = route(&state, &post(path, body));
+            assert_eq!(r1.status, 200, "{path}: {}", r1.body);
+            assert!(r1.body.contains("\"cache\":\"miss\""), "{path}: {}", r1.body);
+            let r2 = route(&state, &post(path, body));
+            assert!(r2.body.contains("\"cache\":\"hit\""), "{path}: {}", r2.body);
+        }
+        assert_eq!(state.cache.stats.computations.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn shared_pools_are_per_system() {
+        let state = ServeState::new(2, 8);
+        route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":3}"#));
+        route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":4}"#));
+        assert_eq!(state.pool_count(), 1, "one pool per system, not per query");
+        route(&state, &post("/v1/run", r#"{"system":"nat_gen","depth":3}"#));
+        assert_eq!(state.pool_count(), 2);
+    }
+
+    #[test]
+    fn shutdown_sets_flag() {
+        let state = ServeState::new(1, 8);
+        assert!(!state.shutdown.load(Ordering::SeqCst));
+        let r = route(&state, &post("/v1/shutdown", ""));
+        assert_eq!(r.status, 200);
+        assert!(state.shutdown.load(Ordering::SeqCst));
+    }
+}

@@ -122,6 +122,22 @@ impl JsonValue {
         }
     }
 
+    /// Boolean payload.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload cast to u64 (must be a non-negative integer).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 1.8e19 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
     /// Numeric payload cast to usize (must be a non-negative integer).
     pub fn as_usize(&self) -> Option<usize> {
         match self {
@@ -376,6 +392,16 @@ mod tests {
         assert_eq!(v.get("s").unwrap().as_str(), Some("hi"));
         assert_eq!(v.get("missing"), None);
         assert_eq!(v.get("s").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn bool_and_u64_accessors() {
+        let v = JsonValue::parse(r#"{"b": true, "n": 7, "f": 2.5}"#).unwrap();
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("n").unwrap().as_bool(), None);
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("f").unwrap().as_u64(), None);
+        assert_eq!(JsonValue::num(-1.0).as_u64(), None);
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! End-to-end tests for the serve daemon: real `TcpListener`, real
+//! concurrent clients over the wire, one process.
+//!
+//! The acceptance contract:
+//! - two identical queries return byte-identical report JSON, the second
+//!   marked `"cache":"hit"`;
+//! - N concurrent cold requests for one system cause exactly one
+//!   exploration (the single-flight `computations` counter);
+//! - malformed requests get structured JSON errors and the daemon keeps
+//!   serving.
+
+use std::sync::Arc;
+
+use snapse::serve::{client, router::ServeState, ServeConfig, Server};
+
+/// Boot a daemon on an ephemeral loopback port. Returns the address, the
+/// shared state (for counter assertions), and the join handle.
+fn boot(
+    explore_workers: usize,
+) -> (String, Arc<ServeState>, std::thread::JoinHandle<snapse::Result<()>>) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        explore_workers,
+        handler_threads: 8,
+        cache_capacity: 64,
+    })
+    .expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let state = server.state();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, state, handle)
+}
+
+fn shutdown(addr: &str, handle: std::thread::JoinHandle<snapse::Result<()>>) {
+    let (status, _) = client::post(addr, "/v1/shutdown", "").expect("shutdown request");
+    assert_eq!(status, 200);
+    handle.join().expect("server thread").expect("clean exit");
+}
+
+/// Extract everything from the `"hash"` key onward — the part of the
+/// envelope that must be byte-identical between a miss and a hit.
+fn hash_and_report(body: &str) -> &str {
+    let at = body.find("\"hash\"").expect("envelope has a hash field");
+    &body[at..]
+}
+
+fn cache_marker(body: &str) -> &str {
+    for marker in ["miss", "hit", "coalesced"] {
+        if body.starts_with(&format!("{{\"cache\":\"{marker}\"")) {
+            return marker;
+        }
+    }
+    panic!("no cache marker in {body}");
+}
+
+#[test]
+fn identical_queries_are_byte_identical_and_cached() {
+    let (addr, state, handle) = boot(1);
+    let body = r#"{"system":"paper_pi","depth":6}"#;
+
+    let (s1, r1) = client::post(&addr, "/v1/run", body).unwrap();
+    assert_eq!(s1, 200, "{r1}");
+    assert_eq!(cache_marker(&r1), "miss");
+    assert!(r1.contains("\"all_gen_ck\""), "{r1}");
+
+    let (s2, r2) = client::post(&addr, "/v1/run", body).unwrap();
+    assert_eq!(s2, 200);
+    assert_eq!(cache_marker(&r2), "hit", "second identical query must hit: {r2}");
+    assert_eq!(
+        hash_and_report(&r1),
+        hash_and_report(&r2),
+        "hit must return the exact bytes of the original report"
+    );
+
+    assert_eq!(
+        state.cache.stats.computations.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "one exploration for two identical queries"
+    );
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn concurrent_cold_requests_single_flight() {
+    let (addr, state, handle) = boot(1);
+    // a workload slow enough that the cold window is wide: every client
+    // fires before the first exploration finishes
+    let body = r#"{"system":"wide_ring:16:4:3","configs":4000}"#;
+    const CLIENTS: usize = 8;
+
+    let mut bodies: Vec<String> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..CLIENTS {
+            let addr = addr.clone();
+            handles.push(scope.spawn(move || {
+                let (status, body) = client::post(&addr, "/v1/run", body).unwrap();
+                assert_eq!(status, 200, "{body}");
+                body
+            }));
+        }
+        for h in handles {
+            bodies.push(h.join().unwrap());
+        }
+    });
+
+    assert_eq!(
+        state.cache.stats.computations.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "N concurrent cold requests must trigger exactly one exploration"
+    );
+    let reference = hash_and_report(&bodies[0]);
+    for b in &bodies {
+        assert_eq!(hash_and_report(b), reference, "all clients share one report");
+    }
+    let misses = bodies.iter().filter(|b| cache_marker(b) == "miss").count();
+    assert_eq!(misses, 1, "exactly one client reports the miss");
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn source_forms_share_one_cache_entry() {
+    let (addr, _state, handle) = boot(1);
+    let (s1, r1) =
+        client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":5}"#).unwrap();
+    assert_eq!(s1, 200, "{r1}");
+    assert_eq!(cache_marker(&r1), "miss");
+
+    // the same system as an inline JSON document → same content hash
+    let sys_json = snapse::parser::system_to_json(&snapse::generators::paper_pi())
+        .to_string_compact();
+    let body = format!(r#"{{"system":{sys_json},"format":"json","depth":5}}"#);
+    let (s2, r2) = client::post(&addr, "/v1/run", &body).unwrap();
+    assert_eq!(s2, 200, "{r2}");
+    assert_eq!(cache_marker(&r2), "hit", "JSON form must hit the spec form's entry: {r2}");
+    assert_eq!(hash_and_report(&r1), hash_and_report(&r2));
+
+    // …and as inline .snpl text
+    let snpl = snapse::parser::snpl::to_snpl(&snapse::generators::paper_pi());
+    let body = snapse::util::JsonValue::obj([
+        ("system", snapse::util::JsonValue::str(snpl)),
+        ("format", snapse::util::JsonValue::str("snpl")),
+        ("depth", snapse::util::JsonValue::num(5.0)),
+    ]);
+    let (s3, r3) = client::post(&addr, "/v1/run", &body.to_string_compact()).unwrap();
+    assert_eq!(s3, 200, "{r3}");
+    assert_eq!(cache_marker(&r3), "hit", ".snpl form must hit the same entry: {r3}");
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn malformed_requests_get_structured_errors_and_daemon_survives() {
+    let (addr, _state, handle) = boot(1);
+    let cases: &[(&str, &str, &str)] = &[
+        ("POST", "/v1/run", "this is not json"),
+        ("POST", "/v1/run", "[1,2,3]"),
+        ("POST", "/v1/run", "{}"),
+        ("POST", "/v1/run", r#"{"system":"not_a_builtin"}"#),
+        ("POST", "/v1/run", r#"{"system":"paper_pi","mode":"zigzag"}"#),
+        ("POST", "/v1/run", r#"{"system":"neuron {","format":"snpl"}"#),
+        ("POST", "/v1/generated", r#"{"system":"ring:4:2"}"#),
+        ("POST", "/v1/does_not_exist", "{}"),
+        ("GET", "/v1/run", ""),
+    ];
+    for (method, path, body) in cases {
+        let (status, resp) = client::request(&addr, method, path, Some(body)).unwrap();
+        assert!(
+            (400..=405).contains(&status),
+            "{method} {path} `{body}` → {status}: {resp}"
+        );
+        let parsed = snapse::util::JsonValue::parse(&resp)
+            .unwrap_or_else(|e| panic!("{method} {path}: unstructured error `{resp}`: {e}"));
+        assert!(parsed.get("error").is_some(), "{resp}");
+        assert!(
+            parsed.get("error").unwrap().get("message").is_some(),
+            "error carries a message: {resp}"
+        );
+    }
+    // raw garbage on the socket — not even HTTP
+    {
+        use std::io::{Read, Write};
+        let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+        stream.write_all(b"\x00\x01\x02 total nonsense\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).ok();
+        assert!(out.contains("400"), "garbage gets a 400, not a hangup: {out}");
+    }
+    // the daemon still serves real queries afterwards
+    let (status, body) =
+        client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":4}"#).unwrap();
+    assert_eq!(status, 200, "daemon must survive malformed traffic: {body}");
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn all_endpoints_roundtrip_and_report_consistent_results() {
+    let (addr, _state, handle) = boot(2);
+    // health + stats
+    let (status, body) = client::get(&addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"status\":\"ok\""));
+    let (status, body) = client::get(&addr, "/v1/stats").unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    // run: the served allGenCk must match a local reference exploration
+    let (status, body) =
+        client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":3}"#).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let local = {
+        use snapse::engine::{ExploreOptions, Explorer};
+        let sys = snapse::generators::paper_pi();
+        let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3)).run();
+        rep.to_json("paper_pi").to_string_compact()
+    };
+    let served = snapse::util::JsonValue::parse(&body).unwrap();
+    assert_eq!(
+        served.get("report").unwrap().to_string_compact(),
+        local,
+        "served report equals the local reference exploration"
+    );
+
+    // generated: nat_gen produces ℕ∖{1} up to the bound
+    let (status, body) =
+        client::post(&addr, "/v1/generated", r#"{"system":"nat_gen","max":8}"#).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let parsed = snapse::util::JsonValue::parse(&body).unwrap();
+    let generated = parsed.get("report").unwrap().get("generated").unwrap();
+    let nums: Vec<u64> =
+        generated.as_arr().unwrap().iter().map(|v| v.as_u64().unwrap()).collect();
+    assert_eq!(nums, vec![2, 3, 4, 5, 6, 7, 8]);
+
+    // analyze: counter chain is deterministic + confluent
+    let (status, body) =
+        client::post(&addr, "/v1/analyze", r#"{"system":"counter:4:3"}"#).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let parsed = snapse::util::JsonValue::parse(&body).unwrap();
+    let analysis = parsed.get("report").unwrap().get("analysis").unwrap();
+    assert_eq!(analysis.get("deterministic").unwrap().as_bool(), Some(true));
+    assert_eq!(analysis.get("confluent").unwrap().as_bool(), Some(true));
+
+    // info: paper_pi's 5×3 matrix
+    let (status, body) =
+        client::post(&addr, "/v1/info", r#"{"system":"paper_pi"}"#).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let parsed = snapse::util::JsonValue::parse(&body).unwrap();
+    let matrix = parsed.get("report").unwrap().get("matrix").unwrap();
+    assert_eq!(matrix.get("rows").unwrap().as_usize(), Some(5));
+    assert_eq!(matrix.get("cols").unwrap().as_usize(), Some(3));
+
+    // stats reflect the traffic
+    let (_, body) = client::get(&addr, "/v1/stats").unwrap();
+    let parsed = snapse::util::JsonValue::parse(&body).unwrap();
+    let cache = parsed.get("cache").unwrap();
+    assert_eq!(cache.get("computations").unwrap().as_usize(), Some(4));
+    assert!(parsed.get("requests").unwrap().as_usize().unwrap() >= 6);
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn distinct_parameters_do_not_cross_contaminate() {
+    let (addr, state, handle) = boot(1);
+    let (_, r1) = client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":3}"#).unwrap();
+    let (_, r2) = client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":4}"#).unwrap();
+    assert_eq!(cache_marker(&r1), "miss");
+    assert_eq!(cache_marker(&r2), "miss", "different depth = different entry");
+    assert_ne!(hash_and_report(&r1), hash_and_report(&r2), "reports differ by depth");
+    let (_, r3) = client::post(
+        &addr,
+        "/v1/run",
+        r#"{"system":"paper_pi","depth":3,"mode":"dfs"}"#,
+    )
+    .unwrap();
+    assert_eq!(cache_marker(&r3), "miss", "different mode = different entry");
+    assert_eq!(
+        state.cache.stats.computations.load(std::sync::atomic::Ordering::Relaxed),
+        3
+    );
+    shutdown(&addr, handle);
+}
