@@ -1,5 +1,5 @@
 // L2 ablation: pallas-lowered vs plain-matmul HLO step programs.
-use snapse::compute::{StepBackend, StepBatch};
+use snapse::compute::{SpikeRows, StepBackend, StepBatch};
 use snapse::util::Rng;
 fn main() -> snapse::Result<()> {
     let rt = snapse::runtime::PjRt::cpu()?;
@@ -12,7 +12,8 @@ fn main() -> snapse::Result<()> {
             let mut be = snapse::compute::xla::backend_from_artifacts(rt.clone(), &m, &manifest)?;
             let configs: Vec<i64> = (0..b * n).map(|_| rng.range(0, 20) as i64).collect();
             let spikes: Vec<u8> = (0..b * r).map(|_| rng.chance(0.3) as u8).collect();
-            let batch = StepBatch { b, n, r, configs: &configs, spikes: &spikes };
+            let batch =
+                StepBatch { b, n, r, configs: &configs, spikes: SpikeRows::Dense(&spikes) };
             // warmup
             for _ in 0..3 { be.step_batch(&batch)?; }
             let mut samples: Vec<u128> = Vec::new();

@@ -8,7 +8,7 @@
 //! make artifacts && cargo run --release --example xla_smoke
 //! ```
 
-use snapse::compute::{StepBackend, StepBatch};
+use snapse::compute::{SpikeRows, StepBackend, StepBatch};
 
 fn main() -> snapse::Result<()> {
     let rt = snapse::runtime::PjRt::cpu()?;
@@ -23,7 +23,13 @@ fn main() -> snapse::Result<()> {
     assert_eq!(be.physical_shape(), (5, 3), "exact artifact preferred");
     let cfg = [2i64, 1, 1, 2, 1, 1];
     let spk = [1u8, 0, 1, 1, 0, 0, 1, 1, 1, 0];
-    let out = be.step_batch(&StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: &spk })?;
+    let out = be.step_batch(&StepBatch {
+        b: 2,
+        n: 3,
+        r: 5,
+        configs: &cfg,
+        spikes: SpikeRows::Dense(&spk),
+    })?;
     assert_eq!(out, vec![2, 1, 2, 1, 1, 2], "paper eq. (2) on device");
     println!("exact-shape step OK: {out:?}");
 
@@ -34,7 +40,13 @@ fn main() -> snapse::Result<()> {
     assert_eq!(rbe.physical_shape(), (8, 8), "padded cover");
     let rcfg: Vec<i64> = vec![2; 6];
     let rspk: Vec<u8> = vec![1; 6];
-    let rout = rbe.step_batch(&StepBatch { b: 1, n: 6, r: 6, configs: &rcfg, spikes: &rspk })?;
+    let rout = rbe.step_batch(&StepBatch {
+        b: 1,
+        n: 6,
+        r: 6,
+        configs: &rcfg,
+        spikes: SpikeRows::Dense(&rspk),
+    })?;
     assert_eq!(rout, vec![2; 6], "ring conserves spikes");
     println!("padded-shape step OK: {rout:?} (waste {:.0}%)", rbe.padding_waste() * 100.0);
 

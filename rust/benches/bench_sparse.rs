@@ -1,0 +1,174 @@
+//! E10 — sparse spiking-vector pipeline speedup.
+//!
+//! Measures complete explorations on a **rule-heavy** workload
+//! (`rule_heavy:M:K:2`, where `R = M·(2K−1)` and per-row nnz ≤ M, so
+//! spiking rows are ~`1/(2K)` dense) across the representation ×
+//! parallelism grid: {dense, sparse} × {serial, 4 workers}. `paper_pi`
+//! (R = 5 — far below the sparse floor) rides along as the control row
+//! where sparse bookkeeping is pure overhead and `auto` must pick dense.
+//!
+//! Results are written to `BENCH_sparse.json` (the acceptance record for
+//! the sparse-pipeline PR) in addition to the stdout table.
+//!
+//! ```bash
+//! cargo bench --bench bench_sparse            # full (10k configs)
+//! cargo bench --bench bench_sparse -- --quick # CI-sized
+//! ```
+
+// only `human_ns` is used here; the shared harness carries more
+#[allow(dead_code)]
+mod harness;
+
+use std::time::Instant;
+
+use snapse::compute::SpikeRepr;
+use snapse::engine::{ExploreOptions, Explorer};
+use snapse::snp::SnpSystem;
+use snapse::util::JsonValue;
+
+/// Best (minimum) wall-clock of `runs` explorations; returns
+/// `(seconds, visited, steps, resolved_repr)`.
+fn measure(
+    sys: &SnpSystem,
+    budget: usize,
+    repr: SpikeRepr,
+    workers: usize,
+    runs: u32,
+) -> (f64, usize, u64, &'static str) {
+    let mut best = f64::INFINITY;
+    let mut visited = 0usize;
+    let mut steps = 0u64;
+    let mut used = "";
+    for _ in 0..runs {
+        let t = Instant::now();
+        let rep = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first()
+                .max_configs(budget)
+                .workers(workers)
+                .spike_repr(repr),
+        )
+        .run();
+        let secs = t.elapsed().as_secs_f64();
+        std::hint::black_box(rep.visited.len());
+        best = best.min(secs);
+        visited = rep.visited.len();
+        steps = rep.stats.steps;
+        used = rep.stats.spike_repr;
+    }
+    (best, visited, steps, used)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (budget, runs) = if quick { (1_000usize, 1u32) } else { (10_000usize, 3u32) };
+
+    // (system, description) rows: rule-heavy at two K scales + control
+    let workloads: Vec<(SnpSystem, &str)> = vec![
+        (snapse::generators::rule_heavy(8, 16, 2), "R=248, nnz≤8 (density 3.2%)"),
+        (snapse::generators::rule_heavy(10, 32, 2), "R=630, nnz≤10 (density 1.6%)"),
+        (snapse::generators::paper_pi(), "control: R=5, sparse floor not met"),
+    ];
+
+    println!(
+        "\n== sparse spiking-vector pipeline (budget {budget} configs, best of {runs}) ==\n"
+    );
+    println!(
+        "{:<22} {:>8} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "system", "configs", "steps", "dense-1w", "sparse-1w", "dense-4w", "sparse-4w"
+    );
+
+    let mut json_rows: Vec<JsonValue> = Vec::new();
+    let mut best_sparse_speedup = 0.0f64;
+    for (sys, note) in &workloads {
+        // correctness first: sparse output must be byte-identical to the
+        // dense serial reference before any timing is worth recording
+        let reference = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first().max_configs(budget).spike_repr(SpikeRepr::Dense),
+        )
+        .run();
+        let check = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first()
+                .max_configs(budget)
+                .workers(4)
+                .spike_repr(SpikeRepr::Sparse),
+        )
+        .run();
+        assert_eq!(
+            check.visited.in_order(),
+            reference.visited.in_order(),
+            "{}: sparse output diverged from the dense serial reference",
+            sys.name
+        );
+
+        let grid = [
+            ("dense_serial", SpikeRepr::Dense, 1usize),
+            ("sparse_serial", SpikeRepr::Sparse, 1),
+            ("dense_workers4", SpikeRepr::Dense, 4),
+            ("sparse_workers4", SpikeRepr::Sparse, 4),
+        ];
+        let mut cells = Vec::new();
+        for (label, repr, workers) in grid {
+            let (secs, visited, steps, used) = measure(sys, budget, repr, workers, runs);
+            cells.push((label, workers, secs, visited, steps, used));
+        }
+        let dense_serial = cells[0].2;
+        let (auto_secs, _, _, auto_used) = measure(sys, budget, SpikeRepr::Auto, 1, runs);
+        println!(
+            "{:<22} {:>8} {:>10} {:>12} {:>11.2}x {:>11.2}x {:>11.2}x   auto→{}",
+            sys.name,
+            cells[0].3,
+            cells[0].4,
+            harness::human_ns(dense_serial * 1e9),
+            dense_serial / cells[1].2,
+            dense_serial / cells[2].2,
+            dense_serial / cells[3].2,
+            auto_used,
+        );
+        if sys.name.starts_with("rule_heavy") {
+            best_sparse_speedup = best_sparse_speedup.max(dense_serial / cells[1].2);
+        }
+        json_rows.push(JsonValue::obj([
+            ("system", JsonValue::str(sys.name.clone())),
+            ("note", JsonValue::str(note.to_string())),
+            ("configs", JsonValue::num(cells[0].3 as f64)),
+            ("steps", JsonValue::num(cells[0].4 as f64)),
+            ("auto_resolves_to", JsonValue::str(auto_used.to_string())),
+            ("auto_serial_s", JsonValue::num(auto_secs)),
+            (
+                "grid",
+                JsonValue::arr(cells.iter().map(|(label, workers, secs, _, _, used)| {
+                    JsonValue::obj([
+                        ("case", JsonValue::str(label.to_string())),
+                        ("workers", JsonValue::num(*workers as f64)),
+                        ("repr", JsonValue::str(used.to_string())),
+                        ("seconds", JsonValue::num(*secs)),
+                        ("speedup_vs_dense_serial", JsonValue::num(dense_serial / *secs)),
+                    ])
+                })),
+            ),
+        ]));
+    }
+
+    let doc = JsonValue::obj([
+        ("bench", JsonValue::str("bench_sparse".to_string())),
+        ("budget_configs", JsonValue::num(budget as f64)),
+        ("runs_per_point", JsonValue::num(runs as f64)),
+        ("quick", JsonValue::num(quick as u8 as f64)),
+        (
+            "best_rule_heavy_sparse_serial_speedup",
+            JsonValue::num(best_sparse_speedup),
+        ),
+        ("workloads", JsonValue::arr(json_rows)),
+    ]);
+    let out = doc.to_string_pretty();
+    match std::fs::write("BENCH_sparse.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_sparse.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_sparse.json: {e}"),
+    }
+    println!(
+        "best rule_heavy sparse-vs-dense serial speedup: {best_sparse_speedup:.2}x"
+    );
+}

@@ -5,7 +5,7 @@
 
 mod harness;
 
-use snapse::compute::{HostBackend, StepBackend, StepBatch};
+use snapse::compute::{HostBackend, SpikeRows, StepBackend, StepBatch};
 use snapse::matrix::TransitionMatrix;
 use snapse::util::Rng;
 
@@ -31,7 +31,7 @@ fn main() {
         for &b in batches {
             let configs: Vec<i64> = (0..b * n).map(|_| rng.range(0, 20) as i64).collect();
             let spikes: Vec<u8> = (0..b * r).map(|_| rng.chance(0.3) as u8).collect();
-            let batch = StepBatch { b, n, r, configs: &configs, spikes: &spikes };
+            let batch = StepBatch { b, n, r, configs: &configs, spikes: SpikeRows::Dense(&spikes) };
 
             let mut dense = HostBackend::dense(&m);
             rows.push(harness::bench(

@@ -11,12 +11,18 @@ pub fn run(args: &Args) -> Result<()> {
     let depth = args.opt_num::<u32>("depth")?;
     let configs = args.opt_num::<usize>("configs")?;
     let workers = args.opt_num::<usize>("workers")?;
+    // `--spike-repr {auto,dense,sparse}`: spiking-row representation
+    // ablation override; output is byte-identical either way.
+    let spike_repr = match args.opt("spike-repr") {
+        None => crate::compute::SpikeRepr::Auto,
+        Some(v) => crate::compute::SpikeRepr::parse(v)?,
+    };
 
     // Explorer path (reference semantics, tree recording). `--workers N`
     // engages the pipelined parallel engine; `--single-thread` or tree
     // recording pin the serial reference path.
     if args.flag("single-thread") || args.flag("paper-log") || args.opt("tree").is_some() {
-        let mut opts = ExploreOptions::breadth_first();
+        let mut opts = ExploreOptions::breadth_first().spike_repr(spike_repr);
         if let Some(d) = depth {
             opts = opts.max_depth(d);
         }
@@ -67,6 +73,7 @@ pub fn run(args: &Args) -> Result<()> {
         max_configs: configs,
         backend,
         batch_target: args.opt_num::<usize>("batch")?.unwrap_or(256),
+        spike_repr,
     };
     let mut coord = Coordinator::new(&sys, cfg);
     let report = coord.run()?;

@@ -4,6 +4,7 @@
 //! snapse run <system> [--depth D] [--configs N] [--backend host|xla]
 //!                     [--artifacts DIR] [--workers W] [--paper-log]
 //!                     [--tree FILE.dot] [--json]
+//!                     [--spike-repr auto|dense|sparse]
 //! snapse walk <system> [--steps N] [--seed S]
 //! snapse generated <system> [--max N] [--workers W]
 //! snapse analyze <system> [--configs N] [--bound B] [--workers W] [--json]
@@ -18,7 +19,8 @@
 //! `<system>` is a path to a `.snpl`/`.json` file, or a builtin spec:
 //! `paper_pi`, `nat_gen`, `even_gen`, `ring:M:CHARGE`,
 //! `ring_branch:M:CHARGE:K`, `wide_ring:M:W:CHARGE`,
-//! `counter:LEN:CHARGE`, `div:N:D`, `adder:W`, `random:SEED`.
+//! `rule_heavy:M:K:CHARGE`, `counter:LEN:CHARGE`, `div:N:D`, `adder:W`,
+//! `random:SEED`.
 
 mod cmd_accept;
 mod cmd_analyze;
@@ -149,6 +151,7 @@ fn help_text() -> String {
     s.push_str("  run <system>        explore the computation tree (Algorithm 1)\n");
     s.push_str("      --depth D --configs N --workers W (0 = all cores) --backend host|xla\n");
     s.push_str("      --artifacts DIR --paper-log --tree FILE.dot --json --single-thread\n");
+    s.push_str("      --spike-repr auto|dense|sparse (spiking-row representation ablation)\n");
     s.push_str("  walk <system>       follow one random branch\n");
     s.push_str("      --steps N --seed S\n");
     s.push_str("  generated <system>  compute the generated number set\n");
@@ -169,7 +172,7 @@ fn help_text() -> String {
     s.push_str("      --bound B --raw --report-only\n\n");
     s.push_str("systems: a .snpl/.json path, or builtin:\n");
     s.push_str("  paper_pi nat_gen even_gen ring:M:C ring_branch:M:C:K wide_ring:M:W:C\n");
-    s.push_str("  counter:L:C div:N:D adder:W random:SEED\n");
+    s.push_str("  rule_heavy:M:K:C counter:L:C div:N:D adder:W random:SEED\n");
     s
 }
 

@@ -4,12 +4,14 @@
 //! touches `1 + out_degree` columns) and dense row-sum otherwise. This is
 //! also the oracle the XLA backend is tested against.
 
-use super::{StepBackend, StepBatch};
+use super::{SpikeRows, StepBackend, StepBatch};
 use crate::error::Result;
 use crate::matrix::{CsrMatrix, TransitionMatrix};
 
-/// Density above which the dense path wins (measured in
-/// `benches/bench_step.rs`; see EXPERIMENTS.md §Perf).
+/// Density above which the dense path wins. Provenance: the host-dense
+/// vs host-csr crossover table of `rust/benches/bench_step.rs` (run
+/// `cargo bench --bench bench_step`), whose random matrices are ~40%
+/// dense — CSR wins well below that, dense at or above it.
 const DENSE_THRESHOLD: f64 = 0.25;
 
 enum Repr {
@@ -69,10 +71,13 @@ impl StepBackend for HostBackend {
             ));
         }
         let mut out = batch.configs.to_vec();
-        match &self.repr {
-            Repr::Dense(m) => {
+        // Four native paths: {dense, CSR} matrix × {dense, sparse} spiking
+        // rows. Sparse rows iterate only the fired indices — O(B · nnz)
+        // instead of the O(B · R) scan — with no densification anywhere.
+        match (&self.repr, batch.spikes) {
+            (Repr::Dense(m), SpikeRows::Dense(spikes)) => {
                 for b in 0..batch.b {
-                    let srow = &batch.spikes[b * batch.r..(b + 1) * batch.r];
+                    let srow = &spikes[b * batch.r..(b + 1) * batch.r];
                     let orow = &mut out[b * batch.n..(b + 1) * batch.n];
                     for (r, &s) in srow.iter().enumerate() {
                         if s != 0 {
@@ -84,15 +89,31 @@ impl StepBackend for HostBackend {
                     }
                 }
             }
-            Repr::Sparse(m) => {
+            (Repr::Sparse(m), SpikeRows::Dense(spikes)) => {
                 for b in 0..batch.b {
-                    let srow = &batch.spikes[b * batch.r..(b + 1) * batch.r];
+                    let srow = &spikes[b * batch.r..(b + 1) * batch.r];
                     let orow = &mut out[b * batch.n..(b + 1) * batch.n];
                     for (r, &s) in srow.iter().enumerate() {
                         if s != 0 {
                             m.accumulate_row(r, orow);
                         }
                     }
+                }
+            }
+            (Repr::Dense(m), rows @ SpikeRows::Sparse { .. }) => {
+                for b in 0..batch.b {
+                    let orow = &mut out[b * batch.n..(b + 1) * batch.n];
+                    rows.for_each_fired(b, batch.r, |r| {
+                        for (o, &v) in orow.iter_mut().zip(m.row(r)) {
+                            *o += v;
+                        }
+                    });
+                }
+            }
+            (Repr::Sparse(m), rows @ SpikeRows::Sparse { .. }) => {
+                for b in 0..batch.b {
+                    let orow = &mut out[b * batch.n..(b + 1) * batch.n];
+                    rows.for_each_fired(b, batch.r, |r| m.accumulate_row(r, orow));
                 }
             }
         }
@@ -110,13 +131,15 @@ mod tests {
         build_matrix(&crate::generators::paper_pi())
     }
 
+    use crate::compute::{SpikeBuf, SpikeRows};
+
     #[test]
     fn single_row_matches_paper_eq2() {
         let mut be = HostBackend::new(&m_pi());
         let cfg = [2i64, 1, 1];
         let spk = [1u8, 0, 1, 1, 0];
         let out = be
-            .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: &spk })
+            .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) })
             .unwrap();
         assert_eq!(out, vec![2, 1, 2]);
     }
@@ -127,7 +150,7 @@ mod tests {
         let cfg = [2i64, 1, 1, 2, 1, 1];
         let spk = [1u8, 0, 1, 1, 0, 0, 1, 1, 1, 0];
         let out = be
-            .step_batch(&StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: &spk })
+            .step_batch(&StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) })
             .unwrap();
         assert_eq!(out, vec![2, 1, 2, 1, 1, 2]);
     }
@@ -146,10 +169,22 @@ mod tests {
             let b = rng.range(1, 16);
             let cfg: Vec<i64> = (0..b * n).map(|_| rng.range(0, 50) as i64).collect();
             let spk: Vec<u8> = (0..b * r).map(|_| rng.chance(0.4) as u8).collect();
-            let batch = StepBatch { b, n, r, configs: &cfg, spikes: &spk };
-            let dense = HostBackend::dense(&m).step_batch(&batch).unwrap();
-            let sparse = HostBackend::sparse(&m).step_batch(&batch).unwrap();
-            assert_eq!(dense, sparse, "seed {seed} case {case}");
+            // the same rows in both representations
+            let mut sparse_rows = SpikeBuf::with_repr(true, r);
+            for row in 0..b {
+                sparse_rows.push_byte_row(&spk[row * r..(row + 1) * r]);
+            }
+            let batch = StepBatch { b, n, r, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+            let sparse_batch =
+                StepBatch { b, n, r, configs: &cfg, spikes: sparse_rows.as_rows() };
+            // every matrix repr × every spiking repr must agree
+            let dd = HostBackend::dense(&m).step_batch(&batch).unwrap();
+            let cd = HostBackend::sparse(&m).step_batch(&batch).unwrap();
+            let ds = HostBackend::dense(&m).step_batch(&sparse_batch).unwrap();
+            let cs = HostBackend::sparse(&m).step_batch(&sparse_batch).unwrap();
+            assert_eq!(dd, cd, "seed {seed} case {case} (csr matrix, dense rows)");
+            assert_eq!(dd, ds, "seed {seed} case {case} (dense matrix, sparse rows)");
+            assert_eq!(dd, cs, "seed {seed} case {case} (csr matrix, sparse rows)");
         }
     }
 
@@ -157,7 +192,7 @@ mod tests {
     fn repr_selection_by_density() {
         // Π's matrix is 73% dense → dense repr
         assert_eq!(HostBackend::new(&m_pi()).repr_name(), "dense");
-        // a 1000-rule, 100-neuron near-empty matrix → csr
+        // an all-zero 100×100 matrix (density 0) → csr
         let m = TransitionMatrix::zeros(100, 100);
         assert_eq!(HostBackend::new(&m).repr_name(), "csr");
     }
@@ -167,7 +202,22 @@ mod tests {
         let mut be = HostBackend::new(&m_pi());
         let cfg = [1i64, 1];
         let spk = [0u8; 5];
-        let bad = StepBatch { b: 1, n: 2, r: 5, configs: &cfg, spikes: &spk };
+        let bad = StepBatch { b: 1, n: 2, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        assert!(be.step_batch(&bad).is_err());
+    }
+
+    #[test]
+    fn malformed_sparse_rows_rejected() {
+        let mut be = HostBackend::new(&m_pi());
+        let cfg = [2i64, 1, 1];
+        // fired rule 7 of 5: out of range
+        let bad = StepBatch {
+            b: 1,
+            n: 3,
+            r: 5,
+            configs: &cfg,
+            spikes: SpikeRows::Sparse { indptr: &[0, 1], indices: &[7] },
+        };
         assert!(be.step_batch(&bad).is_err());
     }
 }

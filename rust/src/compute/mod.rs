@@ -15,20 +15,27 @@ mod bucket;
 mod host;
 pub mod pool;
 pub mod replay;
+mod spikes;
 pub mod xla;
 
 pub use bucket::{Bucket, BucketPolicy};
 pub use host::HostBackend;
 pub use pool::{BackendFactory, BackendPool, HostBackendFactory, PooledBackend, XlaBackendFactory};
 pub use replay::{replay_on_device, verify_walk};
+pub use spikes::{
+    repr_name as spike_repr_name, SpikeBuf, SpikeRepr, SpikeRows, SPARSE_MAX_ROW_DENSITY,
+    SPARSE_MIN_RULES,
+};
 pub use xla::XlaBackend;
 
 use crate::error::Result;
 
-/// A dense batch of step inputs.
+/// A batch of step inputs.
 ///
-/// `configs` is row-major `B × N` (i64 spike counts), `spikes` row-major
-/// `B × R` (0/1). Row `b` of the output is `configs[b] + spikes[b] · M`.
+/// `configs` is row-major `B × N` (i64 spike counts); `spikes` carries
+/// the `B × R` {0,1} spiking rows in either representation (dense bytes
+/// or CSR fired-rule lists — see [`SpikeRows`]). Row `b` of the output
+/// is `configs[b] + spikes[b] · M` either way.
 #[derive(Debug, Clone, Copy)]
 pub struct StepBatch<'a> {
     /// Batch size `B`.
@@ -39,12 +46,14 @@ pub struct StepBatch<'a> {
     pub r: usize,
     /// `B × N` row-major current configurations.
     pub configs: &'a [i64],
-    /// `B × R` row-major spiking vectors (0/1).
-    pub spikes: &'a [u8],
+    /// `B × R` spiking vectors, dense or CSR.
+    pub spikes: SpikeRows<'a>,
 }
 
 impl<'a> StepBatch<'a> {
-    /// Validate the flat buffers against the declared shape.
+    /// Validate the buffers against the declared shape: config length,
+    /// dense {0,1} entries, and for sparse rows the full CSR structure
+    /// (indptr shape, in-range / sorted / duplicate-free indices).
     pub fn validate(&self) -> Result<()> {
         if self.configs.len() != self.b * self.n {
             return Err(crate::Error::shape(
@@ -52,19 +61,50 @@ impl<'a> StepBatch<'a> {
                 format!("{} elements", self.configs.len()),
             ));
         }
-        if self.spikes.len() != self.b * self.r {
+        self.spikes.validate(self.b, self.r)
+    }
+
+    /// Semantic check on top of [`StepBatch::validate`]: at most one
+    /// fired rule per neuron (SN P validity, paper §2.3). `rule_neuron`
+    /// maps each global rule id to its owning neuron (build it from
+    /// `SnpSystem::rules_of`). Structural validation cannot see neuron
+    /// ownership, so this is a separate, opt-in guard. Runs the
+    /// structural validation first, so malformed rows return an error
+    /// here too instead of indexing out of bounds.
+    pub fn validate_one_rule_per_neuron(&self, rule_neuron: &[usize]) -> Result<()> {
+        self.validate()?;
+        if rule_neuron.len() != self.r {
             return Err(crate::Error::shape(
-                format!("spikes {}x{}", self.b, self.r),
-                format!("{} elements", self.spikes.len()),
+                format!("rule→neuron map of {} entries", self.r),
+                format!("{} entries", rule_neuron.len()),
             ));
         }
-        // Spiking vectors are {0,1} strings (paper §2.3); anything else
-        // would silently corrupt `S · M` on every backend.
-        if let Some(pos) = self.spikes.iter().position(|&s| s > 1) {
+        // The clash scan below compares *consecutive* fired rules, which
+        // is sound only when each neuron's rule ids are contiguous (the
+        // `SnpSystem::rules_of` layout) — i.e. the map is non-decreasing.
+        // Reject other maps instead of silently missing clashes.
+        if let Some(i) = rule_neuron.windows(2).position(|w| w[1] < w[0]) {
             return Err(crate::Error::shape(
-                "spiking entries in {0, 1}".to_string(),
-                format!("spikes[{pos}] = {}", self.spikes[pos]),
+                "non-decreasing rule→neuron map (contiguous rule ids per neuron)".to_string(),
+                format!("rule {} maps to neuron {} after neuron {}", i + 1, rule_neuron[i + 1], rule_neuron[i]),
             ));
+        }
+        for row in 0..self.b {
+            let mut last_neuron: Option<usize> = None;
+            let mut clash: Option<(usize, usize)> = None;
+            self.spikes.for_each_fired(row, self.r, |rule| {
+                let j = rule_neuron[rule];
+                if last_neuron == Some(j) && clash.is_none() {
+                    clash = Some((row, j));
+                }
+                last_neuron = Some(j);
+            });
+            if let Some((row, j)) = clash {
+                return Err(crate::Error::shape(
+                    "at most one fired rule per neuron".to_string(),
+                    format!("row {row} fires two rules of neuron {j}"),
+                ));
+            }
         }
         Ok(())
     }
@@ -93,9 +133,9 @@ mod tests {
     fn batch_validation() {
         let cfg = [2i64, 1, 1];
         let spk = [1u8, 0, 1, 1, 0];
-        let ok = StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: &spk };
+        let ok = StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
         assert!(ok.validate().is_ok());
-        let bad = StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: &spk };
+        let bad = StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
         assert!(bad.validate().is_err());
     }
 
@@ -103,8 +143,61 @@ mod tests {
     fn non_binary_spiking_entries_rejected() {
         let cfg = [2i64, 1, 1];
         let spk = [1u8, 0, 2, 1, 0];
-        let bad = StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: &spk };
+        let bad = StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
         let err = bad.validate().unwrap_err();
         assert!(err.to_string().contains("spikes[2] = 2"), "{err}");
+    }
+
+    #[test]
+    fn sparse_batch_validation_and_per_neuron_guard() {
+        // paper Π: rules 0-1 in neuron 0, rule 2 in neuron 1, rules 3-4
+        // in neuron 2
+        let rule_neuron = [0usize, 0, 1, 2, 2];
+        let cfg = [2i64, 1, 1];
+        // <10110> as CSR fired list
+        let indptr = [0u32, 3];
+        let indices = [0u32, 2, 3];
+        let ok = StepBatch {
+            b: 1,
+            n: 3,
+            r: 5,
+            configs: &cfg,
+            spikes: SpikeRows::Sparse { indptr: &indptr, indices: &indices },
+        };
+        assert!(ok.validate().is_ok());
+        assert!(ok.validate_one_rule_per_neuron(&rule_neuron).is_ok());
+        // two fired rules in one neuron: structurally valid, semantically not
+        let both = [0u32, 1, 2];
+        let bad = StepBatch {
+            b: 1,
+            n: 3,
+            r: 5,
+            configs: &cfg,
+            spikes: SpikeRows::Sparse { indptr: &indptr, indices: &both },
+        };
+        assert!(bad.validate().is_ok(), "structure alone cannot see neurons");
+        let err = bad.validate_one_rule_per_neuron(&rule_neuron).unwrap_err();
+        assert!(err.to_string().contains("neuron 0"), "{err}");
+        // the dense form of the same row is rejected too
+        let dense = [1u8, 1, 1, 0, 0];
+        let bad_dense =
+            StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&dense) };
+        assert!(bad_dense.validate_one_rule_per_neuron(&rule_neuron).is_err());
+        // structurally invalid rows come back as Err from the semantic
+        // guard too (structural validation runs first), never a panic
+        // a non-contiguous rule→neuron map cannot be scanned soundly and
+        // is rejected outright
+        let scrambled = [0usize, 1, 0, 2, 2];
+        assert!(ok.validate_one_rule_per_neuron(&scrambled).is_err());
+        let one_row = [0u32, 1];
+        let out_of_range = [99u32];
+        let malformed = StepBatch {
+            b: 1,
+            n: 3,
+            r: 5,
+            configs: &cfg,
+            spikes: SpikeRows::Sparse { indptr: &one_row, indices: &out_of_range },
+        };
+        assert!(malformed.validate_one_rule_per_neuron(&rule_neuron).is_err());
     }
 }

@@ -8,8 +8,9 @@
 //!
 //! - [`BackendFactory`] describes *how to make* a step backend, so N
 //!   workers can each own an independent instance (host dense, host CSR,
-//!   or XLA — the XLA instances share one PJRT service thread but keep
-//!   separate device-resident matrices and executables).
+//!   or XLA — the XLA instances share one PJRT service thread, one
+//!   compiled executable per artifact and one device-resident matrix;
+//!   see [`XlaBackendFactory`]).
 //! - [`BackendPool`] owns the instances and checks them out to workers
 //!   ([`BackendPool::acquire`] blocks until one is free; the guard returns
 //!   it on drop). The engine's pipelined explorer and the coordinator's
@@ -68,13 +69,20 @@ impl BackendFactory for HostBackendFactory {
 }
 
 /// Factory for XLA/PJRT device backends over AOT artifacts. All instances
-/// share one [`PjRt`](crate::runtime::PjRt) service handle; each `create`
-/// compiles its own executables and uploads its own device-resident
-/// matrix, so pooled instances never contend on mutable state.
+/// share one [`PjRt`](crate::runtime::PjRt) service handle, one compiled
+/// executable per artifact (via [`ExecCache`](crate::runtime::ExecCache) —
+/// `create` no longer recompiles identical HLO N times for an N-worker
+/// pool) and one device-resident padded matrix, uploaded on the first
+/// `create` and handed to every product. Sharing is safe because all
+/// execution serializes on the runtime service thread and the shared
+/// state (executables, uploaded buffer) is immutable after creation.
 pub struct XlaBackendFactory {
-    rt: std::sync::Arc<crate::runtime::PjRt>,
     matrix: TransitionMatrix,
-    manifest: crate::runtime::Manifest,
+    /// Compile-once cache (owns the manifest AND the runtime handle);
+    /// shared by every product.
+    cache: crate::runtime::ExecCache,
+    /// Padded matrix uploaded once: `(buffer, rp, np)`.
+    matrix_dev: std::sync::Mutex<Option<(crate::runtime::DeviceBuffer, usize, usize)>>,
 }
 
 impl XlaBackendFactory {
@@ -84,7 +92,14 @@ impl XlaBackendFactory {
         matrix: TransitionMatrix,
         manifest: crate::runtime::Manifest,
     ) -> Self {
-        XlaBackendFactory { rt, matrix, manifest }
+        let cache = crate::runtime::ExecCache::new(rt, manifest);
+        XlaBackendFactory { matrix, cache, matrix_dev: std::sync::Mutex::new(None) }
+    }
+
+    /// Distinct HLO artifacts compiled so far — stays flat as the pool
+    /// grows (one compile per `(R, N, B)` no matter how many products).
+    pub fn compiled_count(&self) -> u64 {
+        self.cache.compiled_count()
     }
 }
 
@@ -94,11 +109,34 @@ impl BackendFactory for XlaBackendFactory {
     }
 
     fn create(&self) -> Result<Box<dyn StepBackend>> {
-        let backend = super::xla::backend_from_artifacts(
-            self.rt.clone(),
-            &self.matrix,
-            &self.manifest,
+        let entries = super::xla::select_step_entries(
+            self.cache.manifest(),
+            self.matrix.rows(),
+            self.matrix.cols(),
         )?;
+        let (rp, np) = (entries[0].rules, entries[0].neurons);
+        let shapes: Vec<(usize, usize, usize)> =
+            entries.iter().map(|e| (e.rules, e.neurons, e.batch)).collect();
+        // compile-once: every product reuses the same executables
+        let mut execs = Vec::with_capacity(shapes.len());
+        for (er, en, eb) in shapes {
+            execs.push((eb, self.cache.get(er, en, eb)?));
+        }
+        // upload-once: the padded matrix is device-resident exactly once
+        let rt = self.cache.runtime();
+        let dev = {
+            let mut guard = self.matrix_dev.lock().unwrap();
+            match *guard {
+                Some((buf, prp, pnp)) if prp == rp && pnp == np => buf,
+                _ => {
+                    let buf = super::xla::upload_padded(rt, &self.matrix, rp, np)?;
+                    *guard = Some((buf, rp, np));
+                    buf
+                }
+            }
+        };
+        let backend =
+            super::xla::XlaBackend::with_shared(rt.clone(), &self.matrix, rp, np, execs, dev)?;
         Ok(Box::new(backend))
     }
 }
@@ -236,7 +274,13 @@ mod tests {
         let cfg = [2i64, 1, 1];
         let spk = [1u8, 0, 1, 1, 0];
         let out = be
-            .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: &spk })
+            .step_batch(&StepBatch {
+                b: 1,
+                n: 3,
+                r: 5,
+                configs: &cfg,
+                spikes: crate::compute::SpikeRows::Dense(&spk),
+            })
             .unwrap();
         assert_eq!(out, vec![2, 1, 2]);
         assert_eq!(be.name(), "host");

@@ -1,0 +1,512 @@
+//! Sparse spiking-vector representations — CSR frontiers end-to-end.
+//!
+//! A spiking vector is a {0,1} string over all `R` rules, but SN P
+//! semantics fire **at most one rule per neuron**, so every row has
+//! `nnz ≤ N`. On rule-heavy systems (`R ≫ N`, e.g. many alternative
+//! rules per neuron) the dense `B × R` byte matrix the paper marshals
+//! (§3.1, eq. (4)) is almost entirely zeros; "Sparse Spiking Neural-like
+//! Membrane Systems on GPUs" (arXiv 2408.04343) shows a sparse frontier
+//! representation is the decisive optimization for exactly this shape.
+//!
+//! Three types cover the pipeline:
+//!
+//! - [`SpikeRepr`] — the *requested* representation (`auto` measures the
+//!   nnz-density bound and picks).
+//! - [`SpikeRows`] — a borrowed batch view: dense bytes or CSR-style
+//!   `indptr`/`indices` fired-rule lists; what
+//!   [`StepBatch`](crate::compute::StepBatch) carries and backends
+//!   consume.
+//! - [`SpikeBuf`] — the owned builder the enumeration writes into and
+//!   the engine ships through channels (`B·avg_nnz` indices instead of
+//!   `B·R` bytes per chunk).
+
+use crate::error::Result;
+
+/// Rule-count floor below which sparse bookkeeping cannot win: with few
+/// rules a dense row is a handful of bytes and the indptr overhead
+/// dominates. The value is a conservative initial estimate, **not yet
+/// measured** — `rust/benches/bench_sparse.rs` records the dense/sparse
+/// grid at R∈{5, 248, 630} but contains no sweep near the floor; tune
+/// this once that bench has run on a real toolchain.
+pub const SPARSE_MIN_RULES: usize = 64;
+
+/// Row-density ceiling for the sparse representation. Per-row nnz is
+/// bounded by the neuron count `N` (at most one fired rule per neuron),
+/// so `N / R` is the density bound `auto` compares against. 0.25 mirrors
+/// the host backend's matrix-side `DENSE_THRESHOLD` (see its provenance
+/// note in `rust/src/compute/host.rs`); like the rule floor it awaits
+/// measurement by `bench_sparse`.
+pub const SPARSE_MAX_ROW_DENSITY: f64 = 0.25;
+
+/// Requested spiking-vector representation (`--spike-repr`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpikeRepr {
+    /// Pick by shape: sparse iff `R ≥ SPARSE_MIN_RULES` and the nnz
+    /// density bound `N / R ≤ SPARSE_MAX_ROW_DENSITY`.
+    #[default]
+    Auto,
+    /// Always dense `B × R` bytes (the paper's eq. (4) layout).
+    Dense,
+    /// Always CSR fired-rule lists.
+    Sparse,
+}
+
+impl SpikeRepr {
+    /// Parse a `--spike-repr` value.
+    pub fn parse(s: &str) -> Result<SpikeRepr> {
+        match s {
+            "auto" => Ok(SpikeRepr::Auto),
+            "dense" => Ok(SpikeRepr::Dense),
+            "sparse" => Ok(SpikeRepr::Sparse),
+            other => Err(crate::Error::parse(
+                "spike-repr",
+                0,
+                format!("expected auto|dense|sparse, got `{other}`"),
+            )),
+        }
+    }
+
+    /// Resolve to a concrete choice for a system with `r` rules and `n`
+    /// neurons. `n` bounds the per-row nnz (≤ 1 fired rule per neuron),
+    /// which makes `n / r` the measured row-density bound.
+    pub fn use_sparse(self, r: usize, n: usize) -> bool {
+        match self {
+            SpikeRepr::Dense => false,
+            SpikeRepr::Sparse => true,
+            SpikeRepr::Auto => {
+                r >= SPARSE_MIN_RULES && (n as f64) <= SPARSE_MAX_ROW_DENSITY * r as f64
+            }
+        }
+    }
+
+    /// Name of the concrete representation this resolves to.
+    pub fn resolved_name(self, r: usize, n: usize) -> &'static str {
+        repr_name(self.use_sparse(r, n))
+    }
+}
+
+/// The one bool→name mapping for a resolved representation choice,
+/// shared by stats reporting across the serial/parallel/coordinator
+/// paths (the serial path clamps `use_sparse` for tree recording, so it
+/// cannot always use [`SpikeRepr::resolved_name`] directly).
+pub const fn repr_name(use_sparse: bool) -> &'static str {
+    if use_sparse {
+        "sparse"
+    } else {
+        "dense"
+    }
+}
+
+/// Borrowed spiking rows of a batch: the representation boundary between
+/// the engine's frontier buffers and the step backends.
+#[derive(Debug, Clone, Copy)]
+pub enum SpikeRows<'a> {
+    /// `B × R` row-major 0/1 bytes.
+    Dense(&'a [u8]),
+    /// CSR fired-rule lists: row `b` fires rules
+    /// `indices[indptr[b] - indptr[0] .. indptr[b+1] - indptr[0]]`,
+    /// strictly increasing within each row. `indptr` has `B + 1`
+    /// entries; a non-zero `indptr[0]` lets callers carve zero-copy row
+    /// windows out of a larger buffer (see [`SpikeRows::slice`]).
+    Sparse {
+        /// Row offsets, length `B + 1`, non-decreasing.
+        indptr: &'a [u32],
+        /// Fired rule ids, ascending within each row.
+        indices: &'a [u32],
+    },
+}
+
+impl<'a> SpikeRows<'a> {
+    /// Fired-rule ids of sparse row `row` (relative-offset aware).
+    #[inline]
+    fn sparse_row(indptr: &'a [u32], indices: &'a [u32], row: usize) -> &'a [u32] {
+        let base = indptr[0] as usize;
+        &indices[indptr[row] as usize - base..indptr[row + 1] as usize - base]
+    }
+
+    /// Call `f` with each fired rule id of row `row`, ascending. This is
+    /// the densification boundary: XLA/replay marshalling scatters these
+    /// into the padded device buffer without ever building a dense row.
+    #[inline]
+    pub fn for_each_fired(&self, row: usize, r: usize, mut f: impl FnMut(usize)) {
+        match *self {
+            SpikeRows::Dense(bytes) => {
+                for (i, &s) in bytes[row * r..(row + 1) * r].iter().enumerate() {
+                    if s != 0 {
+                        f(i);
+                    }
+                }
+            }
+            SpikeRows::Sparse { indptr, indices } => {
+                for &i in Self::sparse_row(indptr, indices, row) {
+                    f(i as usize);
+                }
+            }
+        }
+    }
+
+    /// Number of rows this view holds (`r` = rule count, needed to
+    /// address dense rows).
+    pub fn num_rows(&self, r: usize) -> usize {
+        match *self {
+            SpikeRows::Dense(bytes) => {
+                if r == 0 {
+                    0
+                } else {
+                    bytes.len() / r
+                }
+            }
+            SpikeRows::Sparse { indptr, .. } => indptr.len().saturating_sub(1),
+        }
+    }
+
+    /// Zero-copy window of rows `lo..hi` (`r` = rule count, needed to
+    /// address dense rows).
+    pub fn slice(&self, lo: usize, hi: usize, r: usize) -> SpikeRows<'a> {
+        match *self {
+            SpikeRows::Dense(bytes) => SpikeRows::Dense(&bytes[lo * r..hi * r]),
+            SpikeRows::Sparse { indptr, indices } => {
+                let base = indptr[0] as usize;
+                SpikeRows::Sparse {
+                    indptr: &indptr[lo..=hi],
+                    indices: &indices[indptr[lo] as usize - base..indptr[hi] as usize - base],
+                }
+            }
+        }
+    }
+
+    /// Validate against a declared shape of `b` rows over `r` rules.
+    ///
+    /// Dense rows must be {0,1} bytes (paper §2.3). Sparse rows must have
+    /// a `b + 1`-entry non-decreasing `indptr` spanning exactly
+    /// `indices`, with every index `< r` and **strictly increasing**
+    /// within its row — which rejects out-of-range, unsorted and
+    /// duplicate fired-rule indices alike.
+    pub fn validate(&self, b: usize, r: usize) -> Result<()> {
+        let shape_err =
+            |expected: String, got: String| -> Result<()> { Err(crate::Error::shape(expected, got)) };
+        match *self {
+            SpikeRows::Dense(bytes) => {
+                if bytes.len() != b * r {
+                    return shape_err(
+                        format!("spikes {b}x{r}"),
+                        format!("{} elements", bytes.len()),
+                    );
+                }
+                // Spiking vectors are {0,1} strings (paper §2.3); anything
+                // else would silently corrupt `S · M` on every backend.
+                if let Some(pos) = bytes.iter().position(|&s| s > 1) {
+                    return shape_err(
+                        "spiking entries in {0, 1}".to_string(),
+                        format!("spikes[{pos}] = {}", bytes[pos]),
+                    );
+                }
+            }
+            SpikeRows::Sparse { indptr, indices } => {
+                if indptr.len() != b + 1 {
+                    return shape_err(
+                        format!("indptr of {} entries for {b} rows", b + 1),
+                        format!("{} entries", indptr.len()),
+                    );
+                }
+                if let Some(w) = indptr.windows(2).position(|w| w[1] < w[0]) {
+                    return shape_err(
+                        "non-decreasing indptr".to_string(),
+                        format!("indptr[{w}] = {} > indptr[{}] = {}", indptr[w], w + 1, indptr[w + 1]),
+                    );
+                }
+                let span = (indptr[b] - indptr[0]) as usize;
+                if span != indices.len() {
+                    return shape_err(
+                        format!("indices spanning indptr ({span} entries)"),
+                        format!("{} entries", indices.len()),
+                    );
+                }
+                for row in 0..b {
+                    let fired = Self::sparse_row(indptr, indices, row);
+                    let mut prev: Option<u32> = None;
+                    for &idx in fired {
+                        if idx as usize >= r {
+                            return shape_err(
+                                format!("fired rule ids < {r}"),
+                                format!("row {row} fires rule {idx}"),
+                            );
+                        }
+                        if let Some(p) = prev {
+                            if idx <= p {
+                                return shape_err(
+                                    "strictly increasing fired rule ids per row".to_string(),
+                                    format!("row {row} has {p} followed by {idx}"),
+                                );
+                            }
+                        }
+                        prev = Some(idx);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Owned spiking-row buffer: what the enumeration fills and the engine
+/// ships through worker channels. Sparse buffers carry `avg_nnz` u32s
+/// per row instead of `R` bytes — the channel-traffic win on rule-heavy
+/// systems.
+#[derive(Debug, Clone)]
+pub enum SpikeBuf {
+    /// Row-major `rows × r` bytes.
+    Dense {
+        /// Rule count (row stride).
+        r: usize,
+        /// The byte matrix.
+        data: Vec<u8>,
+    },
+    /// CSR fired-rule lists (`indptr[0] == 0` for owned buffers).
+    Sparse {
+        /// Row offsets (`rows + 1` entries).
+        indptr: Vec<u32>,
+        /// Fired rule ids, ascending within each row.
+        indices: Vec<u32>,
+    },
+}
+
+impl SpikeBuf {
+    /// Empty buffer in the given representation over `r` rules.
+    pub fn with_repr(sparse: bool, r: usize) -> SpikeBuf {
+        if sparse {
+            SpikeBuf::Sparse { indptr: vec![0], indices: Vec::new() }
+        } else {
+            SpikeBuf::Dense { r, data: Vec::new() }
+        }
+    }
+
+    /// Is this the sparse representation?
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, SpikeBuf::Sparse { .. })
+    }
+
+    /// Pre-size for `rows` rows over `r` rules (sparse buffers assume a
+    /// conservative one fired rule per row for the index estimate).
+    pub fn reserve_rows(&mut self, rows: usize, r: usize) {
+        match self {
+            SpikeBuf::Dense { data, .. } => data.reserve(rows * r),
+            SpikeBuf::Sparse { indptr, indices } => {
+                indptr.reserve(rows);
+                indices.reserve(rows);
+            }
+        }
+    }
+
+    /// Rows currently buffered.
+    pub fn rows(&self) -> usize {
+        match self {
+            SpikeBuf::Dense { r, data } => {
+                if *r == 0 {
+                    0
+                } else {
+                    data.len() / r
+                }
+            }
+            SpikeBuf::Sparse { indptr, .. } => indptr.len() - 1,
+        }
+    }
+
+    /// Drop all rows, keeping allocations.
+    pub fn clear(&mut self) {
+        match self {
+            SpikeBuf::Dense { data, .. } => data.clear(),
+            SpikeBuf::Sparse { indptr, indices } => {
+                indptr.clear();
+                indptr.push(0);
+                indices.clear();
+            }
+        }
+    }
+
+    /// Borrow as a batch view.
+    pub fn as_rows(&self) -> SpikeRows<'_> {
+        match self {
+            SpikeBuf::Dense { data, .. } => SpikeRows::Dense(data),
+            SpikeBuf::Sparse { indptr, indices } => {
+                SpikeRows::Sparse { indptr, indices }
+            }
+        }
+    }
+
+    /// Append one row given as 0/1 bytes (converted when sparse).
+    pub fn push_byte_row(&mut self, row: &[u8]) {
+        match self {
+            SpikeBuf::Dense { r, data } => {
+                debug_assert_eq!(row.len(), *r);
+                data.extend_from_slice(row);
+            }
+            SpikeBuf::Sparse { indptr, indices } => {
+                for (i, &s) in row.iter().enumerate() {
+                    if s != 0 {
+                        indices.push(i as u32);
+                    }
+                }
+                indptr.push(indices.len() as u32);
+            }
+        }
+    }
+
+    /// Append `b` rows from a borrowed view over `r` rules. Same-repr
+    /// appends are bulk copies; mixed-repr appends convert row by row.
+    pub fn extend_from(&mut self, rows: SpikeRows<'_>, b: usize, r: usize) {
+        debug_assert_eq!(rows.num_rows(r), b, "claimed row count must match the view");
+        match (&mut *self, rows) {
+            (SpikeBuf::Dense { data, .. }, SpikeRows::Dense(src)) => {
+                debug_assert_eq!(src.len(), b * r);
+                data.extend_from_slice(src);
+            }
+            (SpikeBuf::Sparse { indptr, indices }, SpikeRows::Sparse { indptr: sp, indices: si }) => {
+                let shift = indices.len() as u32;
+                let base = sp[0];
+                indices.extend_from_slice(si);
+                indptr.extend(sp[1..].iter().map(|&o| o - base + shift));
+            }
+            (buf, rows) => {
+                for row in 0..b {
+                    match buf {
+                        SpikeBuf::Dense { r: br, data } => {
+                            let start = data.len();
+                            data.resize(start + *br, 0);
+                            rows.for_each_fired(row, r, |i| data[start + i] = 1);
+                        }
+                        SpikeBuf::Sparse { indptr, indices } => {
+                            rows.for_each_fired(row, r, |i| indices.push(i as u32));
+                            indptr.push(indices.len() as u32);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Payload size in bytes (channel-traffic accounting).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            SpikeBuf::Dense { data, .. } => data.len(),
+            SpikeBuf::Sparse { indptr, indices } => {
+                (indptr.len() + indices.len()) * std::mem::size_of::<u32>()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_picks_sparse_only_when_rule_heavy() {
+        // paper Π: R = 5, N = 3 — far below the rule floor
+        assert!(!SpikeRepr::Auto.use_sparse(5, 3));
+        // rule-heavy: R = 256, N = 8 → density bound 1/32
+        assert!(SpikeRepr::Auto.use_sparse(256, 8));
+        // many rules but dense rows (N ≈ R)
+        assert!(!SpikeRepr::Auto.use_sparse(128, 100));
+        assert!(!SpikeRepr::Dense.use_sparse(256, 8));
+        assert!(SpikeRepr::Sparse.use_sparse(5, 3));
+        assert_eq!(SpikeRepr::Auto.resolved_name(256, 8), "sparse");
+        assert_eq!(SpikeRepr::Auto.resolved_name(5, 3), "dense");
+    }
+
+    #[test]
+    fn parse_repr_values() {
+        assert_eq!(SpikeRepr::parse("auto").unwrap(), SpikeRepr::Auto);
+        assert_eq!(SpikeRepr::parse("dense").unwrap(), SpikeRepr::Dense);
+        assert_eq!(SpikeRepr::parse("sparse").unwrap(), SpikeRepr::Sparse);
+        assert!(SpikeRepr::parse("csr").is_err());
+    }
+
+    #[test]
+    fn buf_roundtrip_dense_and_sparse() {
+        let rows: [&[u8]; 3] = [&[1, 0, 1, 1, 0], &[0, 0, 0, 0, 0], &[0, 1, 0, 0, 1]];
+        let mut dense = SpikeBuf::with_repr(false, 5);
+        let mut sparse = SpikeBuf::with_repr(true, 5);
+        for row in rows {
+            dense.push_byte_row(row);
+            sparse.push_byte_row(row);
+        }
+        assert_eq!(dense.rows(), 3);
+        assert_eq!(sparse.rows(), 3);
+        assert!(sparse.is_sparse() && !dense.is_sparse());
+        dense.as_rows().validate(3, 5).unwrap();
+        sparse.as_rows().validate(3, 5).unwrap();
+        // identical fired sets row by row
+        for row in 0..3 {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            dense.as_rows().for_each_fired(row, 5, |i| a.push(i));
+            sparse.as_rows().for_each_fired(row, 5, |i| b.push(i));
+            assert_eq!(a, b, "row {row}");
+        }
+        // sparse payload: (4 indptr + 4 indices) × 4 bytes vs 15 dense bytes
+        assert_eq!(dense.payload_bytes(), 15);
+        assert_eq!(sparse.payload_bytes(), 32);
+        sparse.clear();
+        assert_eq!(sparse.rows(), 0);
+        sparse.as_rows().validate(0, 5).unwrap();
+    }
+
+    #[test]
+    fn slice_is_zero_copy_and_validates() {
+        let mut buf = SpikeBuf::with_repr(true, 6);
+        buf.push_byte_row(&[1, 0, 0, 1, 0, 0]);
+        buf.push_byte_row(&[0, 0, 0, 0, 0, 1]);
+        buf.push_byte_row(&[0, 1, 1, 0, 0, 0]);
+        let window = buf.as_rows().slice(1, 3, 6);
+        window.validate(2, 6).unwrap();
+        let mut fired = Vec::new();
+        window.for_each_fired(0, 6, |i| fired.push(i));
+        assert_eq!(fired, vec![5]);
+        fired.clear();
+        window.for_each_fired(1, 6, |i| fired.push(i));
+        assert_eq!(fired, vec![1, 2]);
+        // a window of a window still works (non-zero indptr base)
+        let inner = window.slice(1, 2, 6);
+        inner.validate(1, 6).unwrap();
+    }
+
+    #[test]
+    fn extend_from_mixed_reprs() {
+        let mut src = SpikeBuf::with_repr(true, 4);
+        src.push_byte_row(&[1, 0, 0, 1]);
+        src.push_byte_row(&[0, 1, 0, 0]);
+        let mut dense = SpikeBuf::with_repr(false, 4);
+        dense.extend_from(src.as_rows(), 2, 4);
+        assert_eq!(dense.rows(), 2);
+        let mut sparse2 = SpikeBuf::with_repr(true, 4);
+        sparse2.push_byte_row(&[0, 0, 1, 0]);
+        sparse2.extend_from(src.as_rows(), 2, 4);
+        assert_eq!(sparse2.rows(), 3);
+        sparse2.as_rows().validate(3, 4).unwrap();
+        let mut fired = Vec::new();
+        sparse2.as_rows().for_each_fired(2, 4, |i| fired.push(i));
+        assert_eq!(fired, vec![1]);
+    }
+
+    #[test]
+    fn sparse_validation_rejects_malformed_rows() {
+        // out of range
+        let bad = SpikeRows::Sparse { indptr: &[0, 1], indices: &[9] };
+        let err = bad.validate(1, 5).unwrap_err();
+        assert!(err.to_string().contains("fires rule 9"), "{err}");
+        // unsorted
+        let bad = SpikeRows::Sparse { indptr: &[0, 2], indices: &[3, 1] };
+        assert!(bad.validate(1, 5).is_err());
+        // duplicate
+        let bad = SpikeRows::Sparse { indptr: &[0, 2], indices: &[2, 2] };
+        assert!(bad.validate(1, 5).is_err());
+        // indptr length / span mismatches
+        assert!(SpikeRows::Sparse { indptr: &[0, 1], indices: &[0] }.validate(2, 5).is_err());
+        assert!(SpikeRows::Sparse { indptr: &[0, 2], indices: &[0] }.validate(1, 5).is_err());
+        // decreasing indptr
+        assert!(SpikeRows::Sparse { indptr: &[2, 0, 2], indices: &[0, 1] }
+            .validate(2, 5)
+            .is_err());
+    }
+}

@@ -16,10 +16,34 @@
 //! receive nothing, so results are exact after slicing (the paper pads to
 //! square matrices the same way, §6).
 
-use super::{StepBackend, StepBatch};
+use super::{SpikeRows, StepBackend, StepBatch};
 use crate::error::{Error, Result};
 use crate::matrix::TransitionMatrix;
 use crate::runtime::{DeviceBuffer, PjRt, StepExecutable};
+
+/// Zero-pad `matrix` into the physical shape `(rp, np)` and upload it
+/// once; the returned device-resident handle can be shared by any number
+/// of [`XlaBackend`] instances (execution happens on the single runtime
+/// service thread, so shared buffers never contend).
+pub fn upload_padded(
+    rt: &std::sync::Arc<PjRt>,
+    matrix: &TransitionMatrix,
+    rp: usize,
+    np: usize,
+) -> Result<DeviceBuffer> {
+    let (r, n) = (matrix.rows(), matrix.cols());
+    if rp < r || np < n {
+        return Err(Error::shape(format!("physical ≥ {r}x{n}"), format!("{rp}x{np}")));
+    }
+    // marshal through f32 with the exactness check (|v| < 2²⁴), then
+    // zero-pad into the physical shape and upload once
+    let flat = matrix.try_to_f32_row_major()?;
+    let mut matrix_f32 = vec![0f32; rp * np];
+    for row in 0..r {
+        matrix_f32[row * np..row * np + n].copy_from_slice(&flat[row * n..(row + 1) * n]);
+    }
+    rt.upload(matrix_f32, vec![rp, np])
+}
 
 /// Device-backed step backend with a fixed matrix and a bucket ladder of
 /// compiled executables.
@@ -47,7 +71,24 @@ impl XlaBackend {
         matrix: &TransitionMatrix,
         rp: usize,
         np: usize,
+        execs: Vec<(usize, StepExecutable)>,
+    ) -> Result<Self> {
+        let matrix_dev = upload_padded(&rt, matrix, rp, np)?;
+        XlaBackend::with_shared(rt, matrix, rp, np, execs, matrix_dev)
+    }
+
+    /// Build over a **pre-uploaded** device-resident padded matrix and
+    /// pre-compiled executables — how
+    /// [`XlaBackendFactory`](crate::compute::XlaBackendFactory) shares
+    /// one upload and one compile per artifact across every pooled
+    /// instance instead of redoing both N times.
+    pub fn with_shared(
+        rt: std::sync::Arc<PjRt>,
+        matrix: &TransitionMatrix,
+        rp: usize,
+        np: usize,
         mut execs: Vec<(usize, StepExecutable)>,
+        matrix_dev: DeviceBuffer,
     ) -> Result<Self> {
         let (r, n) = (matrix.rows(), matrix.cols());
         if execs.is_empty() {
@@ -57,14 +98,6 @@ impl XlaBackend {
             return Err(Error::shape(format!("physical ≥ {r}x{n}"), format!("{rp}x{np}")));
         }
         execs.sort_by_key(|(b, _)| *b);
-        // marshal through f32 with the exactness check (|v| < 2²⁴), then
-        // zero-pad into the physical shape and upload once
-        let flat = matrix.try_to_f32_row_major()?;
-        let mut matrix_f32 = vec![0f32; rp * np];
-        for row in 0..r {
-            matrix_f32[row * np..row * np + n].copy_from_slice(&flat[row * n..(row + 1) * n]);
-        }
-        let matrix_dev = rt.upload(matrix_f32, vec![rp, np])?;
         Ok(XlaBackend { rt, matrix_dev, r, n, rp, np, execs })
     }
 
@@ -103,17 +136,18 @@ impl XlaBackend {
         exec: &StepExecutable,
         b_used: usize,
         configs: &[i64],
-        spikes: &[u8],
+        spikes: SpikeRows<'_>,
         out: &mut Vec<i64>,
     ) -> Result<()> {
         debug_assert!(b_used <= cap);
         // Pad batch rows AND rule/neuron columns: zero spiking rows leave C
-        // untouched; padded C rows/cols are zeros and sliced away.
+        // untouched; padded C rows/cols are zeros and sliced away. This is
+        // the densification boundary for sparse spiking rows — fired
+        // indices scatter straight into the padded f32 buffer, so a dense
+        // B × R byte row is never materialized on the host.
         let mut s_f32 = vec![0f32; cap * self.rp];
         for b in 0..b_used {
-            for i in 0..self.r {
-                s_f32[b * self.rp + i] = spikes[b * self.r + i] as f32;
-            }
+            spikes.for_each_fired(b, self.r, |i| s_f32[b * self.rp + i] = 1.0);
         }
         let mut c_f32 = vec![0f32; cap * self.np];
         for b in 0..b_used {
@@ -165,13 +199,33 @@ impl StepBackend for XlaBackend {
                 &exec,
                 take,
                 &batch.configs[row * self.n..(row + take) * self.n],
-                &batch.spikes[row * self.r..(row + take) * self.r],
+                batch.spikes.slice(row, row + take, self.r),
                 &mut out,
             )?;
             row += take;
         }
         Ok(out)
     }
+}
+
+/// Select the step artifacts covering `(r, n)`: exact shape when
+/// lowered, else the smallest padded cover. The one artifact-selection
+/// policy shared by [`backend_from_artifacts`] and
+/// [`XlaBackendFactory`](crate::compute::XlaBackendFactory).
+pub(crate) fn select_step_entries<'m>(
+    manifest: &'m crate::runtime::Manifest,
+    r: usize,
+    n: usize,
+) -> Result<Vec<&'m crate::runtime::StepEntry>> {
+    let entries = manifest.padded_entries(r, n);
+    if entries.is_empty() {
+        return Err(Error::artifact(format!(
+            "no step artifact covering R={r} N={n}; run `make artifacts` \
+             (available: {})",
+            manifest.describe()
+        )));
+    }
+    Ok(entries)
 }
 
 /// Build an [`XlaBackend`] for a matrix from the artifact manifest: exact
@@ -181,16 +235,7 @@ pub fn backend_from_artifacts(
     matrix: &TransitionMatrix,
     manifest: &crate::runtime::Manifest,
 ) -> Result<XlaBackend> {
-    let r = matrix.rows();
-    let n = matrix.cols();
-    let entries = manifest.padded_entries(r, n);
-    if entries.is_empty() {
-        return Err(Error::artifact(format!(
-            "no step artifact covering R={r} N={n}; run `make artifacts` \
-             (available: {})",
-            manifest.describe()
-        )));
-    }
+    let entries = select_step_entries(manifest, matrix.rows(), matrix.cols())?;
     let (rp, np) = (entries[0].rules, entries[0].neurons);
     let mut execs = Vec::new();
     for e in entries {

@@ -11,7 +11,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::compute::{BackendPool, StepBackend, StepBatch};
+use crate::compute::{BackendPool, SpikeBuf, SpikeRows, StepBackend, StepBatch};
 use crate::engine::ConfigVector;
 use crate::error::Result;
 
@@ -21,43 +21,54 @@ pub struct Batcher {
     r: usize,
     target: usize,
     configs: Vec<i64>,
-    spikes: Vec<u8>,
+    spikes: SpikeBuf,
     rows: usize,
 }
 
 impl Batcher {
-    /// New batcher for `(R, N)` with a per-dispatch row target.
+    /// New batcher for `(R, N)` with a per-dispatch row target (dense
+    /// spiking rows).
     pub fn new(n: usize, r: usize, target: usize) -> Self {
-        Batcher::with_capacity(n, r, target, 0)
+        Batcher::with_repr(n, r, target, 0, false)
     }
 
-    /// New batcher with pre-sized buffers for `rows` rows.
+    /// New batcher with pre-sized buffers for `rows` dense rows.
     pub fn with_capacity(n: usize, r: usize, target: usize, rows: usize) -> Self {
+        Batcher::with_repr(n, r, target, rows, false)
+    }
+
+    /// New batcher picking the spiking-row representation: sparse rows
+    /// accumulate CSR fired-rule lists end-to-end (dispatch slices are
+    /// zero-copy windows, no densification anywhere on the host path).
+    pub fn with_repr(n: usize, r: usize, target: usize, rows: usize, sparse: bool) -> Self {
+        let mut spikes = SpikeBuf::with_repr(sparse, r);
+        spikes.reserve_rows(rows, r);
         Batcher {
             n,
             r,
             target: target.max(1),
             configs: Vec::with_capacity(rows * n),
-            spikes: Vec::with_capacity(rows * r),
+            spikes,
             rows: 0,
         }
     }
 
-    /// Append pre-flattened rows (from a worker's expansion).
-    pub fn push_rows(&mut self, configs: &[i64], spikes: &[u8], rows: usize) {
+    /// Append pre-built rows (from a worker's expansion); converts only
+    /// when the representations differ.
+    pub fn push_rows(&mut self, configs: &[i64], spikes: SpikeRows<'_>, rows: usize) {
         debug_assert_eq!(configs.len(), rows * self.n);
-        debug_assert_eq!(spikes.len(), rows * self.r);
+        debug_assert_eq!(spikes.num_rows(self.r), rows);
         self.configs.extend_from_slice(configs);
-        self.spikes.extend_from_slice(spikes);
+        self.spikes.extend_from(spikes, rows, self.r);
         self.rows += rows;
     }
 
-    /// Append a single row.
+    /// Append a single row given as dense 0/1 bytes.
     pub fn push(&mut self, config: &ConfigVector, spiking: &[u8]) {
         debug_assert_eq!(config.len(), self.n);
         debug_assert_eq!(spiking.len(), self.r);
         self.configs.extend(config.as_slice().iter().map(|&x| x as i64));
-        self.spikes.extend_from_slice(spiking);
+        self.spikes.push_byte_row(spiking);
         self.rows += 1;
     }
 
@@ -86,7 +97,7 @@ impl Batcher {
                 n: self.n,
                 r: self.r,
                 configs: &self.configs[row * self.n..(row + take) * self.n],
-                spikes: &self.spikes[row * self.r..(row + take) * self.r],
+                spikes: self.spikes.as_rows().slice(row, row + take, self.r),
             };
             let result = backend.step_batch(&batch)?;
             batches += 1;
@@ -138,7 +149,7 @@ impl Batcher {
                             n: self.n,
                             r: self.r,
                             configs: &self.configs[row * self.n..(row + take) * self.n],
-                            spikes: &self.spikes[row * self.r..(row + take) * self.r],
+                            spikes: self.spikes.as_rows().slice(row, row + take, self.r),
                         };
                         let res = backend.step_batch(&batch).and_then(|out| {
                             let mut v = Vec::with_capacity(take);
@@ -240,11 +251,42 @@ mod tests {
         let mut b = Batcher::with_capacity(3, 5, 8, 2);
         let flat_c = [2i64, 1, 1, 2, 1, 1];
         let flat_s = [1u8, 0, 1, 1, 0, 1, 0, 1, 1, 0];
-        b.push_rows(&flat_c, &flat_s, 2);
+        b.push_rows(&flat_c, crate::compute::SpikeRows::Dense(&flat_s), 2);
         let mut be = HostBackend::new(&m);
         let ra = a.run(&mut be).unwrap();
         let mut be2 = HostBackend::new(&m);
         let rb = b.run(&mut be2).unwrap();
         assert_eq!(ra.0, rb.0);
+    }
+
+    #[test]
+    fn sparse_batcher_matches_dense_across_dispatch_paths() {
+        use crate::compute::{BackendPool, HostBackendFactory};
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let c0 = ConfigVector::from(vec![2, 1, 1]);
+        let fill = |batcher: &mut Batcher| {
+            for i in 0..17u32 {
+                let s: &[u8] = if i % 2 == 0 { &[1, 0, 1, 1, 0] } else { &[0, 1, 1, 1, 0] };
+                batcher.push(&c0, s);
+            }
+        };
+        let mut dense = Batcher::new(3, 5, 4);
+        fill(&mut dense);
+        let mut backend = HostBackend::new(&m);
+        let (want, _, _) = dense.run(&mut backend).unwrap();
+        // sparse batcher through the serial dispatch
+        let mut sparse = Batcher::with_repr(3, 5, 4, 0, true);
+        fill(&mut sparse);
+        let mut backend = HostBackend::new(&m);
+        let (got, steps, _) = sparse.run(&mut backend).unwrap();
+        assert_eq!(steps, 17);
+        assert_eq!(got, want);
+        // sparse batcher through the pool dispatch (sliced CSR windows)
+        let pool = BackendPool::build(&HostBackendFactory::new(m), 3).unwrap();
+        let mut sparse = Batcher::with_repr(3, 5, 4, 0, true);
+        fill(&mut sparse);
+        let (got, _, _) = sparse.run_pool(&pool, 3).unwrap();
+        assert_eq!(got, want);
     }
 }

@@ -71,6 +71,9 @@ pub struct CoordinatorConfig {
     pub backend: BackendChoice,
     /// Target rows per backend dispatch.
     pub batch_target: usize,
+    /// Spiking-row representation for expansion/dispatch (auto = pick by
+    /// shape; output is identical either way).
+    pub spike_repr: crate::compute::SpikeRepr,
 }
 
 impl Default for CoordinatorConfig {
@@ -81,6 +84,7 @@ impl Default for CoordinatorConfig {
             max_configs: None,
             backend: BackendChoice::Host,
             batch_target: 256,
+            spike_repr: crate::compute::SpikeRepr::Auto,
         }
     }
 }
@@ -152,7 +156,8 @@ impl<'a> Coordinator<'a> {
             &self.matrix,
             workers,
             self.cfg.batch_target,
-        );
+        )
+        .with_spike_repr(self.cfg.spike_repr);
         let mut visited = VisitedStore::new();
         visited.insert(c0.clone());
         let mut level = vec![c0];

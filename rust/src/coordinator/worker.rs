@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use super::batcher::Batcher;
 use super::metrics::LevelMetrics;
-use crate::compute::BackendPool;
+use crate::compute::{BackendPool, SpikeBuf, SpikeRepr};
 use crate::engine::{applicable_rules_into, ApplicabilityMap, ConfigVector, SpikingEnumeration, VisitedStore};
 use crate::error::Result;
 use crate::matrix::TransitionMatrix;
@@ -21,7 +21,7 @@ use crate::snp::SnpSystem;
 /// window index for deterministic folding.
 struct Expansion {
     configs: Vec<i64>,
-    spikes: Vec<u8>,
+    spikes: SpikeBuf,
     rows: usize,
     halting: Vec<(u32, ConfigVector)>,
     psi_total: u128,
@@ -35,6 +35,9 @@ pub struct LevelDriver<'a> {
     matrix: &'a TransitionMatrix,
     workers: usize,
     batch_target: usize,
+    /// Concrete spiking-row representation (resolved from the requested
+    /// [`SpikeRepr`] against the system's shape).
+    use_sparse: bool,
     /// Parents expanded per window (bounds peak row memory together with
     /// the per-config Ψ).
     window_parents: usize,
@@ -73,6 +76,7 @@ impl<'a> LevelDriver<'a> {
             matrix,
             workers: workers.max(1),
             batch_target: batch_target.max(1),
+            use_sparse: SpikeRepr::Auto.use_sparse(sys.num_rules(), sys.num_neurons()),
             window_parents: 4096,
         }
     }
@@ -81,6 +85,17 @@ impl<'a> LevelDriver<'a> {
     pub fn with_window(mut self, parents: usize) -> Self {
         self.window_parents = parents.max(1);
         self
+    }
+
+    /// Pick the spiking-row representation (default: auto).
+    pub fn with_spike_repr(mut self, repr: SpikeRepr) -> Self {
+        self.use_sparse = repr.use_sparse(self.sys.num_rules(), self.sys.num_neurons());
+        self
+    }
+
+    /// Concrete representation in use (`"dense"`/`"sparse"`).
+    pub fn spike_repr_name(&self) -> &'static str {
+        crate::compute::spike_repr_name(self.use_sparse)
     }
 
     /// Expand, evaluate and fold one level.
@@ -143,11 +158,12 @@ impl<'a> LevelDriver<'a> {
             // --- step (batched across the backend pool) -------------------
             let t1 = Instant::now();
             let total_rows: usize = expansions.iter().map(|e| e.rows).sum();
-            let mut batcher = Batcher::with_capacity(n, r, self.batch_target, total_rows);
+            let mut batcher =
+                Batcher::with_repr(n, r, self.batch_target, total_rows, self.use_sparse);
             let mut halts: Vec<(u32, ConfigVector)> = Vec::new();
             for e in &expansions {
                 out.psi_total += e.psi_total;
-                batcher.push_rows(&e.configs, &e.spikes, e.rows);
+                batcher.push_rows(&e.configs, e.spikes.as_rows(), e.rows);
             }
             for e in expansions {
                 halts.extend(e.halting);
@@ -174,7 +190,7 @@ impl<'a> LevelDriver<'a> {
     fn expand_slice(&self, slice: &[ConfigVector], base: u32, r: usize) -> Expansion {
         let mut e = Expansion {
             configs: Vec::new(),
-            spikes: Vec::new(),
+            spikes: SpikeBuf::with_repr(self.use_sparse, r),
             rows: 0,
             halting: Vec::new(),
             psi_total: 0,
@@ -189,7 +205,7 @@ impl<'a> LevelDriver<'a> {
             }
             e.psi_total += map.psi();
             let mut en = SpikingEnumeration::new(&map, r);
-            while en.fill_next(&mut e.spikes) {
+            while en.fill_next_into(&mut e.spikes) {
                 e.configs.extend(config.as_slice().iter().map(|&x| x as i64));
                 e.rows += 1;
             }
@@ -289,6 +305,33 @@ mod tests {
             .unwrap();
         assert!(out.truncated);
         assert!(out.next_level.is_empty());
+    }
+
+    #[test]
+    fn spike_repr_does_not_change_level_results() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let mut results = Vec::new();
+        for repr in [SpikeRepr::Dense, SpikeRepr::Sparse] {
+            let driver = LevelDriver::new(&sys, &m, 2, 4).with_spike_repr(repr);
+            let backends = pool(&m, 2);
+            let mut visited = VisitedStore::new();
+            let c0 = ConfigVector::from(vec![2, 1, 1]);
+            visited.insert(c0.clone());
+            let mut halting = Vec::new();
+            let out = driver
+                .process_level(&[c0], &backends, &mut visited, &mut halting, None)
+                .unwrap();
+            results.push(out.next_level.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+        }
+        assert_eq!(results[0], results[1]);
+        // and auto resolves dense on the tiny paper system
+        let auto = LevelDriver::new(&sys, &m, 2, 4);
+        assert_eq!(auto.spike_repr_name(), "dense");
+        assert_eq!(
+            LevelDriver::new(&sys, &m, 2, 4).with_spike_repr(SpikeRepr::Sparse).spike_repr_name(),
+            "sparse"
+        );
     }
 
     #[test]

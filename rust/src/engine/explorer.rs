@@ -68,6 +68,12 @@ pub struct ExploreOptions {
     /// `0` = all available parallelism, `N > 1` = pipelined parallel
     /// exploration over a pool of `N` backends.
     pub workers: usize,
+    /// Spiking-row representation: dense `B × R` bytes, CSR fired-rule
+    /// lists, or [`SpikeRepr::Auto`](crate::compute::SpikeRepr) (pick by
+    /// R and the nnz density bound). Purely an execution-strategy knob —
+    /// `allGenCk` is byte-identical either way. Tree recording forces
+    /// dense (the tree stores whole [`SpikingVector`]s).
+    pub spike_repr: crate::compute::SpikeRepr,
 }
 
 impl ExploreOptions {
@@ -81,6 +87,7 @@ impl ExploreOptions {
             record_tree: false,
             batch_cap: None,
             workers: 1,
+            spike_repr: crate::compute::SpikeRepr::Auto,
         }
     }
 
@@ -124,6 +131,12 @@ impl ExploreOptions {
         self.workers = n;
         self
     }
+
+    /// Pick the spiking-row representation (`--spike-repr`).
+    pub fn spike_repr(mut self, repr: crate::compute::SpikeRepr) -> Self {
+        self.spike_repr = repr;
+        self
+    }
 }
 
 /// Counters accumulated during a run.
@@ -143,6 +156,8 @@ pub struct ExploreStats {
     pub elapsed: Duration,
     /// Worker threads used (1 = serial path).
     pub workers: usize,
+    /// Concrete spiking-row representation used (`"dense"`/`"sparse"`).
+    pub spike_repr: &'static str,
 }
 
 /// Result of an exploration.
@@ -364,11 +379,18 @@ fn run_serial(
     let n = sys.num_neurons();
     let r = sys.num_rules();
     let batch_cap = opts.batch_cap.unwrap_or_else(|| backend.max_batch()).clamp(1, 1 << 20);
+    // Resolve the spiking-row representation once per run. Tree recording
+    // keeps dense rows (it stores whole SpikingVectors anyway).
+    let use_sparse = opts.spike_repr.use_sparse(r, n) && !opts.record_tree;
 
     let mut visited = VisitedStore::new();
     let mut tree = if opts.record_tree { Some(ComputationTree::new()) } else { None };
     let mut halting_configs = Vec::new();
-    let mut stats = ExploreStats { workers: 1, ..ExploreStats::default() };
+    let mut stats = ExploreStats {
+        workers: 1,
+        spike_repr: crate::compute::spike_repr_name(use_sparse),
+        ..ExploreStats::default()
+    };
     let mut depth_reached = 0u32;
     let mut saw_zero = false;
 
@@ -379,7 +401,7 @@ fn run_serial(
 
     // Reusable batch buffers.
     let mut cfg_buf: Vec<i64> = Vec::new();
-    let mut spk_buf: Vec<u8> = Vec::new();
+    let mut spk_buf = crate::compute::SpikeBuf::with_repr(use_sparse, r);
     // (parent node, parent depth) per batch row.
     let mut meta: Vec<(usize, u32)> = Vec::new();
     // spiking vectors per row, recorded only when the tree is on
@@ -436,14 +458,15 @@ fn run_serial(
             if record_tree {
                 for s in SpikingEnumeration::new(&map, r) {
                     cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
-                    spk_buf.extend(s.to_bytes());
+                    spk_buf.push_byte_row(&s.to_bytes());
                     meta.push((pending.node, pending.depth));
                     spk_meta.push(s);
                 }
             } else {
-                // hot path: write rows straight into the batch buffer
+                // hot path: write rows straight into the batch buffer, in
+                // whichever representation the run resolved to
                 let mut e = SpikingEnumeration::new(&map, r);
-                while e.fill_next(&mut spk_buf) {
+                while e.fill_next_into(&mut spk_buf) {
                     cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
                     meta.push((pending.node, pending.depth));
                 }
@@ -454,7 +477,7 @@ fn run_serial(
         }
         // Evaluate the batch.
         let b = meta.len();
-        let batch = StepBatch { b, n, r, configs: &cfg_buf, spikes: &spk_buf };
+        let batch = StepBatch { b, n, r, configs: &cfg_buf, spikes: spk_buf.as_rows() };
         let out = backend
             .step_batch(&batch)
             .expect("step backend failed (shape-checked input)");

@@ -48,7 +48,7 @@ use super::dedup::{ShardedVisitedStore, VisitedStore};
 use super::explorer::{ExploreOptions, ExploreReport, ExploreStats, SearchOrder};
 use super::spiking::SpikingEnumeration;
 use super::stop::StopReason;
-use crate::compute::{BackendFactory, BackendPool, StepBatch};
+use crate::compute::{BackendFactory, BackendPool, SpikeBuf, StepBatch};
 use crate::snp::SnpSystem;
 
 /// Rows per dispatched chunk when the caller didn't pin `batch_cap`.
@@ -62,8 +62,10 @@ struct WorkChunk {
     rows: usize,
     /// `rows × N` parent configurations.
     configs: Vec<i64>,
-    /// `rows × R` spiking vectors.
-    spikes: Vec<u8>,
+    /// `rows × R` spiking vectors, dense or CSR — on rule-heavy systems
+    /// the sparse form drops the per-chunk channel payload from
+    /// `rows · R` bytes to `rows · avg_nnz` u32 indices.
+    spikes: SpikeBuf,
     /// Child depth per row (parent depth + 1).
     depths: Vec<u32>,
 }
@@ -86,14 +88,19 @@ struct PendingP {
 /// In-construction chunk buffers.
 struct ChunkBuf {
     configs: Vec<i64>,
-    spikes: Vec<u8>,
+    spikes: SpikeBuf,
     depths: Vec<u32>,
     halting: Vec<ConfigVector>,
 }
 
 impl ChunkBuf {
-    fn new() -> Self {
-        ChunkBuf { configs: Vec::new(), spikes: Vec::new(), depths: Vec::new(), halting: Vec::new() }
+    fn new(use_sparse: bool, r: usize) -> Self {
+        ChunkBuf {
+            configs: Vec::new(),
+            spikes: SpikeBuf::with_repr(use_sparse, r),
+            depths: Vec::new(),
+            halting: Vec::new(),
+        }
     }
 
     fn rows(&self) -> usize {
@@ -136,6 +143,10 @@ pub(crate) fn run_pipelined_on(
     let start = Instant::now();
     let n = sys.num_neurons();
     let r = sys.num_rules();
+    // One representation per run (resolved exactly as the serial path
+    // does): chunk buffers, channel payloads and backend batches all
+    // carry it; the fold sees only child configurations either way.
+    let use_sparse = opts.spike_repr.use_sparse(r, n);
     // BFS: batch boundaries are order-neutral → pipeline-tuned chunks.
     // DFS: rounds must match the serial batch structure → round cap from
     // the backend (as the serial path does), chunked for the pool.
@@ -156,7 +167,11 @@ pub(crate) fn run_pipelined_on(
     visited.insert(c0.clone());
     store.insert(&c0);
 
-    let mut stats = ExploreStats { workers, ..ExploreStats::default() };
+    let mut stats = ExploreStats {
+        workers,
+        spike_repr: crate::compute::spike_repr_name(use_sparse),
+        ..ExploreStats::default()
+    };
     let mut halting_configs: Vec<ConfigVector> = Vec::new();
     let mut depth_reached = 0u32;
     let mut saw_zero = false;
@@ -201,7 +216,7 @@ pub(crate) fn run_pipelined_on(
                         n,
                         r,
                         configs: &chunk.configs,
-                        spikes: &chunk.spikes,
+                        spikes: chunk.spikes.as_rows(),
                     };
                     let result = match backend.step_batch(&batch) {
                         Err(e) => ChunkResult {
@@ -298,7 +313,7 @@ pub(crate) fn run_pipelined_on(
                 }
                 // ---- build one round: pop frontier, enumerate rows ----
                 let mut round_rows = 0usize;
-                let mut chunk = ChunkBuf::new();
+                let mut chunk = ChunkBuf::new(use_sparse, r);
                 while round_rows < round_cap {
                     let Some(pending) = (match opts.order {
                         SearchOrder::BreadthFirst => queue.pop_front(),
@@ -323,7 +338,7 @@ pub(crate) fn run_pipelined_on(
                     stats.psi_total += map.psi();
                     let before = chunk.rows();
                     let mut e = SpikingEnumeration::new(&map, r);
-                    while e.fill_next(&mut chunk.spikes) {
+                    while e.fill_next_into(&mut chunk.spikes) {
                         chunk
                             .configs
                             .extend(pending.config.as_slice().iter().map(|&x| x as i64));
@@ -331,7 +346,8 @@ pub(crate) fn run_pipelined_on(
                     }
                     round_rows += chunk.rows() - before;
                     if chunk.rows() >= chunk_target {
-                        let full = std::mem::replace(&mut chunk, ChunkBuf::new());
+                        let full =
+                            std::mem::replace(&mut chunk, ChunkBuf::new(use_sparse, r));
                         dispatch(
                             full,
                             &mut next_seq,
@@ -463,6 +479,28 @@ mod tests {
         )
         .run();
         assert_eq!(rep.visited.in_order(), serial.visited.in_order());
+    }
+
+    #[test]
+    fn forced_sparse_repr_keeps_output_identical() {
+        use crate::compute::SpikeRepr;
+        // Π is tiny (R = 5) so auto resolves dense; forcing sparse must
+        // change nothing but the transport representation.
+        let sys = crate::generators::paper_pi();
+        let serial = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(4)).run();
+        for w in [1usize, 4] {
+            let rep = Explorer::new(
+                &sys,
+                ExploreOptions::breadth_first()
+                    .max_depth(4)
+                    .workers(w)
+                    .spike_repr(SpikeRepr::Sparse),
+            )
+            .run();
+            assert_eq!(rep.visited.in_order(), serial.visited.in_order(), "workers={w}");
+            assert_eq!(rep.stats.spike_repr, "sparse", "workers={w}");
+        }
+        assert_eq!(serial.stats.spike_repr, "dense", "auto resolves dense on Π");
     }
 
     #[test]

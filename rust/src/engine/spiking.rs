@@ -139,6 +139,46 @@ impl<'a> SpikingEnumeration<'a> {
         true
     }
 
+    /// Sparse variant of [`SpikingEnumeration::fill_next`]: append the
+    /// next vector's **fired rule ids** to `out` (one per active neuron,
+    /// strictly increasing — rule ids are contiguous per neuron and
+    /// active neurons are visited in ascending order) and return how many
+    /// were appended, or `None` when exhausted. On rule-heavy systems
+    /// this emits `nnz ≤ N` indices where `fill_next` writes `R` bytes —
+    /// no dense row is ever built.
+    pub fn fill_next_sparse(&mut self, out: &mut Vec<u32>) -> Option<usize> {
+        if self.done {
+            return None;
+        }
+        for (slot, &j) in self.active.iter().enumerate() {
+            out.push(self.map.neuron(j)[self.odometer[slot]]);
+        }
+        debug_assert!(
+            out[out.len() - self.active.len()..].windows(2).all(|w| w[0] < w[1]),
+            "fired rule ids must be strictly increasing"
+        );
+        self.advance();
+        Some(self.active.len())
+    }
+
+    /// Append the next vector into a [`SpikeBuf`](crate::compute::SpikeBuf)
+    /// in whichever representation it carries; returns `false` when
+    /// exhausted.
+    pub fn fill_next_into(&mut self, buf: &mut crate::compute::SpikeBuf) -> bool {
+        match buf {
+            crate::compute::SpikeBuf::Dense { data, .. } => self.fill_next(data),
+            crate::compute::SpikeBuf::Sparse { indptr, indices } => {
+                match self.fill_next_sparse(indices) {
+                    Some(_) => {
+                        indptr.push(indices.len() as u32);
+                        true
+                    }
+                    None => false,
+                }
+            }
+        }
+    }
+
     #[inline]
     fn advance(&mut self) {
         // last active neuron varies fastest (the paper's pair-and-
@@ -265,6 +305,52 @@ mod tests {
             let flat: Vec<u8> = via_iter.into_iter().flatten().collect();
             assert_eq!(buf, flat, "cfg {cfg:?}");
         }
+    }
+
+    #[test]
+    fn fill_next_sparse_matches_dense() {
+        let sys = crate::generators::paper_pi();
+        for cfg in [[2u64, 1, 1], [2, 1, 2], [1, 1, 2], [1, 0, 0]] {
+            let map = applicable_rules(&sys, &ConfigVector::from(cfg.to_vec()));
+            let via_iter: Vec<Vec<usize>> = SpikingEnumeration::new(&map, sys.num_rules())
+                .map(|s| s.fired_rules().collect())
+                .collect();
+            let mut indices: Vec<u32> = Vec::new();
+            let mut bounds = vec![0usize];
+            let mut e = SpikingEnumeration::new(&map, sys.num_rules());
+            while e.fill_next_sparse(&mut indices).is_some() {
+                bounds.push(indices.len());
+            }
+            assert_eq!(bounds.len() - 1, via_iter.len(), "cfg {cfg:?}");
+            for (k, want) in via_iter.iter().enumerate() {
+                let got: Vec<usize> =
+                    indices[bounds[k]..bounds[k + 1]].iter().map(|&i| i as usize).collect();
+                assert_eq!(&got, want, "cfg {cfg:?} vector {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_next_into_both_reprs() {
+        use crate::compute::SpikeBuf;
+        let sys = crate::generators::paper_pi();
+        let map = applicable_rules(&sys, &ConfigVector::from(vec![2, 1, 2]));
+        let mut dense = SpikeBuf::with_repr(false, sys.num_rules());
+        let mut e = SpikingEnumeration::new(&map, sys.num_rules());
+        while e.fill_next_into(&mut dense) {}
+        let mut sparse = SpikeBuf::with_repr(true, sys.num_rules());
+        let mut e = SpikingEnumeration::new(&map, sys.num_rules());
+        while e.fill_next_into(&mut sparse) {}
+        assert_eq!(dense.rows(), 4);
+        assert_eq!(sparse.rows(), 4);
+        for row in 0..4 {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            dense.as_rows().for_each_fired(row, sys.num_rules(), |i| a.push(i));
+            sparse.as_rows().for_each_fired(row, sys.num_rules(), |i| b.push(i));
+            assert_eq!(a, b, "row {row}");
+        }
+        sparse.as_rows().validate(4, sys.num_rules()).unwrap();
     }
 
     #[test]

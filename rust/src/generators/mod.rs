@@ -10,6 +10,7 @@ mod nat_gen;
 mod paper_pi;
 mod random_sys;
 mod ring;
+mod rule_heavy;
 mod sorter;
 
 pub use acceptor::{accepts, divisibility_acceptor, ACCEPTOR_COUNTER};
@@ -21,6 +22,7 @@ pub use nat_gen::nat_generator;
 pub use paper_pi::paper_pi;
 pub use random_sys::{random_system, RandomSystemParams};
 pub use ring::{ring, ring_with_branching, wide_ring};
+pub use rule_heavy::rule_heavy;
 pub use sorter::{sorted_output, sorter};
 
 use crate::error::{Error, Result};
@@ -47,6 +49,7 @@ pub fn from_spec(spec: &str) -> Result<Option<SnpSystem>> {
         "ring" => ring(num(1)? as usize, num(2)?),
         "ring_branch" => ring_with_branching(num(1)? as usize, num(2)?, num(3)?),
         "wide_ring" => wide_ring(num(1)? as usize, num(2)? as usize, num(3)?),
+        "rule_heavy" => rule_heavy(num(1)? as usize, num(2)?, num(3)?),
         "counter" => counter_chain(num(1)? as usize, num(2)?),
         "div" => divisibility_checker(num(1)?, num(2)?),
         "adder" => bit_adder(num(1)? as usize),
@@ -71,6 +74,7 @@ mod tests {
             super::ring(8, 2),
             super::ring_with_branching(6, 2, 2),
             super::wide_ring(8, 3, 2),
+            super::rule_heavy(4, 8, 2),
             super::bit_adder(4),
             super::sorter(&[3, 1, 2]),
             super::divisibility_acceptor(3),
@@ -86,6 +90,10 @@ mod tests {
         assert_eq!(super::from_spec("paper_pi").unwrap().unwrap().name, "paper_pi");
         assert_eq!(super::from_spec("ring:4:2").unwrap().unwrap().num_neurons(), 4);
         assert_eq!(super::from_spec("wide_ring:8:3:2").unwrap().unwrap().name, "wide_ring_8_3_2");
+        assert_eq!(
+            super::from_spec("rule_heavy:8:16:2").unwrap().unwrap().name,
+            "rule_heavy_8_16_2"
+        );
         assert!(super::from_spec("no_such_builtin").unwrap().is_none());
         assert!(super::from_spec("ring:x:2").is_err(), "bad parameter is an error, not None");
         assert!(super::from_spec("ring:4").is_err(), "missing parameter is an error");

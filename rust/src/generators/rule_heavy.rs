@@ -1,0 +1,82 @@
+//! Rule-heavy ring — the sparse spiking-vector stress shape.
+//!
+//! Real rule-heavy SN P systems carry many *alternative* rules per neuron
+//! (count-specialized behaviors), of which only a couple are applicable
+//! at any instant. Here each neuron holds `2k − 1` exact-guard rules
+//! (`R = m·(2k−1)` total) while a spiking row still fires at most `m`
+//! of them — per-row density `≈ 1/(2k)`, the regime where the dense
+//! `B × R` byte marshalling of the paper's eq. (4) is almost all zeros
+//! and the CSR frontier representation wins (arXiv 2408.04343).
+
+use crate::snp::{Guard, Rule, SnpSystem, SystemBuilder};
+
+/// A directed ring of `m` neurons where every neuron has, for each exact
+/// count `c ∈ 1..=k`, a drain rule `a^c/a^c → a` and (for `c ≥ 2`) a
+/// trickle rule `a^c/a → a` — so counts stay in `0..=k` (consume ≥ 1,
+/// receive ≤ 1 per step), branching is at most 2 per neuron, and the
+/// reachable state space is finite while `R = m·(2k−1)` grows linearly
+/// in `k` with per-row nnz fixed at ≤ `m`.
+///
+/// `charge` is the initial spike count of every neuron (`1 ≤ charge ≤ k`
+/// keeps the count invariant).
+pub fn rule_heavy(m: usize, k: u64, charge: u64) -> SnpSystem {
+    assert!(m >= 2, "rule_heavy needs at least 2 neurons");
+    assert!(k >= 1, "rule_heavy needs at least 1 count level");
+    assert!(
+        (1..=k).contains(&charge),
+        "initial charge must be in 1..=k to keep counts bounded"
+    );
+    let mut b = SystemBuilder::new(format!("rule_heavy_{m}_{k}_{charge}"));
+    for i in 0..m {
+        let mut rules: Vec<Rule> = Vec::with_capacity(2 * k as usize - 1);
+        for c in 1..=k {
+            // drain: at exactly c spikes, consume all c
+            rules.push(Rule::exact(c, 1));
+            if c >= 2 {
+                // trickle: at exactly c spikes, consume one
+                rules.push(Rule { guard: Guard::Exact(c), consumed: 1, produced: 1 });
+            }
+        }
+        b = b.neuron_labeled(format!("h{i}"), charge, rules);
+    }
+    let edges: Vec<(usize, usize)> = (0..m).map(|i| (i, (i + 1) % m)).collect();
+    b.synapses(&edges).output(m - 1).build().expect("well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{applicable_rules, ConfigVector, ExploreOptions, Explorer};
+
+    #[test]
+    fn shape_is_rule_heavy() {
+        let s = rule_heavy(8, 16, 2);
+        assert_eq!(s.num_neurons(), 8);
+        assert_eq!(s.num_rules(), 8 * 31);
+        // per-row nnz ≤ N = 8 over R = 248 rules: density < 4%
+        let map = applicable_rules(&s, &ConfigVector::new(s.initial_config()));
+        assert_eq!(map.psi(), 1u128 << 8, "2 applicable rules per neuron at charge 2");
+    }
+
+    #[test]
+    fn auto_repr_resolves_sparse() {
+        use crate::compute::SpikeRepr;
+        let s = rule_heavy(8, 16, 2);
+        assert!(SpikeRepr::Auto.use_sparse(s.num_rules(), s.num_neurons()));
+        // low k stays under the rule floor → dense
+        let tiny = rule_heavy(4, 2, 2);
+        assert!(!SpikeRepr::Auto.use_sparse(tiny.num_rules(), tiny.num_neurons()));
+    }
+
+    #[test]
+    fn counts_stay_bounded_and_space_is_finite() {
+        let s = rule_heavy(4, 6, 2);
+        let rep = Explorer::new(&s, ExploreOptions::breadth_first().max_configs(50_000)).run();
+        assert!(rep.stop.is_complete(), "{:?}", rep.stop);
+        for c in rep.visited.in_order() {
+            for j in 0..4 {
+                assert!(c.get(j) <= 6, "count invariant violated in {c}");
+            }
+        }
+    }
+}

@@ -75,7 +75,7 @@ pub fn render_paper_log(sys: &SnpSystem, report: &ExploreReport) -> String {
 pub fn render_summary(sys: &SnpSystem, report: &ExploreReport) -> String {
     format!(
         "system `{}`: {} configs generated (depth {}), {} halting, stop: {}\n\
-         {} expansions, {} steps in {} batches, Σψ = {}, elapsed {:?}\n",
+         {} expansions, {} steps in {} batches ({} spiking rows), Σψ = {}, elapsed {:?}\n",
         sys.name,
         report.visited.len(),
         report.depth_reached,
@@ -84,6 +84,7 @@ pub fn render_summary(sys: &SnpSystem, report: &ExploreReport) -> String {
         report.stats.expanded,
         report.stats.steps,
         report.stats.batches,
+        report.stats.spike_repr,
         report.stats.psi_total,
         report.stats.elapsed,
     )

@@ -5,7 +5,8 @@
 
 pub use crate::baseline::DirectSimulator;
 pub use crate::compute::{
-    BackendFactory, BackendPool, HostBackend, HostBackendFactory, StepBackend, StepBatch,
+    BackendFactory, BackendPool, HostBackend, HostBackendFactory, SpikeBuf, SpikeRepr,
+    SpikeRows, StepBackend, StepBatch,
 };
 pub use crate::coordinator::{Coordinator, CoordinatorConfig};
 pub use crate::engine::{

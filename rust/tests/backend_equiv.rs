@@ -3,7 +3,7 @@
 //! `make artifacts` (tests are skipped with a notice when absent, so
 //! `cargo test` stays green on a fresh checkout).
 
-use snapse::compute::{HostBackend, StepBackend, StepBatch};
+use snapse::compute::{BackendFactory, HostBackend, SpikeBuf, SpikeRows, StepBackend, StepBatch};
 use snapse::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use snapse::matrix::build_matrix;
 use snapse::runtime::{Manifest, PjRt};
@@ -36,16 +36,123 @@ fn non_binary_spiking_buffers_rejected_by_every_backend() {
     let configs = vec![2i64, 1, 1];
     let good = vec![1u8, 0, 1, 1, 0];
     assert!(host
-        .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: &good })
+        .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: SpikeRows::Dense(&good) })
         .is_ok());
     let bad = vec![1u8, 0, 2, 1, 0];
     let err = host
-        .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: &bad })
+        .step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: SpikeRows::Dense(&bad) })
         .unwrap_err();
     assert!(err.to_string().contains("spikes[2] = 2"), "{err}");
     // the batch validates independently of any backend too
-    let batch = StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: &bad };
+    let batch = StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: SpikeRows::Dense(&bad) };
     assert!(batch.validate().is_err());
+}
+
+/// Build per-neuron-valid random spiking rows for `sys` in both
+/// representations (dense bytes + CSR), plus the flat configs.
+fn random_valid_rows(
+    sys: &snapse::snp::SnpSystem,
+    b: usize,
+    rng: &mut Rng,
+) -> (Vec<i64>, Vec<u8>, SpikeBuf) {
+    let n = sys.num_neurons();
+    let r = sys.num_rules();
+    let configs: Vec<i64> = (0..b * n).map(|_| rng.range(0, 12) as i64).collect();
+    let mut dense = vec![0u8; b * r];
+    for row in 0..b {
+        for j in 0..n {
+            let rules = sys.rules_of(j);
+            if rules.is_empty() || !rng.chance(0.7) {
+                continue;
+            }
+            let pick = if rules.len() == 1 {
+                rules.start
+            } else {
+                rng.range(rules.start, rules.end - 1)
+            };
+            dense[row * r + pick] = 1;
+        }
+    }
+    let mut sparse = SpikeBuf::with_repr(true, r);
+    for row in 0..b {
+        sparse.push_byte_row(&dense[row * r..(row + 1) * r]);
+    }
+    (configs, dense, sparse)
+}
+
+#[test]
+fn sparse_and_dense_rows_agree_on_every_host_repr() {
+    // Randomized batches over systems spanning the density spectrum:
+    // SpikeRows::Dense and SpikeRows::Sparse must produce identical
+    // outputs on both host matrix representations (dense and CSR).
+    let systems = [
+        snapse::generators::paper_pi(),
+        snapse::generators::ring_with_branching(6, 2, 2),
+        snapse::generators::rule_heavy(6, 12, 2),
+    ];
+    let mut rng = Rng::new(0xCAB1E);
+    for sys in &systems {
+        let m = build_matrix(sys);
+        let n = sys.num_neurons();
+        let r = sys.num_rules();
+        for case in 0..15 {
+            let b = rng.range(1, 30);
+            let (configs, dense, sparse) = random_valid_rows(sys, b, &mut rng);
+            let batch =
+                StepBatch { b, n, r, configs: &configs, spikes: SpikeRows::Dense(&dense) };
+            let sparse_batch =
+                StepBatch { b, n, r, configs: &configs, spikes: sparse.as_rows() };
+            let dd = HostBackend::dense(&m).step_batch(&batch).unwrap();
+            let ds = HostBackend::dense(&m).step_batch(&sparse_batch).unwrap();
+            let cd = HostBackend::sparse(&m).step_batch(&batch).unwrap();
+            let cs = HostBackend::sparse(&m).step_batch(&sparse_batch).unwrap();
+            assert_eq!(dd, ds, "{} case {case}: dense matrix", sys.name);
+            assert_eq!(dd, cd, "{} case {case}: csr matrix, dense rows", sys.name);
+            assert_eq!(dd, cs, "{} case {case}: csr matrix, sparse rows", sys.name);
+        }
+    }
+}
+
+#[test]
+fn malformed_sparse_rows_rejected_everywhere() {
+    let sys = snapse::generators::paper_pi();
+    let m = build_matrix(&sys);
+    let configs = vec![2i64, 1, 1];
+    let cases: &[(&str, &[u32], &[u32])] = &[
+        ("out-of-range index", &[0, 1], &[9]),
+        ("unsorted indices", &[0, 2], &[3, 0]),
+        ("duplicate indices", &[0, 2], &[2, 2]),
+        ("indptr too short", &[0], &[]),
+        ("indptr/indices span mismatch", &[0, 3], &[0, 2]),
+        ("decreasing indptr", &[2, 0], &[0, 1]),
+    ];
+    for &(what, indptr, indices) in cases {
+        let batch = StepBatch {
+            b: 1,
+            n: 3,
+            r: 5,
+            configs: &configs,
+            spikes: SpikeRows::Sparse { indptr, indices },
+        };
+        assert!(batch.validate().is_err(), "{what}: validate must reject");
+        for mut be in [HostBackend::dense(&m), HostBackend::sparse(&m)] {
+            assert!(be.step_batch(&batch).is_err(), "{what}: {} backend must reject", be.repr_name());
+        }
+    }
+    // two fired rules in one neuron: structurally valid, caught by the
+    // semantic per-neuron guard (rules 0 and 1 both live in neuron 0)
+    let rule_neuron: Vec<usize> =
+        (0..sys.num_neurons()).flat_map(|j| sys.rules_of(j).map(move |_| j)).collect();
+    let batch = StepBatch {
+        b: 1,
+        n: 3,
+        r: 5,
+        configs: &configs,
+        spikes: SpikeRows::Sparse { indptr: &[0, 2], indices: &[0, 1] },
+    };
+    assert!(batch.validate().is_ok());
+    let err = batch.validate_one_rule_per_neuron(&rule_neuron).unwrap_err();
+    assert!(err.to_string().contains("neuron 0"), "{err}");
 }
 
 #[test]
@@ -71,10 +178,51 @@ fn xla_matches_host_on_paper_pi_batches() {
                 }
             }
         }
-        let batch = StepBatch { b, n: 3, r: 5, configs: &configs, spikes: &spikes };
+        let batch =
+            StepBatch { b, n: 3, r: 5, configs: &configs, spikes: SpikeRows::Dense(&spikes) };
         let h = host.step_batch(&batch).unwrap();
         let x = xla.step_batch(&batch).unwrap();
         assert_eq!(h, x, "case {case} (b={b})");
+        // the CSR form of the same rows must marshal identically
+        let mut sparse = SpikeBuf::with_repr(true, 5);
+        for row in 0..b {
+            sparse.push_byte_row(&spikes[row * 5..(row + 1) * 5]);
+        }
+        let sparse_batch =
+            StepBatch { b, n: 3, r: 5, configs: &configs, spikes: sparse.as_rows() };
+        assert_eq!(h, xla.step_batch(&sparse_batch).unwrap(), "case {case} sparse rows");
+    }
+}
+
+#[test]
+fn xla_factory_shares_compiles_and_upload() {
+    let manifest = require_artifacts!();
+    let rt = PjRt::cpu().unwrap();
+    let sys = snapse::generators::paper_pi();
+    let m = build_matrix(&sys);
+    let stats_before = rt.stats();
+    let factory = snapse::compute::XlaBackendFactory::new(rt.clone(), m, manifest);
+    let mut first = factory.create().unwrap();
+    let after_first = factory.compiled_count();
+    let uploads_after_first = rt.stats().elements_in - stats_before.elements_in;
+    assert!(after_first >= 1, "first create compiles the artifact ladder");
+    // three more products: zero additional compiles, zero additional
+    // matrix uploads (the device-resident padded matrix is shared)
+    let mut others: Vec<_> = (0..3).map(|_| factory.create().unwrap()).collect();
+    assert_eq!(factory.compiled_count(), after_first, "compiles stay flat");
+    assert_eq!(
+        rt.stats().elements_in - stats_before.elements_in,
+        uploads_after_first,
+        "matrix uploaded exactly once"
+    );
+    // and the shared-state products still compute correctly
+    let configs = vec![2i64, 1, 1];
+    let spikes = vec![1u8, 0, 1, 1, 0];
+    let batch =
+        StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: SpikeRows::Dense(&spikes) };
+    let want = first.step_batch(&batch).unwrap();
+    for be in others.iter_mut() {
+        assert_eq!(be.step_batch(&batch).unwrap(), want);
     }
 }
 
@@ -93,7 +241,8 @@ fn xla_matches_host_on_padded_shapes() {
         let b = rng.range(1, 20);
         let configs: Vec<i64> = (0..b * 6).map(|_| rng.range(0, 5) as i64).collect();
         let spikes: Vec<u8> = (0..b * 6).map(|_| rng.chance(0.5) as u8).collect();
-        let batch = StepBatch { b, n: 6, r: 6, configs: &configs, spikes: &spikes };
+        let batch =
+            StepBatch { b, n: 6, r: 6, configs: &configs, spikes: SpikeRows::Dense(&spikes) };
         assert_eq!(host.step_batch(&batch).unwrap(), xla.step_batch(&batch).unwrap());
     }
 }
@@ -176,8 +325,13 @@ fn runtime_stats_track_traffic() {
         snapse::compute::xla::backend_from_artifacts(rt.clone(), &m, &manifest).unwrap();
     let configs = vec![2i64, 1, 1];
     let spikes = vec![1u8, 0, 1, 1, 0];
-    let _ =
-        xla.step_batch(&StepBatch { b: 1, n: 3, r: 5, configs: &configs, spikes: &spikes });
+    let _ = xla.step_batch(&StepBatch {
+        b: 1,
+        n: 3,
+        r: 5,
+        configs: &configs,
+        spikes: SpikeRows::Dense(&spikes),
+    });
     let stats = rt.stats();
     assert!(stats.executes >= 1);
     assert!(stats.elements_in > 0 && stats.elements_out > 0);

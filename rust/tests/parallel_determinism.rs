@@ -93,6 +93,101 @@ fn paper_prefix_reproduced_at_every_worker_count() {
 }
 
 #[test]
+fn sparse_spiking_rows_identical_at_every_worker_count() {
+    use snapse::compute::SpikeRepr;
+    // The sparse CSR frontier path must reproduce the dense serial
+    // reference byte-for-byte at 1/2/4/8 workers — on a rule-heavy
+    // system where auto genuinely picks sparse, and on paper Π where
+    // sparse is forced against auto's choice.
+    let heavy = snapse::generators::rule_heavy(6, 12, 2);
+    assert!(
+        SpikeRepr::Auto.use_sparse(heavy.num_rules(), heavy.num_neurons()),
+        "rule_heavy:6:12 must sit in auto's sparse regime"
+    );
+    for sys in [heavy, snapse::generators::paper_pi()] {
+        for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+            let (dense_serial, dense_stop) =
+                names(&sys, opts(order).max_configs(400).spike_repr(SpikeRepr::Dense));
+            for w in WORKER_COUNTS {
+                let (got, stop) = names(
+                    &sys,
+                    opts(order).max_configs(400).workers(w).spike_repr(SpikeRepr::Sparse),
+                );
+                assert_eq!(
+                    got, dense_serial,
+                    "{} {order:?}: sparse workers={w} diverged from dense serial",
+                    sys.name
+                );
+                assert_eq!(stop, dense_stop, "{} {order:?} workers={w}", sys.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_identical_to_dense_serial_on_every_builtin_system() {
+    use snapse::compute::SpikeRepr;
+    // The acceptance bar: `--spike-repr sparse` output equals the dense
+    // serial reference on ALL builtin systems at 1/2/4/8 workers. The
+    // spec strings below are exactly the CLI's builtin grammar, resolved
+    // through the same `from_spec` path the CLI uses; infinite
+    // generators are bounded by the config cap (enforced per-row, so the
+    // truncated prefix is identical everywhere).
+    let builtins = [
+        "paper_pi",
+        "nat_gen",
+        "even_gen",
+        "ring:4:2",
+        "ring_branch:4:2:2",
+        "wide_ring:8:3:2",
+        "rule_heavy:6:12:2",
+        "counter:4:3",
+        "div:24:3",
+        "adder:3",
+        "random:7",
+    ];
+    for spec in builtins {
+        let sys = snapse::generators::from_spec(spec)
+            .expect("valid spec")
+            .expect("builtin resolves");
+        let (reference, ref_stop) = names(
+            &sys,
+            ExploreOptions::breadth_first().max_configs(200).spike_repr(SpikeRepr::Dense),
+        );
+        for w in WORKER_COUNTS {
+            let (got, stop) = names(
+                &sys,
+                ExploreOptions::breadth_first()
+                    .max_configs(200)
+                    .workers(w)
+                    .spike_repr(SpikeRepr::Sparse),
+            );
+            assert_eq!(got, reference, "{spec}: sparse workers={w} diverged");
+            assert_eq!(stop, ref_stop, "{spec}: sparse workers={w} changed stop");
+        }
+    }
+}
+
+#[test]
+fn auto_repr_matches_forced_reprs_on_rule_heavy() {
+    use snapse::compute::SpikeRepr;
+    let sys = snapse::generators::rule_heavy(6, 12, 2);
+    let (want, _) = names(&sys, ExploreOptions::breadth_first().max_configs(300));
+    for repr in [SpikeRepr::Dense, SpikeRepr::Sparse] {
+        for w in [1usize, 4] {
+            let (got, _) = names(
+                &sys,
+                ExploreOptions::breadth_first().max_configs(300).workers(w).spike_repr(repr),
+            );
+            assert_eq!(got, want, "{repr:?} workers={w}");
+        }
+    }
+    // stats report which representation actually ran
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(100)).run();
+    assert_eq!(rep.stats.spike_repr, "sparse", "auto resolves sparse on rule_heavy");
+}
+
+#[test]
 fn halting_configs_stable_on_uncapped_runs() {
     let sys = snapse::generators::divisibility_checker(30, 5);
     let base = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
