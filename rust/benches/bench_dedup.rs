@@ -1,6 +1,7 @@
-//! Visited-store (allGenCk) throughput ablation: the VisitedStore (std
-//! SipHash after measurement — see dedup.rs), an FxHash set, and the
-//! sharded concurrent store.
+//! Visited-store (allGenCk) throughput ablation: the arena-backed
+//! VisitedStore (interning ConfigStore — see engine/store.rs), an FxHash
+//! set + order Vec (the pre-arena layout), and the sharded concurrent
+//! store.
 
 mod harness;
 
@@ -20,7 +21,7 @@ fn main() {
     for width in [3usize, 16, 64] {
         let items = configs(20_000, width, 42);
         rows.push(harness::bench(
-            &format!("VisitedStore(std)   width={width}"),
+            &format!("VisitedStore(arena) width={width}"),
             warmup,
             budget,
             || {

@@ -1,0 +1,174 @@
+//! E11 — delta-form stepping + interned-store hot-path throughput.
+//!
+//! Measures complete explorations across the stepping-mode × parallelism
+//! grid: {batch, delta} × {serial, 4 workers}, reporting **steps/sec**
+//! (spiking rows evaluated) and **configs/sec** (distinct configurations
+//! admitted to `allGenCk`). Workloads:
+//!
+//! - `wide_ring:8:3:2` — wide BFS frontiers with heavy spiking-vector
+//!   repetition (the delta memo's best case: many rows share a fired set).
+//! - `rule_heavy:8:16:2` — rule-dense rows where the delta path composes
+//!   with the CSR spiking pipeline of PR 3.
+//!
+//! Before any timing, each workload asserts the delta × 4-worker output
+//! is byte-identical to the batch serial reference — a grid cell that
+//! changed `allGenCk` would make every number below it meaningless.
+//!
+//! Results land in `BENCH_hotpath.json` (the acceptance record for the
+//! delta-stepping PR) in addition to the stdout table.
+//!
+//! ```bash
+//! cargo bench --bench bench_hotpath            # full (10k configs)
+//! cargo bench --bench bench_hotpath -- --quick # CI-sized
+//! ```
+
+// only `human_ns` is used here; the shared harness carries more
+#[allow(dead_code)]
+mod harness;
+
+use std::time::Instant;
+
+use snapse::compute::StepMode;
+use snapse::engine::{ExploreOptions, Explorer};
+use snapse::snp::SnpSystem;
+use snapse::util::JsonValue;
+
+/// Best (minimum) wall-clock of `runs` explorations; returns
+/// `(seconds, visited, steps, resolved_mode)`.
+fn measure(
+    sys: &SnpSystem,
+    budget: usize,
+    mode: StepMode,
+    workers: usize,
+    runs: u32,
+) -> (f64, usize, u64, &'static str) {
+    let mut best = f64::INFINITY;
+    let mut visited = 0usize;
+    let mut steps = 0u64;
+    let mut used = "";
+    for _ in 0..runs {
+        let t = Instant::now();
+        let rep = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first().max_configs(budget).workers(workers).step_mode(mode),
+        )
+        .run();
+        let secs = t.elapsed().as_secs_f64();
+        std::hint::black_box(rep.visited.len());
+        best = best.min(secs);
+        visited = rep.visited.len();
+        steps = rep.stats.steps;
+        used = rep.stats.step_mode;
+    }
+    (best, visited, steps, used)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (budget, runs) = if quick { (1_000usize, 1u32) } else { (10_000usize, 3u32) };
+
+    let workloads: Vec<(SnpSystem, &str)> = vec![
+        (snapse::generators::wide_ring(8, 3, 2), "wide frontiers, repeated spiking vectors"),
+        (snapse::generators::rule_heavy(8, 16, 2), "R=248 rule-dense rows (CSR regime)"),
+    ];
+
+    println!(
+        "\n== delta-form stepping hot path (budget {budget} configs, best of {runs}) ==\n"
+    );
+    println!(
+        "{:<18} {:>8} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "system", "configs", "steps", "batch-1w", "delta-1w", "batch-4w", "delta-4w"
+    );
+
+    let mut json_rows: Vec<JsonValue> = Vec::new();
+    let mut best_delta_serial_speedup = 0.0f64;
+    for (sys, note) in &workloads {
+        // correctness first: the delta × parallel cell must be
+        // byte-identical to the batch serial reference before timing
+        let reference = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first().max_configs(budget).step_mode(StepMode::Batch),
+        )
+        .run();
+        let check = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first()
+                .max_configs(budget)
+                .workers(4)
+                .step_mode(StepMode::Delta),
+        )
+        .run();
+        assert_eq!(
+            check.visited.in_order(),
+            reference.visited.in_order(),
+            "{}: delta output diverged from the batch serial reference",
+            sys.name
+        );
+
+        let grid = [
+            ("batch_serial", StepMode::Batch, 1usize),
+            ("delta_serial", StepMode::Delta, 1),
+            ("batch_workers4", StepMode::Batch, 4),
+            ("delta_workers4", StepMode::Delta, 4),
+        ];
+        let mut cells = Vec::new();
+        for (label, mode, workers) in grid {
+            let (secs, visited, steps, used) = measure(sys, budget, mode, workers, runs);
+            cells.push((label, workers, secs, visited, steps, used));
+        }
+        let batch_serial = cells[0].2;
+        let (auto_secs, _, _, auto_used) = measure(sys, budget, StepMode::Auto, 1, runs);
+        println!(
+            "{:<18} {:>8} {:>10} {:>12} {:>11.2}x {:>11.2}x {:>11.2}x   auto→{}",
+            sys.name,
+            cells[0].3,
+            cells[0].4,
+            harness::human_ns(batch_serial * 1e9),
+            batch_serial / cells[1].2,
+            batch_serial / cells[2].2,
+            batch_serial / cells[3].2,
+            auto_used,
+        );
+        best_delta_serial_speedup = best_delta_serial_speedup.max(batch_serial / cells[1].2);
+        json_rows.push(JsonValue::obj([
+            ("system", JsonValue::str(sys.name.clone())),
+            ("note", JsonValue::str(note.to_string())),
+            ("configs", JsonValue::num(cells[0].3 as f64)),
+            ("steps", JsonValue::num(cells[0].4 as f64)),
+            ("auto_resolves_to", JsonValue::str(auto_used.to_string())),
+            ("auto_serial_s", JsonValue::num(auto_secs)),
+            (
+                "grid",
+                JsonValue::arr(cells.iter().map(|(label, workers, secs, visited, steps, used)| {
+                    JsonValue::obj([
+                        ("case", JsonValue::str(label.to_string())),
+                        ("workers", JsonValue::num(*workers as f64)),
+                        ("mode", JsonValue::str(used.to_string())),
+                        ("seconds", JsonValue::num(*secs)),
+                        ("steps_per_sec", JsonValue::num(*steps as f64 / *secs)),
+                        ("configs_per_sec", JsonValue::num(*visited as f64 / *secs)),
+                        ("speedup_vs_batch_serial", JsonValue::num(batch_serial / *secs)),
+                    ])
+                })),
+            ),
+        ]));
+    }
+
+    let doc = JsonValue::obj([
+        ("bench", JsonValue::str("bench_hotpath".to_string())),
+        ("budget_configs", JsonValue::num(budget as f64)),
+        ("runs_per_point", JsonValue::num(runs as f64)),
+        ("quick", JsonValue::num(quick as u8 as f64)),
+        (
+            "best_delta_serial_speedup",
+            JsonValue::num(best_delta_serial_speedup),
+        ),
+        ("workloads", JsonValue::arr(json_rows)),
+    ]);
+    let out = doc.to_string_pretty();
+    match std::fs::write("BENCH_hotpath.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_hotpath.json: {e}"),
+    }
+    println!("best delta-vs-batch serial speedup: {best_delta_serial_speedup:.2}x");
+}

@@ -165,14 +165,14 @@ mod tests {
                 opts = opts.max_configs(400);
             }
             let rep = Explorer::new(&sys, opts).run();
+            let engine_order = rep.visited.in_order();
             if complete {
                 let a: BTreeSet<&ConfigVector> = direct.iter().collect();
-                let b: BTreeSet<&ConfigVector> = rep.visited.in_order().iter().collect();
+                let b: BTreeSet<&ConfigVector> = engine_order.iter().collect();
                 assert_eq!(a, b, "seed {seed}: reachable sets differ");
             } else {
                 // bounded runs: BFS order must agree exactly
-                for (i, (x, y)) in
-                    direct.iter().zip(rep.visited.in_order()).enumerate().take(200)
+                for (i, (x, y)) in direct.iter().zip(engine_order.iter()).enumerate().take(200)
                 {
                     assert_eq!(x, y, "seed {seed}: BFS order diverges at {i}");
                 }

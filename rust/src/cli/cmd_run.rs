@@ -17,12 +17,19 @@ pub fn run(args: &Args) -> Result<()> {
         None => crate::compute::SpikeRepr::Auto,
         Some(v) => crate::compute::SpikeRepr::parse(v)?,
     };
+    // `--step-mode {auto,batch,delta}`: stepping-mode ablation override,
+    // mirroring --spike-repr; output is byte-identical either way.
+    let step_mode = match args.opt("step-mode") {
+        None => crate::compute::StepMode::Auto,
+        Some(v) => crate::compute::StepMode::parse(v)?,
+    };
 
     // Explorer path (reference semantics, tree recording). `--workers N`
     // engages the pipelined parallel engine; `--single-thread` or tree
     // recording pin the serial reference path.
     if args.flag("single-thread") || args.flag("paper-log") || args.opt("tree").is_some() {
-        let mut opts = ExploreOptions::breadth_first().spike_repr(spike_repr);
+        let mut opts =
+            ExploreOptions::breadth_first().spike_repr(spike_repr).step_mode(step_mode);
         if let Some(d) = depth {
             opts = opts.max_depth(d);
         }
@@ -74,6 +81,7 @@ pub fn run(args: &Args) -> Result<()> {
         backend,
         batch_target: args.opt_num::<usize>("batch")?.unwrap_or(256),
         spike_repr,
+        step_mode,
     };
     let mut coord = Coordinator::new(&sys, cfg);
     let report = coord.run()?;

@@ -5,6 +5,7 @@
 //!                     [--artifacts DIR] [--workers W] [--paper-log]
 //!                     [--tree FILE.dot] [--json]
 //!                     [--spike-repr auto|dense|sparse]
+//!                     [--step-mode auto|batch|delta]
 //! snapse walk <system> [--steps N] [--seed S]
 //! snapse generated <system> [--max N] [--workers W]
 //! snapse analyze <system> [--configs N] [--bound B] [--workers W] [--json]
@@ -152,6 +153,7 @@ fn help_text() -> String {
     s.push_str("      --depth D --configs N --workers W (0 = all cores) --backend host|xla\n");
     s.push_str("      --artifacts DIR --paper-log --tree FILE.dot --json --single-thread\n");
     s.push_str("      --spike-repr auto|dense|sparse (spiking-row representation ablation)\n");
+    s.push_str("      --step-mode auto|batch|delta (full successor rows vs S·M deltas)\n");
     s.push_str("  walk <system>       follow one random branch\n");
     s.push_str("      --steps N --seed S\n");
     s.push_str("  generated <system>  compute the generated number set\n");

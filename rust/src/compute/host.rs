@@ -3,10 +3,19 @@
 //! Chooses CSR row-accumulation for sparse matrices (each fired rule
 //! touches `1 + out_degree` columns) and dense row-sum otherwise. This is
 //! also the oracle the XLA backend is tested against.
+//!
+//! The native unit of work is the **delta** form of the paper's eq. (2):
+//! [`StepBackend::step_deltas_into`] fills a caller-owned buffer with the
+//! `S·M` rows only, memoizing one delta per *distinct* spiking vector
+//! within the batch (wide BFS frontiers repeat the same fired-rule sets
+//! constantly — those rows collapse to a `copy_within`).
+//! [`StepBackend::step_batch`] is a thin adapter on top: deltas plus the
+//! parent rows, so the two forms are identical by construction.
 
 use super::{SpikeRows, StepBackend, StepBatch};
 use crate::error::Result;
 use crate::matrix::{CsrMatrix, TransitionMatrix};
+use crate::util::FxHashMap;
 
 /// Density above which the dense path wins. Provenance: the host-dense
 /// vs host-csr crossover table of `rust/benches/bench_step.rs` (run
@@ -24,9 +33,19 @@ pub struct HostBackend {
     repr: Repr,
     rows: usize,
     cols: usize,
+    /// Within-batch delta memo: spiking-row hash → first row index with
+    /// that content. Cleared (capacity kept) per `step_deltas_into` call.
+    memo: FxHashMap<u64, u32>,
+    /// Scratch delta buffer backing the `step_batch` adapter; reused
+    /// across calls.
+    scratch: Vec<i64>,
 }
 
 impl HostBackend {
+    fn with_repr(repr: Repr, rows: usize, cols: usize) -> Self {
+        HostBackend { repr, rows, cols, memo: FxHashMap::default(), scratch: Vec::new() }
+    }
+
     /// Build from a matrix, choosing dense vs CSR by density.
     pub fn new(m: &TransitionMatrix) -> Self {
         let density = 1.0 - m.sparsity();
@@ -35,17 +54,17 @@ impl HostBackend {
         } else {
             Repr::Sparse(m.to_csr())
         };
-        HostBackend { repr, rows: m.rows(), cols: m.cols() }
+        HostBackend::with_repr(repr, m.rows(), m.cols())
     }
 
     /// Force the dense representation (benchmarks/ablations).
     pub fn dense(m: &TransitionMatrix) -> Self {
-        HostBackend { repr: Repr::Dense(m.clone()), rows: m.rows(), cols: m.cols() }
+        HostBackend::with_repr(Repr::Dense(m.clone()), m.rows(), m.cols())
     }
 
     /// Force the CSR representation (benchmarks/ablations).
     pub fn sparse(m: &TransitionMatrix) -> Self {
-        HostBackend { repr: Repr::Sparse(m.to_csr()), rows: m.rows(), cols: m.cols() }
+        HostBackend::with_repr(Repr::Sparse(m.to_csr()), m.rows(), m.cols())
     }
 
     /// Which representation is active ("dense" / "csr").
@@ -62,7 +81,15 @@ impl StepBackend for HostBackend {
         "host"
     }
 
-    fn step_batch(&mut self, batch: &StepBatch<'_>) -> Result<Vec<i64>> {
+    fn native_deltas(&self) -> bool {
+        true
+    }
+
+    /// Delta rows `out[b] = spikes[b] · M`, memoized per distinct spiking
+    /// vector within the batch. Both matrix representations iterate only
+    /// the fired rules of a row ([`SpikeRows::for_each_fired`]), so sparse
+    /// rows stay O(B · nnz) with no densification anywhere.
+    fn step_deltas_into(&mut self, batch: &StepBatch<'_>, out: &mut Vec<i64>) -> Result<()> {
         batch.validate()?;
         if batch.n != self.cols || batch.r != self.rows {
             return Err(crate::Error::shape(
@@ -70,54 +97,55 @@ impl StepBackend for HostBackend {
                 format!("batch r={} n={}", batch.r, batch.n),
             ));
         }
-        let mut out = batch.configs.to_vec();
-        // Four native paths: {dense, CSR} matrix × {dense, sparse} spiking
-        // rows. Sparse rows iterate only the fired indices — O(B · nnz)
-        // instead of the O(B · R) scan — with no densification anywhere.
-        match (&self.repr, batch.spikes) {
-            (Repr::Dense(m), SpikeRows::Dense(spikes)) => {
-                for b in 0..batch.b {
-                    let srow = &spikes[b * batch.r..(b + 1) * batch.r];
-                    let orow = &mut out[b * batch.n..(b + 1) * batch.n];
-                    for (r, &s) in srow.iter().enumerate() {
-                        if s != 0 {
-                            let mrow = m.row(r);
-                            for (o, &v) in orow.iter_mut().zip(mrow) {
-                                *o += v;
-                            }
-                        }
+        let n = batch.n;
+        out.clear();
+        out.resize(batch.b * n, 0);
+        self.memo.clear();
+        for b in 0..batch.b {
+            // one delta per distinct spiking vector: rows that fire the
+            // same rule set (ubiquitous on wide BFS frontiers) copy the
+            // first occurrence's delta instead of re-accumulating M rows
+            let h = batch.spikes.row_hash(b, batch.r);
+            match self.memo.entry(h) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    let first = *e.get() as usize;
+                    if batch.spikes.rows_equal(first, b, batch.r) {
+                        out.copy_within(first * n..(first + 1) * n, b * n);
+                        continue;
                     }
+                    // hash collision with different content (rare): fall
+                    // through and compute; the first occupant keeps the slot
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(b as u32);
                 }
             }
-            (Repr::Sparse(m), SpikeRows::Dense(spikes)) => {
-                for b in 0..batch.b {
-                    let srow = &spikes[b * batch.r..(b + 1) * batch.r];
-                    let orow = &mut out[b * batch.n..(b + 1) * batch.n];
-                    for (r, &s) in srow.iter().enumerate() {
-                        if s != 0 {
-                            m.accumulate_row(r, orow);
-                        }
+            let orow = &mut out[b * n..(b + 1) * n];
+            match &self.repr {
+                Repr::Dense(m) => batch.spikes.for_each_fired(b, batch.r, |r| {
+                    for (o, &v) in orow.iter_mut().zip(m.row(r)) {
+                        *o += v;
                     }
-                }
-            }
-            (Repr::Dense(m), rows @ SpikeRows::Sparse { .. }) => {
-                for b in 0..batch.b {
-                    let orow = &mut out[b * batch.n..(b + 1) * batch.n];
-                    rows.for_each_fired(b, batch.r, |r| {
-                        for (o, &v) in orow.iter_mut().zip(m.row(r)) {
-                            *o += v;
-                        }
-                    });
-                }
-            }
-            (Repr::Sparse(m), rows @ SpikeRows::Sparse { .. }) => {
-                for b in 0..batch.b {
-                    let orow = &mut out[b * batch.n..(b + 1) * batch.n];
-                    rows.for_each_fired(b, batch.r, |r| m.accumulate_row(r, orow));
+                }),
+                Repr::Sparse(m) => {
+                    batch.spikes.for_each_fired(b, batch.r, |r| m.accumulate_row(r, orow))
                 }
             }
         }
-        Ok(out)
+        Ok(())
+    }
+
+    /// Thin adapter over the native delta path: `configs + deltas`. Keeps
+    /// the byte-identical `step_batch` contract for callers that want
+    /// full successor rows (XLA equivalence tests, replay, custom
+    /// backends delegating here).
+    fn step_batch(&mut self, batch: &StepBatch<'_>) -> Result<Vec<i64>> {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let result = self.step_deltas_into(batch, &mut scratch);
+        let out = result
+            .map(|()| batch.configs.iter().zip(&scratch).map(|(c, d)| c + d).collect());
+        self.scratch = scratch;
+        out
     }
 }
 
@@ -185,6 +213,87 @@ mod tests {
             assert_eq!(dd, cd, "seed {seed} case {case} (csr matrix, dense rows)");
             assert_eq!(dd, ds, "seed {seed} case {case} (dense matrix, sparse rows)");
             assert_eq!(dd, cs, "seed {seed} case {case} (csr matrix, sparse rows)");
+        }
+    }
+
+    #[test]
+    fn deltas_plus_parents_equal_step_batch() {
+        let mut be = HostBackend::new(&m_pi());
+        assert!(be.native_deltas());
+        let cfg = [2i64, 1, 1, 5, 0, 3];
+        let spk = [1u8, 0, 1, 1, 0, 1, 0, 1, 1, 0];
+        let batch =
+            StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        let full = be.step_batch(&batch).unwrap();
+        let mut deltas = Vec::new();
+        be.step_deltas_into(&batch, &mut deltas).unwrap();
+        let applied: Vec<i64> = cfg.iter().zip(&deltas).map(|(c, d)| c + d).collect();
+        assert_eq!(applied, full);
+        // identical spiking rows share one delta (the memo path): both
+        // rows fire <10110>, so both delta rows must be equal
+        assert_eq!(&deltas[0..3], &deltas[3..6]);
+    }
+
+    #[test]
+    fn delta_buffer_is_cleared_and_reused() {
+        let mut be = HostBackend::new(&m_pi());
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let batch =
+            StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        let mut deltas = vec![7i64; 12]; // stale, oversized contents
+        be.step_deltas_into(&batch, &mut deltas).unwrap();
+        assert_eq!(deltas.len(), 3, "buffer trimmed to B × N");
+        let first = deltas.clone();
+        be.step_deltas_into(&batch, &mut deltas).unwrap();
+        assert_eq!(deltas, first, "same input, same deltas after reuse");
+    }
+
+    #[test]
+    fn memoized_deltas_match_unmemoized_on_random_batches() {
+        // batches stuffed with duplicate rows: memo hits must produce the
+        // exact bytes the per-row computation would
+        let seed = 0xD1CE;
+        let mut rng = Rng::new(seed);
+        for case in 0..20 {
+            let r = rng.range(1, 12);
+            let n = rng.range(1, 12);
+            let data: Vec<i64> = (0..r * n)
+                .map(|_| if rng.chance(0.6) { 0 } else { rng.range(0, 8) as i64 - 4 })
+                .collect();
+            let m = TransitionMatrix::from_row_major(r, n, data).unwrap();
+            // few distinct rows, many repeats
+            let distinct = rng.range(1, 4);
+            let pool: Vec<Vec<u8>> = (0..distinct)
+                .map(|_| (0..r).map(|_| rng.chance(0.4) as u8).collect())
+                .collect();
+            let b = rng.range(4, 24);
+            let mut spk = Vec::with_capacity(b * r);
+            for _ in 0..b {
+                spk.extend_from_slice(&pool[rng.range(0, distinct - 1)]);
+            }
+            let cfg: Vec<i64> = (0..b * n).map(|_| rng.range(0, 30) as i64).collect();
+            let batch = StepBatch { b, n, r, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+            // reference: delta of each row computed independently (b = 1
+            // batches cannot hit the memo)
+            let mut want = Vec::new();
+            for row in 0..b {
+                let one = StepBatch {
+                    b: 1,
+                    n,
+                    r,
+                    configs: &cfg[row * n..(row + 1) * n],
+                    spikes: SpikeRows::Dense(&spk[row * r..(row + 1) * r]),
+                };
+                let mut d = Vec::new();
+                HostBackend::dense(&m).step_deltas_into(&one, &mut d).unwrap();
+                want.extend(d);
+            }
+            for mut be in [HostBackend::dense(&m), HostBackend::sparse(&m)] {
+                let mut got = Vec::new();
+                be.step_deltas_into(&batch, &mut got).unwrap();
+                assert_eq!(got, want, "seed {seed} case {case} ({})", be.repr_name());
+            }
         }
     }
 

@@ -30,6 +30,73 @@ pub use xla::XlaBackend;
 
 use crate::error::Result;
 
+/// Requested stepping mode (`--step-mode`), mirroring
+/// [`SpikeRepr`]: a pure execution-strategy knob — `allGenCk` and every
+/// report are byte-identical in every mode at every worker count.
+///
+/// The paper's update rule `C_{k+1} = C_k + S_k · M` (eq. (2)) makes the
+/// successor the parent plus a *sparse delta* `S_k · M`. Batch mode
+/// materializes full successor rows per call; delta mode has the backend
+/// compute only the delta rows into a caller-owned reusable buffer
+/// ([`StepBackend::step_deltas_into`]) and the engine applies
+/// `parent + delta` itself — no per-call output allocation, and rows
+/// firing the same rule set share one memoized delta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepMode {
+    /// Delta stepping when the backend computes deltas natively
+    /// ([`StepBackend::native_deltas`], true for the host backend);
+    /// batch stepping otherwise (XLA/replay run one fused device
+    /// program — deriving deltas would *add* host work).
+    #[default]
+    Auto,
+    /// Always full `C + S·M` successor batches (the paper's layout).
+    Batch,
+    /// Always delta rows + host-side `parent + delta` apply.
+    Delta,
+}
+
+impl StepMode {
+    /// Parse a `--step-mode` value.
+    pub fn parse(s: &str) -> Result<StepMode> {
+        match s {
+            "auto" => Ok(StepMode::Auto),
+            "batch" => Ok(StepMode::Batch),
+            "delta" => Ok(StepMode::Delta),
+            other => Err(crate::Error::parse(
+                "step-mode",
+                0,
+                format!("expected auto|batch|delta, got `{other}`"),
+            )),
+        }
+    }
+
+    /// Resolve against a backend's capability
+    /// ([`StepBackend::native_deltas`] or
+    /// [`BackendPool::native_deltas`](crate::compute::BackendPool::native_deltas)).
+    pub fn use_delta(self, backend_native: bool) -> bool {
+        match self {
+            StepMode::Batch => false,
+            StepMode::Delta => true,
+            StepMode::Auto => backend_native,
+        }
+    }
+
+    /// Name of the concrete mode this resolves to.
+    pub fn resolved_name(self, backend_native: bool) -> &'static str {
+        step_mode_name(self.use_delta(backend_native))
+    }
+}
+
+/// The one bool→name mapping for a resolved stepping mode, shared by
+/// stats reporting across the serial/parallel/coordinator paths.
+pub const fn step_mode_name(use_delta: bool) -> &'static str {
+    if use_delta {
+        "delta"
+    } else {
+        "batch"
+    }
+}
+
 /// A batch of step inputs.
 ///
 /// `configs` is row-major `B × N` (i64 spike counts); `spikes` carries
@@ -119,6 +186,34 @@ pub trait StepBackend: Send {
     /// a `B × N` row-major buffer.
     fn step_batch(&mut self, batch: &StepBatch<'_>) -> Result<Vec<i64>>;
 
+    /// Compute only the **delta** rows `out[b] = spikes[b] · M` into a
+    /// caller-owned buffer (`out` is cleared and refilled with `B × N`
+    /// i64 rows, its allocation reused across calls). The engine applies
+    /// `parent + delta` itself with a checked non-negative add, so the
+    /// hot loop allocates nothing per call.
+    ///
+    /// The default adapter derives deltas from [`StepBackend::step_batch`]
+    /// (full rows minus parents) — correct for every backend, faster for
+    /// none; backends with a cheaper native delta path (the host backend
+    /// memoizes one delta per distinct spiking vector) override this and
+    /// report it via [`StepBackend::native_deltas`].
+    fn step_deltas_into(&mut self, batch: &StepBatch<'_>, out: &mut Vec<i64>) -> Result<()> {
+        let full = self.step_batch(batch)?;
+        out.clear();
+        out.reserve(full.len());
+        for (v, c) in full.iter().zip(batch.configs) {
+            out.push(v - c);
+        }
+        Ok(())
+    }
+
+    /// True when [`StepBackend::step_deltas_into`] is a native fast path
+    /// rather than the derive-from-`step_batch` adapter.
+    /// [`StepMode::Auto`] picks delta stepping exactly when this holds.
+    fn native_deltas(&self) -> bool {
+        false
+    }
+
     /// Preferred maximum batch size (the engine chunks larger frontiers).
     fn max_batch(&self) -> usize {
         usize::MAX
@@ -128,6 +223,46 @@ pub trait StepBackend: Send {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn step_mode_parsing_and_resolution() {
+        assert_eq!(StepMode::parse("auto").unwrap(), StepMode::Auto);
+        assert_eq!(StepMode::parse("batch").unwrap(), StepMode::Batch);
+        assert_eq!(StepMode::parse("delta").unwrap(), StepMode::Delta);
+        assert!(StepMode::parse("eager").is_err());
+        assert!(StepMode::Auto.use_delta(true));
+        assert!(!StepMode::Auto.use_delta(false));
+        assert!(StepMode::Delta.use_delta(false), "forced delta ignores capability");
+        assert!(!StepMode::Batch.use_delta(true));
+        assert_eq!(StepMode::Auto.resolved_name(true), "delta");
+        assert_eq!(StepMode::Auto.resolved_name(false), "batch");
+        assert_eq!(step_mode_name(true), "delta");
+    }
+
+    #[test]
+    fn default_delta_adapter_derives_from_step_batch() {
+        // a backend that only implements step_batch: the trait's default
+        // step_deltas_into must hand back exactly (full rows − parents)
+        struct BatchOnly;
+        impl StepBackend for BatchOnly {
+            fn name(&self) -> &str {
+                "batch-only"
+            }
+            fn step_batch(&mut self, batch: &StepBatch<'_>) -> Result<Vec<i64>> {
+                // fake semantics: successor = parent + 2 per neuron
+                Ok(batch.configs.iter().map(|&c| c + 2).collect())
+            }
+        }
+        let mut be = BatchOnly;
+        assert!(!be.native_deltas());
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let batch =
+            StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        let mut deltas = vec![99i64; 9]; // stale contents must be cleared
+        be.step_deltas_into(&batch, &mut deltas).unwrap();
+        assert_eq!(deltas, vec![2, 2, 2]);
+    }
 
     #[test]
     fn batch_validation() {

@@ -175,6 +175,7 @@ pub struct BackendPool {
     freed: Condvar,
     size: usize,
     max_batch: usize,
+    native_deltas: bool,
 }
 
 impl BackendPool {
@@ -196,7 +197,15 @@ impl BackendPool {
         assert!(!backends.is_empty(), "backend pool needs at least one instance");
         let size = backends.len();
         let max_batch = backends.iter().map(|b| b.max_batch()).min().unwrap_or(usize::MAX);
-        BackendPool { name, slots: Mutex::new(backends), freed: Condvar::new(), size, max_batch }
+        let native_deltas = backends.iter().all(|b| b.native_deltas());
+        BackendPool {
+            name,
+            slots: Mutex::new(backends),
+            freed: Condvar::new(),
+            size,
+            max_batch,
+            native_deltas,
+        }
     }
 
     /// Backend name for reports.
@@ -212,6 +221,15 @@ impl BackendPool {
     /// Smallest preferred batch size across instances.
     pub fn max_batch(&self) -> usize {
         self.max_batch
+    }
+
+    /// True when **every** pooled instance computes deltas natively
+    /// ([`StepBackend::native_deltas`]) — what
+    /// [`StepMode::Auto`](crate::compute::StepMode) resolves against on
+    /// the parallel paths (chunks land on arbitrary instances, so a
+    /// single adapter-only instance pins the pool to batch mode).
+    pub fn native_deltas(&self) -> bool {
+        self.native_deltas
     }
 
     /// Instances currently available (not checked out).
@@ -310,6 +328,28 @@ mod tests {
         let f = HostBackendFactory::new(m);
         assert_eq!(f.label(), "host");
         assert_eq!(pool(3).name(), "host");
+    }
+
+    #[test]
+    fn pool_reports_delta_capability() {
+        // all-host pool: native deltas everywhere
+        assert!(pool(2).native_deltas());
+        // one adapter-only instance pins the whole pool to batch mode
+        struct BatchOnly;
+        impl StepBackend for BatchOnly {
+            fn name(&self) -> &str {
+                "batch-only"
+            }
+            fn step_batch(&mut self, b: &StepBatch<'_>) -> Result<Vec<i64>> {
+                Ok(b.configs.to_vec())
+            }
+        }
+        let m = build_matrix(&crate::generators::paper_pi());
+        let mixed = BackendPool::from_backends(
+            "mixed".into(),
+            vec![Box::new(crate::compute::HostBackend::new(&m)), Box::new(BatchOnly)],
+        );
+        assert!(!mixed.native_deltas());
     }
 
     #[test]

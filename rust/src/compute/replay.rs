@@ -6,6 +6,14 @@
 //! Used to (a) verify recorded trajectories against an independent
 //! compute path and (b) demonstrate the K-steps-per-dispatch execution
 //! model (the paper's per-step host↔device round trip, amortized K×).
+//!
+//! Replay is untouched by the engine's delta stepping mode: the scan
+//! threads the full configuration through the device across all K steps
+//! (delta form would need the host back in the loop every step, undoing
+//! the amortization), and the byte-identical `step_batch` contract it
+//! verifies against is preserved by construction — the host backend's
+//! `step_batch` is now a thin `parent + delta` adapter over its native
+//! delta path.
 
 use crate::engine::{ConfigVector, WalkRecord};
 use crate::error::{Error, Result};

@@ -145,6 +145,41 @@ impl<'a> SpikeRows<'a> {
         }
     }
 
+    /// Hash of row `row`'s content, for the host backend's within-batch
+    /// delta memo (rows firing the same rule set share one `S·M` delta).
+    /// Only comparable between rows of the *same* view — the dense form
+    /// hashes the byte row, the sparse form the fired-index list.
+    #[inline]
+    pub fn row_hash(&self, row: usize, r: usize) -> u64 {
+        use std::hash::Hasher;
+        let mut h = crate::util::FxHasher::default();
+        match *self {
+            SpikeRows::Dense(bytes) => {
+                for &b in &bytes[row * r..(row + 1) * r] {
+                    h.write_u8(b);
+                }
+            }
+            SpikeRows::Sparse { indptr, indices } => {
+                for &i in Self::sparse_row(indptr, indices, row) {
+                    h.write_u32(i);
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Exact content equality of rows `a` and `b` (the memo's collision
+    /// guard — a hash match alone never aliases two different rows).
+    #[inline]
+    pub fn rows_equal(&self, a: usize, b: usize, r: usize) -> bool {
+        match *self {
+            SpikeRows::Dense(bytes) => bytes[a * r..(a + 1) * r] == bytes[b * r..(b + 1) * r],
+            SpikeRows::Sparse { indptr, indices } => {
+                Self::sparse_row(indptr, indices, a) == Self::sparse_row(indptr, indices, b)
+            }
+        }
+    }
+
     /// Number of rows this view holds (`r` = rule count, needed to
     /// address dense rows).
     pub fn num_rows(&self, r: usize) -> usize {
@@ -487,6 +522,24 @@ mod tests {
         let mut fired = Vec::new();
         sparse2.as_rows().for_each_fired(2, 4, |i| fired.push(i));
         assert_eq!(fired, vec![1]);
+    }
+
+    #[test]
+    fn row_hash_and_equality_track_content() {
+        let rows: [&[u8]; 4] = [&[1, 0, 1, 1, 0], &[0, 1, 0, 0, 1], &[1, 0, 1, 1, 0], &[0; 5]];
+        let mut dense = SpikeBuf::with_repr(false, 5);
+        let mut sparse = SpikeBuf::with_repr(true, 5);
+        for row in rows {
+            dense.push_byte_row(row);
+            sparse.push_byte_row(row);
+        }
+        for view in [dense.as_rows(), sparse.as_rows()] {
+            assert!(view.rows_equal(0, 2, 5), "identical rows compare equal");
+            assert!(!view.rows_equal(0, 1, 5));
+            assert!(!view.rows_equal(2, 3, 5), "fired row ≠ silent row");
+            assert_eq!(view.row_hash(0, 5), view.row_hash(2, 5), "equal rows hash equal");
+            assert_ne!(view.row_hash(0, 5), view.row_hash(1, 5), "smoke: distinct rows differ");
+        }
     }
 
     #[test]

@@ -171,6 +171,12 @@ impl XlaBackend {
     }
 }
 
+// No `step_deltas_into` / `native_deltas` override: the AOT program is
+// lowered as the fused `C + S·M` batch (one device dispatch), so the
+// cheapest correct delta path IS the trait's derive-from-`step_batch`
+// adapter — subtracting parents device-side would mean re-lowering every
+// artifact, and doing it host-side is exactly what the adapter does.
+// `StepMode::Auto` therefore resolves to batch on XLA pools.
 impl StepBackend for XlaBackend {
     fn name(&self) -> &str {
         "xla"

@@ -11,9 +11,25 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::compute::{BackendPool, SpikeBuf, SpikeRows, StepBackend, StepBatch};
+use crate::compute::{BackendPool, SpikeBuf, SpikeRows, StepBackend, StepBatch, StepMode};
 use crate::engine::ConfigVector;
 use crate::error::Result;
+
+/// Apply one delta row to its parent row with the checked non-negative
+/// add (the semantics guarantee it; a violation indicates a backend bug).
+fn apply_delta(parent: &[i64], delta: &[i64]) -> Result<ConfigVector> {
+    let mut counts = Vec::with_capacity(parent.len());
+    for (p, d) in parent.iter().zip(delta) {
+        let v = p + d;
+        if v < 0 {
+            return Err(crate::Error::Coordinator(format!(
+                "negative spike count {v} in delta step result"
+            )));
+        }
+        counts.push(v as u64);
+    }
+    Ok(ConfigVector::new(counts))
+}
 
 /// Order-preserving batch accumulator.
 pub struct Batcher {
@@ -23,6 +39,7 @@ pub struct Batcher {
     configs: Vec<i64>,
     spikes: SpikeBuf,
     rows: usize,
+    mode: StepMode,
 }
 
 impl Batcher {
@@ -50,7 +67,17 @@ impl Batcher {
             configs: Vec::with_capacity(rows * n),
             spikes,
             rows: 0,
+            mode: StepMode::Auto,
         }
+    }
+
+    /// Pick the stepping mode (default: auto — delta on delta-native
+    /// backends). Dispatch results are byte-identical in every mode; the
+    /// delta path reuses one buffer per dispatch run instead of taking a
+    /// fresh `B × N` vector from the backend per chunk.
+    pub fn with_step_mode(mut self, mode: StepMode) -> Self {
+        self.mode = mode;
+        self
     }
 
     /// Append pre-built rows (from a worker's expansion); converts only
@@ -86,23 +113,36 @@ impl Batcher {
     /// rows evaluated, dispatch count)`.
     pub fn run(self, backend: &mut dyn StepBackend) -> Result<(Vec<ConfigVector>, u64, u64)> {
         let total = self.rows;
+        let use_delta = self.mode.use_delta(backend.native_deltas());
         let mut out = Vec::with_capacity(total);
         let mut batches = 0u64;
         let cap = self.target.min(backend.max_batch()).max(1);
+        let mut delta_buf: Vec<i64> = Vec::new();
         let mut row = 0usize;
         while row < total {
             let take = (total - row).min(cap);
+            let parents = &self.configs[row * self.n..(row + take) * self.n];
             let batch = StepBatch {
                 b: take,
                 n: self.n,
                 r: self.r,
-                configs: &self.configs[row * self.n..(row + take) * self.n],
+                configs: parents,
                 spikes: self.spikes.as_rows().slice(row, row + take, self.r),
             };
-            let result = backend.step_batch(&batch)?;
             batches += 1;
-            for b in 0..take {
-                out.push(ConfigVector::from_signed(&result[b * self.n..(b + 1) * self.n])?);
+            if use_delta {
+                backend.step_deltas_into(&batch, &mut delta_buf)?;
+                for b in 0..take {
+                    out.push(apply_delta(
+                        &parents[b * self.n..(b + 1) * self.n],
+                        &delta_buf[b * self.n..(b + 1) * self.n],
+                    )?);
+                }
+            } else {
+                let result = backend.step_batch(&batch)?;
+                for b in 0..take {
+                    out.push(ConfigVector::from_signed(&result[b * self.n..(b + 1) * self.n])?);
+                }
             }
             row += take;
         }
@@ -129,6 +169,7 @@ impl Batcher {
             let mut backend = pool.acquire();
             return self.run(&mut *backend);
         }
+        let use_delta = self.mode.use_delta(pool.native_deltas());
         let mut init: Vec<Option<Result<Vec<ConfigVector>>>> = Vec::new();
         init.resize_with(chunks, || None);
         let slots = Mutex::new(init);
@@ -137,6 +178,8 @@ impl Batcher {
             for _ in 0..workers {
                 scope.spawn(|| {
                     let mut backend = pool.acquire();
+                    // per-worker reusable delta buffer (delta mode)
+                    let mut delta_buf: Vec<i64> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= chunks {
@@ -144,22 +187,36 @@ impl Batcher {
                         }
                         let row = i * cap;
                         let take = (total - row).min(cap);
+                        let parents = &self.configs[row * self.n..(row + take) * self.n];
                         let batch = StepBatch {
                             b: take,
                             n: self.n,
                             r: self.r,
-                            configs: &self.configs[row * self.n..(row + take) * self.n],
+                            configs: parents,
                             spikes: self.spikes.as_rows().slice(row, row + take, self.r),
                         };
-                        let res = backend.step_batch(&batch).and_then(|out| {
-                            let mut v = Vec::with_capacity(take);
-                            for b in 0..take {
-                                v.push(ConfigVector::from_signed(
-                                    &out[b * self.n..(b + 1) * self.n],
-                                )?);
-                            }
-                            Ok(v)
-                        });
+                        let res = if use_delta {
+                            backend.step_deltas_into(&batch, &mut delta_buf).and_then(|()| {
+                                let mut v = Vec::with_capacity(take);
+                                for b in 0..take {
+                                    v.push(apply_delta(
+                                        &parents[b * self.n..(b + 1) * self.n],
+                                        &delta_buf[b * self.n..(b + 1) * self.n],
+                                    )?);
+                                }
+                                Ok(v)
+                            })
+                        } else {
+                            backend.step_batch(&batch).and_then(|out| {
+                                let mut v = Vec::with_capacity(take);
+                                for b in 0..take {
+                                    v.push(ConfigVector::from_signed(
+                                        &out[b * self.n..(b + 1) * self.n],
+                                    )?);
+                                }
+                                Ok(v)
+                            })
+                        };
                         slots.lock().unwrap()[i] = Some(res);
                     }
                 });
@@ -257,6 +314,38 @@ mod tests {
         let mut be2 = HostBackend::new(&m);
         let rb = b.run(&mut be2).unwrap();
         assert_eq!(ra.0, rb.0);
+    }
+
+    #[test]
+    fn step_modes_agree_across_dispatch_paths() {
+        use crate::compute::{BackendPool, HostBackendFactory};
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let c0 = ConfigVector::from(vec![2, 1, 1]);
+        let fill = |batcher: &mut Batcher| {
+            for i in 0..19u32 {
+                let s: &[u8] = if i % 2 == 0 { &[1, 0, 1, 1, 0] } else { &[0, 1, 1, 1, 0] };
+                batcher.push(&c0, s);
+            }
+        };
+        let mut reference = Batcher::new(3, 5, 4).with_step_mode(StepMode::Batch);
+        fill(&mut reference);
+        let (want, _, _) = reference.run(&mut HostBackend::new(&m)).unwrap();
+        for mode in [StepMode::Auto, StepMode::Delta] {
+            // serial dispatch
+            let mut b = Batcher::new(3, 5, 4).with_step_mode(mode);
+            fill(&mut b);
+            let (got, steps, _) = b.run(&mut HostBackend::new(&m)).unwrap();
+            assert_eq!(steps, 19);
+            assert_eq!(got, want, "{mode:?} serial");
+            // pooled dispatch
+            let pool = BackendPool::build(&HostBackendFactory::new(m.clone()), 3).unwrap();
+            assert!(pool.native_deltas());
+            let mut b = Batcher::new(3, 5, 4).with_step_mode(mode);
+            fill(&mut b);
+            let (got, _, _) = b.run_pool(&pool, 3).unwrap();
+            assert_eq!(got, want, "{mode:?} pooled");
+        }
     }
 
     #[test]

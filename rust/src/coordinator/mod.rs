@@ -74,6 +74,9 @@ pub struct CoordinatorConfig {
     /// Spiking-row representation for expansion/dispatch (auto = pick by
     /// shape; output is identical either way).
     pub spike_repr: crate::compute::SpikeRepr,
+    /// Stepping mode for dispatch (auto = delta on delta-native pools;
+    /// output is identical either way).
+    pub step_mode: crate::compute::StepMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -85,6 +88,7 @@ impl Default for CoordinatorConfig {
             backend: BackendChoice::Host,
             batch_target: 256,
             spike_repr: crate::compute::SpikeRepr::Auto,
+            step_mode: crate::compute::StepMode::Auto,
         }
     }
 }
@@ -157,7 +161,8 @@ impl<'a> Coordinator<'a> {
             workers,
             self.cfg.batch_target,
         )
-        .with_spike_repr(self.cfg.spike_repr);
+        .with_spike_repr(self.cfg.spike_repr)
+        .with_step_mode(self.cfg.step_mode);
         let mut visited = VisitedStore::new();
         visited.insert(c0.clone());
         let mut level = vec![c0];
@@ -266,6 +271,26 @@ mod tests {
         let rep = coord.run().unwrap();
         assert_eq!(rep.stop, StopReason::MaxConfigs);
         assert!(rep.visited.len() >= 20);
+    }
+
+    #[test]
+    fn step_mode_does_not_change_coordinator_output() {
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let mut orders = Vec::new();
+        for mode in
+            [crate::compute::StepMode::Batch, crate::compute::StepMode::Delta, crate::compute::StepMode::Auto]
+        {
+            let mut coord = Coordinator::new(
+                &sys,
+                CoordinatorConfig { workers: 3, step_mode: mode, ..Default::default() },
+            );
+            let rep = coord.run().unwrap();
+            orders.push(
+                rep.visited.in_order().iter().map(|c| c.to_string()).collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(orders[0], orders[1]);
+        assert_eq!(orders[1], orders[2]);
     }
 
     #[test]

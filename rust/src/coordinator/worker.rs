@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use super::batcher::Batcher;
 use super::metrics::LevelMetrics;
-use crate::compute::{BackendPool, SpikeBuf, SpikeRepr};
+use crate::compute::{BackendPool, SpikeBuf, SpikeRepr, StepMode};
 use crate::engine::{applicable_rules_into, ApplicabilityMap, ConfigVector, SpikingEnumeration, VisitedStore};
 use crate::error::Result;
 use crate::matrix::TransitionMatrix;
@@ -38,6 +38,9 @@ pub struct LevelDriver<'a> {
     /// Concrete spiking-row representation (resolved from the requested
     /// [`SpikeRepr`] against the system's shape).
     use_sparse: bool,
+    /// Requested stepping mode, resolved per dispatch against the pool's
+    /// delta capability by the [`Batcher`].
+    step_mode: StepMode,
     /// Parents expanded per window (bounds peak row memory together with
     /// the per-config Ψ).
     window_parents: usize,
@@ -77,6 +80,7 @@ impl<'a> LevelDriver<'a> {
             workers: workers.max(1),
             batch_target: batch_target.max(1),
             use_sparse: SpikeRepr::Auto.use_sparse(sys.num_rules(), sys.num_neurons()),
+            step_mode: StepMode::Auto,
             window_parents: 4096,
         }
     }
@@ -90,6 +94,13 @@ impl<'a> LevelDriver<'a> {
     /// Pick the spiking-row representation (default: auto).
     pub fn with_spike_repr(mut self, repr: SpikeRepr) -> Self {
         self.use_sparse = repr.use_sparse(self.sys.num_rules(), self.sys.num_neurons());
+        self
+    }
+
+    /// Pick the stepping mode (default: auto — delta on delta-native
+    /// pools). Level results are byte-identical in every mode.
+    pub fn with_step_mode(mut self, mode: StepMode) -> Self {
+        self.step_mode = mode;
         self
     }
 
@@ -159,7 +170,8 @@ impl<'a> LevelDriver<'a> {
             let t1 = Instant::now();
             let total_rows: usize = expansions.iter().map(|e| e.rows).sum();
             let mut batcher =
-                Batcher::with_repr(n, r, self.batch_target, total_rows, self.use_sparse);
+                Batcher::with_repr(n, r, self.batch_target, total_rows, self.use_sparse)
+                    .with_step_mode(self.step_mode);
             let mut halts: Vec<(u32, ConfigVector)> = Vec::new();
             for e in &expansions {
                 out.psi_total += e.psi_total;
@@ -178,7 +190,10 @@ impl<'a> LevelDriver<'a> {
             halts.sort_by_key(|(i, _)| *i);
             halting.extend(halts.into_iter().map(|(_, c)| c));
             for child in results {
-                if visited.insert(child.clone()) {
+                // intern by slice: the admission check copies into the
+                // arena only when new, and the already-owned child moves
+                // into the next level without a clone
+                if visited.intern(child.as_slice()).1 {
                     out.next_level.push(child);
                 }
             }
@@ -198,7 +213,7 @@ impl<'a> LevelDriver<'a> {
         let mut map = ApplicabilityMap::default();
         for (i, config) in slice.iter().enumerate() {
             let idx = base + i as u32;
-            applicable_rules_into(self.sys, config, &mut map);
+            applicable_rules_into(self.sys, config.as_slice(), &mut map);
             if map.is_halting() {
                 e.halting.push((idx, config.clone()));
                 continue;
@@ -332,6 +347,28 @@ mod tests {
             LevelDriver::new(&sys, &m, 2, 4).with_spike_repr(SpikeRepr::Sparse).spike_repr_name(),
             "sparse"
         );
+    }
+
+    #[test]
+    fn step_mode_does_not_change_level_results() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let mut results = Vec::new();
+        for mode in [StepMode::Batch, StepMode::Delta, StepMode::Auto] {
+            let driver = LevelDriver::new(&sys, &m, 2, 4).with_step_mode(mode);
+            let backends = pool(&m, 2);
+            let mut visited = VisitedStore::new();
+            let c0 = ConfigVector::from(vec![2, 1, 1]);
+            visited.insert(c0.clone());
+            let mut halting = Vec::new();
+            let out = driver
+                .process_level(&[c0], &backends, &mut visited, &mut halting, None)
+                .unwrap();
+            results.push(out.next_level.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+        assert_eq!(results[0], vec!["2-1-2", "1-1-2"]);
     }
 
     #[test]

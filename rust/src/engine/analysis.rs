@@ -163,14 +163,15 @@ fn summarize(
     let mut max_branching = 0u128;
     let mut max_spikes = 0u64;
     let mut exceeded = false;
-    for c in report.visited.in_order() {
-        let map = super::applicability::applicable_rules(sys, c);
+    let mut map = super::applicability::ApplicabilityMap::default();
+    for c in report.visited.iter_counts() {
+        super::applicability::applicable_rules_into(sys, c, &mut map);
         if !map.is_halting() {
             max_branching = max_branching.max(map.psi());
         }
-        for j in 0..c.len() {
-            max_spikes = max_spikes.max(c.get(j));
-            exceeded |= c.get(j) > bound_hint;
+        for &k in c {
+            max_spikes = max_spikes.max(k);
+            exceeded |= k > bound_hint;
         }
     }
     let confluent = match report.halting_configs.split_first() {

@@ -56,18 +56,21 @@ impl ApplicabilityMap {
 /// Compute the applicability map of `config` under `sys`.
 pub fn applicable_rules(sys: &SnpSystem, config: &ConfigVector) -> ApplicabilityMap {
     let mut map = ApplicabilityMap::default();
-    applicable_rules_into(sys, config, &mut map);
+    applicable_rules_into(sys, config.as_slice(), &mut map);
     map
 }
 
-/// Recompute into an existing map, reusing its buffers (hot path).
-pub fn applicable_rules_into(sys: &SnpSystem, config: &ConfigVector, map: &mut ApplicabilityMap) {
-    debug_assert_eq!(config.len(), sys.num_neurons());
+/// Recompute into an existing map, reusing its buffers (hot path). Takes
+/// the raw count slice so the explorer can pass interned arena rows
+/// ([`VisitedStore::counts_of`](super::VisitedStore::counts_of)) without
+/// materializing a `ConfigVector`.
+pub fn applicable_rules_into(sys: &SnpSystem, counts: &[u64], map: &mut ApplicabilityMap) {
+    debug_assert_eq!(counts.len(), sys.num_neurons());
     map.ids.clear();
     map.off.clear();
     map.off.push(0);
     for (j, neuron) in sys.neurons.iter().enumerate() {
-        let k = config.get(j);
+        let k = counts[j];
         let base = sys.rules_of(j).start as u32;
         for (l, r) in neuron.rules.iter().enumerate() {
             if r.applicable(k) {
@@ -139,7 +142,7 @@ mod tests {
         let mut reused = ApplicabilityMap::default();
         for cfg in [[2u64, 1, 1], [2, 1, 2], [1, 0, 0], [0, 1, 9]] {
             let c = ConfigVector::from(cfg.to_vec());
-            applicable_rules_into(&sys, &c, &mut reused);
+            applicable_rules_into(&sys, c.as_slice(), &mut reused);
             assert_eq!(reused, applicable_rules(&sys, &c), "cfg {cfg:?}");
         }
     }

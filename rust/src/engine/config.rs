@@ -13,6 +13,23 @@ impl ConfigVector {
         ConfigVector(counts)
     }
 
+    /// Copy a borrowed count slice (e.g. an interned arena row from
+    /// [`VisitedStore::counts_of`](super::VisitedStore::counts_of)) into
+    /// an owned vector. The hot paths stay on ids/slices; this is the
+    /// boundary into report types that own their configurations.
+    pub fn from_slice(counts: &[u64]) -> Self {
+        ConfigVector(counts.to_vec())
+    }
+
+    /// Render a raw count slice in the paper's dashed notation — the
+    /// slice-level counterpart of `Display`, so report renderers can
+    /// stringify arena rows without building a `ConfigVector` first.
+    pub fn render_dashed(counts: &[u64]) -> String {
+        let mut s = String::with_capacity(counts.len() * 2);
+        write_dashed(counts, &mut s).expect("writing to a String cannot fail");
+        s
+    }
+
     /// Number of neurons.
     #[inline]
     pub fn len(&self) -> usize {
@@ -80,18 +97,24 @@ impl From<Vec<u64>> for ConfigVector {
     }
 }
 
+/// The one implementation of the paper's dashed notation (counts joined
+/// by `-`): backs [`ConfigVector`]'s `Display`,
+/// [`ConfigVector::render_dashed`] and the pre-sized `allGenCk` renderer
+/// in `engine::dedup` — a notation change lands everywhere at once.
+pub(crate) fn write_dashed(counts: &[u64], w: &mut impl fmt::Write) -> fmt::Result {
+    for (j, v) in counts.iter().enumerate() {
+        if j > 0 {
+            w.write_char('-')?;
+        }
+        write!(w, "{v}")?;
+    }
+    Ok(())
+}
+
 impl fmt::Display for ConfigVector {
     /// The paper's `allGenCk` format: counts joined by `-`, e.g. `2-1-1`.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let mut first = true;
-        for c in &self.0 {
-            if !first {
-                write!(f, "-")?;
-            }
-            write!(f, "{c}")?;
-            first = false;
-        }
-        Ok(())
+        write_dashed(&self.0, f)
     }
 }
 
@@ -110,6 +133,10 @@ mod tests {
         let c = ConfigVector::from(vec![2, 1, 1]);
         assert_eq!(c.to_string(), "2-1-1");
         assert_eq!(format!("{c:?}"), "C<2-1-1>");
+        assert_eq!(ConfigVector::from_slice(&[2, 1, 1]), c);
+        assert_eq!(ConfigVector::render_dashed(&[2, 1, 1]), "2-1-1");
+        assert_eq!(ConfigVector::render_dashed(&[10, 0, 123]), "10-0-123");
+        assert_eq!(ConfigVector::render_dashed(&[]), "");
     }
 
     #[test]

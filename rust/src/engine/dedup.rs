@@ -2,21 +2,25 @@
 //!
 //! Algorithm 1's stopping criterion 2 requires remembering every generated
 //! `C_k` and refusing to re-expand repeats. The paper keeps a Python list
-//! of dash-joined strings; we keep a hash set plus an insertion
-//! order so reports can print `allGenCk` exactly as the paper does.
+//! of dash-joined strings; earlier revisions here kept a `HashSet` *plus*
+//! an insertion-order `Vec` — two heap copies of every configuration.
+//! Both stores are now backed by the interning
+//! [`ConfigStore`](super::store::ConfigStore) arena: each visited
+//! configuration lives in the flat `Vec<u64>` arena exactly once, ids are
+//! dense `u32`s in insertion order (so the id sequence *is* `allGenCk`),
+//! and the engine's hot loops pass ids instead of cloned `Vec<u64>`s.
 
 use super::config::ConfigVector;
+use super::store::{hash_counts, ConfigStore};
 
-/// Insertion-ordered set of configurations.
+/// Insertion-ordered set of configurations, arena-backed.
 ///
-/// Hasher choice is measured, not assumed: `benches/bench_dedup.rs`
-/// compares FxHash, SipHash (std) and the sharded store on narrow and
-/// wide configuration keys — std's SipHash wins or ties on every width
-/// for this key shape (multi-word `Vec<u64>`), so the store uses it.
+/// The open-addressed id table hashes arena slices with the local Fx
+/// hasher; `benches/bench_dedup.rs` measures this store against the
+/// striped variant on narrow and wide configuration keys.
 #[derive(Debug, Default)]
 pub struct VisitedStore {
-    set: std::collections::HashSet<ConfigVector>,
-    order: Vec<ConfigVector>,
+    store: ConfigStore,
 }
 
 impl VisitedStore {
@@ -25,44 +29,103 @@ impl VisitedStore {
         VisitedStore::default()
     }
 
+    /// Empty store pre-sized for `configs` entries of `width` neurons.
+    pub fn with_capacity(width: usize, configs: usize) -> Self {
+        VisitedStore { store: ConfigStore::with_capacity(width, configs) }
+    }
+
     /// Insert; returns `true` if the configuration was new.
     pub fn insert(&mut self, c: ConfigVector) -> bool {
-        if self.set.insert(c.clone()) {
-            self.order.push(c);
-            true
-        } else {
-            false
-        }
+        self.store.intern(c.as_slice()).1
+    }
+
+    /// Intern a raw count slice; returns `(id, true)` when new. This is
+    /// the hot-path entry: the engine folds step results straight from
+    /// its batch buffers without building a `ConfigVector` first.
+    #[inline]
+    pub fn intern(&mut self, counts: &[u64]) -> (u32, bool) {
+        self.store.intern(counts)
     }
 
     /// Membership test.
     #[inline]
     pub fn contains(&self, c: &ConfigVector) -> bool {
-        self.set.contains(c)
+        self.store.contains(c.as_slice())
+    }
+
+    /// Membership test on a raw count slice.
+    #[inline]
+    pub fn contains_slice(&self, counts: &[u64]) -> bool {
+        self.store.contains(counts)
+    }
+
+    /// The count slice of an interned configuration (ids are handed out
+    /// by [`VisitedStore::intern`] in insertion order).
+    #[inline]
+    pub fn counts_of(&self, id: u32) -> &[u64] {
+        self.store.get(id)
     }
 
     /// Number of distinct configurations seen.
     #[inline]
     pub fn len(&self) -> usize {
-        self.order.len()
+        self.store.len()
     }
 
     /// True when nothing has been inserted.
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.order.is_empty()
+        self.store.is_empty()
     }
 
-    /// Insertion order — the paper's `allGenCk`.
-    #[inline]
-    pub fn in_order(&self) -> &[ConfigVector] {
-        &self.order
+    /// Iterate the raw count slices in insertion order (no allocation).
+    pub fn iter_counts(&self) -> impl Iterator<Item = &[u64]> + '_ {
+        self.store.iter()
     }
 
-    /// Render as the paper prints it: `['2-1-1', '2-1-2', …]`.
+    /// Insertion-order snapshot — the paper's `allGenCk` as owned
+    /// [`ConfigVector`]s. Allocates one vector per configuration; meant
+    /// for reports and tests, not the exploration hot path (which reads
+    /// [`VisitedStore::counts_of`] by id).
+    pub fn in_order(&self) -> Vec<ConfigVector> {
+        self.store.iter().map(ConfigVector::from_slice).collect()
+    }
+
+    /// Render as the paper prints it: `['2-1-1', '2-1-2', …]`, composed
+    /// into one exactly pre-sized `String` straight from the arena (no
+    /// per-config `String`s, no join).
     pub fn render_all_gen_ck(&self) -> String {
-        let items: Vec<String> = self.order.iter().map(|c| format!("'{c}'")).collect();
-        format!("[{}]", items.join(", "))
+        fn dec_len(mut v: u64) -> usize {
+            let mut d = 1;
+            while v >= 10 {
+                v /= 10;
+                d += 1;
+            }
+            d
+        }
+        // exact byte count: brackets + per config 2 quotes, (w-1) dashes,
+        // the digits, and ", " between entries
+        let mut cap = 2;
+        for (i, c) in self.store.iter().enumerate() {
+            if i > 0 {
+                cap += 2;
+            }
+            cap += 2 + c.len().saturating_sub(1);
+            cap += c.iter().map(|&v| dec_len(v)).sum::<usize>();
+        }
+        let mut s = String::with_capacity(cap);
+        s.push('[');
+        for (i, c) in self.store.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push('\'');
+            super::config::write_dashed(c, &mut s).expect("writing to a String cannot fail");
+            s.push('\'');
+        }
+        s.push(']');
+        debug_assert_eq!(s.len(), cap, "pre-size estimate must be exact");
+        s
     }
 }
 
@@ -73,7 +136,10 @@ impl VisitedStore {
 /// space is striped across `2^log2_shards` independently locked shards so
 /// evaluation workers can run **duplicate pre-filtering** (`contains`)
 /// concurrently with the fold thread's authoritative `insert`s — readers
-/// and the writer only collide when they hash to the same stripe.
+/// and the writer only collide when they hash to the same stripe. Each
+/// stripe is its own [`ConfigStore`] arena, so the pre-filter holds one
+/// flat copy per configuration instead of a `HashSet` of cloned
+/// `Vec<u64>` keys.
 ///
 /// Protocol (this is what keeps the output byte-identical to the serial
 /// explorer): workers may only *drop definite duplicates* — a config
@@ -83,7 +149,7 @@ impl VisitedStore {
 /// tracked outside this store by the fold's [`VisitedStore`].
 #[derive(Debug)]
 pub struct ShardedVisitedStore {
-    shards: Vec<std::sync::Mutex<crate::util::FxHashSet<ConfigVector>>>,
+    shards: Vec<std::sync::Mutex<ConfigStore>>,
     mask: usize,
 }
 
@@ -92,9 +158,7 @@ impl ShardedVisitedStore {
     pub fn new(log2_shards: u32) -> Self {
         let n = 1usize << log2_shards;
         ShardedVisitedStore {
-            shards: (0..n)
-                .map(|_| std::sync::Mutex::new(crate::util::FxHashSet::default()))
-                .collect(),
+            shards: (0..n).map(|_| std::sync::Mutex::new(ConfigStore::new())).collect(),
             mask: n - 1,
         }
     }
@@ -105,15 +169,13 @@ impl ShardedVisitedStore {
         ShardedVisitedStore::new(6)
     }
 
-    fn shard_of(&self, c: &ConfigVector) -> usize {
-        use std::hash::{BuildHasher, Hash, Hasher};
-        let mut h = crate::util::FxBuildHasher.build_hasher();
-        c.hash(&mut h);
-        // The inner FxHashSet buckets on the LOW bits of this same hash;
-        // selecting the stripe from bits 32.. keeps stripe choice and
-        // bucket choice uncorrelated (low-bit striping would cluster every
-        // stripe's keys into 1/shards of its table's buckets).
-        ((h.finish() >> 32) as usize) & self.mask
+    fn shard_of(&self, counts: &[u64]) -> usize {
+        // Each stripe's inner ConfigStore indexes its id table with the
+        // LOW bits of this same hash; selecting the stripe from bits 32..
+        // keeps stripe choice and table-slot choice uncorrelated (low-bit
+        // striping would cluster every stripe's keys into 1/shards of its
+        // table's slots).
+        ((hash_counts(counts) >> 32) as usize) & self.mask
     }
 
     /// Number of stripes.
@@ -123,20 +185,24 @@ impl ShardedVisitedStore {
 
     /// Insert; returns `true` when the configuration was new.
     pub fn insert(&self, c: &ConfigVector) -> bool {
-        let s = self.shard_of(c);
-        let mut guard = self.shards[s].lock().unwrap();
-        if guard.contains(c) {
-            false
-        } else {
-            guard.insert(c.clone());
-            true
-        }
+        self.insert_slice(c.as_slice())
+    }
+
+    /// Insert a raw count slice; returns `true` when new.
+    pub fn insert_slice(&self, counts: &[u64]) -> bool {
+        let s = self.shard_of(counts);
+        self.shards[s].lock().unwrap().intern(counts).1
     }
 
     /// Membership test (lock-striped; safe concurrently with `insert`).
     pub fn contains(&self, c: &ConfigVector) -> bool {
-        let s = self.shard_of(c);
-        self.shards[s].lock().unwrap().contains(c)
+        self.contains_slice(c.as_slice())
+    }
+
+    /// Membership test on a raw count slice.
+    pub fn contains_slice(&self, counts: &[u64]) -> bool {
+        let s = self.shard_of(counts);
+        self.shards[s].lock().unwrap().contains(counts)
     }
 
     /// Total entries across stripes.
@@ -242,12 +308,31 @@ mod tests {
     }
 
     #[test]
+    fn intern_hands_out_insertion_ordered_ids() {
+        let mut v = VisitedStore::new();
+        assert_eq!(v.intern(&[2, 1, 1]), (0, true));
+        assert_eq!(v.intern(&[2, 1, 2]), (1, true));
+        assert_eq!(v.intern(&[2, 1, 1]), (0, false));
+        assert_eq!(v.counts_of(0), &[2, 1, 1]);
+        assert_eq!(v.counts_of(1), &[2, 1, 2]);
+        assert!(v.contains_slice(&[2, 1, 2]));
+        assert!(!v.contains_slice(&[0, 0, 0]));
+        let flat: Vec<&[u64]> = v.iter_counts().collect();
+        assert_eq!(flat, vec![&[2u64, 1, 1][..], &[2, 1, 2]]);
+    }
+
+    #[test]
     fn renders_like_paper() {
         let mut v = VisitedStore::new();
         v.insert(c(&[2, 1, 1]));
         v.insert(c(&[2, 1, 2]));
         v.insert(c(&[1, 1, 2]));
         assert_eq!(v.render_all_gen_ck(), "['2-1-1', '2-1-2', '1-1-2']");
+        assert_eq!(VisitedStore::new().render_all_gen_ck(), "[]");
+        // multi-digit counts keep the pre-size exact (debug_assert inside)
+        let mut wide = VisitedStore::new();
+        wide.insert(c(&[10, 0, 123456, 9]));
+        assert_eq!(wide.render_all_gen_ck(), "['10-0-123456-9']");
     }
 
     #[test]
@@ -260,6 +345,9 @@ mod tests {
         assert!(s.contains(&c(&[2, 1, 1])));
         assert!(!s.contains(&c(&[1, 1, 2])));
         assert_eq!(s.len(), 1);
+        // slice API agrees with the ConfigVector one
+        assert!(!s.insert_slice(&[2, 1, 1]));
+        assert!(s.contains_slice(&[2, 1, 1]));
     }
 
     #[test]

@@ -74,6 +74,12 @@ pub struct ExploreOptions {
     /// `allGenCk` is byte-identical either way. Tree recording forces
     /// dense (the tree stores whole [`SpikingVector`]s).
     pub spike_repr: crate::compute::SpikeRepr,
+    /// Stepping mode: full successor batches, delta rows applied
+    /// host-side, or [`StepMode::Auto`](crate::compute::StepMode) (delta
+    /// iff the backend computes deltas natively). Like `spike_repr`,
+    /// purely an execution-strategy knob — output is byte-identical in
+    /// every mode.
+    pub step_mode: crate::compute::StepMode,
 }
 
 impl ExploreOptions {
@@ -88,6 +94,7 @@ impl ExploreOptions {
             batch_cap: None,
             workers: 1,
             spike_repr: crate::compute::SpikeRepr::Auto,
+            step_mode: crate::compute::StepMode::Auto,
         }
     }
 
@@ -137,6 +144,12 @@ impl ExploreOptions {
         self.spike_repr = repr;
         self
     }
+
+    /// Pick the stepping mode (`--step-mode`).
+    pub fn step_mode(mut self, mode: crate::compute::StepMode) -> Self {
+        self.step_mode = mode;
+        self
+    }
 }
 
 /// Counters accumulated during a run.
@@ -158,6 +171,8 @@ pub struct ExploreStats {
     pub workers: usize,
     /// Concrete spiking-row representation used (`"dense"`/`"sparse"`).
     pub spike_repr: &'static str,
+    /// Concrete stepping mode used (`"batch"`/`"delta"`).
+    pub step_mode: &'static str,
 }
 
 /// Result of an exploration.
@@ -201,7 +216,11 @@ impl ExploreReport {
             ("depth_reached", J::num(f64::from(self.depth_reached))),
             (
                 "all_gen_ck",
-                J::arr(self.visited.in_order().iter().map(|c| J::str(c.to_string()))),
+                J::arr(
+                    self.visited
+                        .iter_counts()
+                        .map(|c| J::str(ConfigVector::render_dashed(c))),
+                ),
             ),
             (
                 "halting",
@@ -212,9 +231,12 @@ impl ExploreReport {
     }
 }
 
-/// Work item: a configuration awaiting expansion.
+/// Work item: an interned configuration awaiting expansion. Carrying the
+/// 4-byte arena id instead of an owned `ConfigVector` keeps the frontier
+/// queue allocation-free — count data lives once, in the
+/// [`VisitedStore`] arena.
 struct Pending {
-    config: ConfigVector,
+    id: u32,
     depth: u32,
     node: usize, // tree node id (0 when tree off)
 }
@@ -367,6 +389,13 @@ impl<'a> Explorer<'a> {
     }
 }
 
+/// Pre-size hint for the visited arena: the run's configuration bound,
+/// clamped to a modest ceiling (the store grows past it fine). Shared by
+/// the serial and pipelined engines.
+pub(crate) fn visited_capacity_hint(max_configs: Option<usize>) -> usize {
+    max_configs.unwrap_or(4096).min(1 << 16)
+}
+
 /// The serial reference path: the paper's Algorithm 1, one thread, one
 /// backend. Every other execution mode is tested against this.
 fn run_serial(
@@ -382,24 +411,34 @@ fn run_serial(
     // Resolve the spiking-row representation once per run. Tree recording
     // keeps dense rows (it stores whole SpikingVectors anyway).
     let use_sparse = opts.spike_repr.use_sparse(r, n) && !opts.record_tree;
+    // Resolve the stepping mode once per run: delta when the backend
+    // computes `S·M` natively, full batches otherwise.
+    let use_delta = opts.step_mode.use_delta(backend.native_deltas());
 
-    let mut visited = VisitedStore::new();
+    // Pre-size the arena + id table toward the run's own bound (clamped —
+    // a huge --configs cap must not pre-commit memory the exploration may
+    // never touch); growth handles the tail.
+    let mut visited = VisitedStore::with_capacity(n, visited_capacity_hint(opts.max_configs));
     let mut tree = if opts.record_tree { Some(ComputationTree::new()) } else { None };
     let mut halting_configs = Vec::new();
     let mut stats = ExploreStats {
         workers: 1,
         spike_repr: crate::compute::spike_repr_name(use_sparse),
+        step_mode: crate::compute::step_mode_name(use_delta),
         ..ExploreStats::default()
     };
     let mut depth_reached = 0u32;
     let mut saw_zero = false;
 
-    visited.insert(c0.clone());
     let root_node = tree.as_mut().map(|t| t.set_root(c0.clone())).unwrap_or(0);
+    let (root_id, _) = visited.intern(c0.as_slice());
     let mut queue: std::collections::VecDeque<Pending> = std::collections::VecDeque::new();
-    queue.push_back(Pending { config: c0, depth: 0, node: root_node });
+    queue.push_back(Pending { id: root_id, depth: 0, node: root_node });
 
-    // Reusable batch buffers.
+    // Reusable batch buffers — the steady-state hot loop allocates
+    // nothing per child: parents are read from the visited arena by id,
+    // step output lands in `step_buf`, candidate children build in
+    // `child_buf`, and interning copies into the arena only when new.
     let mut cfg_buf: Vec<i64> = Vec::new();
     let mut spk_buf = crate::compute::SpikeBuf::with_repr(use_sparse, r);
     // (parent node, parent depth) per batch row.
@@ -409,6 +448,10 @@ fn run_serial(
     let record_tree = tree.is_some();
     // reusable applicability buffer (hot path, one per run)
     let mut map = ApplicabilityMap::default();
+    // reusable delta-row buffer (delta mode)
+    let mut step_buf: Vec<i64> = Vec::new();
+    // reusable candidate-child row
+    let mut child_buf: Vec<u64> = Vec::with_capacity(n);
 
     let mut stop = StopReason::Exhausted;
     let mut depth_bounded = false;
@@ -443,12 +486,13 @@ fn run_serial(
                     continue;
                 }
             }
-            applicable_rules_into(sys, &pending.config, &mut map);
+            let cfg = visited.counts_of(pending.id);
+            applicable_rules_into(sys, cfg, &mut map);
             stats.expanded += 1;
             if map.is_halting() {
                 stats.halting += 1;
-                saw_zero |= pending.config.is_zero();
-                halting_configs.push(pending.config.clone());
+                saw_zero |= cfg.iter().all(|&x| x == 0);
+                halting_configs.push(ConfigVector::from_slice(cfg));
                 continue;
             }
             stats.psi_total += map.psi();
@@ -457,7 +501,7 @@ fn run_serial(
             // chunk internally.
             if record_tree {
                 for s in SpikingEnumeration::new(&map, r) {
-                    cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
+                    cfg_buf.extend(cfg.iter().map(|&x| x as i64));
                     spk_buf.push_byte_row(&s.to_bytes());
                     meta.push((pending.node, pending.depth));
                     spk_meta.push(s);
@@ -467,7 +511,7 @@ fn run_serial(
                 // whichever representation the run resolved to
                 let mut e = SpikingEnumeration::new(&map, r);
                 while e.fill_next_into(&mut spk_buf) {
-                    cfg_buf.extend(pending.config.as_slice().iter().map(|&x| x as i64));
+                    cfg_buf.extend(cfg.iter().map(|&x| x as i64));
                     meta.push((pending.node, pending.depth));
                 }
             }
@@ -475,16 +519,28 @@ fn run_serial(
         if meta.is_empty() {
             continue;
         }
-        // Evaluate the batch.
+        // Evaluate the batch. Delta mode fills the reusable `step_buf`
+        // with `S·M` rows only; batch mode takes full successor rows
+        // (the backend allocates its return buffer — that allocation is
+        // exactly what `--step-mode delta` removes).
         let b = meta.len();
         let batch = StepBatch { b, n, r, configs: &cfg_buf, spikes: spk_buf.as_rows() };
-        let out = backend
-            .step_batch(&batch)
-            .expect("step backend failed (shape-checked input)");
+        let full_out: Option<Vec<i64>> = if use_delta {
+            backend
+                .step_deltas_into(&batch, &mut step_buf)
+                .expect("step backend failed (shape-checked input)");
+            None
+        } else {
+            Some(backend.step_batch(&batch).expect("step backend failed (shape-checked input)"))
+        };
+        let vals: &[i64] = full_out.as_deref().unwrap_or(&step_buf);
         stats.batches += 1;
         stats.steps += b as u64;
         // Fold results; the configuration budget is enforced here, per
-        // row, so the cap is exact rather than batch-granular.
+        // row, so the cap is exact rather than batch-granular. The child
+        // row builds in `child_buf` (checked non-negative `parent +
+        // delta` in delta mode) and interns straight from it — a heap
+        // copy happens only for configurations never seen before.
         for (row, (parent_node, parent_depth)) in meta.drain(..).enumerate() {
             if let Some(maxc) = opts.max_configs {
                 if visited.len() >= maxc {
@@ -492,20 +548,35 @@ fn run_serial(
                     break 'outer;
                 }
             }
-            let child = ConfigVector::from_signed(&out[row * n..(row + 1) * n])
-                .expect("semantics guarantee non-negative counts");
-            let depth = parent_depth + 1;
-            let is_new = visited.insert(child.clone());
-            if let Some(t) = tree.as_mut() {
-                t.add_edge(parent_node, spk_meta[row].clone(), child.clone());
+            child_buf.clear();
+            for j in 0..n {
+                let v = if use_delta {
+                    cfg_buf[row * n + j] + vals[row * n + j]
+                } else {
+                    vals[row * n + j]
+                };
+                assert!(v >= 0, "semantics guarantee non-negative counts (got {v})");
+                child_buf.push(v as u64);
             }
+            let depth = parent_depth + 1;
+            let (child_id, is_new) = visited.intern(&child_buf);
+            // tree mode owns its configurations: build the child once,
+            // clone into the edge, reuse for the node lookup
+            let node = match tree.as_mut() {
+                Some(t) => {
+                    let child = ConfigVector::from_slice(&child_buf);
+                    t.add_edge(parent_node, spk_meta[row].clone(), child.clone());
+                    if is_new {
+                        t.node_of(&child).unwrap_or(0)
+                    } else {
+                        0
+                    }
+                }
+                None => 0,
+            };
             if is_new {
                 depth_reached = depth_reached.max(depth);
-                let node = tree
-                    .as_ref()
-                    .and_then(|t| t.node_of(&child))
-                    .unwrap_or(0);
-                queue.push_back(Pending { config: child, depth, node });
+                queue.push_back(Pending { id: child_id, depth, node });
             }
         }
     }
@@ -729,6 +800,36 @@ mod tests {
         assert_eq!(rep4.visited.in_order(), reference.visited.in_order());
         assert_eq!(rep4.stats.workers, 4, "pool size decides parallelism");
         assert_eq!(pool4.available(), 4, "parallel path returns every instance");
+    }
+
+    #[test]
+    fn step_mode_never_changes_output() {
+        use crate::compute::StepMode;
+        let sys = crate::generators::paper_pi();
+        let reference = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(5).step_mode(StepMode::Batch),
+        )
+        .run();
+        for mode in [StepMode::Auto, StepMode::Delta] {
+            for w in [1usize, 4] {
+                let rep = Explorer::new(
+                    &sys,
+                    ExploreOptions::breadth_first().max_depth(5).workers(w).step_mode(mode),
+                )
+                .run();
+                assert_eq!(
+                    rep.visited.in_order(),
+                    reference.visited.in_order(),
+                    "{mode:?} workers={w}"
+                );
+                assert_eq!(rep.halting_configs, reference.halting_configs, "{mode:?} w={w}");
+            }
+        }
+        // stats report the concrete mode: auto resolves delta on host
+        assert_eq!(reference.stats.step_mode, "batch");
+        let auto = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3)).run();
+        assert_eq!(auto.stats.step_mode, "delta", "host backend is delta-native");
     }
 
     #[test]

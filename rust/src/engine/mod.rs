@@ -12,6 +12,7 @@ mod parallel;
 mod random_walk;
 mod spiking;
 mod stop;
+mod store;
 pub mod trace;
 pub mod tree;
 
@@ -24,5 +25,6 @@ pub use explorer::{ExploreOptions, Explorer, ExploreReport, SearchOrder};
 pub use random_walk::{RandomWalk, WalkRecord};
 pub use spiking::{SpikingEnumeration, SpikingVector};
 pub use stop::StopReason;
+pub use store::ConfigStore;
 pub use trace::{generated_set, generated_set_budgeted, generated_set_with_workers, SpikeTrace};
 pub use tree::ComputationTree;

@@ -7,11 +7,12 @@
 //! ```text
 //!  main thread                 worker 1..N (each owns a pooled backend)
 //!  ───────────                 ───────────────────────────────────────
-//!  pop frontier, enumerate S   ┌─ evaluate chunk (C + S·M)
-//!  rows into chunk buffers ──▶ │  convert rows, pre-filter duplicates
-//!  …                           └─ send (seq, fresh children) ──▶
+//!  pop frontier ids, read      ┌─ evaluate chunk (C + S·M, or the S·M
+//!  arena rows, enumerate S     │  deltas into a reusable buffer in
+//!  rows into chunk buffers ──▶ │  delta mode), pre-filter duplicates
+//!  …                           └─ send (seq, flat fresh rows) ──▶
 //!  fold results in seq order ◀─┘
-//!  (authoritative dedup, enqueue, budget)
+//!  (intern into the arena, enqueue ids, budget)
 //! ```
 //!
 //! **Determinism.** The output must reproduce the paper's `allGenCk`
@@ -70,18 +71,23 @@ struct WorkChunk {
     depths: Vec<u32>,
 }
 
-/// A chunk's surviving children, in row order. `error` carries a backend
-/// failure to the main thread, which panics there (matching the serial
-/// path) — a worker-side panic would strand its seq and hang the fold.
+/// A chunk's surviving children, in row order, as **flat count rows**
+/// (`depths.len() × N` u64s) — the channel ships two vectors per chunk
+/// instead of one heap `ConfigVector` per child. `error` carries a
+/// backend failure to the main thread, which panics there (matching the
+/// serial path) — a worker-side panic would strand its seq and hang the
+/// fold.
 struct ChunkResult {
     seq: u64,
-    fresh: Vec<(u32, ConfigVector)>,
+    counts: Vec<u64>,
+    depths: Vec<u32>,
     error: Option<String>,
 }
 
-/// Frontier entry (no tree bookkeeping on the parallel path).
+/// Frontier entry: a 4-byte id into the fold's [`VisitedStore`] arena
+/// (no tree bookkeeping on the parallel path).
 struct PendingP {
-    config: ConfigVector,
+    id: u32,
     depth: u32,
 }
 
@@ -147,6 +153,10 @@ pub(crate) fn run_pipelined_on(
     // does): chunk buffers, channel payloads and backend batches all
     // carry it; the fold sees only child configurations either way.
     let use_sparse = opts.spike_repr.use_sparse(r, n);
+    // One stepping mode per run, resolved against the whole pool (chunks
+    // land on arbitrary instances). Workers apply `parent + delta`
+    // themselves, so the fold sees identical flat count rows either way.
+    let use_delta = opts.step_mode.use_delta(pool.native_deltas());
     // BFS: batch boundaries are order-neutral → pipeline-tuned chunks.
     // DFS: rounds must match the serial batch structure → round cap from
     // the backend (as the serial path does), chunked for the pool.
@@ -163,13 +173,17 @@ pub(crate) fn run_pipelined_on(
     let max_inflight = (workers as u64).saturating_mul(3).max(2);
 
     let store = ShardedVisitedStore::with_default_shards();
-    let mut visited = VisitedStore::new();
-    visited.insert(c0.clone());
+    let mut visited = VisitedStore::with_capacity(
+        n,
+        super::explorer::visited_capacity_hint(opts.max_configs),
+    );
+    let (root_id, _) = visited.intern(c0.as_slice());
     store.insert(&c0);
 
     let mut stats = ExploreStats {
         workers,
         spike_repr: crate::compute::spike_repr_name(use_sparse),
+        step_mode: crate::compute::step_mode_name(use_delta),
         ..ExploreStats::default()
     };
     let mut halting_configs: Vec<ConfigVector> = Vec::new();
@@ -179,7 +193,7 @@ pub(crate) fn run_pipelined_on(
     let mut stop = StopReason::Exhausted;
 
     let mut queue: std::collections::VecDeque<PendingP> = std::collections::VecDeque::new();
-    queue.push_back(PendingP { config: c0, depth: 0 });
+    queue.push_back(PendingP { id: root_id, depth: 0 });
 
     // set on early stop so workers discard queued chunks instead of
     // evaluating results nobody will fold
@@ -196,6 +210,10 @@ pub(crate) fn run_pipelined_on(
             let store = &store;
             let cancel = &cancel;
             scope.spawn(move || {
+                // worker-reusable buffers: delta rows live here across
+                // chunks; the candidate child row never leaves this thread
+                let mut delta_buf: Vec<i64> = Vec::new();
+                let mut row_buf: Vec<u64> = Vec::with_capacity(n);
                 loop {
                     // hold the lock across recv: exactly one idle worker
                     // waits productively, the rest queue on the mutex
@@ -218,30 +236,29 @@ pub(crate) fn run_pipelined_on(
                         configs: &chunk.configs,
                         spikes: chunk.spikes.as_rows(),
                     };
-                    let result = match backend.step_batch(&batch) {
+                    let full_out: std::result::Result<Option<Vec<i64>>, String> = if use_delta {
+                        backend
+                            .step_deltas_into(&batch, &mut delta_buf)
+                            .map(|()| None)
+                            .map_err(|e| format!("step backend failed: {e}"))
+                    } else {
+                        backend
+                            .step_batch(&batch)
+                            .map(Some)
+                            .map_err(|e| format!("step backend failed: {e}"))
+                    };
+                    let result = match full_out {
                         Err(e) => ChunkResult {
                             seq: chunk.seq,
-                            fresh: Vec::new(),
-                            error: Some(format!("step backend failed: {e}")),
+                            counts: Vec::new(),
+                            depths: Vec::new(),
+                            error: Some(e),
                         },
-                        Ok(out) => {
-                            let mut fresh = Vec::with_capacity(chunk.rows);
-                            let mut error = None;
-                            for row in 0..chunk.rows {
-                                match ConfigVector::from_signed(&out[row * n..(row + 1) * n]) {
-                                    Err(e) => {
-                                        error = Some(format!("negative step result: {e}"));
-                                        break;
-                                    }
-                                    Ok(child) => {
-                                        // definite-duplicate pre-filter (rule 2)
-                                        if !store.contains(&child) {
-                                            fresh.push((chunk.depths[row], child));
-                                        }
-                                    }
-                                }
-                            }
-                            ChunkResult { seq: chunk.seq, fresh, error }
+                        Ok(full) => {
+                            let vals: &[i64] = full.as_deref().unwrap_or(&delta_buf);
+                            collect_fresh(
+                                vals, use_delta, &chunk, n, store, &mut row_buf,
+                            )
                         }
                     };
                     let failed = result.error.is_some();
@@ -257,7 +274,7 @@ pub(crate) fn run_pipelined_on(
 
         let mut next_seq: u64 = 0;
         let mut next_fold: u64 = 0;
-        let mut ready: std::collections::HashMap<u64, Vec<(u32, ConfigVector)>> =
+        let mut ready: std::collections::HashMap<u64, (Vec<u64>, Vec<u32>)> =
             std::collections::HashMap::new();
         let mut halting_by_seq: std::collections::HashMap<u64, Vec<ConfigVector>> =
             std::collections::HashMap::new();
@@ -269,23 +286,27 @@ pub(crate) fn run_pipelined_on(
                 if let Some(err) = res.error {
                     panic!("{err}"); // scope unwinds: channels drop, workers exit
                 }
-                ready.insert(res.seq, res.fresh);
+                ready.insert(res.seq, (res.counts, res.depths));
             }
-            while let Some(fresh) = ready.remove(&next_fold) {
+            while let Some((counts, depths)) = ready.remove(&next_fold) {
                 if let Some(h) = halting_by_seq.remove(&next_fold) {
                     halting_configs.extend(h);
                 }
-                for (depth, child) in fresh {
+                for (i, &depth) in depths.iter().enumerate() {
                     if let Some(maxc) = opts.max_configs {
                         if visited.len() >= maxc {
                             stop = StopReason::MaxConfigs;
                             break 'outer;
                         }
                     }
-                    if visited.insert(child.clone()) {
-                        store.insert(&child);
+                    // intern straight from the flat payload: one arena
+                    // copy when new, nothing when a late duplicate
+                    let slice = &counts[i * n..(i + 1) * n];
+                    let (id, is_new) = visited.intern(slice);
+                    if is_new {
+                        store.insert_slice(slice);
                         depth_reached = depth_reached.max(depth);
-                        queue.push_back(PendingP { config: child, depth });
+                        queue.push_back(PendingP { id, depth });
                     }
                 }
                 next_fold += 1;
@@ -327,21 +348,20 @@ pub(crate) fn run_pipelined_on(
                             continue;
                         }
                     }
-                    applicable_rules_into(sys, &pending.config, &mut map);
+                    let cfg = visited.counts_of(pending.id);
+                    applicable_rules_into(sys, cfg, &mut map);
                     stats.expanded += 1;
                     if map.is_halting() {
                         stats.halting += 1;
-                        saw_zero |= pending.config.is_zero();
-                        chunk.halting.push(pending.config);
+                        saw_zero |= cfg.iter().all(|&x| x == 0);
+                        chunk.halting.push(ConfigVector::from_slice(cfg));
                         continue;
                     }
                     stats.psi_total += map.psi();
                     let before = chunk.rows();
                     let mut e = SpikingEnumeration::new(&map, r);
                     while e.fill_next_into(&mut chunk.spikes) {
-                        chunk
-                            .configs
-                            .extend(pending.config.as_slice().iter().map(|&x| x as i64));
+                        chunk.configs.extend(cfg.iter().map(|&x| x as i64));
                         chunk.depths.push(pending.depth + 1);
                     }
                     round_rows += chunk.rows() - before;
@@ -376,7 +396,7 @@ pub(crate) fn run_pipelined_on(
                 if let Some(err) = res.error {
                     panic!("{err}");
                 }
-                ready.insert(res.seq, res.fresh);
+                ready.insert(res.seq, (res.counts, res.depths));
                 continue;
             }
             break; // frontier drained, nothing in flight: exhausted
@@ -397,13 +417,55 @@ pub(crate) fn run_pipelined_on(
     ExploreReport { visited, stop, depth_reached, halting_configs, tree: None, stats }
 }
 
+/// Convert one evaluated chunk into the flat fresh-children payload,
+/// pre-filtering definite duplicates through the striped store (rule 2).
+/// `vals` holds full successor rows (batch mode) or `S·M` delta rows
+/// added to the parent row (delta mode); `row_buf` is the worker's
+/// reusable candidate-child buffer.
+fn collect_fresh(
+    vals: &[i64],
+    use_delta: bool,
+    chunk: &WorkChunk,
+    n: usize,
+    store: &ShardedVisitedStore,
+    row_buf: &mut Vec<u64>,
+) -> ChunkResult {
+    let mut counts = Vec::new();
+    let mut depths = Vec::new();
+    for row in 0..chunk.rows {
+        row_buf.clear();
+        for j in 0..n {
+            let v = if use_delta {
+                chunk.configs[row * n + j] + vals[row * n + j]
+            } else {
+                vals[row * n + j]
+            };
+            if v < 0 {
+                return ChunkResult {
+                    seq: chunk.seq,
+                    counts: Vec::new(),
+                    depths: Vec::new(),
+                    error: Some(format!("negative step result: spike count {v}")),
+                };
+            }
+            row_buf.push(v as u64);
+        }
+        // definite-duplicate pre-filter (rule 2)
+        if !store.contains_slice(row_buf) {
+            counts.extend_from_slice(row_buf);
+            depths.push(chunk.depths[row]);
+        }
+    }
+    ChunkResult { seq: chunk.seq, counts, depths, error: None }
+}
+
 /// Assign the next seq to a finished chunk and hand it to the workers
 /// (or straight to the reorder buffer when it carries no rows).
 fn dispatch(
     chunk: ChunkBuf,
     next_seq: &mut u64,
     work_tx: &mpsc::Sender<WorkChunk>,
-    ready: &mut std::collections::HashMap<u64, Vec<(u32, ConfigVector)>>,
+    ready: &mut std::collections::HashMap<u64, (Vec<u64>, Vec<u32>)>,
     halting_by_seq: &mut std::collections::HashMap<u64, Vec<ConfigVector>>,
     stats: &mut ExploreStats,
 ) {
@@ -415,7 +477,7 @@ fn dispatch(
     let rows = chunk.depths.len();
     if rows == 0 {
         // halting-only chunk: nothing to evaluate, fold it directly
-        ready.insert(seq, Vec::new());
+        ready.insert(seq, (Vec::new(), Vec::new()));
         return;
     }
     stats.steps += rows as u64;
@@ -501,6 +563,32 @@ mod tests {
             assert_eq!(rep.stats.spike_repr, "sparse", "workers={w}");
         }
         assert_eq!(serial.stats.spike_repr, "dense", "auto resolves dense on Π");
+    }
+
+    #[test]
+    fn forced_step_modes_keep_output_identical() {
+        use crate::compute::StepMode;
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let reference =
+            Explorer::new(&sys, ExploreOptions::breadth_first().step_mode(StepMode::Batch))
+                .run();
+        for mode in [StepMode::Auto, StepMode::Delta] {
+            for w in [2usize, 4] {
+                let rep = Explorer::new(
+                    &sys,
+                    ExploreOptions::breadth_first().workers(w).step_mode(mode),
+                )
+                .run();
+                assert_eq!(
+                    rep.visited.in_order(),
+                    reference.visited.in_order(),
+                    "{mode:?} workers={w}"
+                );
+                assert_eq!(rep.halting_configs, reference.halting_configs);
+                // host pool is delta-native, so auto resolves delta
+                assert_eq!(rep.stats.step_mode, "delta", "{mode:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Interned configuration storage — the allocation-free side of dedup.
+//!
+//! Algorithm 1 touches every generated `C_k` at least twice: once to
+//! decide newness (`allGenCk` membership) and once more every time the
+//! configuration is expanded, reported, or shipped between pipeline
+//! stages. Before this store existed each of those touch points owned a
+//! heap `Vec<u64>` clone; [`ConfigStore`] keeps exactly one copy of each
+//! distinct configuration in a flat bump arena and hands out dense `u32`
+//! ids instead. Ids are assigned in intern order, so `0..len` *is* the
+//! paper's `allGenCk` insertion order — no separate order list.
+//!
+//! Layout:
+//!
+//! - `counts`: one flat `Vec<u64>`; configuration `id` occupies
+//!   `counts[id·N .. (id+1)·N]` (`N` = neuron count, fixed per store).
+//! - `table`: open-addressed (linear-probe) id table, power-of-two sized,
+//!   hashing the arena slices with the local Fx hasher. No keys are
+//!   stored in the table — a slot holds only the id, and collisions
+//!   re-compare against the arena. Resize rehashes ids, never moves
+//!   configuration data.
+//!
+//! std-only, no unsafe: the arena is an ordinary `Vec`, so `get` borrows
+//! are checked and interning while a slice is borrowed is a compile
+//! error (the engine copies frontier rows into its batch buffers before
+//! folding, which is the natural phase structure anyway).
+
+use std::hash::Hasher;
+
+/// Empty-slot sentinel (also caps the store at `u32::MAX - 1` configs —
+/// two orders of magnitude past anything the explorer can hold).
+const EMPTY: u32 = u32::MAX;
+
+/// Width value meaning "not fixed yet" (set by the first intern).
+const WIDTH_UNSET: usize = usize::MAX;
+
+/// Hash a configuration slice with the project's Fx hasher. The full
+/// 64-bit hash is shared by the id table (low bits) and the sharded
+/// store's stripe choice (bits 32.., see `engine::dedup`), keeping the
+/// two uncorrelated.
+#[inline]
+pub(crate) fn hash_counts(c: &[u64]) -> u64 {
+    let mut h = crate::util::FxHasher::default();
+    // hash the raw words; length is implied by the store's fixed width
+    for &v in c {
+        h.write_u64(v);
+    }
+    h.finish()
+}
+
+/// An interning arena for configuration vectors of one fixed width.
+#[derive(Debug, Clone)]
+pub struct ConfigStore {
+    /// Neurons per configuration; fixed by construction or first intern.
+    width: usize,
+    /// The bump arena: config `id` at `counts[id*width..(id+1)*width]`.
+    counts: Vec<u64>,
+    /// Open-addressed id table (power-of-two; `EMPTY` = free slot).
+    table: Vec<u32>,
+    /// Distinct configurations interned.
+    len: usize,
+}
+
+impl Default for ConfigStore {
+    fn default() -> Self {
+        ConfigStore::new()
+    }
+}
+
+impl ConfigStore {
+    /// Empty store; the width locks in on the first intern.
+    pub fn new() -> Self {
+        ConfigStore { width: WIDTH_UNSET, counts: Vec::new(), table: Vec::new(), len: 0 }
+    }
+
+    /// Empty store over `width`-neuron configurations, with arena and
+    /// table capacity for about `configs` entries.
+    pub fn with_capacity(width: usize, configs: usize) -> Self {
+        let mut s = ConfigStore {
+            width,
+            counts: Vec::with_capacity(width * configs),
+            table: Vec::new(),
+            len: 0,
+        };
+        let slots = (configs * 8 / 7 + 1).next_power_of_two().max(16);
+        s.table = vec![EMPTY; slots];
+        s
+    }
+
+    /// Distinct configurations interned so far.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing has been interned.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The configuration slice of `id`.
+    ///
+    /// # Panics
+    /// When `id` was never handed out by this store.
+    #[inline]
+    pub fn get(&self, id: u32) -> &[u64] {
+        let i = id as usize;
+        assert!(i < self.len, "config id {id} out of range ({} interned)", self.len);
+        &self.counts[i * self.width..(i + 1) * self.width]
+    }
+
+    /// The id of `c`, if interned.
+    pub fn find(&self, c: &[u64]) -> Option<u32> {
+        if self.len == 0 || c.len() != self.width {
+            return None;
+        }
+        let mask = self.table.len() - 1;
+        let mut i = (hash_counts(c) as usize) & mask;
+        loop {
+            match self.table[i] {
+                EMPTY => return None,
+                id => {
+                    if self.get(id) == c {
+                        return Some(id);
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, c: &[u64]) -> bool {
+        self.find(c).is_some()
+    }
+
+    /// Intern `c`: returns `(id, true)` when the configuration is new
+    /// (copied into the arena exactly once) or `(id, false)` when it was
+    /// already present. Ids are dense and assigned in intern order.
+    ///
+    /// # Panics
+    /// When `c`'s width differs from the store's (one store serves one
+    /// system; mixing widths is a programming error, not a data error).
+    pub fn intern(&mut self, c: &[u64]) -> (u32, bool) {
+        if self.width == WIDTH_UNSET {
+            self.width = c.len();
+        }
+        assert_eq!(
+            c.len(),
+            self.width,
+            "config store holds {}-neuron configurations",
+            self.width
+        );
+        assert!(self.len < EMPTY as usize, "config store full");
+        if self.table.is_empty() {
+            self.table = vec![EMPTY; 16];
+        } else if (self.len + 1) * 8 > self.table.len() * 7 {
+            self.grow();
+        }
+        let mask = self.table.len() - 1;
+        let mut i = (hash_counts(c) as usize) & mask;
+        loop {
+            match self.table[i] {
+                EMPTY => {
+                    let id = self.len as u32;
+                    self.counts.extend_from_slice(c);
+                    self.table[i] = id;
+                    self.len += 1;
+                    return (id, true);
+                }
+                id => {
+                    if self.get(id) == c {
+                        return (id, false);
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Iterate the interned configurations in id (= insertion) order.
+    pub fn iter(&self) -> impl Iterator<Item = &[u64]> + '_ {
+        (0..self.len as u32).map(|id| self.get(id))
+    }
+
+    /// Arena words held (memory accounting; `len * width` exactly — the
+    /// single-copy invariant tests assert against this).
+    pub fn arena_words(&self) -> usize {
+        self.counts.len()
+    }
+
+    fn grow(&mut self) {
+        let new_slots = (self.table.len() * 2).max(16);
+        let mut table = vec![EMPTY; new_slots];
+        let mask = new_slots - 1;
+        for id in 0..self.len as u32 {
+            let mut i = (hash_counts(self.get(id)) as usize) & mask;
+            while table[i] != EMPTY {
+                i = (i + 1) & mask;
+            }
+            table[i] = id;
+        }
+        self.table = table;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_dedups_and_orders_ids() {
+        let mut s = ConfigStore::new();
+        assert!(s.is_empty());
+        assert_eq!(s.intern(&[2, 1, 1]), (0, true));
+        assert_eq!(s.intern(&[2, 1, 2]), (1, true));
+        assert_eq!(s.intern(&[2, 1, 1]), (0, false), "repeat hands back the old id");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(0), &[2, 1, 1]);
+        assert_eq!(s.get(1), &[2, 1, 2]);
+        assert_eq!(s.find(&[2, 1, 2]), Some(1));
+        assert_eq!(s.find(&[9, 9, 9]), None);
+        assert!(s.contains(&[2, 1, 1]));
+    }
+
+    #[test]
+    fn each_config_stored_exactly_once() {
+        let mut s = ConfigStore::new();
+        for round in 0..3 {
+            for i in 0..500u64 {
+                s.intern(&[i, i % 7, 3]);
+            }
+            assert_eq!(s.len(), 500, "round {round}");
+            assert_eq!(s.arena_words(), 500 * 3, "round {round}: one arena copy per config");
+        }
+    }
+
+    #[test]
+    fn growth_preserves_ids_and_lookups() {
+        let mut s = ConfigStore::with_capacity(2, 4);
+        let mut ids = Vec::new();
+        for i in 0..10_000u64 {
+            let (id, new) = s.intern(&[i, i.wrapping_mul(0x9E37_79B9)]);
+            assert!(new);
+            ids.push(id);
+        }
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(id as usize, i, "ids are dense and insertion-ordered");
+            assert_eq!(s.find(s.get(id)).unwrap(), id, "find survives table growth");
+        }
+    }
+
+    #[test]
+    fn iter_in_insertion_order() {
+        let mut s = ConfigStore::new();
+        s.intern(&[3, 0]);
+        s.intern(&[1, 2]);
+        s.intern(&[3, 0]);
+        s.intern(&[0, 0]);
+        let all: Vec<Vec<u64>> = s.iter().map(|c| c.to_vec()).collect();
+        assert_eq!(all, vec![vec![3, 0], vec![1, 2], vec![0, 0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "3-neuron")]
+    fn width_mismatch_is_a_programming_error() {
+        let mut s = ConfigStore::new();
+        s.intern(&[1, 2, 3]);
+        s.intern(&[1, 2]);
+    }
+
+    #[test]
+    fn empty_store_lookups() {
+        let s = ConfigStore::new();
+        assert_eq!(s.find(&[1]), None);
+        assert!(!s.contains(&[]));
+        assert_eq!(s.iter().count(), 0);
+    }
+}

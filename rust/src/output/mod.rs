@@ -75,7 +75,7 @@ pub fn render_paper_log(sys: &SnpSystem, report: &ExploreReport) -> String {
 pub fn render_summary(sys: &SnpSystem, report: &ExploreReport) -> String {
     format!(
         "system `{}`: {} configs generated (depth {}), {} halting, stop: {}\n\
-         {} expansions, {} steps in {} batches ({} spiking rows), Σψ = {}, elapsed {:?}\n",
+         {} expansions, {} steps in {} batches ({} spiking rows, {} stepping), Σψ = {}, elapsed {:?}\n",
         sys.name,
         report.visited.len(),
         report.depth_reached,
@@ -85,6 +85,7 @@ pub fn render_summary(sys: &SnpSystem, report: &ExploreReport) -> String {
         report.stats.steps,
         report.stats.batches,
         report.stats.spike_repr,
+        report.stats.step_mode,
         report.stats.psi_total,
         report.stats.elapsed,
     )

@@ -6,7 +6,7 @@
 pub use crate::baseline::DirectSimulator;
 pub use crate::compute::{
     BackendFactory, BackendPool, HostBackend, HostBackendFactory, SpikeBuf, SpikeRepr,
-    SpikeRows, StepBackend, StepBatch,
+    SpikeRows, StepBackend, StepBatch, StepMode,
 };
 pub use crate::coordinator::{Coordinator, CoordinatorConfig};
 pub use crate::engine::{

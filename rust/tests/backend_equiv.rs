@@ -114,6 +114,91 @@ fn sparse_and_dense_rows_agree_on_every_host_repr() {
 }
 
 #[test]
+fn delta_and_batch_agree_on_every_host_repr_and_spike_repr() {
+    // Randomized batches over the three parameterless builtins plus a
+    // rule-heavy system: `step_deltas_into` + parent-add must reproduce
+    // `step_batch` bit-for-bit on both host matrix representations
+    // (dense and CSR) and both spiking-row representations (dense bytes
+    // and CSR fired lists).
+    let systems = [
+        snapse::generators::paper_pi(),
+        snapse::generators::nat_generator(),
+        snapse::generators::even_generator(),
+        snapse::generators::rule_heavy(6, 12, 2),
+    ];
+    let mut rng = Rng::new(0xDE17A);
+    for sys in &systems {
+        let m = build_matrix(sys);
+        let n = sys.num_neurons();
+        let r = sys.num_rules();
+        for case in 0..12 {
+            let b = rng.range(1, 24);
+            let (configs, dense, sparse) = random_valid_rows(sys, b, &mut rng);
+            let dense_batch =
+                StepBatch { b, n, r, configs: &configs, spikes: SpikeRows::Dense(&dense) };
+            let sparse_batch =
+                StepBatch { b, n, r, configs: &configs, spikes: sparse.as_rows() };
+            for batch in [&dense_batch, &sparse_batch] {
+                for mut be in [HostBackend::dense(&m), HostBackend::sparse(&m)] {
+                    assert!(be.native_deltas());
+                    let full = be.step_batch(batch).unwrap();
+                    let mut deltas = Vec::new();
+                    be.step_deltas_into(batch, &mut deltas).unwrap();
+                    let applied: Vec<i64> =
+                        configs.iter().zip(&deltas).map(|(c, d)| c + d).collect();
+                    assert_eq!(
+                        applied, full,
+                        "{} case {case}: delta+parent != batch ({} matrix)",
+                        sys.name,
+                        be.repr_name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn default_delta_adapter_matches_native_deltas() {
+    // A custom backend without a native delta path: the trait's default
+    // adapter (full rows minus parents) must agree with the host
+    // backend's memoized native deltas on identical batches.
+    struct Delegating(HostBackend);
+    impl snapse::compute::StepBackend for Delegating {
+        fn name(&self) -> &str {
+            "delegating"
+        }
+        fn step_batch(
+            &mut self,
+            batch: &StepBatch<'_>,
+        ) -> snapse::Result<Vec<i64>> {
+            self.0.step_batch(batch)
+        }
+    }
+    let sys = snapse::generators::rule_heavy(6, 12, 2);
+    let m = build_matrix(&sys);
+    let mut rng = Rng::new(0xADA);
+    for case in 0..8 {
+        let b = rng.range(1, 16);
+        let (configs, dense, _) = random_valid_rows(&sys, b, &mut rng);
+        let batch = StepBatch {
+            b,
+            n: sys.num_neurons(),
+            r: sys.num_rules(),
+            configs: &configs,
+            spikes: SpikeRows::Dense(&dense),
+        };
+        let mut native = Vec::new();
+        HostBackend::new(&m).step_deltas_into(&batch, &mut native).unwrap();
+        let mut adapter = Delegating(HostBackend::new(&m));
+        assert!(!snapse::compute::StepBackend::native_deltas(&adapter));
+        let mut derived = Vec::new();
+        adapter.step_deltas_into(&batch, &mut derived).unwrap();
+        assert_eq!(derived, native, "case {case}");
+    }
+}
+
+#[test]
 fn malformed_sparse_rows_rejected_everywhere() {
     let sys = snapse::generators::paper_pi();
     let m = build_matrix(&sys);

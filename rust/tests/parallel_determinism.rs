@@ -169,6 +169,82 @@ fn sparse_identical_to_dense_serial_on_every_builtin_system() {
 }
 
 #[test]
+fn delta_step_mode_identical_at_every_worker_count() {
+    use snapse::compute::StepMode;
+    // The delta-form hot path must reproduce the batch serial reference
+    // byte-for-byte at 1/2/4/8 workers, both search orders, on systems
+    // spanning the branching/rule-density spectrum.
+    let systems = [
+        snapse::generators::paper_pi(),
+        snapse::generators::wide_ring(8, 3, 2),
+        snapse::generators::rule_heavy(6, 12, 2),
+    ];
+    for sys in &systems {
+        for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+            let (reference, ref_stop) =
+                names(sys, opts(order).max_configs(400).step_mode(StepMode::Batch));
+            for w in WORKER_COUNTS {
+                let (got, stop) = names(
+                    sys,
+                    opts(order).max_configs(400).workers(w).step_mode(StepMode::Delta),
+                );
+                assert_eq!(
+                    got, reference,
+                    "{} {order:?}: delta workers={w} diverged from batch serial",
+                    sys.name
+                );
+                assert_eq!(stop, ref_stop, "{} {order:?} workers={w}", sys.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn delta_composes_with_sparse_rows() {
+    use snapse::compute::{SpikeRepr, StepMode};
+    // the two ablation axes together: CSR frontiers × delta stepping at
+    // 4 workers vs the dense batch serial reference
+    let sys = snapse::generators::rule_heavy(6, 12, 2);
+    let (reference, _) = names(
+        &sys,
+        ExploreOptions::breadth_first()
+            .max_configs(400)
+            .spike_repr(SpikeRepr::Dense)
+            .step_mode(StepMode::Batch),
+    );
+    for w in WORKER_COUNTS {
+        let (got, _) = names(
+            &sys,
+            ExploreOptions::breadth_first()
+                .max_configs(400)
+                .workers(w)
+                .spike_repr(SpikeRepr::Sparse)
+                .step_mode(StepMode::Delta),
+        );
+        assert_eq!(got, reference, "sparse×delta workers={w}");
+    }
+}
+
+#[test]
+fn auto_step_mode_matches_forced_modes() {
+    use snapse::compute::StepMode;
+    let sys = snapse::generators::wide_ring(8, 3, 2);
+    let (want, _) = names(&sys, ExploreOptions::breadth_first().max_configs(300));
+    for mode in [StepMode::Batch, StepMode::Delta] {
+        for w in [1usize, 4] {
+            let (got, _) = names(
+                &sys,
+                ExploreOptions::breadth_first().max_configs(300).workers(w).step_mode(mode),
+            );
+            assert_eq!(got, want, "{mode:?} workers={w}");
+        }
+    }
+    // stats report which mode actually ran: host pools are delta-native
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(100)).run();
+    assert_eq!(rep.stats.step_mode, "delta", "auto resolves delta on the host backend");
+}
+
+#[test]
 fn auto_repr_matches_forced_reprs_on_rule_heavy() {
     use snapse::compute::SpikeRepr;
     let sys = snapse::generators::rule_heavy(6, 12, 2);

@@ -18,13 +18,13 @@ fn property_reachable_sets_agree_on_200_random_systems() {
             opts = opts.max_configs(300);
         }
         let rep = Explorer::new(&sys, opts).run();
+        let engine_order = rep.visited.in_order();
         if complete {
             let a: std::collections::BTreeSet<_> = direct.iter().collect();
-            let b: std::collections::BTreeSet<_> = rep.visited.in_order().iter().collect();
+            let b: std::collections::BTreeSet<_> = engine_order.iter().collect();
             assert_eq!(a, b, "seed {seed}");
         } else {
-            for (i, (x, y)) in direct.iter().zip(rep.visited.in_order()).enumerate().take(150)
-            {
+            for (i, (x, y)) in direct.iter().zip(engine_order.iter()).enumerate().take(150) {
                 assert_eq!(x, y, "seed {seed} diverges at BFS position {i}");
             }
         }
@@ -104,8 +104,9 @@ fn regex_guard_system_full_reachability() {
     let (direct, complete) = sim.reachable(100);
     assert!(complete);
     let rep = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+    let engine_order = rep.visited.in_order();
     let a: std::collections::BTreeSet<_> = direct.iter().collect();
-    let b: std::collections::BTreeSet<_> = rep.visited.in_order().iter().collect();
+    let b: std::collections::BTreeSet<_> = engine_order.iter().collect();
     assert_eq!(a, b);
 }
 
