@@ -1,0 +1,201 @@
+//! E12 — memory-lean exploration: compressed visited arena + run-scoped
+//! delta cache.
+//!
+//! Measures complete explorations across the storage-mode × stepping-mode
+//! grid: {plain, compressed} × {batch, delta}, reporting **bytes/config**
+//! (visited-arena payload per distinct configuration) and **configs/sec**
+//! (exploration throughput — the compressed arena must buy its bytes
+//! back without sinking the hot path). Workloads:
+//!
+//! - `wide_ring:8:3:2` — wide BFS frontiers; successive configurations
+//!   differ in a handful of neurons, the parent-delta encoder's best case.
+//! - `rule_heavy:8:16:2` — rule-dense systems where the arena row is
+//!   wide and the S→S·M delta cache sees heavy key repetition.
+//!
+//! Before any timing, each workload asserts the compressed × delta cell
+//! is byte-identical to the plain × batch serial reference, and that the
+//! compressed arena holds `rule_heavy` at ≥ 3× fewer bytes/config than
+//! plain — the acceptance bar for the compressed-store PR.
+//!
+//! Results land in `BENCH_memory.json` in addition to the stdout table.
+//!
+//! ```bash
+//! cargo bench --bench bench_memory            # full (10k configs)
+//! cargo bench --bench bench_memory -- --quick # CI-sized
+//! ```
+
+// whole-run wall-clock timing below; the shared micro-bench harness is
+// linked for parity with the other benches but unused here
+#[allow(dead_code)]
+mod harness;
+
+use std::time::Instant;
+
+use snapse::compute::StepMode;
+use snapse::engine::{ExploreOptions, Explorer, StoreMode};
+use snapse::snp::SnpSystem;
+use snapse::util::JsonValue;
+
+/// Best (minimum) wall-clock of `runs` explorations; returns
+/// `(seconds, visited, arena_bytes, delta_hits, delta_misses)`.
+fn measure(
+    sys: &SnpSystem,
+    budget: usize,
+    store: StoreMode,
+    step: StepMode,
+    runs: u32,
+) -> (f64, usize, u64, u64, u64) {
+    let mut best = f64::INFINITY;
+    let mut visited = 0usize;
+    let mut arena = 0u64;
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for _ in 0..runs {
+        let t = Instant::now();
+        let rep = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first()
+                .max_configs(budget)
+                .store_mode(store)
+                .step_mode(step),
+        )
+        .run();
+        let secs = t.elapsed().as_secs_f64();
+        std::hint::black_box(rep.visited.len());
+        best = best.min(secs);
+        visited = rep.visited.len();
+        arena = rep.stats.arena_bytes;
+        hits = rep.stats.delta_hits;
+        misses = rep.stats.delta_misses;
+    }
+    (best, visited, arena, hits, misses)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (budget, runs) = if quick { (1_000usize, 1u32) } else { (10_000usize, 3u32) };
+
+    let workloads: Vec<(SnpSystem, &str)> = vec![
+        (snapse::generators::wide_ring(8, 3, 2), "wide frontiers, near-duplicate configs"),
+        (snapse::generators::rule_heavy(8, 16, 2), "rule-dense rows, hot delta-cache keys"),
+    ];
+
+    println!(
+        "\n== memory-lean exploration (budget {budget} configs, best of {runs}) ==\n"
+    );
+    println!(
+        "{:<18} {:>8} {:>12} {:>12} {:>8} {:>12} {:>12} {:>10}",
+        "system", "configs", "plain B/cfg", "comp B/cfg", "ratio", "plain cfg/s", "comp cfg/s", "hit rate"
+    );
+
+    let mut json_rows: Vec<JsonValue> = Vec::new();
+    for (sys, note) in &workloads {
+        // correctness first: compressed × delta must reproduce the plain
+        // × batch reference byte for byte before any number is timed
+        let reference = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first().max_configs(budget).step_mode(StepMode::Batch),
+        )
+        .run();
+        let check = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first()
+                .max_configs(budget)
+                .store_mode(StoreMode::Compressed)
+                .step_mode(StepMode::Delta),
+        )
+        .run();
+        assert_eq!(
+            check.visited.in_order(),
+            reference.visited.in_order(),
+            "{}: compressed output diverged from the plain reference",
+            sys.name
+        );
+        assert_eq!(
+            check.visited.render_all_gen_ck(),
+            reference.visited.render_all_gen_ck(),
+            "{}: rendered allGenCk diverged",
+            sys.name
+        );
+
+        let grid = [
+            ("plain_batch", StoreMode::Plain, StepMode::Batch),
+            ("plain_delta", StoreMode::Plain, StepMode::Delta),
+            ("compressed_batch", StoreMode::Compressed, StepMode::Batch),
+            ("compressed_delta", StoreMode::Compressed, StepMode::Delta),
+        ];
+        let mut cells = Vec::new();
+        for (label, store, step) in grid {
+            let (secs, visited, arena, hits, misses) = measure(sys, budget, store, step, runs);
+            cells.push((label, store, secs, visited, arena, hits, misses));
+        }
+        let bpc = |c: &(&str, StoreMode, f64, usize, u64, u64, u64)| c.4 as f64 / c.3 as f64;
+        let plain_bpc = bpc(&cells[0]);
+        let comp_bpc = bpc(&cells[2]);
+        let ratio = plain_bpc / comp_bpc;
+        if sys.name.starts_with("rule_heavy") {
+            assert!(
+                ratio >= 3.0,
+                "{}: compressed arena must be ≥3x leaner than plain (got {ratio:.2}x)",
+                sys.name
+            );
+        }
+        let hit_rate = {
+            let (h, m) = (cells[3].5, cells[3].6);
+            if h + m == 0 { 0.0 } else { 100.0 * h as f64 / (h + m) as f64 }
+        };
+        println!(
+            "{:<18} {:>8} {:>12.1} {:>12.1} {:>7.2}x {:>12.0} {:>12.0} {:>9.1}%",
+            sys.name,
+            cells[0].3,
+            plain_bpc,
+            comp_bpc,
+            ratio,
+            cells[1].3 as f64 / cells[1].2,
+            cells[3].3 as f64 / cells[3].2,
+            hit_rate,
+        );
+        json_rows.push(JsonValue::obj([
+            ("system", JsonValue::str(sys.name.clone())),
+            ("note", JsonValue::str(note.to_string())),
+            ("configs", JsonValue::num(cells[0].3 as f64)),
+            ("plain_bytes_per_config", JsonValue::num(plain_bpc)),
+            ("compressed_bytes_per_config", JsonValue::num(comp_bpc)),
+            ("compression_ratio", JsonValue::num(ratio)),
+            ("delta_cache_hit_rate_pct", JsonValue::num(hit_rate)),
+            (
+                "grid",
+                JsonValue::arr(cells.iter().map(
+                    |(label, store, secs, visited, arena, hits, misses)| {
+                        JsonValue::obj([
+                            ("case", JsonValue::str(label.to_string())),
+                            ("store_mode", JsonValue::str(store.name())),
+                            ("seconds", JsonValue::num(*secs)),
+                            ("arena_bytes", JsonValue::num(*arena as f64)),
+                            (
+                                "bytes_per_config",
+                                JsonValue::num(*arena as f64 / *visited as f64),
+                            ),
+                            ("configs_per_sec", JsonValue::num(*visited as f64 / *secs)),
+                            ("delta_hits", JsonValue::num(*hits as f64)),
+                            ("delta_misses", JsonValue::num(*misses as f64)),
+                        ])
+                    },
+                )),
+            ),
+        ]));
+    }
+
+    let doc = JsonValue::obj([
+        ("bench", JsonValue::str("bench_memory".to_string())),
+        ("budget_configs", JsonValue::num(budget as f64)),
+        ("runs_per_point", JsonValue::num(runs as f64)),
+        ("quick", JsonValue::num(quick as u8 as f64)),
+        ("workloads", JsonValue::arr(json_rows)),
+    ]);
+    let out = doc.to_string_pretty();
+    match std::fs::write("BENCH_memory.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_memory.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_memory.json: {e}"),
+    }
+}

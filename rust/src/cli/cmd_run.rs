@@ -23,13 +23,29 @@ pub fn run(args: &Args) -> Result<()> {
         None => crate::compute::StepMode::Auto,
         Some(v) => crate::compute::StepMode::parse(v)?,
     };
+    // `--store-mode {plain,compressed}`: visited-arena storage ablation
+    // override; ids, allGenCk and every report are byte-identical.
+    let store_mode = match args.opt("store-mode") {
+        None => crate::engine::StoreMode::Plain,
+        Some(v) => crate::engine::StoreMode::parse(v).ok_or_else(|| {
+            Error::parse("cli", 0, format!("unknown store mode `{v}` (plain|compressed)"))
+        })?,
+    };
+    // `--delta-cache N`: run-scoped S→S·M memo bound (0 disables and
+    // restores the per-batch-memo-only behavior exactly).
+    let delta_cache = args
+        .opt_num::<usize>("delta-cache")?
+        .unwrap_or(crate::compute::DEFAULT_DELTA_CACHE);
 
     // Explorer path (reference semantics, tree recording). `--workers N`
     // engages the pipelined parallel engine; `--single-thread` or tree
     // recording pin the serial reference path.
     if args.flag("single-thread") || args.flag("paper-log") || args.opt("tree").is_some() {
-        let mut opts =
-            ExploreOptions::breadth_first().spike_repr(spike_repr).step_mode(step_mode);
+        let mut opts = ExploreOptions::breadth_first()
+            .spike_repr(spike_repr)
+            .step_mode(step_mode)
+            .store_mode(store_mode)
+            .delta_cache(delta_cache);
         if let Some(d) = depth {
             opts = opts.max_depth(d);
         }
@@ -82,6 +98,8 @@ pub fn run(args: &Args) -> Result<()> {
         batch_target: args.opt_num::<usize>("batch")?.unwrap_or(256),
         spike_repr,
         step_mode,
+        store_mode,
+        delta_cache,
     };
     let mut coord = Coordinator::new(&sys, cfg);
     let report = coord.run()?;

@@ -6,6 +6,7 @@
 //!                     [--tree FILE.dot] [--json]
 //!                     [--spike-repr auto|dense|sparse]
 //!                     [--step-mode auto|batch|delta]
+//!                     [--store-mode plain|compressed] [--delta-cache N]
 //! snapse walk <system> [--steps N] [--seed S]
 //! snapse generated <system> [--max N] [--workers W]
 //! snapse analyze <system> [--configs N] [--bound B] [--workers W] [--json]
@@ -154,6 +155,8 @@ fn help_text() -> String {
     s.push_str("      --artifacts DIR --paper-log --tree FILE.dot --json --single-thread\n");
     s.push_str("      --spike-repr auto|dense|sparse (spiking-row representation ablation)\n");
     s.push_str("      --step-mode auto|batch|delta (full successor rows vs S·M deltas)\n");
+    s.push_str("      --store-mode plain|compressed (visited arena: flat rows vs varint deltas)\n");
+    s.push_str("      --delta-cache N (run-scoped S·M memo entries; 0 = off)\n");
     s.push_str("  walk <system>       follow one random branch\n");
     s.push_str("      --steps N --seed S\n");
     s.push_str("  generated <system>  compute the generated number set\n");

@@ -1,0 +1,280 @@
+//! Run-scoped `S → S·M` delta cache.
+//!
+//! The host backend already memoizes repeated spiking vectors *within*
+//! one batch (`compute::host`), but Algorithm 1 re-fires the same small
+//! set of spiking vectors across the whole exploration — the paper's Π
+//! reaches its fixpoint firing the same handful of rule combinations at
+//! every depth. This cache promotes that memo to run scope: the product
+//! row `S·M` is keyed by the fired-rule bitmask of `S` and survives
+//! batch boundaries, backend check-outs, and (when attached to a
+//! [`BackendPool`](super::pool::BackendPool)) all workers of a pipelined
+//! run.
+//!
+//! Keys reuse the [`ConfigStore`](crate::engine::ConfigStore)
+//! open-addressed-id machinery: a fired-rule index slice is packed into
+//! `ceil(r/64)` bitmask words and interned into a plain-mode store whose
+//! dense ids index a flat `Vec<i64>` of cached delta rows. Lookups take
+//! a read lock and are allocation-free (`ConfigStore::find` on a plain
+//! store never allocates); misses are computed outside any lock by the
+//! backend's existing per-batch memo path and published under a short
+//! write lock. Capacity is bounded: when full, the cache clears
+//! wholesale (epoch eviction — cheap, and the working set re-warms in
+//! one batch; an LRU would spend more bookkeeping than the products it
+//! saves).
+//!
+//! Correctness is trivial by purity — `S·M` depends only on `S` and the
+//! run-constant matrix — so a hit returns exactly the row the backend
+//! would recompute, and `--delta-cache 0` (never attaching a cache)
+//! restores the per-batch-memo behavior byte for byte.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::engine::ConfigStore;
+
+/// Default bound on distinct spiking vectors cached per run (CLI
+/// `--delta-cache N`; 0 disables). At `n` neurons ≈ `8n` bytes per
+/// entry, 4096 entries on the paper's systems is well under a MiB.
+pub const DEFAULT_DELTA_CACHE: usize = 4096;
+
+/// Counter snapshot from [`DeltaCache::stats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeltaCacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to a backend compute. (A miss row may
+    /// still be served by the backend's within-batch memo.)
+    pub misses: u64,
+    /// Whole-cache epoch evictions triggered by the capacity bound.
+    pub evictions: u64,
+    /// Distinct spiking vectors currently cached.
+    pub entries: usize,
+    /// Capacity bound the cache was built with.
+    pub capacity: usize,
+}
+
+/// Interned spiking-vector keys plus their cached `S·M` rows.
+#[derive(Debug)]
+struct Inner {
+    /// Plain-mode interning store over `key_words`-word bitmask keys;
+    /// its dense ids index `deltas` row-wise.
+    keys: ConfigStore,
+    /// Cached delta rows: key id `k` owns `deltas[k*n..(k+1)*n]`.
+    deltas: Vec<i64>,
+}
+
+/// Shared, bounded, run-scoped memo of `S → S·M` product rows.
+#[derive(Debug)]
+pub struct DeltaCache {
+    /// Rule count of the system this cache serves (key bit width).
+    r: usize,
+    /// Neuron count (delta row width).
+    n: usize,
+    /// Bitmask words per key: `ceil(r/64)`, at least 1.
+    key_words: usize,
+    /// Entry bound; reaching it clears the whole cache (epoch eviction).
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    inner: RwLock<Inner>,
+}
+
+impl DeltaCache {
+    /// Cache for a system with `r` rules and `n` neurons, bounded at
+    /// `capacity` entries (must be > 0 — "no cache" is expressed by not
+    /// attaching one).
+    pub fn new(r: usize, n: usize, capacity: usize) -> Self {
+        assert!(capacity > 0, "a zero-capacity DeltaCache means: don't attach one");
+        let key_words = r.div_ceil(64).max(1);
+        DeltaCache {
+            r,
+            n,
+            key_words,
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inner: RwLock::new(Inner {
+                keys: ConfigStore::with_capacity(key_words, capacity.min(1 << 16)),
+                deltas: Vec::new(),
+            }),
+        }
+    }
+
+    /// The `(rules, neurons)` shape this cache serves. Backends refuse
+    /// to attach a cache whose shape disagrees with their matrix.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.r, self.n)
+    }
+
+    /// Bitmask words per key (`ceil(r/64)`).
+    #[inline]
+    pub fn key_words(&self) -> usize {
+        self.key_words
+    }
+
+    /// The entry bound.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up the delta row of the spiking vector whose fired-rule
+    /// bitmask is `key`; on a hit, copy it into `out_row` (length `n`)
+    /// and return `true`. Counts a hit or a miss either way.
+    pub fn lookup(&self, key: &[u64], out_row: &mut [i64]) -> bool {
+        debug_assert_eq!(key.len(), self.key_words);
+        debug_assert_eq!(out_row.len(), self.n);
+        let g = self.inner.read().expect("delta cache poisoned");
+        if let Some(id) = g.keys.find(key) {
+            let at = id as usize * self.n;
+            out_row.copy_from_slice(&g.deltas[at..at + self.n]);
+            drop(g);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            drop(g);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Publish a computed delta row under `key`. Racing inserts of the
+    /// same key are benign: the product is pure, so the loser's identical
+    /// row is simply dropped. At capacity the cache clears wholesale
+    /// first (epoch eviction).
+    pub fn insert(&self, key: &[u64], row: &[i64]) {
+        debug_assert_eq!(key.len(), self.key_words);
+        debug_assert_eq!(row.len(), self.n);
+        let mut g = self.inner.write().expect("delta cache poisoned");
+        if g.keys.len() >= self.capacity {
+            g.keys.clear();
+            g.deltas.clear();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        let (id, new) = g.keys.intern(key);
+        if new {
+            debug_assert_eq!(id as usize * self.n, g.deltas.len(), "dense rows track dense ids");
+            g.deltas.extend_from_slice(row);
+        }
+    }
+
+    /// Current counters (cumulative since construction; per-run figures
+    /// come from diffing two [`DeltaCache::snapshot`]s).
+    pub fn stats(&self) -> DeltaCacheStats {
+        DeltaCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.inner.read().expect("delta cache poisoned").keys.len(),
+            capacity: self.capacity,
+        }
+    }
+
+    /// Cheap `(hits, misses)` snapshot for per-run accounting on shared
+    /// (pool-attached) caches.
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(bits: &[usize], words: usize) -> Vec<u64> {
+        let mut k = vec![0u64; words];
+        for &b in bits {
+            k[b >> 6] |= 1u64 << (b & 63);
+        }
+        k
+    }
+
+    #[test]
+    fn lookup_miss_then_hit() {
+        let c = DeltaCache::new(5, 3, 8);
+        assert_eq!(c.key_words(), 1);
+        let k = key(&[0, 2, 4], 1);
+        let mut row = vec![0i64; 3];
+        assert!(!c.lookup(&k, &mut row), "cold cache misses");
+        c.insert(&k, &[1, -2, 3]);
+        assert!(c.lookup(&k, &mut row));
+        assert_eq!(row, vec![1, -2, 3]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let c = DeltaCache::new(130, 2, 16);
+        assert_eq!(c.key_words(), 3, "130 rules span 3 bitmask words");
+        let ka = key(&[0, 129], 3);
+        let kb = key(&[1, 129], 3);
+        c.insert(&ka, &[7, 7]);
+        c.insert(&kb, &[9, 9]);
+        let mut row = vec![0i64; 2];
+        assert!(c.lookup(&ka, &mut row));
+        assert_eq!(row, vec![7, 7]);
+        assert!(c.lookup(&kb, &mut row));
+        assert_eq!(row, vec![9, 9]);
+    }
+
+    #[test]
+    fn capacity_triggers_epoch_eviction() {
+        let c = DeltaCache::new(64, 1, 4);
+        for i in 0..4usize {
+            c.insert(&key(&[i], 1), &[i as i64]);
+        }
+        assert_eq!(c.stats().entries, 4);
+        // the 5th insert evicts everything, then admits itself
+        c.insert(&key(&[10], 1), &[10]);
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 1);
+        let mut row = vec![0i64; 1];
+        assert!(!c.lookup(&key(&[0], 1), &mut row), "pre-eviction entries gone");
+        assert!(c.lookup(&key(&[10], 1), &mut row));
+        assert_eq!(row, vec![10]);
+    }
+
+    #[test]
+    fn duplicate_insert_is_benign() {
+        let c = DeltaCache::new(8, 2, 8);
+        let k = key(&[3], 1);
+        c.insert(&k, &[5, 5]);
+        c.insert(&k, &[5, 5]); // racing publisher lost: identical row dropped
+        assert_eq!(c.stats().entries, 1);
+        let mut row = vec![0i64; 2];
+        assert!(c.lookup(&k, &mut row));
+        assert_eq!(row, vec![5, 5]);
+    }
+
+    #[test]
+    fn concurrent_mixed_lookups_and_inserts() {
+        use std::sync::Arc;
+        let c = Arc::new(DeltaCache::new(64, 2, 64));
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let c = Arc::clone(&c);
+                scope.spawn(move || {
+                    let mut row = vec![0i64; 2];
+                    for i in 0..200usize {
+                        let k = key(&[(t * 7 + i) % 50], 1);
+                        if !c.lookup(&k, &mut row) {
+                            let v = (((t * 7 + i) % 50) + 1) as i64;
+                            c.insert(&k, &[v, -v]);
+                        } else {
+                            let v = (((t * 7 + i) % 50) + 1) as i64;
+                            assert_eq!(row, vec![v, -v], "hit returns the published row");
+                        }
+                    }
+                });
+            }
+        });
+        let s = c.stats();
+        assert!(s.entries <= 50);
+        assert_eq!(s.hits + s.misses, 800);
+    }
+}

@@ -12,6 +12,9 @@
 //! [`StepBackend::step_batch`] is a thin adapter on top: deltas plus the
 //! parent rows, so the two forms are identical by construction.
 
+use std::sync::Arc;
+
+use super::delta_cache::DeltaCache;
 use super::{SpikeRows, StepBackend, StepBatch};
 use crate::error::Result;
 use crate::matrix::{CsrMatrix, TransitionMatrix};
@@ -28,6 +31,19 @@ enum Repr {
     Sparse(CsrMatrix),
 }
 
+/// Accumulate the delta row of batch row `b` (`spikes[b] · M`) into
+/// `orow`. Both matrix representations iterate only the fired rules.
+fn accumulate_delta(repr: &Repr, batch: &StepBatch<'_>, b: usize, orow: &mut [i64]) {
+    match repr {
+        Repr::Dense(m) => batch.spikes.for_each_fired(b, batch.r, |r| {
+            for (o, &v) in orow.iter_mut().zip(m.row(r)) {
+                *o += v;
+            }
+        }),
+        Repr::Sparse(m) => batch.spikes.for_each_fired(b, batch.r, |r| m.accumulate_row(r, orow)),
+    }
+}
+
 /// CPU step backend over a fixed transition matrix.
 pub struct HostBackend {
     repr: Repr,
@@ -39,11 +55,30 @@ pub struct HostBackend {
     /// Scratch delta buffer backing the `step_batch` adapter; reused
     /// across calls.
     scratch: Vec<i64>,
+    /// Run-scoped `S → S·M` cache, shared across batches (and across
+    /// backend instances when attached through a pool). `None` keeps the
+    /// within-batch memo as the only reuse — the `--delta-cache 0`
+    /// escape hatch.
+    run_cache: Option<Arc<DeltaCache>>,
+    /// Scratch fired-rule bitmask (one run-cache key), reused per row.
+    key_buf: Vec<u64>,
+    /// Rows the run cache missed this call; computed in phase 2,
+    /// published in phase 3. Reused across calls.
+    miss_rows: Vec<u32>,
 }
 
 impl HostBackend {
     fn with_repr(repr: Repr, rows: usize, cols: usize) -> Self {
-        HostBackend { repr, rows, cols, memo: FxHashMap::default(), scratch: Vec::new() }
+        HostBackend {
+            repr,
+            rows,
+            cols,
+            memo: FxHashMap::default(),
+            scratch: Vec::new(),
+            run_cache: None,
+            key_buf: Vec::new(),
+            miss_rows: Vec::new(),
+        }
     }
 
     /// Build from a matrix, choosing dense vs CSR by density.
@@ -85,10 +120,15 @@ impl StepBackend for HostBackend {
         true
     }
 
-    /// Delta rows `out[b] = spikes[b] · M`, memoized per distinct spiking
-    /// vector within the batch. Both matrix representations iterate only
-    /// the fired rules of a row ([`SpikeRows::for_each_fired`]), so sparse
-    /// rows stay O(B · nnz) with no densification anywhere.
+    /// Delta rows `out[b] = spikes[b] · M`, memoized at two scopes: the
+    /// run-scoped [`DeltaCache`] (when attached) answers spiking vectors
+    /// seen in *any* earlier batch of the run, and the within-batch memo
+    /// collapses repeats inside this call. Three phases keep lock time
+    /// minimal: (1) cache lookups under its read lock, (2) miss rows
+    /// computed with no lock held, (3) fresh rows published under the
+    /// write lock. Both matrix representations iterate only the fired
+    /// rules of a row ([`SpikeRows::for_each_fired`]), so sparse rows
+    /// stay O(B · nnz) with no densification anywhere.
     fn step_deltas_into(&mut self, batch: &StepBatch<'_>, out: &mut Vec<i64>) -> Result<()> {
         batch.validate()?;
         if batch.n != self.cols || batch.r != self.rows {
@@ -100,11 +140,34 @@ impl StepBackend for HostBackend {
         let n = batch.n;
         out.clear();
         out.resize(batch.b * n, 0);
+        // phase 1 — run-cache lookups (read lock inside the cache); rows
+        // it cannot answer become this call's miss list. Without a cache
+        // every row is a "miss" and the method reduces exactly to the
+        // within-batch memo path.
+        let cache = self.run_cache.clone();
+        self.miss_rows.clear();
+        if let Some(cache) = &cache {
+            let kw = cache.key_words();
+            for b in 0..batch.b {
+                self.key_buf.clear();
+                self.key_buf.resize(kw, 0);
+                let key = &mut self.key_buf;
+                batch.spikes.for_each_fired(b, batch.r, |r| key[r >> 6] |= 1u64 << (r & 63));
+                if !cache.lookup(&self.key_buf, &mut out[b * n..(b + 1) * n]) {
+                    self.miss_rows.push(b as u32);
+                }
+            }
+        } else {
+            self.miss_rows.extend(0..batch.b as u32);
+        }
+        // phase 2 — compute the misses, one delta per distinct spiking
+        // vector: rows that fire the same rule set (ubiquitous on wide
+        // BFS frontiers) copy the first occurrence's delta instead of
+        // re-accumulating M rows
         self.memo.clear();
-        for b in 0..batch.b {
-            // one delta per distinct spiking vector: rows that fire the
-            // same rule set (ubiquitous on wide BFS frontiers) copy the
-            // first occurrence's delta instead of re-accumulating M rows
+        let miss = std::mem::take(&mut self.miss_rows);
+        for &b32 in &miss {
+            let b = b32 as usize;
             let h = batch.spikes.row_hash(b, batch.r);
             match self.memo.entry(h) {
                 std::collections::hash_map::Entry::Occupied(e) => {
@@ -120,19 +183,33 @@ impl StepBackend for HostBackend {
                     e.insert(b as u32);
                 }
             }
-            let orow = &mut out[b * n..(b + 1) * n];
-            match &self.repr {
-                Repr::Dense(m) => batch.spikes.for_each_fired(b, batch.r, |r| {
-                    for (o, &v) in orow.iter_mut().zip(m.row(r)) {
-                        *o += v;
-                    }
-                }),
-                Repr::Sparse(m) => {
-                    batch.spikes.for_each_fired(b, batch.r, |r| m.accumulate_row(r, orow))
-                }
+            accumulate_delta(&self.repr, batch, b, &mut out[b * n..(b + 1) * n]);
+        }
+        // phase 3 — publish the fresh rows (write lock inside the cache;
+        // duplicate keys within `miss` re-intern to the same id, no harm)
+        if let Some(cache) = &cache {
+            let kw = cache.key_words();
+            for &b32 in &miss {
+                let b = b32 as usize;
+                self.key_buf.clear();
+                self.key_buf.resize(kw, 0);
+                let key = &mut self.key_buf;
+                batch.spikes.for_each_fired(b, batch.r, |r| key[r >> 6] |= 1u64 << (r & 63));
+                cache.insert(&self.key_buf, &out[b * n..(b + 1) * n]);
             }
         }
+        self.miss_rows = miss;
         Ok(())
+    }
+
+    /// Adopt a run-scoped delta cache. Shape-checked: a cache built for
+    /// a different system is silently ignored rather than poisoning
+    /// results (attachment is an optimization, never a correctness
+    /// dependency).
+    fn attach_delta_cache(&mut self, cache: Arc<DeltaCache>) {
+        if cache.shape() == (self.rows, self.cols) {
+            self.run_cache = Some(cache);
+        }
     }
 
     /// Thin adapter over the native delta path: `configs + deltas`. Keeps
@@ -295,6 +372,84 @@ mod tests {
                 assert_eq!(got, want, "seed {seed} case {case} ({})", be.repr_name());
             }
         }
+    }
+
+    #[test]
+    fn run_cache_is_byte_identical_and_hits_across_batches() {
+        use crate::compute::DeltaCache;
+        use std::sync::Arc;
+        let m = m_pi();
+        let cache = Arc::new(DeltaCache::new(m.rows(), m.cols(), 64));
+        let mut cached = HostBackend::new(&m);
+        cached.attach_delta_cache(Arc::clone(&cache));
+        let mut plain = HostBackend::new(&m);
+        let cfg = [2i64, 1, 1, 5, 0, 3];
+        let spk = [1u8, 0, 1, 1, 0, 0, 1, 1, 1, 0];
+        let batch =
+            StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        // batch 1: cold cache — every row misses, output identical
+        plain.step_deltas_into(&batch, &mut want).unwrap();
+        cached.step_deltas_into(&batch, &mut got).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(cache.stats().hits, 0);
+        // batch 2: same spiking vectors — all rows hit, output identical
+        cached.step_deltas_into(&batch, &mut got).unwrap();
+        assert_eq!(got, want);
+        let s = cache.stats();
+        assert_eq!(s.hits, 2, "both rows answered from the run cache");
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn run_cache_randomized_equivalence() {
+        use crate::compute::DeltaCache;
+        use std::sync::Arc;
+        let seed = 0xCAFE;
+        let mut rng = Rng::new(seed);
+        for case in 0..15 {
+            let r = rng.range(1, 90); // spans 1- and 2-word bitmask keys
+            let n = rng.range(1, 12);
+            let data: Vec<i64> = (0..r * n)
+                .map(|_| if rng.chance(0.6) { 0 } else { rng.range(0, 8) as i64 - 4 })
+                .collect();
+            let m = TransitionMatrix::from_row_major(r, n, data).unwrap();
+            // tiny capacity on odd cases so epoch eviction is exercised
+            let cap = if case % 2 == 0 { 64 } else { 2 };
+            let cache = Arc::new(DeltaCache::new(r, n, cap));
+            let mut cached = HostBackend::new(&m);
+            cached.attach_delta_cache(Arc::clone(&cache));
+            let mut plain = HostBackend::new(&m);
+            for _batch_no in 0..4 {
+                let b = rng.range(1, 16);
+                let cfg: Vec<i64> = (0..b * n).map(|_| rng.range(0, 30) as i64).collect();
+                let spk: Vec<u8> = (0..b * r).map(|_| rng.chance(0.3) as u8).collect();
+                let batch =
+                    StepBatch { b, n, r, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+                let mut want = Vec::new();
+                let mut got = Vec::new();
+                plain.step_deltas_into(&batch, &mut want).unwrap();
+                cached.step_deltas_into(&batch, &mut got).unwrap();
+                assert_eq!(got, want, "seed {seed} case {case} cap {cap}");
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_cache_shape_is_ignored() {
+        use crate::compute::DeltaCache;
+        use std::sync::Arc;
+        let mut be = HostBackend::new(&m_pi());
+        be.attach_delta_cache(Arc::new(DeltaCache::new(7, 9, 16)));
+        assert!(be.run_cache.is_none(), "wrong-shape cache refused");
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let batch =
+            StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        let mut d = Vec::new();
+        be.step_deltas_into(&batch, &mut d).unwrap();
+        assert_eq!(d.len(), 3);
     }
 
     #[test]

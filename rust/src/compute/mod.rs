@@ -12,6 +12,7 @@
 //!   CUDA device role).
 
 mod bucket;
+pub mod delta_cache;
 mod host;
 pub mod pool;
 pub mod replay;
@@ -19,6 +20,7 @@ mod spikes;
 pub mod xla;
 
 pub use bucket::{Bucket, BucketPolicy};
+pub use delta_cache::{DeltaCache, DeltaCacheStats, DEFAULT_DELTA_CACHE};
 pub use host::HostBackend;
 pub use pool::{BackendFactory, BackendPool, HostBackendFactory, PooledBackend, XlaBackendFactory};
 pub use replay::{replay_on_device, verify_walk};
@@ -217,6 +219,14 @@ pub trait StepBackend: Send {
     /// Preferred maximum batch size (the engine chunks larger frontiers).
     fn max_batch(&self) -> usize {
         usize::MAX
+    }
+
+    /// Attach a run-scoped [`DeltaCache`] of `S → S·M` product rows.
+    /// Purely an optimization hook: backends without a native delta path
+    /// (or whose matrix shape disagrees with the cache) ignore it, and
+    /// results are byte-identical with or without a cache attached.
+    fn attach_delta_cache(&mut self, cache: std::sync::Arc<DeltaCache>) {
+        let _ = cache;
     }
 }
 

@@ -21,8 +21,9 @@
 //! batch, so *which* pooled instance evaluates a chunk never changes the
 //! result — only fold order matters, and that is fixed upstream.
 
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
+use super::delta_cache::DeltaCache;
 use super::{HostBackend, StepBackend};
 use crate::error::Result;
 use crate::matrix::TransitionMatrix;
@@ -176,6 +177,9 @@ pub struct BackendPool {
     size: usize,
     max_batch: usize,
     native_deltas: bool,
+    /// Run-scoped `S → S·M` cache shared by every pooled instance (set
+    /// via [`BackendPool::set_delta_cache`] before check-outs begin).
+    delta_cache: Option<Arc<DeltaCache>>,
 }
 
 impl BackendPool {
@@ -205,7 +209,25 @@ impl BackendPool {
             size,
             max_batch,
             native_deltas,
+            delta_cache: None,
         }
+    }
+
+    /// Attach one shared [`DeltaCache`] to every pooled instance, so a
+    /// spiking vector computed by any worker's check-out is a hit for
+    /// all of them. Must run before check-outs begin (`&mut self`
+    /// enforces exclusivity); backends that cannot use the cache ignore
+    /// the attachment.
+    pub fn set_delta_cache(&mut self, cache: Arc<DeltaCache>) {
+        for b in self.slots.get_mut().expect("pool lock poisoned").iter_mut() {
+            b.attach_delta_cache(Arc::clone(&cache));
+        }
+        self.delta_cache = Some(cache);
+    }
+
+    /// The shared delta cache, if one was attached.
+    pub fn delta_cache(&self) -> Option<&Arc<DeltaCache>> {
+        self.delta_cache.as_ref()
     }
 
     /// Backend name for reports.
@@ -356,5 +378,33 @@ mod tests {
     #[should_panic(expected = "at least one instance")]
     fn empty_pool_rejected() {
         let _ = BackendPool::from_backends("none".into(), Vec::new());
+    }
+
+    #[test]
+    fn pool_shares_one_delta_cache_across_instances() {
+        let m = build_matrix(&crate::generators::paper_pi());
+        let mut p = BackendPool::build(&HostBackendFactory::new(m.clone()), 2).unwrap();
+        assert!(p.delta_cache().is_none());
+        let cache = Arc::new(DeltaCache::new(m.rows(), m.cols(), 32));
+        p.set_delta_cache(Arc::clone(&cache));
+        assert!(p.delta_cache().is_some());
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let batch = StepBatch {
+            b: 1,
+            n: 3,
+            r: 5,
+            configs: &cfg,
+            spikes: crate::compute::SpikeRows::Dense(&spk),
+        };
+        let mut g1 = p.acquire();
+        let mut g2 = p.acquire();
+        let mut d1 = Vec::new();
+        let mut d2 = Vec::new();
+        g1.step_deltas_into(&batch, &mut d1).unwrap();
+        assert_eq!(cache.stats().hits, 0, "first instance computes");
+        g2.step_deltas_into(&batch, &mut d2).unwrap();
+        assert_eq!(cache.stats().hits, 1, "second instance hits what the first published");
+        assert_eq!(d1, d2);
     }
 }

@@ -28,9 +28,10 @@ pub use queue::LevelQueue;
 pub use worker::{LevelDriver, LevelOutcome};
 
 use crate::compute::{
-    BackendPool, HostBackend, HostBackendFactory, StepBackend, XlaBackendFactory,
+    BackendPool, DeltaCache, HostBackend, HostBackendFactory, StepBackend, XlaBackendFactory,
+    DEFAULT_DELTA_CACHE,
 };
-use crate::engine::{ConfigVector, StopReason, VisitedStore};
+use crate::engine::{ConfigVector, StopReason, StoreMode, VisitedStore};
 use crate::error::Result;
 use crate::matrix::{build_matrix, TransitionMatrix};
 use crate::snp::SnpSystem;
@@ -77,6 +78,11 @@ pub struct CoordinatorConfig {
     /// Stepping mode for dispatch (auto = delta on delta-native pools;
     /// output is identical either way).
     pub step_mode: crate::compute::StepMode,
+    /// Visited-arena storage mode (plain rows or varint parent-delta
+    /// compression; output is identical either way).
+    pub store_mode: StoreMode,
+    /// Run-scoped `S → S·M` delta-cache capacity (0 = off).
+    pub delta_cache: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -89,6 +95,8 @@ impl Default for CoordinatorConfig {
             batch_target: 256,
             spike_repr: crate::compute::SpikeRepr::Auto,
             step_mode: crate::compute::StepMode::Auto,
+            store_mode: StoreMode::Plain,
+            delta_cache: DEFAULT_DELTA_CACHE,
         }
     }
 }
@@ -134,7 +142,7 @@ impl<'a> Coordinator<'a> {
         let workers = self.effective_workers();
         // Build the backend pool: one independent instance per worker, so
         // the step phase can dispatch chunks concurrently.
-        let pool: BackendPool = match &mut self.cfg.backend {
+        let mut pool: BackendPool = match &mut self.cfg.backend {
             BackendChoice::Host => {
                 BackendPool::build(&HostBackendFactory::new(self.matrix.clone()), workers)?
             }
@@ -155,6 +163,14 @@ impl<'a> Coordinator<'a> {
                 BackendPool::from_backends(name, vec![owned])
             }
         };
+        if self.cfg.delta_cache > 0 {
+            // one run-scoped S→S·M memo shared by every pooled backend
+            pool.set_delta_cache(std::sync::Arc::new(DeltaCache::new(
+                self.sys.num_rules(),
+                self.sys.num_neurons(),
+                self.cfg.delta_cache,
+            )));
+        }
         let driver = worker::LevelDriver::new(
             self.sys,
             &self.matrix,
@@ -163,7 +179,11 @@ impl<'a> Coordinator<'a> {
         )
         .with_spike_repr(self.cfg.spike_repr)
         .with_step_mode(self.cfg.step_mode);
-        let mut visited = VisitedStore::new();
+        let mut visited = VisitedStore::with_mode(
+            self.cfg.store_mode,
+            self.sys.num_neurons(),
+            self.cfg.max_configs.unwrap_or(4096).min(1 << 16),
+        );
         visited.insert(c0.clone());
         let mut level = vec![c0];
         let mut halting: Vec<ConfigVector> = Vec::new();
@@ -285,6 +305,34 @@ mod tests {
                 CoordinatorConfig { workers: 3, step_mode: mode, ..Default::default() },
             );
             let rep = coord.run().unwrap();
+            orders.push(
+                rep.visited.in_order().iter().map(|c| c.to_string()).collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(orders[0], orders[1]);
+        assert_eq!(orders[1], orders[2]);
+    }
+
+    #[test]
+    fn store_mode_and_delta_cache_do_not_change_coordinator_output() {
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let mut orders = Vec::new();
+        for (mode, cache) in [
+            (StoreMode::Plain, DEFAULT_DELTA_CACHE),
+            (StoreMode::Compressed, DEFAULT_DELTA_CACHE),
+            (StoreMode::Compressed, 0),
+        ] {
+            let mut coord = Coordinator::new(
+                &sys,
+                CoordinatorConfig {
+                    workers: 3,
+                    store_mode: mode,
+                    delta_cache: cache,
+                    ..Default::default()
+                },
+            );
+            let rep = coord.run().unwrap();
+            assert_eq!(rep.visited.store_mode(), mode);
             orders.push(
                 rep.visited.in_order().iter().map(|c| c.to_string()).collect::<Vec<_>>(),
             );

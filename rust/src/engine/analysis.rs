@@ -164,7 +164,8 @@ fn summarize(
     let mut max_spikes = 0u64;
     let mut exceeded = false;
     let mut map = super::applicability::ApplicabilityMap::default();
-    for c in report.visited.iter_counts() {
+    let mut cur = report.visited.rows();
+    while let Some(c) = cur.next_row() {
         super::applicability::applicable_rules_into(sys, c, &mut map);
         if !map.is_halting() {
             max_branching = max_branching.max(map.psi());

@@ -11,7 +11,7 @@
 //! and the engine's hot loops pass ids instead of cloned `Vec<u64>`s.
 
 use super::config::ConfigVector;
-use super::store::{hash_counts, ConfigStore};
+use super::store::{hash_counts, ConfigStore, RowCursor, StoreMode};
 
 /// Insertion-ordered set of configurations, arena-backed.
 ///
@@ -34,6 +34,19 @@ impl VisitedStore {
         VisitedStore { store: ConfigStore::with_capacity(width, configs) }
     }
 
+    /// Empty store in `mode`, pre-sized for `configs` entries of `width`
+    /// neurons. Ids, order, and every rendering are byte-identical
+    /// across modes — only the bytes/config differ.
+    pub fn with_mode(mode: StoreMode, width: usize, configs: usize) -> Self {
+        VisitedStore { store: ConfigStore::with_mode_capacity(mode, width, configs) }
+    }
+
+    /// The storage mode of the backing arena.
+    #[inline]
+    pub fn store_mode(&self) -> StoreMode {
+        self.store.mode()
+    }
+
     /// Insert; returns `true` if the configuration was new.
     pub fn insert(&mut self, c: ConfigVector) -> bool {
         self.store.intern(c.as_slice()).1
@@ -45,6 +58,15 @@ impl VisitedStore {
     #[inline]
     pub fn intern(&mut self, counts: &[u64]) -> (u32, bool) {
         self.store.intern(counts)
+    }
+
+    /// [`VisitedStore::intern`] with a delta hint: `parent` is the id of
+    /// the configuration this one was generated from, letting a
+    /// compressed arena store the child as a sparse delta. Plain mode
+    /// ignores the hint; results are identical either way.
+    #[inline]
+    pub fn intern_with_parent(&mut self, counts: &[u64], parent: Option<u32>) -> (u32, bool) {
+        self.store.intern_with_parent(counts, parent)
     }
 
     /// Membership test.
@@ -60,10 +82,19 @@ impl VisitedStore {
     }
 
     /// The count slice of an interned configuration (ids are handed out
-    /// by [`VisitedStore::intern`] in insertion order).
+    /// by [`VisitedStore::intern`] in insertion order). Plain mode only —
+    /// mode-neutral readers use [`VisitedStore::read_counts`].
     #[inline]
     pub fn counts_of(&self, id: u32) -> &[u64] {
         self.store.get(id)
+    }
+
+    /// Reconstruct the count vector of `id` into `out` (cleared first).
+    /// Works in both storage modes; this is the hot-path read — the
+    /// engine keeps one reusable buffer per loop.
+    #[inline]
+    pub fn read_counts(&self, id: u32, out: &mut Vec<u64>) {
+        self.store.get_into(id, out);
     }
 
     /// Number of distinct configurations seen.
@@ -78,22 +109,43 @@ impl VisitedStore {
         self.store.is_empty()
     }
 
-    /// Iterate the raw count slices in insertion order (no allocation).
-    pub fn iter_counts(&self) -> impl Iterator<Item = &[u64]> + '_ {
-        self.store.iter()
+    /// Lending cursor over the count rows in insertion order. Plain mode
+    /// lends arena slices zero-copy; compressed mode decodes each row
+    /// into the cursor's buffer. This is the report-rendering iterator —
+    /// no per-row allocation in either mode.
+    #[inline]
+    pub fn rows(&self) -> RowCursor<'_> {
+        self.store.rows()
+    }
+
+    /// Visit every count row in insertion order.
+    #[inline]
+    pub fn for_each_counts(&self, mut f: impl FnMut(&[u64])) {
+        self.store.for_each(|_, row| f(row));
     }
 
     /// Insertion-order snapshot — the paper's `allGenCk` as owned
-    /// [`ConfigVector`]s. Allocates one vector per configuration; meant
-    /// for reports and tests, not the exploration hot path (which reads
-    /// [`VisitedStore::counts_of`] by id).
+    /// [`ConfigVector`]s. Allocates one vector per configuration; kept
+    /// for tests and equivalence checks that need ownership. Reports
+    /// render through the borrowing [`VisitedStore::rows`] cursor, and
+    /// the exploration hot path reads [`VisitedStore::read_counts`] by
+    /// id.
     pub fn in_order(&self) -> Vec<ConfigVector> {
-        self.store.iter().map(ConfigVector::from_slice).collect()
+        let mut all = Vec::with_capacity(self.store.len());
+        self.store.for_each(|_, row| all.push(ConfigVector::from_slice(row)));
+        all
+    }
+
+    /// Bytes of configuration payload held by the backing arena (see
+    /// [`ConfigStore::arena_bytes`] for what's counted).
+    #[inline]
+    pub fn arena_bytes(&self) -> usize {
+        self.store.arena_bytes()
     }
 
     /// Render as the paper prints it: `['2-1-1', '2-1-2', …]`, composed
-    /// into one exactly pre-sized `String` straight from the arena (no
-    /// per-config `String`s, no join).
+    /// into one exactly pre-sized `String` via the borrowing row cursor
+    /// (no per-config `String`s, no join, no snapshot vector).
     pub fn render_all_gen_ck(&self) -> String {
         fn dec_len(mut v: u64) -> usize {
             let mut d = 1;
@@ -106,22 +158,30 @@ impl VisitedStore {
         // exact byte count: brackets + per config 2 quotes, (w-1) dashes,
         // the digits, and ", " between entries
         let mut cap = 2;
-        for (i, c) in self.store.iter().enumerate() {
-            if i > 0 {
-                cap += 2;
+        {
+            let mut cur = self.store.rows();
+            let mut i = 0usize;
+            while let Some(c) = cur.next_row() {
+                if i > 0 {
+                    cap += 2;
+                }
+                cap += 2 + c.len().saturating_sub(1);
+                cap += c.iter().map(|&v| dec_len(v)).sum::<usize>();
+                i += 1;
             }
-            cap += 2 + c.len().saturating_sub(1);
-            cap += c.iter().map(|&v| dec_len(v)).sum::<usize>();
         }
         let mut s = String::with_capacity(cap);
         s.push('[');
-        for (i, c) in self.store.iter().enumerate() {
+        let mut cur = self.store.rows();
+        let mut i = 0usize;
+        while let Some(c) = cur.next_row() {
             if i > 0 {
                 s.push_str(", ");
             }
             s.push('\'');
             super::config::write_dashed(c, &mut s).expect("writing to a String cannot fail");
             s.push('\'');
+            i += 1;
         }
         s.push(']');
         debug_assert_eq!(s.len(), cap, "pre-size estimate must be exact");
@@ -154,11 +214,18 @@ pub struct ShardedVisitedStore {
 }
 
 impl ShardedVisitedStore {
-    /// Create with `2^log2_shards` stripes.
+    /// Create with `2^log2_shards` plain-mode stripes.
     pub fn new(log2_shards: u32) -> Self {
+        ShardedVisitedStore::with_mode(log2_shards, StoreMode::Plain)
+    }
+
+    /// Create with `2^log2_shards` stripes in `mode`. Compressed stripes
+    /// halve the pre-filter's footprint the same way the fold-side
+    /// [`VisitedStore`] does; membership answers are identical.
+    pub fn with_mode(log2_shards: u32, mode: StoreMode) -> Self {
         let n = 1usize << log2_shards;
         ShardedVisitedStore {
-            shards: (0..n).map(|_| std::sync::Mutex::new(ConfigStore::new())).collect(),
+            shards: (0..n).map(|_| std::sync::Mutex::new(ConfigStore::with_mode(mode))).collect(),
             mask: n - 1,
         }
     }
@@ -167,6 +234,11 @@ impl ShardedVisitedStore {
     /// rare at typical worker counts without wasting memory.
     pub fn with_default_shards() -> Self {
         ShardedVisitedStore::new(6)
+    }
+
+    /// [`ShardedVisitedStore::with_default_shards`] in `mode`.
+    pub fn with_default_shards_mode(mode: StoreMode) -> Self {
+        ShardedVisitedStore::with_mode(6, mode)
     }
 
     fn shard_of(&self, counts: &[u64]) -> usize {
@@ -199,10 +271,12 @@ impl ShardedVisitedStore {
         self.contains_slice(c.as_slice())
     }
 
-    /// Membership test on a raw count slice.
+    /// Membership test on a raw count slice. The stripe lock already
+    /// hands out `&mut`, so this probes with the stripe's own decode
+    /// scratch — allocation-free in both storage modes.
     pub fn contains_slice(&self, counts: &[u64]) -> bool {
         let s = self.shard_of(counts);
-        self.shards[s].lock().unwrap().contains(counts)
+        self.shards[s].lock().unwrap().contains_probe(counts)
     }
 
     /// Total entries across stripes.
@@ -317,8 +391,38 @@ mod tests {
         assert_eq!(v.counts_of(1), &[2, 1, 2]);
         assert!(v.contains_slice(&[2, 1, 2]));
         assert!(!v.contains_slice(&[0, 0, 0]));
-        let flat: Vec<&[u64]> = v.iter_counts().collect();
-        assert_eq!(flat, vec![&[2u64, 1, 1][..], &[2, 1, 2]]);
+        let mut flat: Vec<Vec<u64>> = Vec::new();
+        v.for_each_counts(|c| flat.push(c.to_vec()));
+        assert_eq!(flat, vec![vec![2u64, 1, 1], vec![2, 1, 2]]);
+    }
+
+    #[test]
+    fn compressed_mode_is_byte_identical() {
+        let mut plain = VisitedStore::new();
+        let mut comp = VisitedStore::with_mode(StoreMode::Compressed, 3, 8);
+        let rows: &[&[u64]] = &[&[2, 1, 1], &[2, 1, 2], &[1, 1, 2], &[2, 1, 1], &[10, 0, 123456]];
+        for (i, r) in rows.iter().enumerate() {
+            let parent = if i == 0 { None } else { Some(0u32) };
+            assert_eq!(plain.intern(r), comp.intern_with_parent(r, parent), "row {i}");
+        }
+        assert_eq!(plain.render_all_gen_ck(), comp.render_all_gen_ck());
+        assert_eq!(plain.in_order(), comp.in_order());
+        let mut buf = Vec::new();
+        comp.read_counts(3, &mut buf);
+        assert_eq!(buf, vec![10, 0, 123456]);
+        assert!(comp.contains_slice(&[1, 1, 2]));
+        assert!(comp.arena_bytes() > 0);
+        assert_eq!(comp.store_mode(), StoreMode::Compressed);
+    }
+
+    #[test]
+    fn striped_store_compressed_mode_membership() {
+        let s = ShardedVisitedStore::with_default_shards_mode(StoreMode::Compressed);
+        assert!(s.insert_slice(&[2, 1, 1]));
+        assert!(!s.insert_slice(&[2, 1, 1]));
+        assert!(s.contains_slice(&[2, 1, 1]));
+        assert!(!s.contains_slice(&[1, 1, 2]));
+        assert_eq!(s.len(), 1);
     }
 
     #[test]

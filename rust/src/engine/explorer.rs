@@ -31,8 +31,11 @@ use super::config::ConfigVector;
 use super::dedup::VisitedStore;
 use super::spiking::{SpikingEnumeration, SpikingVector};
 use super::stop::StopReason;
+use super::store::StoreMode;
 use super::tree::ComputationTree;
-use crate::compute::{BackendFactory, HostBackendFactory, StepBackend, StepBatch};
+use crate::compute::{
+    BackendFactory, DeltaCache, HostBackendFactory, StepBackend, StepBatch, DEFAULT_DELTA_CACHE,
+};
 use crate::matrix::{build_matrix, TransitionMatrix};
 use crate::snp::SnpSystem;
 
@@ -80,6 +83,16 @@ pub struct ExploreOptions {
     /// purely an execution-strategy knob — output is byte-identical in
     /// every mode.
     pub step_mode: crate::compute::StepMode,
+    /// Visited-arena storage mode (`--store-mode`): plain flat `u64`
+    /// rows or varint parent-delta compression. Another pure
+    /// execution-strategy knob — ids, `allGenCk` and every report are
+    /// byte-identical in both modes.
+    pub store_mode: StoreMode,
+    /// Run-scoped `S → S·M` delta-cache capacity (`--delta-cache N`,
+    /// distinct spiking vectors). `0` disables the cache, restoring the
+    /// per-batch-memo-only behavior exactly. Ignored on shared-pool runs
+    /// (the pool's own cache, if any, is used instead).
+    pub delta_cache: usize,
 }
 
 impl ExploreOptions {
@@ -95,6 +108,8 @@ impl ExploreOptions {
             workers: 1,
             spike_repr: crate::compute::SpikeRepr::Auto,
             step_mode: crate::compute::StepMode::Auto,
+            store_mode: StoreMode::Plain,
+            delta_cache: DEFAULT_DELTA_CACHE,
         }
     }
 
@@ -150,6 +165,18 @@ impl ExploreOptions {
         self.step_mode = mode;
         self
     }
+
+    /// Pick the visited-arena storage mode (`--store-mode`).
+    pub fn store_mode(mut self, mode: StoreMode) -> Self {
+        self.store_mode = mode;
+        self
+    }
+
+    /// Bound the run-scoped delta cache (`--delta-cache`; 0 disables).
+    pub fn delta_cache(mut self, capacity: usize) -> Self {
+        self.delta_cache = capacity;
+        self
+    }
 }
 
 /// Counters accumulated during a run.
@@ -173,6 +200,21 @@ pub struct ExploreStats {
     pub spike_repr: &'static str,
     /// Concrete stepping mode used (`"batch"`/`"delta"`).
     pub step_mode: &'static str,
+    /// Visited-arena storage mode used (`"plain"`/`"compressed"`).
+    pub store_mode: &'static str,
+    /// Bytes of configuration payload held by the visited arena at the
+    /// end of the run (peak — the arena only grows). Divide by the
+    /// visited count for bytes/config.
+    pub arena_bytes: u64,
+    /// Run-scoped delta-cache capacity in effect (0 = cache off).
+    pub delta_cache_capacity: usize,
+    /// Delta-cache hits attributed to this run. On a shared (pool) cache
+    /// the counters are diffed over the run window, so concurrent runs'
+    /// traffic may bleed in — per-run figures are exact only for
+    /// run-private caches.
+    pub delta_hits: u64,
+    /// Delta-cache misses attributed to this run (same caveat).
+    pub delta_misses: u64,
 }
 
 /// Result of an exploration.
@@ -214,14 +256,14 @@ impl ExploreReport {
             ("system", J::str(system)),
             ("configs", J::num(self.visited.len() as f64)),
             ("depth_reached", J::num(f64::from(self.depth_reached))),
-            (
-                "all_gen_ck",
-                J::arr(
-                    self.visited
-                        .iter_counts()
-                        .map(|c| J::str(ConfigVector::render_dashed(c))),
-                ),
-            ),
+            ("all_gen_ck", {
+                let mut all = Vec::with_capacity(self.visited.len());
+                let mut cur = self.visited.rows();
+                while let Some(c) = cur.next_row() {
+                    all.push(J::str(ConfigVector::render_dashed(c)));
+                }
+                J::arr(all)
+            }),
             (
                 "halting",
                 J::arr(self.halting_configs.iter().map(|c| J::str(c.to_string()))),
@@ -372,6 +414,21 @@ impl<'a> Explorer<'a> {
                 BackendSource::Single(_) => {}
             }
         }
+        // Resolve the run-scoped delta cache. Shared pools keep their own
+        // cache (attached at pool construction, shared across runs); the
+        // Single/Factory sources get a fresh run-private cache, so the
+        // hit/miss stats below are exact per run.
+        let is_pool = matches!(&self.source, BackendSource::Pool(_));
+        let run_cache: Option<std::sync::Arc<DeltaCache>> = match &self.source {
+            BackendSource::Pool(p) => p.delta_cache().cloned(),
+            _ => (self.opts.delta_cache > 0).then(|| {
+                std::sync::Arc::new(DeltaCache::new(
+                    self.sys.num_rules(),
+                    self.sys.num_neurons(),
+                    self.opts.delta_cache,
+                ))
+            }),
+        };
         let mut created;
         let mut pooled;
         let backend: &mut dyn StepBackend = match &mut self.source {
@@ -385,7 +442,12 @@ impl<'a> Explorer<'a> {
                 &mut *pooled
             }
         };
-        run_serial(self.sys, backend, &self.opts, c0)
+        if !is_pool {
+            if let Some(cache) = &run_cache {
+                backend.attach_delta_cache(std::sync::Arc::clone(cache));
+            }
+        }
+        run_serial(self.sys, backend, &self.opts, c0, run_cache.as_deref())
     }
 }
 
@@ -397,12 +459,16 @@ pub(crate) fn visited_capacity_hint(max_configs: Option<usize>) -> usize {
 }
 
 /// The serial reference path: the paper's Algorithm 1, one thread, one
-/// backend. Every other execution mode is tested against this.
+/// backend. Every other execution mode is tested against this. `cache`
+/// is the run's delta cache when one is attached to `backend` — passed
+/// alongside only so its counters land in the stats (the backend uses
+/// it through its own `Arc`).
 fn run_serial(
     sys: &SnpSystem,
     backend: &mut dyn StepBackend,
     opts: &ExploreOptions,
     c0: ConfigVector,
+    cache: Option<&DeltaCache>,
 ) -> ExploreReport {
     let start = Instant::now();
     let n = sys.num_neurons();
@@ -414,17 +480,21 @@ fn run_serial(
     // Resolve the stepping mode once per run: delta when the backend
     // computes `S·M` natively, full batches otherwise.
     let use_delta = opts.step_mode.use_delta(backend.native_deltas());
+    // Counter baseline for per-run cache stats (the cache may be shared).
+    let cache_base = cache.map(|c| c.snapshot());
 
     // Pre-size the arena + id table toward the run's own bound (clamped —
     // a huge --configs cap must not pre-commit memory the exploration may
     // never touch); growth handles the tail.
-    let mut visited = VisitedStore::with_capacity(n, visited_capacity_hint(opts.max_configs));
+    let mut visited =
+        VisitedStore::with_mode(opts.store_mode, n, visited_capacity_hint(opts.max_configs));
     let mut tree = if opts.record_tree { Some(ComputationTree::new()) } else { None };
     let mut halting_configs = Vec::new();
     let mut stats = ExploreStats {
         workers: 1,
         spike_repr: crate::compute::spike_repr_name(use_sparse),
         step_mode: crate::compute::step_mode_name(use_delta),
+        store_mode: opts.store_mode.name(),
         ..ExploreStats::default()
     };
     let mut depth_reached = 0u32;
@@ -441,8 +511,10 @@ fn run_serial(
     // `child_buf`, and interning copies into the arena only when new.
     let mut cfg_buf: Vec<i64> = Vec::new();
     let mut spk_buf = crate::compute::SpikeBuf::with_repr(use_sparse, r);
-    // (parent node, parent depth) per batch row.
-    let mut meta: Vec<(usize, u32)> = Vec::new();
+    // (parent node, parent depth, parent arena id) per batch row. The id
+    // rides along so folding can hand the compressed arena its delta
+    // parent.
+    let mut meta: Vec<(usize, u32, u32)> = Vec::new();
     // spiking vectors per row, recorded only when the tree is on
     let mut spk_meta: Vec<SpikingVector> = Vec::new();
     let record_tree = tree.is_some();
@@ -452,6 +524,9 @@ fn run_serial(
     let mut step_buf: Vec<i64> = Vec::new();
     // reusable candidate-child row
     let mut child_buf: Vec<u64> = Vec::with_capacity(n);
+    // reusable parent-row buffer: plain arenas could lend slices, but the
+    // compressed arena must decode — one buffer serves both modes
+    let mut parent_buf: Vec<u64> = Vec::with_capacity(n);
 
     let mut stop = StopReason::Exhausted;
     let mut depth_bounded = false;
@@ -486,7 +561,8 @@ fn run_serial(
                     continue;
                 }
             }
-            let cfg = visited.counts_of(pending.id);
+            visited.read_counts(pending.id, &mut parent_buf);
+            let cfg = parent_buf.as_slice();
             applicable_rules_into(sys, cfg, &mut map);
             stats.expanded += 1;
             if map.is_halting() {
@@ -503,7 +579,7 @@ fn run_serial(
                 for s in SpikingEnumeration::new(&map, r) {
                     cfg_buf.extend(cfg.iter().map(|&x| x as i64));
                     spk_buf.push_byte_row(&s.to_bytes());
-                    meta.push((pending.node, pending.depth));
+                    meta.push((pending.node, pending.depth, pending.id));
                     spk_meta.push(s);
                 }
             } else {
@@ -512,7 +588,7 @@ fn run_serial(
                 let mut e = SpikingEnumeration::new(&map, r);
                 while e.fill_next_into(&mut spk_buf) {
                     cfg_buf.extend(cfg.iter().map(|&x| x as i64));
-                    meta.push((pending.node, pending.depth));
+                    meta.push((pending.node, pending.depth, pending.id));
                 }
             }
         }
@@ -541,7 +617,7 @@ fn run_serial(
         // row builds in `child_buf` (checked non-negative `parent +
         // delta` in delta mode) and interns straight from it — a heap
         // copy happens only for configurations never seen before.
-        for (row, (parent_node, parent_depth)) in meta.drain(..).enumerate() {
+        for (row, (parent_node, parent_depth, parent_id)) in meta.drain(..).enumerate() {
             if let Some(maxc) = opts.max_configs {
                 if visited.len() >= maxc {
                     stop = StopReason::MaxConfigs;
@@ -559,7 +635,7 @@ fn run_serial(
                 child_buf.push(v as u64);
             }
             let depth = parent_depth + 1;
-            let (child_id, is_new) = visited.intern(&child_buf);
+            let (child_id, is_new) = visited.intern_with_parent(&child_buf, Some(parent_id));
             // tree mode owns its configurations: build the child once,
             // clone into the edge, reuse for the node lookup
             let node = match tree.as_mut() {
@@ -589,6 +665,13 @@ fn run_serial(
         stop = StopReason::ZeroConfig;
     }
     stats.elapsed = start.elapsed();
+    stats.arena_bytes = visited.arena_bytes() as u64;
+    if let (Some(c), Some((h0, m0))) = (cache, cache_base) {
+        stats.delta_cache_capacity = c.capacity();
+        let (h1, m1) = c.snapshot();
+        stats.delta_hits = h1.saturating_sub(h0);
+        stats.delta_misses = m1.saturating_sub(m0);
+    }
     ExploreReport { visited, stop, depth_reached, halting_configs, tree, stats }
 }
 
@@ -830,6 +913,85 @@ mod tests {
         assert_eq!(reference.stats.step_mode, "batch");
         let auto = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(3)).run();
         assert_eq!(auto.stats.step_mode, "delta", "host backend is delta-native");
+    }
+
+    #[test]
+    fn store_mode_never_changes_output() {
+        let sys = crate::generators::paper_pi();
+        let reference = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(5)).run();
+        for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+            let mut opts = ExploreOptions::breadth_first()
+                .max_depth(5)
+                .store_mode(StoreMode::Compressed);
+            opts.order = order;
+            let rep = Explorer::new(&sys, opts).run();
+            if order == SearchOrder::BreadthFirst {
+                assert_eq!(rep.visited.in_order(), reference.visited.in_order());
+                assert_eq!(rep.render_all_gen_ck(), reference.render_all_gen_ck());
+                assert_eq!(
+                    rep.to_json("paper_pi").to_string_pretty(),
+                    reference.to_json("paper_pi").to_string_pretty()
+                );
+            }
+            assert_eq!(rep.stats.store_mode, "compressed");
+            assert!(rep.stats.arena_bytes > 0);
+        }
+        assert_eq!(reference.stats.store_mode, "plain");
+        assert_eq!(
+            reference.stats.arena_bytes,
+            (reference.visited.len() * sys.num_neurons() * 8) as u64,
+            "plain arena is exactly 8 bytes per count"
+        );
+    }
+
+    #[test]
+    fn delta_cache_hits_accumulate_and_zero_disables() {
+        let sys = crate::generators::paper_pi();
+        let with = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(6)).run();
+        assert_eq!(with.stats.delta_cache_capacity, DEFAULT_DELTA_CACHE);
+        assert!(
+            with.stats.delta_hits > 0,
+            "Π re-fires the same spiking vectors at every depth"
+        );
+        assert!(with.stats.delta_misses > 0, "cold cache must miss first");
+        let without = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(6).delta_cache(0),
+        )
+        .run();
+        assert_eq!(without.stats.delta_cache_capacity, 0, "0 means: no cache attached");
+        assert_eq!((without.stats.delta_hits, without.stats.delta_misses), (0, 0));
+        assert_eq!(with.visited.in_order(), without.visited.in_order());
+        assert_eq!(with.halting_configs, without.halting_configs);
+        assert_eq!(with.stop, without.stop);
+    }
+
+    #[test]
+    fn compressed_store_with_all_execution_knobs() {
+        // store-mode × step-mode × workers: every combination must agree
+        // with the plain serial reference byte for byte.
+        use crate::compute::StepMode;
+        let sys = crate::generators::paper_pi();
+        let reference = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(4)).run();
+        for mode in [StepMode::Batch, StepMode::Delta] {
+            for w in [1usize, 4] {
+                let rep = Explorer::new(
+                    &sys,
+                    ExploreOptions::breadth_first()
+                        .max_depth(4)
+                        .workers(w)
+                        .step_mode(mode)
+                        .store_mode(StoreMode::Compressed),
+                )
+                .run();
+                assert_eq!(
+                    rep.visited.in_order(),
+                    reference.visited.in_order(),
+                    "{mode:?} workers={w}"
+                );
+                assert_eq!(rep.stats.store_mode, "compressed");
+            }
+        }
     }
 
     #[test]

@@ -21,10 +21,10 @@ pub use applicability::{applicable_rules, applicable_rules_into, ApplicabilityMa
 pub use input::InputSchedule;
 pub use config::ConfigVector;
 pub use dedup::{ShardedVisited, ShardedVisitedStore, VisitedStore};
-pub use explorer::{ExploreOptions, Explorer, ExploreReport, SearchOrder};
+pub use explorer::{ExploreOptions, Explorer, ExploreReport, ExploreStats, SearchOrder};
 pub use random_walk::{RandomWalk, WalkRecord};
 pub use spiking::{SpikingEnumeration, SpikingVector};
 pub use stop::StopReason;
-pub use store::ConfigStore;
+pub use store::{ConfigStore, RowCursor, StoreMode};
 pub use trace::{generated_set, generated_set_budgeted, generated_set_with_workers, SpikeTrace};
 pub use tree::ComputationTree;

@@ -49,7 +49,7 @@ use super::dedup::{ShardedVisitedStore, VisitedStore};
 use super::explorer::{ExploreOptions, ExploreReport, ExploreStats, SearchOrder};
 use super::spiking::SpikingEnumeration;
 use super::stop::StopReason;
-use crate::compute::{BackendFactory, BackendPool, SpikeBuf, StepBatch};
+use crate::compute::{BackendFactory, BackendPool, DeltaCache, SpikeBuf, StepBatch};
 use crate::snp::SnpSystem;
 
 /// Rows per dispatched chunk when the caller didn't pin `batch_cap`.
@@ -69,10 +69,13 @@ struct WorkChunk {
     spikes: SpikeBuf,
     /// Child depth per row (parent depth + 1).
     depths: Vec<u32>,
+    /// Parent arena id per row — rides out to the worker and back so the
+    /// fold can hand the compressed arena its delta parent.
+    parents: Vec<u32>,
 }
 
 /// A chunk's surviving children, in row order, as **flat count rows**
-/// (`depths.len() × N` u64s) — the channel ships two vectors per chunk
+/// (`depths.len() × N` u64s) — the channel ships flat vectors per chunk
 /// instead of one heap `ConfigVector` per child. `error` carries a
 /// backend failure to the main thread, which panics there (matching the
 /// serial path) — a worker-side panic would strand its seq and hang the
@@ -81,6 +84,7 @@ struct ChunkResult {
     seq: u64,
     counts: Vec<u64>,
     depths: Vec<u32>,
+    parents: Vec<u32>,
     error: Option<String>,
 }
 
@@ -96,6 +100,7 @@ struct ChunkBuf {
     configs: Vec<i64>,
     spikes: SpikeBuf,
     depths: Vec<u32>,
+    parents: Vec<u32>,
     halting: Vec<ConfigVector>,
 }
 
@@ -105,6 +110,7 @@ impl ChunkBuf {
             configs: Vec::new(),
             spikes: SpikeBuf::with_repr(use_sparse, r),
             depths: Vec::new(),
+            parents: Vec::new(),
             halting: Vec::new(),
         }
     }
@@ -128,7 +134,15 @@ pub(crate) fn run_pipelined(
     workers: usize,
     c0: ConfigVector,
 ) -> ExploreReport {
-    let pool = BackendPool::build(factory, workers).expect("backend factory failed");
+    let mut pool = BackendPool::build(factory, workers).expect("backend factory failed");
+    if opts.delta_cache > 0 {
+        // one run-scoped cache shared by every worker's backend
+        pool.set_delta_cache(Arc::new(DeltaCache::new(
+            sys.num_rules(),
+            sys.num_neurons(),
+            opts.delta_cache,
+        )));
+    }
     run_pipelined_on(sys, &pool, opts, c0)
 }
 
@@ -171,9 +185,13 @@ pub(crate) fn run_pipelined_on(
         }
     };
     let max_inflight = (workers as u64).saturating_mul(3).max(2);
+    // Counter baseline for per-run cache stats (a serve pool's cache is
+    // shared across runs; diffing attributes this window's traffic).
+    let cache_base = pool.delta_cache().map(|c| c.snapshot());
 
-    let store = ShardedVisitedStore::with_default_shards();
-    let mut visited = VisitedStore::with_capacity(
+    let store = ShardedVisitedStore::with_default_shards_mode(opts.store_mode);
+    let mut visited = VisitedStore::with_mode(
+        opts.store_mode,
         n,
         super::explorer::visited_capacity_hint(opts.max_configs),
     );
@@ -184,6 +202,7 @@ pub(crate) fn run_pipelined_on(
         workers,
         spike_repr: crate::compute::spike_repr_name(use_sparse),
         step_mode: crate::compute::step_mode_name(use_delta),
+        store_mode: opts.store_mode.name(),
         ..ExploreStats::default()
     };
     let mut halting_configs: Vec<ConfigVector> = Vec::new();
@@ -252,6 +271,7 @@ pub(crate) fn run_pipelined_on(
                             seq: chunk.seq,
                             counts: Vec::new(),
                             depths: Vec::new(),
+                            parents: Vec::new(),
                             error: Some(e),
                         },
                         Ok(full) => {
@@ -274,11 +294,14 @@ pub(crate) fn run_pipelined_on(
 
         let mut next_seq: u64 = 0;
         let mut next_fold: u64 = 0;
-        let mut ready: std::collections::HashMap<u64, (Vec<u64>, Vec<u32>)> =
+        let mut ready: std::collections::HashMap<u64, (Vec<u64>, Vec<u32>, Vec<u32>)> =
             std::collections::HashMap::new();
         let mut halting_by_seq: std::collections::HashMap<u64, Vec<ConfigVector>> =
             std::collections::HashMap::new();
         let mut map = ApplicabilityMap::default();
+        // reusable parent-row buffer (compressed arenas decode into it;
+        // plain arenas copy — one code path either way)
+        let mut parent_buf: Vec<u64> = Vec::with_capacity(n);
 
         'outer: loop {
             // ---- fold every result available, in canonical seq order ----
@@ -286,9 +309,9 @@ pub(crate) fn run_pipelined_on(
                 if let Some(err) = res.error {
                     panic!("{err}"); // scope unwinds: channels drop, workers exit
                 }
-                ready.insert(res.seq, (res.counts, res.depths));
+                ready.insert(res.seq, (res.counts, res.depths, res.parents));
             }
-            while let Some((counts, depths)) = ready.remove(&next_fold) {
+            while let Some((counts, depths, parents)) = ready.remove(&next_fold) {
                 if let Some(h) = halting_by_seq.remove(&next_fold) {
                     halting_configs.extend(h);
                 }
@@ -302,7 +325,7 @@ pub(crate) fn run_pipelined_on(
                     // intern straight from the flat payload: one arena
                     // copy when new, nothing when a late duplicate
                     let slice = &counts[i * n..(i + 1) * n];
-                    let (id, is_new) = visited.intern(slice);
+                    let (id, is_new) = visited.intern_with_parent(slice, Some(parents[i]));
                     if is_new {
                         store.insert_slice(slice);
                         depth_reached = depth_reached.max(depth);
@@ -348,7 +371,8 @@ pub(crate) fn run_pipelined_on(
                             continue;
                         }
                     }
-                    let cfg = visited.counts_of(pending.id);
+                    visited.read_counts(pending.id, &mut parent_buf);
+                    let cfg = parent_buf.as_slice();
                     applicable_rules_into(sys, cfg, &mut map);
                     stats.expanded += 1;
                     if map.is_halting() {
@@ -363,6 +387,7 @@ pub(crate) fn run_pipelined_on(
                     while e.fill_next_into(&mut chunk.spikes) {
                         chunk.configs.extend(cfg.iter().map(|&x| x as i64));
                         chunk.depths.push(pending.depth + 1);
+                        chunk.parents.push(pending.id);
                     }
                     round_rows += chunk.rows() - before;
                     if chunk.rows() >= chunk_target {
@@ -396,7 +421,7 @@ pub(crate) fn run_pipelined_on(
                 if let Some(err) = res.error {
                     panic!("{err}");
                 }
-                ready.insert(res.seq, (res.counts, res.depths));
+                ready.insert(res.seq, (res.counts, res.depths, res.parents));
                 continue;
             }
             break; // frontier drained, nothing in flight: exhausted
@@ -414,6 +439,13 @@ pub(crate) fn run_pipelined_on(
         stop = StopReason::ZeroConfig;
     }
     stats.elapsed = start.elapsed();
+    stats.arena_bytes = visited.arena_bytes() as u64;
+    if let (Some(c), Some((h0, m0))) = (pool.delta_cache(), cache_base) {
+        stats.delta_cache_capacity = c.capacity();
+        let (h1, m1) = c.snapshot();
+        stats.delta_hits = h1.saturating_sub(h0);
+        stats.delta_misses = m1.saturating_sub(m0);
+    }
     ExploreReport { visited, stop, depth_reached, halting_configs, tree: None, stats }
 }
 
@@ -432,6 +464,7 @@ fn collect_fresh(
 ) -> ChunkResult {
     let mut counts = Vec::new();
     let mut depths = Vec::new();
+    let mut parents = Vec::new();
     for row in 0..chunk.rows {
         row_buf.clear();
         for j in 0..n {
@@ -445,6 +478,7 @@ fn collect_fresh(
                     seq: chunk.seq,
                     counts: Vec::new(),
                     depths: Vec::new(),
+                    parents: Vec::new(),
                     error: Some(format!("negative step result: spike count {v}")),
                 };
             }
@@ -454,9 +488,10 @@ fn collect_fresh(
         if !store.contains_slice(row_buf) {
             counts.extend_from_slice(row_buf);
             depths.push(chunk.depths[row]);
+            parents.push(chunk.parents[row]);
         }
     }
-    ChunkResult { seq: chunk.seq, counts, depths, error: None }
+    ChunkResult { seq: chunk.seq, counts, depths, parents, error: None }
 }
 
 /// Assign the next seq to a finished chunk and hand it to the workers
@@ -465,7 +500,7 @@ fn dispatch(
     chunk: ChunkBuf,
     next_seq: &mut u64,
     work_tx: &mpsc::Sender<WorkChunk>,
-    ready: &mut std::collections::HashMap<u64, (Vec<u64>, Vec<u32>)>,
+    ready: &mut std::collections::HashMap<u64, (Vec<u64>, Vec<u32>, Vec<u32>)>,
     halting_by_seq: &mut std::collections::HashMap<u64, Vec<ConfigVector>>,
     stats: &mut ExploreStats,
 ) {
@@ -477,7 +512,7 @@ fn dispatch(
     let rows = chunk.depths.len();
     if rows == 0 {
         // halting-only chunk: nothing to evaluate, fold it directly
-        ready.insert(seq, (Vec::new(), Vec::new()));
+        ready.insert(seq, (Vec::new(), Vec::new(), Vec::new()));
         return;
     }
     stats.steps += rows as u64;
@@ -489,6 +524,7 @@ fn dispatch(
             configs: chunk.configs,
             spikes: chunk.spikes,
             depths: chunk.depths,
+            parents: chunk.parents,
         })
         .unwrap_or_else(|_| panic!("evaluation workers gone"));
 }
@@ -589,6 +625,31 @@ mod tests {
                 assert_eq!(rep.stats.step_mode, "delta", "{mode:?}");
             }
         }
+    }
+
+    #[test]
+    fn compressed_store_and_delta_cache_in_parallel() {
+        use super::super::store::StoreMode;
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let baseline = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().workers(4).store_mode(StoreMode::Compressed),
+        )
+        .run();
+        assert_eq!(rep.visited.in_order(), baseline.visited.in_order());
+        assert_eq!(rep.halting_configs, baseline.halting_configs);
+        assert_eq!(rep.stats.store_mode, "compressed");
+        assert!(rep.stats.arena_bytes > 0);
+        // the run builds its own pool, so a default-capacity cache is
+        // attached and its traffic lands in the stats
+        assert!(rep.stats.delta_cache_capacity > 0);
+        assert!(rep.stats.delta_hits + rep.stats.delta_misses > 0);
+        let off =
+            Explorer::new(&sys, ExploreOptions::breadth_first().workers(4).delta_cache(0)).run();
+        assert_eq!(off.visited.in_order(), baseline.visited.in_order());
+        assert_eq!(off.stats.delta_cache_capacity, 0);
+        assert_eq!((off.stats.delta_hits, off.stats.delta_misses), (0, 0));
     }
 
     #[test]

@@ -5,21 +5,32 @@
 //! configuration is expanded, reported, or shipped between pipeline
 //! stages. Before this store existed each of those touch points owned a
 //! heap `Vec<u64>` clone; [`ConfigStore`] keeps exactly one copy of each
-//! distinct configuration in a flat bump arena and hands out dense `u32`
-//! ids instead. Ids are assigned in intern order, so `0..len` *is* the
-//! paper's `allGenCk` insertion order — no separate order list.
+//! distinct configuration and hands out dense `u32` ids instead. Ids are
+//! assigned in intern order, so `0..len` *is* the paper's `allGenCk`
+//! insertion order — no separate order list.
 //!
-//! Layout:
+//! Two storage modes share one id table and one external contract
+//! (ids, order, and every report are byte-identical across modes):
 //!
-//! - `counts`: one flat `Vec<u64>`; configuration `id` occupies
-//!   `counts[id·N .. (id+1)·N]` (`N` = neuron count, fixed per store).
-//! - `table`: open-addressed (linear-probe) id table, power-of-two sized,
-//!   hashing the arena slices with the local Fx hasher. No keys are
-//!   stored in the table — a slot holds only the id, and collisions
-//!   re-compare against the arena. Resize rehashes ids, never moves
-//!   configuration data.
+//! - [`StoreMode::Plain`]: one flat `Vec<u64>`; configuration `id`
+//!   occupies `counts[id·N .. (id+1)·N]` (`N` = neuron count, fixed per
+//!   store). Zero-copy `get`, 8 bytes per neuron.
+//! - [`StoreMode::Compressed`]: each configuration is a varint-encoded
+//!   entry in a segmented byte arena — either a sparse delta against its
+//!   BFS parent (the matrix form `C_{k+1} = C_k + S·M` makes successors
+//!   near-copies of their parent) or a full varint row for roots and
+//!   chain breaks. Parent chains are capped at [`MAX_CHAIN`] hops so
+//!   decode cost stays bounded; the encoder always picks the smaller of
+//!   {delta, full-row} so a bad parent hint can never inflate an entry
+//!   past its varint full-row size. Reads reconstruct into a caller
+//!   buffer ([`ConfigStore::get_into`] / [`RowCursor`]).
 //!
-//! std-only, no unsafe: the arena is an ordinary `Vec`, so `get` borrows
+//! The open-addressed (linear-probe) id table is mode-independent: it
+//! hashes and compares *decoded* rows, so dedup semantics never change.
+//! In compressed mode each entry also keeps a 1-byte hash tag that
+//! filters ~255/256 of probe collisions before paying for a decode.
+//!
+//! std-only, no unsafe: the arenas are ordinary `Vec`s, so `get` borrows
 //! are checked and interning while a slice is borrowed is a compile
 //! error (the engine copies frontier rows into its batch buffers before
 //! folding, which is the natural phase structure anyway).
@@ -33,10 +44,53 @@ const EMPTY: u32 = u32::MAX;
 /// Width value meaning "not fixed yet" (set by the first intern).
 const WIDTH_UNSET: usize = usize::MAX;
 
+/// Compressed-arena segment size. Segments are append-only and never
+/// reallocate once full, so decode offsets stay stable without pinning
+/// one giant allocation (an entry larger than this gets a dedicated
+/// oversized segment).
+const SEG_BYTES: usize = 64 * 1024;
+
+/// Maximum parent-chain length in compressed mode. A decode replays at
+/// most this many delta entries on top of one full row; interns that
+/// would exceed it fall back to a full-row entry (chain depth 0).
+const MAX_CHAIN: u8 = 12;
+
+/// How configurations are stored in a [`ConfigStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StoreMode {
+    /// Flat `u64` arena: zero-copy reads, 8 bytes/neuron.
+    #[default]
+    Plain,
+    /// Varint parent-delta entries in a segmented byte arena: reads
+    /// decode into a caller buffer, bytes/config scales with how much a
+    /// configuration differs from its parent.
+    Compressed,
+}
+
+impl StoreMode {
+    /// Parse a CLI-facing mode name.
+    pub fn parse(s: &str) -> Option<StoreMode> {
+        match s {
+            "plain" => Some(StoreMode::Plain),
+            "compressed" => Some(StoreMode::Compressed),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (CLI/report facing).
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreMode::Plain => "plain",
+            StoreMode::Compressed => "compressed",
+        }
+    }
+}
+
 /// Hash a configuration slice with the project's Fx hasher. The full
-/// 64-bit hash is shared by the id table (low bits) and the sharded
-/// store's stripe choice (bits 32.., see `engine::dedup`), keeping the
-/// two uncorrelated.
+/// 64-bit hash is shared by the id table (low bits), the sharded store's
+/// stripe choice (bits 32.., see `engine::dedup`), and the compressed
+/// arena's probe-filter tag (low 8 bits), keeping the uses uncorrelated
+/// enough in practice.
 #[inline]
 pub(crate) fn hash_counts(c: &[u64]) -> u64 {
     let mut h = crate::util::FxHasher::default();
@@ -47,17 +101,188 @@ pub(crate) fn hash_counts(c: &[u64]) -> u64 {
     h.finish()
 }
 
+/// Append `v` as an LEB128 varint (7 data bits per byte, high bit =
+/// continuation). Values below 128 — almost every spike count and column
+/// gap — cost one byte.
+#[inline]
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read one LEB128 varint starting at `*pos`, advancing `*pos` past it.
+#[inline]
+fn read_varint(bytes: &[u8], pos: &mut usize) -> u64 {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = bytes[*pos];
+        *pos += 1;
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return v;
+        }
+        shift += 7;
+    }
+}
+
+/// Zigzag-encode a signed delta so small magnitudes of either sign stay
+/// small varints. The `as u64` shift avoids the signed-overflow panic a
+/// plain `v << 1` would hit on large magnitudes (including `i64::MIN`).
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    ((v as u64) << 1) ^ ((v >> 63) as u64)
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+/// Borrowed view of the store fields a decode/probe needs. Free
+/// functions over this view keep the borrow checker happy when the
+/// caller also needs `&mut` access to a scratch field of the same store.
+struct View<'a> {
+    mode: StoreMode,
+    width: usize,
+    len: usize,
+    counts: &'a [u64],
+    segs: &'a [Vec<u8>],
+    offsets: &'a [(u32, u32)],
+    tags: &'a [u8],
+    table: &'a [u32],
+}
+
+/// Decode configuration `id` into `out` (cleared first). Plain mode is a
+/// straight copy; compressed mode walks the parent chain to its full-row
+/// anchor, then replays the deltas oldest-first. Wrapping arithmetic
+/// makes the round trip exact for every `u64` count.
+fn decode_into(v: &View<'_>, id: u32, out: &mut Vec<u64>) {
+    match v.mode {
+        StoreMode::Plain => {
+            let i = id as usize;
+            out.clear();
+            out.extend_from_slice(&v.counts[i * v.width..(i + 1) * v.width]);
+        }
+        StoreMode::Compressed => {
+            let mut stack = [0u32; MAX_CHAIN as usize + 1];
+            let mut depth = 0usize;
+            let mut cur = id;
+            loop {
+                let (seg, off) = v.offsets[cur as usize];
+                let bytes = &v.segs[seg as usize][off as usize..];
+                let mut pos = 0usize;
+                let back = read_varint(bytes, &mut pos);
+                if back == 0 {
+                    // full-row anchor
+                    out.clear();
+                    out.reserve(v.width);
+                    for _ in 0..v.width {
+                        out.push(read_varint(bytes, &mut pos));
+                    }
+                    break;
+                }
+                stack[depth] = cur;
+                depth += 1;
+                cur -= back as u32;
+            }
+            for k in (0..depth).rev() {
+                let (seg, off) = v.offsets[stack[k] as usize];
+                let bytes = &v.segs[seg as usize][off as usize..];
+                let mut pos = 0usize;
+                let _back = read_varint(bytes, &mut pos);
+                let m = read_varint(bytes, &mut pos) as usize;
+                let mut col = 0usize;
+                for _ in 0..m {
+                    col += read_varint(bytes, &mut pos) as usize;
+                    let d = unzigzag(read_varint(bytes, &mut pos));
+                    out[col] = out[col].wrapping_add(d as u64);
+                    col += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Does interned `id` hold exactly `c`? `tag` is the low hash byte of
+/// `c` (compressed mode filters on it before decoding).
+fn row_matches(v: &View<'_>, id: u32, c: &[u64], tag: u8, scratch: &mut Vec<u64>) -> bool {
+    match v.mode {
+        StoreMode::Plain => {
+            let i = id as usize;
+            &v.counts[i * v.width..(i + 1) * v.width] == c
+        }
+        StoreMode::Compressed => {
+            if v.tags[id as usize] != tag {
+                return false;
+            }
+            decode_into(v, id, scratch);
+            scratch.as_slice() == c
+        }
+    }
+}
+
+/// Probe result: the id of `c`, or the empty slot where it belongs.
+enum Probe {
+    Found(u32),
+    Vacant(usize),
+}
+
+/// Linear-probe the id table for `c` (hash `h`).
+fn probe(v: &View<'_>, c: &[u64], h: u64, scratch: &mut Vec<u64>) -> Probe {
+    let mask = v.table.len() - 1;
+    let tag = h as u8;
+    let mut i = (h as usize) & mask;
+    loop {
+        match v.table[i] {
+            EMPTY => return Probe::Vacant(i),
+            id => {
+                if row_matches(v, id, c, tag, scratch) {
+                    return Probe::Found(id);
+                }
+            }
+        }
+        i = (i + 1) & mask;
+    }
+}
+
 /// An interning arena for configuration vectors of one fixed width.
 #[derive(Debug, Clone)]
 pub struct ConfigStore {
+    /// Storage mode; fixed at construction.
+    mode: StoreMode,
     /// Neurons per configuration; fixed by construction or first intern.
     width: usize,
-    /// The bump arena: config `id` at `counts[id*width..(id+1)*width]`.
+    /// Plain mode: config `id` at `counts[id*width..(id+1)*width]`.
     counts: Vec<u64>,
+    /// Compressed mode: append-only byte segments (≈[`SEG_BYTES`] each).
+    segs: Vec<Vec<u8>>,
+    /// Compressed mode: `(segment, byte offset)` of each entry.
+    offsets: Vec<(u32, u32)>,
+    /// Compressed mode: parent-chain depth of each entry (0 = full row).
+    chain: Vec<u8>,
+    /// Compressed mode: low hash byte of each row (probe filter).
+    tags: Vec<u8>,
     /// Open-addressed id table (power-of-two; `EMPTY` = free slot).
     table: Vec<u32>,
     /// Distinct configurations interned.
     len: usize,
+    /// Decode scratch for probes (reused; taken/restored around borrows).
+    dec_buf: Vec<u64>,
+    /// Decode scratch for the parent row during encoding.
+    prev_buf: Vec<u64>,
+    /// Encode scratch: full-row candidate entry.
+    enc_full: Vec<u8>,
+    /// Encode scratch: delta candidate entry.
+    enc_delta: Vec<u8>,
 }
 
 impl Default for ConfigStore {
@@ -67,23 +292,53 @@ impl Default for ConfigStore {
 }
 
 impl ConfigStore {
-    /// Empty store; the width locks in on the first intern.
+    /// Empty plain-mode store; the width locks in on the first intern.
     pub fn new() -> Self {
-        ConfigStore { width: WIDTH_UNSET, counts: Vec::new(), table: Vec::new(), len: 0 }
+        ConfigStore::with_mode(StoreMode::Plain)
     }
 
-    /// Empty store over `width`-neuron configurations, with arena and
-    /// table capacity for about `configs` entries.
-    pub fn with_capacity(width: usize, configs: usize) -> Self {
-        let mut s = ConfigStore {
-            width,
-            counts: Vec::with_capacity(width * configs),
+    /// Empty store in `mode`; the width locks in on the first intern.
+    pub fn with_mode(mode: StoreMode) -> Self {
+        ConfigStore {
+            mode,
+            width: WIDTH_UNSET,
+            counts: Vec::new(),
+            segs: Vec::new(),
+            offsets: Vec::new(),
+            chain: Vec::new(),
+            tags: Vec::new(),
             table: Vec::new(),
             len: 0,
-        };
+            dec_buf: Vec::new(),
+            prev_buf: Vec::new(),
+            enc_full: Vec::new(),
+            enc_delta: Vec::new(),
+        }
+    }
+
+    /// Empty plain store over `width`-neuron configurations, with arena
+    /// and table capacity for about `configs` entries.
+    pub fn with_capacity(width: usize, configs: usize) -> Self {
+        ConfigStore::with_mode_capacity(StoreMode::Plain, width, configs)
+    }
+
+    /// Empty store in `mode` over `width`-neuron configurations, with
+    /// table capacity for about `configs` entries.
+    pub fn with_mode_capacity(mode: StoreMode, width: usize, configs: usize) -> Self {
+        let mut s = ConfigStore::with_mode(mode);
+        s.width = width;
+        if mode == StoreMode::Plain {
+            s.counts = Vec::with_capacity(width * configs);
+        }
         let slots = (configs * 8 / 7 + 1).next_power_of_two().max(16);
         s.table = vec![EMPTY; slots];
         s
+    }
+
+    /// The storage mode this store was built with.
+    #[inline]
+    pub fn mode(&self) -> StoreMode {
+        self.mode
     }
 
     /// Distinct configurations interned so far.
@@ -98,51 +353,104 @@ impl ConfigStore {
         self.len == 0
     }
 
-    /// The configuration slice of `id`.
+    #[inline]
+    fn view(&self) -> View<'_> {
+        View {
+            mode: self.mode,
+            width: self.width,
+            len: self.len,
+            counts: &self.counts,
+            segs: &self.segs,
+            offsets: &self.offsets,
+            tags: &self.tags,
+            table: &self.table,
+        }
+    }
+
+    /// The configuration slice of `id` (plain mode only — compressed
+    /// entries have no contiguous row to borrow; use
+    /// [`ConfigStore::get_into`] or [`ConfigStore::rows`] instead).
     ///
     /// # Panics
-    /// When `id` was never handed out by this store.
+    /// When `id` was never handed out by this store, or the store is
+    /// compressed.
     #[inline]
     pub fn get(&self, id: u32) -> &[u64] {
+        assert!(
+            self.mode == StoreMode::Plain,
+            "ConfigStore::get borrows the plain arena; compressed stores decode via get_into/rows"
+        );
         let i = id as usize;
         assert!(i < self.len, "config id {id} out of range ({} interned)", self.len);
         &self.counts[i * self.width..(i + 1) * self.width]
     }
 
-    /// The id of `c`, if interned.
+    /// Reconstruct the configuration of `id` into `out` (cleared first).
+    /// Works in both modes; compressed mode decodes the parent chain.
+    ///
+    /// # Panics
+    /// When `id` was never handed out by this store.
+    pub fn get_into(&self, id: u32, out: &mut Vec<u64>) {
+        let i = id as usize;
+        assert!(i < self.len, "config id {id} out of range ({} interned)", self.len);
+        decode_into(&self.view(), id, out);
+    }
+
+    /// The id of `c`, if interned. Zero-alloc in plain mode; compressed
+    /// mode decodes probe candidates into a local buffer (use
+    /// [`ConfigStore::contains_probe`] on a `&mut` store to reuse the
+    /// internal scratch instead).
     pub fn find(&self, c: &[u64]) -> Option<u32> {
         if self.len == 0 || c.len() != self.width {
             return None;
         }
-        let mask = self.table.len() - 1;
-        let mut i = (hash_counts(c) as usize) & mask;
-        loop {
-            match self.table[i] {
-                EMPTY => return None,
-                id => {
-                    if self.get(id) == c {
-                        return Some(id);
-                    }
-                }
-            }
-            i = (i + 1) & mask;
+        let mut scratch = Vec::new();
+        match probe(&self.view(), c, hash_counts(c), &mut scratch) {
+            Probe::Found(id) => Some(id),
+            Probe::Vacant(_) => None,
         }
     }
 
-    /// Membership test.
+    /// Membership test. See [`ConfigStore::find`] for allocation notes.
     #[inline]
     pub fn contains(&self, c: &[u64]) -> bool {
         self.find(c).is_some()
     }
 
+    /// Allocation-free membership test: probes with the store's own
+    /// decode scratch. The hot-path form for lock-guarded stores, where
+    /// the guard hands out `&mut` anyway.
+    pub fn contains_probe(&mut self, c: &[u64]) -> bool {
+        if self.len == 0 || c.len() != self.width {
+            return false;
+        }
+        let h = hash_counts(c);
+        let mut scratch = std::mem::take(&mut self.dec_buf);
+        let found = matches!(probe(&self.view(), c, h, &mut scratch), Probe::Found(_));
+        self.dec_buf = scratch;
+        found
+    }
+
     /// Intern `c`: returns `(id, true)` when the configuration is new
-    /// (copied into the arena exactly once) or `(id, false)` when it was
-    /// already present. Ids are dense and assigned in intern order.
+    /// (stored exactly once) or `(id, false)` when it was already
+    /// present. Ids are dense and assigned in intern order, identically
+    /// in both modes.
     ///
     /// # Panics
     /// When `c`'s width differs from the store's (one store serves one
     /// system; mixing widths is a programming error, not a data error).
+    #[inline]
     pub fn intern(&mut self, c: &[u64]) -> (u32, bool) {
+        self.intern_with_parent(c, None)
+    }
+
+    /// [`ConfigStore::intern`] with a delta-encoding hint: `parent` is
+    /// the id of the BFS parent `c` was generated from. Plain mode
+    /// ignores the hint entirely; compressed mode tries a sparse delta
+    /// against it (falling back to the previous id, then to a full row —
+    /// whichever encodes smallest). The hint influences only the byte
+    /// layout, never ids or dedup results.
+    pub fn intern_with_parent(&mut self, c: &[u64], parent: Option<u32>) -> (u32, bool) {
         if self.width == WIDTH_UNSET {
             self.width = c.len();
         }
@@ -158,50 +466,222 @@ impl ConfigStore {
         } else if (self.len + 1) * 8 > self.table.len() * 7 {
             self.grow();
         }
-        let mask = self.table.len() - 1;
-        let mut i = (hash_counts(c) as usize) & mask;
-        loop {
-            match self.table[i] {
-                EMPTY => {
-                    let id = self.len as u32;
-                    self.counts.extend_from_slice(c);
-                    self.table[i] = id;
-                    self.len += 1;
-                    return (id, true);
-                }
-                id => {
-                    if self.get(id) == c {
-                        return (id, false);
+        let h = hash_counts(c);
+        let slot = {
+            let mut scratch = std::mem::take(&mut self.dec_buf);
+            let p = probe(&self.view(), c, h, &mut scratch);
+            self.dec_buf = scratch;
+            p
+        };
+        match slot {
+            Probe::Found(id) => (id, false),
+            Probe::Vacant(i) => {
+                let id = self.len as u32;
+                match self.mode {
+                    StoreMode::Plain => self.counts.extend_from_slice(c),
+                    StoreMode::Compressed => {
+                        self.push_encoded(c, parent, id);
+                        self.tags.push(h as u8);
                     }
                 }
+                self.table[i] = id;
+                self.len += 1;
+                (id, true)
             }
-            i = (i + 1) & mask;
         }
     }
 
+    /// Decode `id` into the `prev_buf` scratch (compressed-mode encoder
+    /// helper).
+    fn decode_to_prev(&mut self, id: u32) {
+        let mut buf = std::mem::take(&mut self.prev_buf);
+        decode_into(&self.view(), id, &mut buf);
+        self.prev_buf = buf;
+    }
+
+    /// Append the compressed entry for `c` (id `id`), choosing the
+    /// smaller of a parent delta and a full varint row.
+    fn push_encoded(&mut self, c: &[u64], parent_hint: Option<u32>, id: u32) {
+        // full-row candidate: back-tag 0, then `width` varint counts
+        let mut full = std::mem::take(&mut self.enc_full);
+        full.clear();
+        write_varint(&mut full, 0);
+        for &v in c {
+            write_varint(&mut full, v);
+        }
+        self.enc_full = full;
+        // delta candidate against the hinted parent (fallback: the
+        // previous id — in BFS order an adjacent sibling, still a near
+        // relative), unless the parent's chain is already at the cap
+        let parent = parent_hint
+            .filter(|&p| (p as usize) < self.len)
+            .or_else(|| self.len.checked_sub(1).map(|p| p as u32));
+        let mut delta_depth = 0u8;
+        let mut have_delta = false;
+        if let Some(p) = parent {
+            if self.chain[p as usize] < MAX_CHAIN {
+                delta_depth = self.chain[p as usize] + 1;
+                self.decode_to_prev(p);
+                let mut enc = std::mem::take(&mut self.enc_delta);
+                enc.clear();
+                write_varint(&mut enc, (id - p) as u64);
+                let m = c.iter().zip(&self.prev_buf).filter(|(a, b)| a != b).count();
+                write_varint(&mut enc, m as u64);
+                let mut prev_col = 0usize;
+                for (j, (&cv, &pv)) in c.iter().zip(&self.prev_buf).enumerate() {
+                    if cv != pv {
+                        write_varint(&mut enc, (j - prev_col) as u64);
+                        write_varint(&mut enc, zigzag(cv.wrapping_sub(pv) as i64));
+                        prev_col = j + 1;
+                    }
+                }
+                self.enc_delta = enc;
+                have_delta = true;
+            }
+        }
+        let use_delta = have_delta && self.enc_delta.len() < self.enc_full.len();
+        let need = if use_delta { self.enc_delta.len() } else { self.enc_full.len() };
+        let start_new_seg = match self.segs.last() {
+            None => true,
+            Some(s) => s.len() + need > SEG_BYTES,
+        };
+        if start_new_seg {
+            self.segs.push(Vec::with_capacity(SEG_BYTES.max(need)));
+        }
+        let seg_idx = (self.segs.len() - 1) as u32;
+        let seg = self.segs.last_mut().expect("segment just ensured");
+        let off = seg.len() as u32;
+        if use_delta {
+            seg.extend_from_slice(&self.enc_delta);
+        } else {
+            seg.extend_from_slice(&self.enc_full);
+        }
+        self.offsets.push((seg_idx, off));
+        self.chain.push(if use_delta { delta_depth } else { 0 });
+    }
+
     /// Iterate the interned configurations in id (= insertion) order.
+    /// Plain mode only (borrows arena slices); mode-neutral callers use
+    /// [`ConfigStore::rows`] or [`ConfigStore::for_each`].
     pub fn iter(&self) -> impl Iterator<Item = &[u64]> + '_ {
+        assert!(
+            self.mode == StoreMode::Plain || self.len == 0,
+            "ConfigStore::iter borrows the plain arena; compressed stores decode via rows/for_each"
+        );
         (0..self.len as u32).map(|id| self.get(id))
     }
 
-    /// Arena words held (memory accounting; `len * width` exactly — the
-    /// single-copy invariant tests assert against this).
+    /// Lending cursor over configurations in id order: plain mode lends
+    /// arena slices zero-copy, compressed mode decodes each row into an
+    /// internal buffer. Mode-neutral replacement for [`ConfigStore::iter`].
+    pub fn rows(&self) -> RowCursor<'_> {
+        RowCursor { store: self, next: 0, buf: Vec::new() }
+    }
+
+    /// Visit every configuration in id order as `(id, row)`.
+    pub fn for_each(&self, mut f: impl FnMut(u32, &[u64])) {
+        let mut cur = self.rows();
+        let mut id = 0u32;
+        while let Some(row) = cur.next_row() {
+            f(id, row);
+            id += 1;
+        }
+    }
+
+    /// Drop every entry but keep the table allocation (and mode/width),
+    /// ready to refill. Used for epoch-style cache eviction.
+    pub fn clear(&mut self) {
+        self.counts.clear();
+        self.segs.clear();
+        self.offsets.clear();
+        self.chain.clear();
+        self.tags.clear();
+        for s in &mut self.table {
+            *s = EMPTY;
+        }
+        self.len = 0;
+    }
+
+    /// Arena words held. In plain mode this is `len * width` exactly —
+    /// the single-copy invariant tests assert against it; compressed
+    /// stores keep no word arena and report 0.
     pub fn arena_words(&self) -> usize {
         self.counts.len()
+    }
+
+    /// Bytes of configuration payload held (memory accounting; the
+    /// compressed figure includes the 10 bytes/entry of offset + chain +
+    /// tag index overhead so mode comparisons are honest; the id table
+    /// is identical across modes and excluded from both).
+    pub fn arena_bytes(&self) -> usize {
+        match self.mode {
+            StoreMode::Plain => self.counts.len() * 8,
+            StoreMode::Compressed => {
+                self.segs.iter().map(|s| s.len()).sum::<usize>() + self.offsets.len() * 10
+            }
+        }
     }
 
     fn grow(&mut self) {
         let new_slots = (self.table.len() * 2).max(16);
         let mut table = vec![EMPTY; new_slots];
         let mask = new_slots - 1;
-        for id in 0..self.len as u32 {
-            let mut i = (hash_counts(self.get(id)) as usize) & mask;
-            while table[i] != EMPTY {
-                i = (i + 1) & mask;
+        match self.mode {
+            StoreMode::Plain => {
+                for id in 0..self.len as u32 {
+                    let mut i = (hash_counts(self.get(id)) as usize) & mask;
+                    while table[i] != EMPTY {
+                        i = (i + 1) & mask;
+                    }
+                    table[i] = id;
+                }
             }
-            table[i] = id;
+            StoreMode::Compressed => {
+                let mut scratch = std::mem::take(&mut self.dec_buf);
+                {
+                    let v = self.view();
+                    for id in 0..v.len as u32 {
+                        decode_into(&v, id, &mut scratch);
+                        let mut i = (hash_counts(&scratch) as usize) & mask;
+                        while table[i] != EMPTY {
+                            i = (i + 1) & mask;
+                        }
+                        table[i] = id;
+                    }
+                }
+                self.dec_buf = scratch;
+            }
         }
         self.table = table;
+    }
+}
+
+/// Lending row cursor from [`ConfigStore::rows`]: `next_row` hands out
+/// each configuration in id order, borrowing the arena directly in
+/// plain mode and an internal decode buffer in compressed mode.
+pub struct RowCursor<'a> {
+    store: &'a ConfigStore,
+    next: u32,
+    buf: Vec<u64>,
+}
+
+impl<'a> RowCursor<'a> {
+    /// The next configuration, or `None` past the end. The returned
+    /// slice borrows the cursor, so this is a lending iteration — copy
+    /// out anything that must outlive the next call.
+    pub fn next_row(&mut self) -> Option<&[u64]> {
+        if (self.next as usize) >= self.store.len {
+            return None;
+        }
+        let id = self.next;
+        self.next += 1;
+        match self.store.mode {
+            StoreMode::Plain => Some(self.store.get(id)),
+            StoreMode::Compressed => {
+                self.store.get_into(id, &mut self.buf);
+                Some(self.buf.as_slice())
+            }
+        }
     }
 }
 
@@ -276,5 +756,227 @@ mod tests {
         assert_eq!(s.find(&[1]), None);
         assert!(!s.contains(&[]));
         assert_eq!(s.iter().count(), 0);
+    }
+
+    #[test]
+    fn varint_round_trips_adversarial_values() {
+        let cases = [
+            0u64,
+            1,
+            127,
+            128,
+            129,
+            16_383,
+            16_384,
+            (1u64 << 32) - 1,
+            1u64 << 32,
+            (1u64 << 63) - 1,
+            1u64 << 63,
+            (1u64 << 63) + 12345,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        let mut buf = Vec::new();
+        for &v in &cases {
+            write_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &cases {
+            assert_eq!(read_varint(&buf, &mut pos), v);
+        }
+        assert_eq!(pos, buf.len(), "no trailing bytes");
+    }
+
+    #[test]
+    fn varint_round_trips_fuzzed() {
+        // deterministic xorshift so the test is reproducible
+        let mut x = 0x243F_6A88_85A3_08D3u64;
+        let mut buf = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..10_000u32 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            // sweep the full magnitude range: mask to i%64+1 low bits
+            let v = x & (u64::MAX >> (63 - (i % 64)));
+            vals.push(v);
+            write_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(read_varint(&buf, &mut pos), v);
+        }
+    }
+
+    #[test]
+    fn zigzag_round_trips() {
+        for v in [0i64, 1, -1, 2, -2, 63, -64, i64::MAX, i64::MIN, i64::MIN + 1] {
+            assert_eq!(unzigzag(zigzag(v)), v, "zigzag({v})");
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn wrapping_delta_round_trips_extremes() {
+        // the delta path must survive parent/child pairs that wrap i64
+        for (parent, child) in [
+            (0u64, u64::MAX),
+            (u64::MAX, 0),
+            (1u64 << 63, 0),
+            (0, 1u64 << 63),
+            ((1u64 << 63) - 1, (1u64 << 63) + 1),
+            (42, 42),
+        ] {
+            let d = child.wrapping_sub(parent) as i64;
+            let back = parent.wrapping_add(unzigzag(zigzag(d)) as u64);
+            assert_eq!(back, child, "parent {parent} -> child {child}");
+        }
+    }
+
+    #[test]
+    fn compressed_matches_plain_contract() {
+        let mut plain = ConfigStore::new();
+        let mut comp = ConfigStore::with_mode(StoreMode::Compressed);
+        // adversarial magnitudes mixed with near-duplicates
+        let rows: Vec<Vec<u64>> = vec![
+            vec![2, 1, 1],
+            vec![2, 1, 2],
+            vec![2, 1, 1], // dup
+            vec![0, 0, 0],
+            vec![u64::MAX, 1, 1 << 63],
+            vec![u64::MAX, 1, (1 << 63) + 1],
+            vec![2, 1, 2], // dup
+            vec![1, 1, 1],
+        ];
+        for (i, r) in rows.iter().enumerate() {
+            let hint = if i == 0 { None } else { Some(0u32) };
+            assert_eq!(
+                plain.intern(r),
+                comp.intern_with_parent(r, hint),
+                "row {i}: ids and newness agree across modes"
+            );
+        }
+        assert_eq!(plain.len(), comp.len());
+        let mut buf = Vec::new();
+        for id in 0..plain.len() as u32 {
+            comp.get_into(id, &mut buf);
+            assert_eq!(plain.get(id), buf.as_slice(), "id {id} decodes identically");
+            assert_eq!(comp.find(&buf), Some(id));
+        }
+        assert!(comp.contains_probe(&[u64::MAX, 1, 1 << 63]));
+        assert!(!comp.contains_probe(&[9, 9, 9]));
+    }
+
+    #[test]
+    fn compressed_growth_and_segment_rollover() {
+        // enough wide rows to force both table growth and several 64 KiB
+        // segment rollovers (full rows of large values ≈ width*10 bytes)
+        let width = 32;
+        let mut s = ConfigStore::with_mode(StoreMode::Compressed);
+        let mut expect = Vec::new();
+        for i in 0..5_000u64 {
+            let row: Vec<u64> = (0..width as u64)
+                .map(|j| (i * 0x9E37_79B9).wrapping_mul(j + 1) | (1 << 63))
+                .collect();
+            let (id, new) = s.intern(&row);
+            assert!(new, "row {i}");
+            assert_eq!(id as u64, i);
+            expect.push(row);
+        }
+        assert!(s.segs.len() > 1, "rollover actually happened ({} segs)", s.segs.len());
+        let mut buf = Vec::new();
+        for (i, row) in expect.iter().enumerate() {
+            s.get_into(i as u32, &mut buf);
+            assert_eq!(&buf, row, "row {i} after growth + rollover");
+            assert_eq!(s.find(row), Some(i as u32));
+        }
+    }
+
+    #[test]
+    fn compressed_chain_cap_bounds_decode() {
+        // hint each row at the previous one: a 100-deep lineage must be
+        // broken into ≤ MAX_CHAIN runs by full-row anchors
+        let mut s = ConfigStore::with_mode(StoreMode::Compressed);
+        let mut row = vec![1_000u64; 8];
+        let mut prev: Option<u32> = None;
+        for i in 0..100u64 {
+            row[(i % 8) as usize] += i;
+            let (id, new) = s.intern_with_parent(&row, prev);
+            assert!(new);
+            prev = Some(id);
+        }
+        assert!(s.chain.iter().all(|&d| d <= MAX_CHAIN));
+        assert!(s.chain.iter().filter(|&&d| d == 0).count() >= 100 / (MAX_CHAIN as usize + 1));
+        // decode the deepest row correctly
+        let mut buf = Vec::new();
+        s.get_into(99, &mut buf);
+        assert_eq!(buf, row);
+    }
+
+    #[test]
+    fn compressed_delta_beats_full_rows_on_near_duplicates() {
+        // single-neuron changes against the parent should compress far
+        // below 8 bytes/neuron
+        let width = 64;
+        let mut s = ConfigStore::with_mode(StoreMode::Compressed);
+        let base = vec![7u64; width];
+        let (root, _) = s.intern(&base);
+        let mut row = base.clone();
+        for i in 0..500u64 {
+            row[(i as usize * 17) % width] = i + 8;
+            s.intern_with_parent(&row, Some(root));
+        }
+        let plain_bytes = (s.len() * width * 8) as f64;
+        let ratio = plain_bytes / s.arena_bytes() as f64;
+        assert!(ratio > 3.0, "compression ratio {ratio:.1}x too low");
+    }
+
+    #[test]
+    fn clear_keeps_mode_and_reuses_table() {
+        for mode in [StoreMode::Plain, StoreMode::Compressed] {
+            let mut s = ConfigStore::with_mode_capacity(mode, 3, 64);
+            for i in 0..50u64 {
+                s.intern(&[i, i + 1, i + 2]);
+            }
+            let slots = s.table.len();
+            s.clear();
+            assert_eq!(s.len(), 0);
+            assert_eq!(s.arena_bytes(), 0);
+            assert_eq!(s.table.len(), slots, "table allocation survives clear");
+            assert_eq!(s.intern(&[5, 6, 7]), (0, true), "ids restart from 0");
+            assert_eq!(s.find(&[5, 6, 7]), Some(0));
+            assert_eq!(s.find(&[1, 2, 3]), None, "old entries really gone");
+        }
+    }
+
+    #[test]
+    fn rows_cursor_matches_iter_order() {
+        for mode in [StoreMode::Plain, StoreMode::Compressed] {
+            let mut s = ConfigStore::with_mode(mode);
+            s.intern(&[3, 0]);
+            s.intern(&[1, 2]);
+            s.intern(&[0, 0]);
+            let mut seen = Vec::new();
+            let mut cur = s.rows();
+            while let Some(r) = cur.next_row() {
+                seen.push(r.to_vec());
+            }
+            assert_eq!(seen, vec![vec![3, 0], vec![1, 2], vec![0, 0]], "{mode:?}");
+            let mut by_each = Vec::new();
+            s.for_each(|id, r| by_each.push((id, r.to_vec())));
+            assert_eq!(by_each.len(), 3);
+            assert_eq!(by_each[1], (1, vec![1, 2]));
+        }
+    }
+
+    #[test]
+    fn store_mode_parse_names() {
+        assert_eq!(StoreMode::parse("plain"), Some(StoreMode::Plain));
+        assert_eq!(StoreMode::parse("compressed"), Some(StoreMode::Compressed));
+        assert_eq!(StoreMode::parse("zip"), None);
+        assert_eq!(StoreMode::Plain.name(), "plain");
+        assert_eq!(StoreMode::Compressed.name(), "compressed");
     }
 }

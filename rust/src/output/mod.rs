@@ -73,21 +73,40 @@ pub fn render_paper_log(sys: &SnpSystem, report: &ExploreReport) -> String {
 
 /// Summarize a report in one paragraph (CLI default output).
 pub fn render_summary(sys: &SnpSystem, report: &ExploreReport) -> String {
+    let s = &report.stats;
+    let bytes_per_config = if report.visited.is_empty() {
+        0.0
+    } else {
+        s.arena_bytes as f64 / report.visited.len() as f64
+    };
+    let cache_line = if s.delta_cache_capacity == 0 {
+        "delta cache off".to_string()
+    } else {
+        let total = s.delta_hits + s.delta_misses;
+        let rate = if total == 0 { 0.0 } else { 100.0 * s.delta_hits as f64 / total as f64 };
+        format!(
+            "delta cache {} hits / {} misses ({rate:.1}% hit rate, cap {})",
+            s.delta_hits, s.delta_misses, s.delta_cache_capacity
+        )
+    };
     format!(
         "system `{}`: {} configs generated (depth {}), {} halting, stop: {}\n\
-         {} expansions, {} steps in {} batches ({} spiking rows, {} stepping), Σψ = {}, elapsed {:?}\n",
+         {} expansions, {} steps in {} batches ({} spiking rows, {} stepping), Σψ = {}, elapsed {:?}\n\
+         {} store: {} arena bytes ({bytes_per_config:.1} bytes/config), {cache_line}\n",
         sys.name,
         report.visited.len(),
         report.depth_reached,
         report.halting_configs.len(),
         report.stop,
-        report.stats.expanded,
-        report.stats.steps,
-        report.stats.batches,
-        report.stats.spike_repr,
-        report.stats.step_mode,
-        report.stats.psi_total,
-        report.stats.elapsed,
+        s.expanded,
+        s.steps,
+        s.batches,
+        s.spike_repr,
+        s.step_mode,
+        s.psi_total,
+        s.elapsed,
+        s.store_mode,
+        s.arena_bytes,
     )
 }
 
@@ -126,5 +145,20 @@ mod tests {
         let s = render_summary(&sys, &rep);
         assert!(s.contains("paper_pi"));
         assert!(s.contains("stop:"));
+        assert!(s.contains("plain store:"), "store mode + arena gauge line");
+        assert!(s.contains("bytes/config"));
+        assert!(s.contains("hit rate"), "default delta cache reports its hit rate");
+    }
+
+    #[test]
+    fn summary_reports_cache_off() {
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(2).delta_cache(0),
+        )
+        .run();
+        let s = render_summary(&sys, &rep);
+        assert!(s.contains("delta cache off"));
     }
 }

@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use super::cache::{CacheKey, CacheOutcome, ReportCache};
 use super::http::{Request, Response};
-use crate::compute::{BackendPool, HostBackendFactory};
+use crate::compute::{BackendPool, DeltaCache, HostBackendFactory, DEFAULT_DELTA_CACHE};
 use crate::engine::{ExploreOptions, Explorer};
 use crate::error::{Error, Result};
 use crate::matrix::{build_matrix, TransitionMatrix};
@@ -58,6 +58,10 @@ pub struct ServeState {
     /// instead of constructing a pool per request.
     pools: Mutex<HashMap<String, (Arc<BackendPool>, u64)>>,
     pool_tick: AtomicU64,
+    /// Per-system memory/cache gauges from the last *computed* run
+    /// (cache hits reuse stored bytes and record nothing). Bounded by
+    /// the report cache's capacity.
+    gauges: Mutex<HashMap<String, J>>,
 }
 
 impl ServeState {
@@ -72,6 +76,7 @@ impl ServeState {
             shutdown: AtomicBool::new(false),
             pools: Mutex::new(HashMap::new()),
             pool_tick: AtomicU64::new(0),
+            gauges: Mutex::new(HashMap::new()),
         }
     }
 
@@ -92,10 +97,16 @@ impl ServeState {
         // racing duplicate build is harmless (first insert wins, the
         // loser's Arc is dropped)
         let size = crate::compute::pool::resolve_workers(self.explore_workers);
-        let pool = Arc::new(
-            BackendPool::build(&HostBackendFactory::new(matrix.clone()), size)
-                .expect("host backend factory cannot fail"),
-        );
+        let mut fresh = BackendPool::build(&HostBackendFactory::new(matrix.clone()), size)
+            .expect("host backend factory cannot fail");
+        // every query against this system shares one S→S·M memo: repeat
+        // queries (different depths, bfs/dfs) start with a warm cache
+        fresh.set_delta_cache(Arc::new(DeltaCache::new(
+            matrix.rows(),
+            matrix.cols(),
+            DEFAULT_DELTA_CACHE,
+        )));
+        let pool = Arc::new(fresh);
         let mut pools = self.pools.lock().unwrap();
         if let Some((existing, last_used)) = pools.get_mut(system_hash) {
             *last_used = tick;
@@ -115,6 +126,42 @@ impl ServeState {
     /// Number of live per-system pools.
     pub fn pool_count(&self) -> usize {
         self.pools.lock().unwrap().len()
+    }
+
+    /// Record the memory/cache gauge of a computed run, keyed by system
+    /// hash. Bounded like the pools map: at capacity an arbitrary entry
+    /// makes room (gauges are diagnostics, not results).
+    fn record_run_gauge(&self, system_hash: &str, rep: &crate::engine::ExploreReport) {
+        let s = &rep.stats;
+        let bytes_per_config = if rep.visited.is_empty() {
+            0.0
+        } else {
+            s.arena_bytes as f64 / rep.visited.len() as f64
+        };
+        let g = J::obj([
+            ("configs", J::num(rep.visited.len() as f64)),
+            ("store_mode", J::str(s.store_mode)),
+            ("arena_bytes", J::num(s.arena_bytes as f64)),
+            ("bytes_per_config", J::num(bytes_per_config)),
+            ("step_mode", J::str(s.step_mode)),
+            ("workers", J::num(s.workers as f64)),
+            ("delta_cache_capacity", J::num(s.delta_cache_capacity as f64)),
+            ("delta_hits", J::num(s.delta_hits as f64)),
+            ("delta_misses", J::num(s.delta_misses as f64)),
+        ]);
+        let mut gauges = self.gauges.lock().unwrap();
+        if gauges.len() >= self.cache.capacity() && !gauges.contains_key(system_hash) {
+            if let Some(victim) = gauges.keys().next().cloned() {
+                gauges.remove(&victim);
+            }
+        }
+        gauges.insert(system_hash.to_string(), g);
+    }
+
+    /// The per-system gauges as a JSON object keyed by system hash.
+    fn gauges_json(&self) -> J {
+        let gauges = self.gauges.lock().unwrap();
+        J::Obj(gauges.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
     }
 }
 
@@ -305,6 +352,7 @@ fn run_query(state: &ServeState, raw: &str) -> Result<Response> {
             opts = opts.max_configs(c);
         }
         let rep = Explorer::with_pool_and_matrix(&sys, opts, pool, matrix).run();
+        state.record_run_gauge(&hash, &rep);
         Ok(rep.to_json(&sys.name).to_string_compact())
     })?;
     Ok(envelope(outcome, &hash, &report))
@@ -434,6 +482,7 @@ fn stats(state: &ServeState) -> Response {
         ),
         ("pools", J::num(state.pool_count() as f64)),
         ("cache", state.cache.stats_json()),
+        ("systems", state.gauges_json()),
     ]);
     Response::json(200, doc.to_string_compact())
 }
@@ -578,6 +627,26 @@ mod tests {
         assert_eq!(state.pool_count(), 1, "one pool per system, not per query");
         route(&state, &post("/v1/run", r#"{"system":"nat_gen","depth":3}"#));
         assert_eq!(state.pool_count(), 2);
+    }
+
+    #[test]
+    fn stats_report_per_system_memory_gauges() {
+        let state = ServeState::new(1, 8);
+        let r = route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":5}"#));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let s = route(&state, &get("/v1/stats"));
+        assert!(s.body.contains("\"systems\""), "{}", s.body);
+        assert!(s.body.contains("\"arena_bytes\""), "{}", s.body);
+        assert!(s.body.contains("\"bytes_per_config\""), "{}", s.body);
+        assert!(s.body.contains("\"delta_hits\""), "{}", s.body);
+        // a cache hit computes nothing and must not disturb the gauge
+        let before = route(&state, &get("/v1/stats")).body;
+        route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":5}"#));
+        let after = route(&state, &get("/v1/stats")).body;
+        let gauge = |b: &str| {
+            b[b.find("\"systems\"").unwrap()..b.find("\"uptime_s\"").unwrap()].to_string()
+        };
+        assert_eq!(gauge(&before), gauge(&after));
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Store-mode equivalence: the compressed visited arena and the run-scoped
+//! delta cache are pure memory/speed optimizations — every observable output
+//! (config ids, `allGenCk` order, rendered reports, JSON) must be
+//! byte-identical to the plain-store reference at every worker count, in
+//! both search orders, with the cache on or off. Plus randomized round-trip
+//! fuzzing of the varint/parent-delta encoder itself on adversarial counts.
+
+use snapse::engine::{ConfigStore, ExploreOptions, Explorer, SearchOrder, StoreMode};
+use snapse::snp::SnpSystem;
+use snapse::util::Rng;
+
+const WORKER_COUNTS: [usize; 3] = [1, 4, 8];
+
+fn systems() -> Vec<SnpSystem> {
+    vec![
+        snapse::generators::paper_pi(),
+        snapse::generators::rule_heavy(6, 12, 2),
+        snapse::generators::wide_ring(6, 3, 2),
+    ]
+}
+
+fn opts(order: SearchOrder) -> ExploreOptions {
+    match order {
+        SearchOrder::BreadthFirst => ExploreOptions::breadth_first(),
+        SearchOrder::DepthFirst => ExploreOptions::depth_first(),
+    }
+}
+
+/// All observable renderings of a run, concatenated for one-shot equality.
+fn observe(sys: &SnpSystem, o: ExploreOptions) -> String {
+    let rep = Explorer::new(sys, o).run();
+    let mut s = String::new();
+    for c in rep.visited.in_order() {
+        s.push_str(&c.to_string());
+        s.push('\n');
+    }
+    s.push_str(&rep.visited.render_all_gen_ck());
+    s.push('\n');
+    s.push_str(&rep.to_json(&sys.name).to_string_compact());
+    s.push('\n');
+    s.push_str(&format!("{}|{}|{:?}", rep.stop, rep.depth_reached, rep.halting_configs));
+    s
+}
+
+#[test]
+fn compressed_store_identical_across_systems_workers_orders() {
+    for sys in systems() {
+        for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+            let reference = observe(&sys, opts(order).max_configs(400));
+            for w in WORKER_COUNTS {
+                let got = observe(
+                    &sys,
+                    opts(order)
+                        .max_configs(400)
+                        .workers(w)
+                        .store_mode(StoreMode::Compressed),
+                );
+                assert_eq!(
+                    got, reference,
+                    "{} {order:?}: compressed store diverged at workers={w}",
+                    sys.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn delta_cache_on_off_identical_across_systems_workers() {
+    for sys in systems() {
+        let reference =
+            observe(&sys, ExploreOptions::breadth_first().max_configs(400).delta_cache(0));
+        for w in WORKER_COUNTS {
+            for cap in [0usize, 64, snapse::compute::DEFAULT_DELTA_CACHE] {
+                let got = observe(
+                    &sys,
+                    ExploreOptions::breadth_first()
+                        .max_configs(400)
+                        .workers(w)
+                        .delta_cache(cap)
+                        .store_mode(StoreMode::Compressed),
+                );
+                assert_eq!(
+                    got, reference,
+                    "{}: delta_cache={cap} workers={w} diverged",
+                    sys.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn disabled_cache_reports_zero_counters() {
+    let sys = snapse::generators::paper_pi();
+    let rep = Explorer::new(
+        &sys,
+        ExploreOptions::breadth_first().max_configs(200).delta_cache(0),
+    )
+    .run();
+    assert_eq!(rep.stats.delta_cache_capacity, 0);
+    assert_eq!((rep.stats.delta_hits, rep.stats.delta_misses), (0, 0));
+    let rep = Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(200)).run();
+    assert!(rep.stats.delta_cache_capacity > 0);
+    assert!(rep.stats.delta_hits + rep.stats.delta_misses > 0);
+}
+
+/// Adversarial counts for the varint/zigzag edge cases: zero, small,
+/// every byte-length boundary of LEB128, and wrap-prone extremes.
+const EDGE: [u64; 12] = [
+    0,
+    1,
+    2,
+    127,
+    128,
+    16_383,
+    16_384,
+    u32::MAX as u64,
+    u64::MAX / 2,
+    u64::MAX - 1,
+    u64::MAX,
+    0x8000_0000_0000_0000,
+];
+
+#[test]
+fn compressed_round_trip_fuzz_against_plain_mirror() {
+    let seed = 0xC0FF_EE11u64;
+    println!("seed = {seed:#x}");
+    let mut rng = Rng::new(seed);
+    for trial in 0..50 {
+        let width = rng.range(1, 40);
+        let mut plain = ConfigStore::with_mode(StoreMode::Plain);
+        let mut comp = ConfigStore::with_mode(StoreMode::Compressed);
+        let mut rows: Vec<Vec<u64>> = Vec::new();
+        let mut prev: Vec<u64> = (0..width).map(|_| *rng.choose(&EDGE)).collect();
+        for step in 0..200 {
+            let row: Vec<u64> = if !rows.is_empty() && rng.chance(0.2) {
+                // exact duplicate: both stores must agree it's old
+                rng.choose(&rows).clone()
+            } else if rng.chance(0.6) {
+                // sparse mutation of the previous row — the parent-delta
+                // encoder's target shape, with wrap-prone jumps
+                let mut r = prev.clone();
+                for _ in 0..rng.range(1, (width / 4).max(1)) {
+                    let i = rng.range(0, width - 1);
+                    r[i] = if rng.chance(0.5) {
+                        *rng.choose(&EDGE)
+                    } else {
+                        r[i].wrapping_add(rng.next_u64())
+                    };
+                }
+                r
+            } else {
+                // fresh random row (full-row fallback territory)
+                (0..width).map(|_| rng.next_u64()).collect()
+            };
+            // parent: usually the previous id (delta chains), sometimes
+            // an old id (chain sharing), sometimes none (full row)
+            let parent = if rows.is_empty() || rng.chance(0.15) {
+                None
+            } else if rng.chance(0.8) {
+                Some((plain.len() - 1) as u32)
+            } else {
+                Some(rng.range(0, plain.len() - 1) as u32)
+            };
+            let (pid, pnew) = plain.intern_with_parent(&row, parent);
+            let (cid, cnew) = comp.intern_with_parent(&row, parent);
+            assert_eq!(
+                (pid, pnew),
+                (cid, cnew),
+                "trial {trial} step {step}: id/newness diverged for {row:?}"
+            );
+            if pnew {
+                rows.push(row.clone());
+            }
+            prev = row;
+        }
+        // full read-back sweep: every id decodes to the row it interned
+        let mut buf = Vec::new();
+        for (id, want) in rows.iter().enumerate() {
+            comp.get_into(id as u32, &mut buf);
+            assert_eq!(&buf, want, "trial {trial}: id {id} decoded wrong");
+            assert_eq!(plain.get(id as u32), want.as_slice());
+            assert_eq!(comp.find(want), Some(id as u32), "trial {trial}: find missed id {id}");
+        }
+        assert_eq!(comp.len(), plain.len());
+        // compressed cursor yields the exact interning order
+        let mut cur = comp.rows();
+        let mut i = 0usize;
+        while let Some(r) = cur.next_row() {
+            assert_eq!(r, rows[i].as_slice(), "trial {trial}: cursor row {i}");
+            i += 1;
+        }
+        assert_eq!(i, rows.len());
+    }
+}
+
+#[test]
+fn edge_values_survive_long_parent_chains() {
+    // a deliberate worst case: a long chain of single-column mutations
+    // cycling through every adversarial value, forcing chain-bounded
+    // re-anchoring (full-row fallback) along the way
+    let width = 8;
+    let mut comp = ConfigStore::with_mode(StoreMode::Compressed);
+    let mut rows: Vec<Vec<u64>> = Vec::new();
+    let mut cur = vec![0u64; width];
+    let (mut parent, fresh) = comp.intern_with_parent(&cur, None);
+    assert!(fresh);
+    rows.push(cur.clone());
+    for (step, &v) in EDGE.iter().cycle().take(120).enumerate() {
+        cur[step % width] = v ^ (step as u64) << 32;
+        let (id, fresh) = comp.intern_with_parent(&cur, Some(parent));
+        if fresh {
+            rows.push(cur.clone());
+            parent = id;
+        }
+    }
+    let mut buf = Vec::new();
+    for (id, want) in rows.iter().enumerate() {
+        comp.get_into(id as u32, &mut buf);
+        assert_eq!(&buf, want, "chain id {id}");
+    }
+}
