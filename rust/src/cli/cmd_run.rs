@@ -36,6 +36,12 @@ pub fn run(args: &Args) -> Result<()> {
     let delta_cache = args
         .opt_num::<usize>("delta-cache")?
         .unwrap_or(crate::compute::DEFAULT_DELTA_CACHE);
+    // `--trace FILE`: JSONL span export; `--timings`: per-level phase
+    // table on stderr. Neither changes a single report byte — stdout is
+    // identical with or without them.
+    let trace_path = args.opt("trace").map(std::path::PathBuf::from);
+    let trace = trace_path.as_ref().map(|_| std::sync::Arc::new(crate::obs::Trace::new()));
+    let timings = args.flag("timings");
 
     // Explorer path (reference semantics, tree recording). `--workers N`
     // engages the pipelined parallel engine; `--single-thread` or tree
@@ -60,8 +66,28 @@ pub fn run(args: &Args) -> Result<()> {
                 opts = opts.workers(w);
             }
         }
+        if let Some(t) = &trace {
+            opts = opts.trace(std::sync::Arc::clone(t));
+        }
+        if timings {
+            opts = opts.timings(true);
+        }
         let mut explorer = Explorer::new(&sys, opts);
         let report = explorer.run();
+        if timings {
+            // same table the coordinator renders, on stderr so stdout
+            // stays byte-identical to an untimed run
+            let m = crate::obs::Metrics::from_levels(
+                report.stats.levels.clone(),
+                report.stats.elapsed,
+                "host",
+                report.stats.workers,
+            );
+            eprint!("{}", m.render_table());
+        }
+        if let (Some(t), Some(path)) = (&trace, &trace_path) {
+            write_trace(t, path)?;
+        }
         if args.flag("paper-log") {
             print!("{}", crate::output::render_paper_log(&sys, &report));
         } else {
@@ -100,9 +126,16 @@ pub fn run(args: &Args) -> Result<()> {
         step_mode,
         store_mode,
         delta_cache,
+        trace: trace.clone(),
     };
     let mut coord = Coordinator::new(&sys, cfg);
     let report = coord.run()?;
+    if timings {
+        eprint!("{}", report.metrics.render_table());
+    }
+    if let (Some(t), Some(path)) = (&trace, &trace_path) {
+        write_trace(t, path)?;
+    }
     println!(
         "system `{}`: {} configs, stop: {}  [{} backend, {} workers]",
         sys.name,
@@ -133,5 +166,21 @@ pub fn run(args: &Args) -> Result<()> {
         ]);
         println!("{}", j.to_string_pretty());
     }
+    Ok(())
+}
+
+/// Export a run's spans as JSONL (schema documented in `crate::obs`).
+fn write_trace(trace: &crate::obs::Trace, path: &std::path::Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .map_err(|e| Error::parse("cli", 0, format!("cannot create {}: {e}", path.display())))?;
+    let mut w = std::io::BufWriter::new(file);
+    trace
+        .write_jsonl(&mut w)
+        .and_then(|()| {
+            use std::io::Write as _;
+            w.flush()
+        })
+        .map_err(|e| Error::parse("cli", 0, format!("trace write failed: {e}")))?;
+    eprintln!("wrote {}", path.display());
     Ok(())
 }

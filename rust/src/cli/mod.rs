@@ -7,6 +7,7 @@
 //!                     [--spike-repr auto|dense|sparse]
 //!                     [--step-mode auto|batch|delta]
 //!                     [--store-mode plain|compressed] [--delta-cache N]
+//!                     [--trace FILE.jsonl] [--timings]
 //! snapse walk <system> [--steps N] [--seed S]
 //! snapse generated <system> [--max N] [--workers W]
 //! snapse analyze <system> [--configs N] [--bound B] [--workers W] [--json]
@@ -157,6 +158,8 @@ fn help_text() -> String {
     s.push_str("      --step-mode auto|batch|delta (full successor rows vs S·M deltas)\n");
     s.push_str("      --store-mode plain|compressed (visited arena: flat rows vs varint deltas)\n");
     s.push_str("      --delta-cache N (run-scoped S·M memo entries; 0 = off)\n");
+    s.push_str("      --trace FILE.jsonl (per-phase span export) --timings (per-level table\n");
+    s.push_str("      on stderr); neither changes any report byte\n");
     s.push_str("  walk <system>       follow one random branch\n");
     s.push_str("      --steps N --seed S\n");
     s.push_str("  generated <system>  compute the generated number set\n");

@@ -53,6 +53,23 @@ pub struct DeltaCacheStats {
     pub capacity: usize,
 }
 
+impl DeltaCacheStats {
+    /// The `(family, kind, value)` samples this snapshot contributes to
+    /// a Prometheus exposition. Several run/pool caches may be live at
+    /// once (one per served system), so the caller groups samples from
+    /// all of them by family — emitting one `# TYPE family kind` line —
+    /// and attaches its own label set (e.g. `system="<hash>"`).
+    pub fn prometheus_samples(&self) -> [(&'static str, &'static str, f64); 5] {
+        [
+            ("snapse_delta_cache_hits_total", "counter", self.hits as f64),
+            ("snapse_delta_cache_misses_total", "counter", self.misses as f64),
+            ("snapse_delta_cache_evictions_total", "counter", self.evictions as f64),
+            ("snapse_delta_cache_entries", "gauge", self.entries as f64),
+            ("snapse_delta_cache_capacity", "gauge", self.capacity as f64),
+        ]
+    }
+}
+
 /// Interned spiking-vector keys plus their cached `S·M` rows.
 #[derive(Debug)]
 struct Inner {

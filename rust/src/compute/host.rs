@@ -65,6 +65,9 @@ pub struct HostBackend {
     /// Rows the run cache missed this call; computed in phase 2,
     /// published in phase 3. Reused across calls.
     miss_rows: Vec<u32>,
+    /// Run-scoped trace recorder; when attached, each delta call emits
+    /// one batch-granular `delta_cache` event (never per row).
+    trace: Option<Arc<crate::obs::Trace>>,
 }
 
 impl HostBackend {
@@ -78,6 +81,7 @@ impl HostBackend {
             run_cache: None,
             key_buf: Vec::new(),
             miss_rows: Vec::new(),
+            trace: None,
         }
     }
 
@@ -198,6 +202,17 @@ impl StepBackend for HostBackend {
                 cache.insert(&self.key_buf, &out[b * n..(b + 1) * n]);
             }
         }
+        if let Some(t) = &self.trace {
+            t.event(
+                None,
+                "delta_cache",
+                &[
+                    ("rows", batch.b as u64),
+                    ("hits", (batch.b - miss.len()) as u64),
+                    ("misses", miss.len() as u64),
+                ],
+            );
+        }
         self.miss_rows = miss;
         Ok(())
     }
@@ -210,6 +225,10 @@ impl StepBackend for HostBackend {
         if cache.shape() == (self.rows, self.cols) {
             self.run_cache = Some(cache);
         }
+    }
+
+    fn attach_trace(&mut self, trace: Arc<crate::obs::Trace>) {
+        self.trace = Some(trace);
     }
 
     /// Thin adapter over the native delta path: `configs + deltas`. Keeps
@@ -450,6 +469,28 @@ mod tests {
         let mut d = Vec::new();
         be.step_deltas_into(&batch, &mut d).unwrap();
         assert_eq!(d.len(), 3);
+    }
+
+    #[test]
+    fn trace_events_are_batch_granular_and_output_identical() {
+        let m = m_pi();
+        let trace = std::sync::Arc::new(crate::obs::Trace::new());
+        let mut traced = HostBackend::new(&m);
+        traced.attach_trace(std::sync::Arc::clone(&trace));
+        let mut plain = HostBackend::new(&m);
+        let cfg = [2i64, 1, 1, 5, 0, 3];
+        let spk = [1u8, 0, 1, 1, 0, 0, 1, 1, 1, 0];
+        let batch =
+            StepBatch { b: 2, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        plain.step_deltas_into(&batch, &mut want).unwrap();
+        traced.step_deltas_into(&batch, &mut got).unwrap();
+        assert_eq!(got, want, "tracing never changes results");
+        let recs = trace.records();
+        assert_eq!(recs.len(), 1, "one event per batch, not per row");
+        assert_eq!(recs[0].name, "delta_cache");
+        assert_eq!(recs[0].fields, vec![("rows", 2), ("hits", 0), ("misses", 2)]);
     }
 
     #[test]

@@ -228,6 +228,15 @@ pub trait StepBackend: Send {
     fn attach_delta_cache(&mut self, cache: std::sync::Arc<DeltaCache>) {
         let _ = cache;
     }
+
+    /// Attach a run-scoped [`Trace`](crate::obs::Trace) recorder.
+    /// Observability hook mirroring [`StepBackend::attach_delta_cache`]:
+    /// backends that record nothing ignore it, and output is
+    /// byte-identical with or without a trace attached (the host backend
+    /// emits one `delta_cache` event per batch, never per row).
+    fn attach_trace(&mut self, trace: std::sync::Arc<crate::obs::Trace>) {
+        let _ = trace;
+    }
 }
 
 #[cfg(test)]

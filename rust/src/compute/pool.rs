@@ -22,9 +22,11 @@
 //! result — only fold order matters, and that is fixed upstream.
 
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use super::delta_cache::DeltaCache;
 use super::{HostBackend, StepBackend};
+use crate::obs::Trace;
 use crate::error::Result;
 use crate::matrix::TransitionMatrix;
 
@@ -180,6 +182,11 @@ pub struct BackendPool {
     /// Run-scoped `S → S·M` cache shared by every pooled instance (set
     /// via [`BackendPool::set_delta_cache`] before check-outs begin).
     delta_cache: Option<Arc<DeltaCache>>,
+    /// Trace recorder shared by every pooled instance; when present,
+    /// [`BackendPool::acquire`] emits one `checkout` event per
+    /// check-out (wait time + remaining free instances). `None` keeps
+    /// acquire free of timer syscalls.
+    trace: Option<Arc<Trace>>,
 }
 
 impl BackendPool {
@@ -210,6 +217,7 @@ impl BackendPool {
             max_batch,
             native_deltas,
             delta_cache: None,
+            trace: None,
         }
     }
 
@@ -228,6 +236,22 @@ impl BackendPool {
     /// The shared delta cache, if one was attached.
     pub fn delta_cache(&self) -> Option<&Arc<DeltaCache>> {
         self.delta_cache.as_ref()
+    }
+
+    /// Attach one shared [`Trace`] to every pooled instance and to the
+    /// pool itself (check-out events). Same contract as
+    /// [`BackendPool::set_delta_cache`]: must run before check-outs
+    /// begin, and attachment never changes results.
+    pub fn set_trace(&mut self, trace: Arc<Trace>) {
+        for b in self.slots.get_mut().expect("pool lock poisoned").iter_mut() {
+            b.attach_trace(Arc::clone(&trace));
+        }
+        self.trace = Some(trace);
+    }
+
+    /// The shared trace, if one was attached.
+    pub fn trace(&self) -> Option<&Arc<Trace>> {
+        self.trace.as_ref()
     }
 
     /// Backend name for reports.
@@ -261,9 +285,23 @@ impl BackendPool {
 
     /// Check a backend out, blocking until one is free.
     pub fn acquire(&self) -> PooledBackend<'_> {
+        // timer syscall only on traced runs
+        let wait_start = self.trace.as_ref().map(|_| Instant::now());
         let mut slots = self.slots.lock().unwrap();
         loop {
             if let Some(b) = slots.pop() {
+                let free = slots.len();
+                drop(slots);
+                if let (Some(t), Some(start)) = (&self.trace, wait_start) {
+                    t.event(
+                        None,
+                        "checkout",
+                        &[
+                            ("wait_us", start.elapsed().as_micros() as u64),
+                            ("free", free as u64),
+                        ],
+                    );
+                }
                 return PooledBackend { pool: self, backend: Some(b) };
             }
             slots = self.freed.wait(slots).unwrap();
@@ -372,6 +410,23 @@ mod tests {
             vec![Box::new(crate::compute::HostBackend::new(&m)), Box::new(BatchOnly)],
         );
         assert!(!mixed.native_deltas());
+    }
+
+    #[test]
+    fn traced_pool_emits_checkout_events() {
+        let m = build_matrix(&crate::generators::paper_pi());
+        let mut p = BackendPool::build(&HostBackendFactory::new(m), 2).unwrap();
+        assert!(p.trace().is_none());
+        let trace = Arc::new(crate::obs::Trace::new());
+        p.set_trace(Arc::clone(&trace));
+        assert!(p.trace().is_some());
+        {
+            let _a = p.acquire();
+            let _b = p.acquire();
+        }
+        let recs = trace.records();
+        assert_eq!(recs.iter().filter(|r| r.name == "checkout").count(), 2);
+        assert!(recs.iter().all(|r| r.kind == "event"));
     }
 
     #[test]

@@ -1,107 +1,10 @@
-//! Run metrics: per-level phase timings and aggregate throughput.
+//! Run metrics — a view over the unified [`crate::obs`] registry types.
+//!
+//! The per-level table and aggregate throughput figures used to be
+//! coordinator-private; they now live in [`crate::obs::metrics`] so the
+//! explorer paths (serial and pipelined, via `--timings`/`--trace`) fill
+//! the identical structure. This module re-exports the types under their
+//! historical paths (`coordinator::{LevelMetrics, Metrics}`) — existing
+//! callers compile unchanged.
 
-use std::time::Duration;
-
-/// Metrics for one BFS level.
-#[derive(Debug, Clone, Default)]
-pub struct LevelMetrics {
-    /// Newly discovered configurations.
-    pub new_configs: u64,
-    /// `(C, S)` rows evaluated.
-    pub steps: u64,
-    /// Backend dispatches.
-    pub batches: u64,
-    /// Σ Ψ across expanded configs.
-    pub psi_total: u128,
-    /// Expand-phase wall time.
-    pub expand_time: Duration,
-    /// Step-phase wall time.
-    pub step_time: Duration,
-    /// Fold-phase wall time.
-    pub fold_time: Duration,
-}
-
-/// Aggregate metrics for a run.
-#[derive(Debug, Clone, Default)]
-pub struct Metrics {
-    /// Per-level records (index = depth).
-    pub levels: Vec<LevelMetrics>,
-    /// Total wall time.
-    pub total_elapsed: Duration,
-    /// Backend name.
-    pub backend: String,
-    /// Worker threads used.
-    pub workers: usize,
-}
-
-impl Metrics {
-    /// Record one completed level.
-    pub fn record_level(&mut self, depth: u32, outcome: &super::worker::LevelOutcome) {
-        debug_assert_eq!(depth as usize, self.levels.len());
-        self.levels.push(LevelMetrics::from(outcome));
-    }
-
-    /// Total rows evaluated.
-    pub fn total_steps(&self) -> u64 {
-        self.levels.iter().map(|l| l.steps).sum()
-    }
-
-    /// Total backend dispatches.
-    pub fn total_batches(&self) -> u64 {
-        self.levels.iter().map(|l| l.batches).sum()
-    }
-
-    /// Total configurations discovered (excluding the root).
-    pub fn total_new_configs(&self) -> u64 {
-        self.levels.iter().map(|l| l.new_configs).sum()
-    }
-
-    /// Steps per second over the whole run.
-    pub fn steps_per_sec(&self) -> f64 {
-        let secs = self.total_elapsed.as_secs_f64();
-        if secs > 0.0 {
-            self.total_steps() as f64 / secs
-        } else {
-            0.0
-        }
-    }
-
-    /// Render a per-level phase table.
-    pub fn render_table(&self) -> String {
-        let mut t = crate::util::fmt::Table::new(&[
-            "depth", "new", "steps", "batches", "expand", "step", "fold",
-        ]);
-        for (d, l) in self.levels.iter().enumerate() {
-            t.row(&[
-                d.to_string(),
-                l.new_configs.to_string(),
-                l.steps.to_string(),
-                l.batches.to_string(),
-                crate::util::fmt::human_ns(l.expand_time.as_nanos() as f64),
-                crate::util::fmt::human_ns(l.step_time.as_nanos() as f64),
-                crate::util::fmt::human_ns(l.fold_time.as_nanos() as f64),
-            ]);
-        }
-        t.render()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn aggregates() {
-        let mut m = Metrics::default();
-        m.levels.push(LevelMetrics { new_configs: 2, steps: 2, batches: 1, ..Default::default() });
-        m.levels.push(LevelMetrics { new_configs: 4, steps: 6, batches: 2, ..Default::default() });
-        assert_eq!(m.total_steps(), 8);
-        assert_eq!(m.total_batches(), 3);
-        assert_eq!(m.total_new_configs(), 6);
-        m.total_elapsed = Duration::from_secs(2);
-        assert!((m.steps_per_sec() - 4.0).abs() < 1e-9);
-        let table = m.render_table();
-        assert!(table.contains("depth"));
-        assert_eq!(table.lines().count(), 4);
-    }
-}
+pub use crate::obs::{LevelMetrics, Metrics};

@@ -83,6 +83,11 @@ pub struct CoordinatorConfig {
     pub store_mode: StoreMode,
     /// Run-scoped `S → S·M` delta-cache capacity (0 = off).
     pub delta_cache: usize,
+    /// Optional span recorder: a `run` span with per-level `level`
+    /// spans (each holding `expand`/`step`/`fold` children), plus the
+    /// pool's `checkout` and the backends' `delta_cache` events. `None`
+    /// (the default) records nothing; output is identical either way.
+    pub trace: Option<std::sync::Arc<crate::obs::Trace>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -97,6 +102,7 @@ impl Default for CoordinatorConfig {
             step_mode: crate::compute::StepMode::Auto,
             store_mode: StoreMode::Plain,
             delta_cache: DEFAULT_DELTA_CACHE,
+            trace: None,
         }
     }
 }
@@ -171,7 +177,13 @@ impl<'a> Coordinator<'a> {
                 self.cfg.delta_cache,
             )));
         }
-        let driver = worker::LevelDriver::new(
+        let trace = self.cfg.trace.as_deref();
+        let run_span = trace.map(|t| t.begin(None));
+        if let Some(t) = &self.cfg.trace {
+            // run-private pool: checkout events land in this run's trace
+            pool.set_trace(std::sync::Arc::clone(t));
+        }
+        let mut driver = worker::LevelDriver::new(
             self.sys,
             &self.matrix,
             workers,
@@ -179,6 +191,9 @@ impl<'a> Coordinator<'a> {
         )
         .with_spike_repr(self.cfg.spike_repr)
         .with_step_mode(self.cfg.step_mode);
+        if let Some(t) = &self.cfg.trace {
+            driver = driver.with_trace(std::sync::Arc::clone(t), run_span);
+        }
         let mut visited = VisitedStore::with_mode(
             self.cfg.store_mode,
             self.sys.num_neurons(),
@@ -213,7 +228,7 @@ impl<'a> Coordinator<'a> {
                 self.cfg.max_configs,
             )?;
             let truncated = lvl.truncated;
-            metrics.record_level(depth, &lvl);
+            metrics.record_level(depth, lvl.metrics);
             level = lvl.next_level;
             depth += 1;
             if truncated {
@@ -230,6 +245,13 @@ impl<'a> Coordinator<'a> {
         metrics.total_elapsed = start.elapsed();
         metrics.backend = pool.name().to_string();
         metrics.workers = workers;
+        if let (Some(t), Some(s)) = (trace, run_span) {
+            t.end(
+                s,
+                "run",
+                &[("steps", metrics.total_steps()), ("configs", visited.len() as u64)],
+            );
+        }
         Ok(RunReport { visited, stop, halting, metrics })
     }
 }

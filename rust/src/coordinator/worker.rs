@@ -6,11 +6,11 @@
 //! its rows through the batcher → fold (dedup) → next window, with the
 //! configuration budget checked between windows.
 
-use std::time::Instant;
+use std::sync::Arc;
 
 use super::batcher::Batcher;
-use super::metrics::LevelMetrics;
 use crate::compute::{BackendPool, SpikeBuf, SpikeRepr, StepMode};
+use crate::obs::{LevelMetrics, Span, Stopwatch, Trace};
 use crate::engine::{applicable_rules_into, ApplicabilityMap, ConfigVector, SpikingEnumeration, VisitedStore};
 use crate::error::Result;
 use crate::matrix::TransitionMatrix;
@@ -44,26 +44,23 @@ pub struct LevelDriver<'a> {
     /// Parents expanded per window (bounds peak row memory together with
     /// the per-config Ψ).
     window_parents: usize,
+    /// Optional span recorder: one `level` span per [`process_level`]
+    /// call with `expand`/`step`/`fold` children. Phase durations feed
+    /// the [`LevelMetrics`] table whether or not a trace is attached.
+    trace: Option<Arc<Trace>>,
+    /// Parent span for the `level` spans (the coordinator's `run` span).
+    trace_parent: Option<Span>,
 }
 
 /// What a processed level yields.
 pub struct LevelOutcome {
     /// Newly discovered configurations in deterministic order.
     pub next_level: Vec<ConfigVector>,
-    /// Rows evaluated.
-    pub steps: u64,
-    /// Backend dispatches.
-    pub batches: u64,
-    /// Σ Ψ of the level.
-    pub psi_total: u128,
     /// True when the level was cut short by the configuration budget.
     pub truncated: bool,
-    /// Time in the expand phase.
-    pub expand_time: std::time::Duration,
-    /// Time in the step phase.
-    pub step_time: std::time::Duration,
-    /// Time in the fold phase.
-    pub fold_time: std::time::Duration,
+    /// Counters and phase timings for this level — ready to hand to
+    /// [`Metrics::record_level`](crate::obs::Metrics::record_level).
+    pub metrics: LevelMetrics,
 }
 
 impl<'a> LevelDriver<'a> {
@@ -82,7 +79,18 @@ impl<'a> LevelDriver<'a> {
             use_sparse: SpikeRepr::Auto.use_sparse(sys.num_rules(), sys.num_neurons()),
             step_mode: StepMode::Auto,
             window_parents: 4096,
+            trace: None,
+            trace_parent: None,
         }
+    }
+
+    /// Attach a span recorder: each processed level records a `level`
+    /// span (with `expand`/`step`/`fold` children) under `parent` —
+    /// typically the coordinator's `run` span.
+    pub fn with_trace(mut self, trace: Arc<Trace>, parent: Option<Span>) -> Self {
+        self.trace = Some(trace);
+        self.trace_parent = parent;
+        self
     }
 
     /// Override the window size (testing / tuning).
@@ -128,15 +136,12 @@ impl<'a> LevelDriver<'a> {
     ) -> Result<LevelOutcome> {
         let n = self.sys.num_neurons();
         let r = self.sys.num_rules();
+        let trace = self.trace.as_deref();
+        let level_span = trace.map(|t| t.begin(self.trace_parent));
         let mut out = LevelOutcome {
             next_level: Vec::new(),
-            steps: 0,
-            batches: 0,
-            psi_total: 0,
             truncated: false,
-            expand_time: Default::default(),
-            step_time: Default::default(),
-            fold_time: Default::default(),
+            metrics: LevelMetrics::default(),
         };
 
         for window in level.chunks(self.window_parents) {
@@ -147,7 +152,7 @@ impl<'a> LevelDriver<'a> {
                 }
             }
             // --- expand (parallel over slices of the window) --------------
-            let t0 = Instant::now();
+            let sw = Stopwatch::start(trace, level_span);
             let chunk = window.len().div_ceil(self.workers).max(1);
             let expansions: Vec<Expansion> = if self.workers == 1 || window.len() < 64 {
                 vec![self.expand_slice(window, 0, r)]
@@ -164,29 +169,33 @@ impl<'a> LevelDriver<'a> {
                         .collect()
                 })
             };
-            out.expand_time += t0.elapsed();
+            out.metrics.expand_time +=
+                sw.stop(trace, "expand", &[("parents", window.len() as u64)]);
 
             // --- step (batched across the backend pool) -------------------
-            let t1 = Instant::now();
+            let sw = Stopwatch::start(trace, level_span);
             let total_rows: usize = expansions.iter().map(|e| e.rows).sum();
             let mut batcher =
                 Batcher::with_repr(n, r, self.batch_target, total_rows, self.use_sparse)
                     .with_step_mode(self.step_mode);
             let mut halts: Vec<(u32, ConfigVector)> = Vec::new();
             for e in &expansions {
-                out.psi_total += e.psi_total;
+                out.metrics.psi_total += e.psi_total;
                 batcher.push_rows(&e.configs, e.spikes.as_rows(), e.rows);
             }
             for e in expansions {
                 halts.extend(e.halting);
             }
             let (results, steps, batches) = batcher.run_pool(pool, self.workers)?;
-            out.steps += steps;
-            out.batches += batches;
-            out.step_time += t1.elapsed();
+            out.metrics.steps += steps;
+            out.metrics.batches += batches;
+            out.metrics.step_time +=
+                sw.stop(trace, "step", &[("rows", total_rows as u64)]);
 
             // --- fold (ordered dedup) --------------------------------------
-            let t2 = Instant::now();
+            let sw = Stopwatch::start(trace, level_span);
+            let rows_in = results.len() as u64;
+            let new_before = out.next_level.len() as u64;
             halts.sort_by_key(|(i, _)| *i);
             halting.extend(halts.into_iter().map(|(_, c)| c));
             for child in results {
@@ -197,7 +206,21 @@ impl<'a> LevelDriver<'a> {
                     out.next_level.push(child);
                 }
             }
-            out.fold_time += t2.elapsed();
+            let new = out.next_level.len() as u64 - new_before;
+            out.metrics.fold_time +=
+                sw.stop(trace, "fold", &[("rows", rows_in), ("new", new)]);
+        }
+        out.metrics.new_configs = out.next_level.len() as u64;
+        if let (Some(t), Some(s)) = (trace, level_span) {
+            t.end(
+                s,
+                "level",
+                &[
+                    ("parents", level.len() as u64),
+                    ("new", out.metrics.new_configs),
+                    ("steps", out.metrics.steps),
+                ],
+            );
         }
         Ok(out)
     }
@@ -229,20 +252,6 @@ impl<'a> LevelDriver<'a> {
     }
 }
 
-impl From<&LevelOutcome> for LevelMetrics {
-    fn from(o: &LevelOutcome) -> LevelMetrics {
-        LevelMetrics {
-            new_configs: o.next_level.len() as u64,
-            steps: o.steps,
-            batches: o.batches,
-            psi_total: o.psi_total,
-            expand_time: o.expand_time,
-            step_time: o.step_time,
-            fold_time: o.fold_time,
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,10 +277,50 @@ mod tests {
             .unwrap();
         let names: Vec<String> = out.next_level.iter().map(|c| c.to_string()).collect();
         assert_eq!(names, vec!["2-1-2", "1-1-2"]);
-        assert_eq!(out.steps, 2);
-        assert_eq!(out.psi_total, 2);
+        assert_eq!(out.metrics.steps, 2);
+        assert_eq!(out.metrics.psi_total, 2);
+        assert_eq!(out.metrics.new_configs, 2);
+        assert!(out.metrics.step_time >= std::time::Duration::ZERO);
         assert!(halting.is_empty());
         assert!(!out.truncated);
+    }
+
+    #[test]
+    fn trace_records_level_phase_spans() {
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let trace = Arc::new(Trace::new());
+        let driver = LevelDriver::new(&sys, &m, 2, 4).with_trace(Arc::clone(&trace), None);
+        let backends = pool(&m, 2);
+        let mut visited = VisitedStore::new();
+        let c0 = ConfigVector::from(vec![2, 1, 1]);
+        visited.insert(c0.clone());
+        let mut halting = Vec::new();
+        let traced = driver
+            .process_level(&[c0.clone()], &backends, &mut visited, &mut halting, None)
+            .unwrap();
+        let recs = trace.records();
+        let names: Vec<&str> = recs.iter().map(|r| r.name).collect();
+        for phase in ["expand", "step", "fold", "level"] {
+            assert!(names.contains(&phase), "{phase} span recorded");
+        }
+        // phase spans nest under the level span
+        let level_id = recs.iter().find(|r| r.name == "level").unwrap().id;
+        for r in recs.iter().filter(|r| ["expand", "step", "fold"].contains(&r.name)) {
+            assert_eq!(r.parent, level_id);
+        }
+        // tracing never changes the level's output
+        let bare = LevelDriver::new(&sys, &m, 2, 4);
+        let mut visited2 = VisitedStore::new();
+        visited2.insert(c0.clone());
+        let mut halting2 = Vec::new();
+        let plain = bare
+            .process_level(&[c0], &backends, &mut visited2, &mut halting2, None)
+            .unwrap();
+        assert_eq!(
+            traced.next_level.iter().map(|c| c.to_string()).collect::<Vec<_>>(),
+            plain.next_level.iter().map(|c| c.to_string()).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

@@ -93,6 +93,14 @@ pub struct ExploreOptions {
     /// per-batch-memo-only behavior exactly. Ignored on shared-pool runs
     /// (the pool's own cache, if any, is used instead).
     pub delta_cache: usize,
+    /// Optional span/event recorder shared by the whole run
+    /// (`--trace FILE.jsonl`). `None` — the default — keeps every
+    /// instrumentation point a dead branch: no timer syscalls, no
+    /// allocation on the hot path. Output is byte-identical either way.
+    pub trace: Option<std::sync::Arc<crate::obs::Trace>>,
+    /// Collect the per-level phase table (`--timings`) into
+    /// [`ExploreStats::levels`] even without a trace attached.
+    pub timings: bool,
 }
 
 impl ExploreOptions {
@@ -110,6 +118,8 @@ impl ExploreOptions {
             step_mode: crate::compute::StepMode::Auto,
             store_mode: StoreMode::Plain,
             delta_cache: DEFAULT_DELTA_CACHE,
+            trace: None,
+            timings: false,
         }
     }
 
@@ -177,6 +187,18 @@ impl ExploreOptions {
         self.delta_cache = capacity;
         self
     }
+
+    /// Attach a span/event recorder (`--trace`).
+    pub fn trace(mut self, trace: std::sync::Arc<crate::obs::Trace>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Collect per-level phase timings (`--timings`).
+    pub fn timings(mut self, on: bool) -> Self {
+        self.timings = on;
+        self
+    }
 }
 
 /// Counters accumulated during a run.
@@ -215,6 +237,12 @@ pub struct ExploreStats {
     pub delta_hits: u64,
     /// Delta-cache misses attributed to this run (same caveat).
     pub delta_misses: u64,
+    /// Per-level phase table (index = parent depth), collected only when
+    /// `--timings` or `--trace` is active; empty otherwise. Attribution
+    /// is batch-granular: a batch spanning a BFS level boundary books to
+    /// its first row's parent depth, and on the pipelined path worker
+    /// compute books to each chunk's first row likewise.
+    pub levels: Vec<crate::obs::LevelMetrics>,
 }
 
 /// Result of an exploration.
@@ -446,9 +474,28 @@ impl<'a> Explorer<'a> {
             if let Some(cache) = &run_cache {
                 backend.attach_delta_cache(std::sync::Arc::clone(cache));
             }
+            // Trace attachment mirrors the cache: run-private backends
+            // record into the run's trace; shared-pool instances stay
+            // untouched (a per-run trace must not leak across runs).
+            if let Some(t) = &self.opts.trace {
+                backend.attach_trace(std::sync::Arc::clone(t));
+            }
         }
         run_serial(self.sys, backend, &self.opts, c0, run_cache.as_deref())
     }
+}
+
+/// The per-level slot of `levels` at `depth`, growing the table as
+/// deeper levels appear. Shared by the serial and pipelined engines.
+pub(crate) fn level_slot(
+    levels: &mut Vec<crate::obs::LevelMetrics>,
+    depth: u32,
+) -> &mut crate::obs::LevelMetrics {
+    let idx = depth as usize;
+    if levels.len() <= idx {
+        levels.resize_with(idx + 1, Default::default);
+    }
+    &mut levels[idx]
 }
 
 /// Pre-size hint for the visited arena: the run's configuration bound,
@@ -482,6 +529,13 @@ fn run_serial(
     let use_delta = opts.step_mode.use_delta(backend.native_deltas());
     // Counter baseline for per-run cache stats (the cache may be shared).
     let cache_base = cache.map(|c| c.snapshot());
+    // Observability is a dead branch unless `--trace`/`--timings` asked
+    // for it: no Stopwatch (hence no timer syscall) exists otherwise,
+    // and instrumentation stays at batch granularity — never inside the
+    // per-child fold loop.
+    let trace = opts.trace.as_deref();
+    let timings_on = opts.timings || trace.is_some();
+    let root_span = trace.map(|t| t.begin(None));
 
     // Pre-size the arena + id table toward the run's own bound (clamped —
     // a huge --configs cap must not pre-commit memory the exploration may
@@ -544,6 +598,8 @@ fn run_serial(
             }
         }
         // Fill one batch from the queue.
+        let sw_enum = timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
+        let psi_before = stats.psi_total;
         cfg_buf.clear();
         spk_buf.clear();
         meta.clear();
@@ -593,7 +649,16 @@ fn run_serial(
             }
         }
         if meta.is_empty() {
+            if let Some(sw) = sw_enum {
+                sw.stop(trace, "enumerate", &[("rows", 0)]);
+            }
             continue;
+        }
+        // batch-granular level attribution: the first row's parent depth
+        let batch_depth = meta[0].1;
+        if let Some(sw) = sw_enum {
+            let d = sw.stop(trace, "enumerate", &[("rows", meta.len() as u64)]);
+            level_slot(&mut stats.levels, batch_depth).expand_time += d;
         }
         // Evaluate the batch. Delta mode fills the reusable `step_buf`
         // with `S·M` rows only; batch mode takes full successor rows
@@ -601,6 +666,7 @@ fn run_serial(
         // exactly what `--step-mode delta` removes).
         let b = meta.len();
         let batch = StepBatch { b, n, r, configs: &cfg_buf, spikes: spk_buf.as_rows() };
+        let sw_step = timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
         let full_out: Option<Vec<i64>> = if use_delta {
             backend
                 .step_deltas_into(&batch, &mut step_buf)
@@ -612,11 +678,21 @@ fn run_serial(
         let vals: &[i64] = full_out.as_deref().unwrap_or(&step_buf);
         stats.batches += 1;
         stats.steps += b as u64;
+        if let Some(sw) = sw_step {
+            let d = sw.stop(trace, "step", &[("rows", b as u64)]);
+            let lm = level_slot(&mut stats.levels, batch_depth);
+            lm.step_time += d;
+            lm.steps += b as u64;
+            lm.batches += 1;
+            lm.psi_total += stats.psi_total - psi_before;
+        }
         // Fold results; the configuration budget is enforced here, per
         // row, so the cap is exact rather than batch-granular. The child
         // row builds in `child_buf` (checked non-negative `parent +
         // delta` in delta mode) and interns straight from it — a heap
         // copy happens only for configurations never seen before.
+        let sw_fold = timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
+        let mut new_in_batch = 0u64;
         for (row, (parent_node, parent_depth, parent_id)) in meta.drain(..).enumerate() {
             if let Some(maxc) = opts.max_configs {
                 if visited.len() >= maxc {
@@ -651,9 +727,16 @@ fn run_serial(
                 None => 0,
             };
             if is_new {
+                new_in_batch += 1;
                 depth_reached = depth_reached.max(depth);
                 queue.push_back(Pending { id: child_id, depth, node });
             }
+        }
+        if let Some(sw) = sw_fold {
+            let d = sw.stop(trace, "fold", &[("rows", b as u64), ("new", new_in_batch)]);
+            let lm = level_slot(&mut stats.levels, batch_depth);
+            lm.fold_time += d;
+            lm.new_configs += new_in_batch;
         }
     }
 
@@ -665,6 +748,9 @@ fn run_serial(
         stop = StopReason::ZeroConfig;
     }
     stats.elapsed = start.elapsed();
+    if let (Some(t), Some(r)) = (trace, root_span) {
+        t.end(r, "run", &[("steps", stats.steps), ("configs", visited.len() as u64)]);
+    }
     stats.arena_bytes = visited.arena_bytes() as u64;
     if let (Some(c), Some((h0, m0))) = (cache, cache_base) {
         stats.delta_cache_capacity = c.capacity();

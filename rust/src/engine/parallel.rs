@@ -41,12 +41,12 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::applicability::{applicable_rules_into, ApplicabilityMap};
 use super::config::ConfigVector;
 use super::dedup::{ShardedVisitedStore, VisitedStore};
-use super::explorer::{ExploreOptions, ExploreReport, ExploreStats, SearchOrder};
+use super::explorer::{level_slot, ExploreOptions, ExploreReport, ExploreStats, SearchOrder};
 use super::spiking::SpikingEnumeration;
 use super::stop::StopReason;
 use crate::compute::{BackendFactory, BackendPool, DeltaCache, SpikeBuf, StepBatch};
@@ -85,6 +85,14 @@ struct ChunkResult {
     counts: Vec<u64>,
     depths: Vec<u32>,
     parents: Vec<u32>,
+    /// Parent depth of the chunk's rows — level attribution for the
+    /// `--timings` table (0 when timings are off or the chunk is empty).
+    level: u32,
+    /// Rows the worker evaluated, before the duplicate pre-filter
+    /// (`depths.len()` only counts survivors).
+    rows: u32,
+    /// Worker-side evaluation time in µs; 0 unless timings/trace are on.
+    eval_us: u64,
     error: Option<String>,
 }
 
@@ -143,6 +151,11 @@ pub(crate) fn run_pipelined(
             opts.delta_cache,
         )));
     }
+    if let Some(t) = &opts.trace {
+        // run-private pool: safe to attach the per-run trace (a shared
+        // serve pool never takes a run's trace — it would leak across runs)
+        pool.set_trace(Arc::clone(t));
+    }
     run_pipelined_on(sys, &pool, opts, c0)
 }
 
@@ -163,6 +176,11 @@ pub(crate) fn run_pipelined_on(
     let start = Instant::now();
     let n = sys.num_neurons();
     let r = sys.num_rules();
+    // Observability: dead branches unless `--trace`/`--timings` asked for
+    // them — no Stopwatch exists otherwise, and workers ship `eval_us: 0`.
+    let trace = opts.trace.as_deref();
+    let timings_on = opts.timings || trace.is_some();
+    let root_span = trace.map(|t| t.begin(None));
     // One representation per run (resolved exactly as the serial path
     // does): chunk buffers, channel payloads and backend batches all
     // carry it; the fold sees only child configurations either way.
@@ -236,8 +254,15 @@ pub(crate) fn run_pipelined_on(
                 loop {
                     // hold the lock across recv: exactly one idle worker
                     // waits productively, the rest queue on the mutex
+                    // (the `wait` span measures exactly this channel idle
+                    // time, splitting it from compute below)
+                    let sw_wait =
+                        trace.map(|_| crate::obs::Stopwatch::start(trace, root_span));
                     let msg = work_rx.lock().unwrap().recv();
                     let Ok(chunk) = msg else { break };
+                    if let Some(sw) = sw_wait {
+                        sw.stop(trace, "wait", &[("rows", chunk.rows as u64)]);
+                    }
                     if cancel.load(Ordering::Acquire) {
                         break;
                     }
@@ -255,6 +280,8 @@ pub(crate) fn run_pipelined_on(
                         configs: &chunk.configs,
                         spikes: chunk.spikes.as_rows(),
                     };
+                    let sw_step =
+                        timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
                     let full_out: std::result::Result<Option<Vec<i64>>, String> = if use_delta {
                         backend
                             .step_deltas_into(&batch, &mut delta_buf)
@@ -266,12 +293,15 @@ pub(crate) fn run_pipelined_on(
                             .map(Some)
                             .map_err(|e| format!("step backend failed: {e}"))
                     };
-                    let result = match full_out {
+                    let mut result = match full_out {
                         Err(e) => ChunkResult {
                             seq: chunk.seq,
                             counts: Vec::new(),
                             depths: Vec::new(),
                             parents: Vec::new(),
+                            level: 0,
+                            rows: 0,
+                            eval_us: 0,
                             error: Some(e),
                         },
                         Ok(full) => {
@@ -281,6 +311,15 @@ pub(crate) fn run_pipelined_on(
                             )
                         }
                     };
+                    if let Some(sw) = sw_step {
+                        let d = sw.stop(trace, "step", &[("rows", chunk.rows as u64)]);
+                        // chunk depths are child depths; the level table is
+                        // keyed by the parent level being expanded
+                        result.level =
+                            chunk.depths.first().map_or(0, |c| c.saturating_sub(1));
+                        result.rows = chunk.rows as u32;
+                        result.eval_us = d.as_micros() as u64;
+                    }
                     let failed = result.error.is_some();
                     if res_tx.send(result).is_err() || failed {
                         break; // main thread stopped early, or backend broke
@@ -294,7 +333,7 @@ pub(crate) fn run_pipelined_on(
 
         let mut next_seq: u64 = 0;
         let mut next_fold: u64 = 0;
-        let mut ready: std::collections::HashMap<u64, (Vec<u64>, Vec<u32>, Vec<u32>)> =
+        let mut ready: std::collections::HashMap<u64, ChunkResult> =
             std::collections::HashMap::new();
         let mut halting_by_seq: std::collections::HashMap<u64, Vec<ConfigVector>> =
             std::collections::HashMap::new();
@@ -306,16 +345,19 @@ pub(crate) fn run_pipelined_on(
         'outer: loop {
             // ---- fold every result available, in canonical seq order ----
             while let Ok(res) = res_rx.try_recv() {
-                if let Some(err) = res.error {
+                if let Some(err) = &res.error {
                     panic!("{err}"); // scope unwinds: channels drop, workers exit
                 }
-                ready.insert(res.seq, (res.counts, res.depths, res.parents));
+                ready.insert(res.seq, res);
             }
-            while let Some((counts, depths, parents)) = ready.remove(&next_fold) {
+            while let Some(res) = ready.remove(&next_fold) {
                 if let Some(h) = halting_by_seq.remove(&next_fold) {
                     halting_configs.extend(h);
                 }
-                for (i, &depth) in depths.iter().enumerate() {
+                let sw_fold =
+                    timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
+                let mut new_in_chunk = 0u64;
+                for (i, &depth) in res.depths.iter().enumerate() {
                     if let Some(maxc) = opts.max_configs {
                         if visited.len() >= maxc {
                             stop = StopReason::MaxConfigs;
@@ -324,12 +366,29 @@ pub(crate) fn run_pipelined_on(
                     }
                     // intern straight from the flat payload: one arena
                     // copy when new, nothing when a late duplicate
-                    let slice = &counts[i * n..(i + 1) * n];
-                    let (id, is_new) = visited.intern_with_parent(slice, Some(parents[i]));
+                    let slice = &res.counts[i * n..(i + 1) * n];
+                    let (id, is_new) = visited.intern_with_parent(slice, Some(res.parents[i]));
                     if is_new {
                         store.insert_slice(slice);
+                        new_in_chunk += 1;
                         depth_reached = depth_reached.max(depth);
                         queue.push_back(PendingP { id, depth });
+                    }
+                }
+                if let Some(sw) = sw_fold {
+                    let d = sw.stop(
+                        trace,
+                        "fold",
+                        &[("rows", res.depths.len() as u64), ("new", new_in_chunk)],
+                    );
+                    let lm = level_slot(&mut stats.levels, res.level);
+                    lm.fold_time += d;
+                    lm.new_configs += new_in_chunk;
+                    // worker-side eval time rode back on the result
+                    lm.step_time += Duration::from_micros(res.eval_us);
+                    lm.steps += res.rows as u64;
+                    if res.rows > 0 {
+                        lm.batches += 1;
                     }
                 }
                 next_fold += 1;
@@ -356,6 +415,10 @@ pub(crate) fn run_pipelined_on(
                     }
                 }
                 // ---- build one round: pop frontier, enumerate rows ----
+                let sw_enum =
+                    timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
+                let psi_before = stats.psi_total;
+                let mut round_depth: Option<u32> = None;
                 let mut round_rows = 0usize;
                 let mut chunk = ChunkBuf::new(use_sparse, r);
                 while round_rows < round_cap {
@@ -370,6 +433,9 @@ pub(crate) fn run_pipelined_on(
                             depth_bounded = true;
                             continue;
                         }
+                    }
+                    if round_depth.is_none() {
+                        round_depth = Some(pending.depth);
                     }
                     visited.read_counts(pending.id, &mut parent_buf);
                     let cfg = parent_buf.as_slice();
@@ -413,15 +479,23 @@ pub(crate) fn run_pipelined_on(
                         &mut stats,
                     );
                 }
+                if let Some(sw) = sw_enum {
+                    let d = sw.stop(trace, "enumerate", &[("rows", round_rows as u64)]);
+                    if let Some(dep) = round_depth {
+                        let lm = level_slot(&mut stats.levels, dep);
+                        lm.expand_time += d;
+                        lm.psi_total += stats.psi_total - psi_before;
+                    }
+                }
                 continue;
             }
             if outstanding > 0 {
                 // nothing buildable: block for the next worker result
                 let res = res_rx.recv().expect("evaluation workers gone");
-                if let Some(err) = res.error {
+                if let Some(err) = &res.error {
                     panic!("{err}");
                 }
-                ready.insert(res.seq, (res.counts, res.depths, res.parents));
+                ready.insert(res.seq, res);
                 continue;
             }
             break; // frontier drained, nothing in flight: exhausted
@@ -439,6 +513,9 @@ pub(crate) fn run_pipelined_on(
         stop = StopReason::ZeroConfig;
     }
     stats.elapsed = start.elapsed();
+    if let (Some(t), Some(rt)) = (trace, root_span) {
+        t.end(rt, "run", &[("steps", stats.steps), ("configs", visited.len() as u64)]);
+    }
     stats.arena_bytes = visited.arena_bytes() as u64;
     if let (Some(c), Some((h0, m0))) = (pool.delta_cache(), cache_base) {
         stats.delta_cache_capacity = c.capacity();
@@ -479,6 +556,9 @@ fn collect_fresh(
                     counts: Vec::new(),
                     depths: Vec::new(),
                     parents: Vec::new(),
+                    level: 0,
+                    rows: 0,
+                    eval_us: 0,
                     error: Some(format!("negative step result: spike count {v}")),
                 };
             }
@@ -491,7 +571,16 @@ fn collect_fresh(
             parents.push(chunk.parents[row]);
         }
     }
-    ChunkResult { seq: chunk.seq, counts, depths, parents, error: None }
+    ChunkResult {
+        seq: chunk.seq,
+        counts,
+        depths,
+        parents,
+        level: 0,
+        rows: 0,
+        eval_us: 0,
+        error: None,
+    }
 }
 
 /// Assign the next seq to a finished chunk and hand it to the workers
@@ -500,7 +589,7 @@ fn dispatch(
     chunk: ChunkBuf,
     next_seq: &mut u64,
     work_tx: &mpsc::Sender<WorkChunk>,
-    ready: &mut std::collections::HashMap<u64, (Vec<u64>, Vec<u32>, Vec<u32>)>,
+    ready: &mut std::collections::HashMap<u64, ChunkResult>,
     halting_by_seq: &mut std::collections::HashMap<u64, Vec<ConfigVector>>,
     stats: &mut ExploreStats,
 ) {
@@ -512,7 +601,19 @@ fn dispatch(
     let rows = chunk.depths.len();
     if rows == 0 {
         // halting-only chunk: nothing to evaluate, fold it directly
-        ready.insert(seq, (Vec::new(), Vec::new(), Vec::new()));
+        ready.insert(
+            seq,
+            ChunkResult {
+                seq,
+                counts: Vec::new(),
+                depths: Vec::new(),
+                parents: Vec::new(),
+                level: 0,
+                rows: 0,
+                eval_us: 0,
+                error: None,
+            },
+        );
         return;
     }
     stats.steps += rows as u64;
@@ -650,6 +751,26 @@ mod tests {
         assert_eq!(off.visited.in_order(), baseline.visited.in_order());
         assert_eq!(off.stats.delta_cache_capacity, 0);
         assert_eq!((off.stats.delta_hits, off.stats.delta_misses), (0, 0));
+    }
+
+    #[test]
+    fn timings_do_not_change_output_and_fill_levels() {
+        let sys = crate::generators::paper_pi();
+        let plain =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(6).workers(4)).run();
+        let timed = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(6).workers(4).timings(true),
+        )
+        .run();
+        assert_eq!(timed.visited.in_order(), plain.visited.in_order());
+        assert_eq!(timed.halting_configs, plain.halting_configs);
+        assert!(plain.stats.levels.is_empty(), "timings off: no level table");
+        assert!(!timed.stats.levels.is_empty());
+        let steps: u64 = timed.stats.levels.iter().map(|l| l.steps).sum();
+        assert_eq!(steps, timed.stats.steps, "every dispatched row lands in a level slot");
+        let new: u64 = timed.stats.levels.iter().map(|l| l.new_configs).sum();
+        assert_eq!(new + 1, timed.visited.len() as u64, "folded children + root");
     }
 
     #[test]

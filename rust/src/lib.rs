@@ -41,6 +41,7 @@
 //! | [`parser`] | the paper's confVec/M/r file format, `.snpl` DSL, JSON |
 //! | [`generators`] | library of SN P systems (paper's Π, counters, rings…) |
 //! | [`output`] | run reports, DOT export, text tables |
+//! | [`obs`] | observability: phase spans, JSONL traces, metrics registry, Prometheus export |
 //! | [`serve`] | exploration-serving daemon: content-addressed report cache, HTTP/1.1 |
 
 pub mod baseline;
@@ -51,6 +52,7 @@ pub mod engine;
 pub mod error;
 pub mod generators;
 pub mod matrix;
+pub mod obs;
 pub mod output;
 pub mod parser;
 pub mod prelude;

@@ -1,0 +1,134 @@
+//! Per-level run metrics: phase timings and aggregate throughput.
+//!
+//! Previously these lived in `coordinator::metrics` and only the
+//! coordinator path filled them; the explorer paths (serial and
+//! pipelined) now populate the same table when `--timings` or `--trace`
+//! is active, so every engine renders the identical per-level phase
+//! view. `coordinator::metrics` re-exports these types — it is a view
+//! over this module.
+
+use std::time::Duration;
+
+/// Metrics for one BFS level.
+#[derive(Debug, Clone, Default)]
+pub struct LevelMetrics {
+    /// Newly discovered configurations.
+    pub new_configs: u64,
+    /// `(C, S)` rows evaluated.
+    pub steps: u64,
+    /// Backend dispatches.
+    pub batches: u64,
+    /// Σ Ψ across expanded configs.
+    pub psi_total: u128,
+    /// Expand/enumerate-phase wall time.
+    pub expand_time: Duration,
+    /// Step-phase wall time.
+    pub step_time: Duration,
+    /// Fold-phase wall time.
+    pub fold_time: Duration,
+}
+
+/// Aggregate metrics for a run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Per-level records (index = depth).
+    pub levels: Vec<LevelMetrics>,
+    /// Total wall time.
+    pub total_elapsed: Duration,
+    /// Backend name.
+    pub backend: String,
+    /// Worker threads used.
+    pub workers: usize,
+}
+
+impl Metrics {
+    /// Record one completed level (levels arrive in depth order).
+    pub fn record_level(&mut self, depth: u32, level: LevelMetrics) {
+        debug_assert_eq!(depth as usize, self.levels.len());
+        self.levels.push(level);
+    }
+
+    /// Build aggregate metrics from an already-collected level table
+    /// (the explorer paths hand their `ExploreStats` levels over).
+    pub fn from_levels(
+        levels: Vec<LevelMetrics>,
+        total_elapsed: Duration,
+        backend: impl Into<String>,
+        workers: usize,
+    ) -> Metrics {
+        Metrics { levels, total_elapsed, backend: backend.into(), workers }
+    }
+
+    /// Total rows evaluated.
+    pub fn total_steps(&self) -> u64 {
+        self.levels.iter().map(|l| l.steps).sum()
+    }
+
+    /// Total backend dispatches.
+    pub fn total_batches(&self) -> u64 {
+        self.levels.iter().map(|l| l.batches).sum()
+    }
+
+    /// Total configurations discovered (excluding the root).
+    pub fn total_new_configs(&self) -> u64 {
+        self.levels.iter().map(|l| l.new_configs).sum()
+    }
+
+    /// Steps per second over the whole run.
+    pub fn steps_per_sec(&self) -> f64 {
+        let secs = self.total_elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.total_steps() as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Render a per-level phase table.
+    pub fn render_table(&self) -> String {
+        let mut t = crate::util::fmt::Table::new(&[
+            "depth", "new", "steps", "batches", "expand", "step", "fold",
+        ]);
+        for (d, l) in self.levels.iter().enumerate() {
+            t.row(&[
+                d.to_string(),
+                l.new_configs.to_string(),
+                l.steps.to_string(),
+                l.batches.to_string(),
+                crate::util::fmt::human_ns(l.expand_time.as_nanos() as f64),
+                crate::util::fmt::human_ns(l.step_time.as_nanos() as f64),
+                crate::util::fmt::human_ns(l.fold_time.as_nanos() as f64),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::default();
+        m.record_level(0, LevelMetrics { new_configs: 2, steps: 2, batches: 1, ..Default::default() });
+        m.record_level(1, LevelMetrics { new_configs: 4, steps: 6, batches: 2, ..Default::default() });
+        assert_eq!(m.total_steps(), 8);
+        assert_eq!(m.total_batches(), 3);
+        assert_eq!(m.total_new_configs(), 6);
+        m.total_elapsed = Duration::from_secs(2);
+        assert!((m.steps_per_sec() - 4.0).abs() < 1e-9);
+        let table = m.render_table();
+        assert!(table.contains("depth"));
+        assert_eq!(table.lines().count(), 4);
+    }
+
+    #[test]
+    fn from_levels_builds_the_same_view() {
+        let lvl = LevelMetrics { new_configs: 3, steps: 5, batches: 1, ..Default::default() };
+        let m = Metrics::from_levels(vec![lvl], Duration::from_secs(1), "host", 4);
+        assert_eq!(m.backend, "host");
+        assert_eq!(m.workers, 4);
+        assert_eq!(m.total_steps(), 5);
+    }
+}

@@ -1,0 +1,38 @@
+//! Unified observability layer: spans, run timelines, metrics.
+//!
+//! The source paper evaluates its simulator through end-to-end wall
+//! clocks; the follow-up sparse work makes clear that the interesting
+//! questions — where time goes per *phase* (enumerate vs. step vs.
+//! fold), how representation choices pay off — need per-phase,
+//! per-level measurement. This module is that layer, shared by the
+//! serial explorer, the pipelined parallel engine, the coordinator and
+//! the serve daemon:
+//!
+//! - [`Trace`] — a lightweight span/event recorder (monotonic
+//!   timestamps, bounded ring buffer) with a stable JSONL export
+//!   (`snapse run … --trace FILE.jsonl`). Span names come from the
+//!   fixed [`PHASE_NAMES`] vocabulary so traces are greppable across
+//!   versions.
+//! - [`Metrics`] / [`LevelMetrics`] — the per-level phase table
+//!   (previously coordinator-only; `coordinator::metrics` now re-exports
+//!   these), rendered by `--timings` / `--levels` on every engine path.
+//! - [`Registry`] — counters, gauges and fixed-bucket duration
+//!   histograms with a Prometheus text exposition renderer
+//!   (`GET /metrics` on the serve daemon).
+//!
+//! **Zero-cost-when-disabled contract:** every instrumentation point in
+//! the engines is a branch on an `Option<Arc<Trace>>`/`bool` — when no
+//! trace is attached and timings are off, the hot paths make no timer
+//! syscalls and allocate nothing. Instrumentation sits at batch/level
+//! granularity, never inside the innermost per-child loops, so reports
+//! and `allGenCk` output are byte-identical with tracing on or off
+//! (asserted by `rust/tests/obs_trace.rs` and the CI `trace-smoke`
+//! diff).
+
+pub mod metrics;
+pub mod registry;
+pub mod trace;
+
+pub use metrics::{LevelMetrics, Metrics};
+pub use registry::{default_latency_buckets, Counter, Gauge, Histogram, Registry};
+pub use trace::{Span, SpanRecord, Stopwatch, Trace, DEFAULT_TRACE_CAPACITY, PHASE_NAMES};

@@ -1,0 +1,294 @@
+//! Unified metrics registry: counters, gauges, fixed-bucket duration
+//! histograms, and the Prometheus text exposition renderer.
+//!
+//! All instruments are lock-free atomics; the registry itself is a
+//! get-or-create name table behind short mutex holds (instrument
+//! handles are `Arc`s, so hot paths touch no map). Names follow
+//! Prometheus conventions and may carry a label set inline
+//! (`snapse_cache_events_total{outcome="hit"}`); the renderer groups
+//! samples by base name so each family gets exactly one `# TYPE` line.
+//! `BTreeMap` storage makes the exposition byte-deterministic.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (f64, stored as bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram with Prometheus semantics: bucket `le` bounds
+/// are **inclusive** upper edges, rendered cumulatively with a final
+/// `+Inf` bucket equal to the total count.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Ascending, finite upper bounds; `+Inf` is implicit.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `bounds.len() + 1` entries,
+    /// the last being the `+Inf` overflow bucket.
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be ascending and finite"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Record a duration in seconds.
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// `(upper_bound, cumulative_count)` pairs, excluding `+Inf` (whose
+    /// cumulative count is [`Histogram::count`]).
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut cum = 0u64;
+        self.bounds
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                cum += self.counts[i].load(Ordering::Relaxed);
+                (*b, cum)
+            })
+            .collect()
+    }
+}
+
+/// Default request-latency bucket edges (seconds): 1 ms … 10 s.
+pub fn default_latency_buckets() -> &'static [f64] {
+    &[0.001, 0.005, 0.025, 0.1, 0.25, 1.0, 2.5, 10.0]
+}
+
+/// Get-or-create instrument registry with a Prometheus text renderer.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+/// Base metric-family name: everything before the optional `{labels}`.
+fn base_name(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Counter handle for `name` (created on first use). `name` may
+    /// include an inline label set: `family{key="value"}`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.counters.lock().expect("registry poisoned");
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    /// Gauge handle for `name` (created on first use).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.gauges.lock().expect("registry poisoned");
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    /// Histogram handle for `name` (created on first use with `bounds`;
+    /// later calls reuse the first bounds). Histogram names must be
+    /// label-free — the renderer owns their `le` label.
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        debug_assert!(!name.contains('{'), "histogram names must not carry labels");
+        let mut g = self.histograms.lock().expect("registry poisoned");
+        Arc::clone(g.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new(bounds))))
+    }
+
+    /// Render every registered instrument in Prometheus text exposition
+    /// format (one `# TYPE` line per family, samples sorted by name).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        {
+            let g = self.counters.lock().expect("registry poisoned");
+            let mut last_family = "";
+            for (name, c) in g.iter() {
+                let fam = base_name(name);
+                if fam != last_family {
+                    let _ = writeln!(out, "# TYPE {fam} counter");
+                }
+                let _ = writeln!(out, "{name} {}", c.get());
+                last_family = base_name(name);
+            }
+        }
+        {
+            let g = self.gauges.lock().expect("registry poisoned");
+            let mut last_family = "";
+            for (name, v) in g.iter() {
+                let fam = base_name(name);
+                if fam != last_family {
+                    let _ = writeln!(out, "# TYPE {fam} gauge");
+                }
+                let _ = writeln!(out, "{name} {}", v.get());
+                last_family = base_name(name);
+            }
+        }
+        {
+            let g = self.histograms.lock().expect("registry poisoned");
+            for (name, h) in g.iter() {
+                let _ = writeln!(out, "# TYPE {name} histogram");
+                for (bound, cum) in h.cumulative_buckets() {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+                }
+                let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+                let _ = writeln!(out, "{name}_sum {}", h.sum());
+                let _ = writeln!(out, "{name}_count {}", h.count());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_shared_and_monotone() {
+        let r = Registry::new();
+        let a = r.counter("snapse_requests_total");
+        let b = r.counter("snapse_requests_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(r.counter("snapse_requests_total").get(), 3);
+    }
+
+    #[test]
+    fn gauge_roundtrips_f64() {
+        let r = Registry::new();
+        r.gauge("snapse_pool_size").set(2.5);
+        assert_eq!(r.gauge("snapse_pool_size").get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_inclusive() {
+        let h = Histogram::new(&[1.0, 2.0, 5.0]);
+        h.observe(1.0); // exactly on an edge → that bucket (le is inclusive)
+        h.observe(1.5);
+        h.observe(2.0);
+        h.observe(7.0); // overflow → +Inf only
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 11.5).abs() < 1e-12);
+        assert_eq!(h.cumulative_buckets(), vec![(1.0, 1), (2.0, 3), (5.0, 3)]);
+    }
+
+    #[test]
+    fn histogram_below_first_edge_lands_in_first_bucket() {
+        let h = Histogram::new(&[0.001, 0.1]);
+        h.observe(0.0);
+        h.observe(0.0005);
+        assert_eq!(h.cumulative_buckets(), vec![(0.001, 2), (0.1, 2)]);
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        let r = Registry::new();
+        r.counter("snapse_cache_events_total{outcome=\"hit\"}").add(3);
+        r.counter("snapse_cache_events_total{outcome=\"miss\"}").inc();
+        r.gauge("snapse_uptime_seconds").set(1.0);
+        let h = r.histogram("snapse_request_seconds", &[0.5, 1.0]);
+        h.observe(0.25);
+        h.observe(2.0);
+        let text = r.render_prometheus();
+        // one TYPE line per family, even with two labeled samples
+        assert_eq!(text.matches("# TYPE snapse_cache_events_total counter").count(), 1);
+        assert!(text.contains("snapse_cache_events_total{outcome=\"hit\"} 3\n"));
+        assert!(text.contains("snapse_cache_events_total{outcome=\"miss\"} 1\n"));
+        assert!(text.contains("# TYPE snapse_uptime_seconds gauge\n"));
+        assert!(text.contains("# TYPE snapse_request_seconds histogram\n"));
+        assert!(text.contains("snapse_request_seconds_bucket{le=\"0.5\"} 1\n"));
+        assert!(text.contains("snapse_request_seconds_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("snapse_request_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("snapse_request_seconds_sum 2.25\n"));
+        assert!(text.contains("snapse_request_seconds_count 2\n"));
+        // every non-comment line is `name value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad sample line: {line}");
+            assert!(parts.next().is_some());
+        }
+    }
+
+    #[test]
+    fn default_latency_buckets_ascend() {
+        let b = default_latency_buckets();
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+    }
+}

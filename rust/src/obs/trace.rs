@@ -1,0 +1,411 @@
+//! Span/event recorder: monotonic timestamps, a bounded ring buffer,
+//! and a stable JSONL export.
+//!
+//! A [`Trace`] is shared (`Arc`) by every thread of a run — the serial
+//! explorer, pipelined workers, coordinator level driver, pooled
+//! backends and the serve router all record into the same ring. Records
+//! are kept in memory (bounded; oldest evicted first) and exported once
+//! at the end of the run, so recording is one short mutex hold per
+//! *batch or level* — never per child configuration.
+//!
+//! ## JSONL schema (stable, documented in the README)
+//!
+//! One JSON object per line, keys sorted:
+//!
+//! ```text
+//! {"dur_us":456,"fields":{"rows":128},"id":5,"name":"step","parent":1,"start_us":123,"type":"span"}
+//! {"dur_us":0,"fields":{"hits":60,"misses":4,"rows":64},"id":9,"parent":5,"start_us":200,"type":"event"}
+//! {"capacity":65536,"dropped":0,"records":42,"type":"meta"}
+//! ```
+//!
+//! - `type` — `"span"` (has a duration), `"event"` (instantaneous) or
+//!   the single trailing `"meta"` summary line.
+//! - `name` — one of the fixed [`PHASE_NAMES`].
+//! - `id` / `parent` — span ids; `parent` 0 means root. Ids are unique
+//!   within a trace and a child's `[start_us, start_us+dur_us]` window
+//!   lies within its parent's.
+//! - `start_us` — microseconds since the trace epoch (monotonic clock).
+//! - `fields` — numeric payload (row counts, cache hits…); may be empty.
+//! - `detail` — optional free-form annotation (e.g. request path and
+//!   cache outcome on serve `request` spans); omitted when empty.
+
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::JsonValue;
+
+/// Default ring-buffer bound (records retained per trace).
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// The fixed span/event vocabulary. The JSONL golden test pins every
+/// emitted `name` to this set — extend it here (and in the README)
+/// before adding a new instrumentation point.
+pub const PHASE_NAMES: &[&str] = &[
+    // spans
+    "run", "level", "enumerate", "step", "fold", "expand", "wait", "request",
+    // events
+    "delta_cache", "checkout",
+];
+
+/// An open span: an id and a start timestamp. `Copy`, so it crosses
+/// channel/thread boundaries freely; nothing is recorded until
+/// [`Trace::end`].
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    id: u64,
+    parent: u64,
+    start: Instant,
+}
+
+impl Span {
+    /// Timer-only span (id 0) for the trace-disabled arm of
+    /// [`Stopwatch`]; never recorded.
+    fn detached() -> Span {
+        Span { id: 0, parent: 0, start: Instant::now() }
+    }
+
+    /// The span id (0 for a detached timer-only span).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// One recorded span or event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Unique id within the trace (allocation order).
+    pub id: u64,
+    /// Enclosing span id; 0 = root.
+    pub parent: u64,
+    /// Phase name from [`PHASE_NAMES`].
+    pub name: &'static str,
+    /// Microseconds since the trace epoch.
+    pub start_us: u64,
+    /// Duration in microseconds (0 for events).
+    pub dur_us: u64,
+    /// `"span"` or `"event"`.
+    pub kind: &'static str,
+    /// Numeric payload.
+    pub fields: Vec<(&'static str, u64)>,
+    /// Free-form annotation; empty = omitted from the JSONL line.
+    pub detail: String,
+}
+
+/// Shared span/event recorder with a bounded ring buffer.
+pub struct Trace {
+    epoch: Instant,
+    capacity: usize,
+    next_id: AtomicU64,
+    dropped: AtomicU64,
+    records: Mutex<VecDeque<SpanRecord>>,
+}
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trace")
+            .field("records", &self.len())
+            .field("capacity", &self.capacity)
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::new()
+    }
+}
+
+impl Trace {
+    /// A trace with the default ring capacity.
+    pub fn new() -> Trace {
+        Trace::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// A trace retaining at most `capacity` records (oldest evicted
+    /// first; evictions are counted, not silent).
+    pub fn with_capacity(capacity: usize) -> Trace {
+        Trace {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            next_id: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            records: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Open a span. Allocates an id and stamps the clock; records
+    /// nothing until [`Trace::end`].
+    pub fn begin(&self, parent: Option<Span>) -> Span {
+        Span {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed) + 1,
+            parent: parent.map_or(0, |p| p.id),
+            start: Instant::now(),
+        }
+    }
+
+    /// Close a span, recording it under `name` with a numeric payload.
+    /// Returns the measured duration.
+    pub fn end(&self, span: Span, name: &'static str, fields: &[(&'static str, u64)]) -> Duration {
+        let dur = span.start.elapsed();
+        self.end_with(span, name, dur, fields, String::new());
+        dur
+    }
+
+    /// Close a span with a free-form `detail` annotation (serve request
+    /// spans: path + cache outcome).
+    pub fn end_detailed(
+        &self,
+        span: Span,
+        name: &'static str,
+        fields: &[(&'static str, u64)],
+        detail: impl Into<String>,
+    ) -> Duration {
+        let dur = span.start.elapsed();
+        self.end_with(span, name, dur, fields, detail.into());
+        dur
+    }
+
+    pub(crate) fn end_with(
+        &self,
+        span: Span,
+        name: &'static str,
+        dur: Duration,
+        fields: &[(&'static str, u64)],
+        detail: String,
+    ) {
+        if span.id == 0 {
+            return; // detached timer-only span
+        }
+        self.push(SpanRecord {
+            id: span.id,
+            parent: span.parent,
+            name,
+            start_us: span.start.duration_since(self.epoch).as_micros() as u64,
+            dur_us: dur.as_micros() as u64,
+            kind: "span",
+            fields: fields.to_vec(),
+            detail,
+        });
+    }
+
+    /// Record an instantaneous event under `name`.
+    pub fn event(&self, parent: Option<Span>, name: &'static str, fields: &[(&'static str, u64)]) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        self.push(SpanRecord {
+            id,
+            parent: parent.map_or(0, |p| p.id),
+            name,
+            start_us: self.epoch.elapsed().as_micros() as u64,
+            dur_us: 0,
+            kind: "event",
+            fields: fields.to_vec(),
+            detail: String::new(),
+        });
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        let mut g = self.records.lock().expect("trace ring poisoned");
+        if g.len() >= self.capacity {
+            g.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        g.push_back(rec);
+    }
+
+    /// Snapshot of the retained records (oldest first).
+    pub fn records(&self) -> Vec<SpanRecord> {
+        self.records.lock().expect("trace ring poisoned").iter().cloned().collect()
+    }
+
+    /// Records currently retained.
+    pub fn len(&self) -> usize {
+        self.records.lock().expect("trace ring poisoned").len()
+    }
+
+    /// No records retained?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records evicted by the ring bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The ring bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Export the retained records as JSONL (one object per line, keys
+    /// sorted, trailing `meta` summary line). The schema is documented
+    /// at module level and pinned by `rust/tests/obs_trace.rs`.
+    pub fn write_jsonl<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        let records = self.records();
+        for rec in &records {
+            writeln!(w, "{}", record_json(rec).to_string_compact())?;
+        }
+        let meta = JsonValue::obj([
+            ("type", JsonValue::str("meta")),
+            ("records", JsonValue::num(records.len() as f64)),
+            ("capacity", JsonValue::num(self.capacity as f64)),
+            ("dropped", JsonValue::num(self.dropped() as f64)),
+        ]);
+        writeln!(w, "{}", meta.to_string_compact())
+    }
+}
+
+fn record_json(rec: &SpanRecord) -> JsonValue {
+    let fields = JsonValue::Obj(
+        rec.fields.iter().map(|(k, v)| (k.to_string(), JsonValue::num(*v as f64))).collect(),
+    );
+    let mut pairs = vec![
+        ("type", JsonValue::str(rec.kind)),
+        ("name", JsonValue::str(rec.name)),
+        ("id", JsonValue::num(rec.id as f64)),
+        ("parent", JsonValue::num(rec.parent as f64)),
+        ("start_us", JsonValue::num(rec.start_us as f64)),
+        ("dur_us", JsonValue::num(rec.dur_us as f64)),
+        ("fields", fields),
+    ];
+    if !rec.detail.is_empty() {
+        pairs.push(("detail", JsonValue::str(rec.detail.clone())));
+    }
+    JsonValue::obj(pairs)
+}
+
+/// A phase timer that is a plain `Instant` pair when tracing is off and
+/// additionally records a span when a [`Trace`] is attached. Used where
+/// a caller needs the `Duration` either way (the coordinator's
+/// [`LevelMetrics`](crate::obs::LevelMetrics) table, the explorer's
+/// `--timings` table).
+///
+/// Callers on zero-cost paths gate *construction* — when neither
+/// timings nor tracing are requested, no `Stopwatch` (and no timer
+/// syscall) exists at all.
+#[must_use]
+pub struct Stopwatch {
+    span: Span,
+}
+
+impl Stopwatch {
+    /// Start timing; allocates a span id only when `trace` is present.
+    pub fn start(trace: Option<&Trace>, parent: Option<Span>) -> Stopwatch {
+        Stopwatch {
+            span: match trace {
+                Some(t) => t.begin(parent),
+                None => Span::detached(),
+            },
+        }
+    }
+
+    /// Stop: record into `trace` (when attached at start) and return the
+    /// elapsed time.
+    pub fn stop(
+        self,
+        trace: Option<&Trace>,
+        name: &'static str,
+        fields: &[(&'static str, u64)],
+    ) -> Duration {
+        let dur = self.span.start.elapsed();
+        if let Some(t) = trace {
+            t.end_with(self.span, name, dur, fields, String::new());
+        }
+        dur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_with_parent_links() {
+        let t = Trace::new();
+        let root = t.begin(None);
+        let child = t.begin(Some(root));
+        t.end(child, "step", &[("rows", 4)]);
+        t.end(root, "run", &[]);
+        let recs = t.records();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].name, "step");
+        assert_eq!(recs[0].parent, root.id());
+        assert_eq!(recs[0].fields, vec![("rows", 4)]);
+        assert_eq!(recs[1].name, "run");
+        assert_eq!(recs[1].parent, 0);
+        assert!(recs[1].dur_us >= recs[0].dur_us, "parent contains child");
+    }
+
+    #[test]
+    fn events_are_instantaneous() {
+        let t = Trace::new();
+        let root = t.begin(None);
+        t.event(Some(root), "delta_cache", &[("hits", 3), ("misses", 1)]);
+        let recs = t.records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].kind, "event");
+        assert_eq!(recs[0].dur_us, 0);
+        assert_eq!(recs[0].parent, root.id());
+    }
+
+    #[test]
+    fn ring_bound_evicts_oldest_and_counts() {
+        let t = Trace::with_capacity(3);
+        for _ in 0..5 {
+            t.event(None, "checkout", &[]);
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        // oldest evicted: ids 1,2 gone, 3..=5 retained
+        let ids: Vec<u64> = t.records().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_end_with_meta() {
+        let t = Trace::new();
+        let root = t.begin(None);
+        t.event(Some(root), "delta_cache", &[("rows", 2)]);
+        t.end_detailed(root, "request", &[("status", 200)], "POST /v1/run hit");
+        let mut buf = Vec::new();
+        t.write_jsonl(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            JsonValue::parse(line).unwrap();
+        }
+        let span = JsonValue::parse(lines[1]).unwrap();
+        assert_eq!(span.get("type").unwrap().as_str(), Some("span"));
+        assert_eq!(span.get("detail").unwrap().as_str(), Some("POST /v1/run hit"));
+        let meta = JsonValue::parse(lines[2]).unwrap();
+        assert_eq!(meta.get("type").unwrap().as_str(), Some("meta"));
+        assert_eq!(meta.get("records").unwrap().as_u64(), Some(2));
+        assert_eq!(meta.get("dropped").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn stopwatch_without_trace_records_nothing() {
+        let t = Trace::new();
+        let sw = Stopwatch::start(None, None);
+        let dur = sw.stop(None, "step", &[]);
+        assert!(dur.as_nanos() > 0 || dur.is_zero()); // a real Duration either way
+        assert_eq!(t.len(), 0);
+        // with a trace: exactly one record
+        let sw = Stopwatch::start(Some(&t), None);
+        sw.stop(Some(&t), "step", &[("rows", 1)]);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.records()[0].name, "step");
+    }
+
+    #[test]
+    fn phase_vocabulary_is_closed() {
+        for name in ["run", "level", "enumerate", "step", "fold", "expand", "wait", "request", "delta_cache", "checkout"] {
+            assert!(PHASE_NAMES.contains(&name));
+        }
+    }
+}

@@ -224,6 +224,29 @@ impl ReportCache {
         outcome.map(|v| (v, CacheOutcome::Miss))
     }
 
+    /// Append the cache counters to a Prometheus text exposition. These
+    /// family names appear nowhere else, so `# TYPE` lines are emitted
+    /// here (the `/metrics` handler concatenates sections).
+    pub fn write_prometheus(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let read = |c: &AtomicU64| c.load(Ordering::Relaxed) as f64;
+        let mut sample = |name: &str, kind: &str, v: f64| {
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        sample("snapse_report_cache_hits_total", "counter", read(&self.stats.hits));
+        sample("snapse_report_cache_misses_total", "counter", read(&self.stats.misses));
+        sample("snapse_report_cache_coalesced_total", "counter", read(&self.stats.coalesced));
+        sample("snapse_report_cache_evictions_total", "counter", read(&self.stats.evictions));
+        sample(
+            "snapse_report_cache_computations_total",
+            "counter",
+            read(&self.stats.computations),
+        );
+        sample("snapse_report_cache_entries", "gauge", self.len() as f64);
+        sample("snapse_report_cache_capacity", "gauge", self.capacity as f64);
+    }
+
     /// Snapshot the counters plus the current entry count, as JSON (the
     /// `/v1/stats` payload).
     pub fn stats_json(&self) -> crate::util::JsonValue {
@@ -316,6 +339,30 @@ mod tests {
         // the flight was resolved and removed: next call computes fresh
         let (_, o) = cache.get_or_compute(&k, || Ok("ok".into())).unwrap();
         assert_eq!(o, CacheOutcome::Miss);
+    }
+
+    #[test]
+    fn prometheus_export_covers_every_counter() {
+        let cache = ReportCache::new(4);
+        cache.get_or_compute(&key("a", None), || Ok("A".into())).unwrap();
+        cache.get_or_compute(&key("a", None), || unreachable!()).unwrap();
+        let mut out = String::new();
+        cache.write_prometheus(&mut out);
+        for family in [
+            "snapse_report_cache_hits_total",
+            "snapse_report_cache_misses_total",
+            "snapse_report_cache_coalesced_total",
+            "snapse_report_cache_evictions_total",
+            "snapse_report_cache_computations_total",
+            "snapse_report_cache_entries",
+            "snapse_report_cache_capacity",
+        ] {
+            assert!(out.contains(&format!("# TYPE {family} ")), "{family} typed");
+        }
+        assert!(out.contains("snapse_report_cache_hits_total 1\n"));
+        assert!(out.contains("snapse_report_cache_misses_total 1\n"));
+        assert!(out.contains("snapse_report_cache_entries 1\n"));
+        assert!(out.contains("snapse_report_cache_capacity 4\n"));
     }
 
     #[test]

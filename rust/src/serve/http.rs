@@ -185,14 +185,21 @@ pub fn percent_decode(s: &str) -> Result<String> {
 }
 
 /// Write a response (always `Connection: close`; the daemon's exchanges
-/// are one request per connection).
+/// are one request per connection). The default `application/json`
+/// content-type is suppressed when the response carries its own (the
+/// `/metrics` endpoint speaks Prometheus text exposition).
 pub fn write_response(stream: &mut impl Write, resp: &Response) -> std::io::Result<()> {
+    let custom_content_type =
+        resp.headers.iter().any(|(n, _)| n.eq_ignore_ascii_case("content-type"));
     let mut out = format!(
-        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n",
+        "HTTP/1.1 {} {}\r\ncontent-length: {}\r\nconnection: close\r\n",
         resp.status,
         reason(resp.status),
         resp.body.len()
     );
+    if !custom_content_type {
+        out.push_str("content-type: application/json\r\n");
+    }
     for (name, value) in &resp.headers {
         out.push_str(name);
         out.push_str(": ");
@@ -281,6 +288,17 @@ mod tests {
         assert!(text.contains("content-length: 11\r\n"));
         assert!(text.contains("x-snapse-cache: hit\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn custom_content_type_replaces_the_json_default() {
+        let resp = Response::json(200, "x 1\n")
+            .with_header("content-type", "text/plain; version=0.0.4");
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("content-type: text/plain; version=0.0.4\r\n"));
+        assert!(!text.contains("application/json"), "default suppressed");
     }
 
     #[test]

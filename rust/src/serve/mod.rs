@@ -18,7 +18,8 @@
 //! Protocol (JSON bodies; see [`router`] for the full parameter set):
 //!
 //! ```text
-//! GET  /healthz                      liveness + uptime
+//! GET  /healthz                      liveness + uptime (+ degraded reasons)
+//! GET  /metrics                      Prometheus text exposition
 //! GET  /v1/stats                     cache/pool/request counters
 //! POST /v1/run        {"system","format"?,"depth"?,"configs"?,"mode"?}
 //! POST /v1/generated  {"system","format"?,"max"?}

@@ -62,6 +62,13 @@ pub struct ServeState {
     /// (cache hits reuse stored bytes and record nothing). Bounded by
     /// the report cache's capacity.
     gauges: Mutex<HashMap<String, J>>,
+    /// Request-latency histogram and per-status response counters,
+    /// rendered by `GET /metrics`.
+    pub registry: crate::obs::Registry,
+    /// Bounded span ring holding one `request` span per routed request.
+    /// Never attached to exploration runs (run traces stay run-private),
+    /// so cached report bytes are untouched by its presence.
+    pub trace: Arc<crate::obs::Trace>,
 }
 
 impl ServeState {
@@ -77,6 +84,8 @@ impl ServeState {
             pools: Mutex::new(HashMap::new()),
             pool_tick: AtomicU64::new(0),
             gauges: Mutex::new(HashMap::new()),
+            registry: crate::obs::Registry::new(),
+            trace: Arc::new(crate::obs::Trace::new()),
         }
     }
 
@@ -128,6 +137,16 @@ impl ServeState {
         self.pools.lock().unwrap().len()
     }
 
+    /// Hash-sorted snapshot of the live pools (for `/metrics` and the
+    /// health probe — both iterate outside the lock).
+    fn pool_snapshot(&self) -> Vec<(String, Arc<BackendPool>)> {
+        let pools = self.pools.lock().unwrap();
+        let mut v: Vec<_> =
+            pools.iter().map(|(k, (p, _))| (k.clone(), Arc::clone(p))).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
     /// Record the memory/cache gauge of a computed run, keyed by system
     /// hash. Bounded like the pools map: at capacity an arbitrary entry
     /// makes room (gauges are diagnostics, not results).
@@ -166,28 +185,55 @@ impl ServeState {
 }
 
 /// Dispatch one request. Never panics on client input; every error
-/// becomes a structured JSON response.
+/// becomes a structured JSON response. Every request is measured: a
+/// `request` span in the daemon trace ring (detail `METHOD path
+/// outcome`) and an observation in the `snapse_request_seconds`
+/// histogram plus a per-status response counter.
 pub fn route(state: &ServeState, req: &Request) -> Response {
     state.requests.fetch_add(1, Ordering::Relaxed);
+    let span = state.trace.begin(None);
     let result = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Ok(health(state)),
+        ("GET", "/metrics") => Ok(metrics(state)),
         ("GET", "/v1/stats") => Ok(stats(state)),
         ("POST", "/v1/run") => run_query(state, &req.body),
         ("POST", "/v1/generated") => generated_query(state, &req.body),
         ("POST", "/v1/analyze") => analyze_query(state, &req.body),
         ("POST", "/v1/info") => info_query(state, &req.body),
         ("POST", "/v1/shutdown") => Ok(shutdown(state)),
-        (_, "/healthz" | "/v1/stats" | "/v1/run" | "/v1/generated" | "/v1/analyze"
-        | "/v1/info" | "/v1/shutdown") => Err(Error::Unsupported(format!(
+        (_, "/healthz" | "/metrics" | "/v1/stats" | "/v1/run" | "/v1/generated"
+        | "/v1/analyze" | "/v1/info" | "/v1/shutdown") => Err(Error::Unsupported(format!(
             "method {} not allowed on {}",
             req.method, req.path
         ))),
         _ => Ok(not_found(&req.path)),
     };
-    match result {
+    let resp = match result {
         Ok(resp) => resp,
         Err(e) => error_response(&e),
-    }
+    };
+    // cache outcome rides on the envelope header; "-" for endpoints
+    // that never touch the report cache
+    let outcome = resp
+        .headers
+        .iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case("x-snapse-cache"))
+        .map_or("-", |(_, v)| v.as_str());
+    let dur = state.trace.end_detailed(
+        span,
+        "request",
+        &[("status", resp.status as u64)],
+        format!("{} {} {}", req.method, req.path, outcome),
+    );
+    state
+        .registry
+        .histogram("snapse_request_seconds", crate::obs::default_latency_buckets())
+        .observe_duration(dur);
+    state
+        .registry
+        .counter(&format!("snapse_responses_total{{status=\"{}\"}}", resp.status))
+        .inc();
+    resp
 }
 
 fn not_found(path: &str) -> Response {
@@ -464,16 +510,69 @@ fn info_query(state: &ServeState, raw: &str) -> Result<Response> {
 }
 
 fn health(state: &ServeState) -> Response {
-    let doc = J::obj([
-        ("status", J::str("ok")),
+    // degraded is still HTTP 200 with `"status":"degraded"` + reasons:
+    // the daemon is alive and answering, so liveness probes keep
+    // passing while dashboards surface the pressure
+    let mut reasons: Vec<J> = Vec::new();
+    for (hash, pool) in state.pool_snapshot() {
+        if pool.available() == 0 {
+            reasons.push(J::str(format!("pool {hash} exhausted ({} backends)", pool.size())));
+        }
+    }
+    if state.cache.len() >= state.cache.capacity() {
+        reasons.push(J::str(format!(
+            "report cache at capacity ({} entries)",
+            state.cache.capacity()
+        )));
+    }
+    let mut fields = vec![
+        ("status", J::str(if reasons.is_empty() { "ok" } else { "degraded" })),
         ("uptime_s", J::num(state.started.elapsed().as_secs() as f64)),
-    ]);
-    Response::json(200, doc.to_string_compact())
+    ];
+    if !reasons.is_empty() {
+        fields.push(("reasons", J::Arr(reasons)));
+    }
+    Response::json(200, J::obj(fields).to_string_compact())
+}
+
+/// `GET /metrics` — Prometheus text exposition. Registry instruments
+/// (request histogram, response counters) first, then the report-cache
+/// counters, then per-system delta-cache families labelled by system
+/// hash, then standalone daemon gauges.
+fn metrics(state: &ServeState) -> Response {
+    use std::fmt::Write as _;
+    let mut out = state.registry.render_prometheus();
+    state.cache.write_prometheus(&mut out);
+    // one `# TYPE` block per delta-cache family, one labelled sample per
+    // live system pool (hash-sorted, so scrapes are deterministic)
+    let samples: Vec<(String, [(&'static str, &'static str, f64); 5])> = state
+        .pool_snapshot()
+        .into_iter()
+        .filter_map(|(hash, pool)| {
+            pool.delta_cache().map(|c| (hash, c.stats().prometheus_samples()))
+        })
+        .collect();
+    if let Some((_, first)) = samples.first() {
+        for (i, &(family, kind, _)) in first.iter().enumerate() {
+            let _ = writeln!(out, "# TYPE {family} {kind}");
+            for (hash, s) in &samples {
+                let _ = writeln!(out, "{family}{{system=\"{hash}\"}} {}", s[i].2);
+            }
+        }
+    }
+    let _ = writeln!(out, "# TYPE snapse_requests_total counter");
+    let _ = writeln!(out, "snapse_requests_total {}", state.requests.load(Ordering::Relaxed));
+    let _ = writeln!(out, "# TYPE snapse_pools gauge");
+    let _ = writeln!(out, "snapse_pools {}", state.pool_count());
+    let _ = writeln!(out, "# TYPE snapse_uptime_seconds gauge");
+    let _ = writeln!(out, "snapse_uptime_seconds {}", state.started.elapsed().as_secs());
+    Response::json(200, out).with_header("content-type", "text/plain; version=0.0.4")
 }
 
 fn stats(state: &ServeState) -> Response {
     let doc = J::obj([
         ("status", J::str("ok")),
+        ("version", J::str(env!("CARGO_PKG_VERSION"))),
         ("uptime_s", J::num(state.started.elapsed().as_secs() as f64)),
         ("requests", J::num(state.requests.load(Ordering::Relaxed) as f64)),
         (
@@ -647,6 +746,94 @@ mod tests {
             b[b.find("\"systems\"").unwrap()..b.find("\"uptime_s\"").unwrap()].to_string()
         };
         assert_eq!(gauge(&before), gauge(&after));
+    }
+
+    #[test]
+    fn metrics_exports_wellformed_prometheus_text() {
+        let state = ServeState::new(1, 8);
+        route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":4}"#));
+        route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":4}"#));
+        let r = route(&state, &get("/metrics"));
+        assert_eq!(r.status, 200);
+        assert!(
+            r.headers
+                .iter()
+                .any(|(n, v)| n == "content-type" && v.starts_with("text/plain")),
+            "exposition format needs a text/plain content-type"
+        );
+        // well-formed text exposition: every line is a `# TYPE` comment
+        // or a `name[{labels}] value` sample with a numeric value
+        for line in r.body.lines() {
+            if line.starts_with('#') {
+                assert!(line.starts_with("# TYPE "), "{line}");
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect(line);
+            assert!(!name.is_empty(), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "non-numeric sample: {line}");
+        }
+        for family in [
+            "snapse_request_seconds_bucket",
+            "snapse_request_seconds_count",
+            "snapse_responses_total",
+            "snapse_report_cache_hits_total",
+            "snapse_report_cache_entries",
+            "snapse_delta_cache_hits_total",
+            "snapse_requests_total",
+            "snapse_pools",
+            "snapse_uptime_seconds",
+        ] {
+            assert!(r.body.contains(family), "missing {family}:\n{}", r.body);
+        }
+        // per-system families carry the system-hash label
+        assert!(r.body.contains("snapse_delta_cache_entries{system=\""), "{}", r.body);
+    }
+
+    #[test]
+    fn metrics_counters_are_monotone_and_requests_are_traced() {
+        let state = ServeState::new(1, 8);
+        let count = |body: &str| {
+            body.lines()
+                .find(|l| l.starts_with("snapse_request_seconds_count"))
+                .and_then(|l| l.rsplit_once(' '))
+                .map(|(_, v)| v.parse::<u64>().unwrap())
+                .expect("histogram count sample present")
+        };
+        // the handler renders before observing its own latency, so the
+        // first scrape reads 0 and each rescrape reads one more
+        let r1 = route(&state, &get("/metrics"));
+        let r2 = route(&state, &get("/metrics"));
+        assert!(count(&r2.body) > count(&r1.body), "{} vs {}", r1.body, r2.body);
+        let recs = state.trace.records();
+        assert!(recs.iter().filter(|r| r.name == "request").count() >= 2);
+        assert!(recs.iter().any(|r| r.detail.contains("GET /metrics")), "{recs:?}");
+    }
+
+    #[test]
+    fn health_degrades_when_the_report_cache_fills() {
+        let state = ServeState::new(1, 1);
+        let r = route(&state, &get("/healthz"));
+        assert!(r.body.contains("\"status\":\"ok\""), "{}", r.body);
+        route(&state, &post("/v1/info", r#"{"system":"paper_pi"}"#));
+        let r = route(&state, &get("/healthz"));
+        assert_eq!(r.status, 200, "degraded is not an HTTP failure");
+        assert!(r.body.contains("\"status\":\"degraded\""), "{}", r.body);
+        assert!(r.body.contains("report cache at capacity"), "{}", r.body);
+    }
+
+    #[test]
+    fn health_degrades_while_a_pool_is_exhausted() {
+        let state = ServeState::new(1, 8);
+        route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":3}"#));
+        let pools = state.pool_snapshot();
+        assert_eq!(pools.len(), 1);
+        let held = pools[0].1.acquire(); // the pool's only backend
+        let r = route(&state, &get("/healthz"));
+        assert!(r.body.contains("\"status\":\"degraded\""), "{}", r.body);
+        assert!(r.body.contains("exhausted"), "{}", r.body);
+        drop(held);
+        let r = route(&state, &get("/healthz"));
+        assert!(r.body.contains("\"status\":\"ok\""), "{}", r.body);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Integration tests for the observability layer (`snapse::obs`).
+//!
+//! Two contracts are pinned here:
+//! - the JSONL trace export follows its documented schema — every line
+//!   is valid JSON, phase names come from the fixed vocabulary, spans
+//!   nest, and the trailing `meta` line summarizes the ring;
+//! - tracing and timings change **no report byte** — the paper log and
+//!   the JSON report are identical with and without them, on the serial
+//!   and the pipelined engine alike.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use snapse::engine::{ExploreOptions, Explorer};
+use snapse::obs::{Trace, PHASE_NAMES};
+use snapse::util::JsonValue as J;
+
+fn trace_text(trace: &Trace) -> String {
+    let mut buf = Vec::new();
+    trace.write_jsonl(&mut buf).expect("in-memory write cannot fail");
+    String::from_utf8(buf).expect("JSONL is UTF-8")
+}
+
+#[test]
+fn trace_jsonl_is_wellformed_and_uses_the_pinned_vocabulary() {
+    let sys = snapse::generators::paper_pi();
+    let trace = Arc::new(Trace::new());
+    let _report = Explorer::new(
+        &sys,
+        ExploreOptions::breadth_first().max_depth(8).trace(Arc::clone(&trace)),
+    )
+    .run();
+
+    let text = trace_text(&trace);
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 3, "expected spans + meta, got:\n{text}");
+
+    // every line is valid JSON with the documented keys; the last line
+    // is the meta summary
+    let mut records: HashMap<u64, (u64, u64, u64)> = HashMap::new(); // id → (parent, start, end)
+    for (i, line) in lines.iter().enumerate() {
+        let v = J::parse(line).unwrap_or_else(|e| panic!("line {i} `{line}`: {e}"));
+        let ty = v.get("type").and_then(|t| t.as_str()).expect("every line has `type`");
+        if i == lines.len() - 1 {
+            assert_eq!(ty, "meta", "last line is the meta summary: {line}");
+            assert_eq!(
+                v.get("records").and_then(|r| r.as_usize()),
+                Some(lines.len() - 1),
+                "meta record count matches the body"
+            );
+            assert_eq!(v.get("dropped").and_then(|d| d.as_u64()), Some(0));
+            continue;
+        }
+        assert!(ty == "span" || ty == "event", "{line}");
+        let name = v.get("name").and_then(|n| n.as_str()).expect("every record has `name`");
+        assert!(PHASE_NAMES.contains(&name), "`{name}` is not in the pinned vocabulary");
+        assert!(v.get("fields").is_some(), "every record has `fields`: {line}");
+        let id = v.get("id").and_then(|x| x.as_u64()).expect("id");
+        let parent = v.get("parent").and_then(|x| x.as_u64()).expect("parent");
+        let start = v.get("start_us").and_then(|x| x.as_u64()).expect("start_us");
+        let dur = v.get("dur_us").and_then(|x| x.as_u64()).expect("dur_us");
+        assert!(records.insert(id, (parent, start, start + dur)).is_none(), "dup id {id}");
+    }
+
+    // spans nest: every non-root parent exists and the child's
+    // [start, end] window lies within the parent's
+    for (&id, &(parent, start, end)) in &records {
+        if parent == 0 {
+            continue;
+        }
+        let &(_, pstart, pend) = records
+            .get(&parent)
+            .unwrap_or_else(|| panic!("record {id} references missing parent {parent}"));
+        assert!(start >= pstart, "record {id} starts before its parent");
+        assert!(end <= pend, "record {id} outlives its parent");
+    }
+
+    // the serial engine emits the root run span and the per-batch phases
+    for needle in ["\"name\":\"run\"", "\"name\":\"enumerate\"", "\"name\":\"step\"", "\"name\":\"fold\""]
+    {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+}
+
+#[test]
+fn serial_reports_are_byte_identical_with_tracing_and_timings_on() {
+    let sys = snapse::generators::paper_pi();
+    let plain = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(8)).run();
+    let trace = Arc::new(Trace::new());
+    let traced = Explorer::new(
+        &sys,
+        ExploreOptions::breadth_first()
+            .max_depth(8)
+            .trace(Arc::clone(&trace))
+            .timings(true),
+    )
+    .run();
+
+    assert_eq!(
+        snapse::output::render_paper_log(&sys, &plain),
+        snapse::output::render_paper_log(&sys, &traced),
+        "paper log must be byte-identical with tracing on"
+    );
+    assert_eq!(
+        plain.to_json("paper_pi").to_string_compact(),
+        traced.to_json("paper_pi").to_string_compact(),
+        "JSON report must be byte-identical with tracing on"
+    );
+    assert!(!trace.is_empty(), "the traced run recorded spans");
+    assert!(plain.stats.levels.is_empty(), "untimed runs book no level table");
+    let steps: u64 = traced.stats.levels.iter().map(|l| l.steps).sum();
+    assert_eq!(steps, traced.stats.steps, "level table accounts for every step");
+    let new: u64 = traced.stats.levels.iter().map(|l| l.new_configs).sum();
+    assert_eq!(
+        new + 1, // the initial configuration is interned before level 0
+        traced.visited.len() as u64,
+        "level table accounts for every discovered configuration"
+    );
+}
+
+#[test]
+fn pipelined_reports_are_byte_identical_with_tracing_and_timings_on() {
+    let sys = snapse::generators::paper_pi();
+    let plain =
+        Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(7).workers(4)).run();
+    let trace = Arc::new(Trace::new());
+    let traced = Explorer::new(
+        &sys,
+        ExploreOptions::breadth_first()
+            .max_depth(7)
+            .workers(4)
+            .trace(Arc::clone(&trace))
+            .timings(true),
+    )
+    .run();
+
+    assert_eq!(
+        plain.to_json("paper_pi").to_string_compact(),
+        traced.to_json("paper_pi").to_string_compact(),
+        "pipelined JSON report must be byte-identical with tracing on"
+    );
+    assert_eq!(
+        snapse::output::render_paper_log(&sys, &plain),
+        snapse::output::render_paper_log(&sys, &traced),
+        "pipelined paper log must be byte-identical with tracing on"
+    );
+    // the parallel engine emits worker wait/step spans alongside the run
+    let text = trace_text(&trace);
+    assert!(text.contains("\"name\":\"run\""), "{text}");
+    assert!(text.contains("\"name\":\"step\""), "{text}");
+    let steps: u64 = traced.stats.levels.iter().map(|l| l.steps).sum();
+    assert_eq!(steps, traced.stats.steps, "level table accounts for every step");
+}

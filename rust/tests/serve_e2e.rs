@@ -257,6 +257,76 @@ fn all_endpoints_roundtrip_and_report_consistent_results() {
 }
 
 #[test]
+fn metrics_endpoint_speaks_prometheus_over_the_wire() {
+    let (addr, _state, handle) = boot(1);
+    // traffic first, so the cache and delta-cache families have samples
+    let (s, b) = client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":4}"#).unwrap();
+    assert_eq!(s, 200, "{b}");
+    client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":4}"#).unwrap();
+
+    // raw exchange to inspect the headers: /metrics is text, not JSON
+    let raw = {
+        use std::io::{Read, Write};
+        let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    };
+    assert!(raw.starts_with("HTTP/1.1 200 OK\r\n"), "{raw}");
+    assert!(raw.contains("content-type: text/plain; version=0.0.4\r\n"), "{raw}");
+    assert!(!raw.contains("application/json"), "{raw}");
+    let body1 = raw.split("\r\n\r\n").nth(1).expect("response body").to_string();
+
+    // the whole body parses as text exposition: `# TYPE fam kind`
+    // comments and `name[{labels}] value` samples with numeric values
+    let mut families = 0;
+    for line in body1.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let kind = rest.split(' ').nth(1).expect(line);
+            assert!(matches!(kind, "counter" | "gauge" | "histogram"), "{line}");
+            families += 1;
+            continue;
+        }
+        let (name, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("bad sample `{line}`"));
+        assert!(!name.is_empty(), "{line}");
+        assert!(value.parse::<f64>().is_ok(), "non-numeric sample `{line}`");
+    }
+    assert!(families >= 5, "expected several metric families:\n{body1}");
+    for needle in [
+        "snapse_request_seconds_bucket{le=\"+Inf\"}",
+        "snapse_report_cache_hits_total 1",
+        "snapse_delta_cache_entries{system=\"",
+        "snapse_requests_total",
+        "snapse_uptime_seconds",
+    ] {
+        assert!(body1.contains(needle), "missing `{needle}`:\n{body1}");
+    }
+
+    // counters are monotone across scrapes
+    let (s, body2) = client::get(&addr, "/metrics").unwrap();
+    assert_eq!(s, 200);
+    let sample = |body: &str, prefix: &str| -> f64 {
+        body.lines()
+            .find(|l| l.starts_with(prefix))
+            .and_then(|l| l.rsplit_once(' '))
+            .map(|(_, v)| v.parse::<f64>().unwrap())
+            .unwrap_or_else(|| panic!("no `{prefix}` sample in {body}"))
+    };
+    assert!(
+        sample(&body2, "snapse_requests_total") > sample(&body1, "snapse_requests_total"),
+        "request counter must be monotone:\n{body1}\n{body2}"
+    );
+    assert!(
+        sample(&body2, "snapse_request_seconds_count")
+            > sample(&body1, "snapse_request_seconds_count"),
+        "latency histogram count must be monotone"
+    );
+    shutdown(&addr, handle);
+}
+
+#[test]
 fn distinct_parameters_do_not_cross_contaminate() {
     let (addr, state, handle) = boot(1);
     let (_, r1) = client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":3}"#).unwrap();
