@@ -36,6 +36,7 @@ fn main() -> snapse::Result<()> {
         explore_workers: 1,
         handler_threads: 8,
         cache_capacity: 256,
+        ..ServeConfig::default()
     })?;
     let addr = server.local_addr()?.to_string();
     let state = server.state();

@@ -22,17 +22,28 @@ pub fn run(args: &Args) -> Result<()> {
     let endpoint =
         args.pos(0).ok_or_else(|| Error::parse("cli", 0, "query needs an <endpoint>"))?;
     let addr = args.opt("addr").unwrap_or("127.0.0.1:7878");
+    // One jittered retry on *transport* failure is the default — the
+    // daemon's query endpoints are idempotent (content-addressed cache)
+    // and GETs trivially so. `--no-retry` pins exactly one attempt.
+    // HTTP error statuses (503 shed, 504 deadline) are responses, not
+    // transport failures, and are never retried here.
+    let retry = !args.flag("no-retry");
 
     let (status, body) = match endpoint {
-        "health" => client::get(addr, "/healthz")?,
-        "stats" => client::get(addr, "/v1/stats")?,
+        "health" => client::get_with_retry(addr, "/healthz", retry)?,
+        "stats" => client::get_with_retry(addr, "/v1/stats", retry)?,
         "shutdown" => client::post(addr, "/v1/shutdown", "")?,
         "run" | "generated" | "analyze" | "info" => {
             let spec = args.pos(1).ok_or_else(|| {
                 Error::parse("cli", 0, format!("query {endpoint} needs a <system>"))
             })?;
             let request = build_query_body(endpoint, spec, args)?;
-            client::post(addr, &format!("/v1/{endpoint}"), &request.to_string_compact())?
+            client::post_with_retry(
+                addr,
+                &format!("/v1/{endpoint}"),
+                &request.to_string_compact(),
+                retry,
+            )?
         }
         other => {
             return Err(Error::parse(
@@ -67,6 +78,11 @@ fn build_query_body(endpoint: &str, spec: &str, args: &Args) -> Result<J> {
             }
             if let Some(m) = args.opt("mode") {
                 fields.push(("mode", J::str(m)));
+            }
+            // server-side wall-clock budget: an exceeded deadline answers
+            // 504 with a structured body instead of running to budget
+            if let Some(ms) = args.opt_num::<u64>("deadline-ms")? {
+                fields.push(("deadline_ms", J::num(ms as f64)));
             }
         }
         "generated" => {
@@ -125,13 +141,17 @@ mod tests {
 
     #[test]
     fn builds_run_body_from_builtin_spec() {
-        let a = args(&["run", "paper_pi", "--depth", "6", "--mode", "dfs"]);
+        let a = args(&["run", "paper_pi", "--depth", "6", "--mode", "dfs", "--deadline-ms", "250"]);
         let body = build_query_body("run", "paper_pi", &a).unwrap();
         assert_eq!(body.get("system").unwrap().as_str(), Some("paper_pi"));
         assert_eq!(body.get("format").unwrap().as_str(), Some("spec"));
         assert_eq!(body.get("depth").unwrap().as_usize(), Some(6));
         assert_eq!(body.get("mode").unwrap().as_str(), Some("dfs"));
+        assert_eq!(body.get("deadline_ms").unwrap().as_usize(), Some(250));
         assert_eq!(body.get("max"), None, "run ignores generated's options");
+
+        let quiet = build_query_body("run", "paper_pi", &args(&["run", "paper_pi"])).unwrap();
+        assert_eq!(quiet.get("deadline_ms"), None, "no flag, no field, same cache key");
     }
 
     #[test]

@@ -42,11 +42,39 @@ pub fn run(args: &Args) -> Result<()> {
     let trace_path = args.opt("trace").map(std::path::PathBuf::from);
     let trace = trace_path.as_ref().map(|_| std::sync::Arc::new(crate::obs::Trace::new()));
     let timings = args.flag("timings");
+    // `--deadline-ms N`: wall-clock budget. An expired deadline surfaces
+    // as a structured `deadline exceeded` error (exit 1), never as a
+    // partial report pretending to be complete. No flag, no token — the
+    // cancellation branch is dead and output is byte-identical.
+    let deadline_ms = args.opt_num::<u64>("deadline-ms")?;
+    let cancel = deadline_ms.map(|ms| {
+        crate::util::CancelToken::with_deadline(std::time::Duration::from_millis(ms))
+    });
+    // `--fault KIND@CALL[:COUNT]` (+ `--fault-seed S`): deterministic
+    // fault injection via `compute::faulty` — e.g. `error@3`, `panic@2:2`,
+    // `latency-250@1`. Routes through the Explorer engines, which own the
+    // quarantine-and-retry machinery; the CI chaos-smoke job diffs a
+    // single-fault run byte-for-byte against a clean one.
+    let fault = match args.opt("fault") {
+        None => None,
+        Some(spec) => {
+            let mut plan = crate::compute::FaultPlan::parse(spec)?;
+            if let Some(seed) = args.opt_num::<u64>("fault-seed")? {
+                plan = plan.seeded(seed);
+            }
+            Some(plan)
+        }
+    };
 
     // Explorer path (reference semantics, tree recording). `--workers N`
     // engages the pipelined parallel engine; `--single-thread` or tree
-    // recording pin the serial reference path.
-    if args.flag("single-thread") || args.flag("paper-log") || args.opt("tree").is_some() {
+    // recording pin the serial reference path. `--fault` lands here too:
+    // only the Explorer engines accept a decorated backend factory.
+    if args.flag("single-thread")
+        || args.flag("paper-log")
+        || args.opt("tree").is_some()
+        || fault.is_some()
+    {
         let mut opts = ExploreOptions::breadth_first()
             .spike_repr(spike_repr)
             .step_mode(step_mode)
@@ -72,8 +100,38 @@ pub fn run(args: &Args) -> Result<()> {
         if timings {
             opts = opts.timings(true);
         }
-        let mut explorer = Explorer::new(&sys, opts);
-        let report = explorer.run();
+        if let Some(token) = &cancel {
+            opts = opts.cancel(token.clone());
+        }
+        let mut explorer = match &fault {
+            None => Explorer::new(&sys, opts),
+            Some(plan) => {
+                let matrix = crate::matrix::build_matrix(&sys);
+                let host: std::sync::Arc<dyn crate::compute::BackendFactory> =
+                    std::sync::Arc::new(crate::compute::HostBackendFactory::new(matrix));
+                let faulty = std::sync::Arc::new(crate::compute::FaultyBackendFactory::new(
+                    host,
+                    plan.clone(),
+                ));
+                Explorer::with_factory(&sys, opts, faulty)
+            }
+        };
+        let report = explorer.try_run()?;
+        // the engines report a fired token as a stop reason so partial
+        // state stays inspectable in-process; at the CLI boundary it
+        // becomes the structured error contract instead
+        match report.stop {
+            crate::engine::StopReason::DeadlineExceeded => {
+                return Err(Error::deadline_exceeded(format!(
+                    "run exceeded its {} ms deadline",
+                    deadline_ms.unwrap_or(0)
+                )));
+            }
+            crate::engine::StopReason::Cancelled => {
+                return Err(Error::cancelled("run cancelled"));
+            }
+            _ => {}
+        }
         if timings {
             // same table the coordinator renders, on stderr so stdout
             // stays byte-identical to an untimed run
@@ -127,6 +185,7 @@ pub fn run(args: &Args) -> Result<()> {
         store_mode,
         delta_cache,
         trace: trace.clone(),
+        cancel: cancel.clone(),
     };
     let mut coord = Coordinator::new(&sys, cfg);
     let report = coord.run()?;

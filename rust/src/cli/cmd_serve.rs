@@ -13,14 +13,18 @@ pub fn run(args: &Args) -> Result<()> {
         cache_capacity: args
             .opt_num::<usize>("cache-capacity")?
             .unwrap_or(defaults.cache_capacity),
+        // `--slots N`: concurrent exploration slots; overflow sheds with
+        // 503 + Retry-After instead of queueing (0 = shed every compute,
+        // which the CI smoke job uses to probe the shed path)
+        explore_slots: args.opt_num::<usize>("slots")?.unwrap_or(defaults.explore_slots),
     };
     let server = Server::bind(cfg.clone())?;
     let addr = server.local_addr()?;
     // one parseable readiness line (the CI smoke job and scripts wait on it)
     println!("snapse serve: listening on {addr}");
     println!(
-        "  {} handler threads, {} explore worker(s) per query, cache capacity {}",
-        cfg.handler_threads, cfg.explore_workers, cfg.cache_capacity
+        "  {} handler threads, {} explore worker(s) per query, {} explore slot(s), cache capacity {}",
+        cfg.handler_threads, cfg.explore_workers, cfg.explore_slots, cfg.cache_capacity
     );
     use std::io::Write as _;
     std::io::stdout().flush().ok();

@@ -8,15 +8,19 @@
 //!                     [--step-mode auto|batch|delta]
 //!                     [--store-mode plain|compressed] [--delta-cache N]
 //!                     [--trace FILE.jsonl] [--timings]
+//!                     [--deadline-ms N]
+//!                     [--fault KIND@CALL[:COUNT]] [--fault-seed S]
 //! snapse walk <system> [--steps N] [--seed S]
 //! snapse generated <system> [--max N] [--workers W]
 //! snapse analyze <system> [--configs N] [--bound B] [--workers W] [--json]
 //! snapse info <system> [--dot]
 //! snapse artifacts [--dir DIR]
 //! snapse serve [--addr H:P] [--workers W] [--threads T] [--cache-capacity N]
+//!              [--slots N]
 //! snapse query <run|generated|analyze|info|stats|health|shutdown> [<system>]
 //!              [--addr H:P] [--depth D] [--configs N] [--mode bfs|dfs]
-//!              [--max N] [--bound B] [--raw] [--report-only]
+//!              [--max N] [--bound B] [--deadline-ms N] [--no-retry]
+//!              [--raw] [--report-only]
 //! ```
 //!
 //! `<system>` is a path to a `.snpl`/`.json` file, or a builtin spec:
@@ -160,6 +164,10 @@ fn help_text() -> String {
     s.push_str("      --delta-cache N (run-scoped S·M memo entries; 0 = off)\n");
     s.push_str("      --trace FILE.jsonl (per-phase span export) --timings (per-level table\n");
     s.push_str("      on stderr); neither changes any report byte\n");
+    s.push_str("      --deadline-ms N (wall-clock budget; exceeding it is a structured error)\n");
+    s.push_str("      --fault KIND@CALL[:COUNT] --fault-seed S (deterministic fault injection:\n");
+    s.push_str("      error@3, panic@2:2, latency-250@1; a single fault is retried on a fresh\n");
+    s.push_str("      backend and the output stays byte-identical)\n");
     s.push_str("  walk <system>       follow one random branch\n");
     s.push_str("      --steps N --seed S\n");
     s.push_str("  generated <system>  compute the generated number set\n");
@@ -174,10 +182,12 @@ fn help_text() -> String {
     s.push_str("  accept <d> <n>      input-driven divisibility acceptor\n");
     s.push_str("  serve               exploration-serving daemon (content-addressed cache)\n");
     s.push_str("      --addr HOST:PORT --workers W --threads T --cache-capacity N\n");
+    s.push_str("      --slots N (concurrent explorations; overflow sheds with 503)\n");
     s.push_str("  query <endpoint> [<system>]   client for a running daemon\n");
     s.push_str("      endpoints: run generated analyze info stats health shutdown\n");
     s.push_str("      --addr HOST:PORT --depth D --configs N --mode bfs|dfs --max N\n");
-    s.push_str("      --bound B --raw --report-only\n\n");
+    s.push_str("      --bound B --deadline-ms N (server-side budget; 504 when exceeded)\n");
+    s.push_str("      --no-retry (exactly one attempt) --raw --report-only\n\n");
     s.push_str("systems: a .snpl/.json path, or builtin:\n");
     s.push_str("  paper_pi nat_gen even_gen ring:M:C ring_branch:M:C:K wide_ring:M:W:C\n");
     s.push_str("  rule_heavy:M:K:C counter:L:C div:N:D adder:W random:SEED\n");

@@ -1,0 +1,345 @@
+//! Deterministic fault injection — the chaos-testing backend wrapper.
+//!
+//! [`FaultyBackendFactory`] wraps any [`BackendFactory`] and injects
+//! faults according to a [`FaultPlan`]: an `Err` return, a panic, or a
+//! fixed (seed-jittered) latency, at the Nth step call counted **across
+//! every instance the factory created** — so "fail the 3rd chunk of the
+//! run" means the same chunk regardless of which pool worker picks it
+//! up. Everything is deterministic: the call counter is shared and
+//! monotone, and the latency jitter comes from a [`Rng`] seeded by the
+//! plan, so a failing chaos test replays exactly.
+//!
+//! The injection point is *before* the wrapped backend runs, so an
+//! injected failure never half-applies a batch — after a retry on a
+//! fresh checkout the surviving output must be byte-identical to a
+//! fault-free run (pinned by `rust/tests/chaos.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::pool::BackendFactory;
+use super::{StepBackend, StepBatch};
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// What to inject when the plan triggers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return `Err(Error::Runtime("injected fault …"))` from the step.
+    Error,
+    /// Panic inside the step call (exercises worker `catch_unwind`).
+    Panic,
+    /// Sleep for roughly the given duration (±25 % seeded jitter), then
+    /// step normally — a slow backend, not a broken one.
+    Latency(Duration),
+}
+
+/// When and what to inject. `at_call` is 1-based over the factory-wide
+/// step-call counter; `count` consecutive calls starting there inject
+/// (`count = 1` → a single fault that a one-shot retry survives,
+/// `count ≥ 2` → the retry fails too and the run must error cleanly).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Injected fault.
+    pub kind: FaultKind,
+    /// First step call (1-based, factory-wide) to inject at.
+    pub at_call: u64,
+    /// Number of consecutive calls injected from `at_call` on.
+    pub count: u64,
+    /// Seed for the plan's [`Rng`] (latency jitter); same seed, same run.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// A single injected `Err` at step call `at_call`.
+    pub fn error_at(at_call: u64) -> FaultPlan {
+        FaultPlan { kind: FaultKind::Error, at_call, count: 1, seed: 0xC0FFEE }
+    }
+
+    /// A single injected panic at step call `at_call`.
+    pub fn panic_at(at_call: u64) -> FaultPlan {
+        FaultPlan { kind: FaultKind::Panic, at_call, count: 1, seed: 0xC0FFEE }
+    }
+
+    /// A single injected latency of `ms` milliseconds at `at_call`.
+    pub fn latency_at(at_call: u64, ms: u64) -> FaultPlan {
+        FaultPlan {
+            kind: FaultKind::Latency(Duration::from_millis(ms)),
+            at_call,
+            count: 1,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Inject on `count` consecutive calls instead of one.
+    pub fn repeated(mut self, count: u64) -> FaultPlan {
+        self.count = count.max(1);
+        self
+    }
+
+    /// Override the jitter seed.
+    pub fn seeded(mut self, seed: u64) -> FaultPlan {
+        self.seed = seed;
+        self
+    }
+
+    /// Parse the CLI grammar `KIND@CALL[:COUNT]` where `KIND` is
+    /// `error`, `panic`, or `latency-MS` — e.g. `error@3`, `panic@2:2`,
+    /// `latency-250@1`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let bad = |msg: String| Error::parse("fault plan", 0, msg);
+        let (kind_s, rest) = spec
+            .split_once('@')
+            .ok_or_else(|| bad(format!("expected KIND@CALL[:COUNT], got `{spec}`")))?;
+        let (call_s, count_s) = match rest.split_once(':') {
+            Some((c, n)) => (c, Some(n)),
+            None => (rest, None),
+        };
+        let at_call: u64 =
+            call_s.parse().map_err(|_| bad(format!("bad call index `{call_s}`")))?;
+        if at_call == 0 {
+            return Err(bad("call index is 1-based; use @1 for the first call".into()));
+        }
+        let count: u64 = match count_s {
+            Some(n) => n.parse().map_err(|_| bad(format!("bad repeat count `{n}`")))?,
+            None => 1,
+        };
+        if count == 0 {
+            return Err(bad("repeat count must be ≥ 1".into()));
+        }
+        let kind = if kind_s == "error" {
+            FaultKind::Error
+        } else if kind_s == "panic" {
+            FaultKind::Panic
+        } else if let Some(ms) = kind_s.strip_prefix("latency-") {
+            let ms: u64 = ms.parse().map_err(|_| bad(format!("bad latency ms `{ms}`")))?;
+            FaultKind::Latency(Duration::from_millis(ms))
+        } else {
+            return Err(bad(format!("unknown fault kind `{kind_s}` (error|panic|latency-MS)")));
+        };
+        Ok(FaultPlan { kind, at_call, count, seed: 0xC0FFEE })
+    }
+
+    /// Does the plan trigger on this (1-based) call number?
+    fn triggers(&self, call: u64) -> bool {
+        call >= self.at_call && call - self.at_call < self.count
+    }
+}
+
+/// State shared across every backend instance the factory creates: the
+/// factory-wide call counter and how many faults actually fired.
+#[derive(Debug, Default)]
+struct FaultState {
+    calls: AtomicU64,
+    injected: AtomicU64,
+}
+
+/// [`BackendFactory`] decorator injecting a [`FaultPlan`] (module docs).
+pub struct FaultyBackendFactory {
+    inner: Arc<dyn BackendFactory>,
+    plan: FaultPlan,
+    state: Arc<FaultState>,
+}
+
+impl FaultyBackendFactory {
+    /// Wrap `inner`, injecting according to `plan`.
+    pub fn new(inner: Arc<dyn BackendFactory>, plan: FaultPlan) -> FaultyBackendFactory {
+        FaultyBackendFactory { inner, plan, state: Arc::new(FaultState::default()) }
+    }
+
+    /// Total step calls observed across all instances so far.
+    pub fn calls(&self) -> u64 {
+        self.state.calls.load(Ordering::Relaxed)
+    }
+
+    /// Faults actually injected so far (a chaos test asserts ≥ 1, i.e.
+    /// the plan really fired and the run survived *because of* retry).
+    pub fn injected(&self) -> u64 {
+        self.state.injected.load(Ordering::Relaxed)
+    }
+}
+
+impl BackendFactory for FaultyBackendFactory {
+    fn label(&self) -> &str {
+        self.inner.label()
+    }
+
+    fn create(&self) -> Result<Box<dyn StepBackend>> {
+        Ok(Box::new(FaultyBackend {
+            inner: self.inner.create()?,
+            plan: self.plan.clone(),
+            state: Arc::clone(&self.state),
+        }))
+    }
+}
+
+/// A [`StepBackend`] that consults the shared [`FaultPlan`] before every
+/// step call and otherwise forwards verbatim to the wrapped instance.
+pub struct FaultyBackend {
+    inner: Box<dyn StepBackend>,
+    plan: FaultPlan,
+    state: Arc<FaultState>,
+}
+
+impl FaultyBackend {
+    /// Charge one call against the shared counter; inject if the plan
+    /// says so. Runs *before* the inner step, so a fault never leaves a
+    /// half-applied batch behind.
+    fn before_step(&self) -> Result<()> {
+        let call = self.state.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if !self.plan.triggers(call) {
+            return Ok(());
+        }
+        self.state.injected.fetch_add(1, Ordering::SeqCst);
+        match self.plan.kind {
+            FaultKind::Error => {
+                Err(Error::runtime(format!("injected fault: step call {call}")))
+            }
+            FaultKind::Panic => panic!("injected panic: step call {call}"),
+            FaultKind::Latency(base) => {
+                // deterministic ±25 % jitter: seed ⊕ call keeps each
+                // injected sleep stable across replays
+                let mut rng = Rng::new(self.plan.seed ^ call);
+                let jitter = 0.75 + 0.5 * rng.f64();
+                std::thread::sleep(base.mul_f64(jitter));
+                Ok(())
+            }
+        }
+    }
+}
+
+impl StepBackend for FaultyBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn step_batch(&mut self, batch: &StepBatch<'_>) -> Result<Vec<i64>> {
+        self.before_step()?;
+        self.inner.step_batch(batch)
+    }
+
+    fn step_deltas_into(&mut self, batch: &StepBatch<'_>, out: &mut Vec<i64>) -> Result<()> {
+        self.before_step()?;
+        self.inner.step_deltas_into(batch, out)
+    }
+
+    fn native_deltas(&self) -> bool {
+        self.inner.native_deltas()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn attach_delta_cache(&mut self, cache: Arc<super::DeltaCache>) {
+        self.inner.attach_delta_cache(cache);
+    }
+
+    fn attach_trace(&mut self, trace: Arc<crate::obs::Trace>) {
+        self.inner.attach_trace(trace);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::{HostBackendFactory, SpikeRows};
+    use crate::matrix::build_matrix;
+
+    fn host_factory() -> Arc<dyn BackendFactory> {
+        let sys = crate::generators::paper_pi();
+        Arc::new(HostBackendFactory::new(build_matrix(&sys)))
+    }
+
+    fn batch_once(be: &mut dyn StepBackend) -> Result<Vec<i64>> {
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let batch = StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        be.step_batch(&batch)
+    }
+
+    #[test]
+    fn plan_grammar_roundtrip() {
+        assert_eq!(FaultPlan::parse("error@3").unwrap(), FaultPlan::error_at(3));
+        assert_eq!(FaultPlan::parse("panic@2:2").unwrap(), FaultPlan::panic_at(2).repeated(2));
+        assert_eq!(
+            FaultPlan::parse("latency-250@1").unwrap(),
+            FaultPlan::latency_at(1, 250)
+        );
+        assert!(FaultPlan::parse("error").is_err());
+        assert!(FaultPlan::parse("error@0").is_err());
+        assert!(FaultPlan::parse("error@1:0").is_err());
+        assert!(FaultPlan::parse("fire@1").is_err());
+        assert!(FaultPlan::parse("latency-abc@1").is_err());
+    }
+
+    #[test]
+    fn error_fires_exactly_at_planned_call_then_recovers() {
+        let f = FaultyBackendFactory::new(host_factory(), FaultPlan::error_at(2));
+        let mut be = f.create().unwrap();
+        let clean = batch_once(&mut *be).expect("call 1 clean");
+        let err = batch_once(&mut *be).expect_err("call 2 injected");
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        let again = batch_once(&mut *be).expect("call 3 clean again");
+        assert_eq!(clean, again, "fault leaves no residue");
+        assert_eq!(f.calls(), 3);
+        assert_eq!(f.injected(), 1);
+    }
+
+    #[test]
+    fn call_counter_is_shared_across_instances() {
+        let f = FaultyBackendFactory::new(host_factory(), FaultPlan::error_at(2));
+        let mut a = f.create().unwrap();
+        let mut b = f.create().unwrap();
+        batch_once(&mut *a).expect("call 1 (instance a) clean");
+        let err = batch_once(&mut *b).expect_err("call 2 (instance b) injected");
+        assert!(err.to_string().contains("step call 2"), "{err}");
+    }
+
+    #[test]
+    fn repeated_plan_fails_the_retry_too() {
+        let f = FaultyBackendFactory::new(host_factory(), FaultPlan::error_at(1).repeated(2));
+        let mut be = f.create().unwrap();
+        assert!(batch_once(&mut *be).is_err());
+        assert!(batch_once(&mut *be).is_err(), "second consecutive call injected");
+        assert!(batch_once(&mut *be).is_ok());
+    }
+
+    #[test]
+    fn panic_plan_panics_inside_the_step() {
+        let f = FaultyBackendFactory::new(host_factory(), FaultPlan::panic_at(1));
+        let mut be = f.create().unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = batch_once(&mut *be);
+        }));
+        assert!(caught.is_err(), "planned panic surfaced");
+    }
+
+    #[test]
+    fn latency_plan_is_slow_but_correct() {
+        let plain = FaultyBackendFactory::new(host_factory(), FaultPlan::error_at(u64::MAX));
+        let mut clean_be = plain.create().unwrap();
+        let want = batch_once(&mut *clean_be).unwrap();
+
+        let f = FaultyBackendFactory::new(host_factory(), FaultPlan::latency_at(1, 30));
+        let mut be = f.create().unwrap();
+        let t0 = std::time::Instant::now();
+        let got = batch_once(&mut *be).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(20), "slept");
+        assert_eq!(got, want, "latency fault never changes bytes");
+        assert_eq!(f.injected(), 1);
+    }
+
+    #[test]
+    fn delta_path_is_also_counted() {
+        let f = FaultyBackendFactory::new(host_factory(), FaultPlan::error_at(1));
+        let mut be = f.create().unwrap();
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let batch = StepBatch { b: 1, n: 3, r: 5, configs: &cfg, spikes: SpikeRows::Dense(&spk) };
+        let mut out = Vec::new();
+        assert!(be.step_deltas_into(&batch, &mut out).is_err());
+        assert!(be.step_deltas_into(&batch, &mut out).is_ok());
+    }
+}

@@ -13,6 +13,7 @@
 
 mod bucket;
 pub mod delta_cache;
+pub mod faulty;
 mod host;
 pub mod pool;
 pub mod replay;
@@ -21,6 +22,7 @@ pub mod xla;
 
 pub use bucket::{Bucket, BucketPolicy};
 pub use delta_cache::{DeltaCache, DeltaCacheStats, DEFAULT_DELTA_CACHE};
+pub use faulty::{FaultKind, FaultPlan, FaultyBackend, FaultyBackendFactory};
 pub use host::HostBackend;
 pub use pool::{BackendFactory, BackendPool, HostBackendFactory, PooledBackend, XlaBackendFactory};
 pub use replay::{replay_on_device, verify_walk};

@@ -163,6 +163,24 @@ impl std::ops::DerefMut for PooledBackend<'_> {
     }
 }
 
+impl PooledBackend<'_> {
+    /// Quarantine this check-out instead of returning it: the instance
+    /// (which just errored or panicked mid-step and may hold
+    /// inconsistent internal state) is dropped, and — when the pool was
+    /// built via [`BackendPool::build_shared`] and so knows its factory
+    /// — a **fresh** instance is built, wired to the pool's shared
+    /// delta cache / trace, and installed in its place, keeping the
+    /// pool at full size. Returns `true` when a fresh replacement was
+    /// installed; when the pool has no factory (or the factory itself
+    /// fails), the original instance is returned to the pool unchanged
+    /// (best effort — never a shrinking pool, never a deadlocked
+    /// `acquire`) and this returns `false`.
+    pub fn quarantine(mut self) -> bool {
+        let b = self.backend.take().expect("pooled backend present until drop");
+        self.pool.quarantine_slot(b)
+    }
+}
+
 impl Drop for PooledBackend<'_> {
     fn drop(&mut self) {
         if let Some(b) = self.backend.take() {
@@ -187,6 +205,13 @@ pub struct BackendPool {
     /// check-out (wait time + remaining free instances). `None` keeps
     /// acquire free of timer syscalls.
     trace: Option<Arc<Trace>>,
+    /// The factory this pool was built from, when known
+    /// ([`BackendPool::build_shared`]): lets
+    /// [`PooledBackend::quarantine`] replace a failed instance with a
+    /// fresh build instead of recycling suspect state.
+    rebuild: Option<Arc<dyn BackendFactory>>,
+    /// Instances quarantined so far (replaced or best-effort recycled).
+    quarantined: std::sync::atomic::AtomicU64,
 }
 
 impl BackendPool {
@@ -198,6 +223,17 @@ impl BackendPool {
             slots.push(factory.create()?);
         }
         Ok(BackendPool::from_backends(factory.label().to_string(), slots))
+    }
+
+    /// Like [`BackendPool::build`], but keeps a handle to the factory so
+    /// [`PooledBackend::quarantine`] can replace failed instances with
+    /// fresh builds. Prefer this wherever the factory is already shared
+    /// (`Arc`) — it is what makes the pipelined engine's
+    /// retry-on-fresh-checkout meaningful.
+    pub fn build_shared(factory: Arc<dyn BackendFactory>, n: usize) -> Result<BackendPool> {
+        let mut pool = BackendPool::build(factory.as_ref(), n)?;
+        pool.rebuild = Some(factory);
+        Ok(pool)
     }
 
     /// Wrap caller-supplied backends (e.g. a single custom instance).
@@ -218,6 +254,8 @@ impl BackendPool {
             native_deltas,
             delta_cache: None,
             trace: None,
+            rebuild: None,
+            quarantined: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
@@ -314,9 +352,41 @@ impl BackendPool {
         Some(PooledBackend { pool: self, backend: Some(b) })
     }
 
+    /// Instances quarantined over the pool's lifetime (fresh-replaced
+    /// or, without a stored factory, best-effort recycled).
+    pub fn quarantined(&self) -> u64 {
+        self.quarantined.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
     fn release(&self, backend: Box<dyn StepBackend>) {
         self.slots.lock().unwrap().push(backend);
         self.freed.notify_one();
+    }
+
+    /// Replace a failed instance (see [`PooledBackend::quarantine`]).
+    /// The pool **always** keeps its full size — a replacement build
+    /// failure recycles the original instead of shrinking, so `acquire`
+    /// can never deadlock on an emptied pool.
+    fn quarantine_slot(&self, broken: Box<dyn StepBackend>) -> bool {
+        self.quarantined.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let fresh = self.rebuild.as_ref().and_then(|f| f.create().ok());
+        match fresh {
+            Some(mut b) => {
+                if let Some(c) = &self.delta_cache {
+                    b.attach_delta_cache(Arc::clone(c));
+                }
+                if let Some(t) = &self.trace {
+                    b.attach_trace(Arc::clone(t));
+                }
+                drop(broken);
+                self.release(b);
+                true
+            }
+            None => {
+                self.release(broken);
+                false
+            }
+        }
     }
 }
 
@@ -433,6 +503,53 @@ mod tests {
     #[should_panic(expected = "at least one instance")]
     fn empty_pool_rejected() {
         let _ = BackendPool::from_backends("none".into(), Vec::new());
+    }
+
+    #[test]
+    fn quarantine_replaces_with_a_fresh_build_when_factory_known() {
+        let m = build_matrix(&crate::generators::paper_pi());
+        let f: Arc<dyn BackendFactory> = Arc::new(HostBackendFactory::new(m));
+        let p = BackendPool::build_shared(f, 1).unwrap();
+        assert_eq!(p.quarantined(), 0);
+        let g = p.acquire();
+        assert!(g.quarantine(), "stored factory → fresh replacement");
+        assert_eq!(p.quarantined(), 1);
+        // the pool kept its size: a size-1 pool still serves check-outs
+        let g2 = p.try_acquire();
+        assert!(g2.is_some(), "replacement installed, no deadlock");
+    }
+
+    #[test]
+    fn quarantine_without_factory_recycles_but_never_shrinks() {
+        let p = pool(1); // BackendPool::build — no stored factory
+        let g = p.acquire();
+        assert!(!g.quarantine(), "no factory → best-effort recycle");
+        assert_eq!(p.quarantined(), 1);
+        assert_eq!(p.available(), 1, "instance returned, pool at full size");
+    }
+
+    #[test]
+    fn quarantine_replacement_inherits_shared_delta_cache() {
+        let m = build_matrix(&crate::generators::paper_pi());
+        let f: Arc<dyn BackendFactory> = Arc::new(HostBackendFactory::new(m.clone()));
+        let mut p = BackendPool::build_shared(f, 1).unwrap();
+        let cache = Arc::new(DeltaCache::new(m.rows(), m.cols(), 32));
+        p.set_delta_cache(Arc::clone(&cache));
+        p.acquire().quarantine();
+        let cfg = [2i64, 1, 1];
+        let spk = [1u8, 0, 1, 1, 0];
+        let batch = StepBatch {
+            b: 1,
+            n: 3,
+            r: 5,
+            configs: &cfg,
+            spikes: crate::compute::SpikeRows::Dense(&spk),
+        };
+        let mut g = p.acquire();
+        let mut d = Vec::new();
+        g.step_deltas_into(&batch, &mut d).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 1, "replacement instance publishes into the shared cache");
     }
 
     #[test]

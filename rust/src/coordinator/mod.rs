@@ -88,6 +88,13 @@ pub struct CoordinatorConfig {
     /// pool's `checkout` and the backends' `delta_cache` events. `None`
     /// (the default) records nothing; output is identical either way.
     pub trace: Option<std::sync::Arc<crate::obs::Trace>>,
+    /// Optional cancellation/deadline token, polled between levels and
+    /// between windows inside a level. A fired token turns the run into
+    /// a structured [`Error::Cancelled`](crate::Error::Cancelled) /
+    /// [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded).
+    /// `None` (the default) is a dead branch; output is identical when
+    /// an armed token never fires.
+    pub cancel: Option<crate::util::CancelToken>,
 }
 
 impl Default for CoordinatorConfig {
@@ -103,6 +110,7 @@ impl Default for CoordinatorConfig {
             store_mode: StoreMode::Plain,
             delta_cache: DEFAULT_DELTA_CACHE,
             trace: None,
+            cancel: None,
         }
     }
 }
@@ -194,6 +202,9 @@ impl<'a> Coordinator<'a> {
         if let Some(t) = &self.cfg.trace {
             driver = driver.with_trace(std::sync::Arc::clone(t), run_span);
         }
+        if let Some(token) = &self.cfg.cancel {
+            driver = driver.with_cancel(token.clone());
+        }
         let mut visited = VisitedStore::with_mode(
             self.cfg.store_mode,
             self.sys.num_neurons(),
@@ -208,6 +219,11 @@ impl<'a> Coordinator<'a> {
         let start = std::time::Instant::now();
 
         while !level.is_empty() {
+            if let Some(token) = &self.cfg.cancel {
+                if let Some(kind) = token.check() {
+                    return Err(kind.into());
+                }
+            }
             if let Some(maxd) = self.cfg.max_depth {
                 if depth >= maxd {
                     stop = StopReason::MaxDepth;
@@ -361,6 +377,51 @@ mod tests {
         }
         assert_eq!(orders[0], orders[1]);
         assert_eq!(orders[1], orders[2]);
+    }
+
+    #[test]
+    fn cancel_token_turns_into_structured_errors() {
+        use crate::util::CancelToken;
+        let sys = crate::generators::paper_pi();
+        let token = CancelToken::new();
+        token.cancel();
+        let err = Coordinator::new(
+            &sys,
+            CoordinatorConfig { cancel: Some(token), ..Default::default() },
+        )
+        .run()
+        .expect_err("pre-cancelled run must fail");
+        assert!(matches!(err, crate::Error::Cancelled(_)), "got: {err}");
+        let expired = CancelToken::with_deadline(std::time::Duration::ZERO);
+        let err = Coordinator::new(
+            &sys,
+            CoordinatorConfig { cancel: Some(expired), ..Default::default() },
+        )
+        .run()
+        .expect_err("expired deadline must fail");
+        assert!(matches!(err, crate::Error::DeadlineExceeded(_)), "got: {err}");
+    }
+
+    #[test]
+    fn armed_quiet_token_does_not_change_coordinator_output() {
+        use crate::util::CancelToken;
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let plain = Coordinator::new(
+            &sys,
+            CoordinatorConfig { workers: 3, ..Default::default() },
+        )
+        .run()
+        .unwrap();
+        let token = CancelToken::with_deadline(std::time::Duration::from_secs(3600));
+        let armed = Coordinator::new(
+            &sys,
+            CoordinatorConfig { workers: 3, cancel: Some(token), ..Default::default() },
+        )
+        .run()
+        .unwrap();
+        assert_eq!(armed.visited.in_order(), plain.visited.in_order());
+        assert_eq!(armed.stop, plain.stop);
+        assert_eq!(armed.halting, plain.halting);
     }
 
     #[test]

@@ -50,6 +50,10 @@ pub struct LevelDriver<'a> {
     trace: Option<Arc<Trace>>,
     /// Parent span for the `level` spans (the coordinator's `run` span).
     trace_parent: Option<Span>,
+    /// Optional cancellation/deadline token, polled once per window —
+    /// the same cadence as the configuration budget. `None` costs
+    /// nothing.
+    cancel: Option<crate::util::CancelToken>,
 }
 
 /// What a processed level yields.
@@ -81,6 +85,7 @@ impl<'a> LevelDriver<'a> {
             window_parents: 4096,
             trace: None,
             trace_parent: None,
+            cancel: None,
         }
     }
 
@@ -96,6 +101,17 @@ impl<'a> LevelDriver<'a> {
     /// Override the window size (testing / tuning).
     pub fn with_window(mut self, parents: usize) -> Self {
         self.window_parents = parents.max(1);
+        self
+    }
+
+    /// Attach a cancellation/deadline token. [`process_level`] polls it
+    /// once per window (beside the budget check) and returns a
+    /// structured [`Error`](crate::Error) when it has fired — completed
+    /// windows stay folded into `visited`, the rest are never expanded.
+    ///
+    /// [`process_level`]: LevelDriver::process_level
+    pub fn with_cancel(mut self, token: crate::util::CancelToken) -> Self {
+        self.cancel = Some(token);
         self
     }
 
@@ -145,6 +161,11 @@ impl<'a> LevelDriver<'a> {
         };
 
         for window in level.chunks(self.window_parents) {
+            if let Some(token) = &self.cancel {
+                if let Some(kind) = token.check() {
+                    return Err(kind.into());
+                }
+            }
             if let Some(b) = budget {
                 if visited.len() >= b {
                     out.truncated = true;
@@ -369,6 +390,26 @@ mod tests {
             .unwrap();
         assert!(out.truncated);
         assert!(out.next_level.is_empty());
+    }
+
+    #[test]
+    fn fired_token_fails_the_level_with_a_structured_error() {
+        use crate::util::CancelToken;
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        let token = CancelToken::new();
+        token.cancel();
+        let driver = LevelDriver::new(&sys, &m, 1, 4).with_cancel(token);
+        let backends = pool(&m, 1);
+        let mut visited = VisitedStore::new();
+        let c0 = ConfigVector::from(vec![2, 1, 1]);
+        visited.insert(c0.clone());
+        let mut halting = Vec::new();
+        let err = driver
+            .process_level(&[c0], &backends, &mut visited, &mut halting, None)
+            .expect_err("cancelled level must fail");
+        assert!(matches!(err, crate::Error::Cancelled(_)), "got: {err}");
+        assert_eq!(visited.len(), 1, "no window was expanded");
     }
 
     #[test]

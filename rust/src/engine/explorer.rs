@@ -101,6 +101,15 @@ pub struct ExploreOptions {
     /// Collect the per-level phase table (`--timings`) into
     /// [`ExploreStats::levels`] even without a trace attached.
     pub timings: bool,
+    /// Cooperative cancellation + deadline
+    /// ([`CancelToken`](crate::util::CancelToken)), polled at **batch
+    /// granularity** beside the `time_budget`/`max_configs` checks. When
+    /// it fires, the run stops enqueuing, folds what already completed,
+    /// and reports [`StopReason::Cancelled`] /
+    /// [`StopReason::DeadlineExceeded`]. `None` — the default — is a
+    /// dead branch: no atomic load, no clock read, byte-identical
+    /// output.
+    pub cancel: Option<crate::util::CancelToken>,
 }
 
 impl ExploreOptions {
@@ -120,6 +129,7 @@ impl ExploreOptions {
             delta_cache: DEFAULT_DELTA_CACHE,
             trace: None,
             timings: false,
+            cancel: None,
         }
     }
 
@@ -197,6 +207,13 @@ impl ExploreOptions {
     /// Collect per-level phase timings (`--timings`).
     pub fn timings(mut self, on: bool) -> Self {
         self.timings = on;
+        self
+    }
+
+    /// Attach a cancellation/deadline token (`--deadline-ms`, serve
+    /// request deadlines, shutdown drain).
+    pub fn cancel(mut self, token: crate::util::CancelToken) -> Self {
+        self.cancel = Some(token);
         self
     }
 }
@@ -418,19 +435,41 @@ impl<'a> Explorer<'a> {
     }
 
     /// Run from the system's initial configuration.
+    ///
+    /// # Panics
+    /// On backend failure (step error after the pipelined engine's
+    /// one-shot retry, factory failure, worker panic) — the
+    /// report-returning API has no error channel. Use
+    /// [`Explorer::try_run`] where failures must surface as structured
+    /// [`Error`](crate::Error)s instead.
     pub fn run(&mut self) -> ExploreReport {
         self.run_from(ConfigVector::new(self.sys.initial_config()))
     }
 
-    /// Run from an arbitrary start configuration.
+    /// Run from an arbitrary start configuration (panicking twin of
+    /// [`Explorer::try_run_from`] — see [`Explorer::run`]).
     pub fn run_from(&mut self, c0: ConfigVector) -> ExploreReport {
+        self.try_run_from(c0).unwrap_or_else(|e| panic!("exploration failed: {e}"))
+    }
+
+    /// Run from the initial configuration, surfacing every failure mode
+    /// — backend step errors (after the pipelined engine's retry),
+    /// factory failures, worker panics — as a structured `Err` instead
+    /// of panicking. Successful runs return exactly what
+    /// [`Explorer::run`] would.
+    pub fn try_run(&mut self) -> crate::error::Result<ExploreReport> {
+        self.try_run_from(ConfigVector::new(self.sys.initial_config()))
+    }
+
+    /// [`Explorer::try_run`] from an arbitrary start configuration.
+    pub fn try_run_from(&mut self, c0: ConfigVector) -> crate::error::Result<ExploreReport> {
         let workers = self.effective_workers();
         if workers > 1 && !self.opts.record_tree {
             match &self.source {
                 BackendSource::Factory(factory) => {
                     return super::parallel::run_pipelined(
                         self.sys,
-                        factory.as_ref(),
+                        factory,
                         &self.opts,
                         workers,
                         c0,
@@ -462,7 +501,7 @@ impl<'a> Explorer<'a> {
         let backend: &mut dyn StepBackend = match &mut self.source {
             BackendSource::Single(b) => &mut **b,
             BackendSource::Factory(f) => {
-                created = f.create().expect("backend factory failed");
+                created = f.create()?;
                 &mut *created
             }
             BackendSource::Pool(p) => {
@@ -481,7 +520,30 @@ impl<'a> Explorer<'a> {
                 backend.attach_trace(std::sync::Arc::clone(t));
             }
         }
-        run_serial(self.sys, backend, &self.opts, c0, run_cache.as_deref())
+        // A panicking backend (see `compute::faulty`) must surface as a
+        // structured error here too, never abort the process from a
+        // library call.
+        let (sys, opts) = (self.sys, &self.opts);
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_serial(sys, backend, opts, c0, run_cache.as_deref())
+        }))
+        .unwrap_or_else(|p| {
+            Err(crate::Error::runtime(format!(
+                "step backend panicked: {}",
+                panic_message(p.as_ref())
+            )))
+        })
+    }
+}
+
+/// Best-effort text of a caught panic payload (`&str` / `String`).
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
     }
 }
 
@@ -516,7 +578,7 @@ fn run_serial(
     opts: &ExploreOptions,
     c0: ConfigVector,
     cache: Option<&DeltaCache>,
-) -> ExploreReport {
+) -> crate::error::Result<ExploreReport> {
     let start = Instant::now();
     let n = sys.num_neurons();
     let r = sys.num_rules();
@@ -597,6 +659,14 @@ fn run_serial(
                 break 'outer;
             }
         }
+        // Batch-granular cancellation/deadline poll, beside the budget
+        // checks (one atomic load + at most one clock read per batch).
+        if let Some(token) = &opts.cancel {
+            if let Some(kind) = token.check() {
+                stop = kind.into();
+                break 'outer;
+            }
+        }
         // Fill one batch from the queue.
         let sw_enum = timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
         let psi_before = stats.psi_total;
@@ -668,12 +738,10 @@ fn run_serial(
         let batch = StepBatch { b, n, r, configs: &cfg_buf, spikes: spk_buf.as_rows() };
         let sw_step = timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
         let full_out: Option<Vec<i64>> = if use_delta {
-            backend
-                .step_deltas_into(&batch, &mut step_buf)
-                .expect("step backend failed (shape-checked input)");
+            backend.step_deltas_into(&batch, &mut step_buf)?;
             None
         } else {
-            Some(backend.step_batch(&batch).expect("step backend failed (shape-checked input)"))
+            Some(backend.step_batch(&batch)?)
         };
         let vals: &[i64] = full_out.as_deref().unwrap_or(&step_buf);
         stats.batches += 1;
@@ -758,7 +826,7 @@ fn run_serial(
         stats.delta_hits = h1.saturating_sub(h0);
         stats.delta_misses = m1.saturating_sub(m0);
     }
-    ExploreReport { visited, stop, depth_reached, halting_configs, tree, stats }
+    Ok(ExploreReport { visited, stop, depth_reached, halting_configs, tree, stats })
 }
 
 #[cfg(test)]
@@ -1078,6 +1146,73 @@ mod tests {
                 assert_eq!(rep.stats.store_mode, "compressed");
             }
         }
+    }
+
+    #[test]
+    fn pre_cancelled_token_stops_immediately_with_cancelled() {
+        let sys = crate::generators::paper_pi();
+        let token = crate::util::CancelToken::new();
+        token.cancel();
+        let rep =
+            Explorer::new(&sys, ExploreOptions::breadth_first().cancel(token)).run();
+        assert_eq!(rep.stop, StopReason::Cancelled);
+        assert_eq!(rep.visited.len(), 1, "only the root was interned");
+        assert_eq!(rep.stop.to_string(), "Cancelled. Stop.");
+    }
+
+    #[test]
+    fn expired_deadline_reports_deadline_exceeded() {
+        let sys = crate::generators::paper_pi();
+        let token = crate::util::CancelToken::with_deadline(Duration::ZERO);
+        let rep =
+            Explorer::new(&sys, ExploreOptions::breadth_first().cancel(token)).run();
+        assert_eq!(rep.stop, StopReason::DeadlineExceeded);
+        assert!(!rep.stop.is_complete());
+    }
+
+    #[test]
+    fn armed_but_quiet_token_is_byte_identical() {
+        // the zero-cost contract: a token that never fires must not
+        // change a single report byte, serial or pipelined
+        let sys = crate::generators::paper_pi();
+        let bare = Explorer::new(&sys, ExploreOptions::breadth_first().max_depth(5)).run();
+        for w in [1usize, 4] {
+            let token = crate::util::CancelToken::with_deadline(Duration::from_secs(3600));
+            let rep = Explorer::new(
+                &sys,
+                ExploreOptions::breadth_first().max_depth(5).workers(w).cancel(token),
+            )
+            .run();
+            assert_eq!(
+                rep.to_json("paper_pi").to_string_pretty(),
+                bare.to_json("paper_pi").to_string_pretty(),
+                "workers={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn try_run_surfaces_backend_errors_and_panics_as_results() {
+        use crate::compute::{FaultPlan, FaultyBackendFactory, HostBackendFactory};
+        let sys = crate::generators::paper_pi();
+        let m = build_matrix(&sys);
+        // error fault on the serial path → structured Err, not a panic
+        let inner: std::sync::Arc<dyn crate::compute::BackendFactory> =
+            std::sync::Arc::new(HostBackendFactory::new(m.clone()));
+        let f = std::sync::Arc::new(FaultyBackendFactory::new(
+            std::sync::Arc::clone(&inner),
+            FaultPlan::error_at(1),
+        ));
+        let err = Explorer::with_factory(&sys, ExploreOptions::breadth_first().max_depth(3), f)
+            .try_run()
+            .expect_err("injected error must surface");
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        // panic fault on the serial path → caught and structured
+        let f = std::sync::Arc::new(FaultyBackendFactory::new(inner, FaultPlan::panic_at(1)));
+        let err = Explorer::with_factory(&sys, ExploreOptions::breadth_first().max_depth(3), f)
+            .try_run()
+            .expect_err("injected panic must surface as Err");
+        assert!(err.to_string().contains("injected panic"), "{err}");
     }
 
     #[test]

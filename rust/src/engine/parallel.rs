@@ -49,7 +49,7 @@ use super::dedup::{ShardedVisitedStore, VisitedStore};
 use super::explorer::{level_slot, ExploreOptions, ExploreReport, ExploreStats, SearchOrder};
 use super::spiking::SpikingEnumeration;
 use super::stop::StopReason;
-use crate::compute::{BackendFactory, BackendPool, DeltaCache, SpikeBuf, StepBatch};
+use crate::compute::{BackendFactory, BackendPool, DeltaCache, PooledBackend, SpikeBuf, StepBatch};
 use crate::snp::SnpSystem;
 
 /// Rows per dispatched chunk when the caller didn't pin `batch_cap`.
@@ -77,9 +77,10 @@ struct WorkChunk {
 /// A chunk's surviving children, in row order, as **flat count rows**
 /// (`depths.len() × N` u64s) — the channel ships flat vectors per chunk
 /// instead of one heap `ConfigVector` per child. `error` carries a
-/// backend failure to the main thread, which panics there (matching the
-/// serial path) — a worker-side panic would strand its seq and hang the
-/// fold.
+/// backend failure that survived the worker's quarantine-and-retry to
+/// the main thread, which folds it into a structured `Err` return — a
+/// worker-side panic would strand its seq and hang the fold, so panics
+/// are caught in the worker too.
 struct ChunkResult {
     seq: u64,
     counts: Vec<u64>,
@@ -137,12 +138,14 @@ impl ChunkBuf {
 /// and no computation tree is requested.
 pub(crate) fn run_pipelined(
     sys: &SnpSystem,
-    factory: &dyn BackendFactory,
+    factory: &Arc<dyn BackendFactory>,
     opts: &ExploreOptions,
     workers: usize,
     c0: ConfigVector,
-) -> ExploreReport {
-    let mut pool = BackendPool::build(factory, workers).expect("backend factory failed");
+) -> crate::error::Result<ExploreReport> {
+    // build_shared keeps the factory on the pool, so a worker failure
+    // can quarantine its instance and retry on a fresh build
+    let mut pool = BackendPool::build_shared(Arc::clone(factory), workers)?;
     if opts.delta_cache > 0 {
         // one run-scoped cache shared by every worker's backend
         pool.set_delta_cache(Arc::new(DeltaCache::new(
@@ -171,7 +174,7 @@ pub(crate) fn run_pipelined_on(
     pool: &BackendPool,
     opts: &ExploreOptions,
     c0: ConfigVector,
-) -> ExploreReport {
+) -> crate::error::Result<ExploreReport> {
     let workers = pool.size();
     let start = Instant::now();
     let n = sys.num_neurons();
@@ -235,6 +238,9 @@ pub(crate) fn run_pipelined_on(
     // set on early stop so workers discard queued chunks instead of
     // evaluating results nobody will fold
     let cancel = AtomicBool::new(false);
+    // a worker failure that survived quarantine-and-retry lands here and
+    // becomes the run's `Err` after the scope joins every thread
+    let mut run_error: Option<crate::Error> = None;
 
     std::thread::scope(|scope| {
         let (work_tx, work_rx) = mpsc::channel::<WorkChunk>();
@@ -282,17 +288,20 @@ pub(crate) fn run_pipelined_on(
                     };
                     let sw_step =
                         timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
-                    let full_out: std::result::Result<Option<Vec<i64>>, String> = if use_delta {
-                        backend
-                            .step_deltas_into(&batch, &mut delta_buf)
-                            .map(|()| None)
-                            .map_err(|e| format!("step backend failed: {e}"))
-                    } else {
-                        backend
-                            .step_batch(&batch)
-                            .map(Some)
-                            .map_err(|e| format!("step backend failed: {e}"))
-                    };
+                    let mut full_out =
+                        step_guarded(&mut backend, &batch, use_delta, &mut delta_buf);
+                    if let Err(first) = &full_out {
+                        // The instance that failed is suspect: quarantine it
+                        // (the pool swaps in a fresh factory build when it
+                        // knows how) and retry the chunk exactly once on a
+                        // new checkout. A transient fault costs one rebuild;
+                        // a persistent one fails the run cleanly below.
+                        let first = first.clone();
+                        backend.quarantine();
+                        backend = pool.acquire();
+                        full_out = step_guarded(&mut backend, &batch, use_delta, &mut delta_buf)
+                            .map_err(|second| format!("{second} (retry after: {first})"));
+                    }
                     let mut result = match full_out {
                         Err(e) => ChunkResult {
                             seq: chunk.seq,
@@ -327,8 +336,8 @@ pub(crate) fn run_pipelined_on(
                 }
             });
         }
-        // main thread keeps no sender: when every worker exits, recv fails
-        // loudly instead of deadlocking
+        // main thread keeps no sender: when every worker exits, recv
+        // surfaces the loss as a structured error instead of deadlocking
         drop(res_tx);
 
         let mut next_seq: u64 = 0;
@@ -343,10 +352,19 @@ pub(crate) fn run_pipelined_on(
         let mut parent_buf: Vec<u64> = Vec::with_capacity(n);
 
         'outer: loop {
+            // cancellation/deadline is polled once per loop turn — batch
+            // granularity, exactly like the serial path's check
+            if let Some(token) = &opts.cancel {
+                if let Some(kind) = token.check() {
+                    stop = kind.into();
+                    break 'outer;
+                }
+            }
             // ---- fold every result available, in canonical seq order ----
-            while let Ok(res) = res_rx.try_recv() {
-                if let Some(err) = &res.error {
-                    panic!("{err}"); // scope unwinds: channels drop, workers exit
+            while let Ok(mut res) = res_rx.try_recv() {
+                if let Some(err) = res.error.take() {
+                    run_error = Some(crate::Error::runtime(err));
+                    break 'outer; // channels drop, workers exit
                 }
                 ready.insert(res.seq, res);
             }
@@ -459,25 +477,31 @@ pub(crate) fn run_pipelined_on(
                     if chunk.rows() >= chunk_target {
                         let full =
                             std::mem::replace(&mut chunk, ChunkBuf::new(use_sparse, r));
-                        dispatch(
+                        if !dispatch(
                             full,
                             &mut next_seq,
                             &work_tx,
                             &mut ready,
                             &mut halting_by_seq,
                             &mut stats,
-                        );
+                        ) {
+                            run_error = Some(worker_loss_error(&res_rx));
+                            break 'outer;
+                        }
                     }
                 }
-                if !chunk.is_empty() {
-                    dispatch(
+                if !chunk.is_empty()
+                    && !dispatch(
                         chunk,
                         &mut next_seq,
                         &work_tx,
                         &mut ready,
                         &mut halting_by_seq,
                         &mut stats,
-                    );
+                    )
+                {
+                    run_error = Some(worker_loss_error(&res_rx));
+                    break 'outer;
                 }
                 if let Some(sw) = sw_enum {
                     let d = sw.stop(trace, "enumerate", &[("rows", round_rows as u64)]);
@@ -491,9 +515,13 @@ pub(crate) fn run_pipelined_on(
             }
             if outstanding > 0 {
                 // nothing buildable: block for the next worker result
-                let res = res_rx.recv().expect("evaluation workers gone");
-                if let Some(err) = &res.error {
-                    panic!("{err}");
+                let Ok(mut res) = res_rx.recv() else {
+                    run_error = Some(worker_loss_error(&res_rx));
+                    break 'outer;
+                };
+                if let Some(err) = res.error.take() {
+                    run_error = Some(crate::Error::runtime(err));
+                    break 'outer;
                 }
                 ready.insert(res.seq, res);
                 continue;
@@ -506,6 +534,9 @@ pub(crate) fn run_pipelined_on(
         drop(work_tx); // wakes blocked workers; scope joins them
     });
 
+    if let Some(e) = run_error {
+        return Err(e);
+    }
     if stop == StopReason::Exhausted && depth_bounded {
         stop = StopReason::MaxDepth;
     }
@@ -523,7 +554,48 @@ pub(crate) fn run_pipelined_on(
         stats.delta_hits = h1.saturating_sub(h0);
         stats.delta_misses = m1.saturating_sub(m0);
     }
-    ExploreReport { visited, stop, depth_reached, halting_configs, tree: None, stats }
+    Ok(ExploreReport { visited, stop, depth_reached, halting_configs, tree: None, stats })
+}
+
+/// One guarded evaluation attempt. Backend `Err`s and panics both come
+/// back as a plain message so the worker can quarantine the instance and
+/// retry the chunk — an unwinding worker would strand its seq and hang
+/// the fold. `delta_buf` is cleared and refilled by `step_deltas_into`,
+/// so a half-written buffer from a failed attempt cannot leak into the
+/// retry.
+fn step_guarded(
+    backend: &mut PooledBackend<'_>,
+    batch: &StepBatch<'_>,
+    use_delta: bool,
+    delta_buf: &mut Vec<i64>,
+) -> std::result::Result<Option<Vec<i64>>, String> {
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if use_delta {
+            backend.step_deltas_into(batch, delta_buf).map(|()| None)
+        } else {
+            backend.step_batch(batch).map(Some)
+        }
+    }));
+    match caught {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(format!("step backend failed: {e}")),
+        Err(p) => Err(format!(
+            "step backend panicked: {}",
+            super::explorer::panic_message(p.as_ref())
+        )),
+    }
+}
+
+/// A dead work/result channel means every worker exited; the real cause
+/// is usually an error result still sitting in the result channel, so
+/// prefer that over the generic message.
+fn worker_loss_error(res_rx: &mpsc::Receiver<ChunkResult>) -> crate::Error {
+    while let Ok(res) = res_rx.try_recv() {
+        if let Some(err) = res.error {
+            return crate::Error::runtime(err);
+        }
+    }
+    crate::Error::runtime("evaluation workers exited unexpectedly")
 }
 
 /// Convert one evaluated chunk into the flat fresh-children payload,
@@ -584,7 +656,9 @@ fn collect_fresh(
 }
 
 /// Assign the next seq to a finished chunk and hand it to the workers
-/// (or straight to the reorder buffer when it carries no rows).
+/// (or straight to the reorder buffer when it carries no rows). Returns
+/// `false` when the work channel is dead — every worker exited — so the
+/// caller can stop with a structured error instead of panicking.
 fn dispatch(
     chunk: ChunkBuf,
     next_seq: &mut u64,
@@ -592,7 +666,7 @@ fn dispatch(
     ready: &mut std::collections::HashMap<u64, ChunkResult>,
     halting_by_seq: &mut std::collections::HashMap<u64, Vec<ConfigVector>>,
     stats: &mut ExploreStats,
-) {
+) -> bool {
     let seq = *next_seq;
     *next_seq += 1;
     if !chunk.halting.is_empty() {
@@ -614,7 +688,7 @@ fn dispatch(
                 error: None,
             },
         );
-        return;
+        return true;
     }
     stats.steps += rows as u64;
     stats.batches += 1;
@@ -627,7 +701,7 @@ fn dispatch(
             depths: chunk.depths,
             parents: chunk.parents,
         })
-        .unwrap_or_else(|_| panic!("evaluation workers gone"));
+        .is_ok()
 }
 
 #[cfg(test)]
@@ -784,5 +858,96 @@ mod tests {
         )
         .run();
         assert_eq!(rep.stop, StopReason::Timeout);
+    }
+
+    fn faulty_factory(
+        sys: &crate::snp::SnpSystem,
+        plan: crate::compute::FaultPlan,
+    ) -> std::sync::Arc<crate::compute::FaultyBackendFactory> {
+        use crate::compute::{FaultyBackendFactory, HostBackendFactory};
+        let inner = std::sync::Arc::new(HostBackendFactory::new(crate::matrix::build_matrix(sys)));
+        std::sync::Arc::new(FaultyBackendFactory::new(inner, plan))
+    }
+
+    /// The tentpole contract: one injected worker fault is absorbed by
+    /// quarantine-and-retry and the run stays byte-identical to a clean
+    /// one.
+    #[test]
+    fn single_worker_fault_is_retried_and_stays_byte_identical() {
+        use crate::compute::FaultPlan;
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let baseline = Explorer::new(&sys, ExploreOptions::breadth_first().workers(4)).run();
+        let faulty = faulty_factory(&sys, FaultPlan::error_at(3));
+        let rep = Explorer::with_factory(
+            &sys,
+            ExploreOptions::breadth_first().workers(4),
+            faulty.clone(),
+        )
+        .try_run()
+        .expect("a single fault must be absorbed by the retry");
+        assert!(faulty.injected() >= 1, "the plan must actually have fired");
+        assert_eq!(rep.visited.in_order(), baseline.visited.in_order());
+        assert_eq!(rep.halting_configs, baseline.halting_configs);
+        assert_eq!(rep.stop, baseline.stop);
+        assert_eq!(rep.depth_reached, baseline.depth_reached);
+    }
+
+    /// A panicking worker chunk must be caught in the worker, not unwind
+    /// the scope: quarantined, retried, byte-identical.
+    #[test]
+    fn worker_panic_is_caught_quarantined_and_retried() {
+        use crate::compute::FaultPlan;
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let baseline = Explorer::new(&sys, ExploreOptions::breadth_first().workers(4)).run();
+        let faulty = faulty_factory(&sys, FaultPlan::panic_at(2));
+        let rep = Explorer::with_factory(
+            &sys,
+            ExploreOptions::breadth_first().workers(4),
+            faulty.clone(),
+        )
+        .try_run()
+        .expect("a single panic must be absorbed by the retry");
+        assert!(faulty.injected() >= 1);
+        assert_eq!(rep.visited.in_order(), baseline.visited.in_order());
+        assert_eq!(rep.halting_configs, baseline.halting_configs);
+    }
+
+    /// A fault that also kills the retry fails the run with a structured
+    /// error naming both attempts — never a hang or an abort.
+    #[test]
+    fn repeated_worker_fault_fails_with_a_structured_error() {
+        use crate::compute::FaultPlan;
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        // the window is effectively unbounded: concurrent workers share
+        // the call counter, so a small window could let the retry slip
+        // past it and succeed — here every call from 2 on faults
+        let faulty = faulty_factory(&sys, FaultPlan::error_at(2).repeated(u64::MAX / 2));
+        let err = Explorer::with_factory(&sys, ExploreOptions::breadth_first().workers(4), faulty)
+            .try_run()
+            .expect_err("both attempts fault: the run must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("injected fault"), "got: {msg}");
+        assert!(msg.contains("retry after"), "the error names the first attempt: {msg}");
+    }
+
+    #[test]
+    fn cancel_and_deadline_stop_parallel_runs() {
+        use crate::util::CancelToken;
+        let sys = crate::generators::paper_pi();
+        let token = CancelToken::new();
+        token.cancel();
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().workers(4).cancel(token),
+        )
+        .run();
+        assert_eq!(rep.stop, StopReason::Cancelled);
+        let expired = CancelToken::with_deadline(std::time::Duration::from_millis(0));
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().workers(4).cancel(expired),
+        )
+        .run();
+        assert_eq!(rep.stop, StopReason::DeadlineExceeded);
     }
 }

@@ -23,6 +23,12 @@ pub enum StopReason {
     MaxConfigs,
     /// Wall-clock budget hit.
     Timeout,
+    /// A [`CancelToken`](crate::util::CancelToken) deadline expired
+    /// before the run finished.
+    DeadlineExceeded,
+    /// A [`CancelToken`](crate::util::CancelToken) was cancelled
+    /// (client gone, shutdown drain, explicit request).
+    Cancelled,
 }
 
 impl StopReason {
@@ -30,6 +36,15 @@ impl StopReason {
     /// (either paper criterion), rather than a resource bound?
     pub fn is_complete(&self) -> bool {
         matches!(self, StopReason::Exhausted | StopReason::ZeroConfig)
+    }
+}
+
+impl From<crate::util::CancelKind> for StopReason {
+    fn from(k: crate::util::CancelKind) -> StopReason {
+        match k {
+            crate::util::CancelKind::Cancelled => StopReason::Cancelled,
+            crate::util::CancelKind::DeadlineExceeded => StopReason::DeadlineExceeded,
+        }
     }
 }
 
@@ -43,6 +58,8 @@ impl fmt::Display for StopReason {
             StopReason::MaxDepth => write!(f, "Depth bound reached. Stop."),
             StopReason::MaxConfigs => write!(f, "Configuration budget reached. Stop."),
             StopReason::Timeout => write!(f, "Time budget reached. Stop."),
+            StopReason::DeadlineExceeded => write!(f, "Deadline exceeded. Stop."),
+            StopReason::Cancelled => write!(f, "Cancelled. Stop."),
         }
     }
 }
@@ -67,5 +84,7 @@ mod tests {
         assert!(!StopReason::MaxDepth.is_complete());
         assert!(!StopReason::MaxConfigs.is_complete());
         assert!(!StopReason::Timeout.is_complete());
+        assert!(!StopReason::DeadlineExceeded.is_complete());
+        assert!(!StopReason::Cancelled.is_complete());
     }
 }

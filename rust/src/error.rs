@@ -30,6 +30,15 @@ pub enum Error {
     Coordinator(String),
     /// Feature requested at runtime that this build does not support.
     Unsupported(String),
+    /// A wall-clock deadline expired before the work finished
+    /// (serve maps this to HTTP 504).
+    DeadlineExceeded(String),
+    /// The work was cancelled before it finished (client gone, shutdown
+    /// drain, explicit token).
+    Cancelled(String),
+    /// Admission control shed the request: no free exploration slot /
+    /// queue full (serve maps this to HTTP 503 + `Retry-After`).
+    Overloaded(String),
 }
 
 impl Error {
@@ -57,6 +66,18 @@ impl Error {
     pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
         Error::Io { path: path.into(), source }
     }
+    /// Deadline expiry.
+    pub fn deadline_exceeded(msg: impl Into<String>) -> Self {
+        Error::DeadlineExceeded(msg.into())
+    }
+    /// Cooperative cancellation.
+    pub fn cancelled(msg: impl Into<String>) -> Self {
+        Error::Cancelled(msg.into())
+    }
+    /// Load shed by admission control.
+    pub fn overloaded(msg: impl Into<String>) -> Self {
+        Error::Overloaded(msg.into())
+    }
 }
 
 impl fmt::Display for Error {
@@ -77,6 +98,9 @@ impl fmt::Display for Error {
             Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
             Error::Coordinator(m) => write!(f, "coordinator: {m}"),
             Error::Unsupported(m) => write!(f, "unsupported: {m}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
         }
     }
 }
@@ -102,6 +126,12 @@ mod tests {
         assert!(e.to_string().contains("expected (2,3)"));
         let e = Error::parse("paper r file", 4, "dangling '$'");
         assert!(e.to_string().contains("line 4"));
+        let e = Error::deadline_exceeded("run paper_pi after 250ms");
+        assert!(e.to_string().starts_with("deadline exceeded:"));
+        let e = Error::cancelled("shutdown drain");
+        assert!(e.to_string().starts_with("cancelled:"));
+        let e = Error::overloaded("0 of 2 slots free");
+        assert!(e.to_string().starts_with("overloaded:"));
     }
 
     #[test]

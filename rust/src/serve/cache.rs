@@ -84,10 +84,28 @@ struct Entry {
     last_used: u64,
 }
 
+/// How a flight failed: an ordinary computation error, or the daemon
+/// draining out from under the waiters. Kept as owned strings because
+/// one failure fans out to every waiter ([`Error`] is not `Clone`).
+#[derive(Clone)]
+enum FlightError {
+    Runtime(String),
+    Cancelled(String),
+}
+
+impl FlightError {
+    fn to_error(&self) -> Error {
+        match self {
+            FlightError::Runtime(m) => Error::runtime(m.clone()),
+            FlightError::Cancelled(m) => Error::cancelled(m.clone()),
+        }
+    }
+}
+
 /// An in-flight computation other requests can wait on.
 struct Flight {
     /// `None` while computing; `Some(Ok)` / `Some(Err)` once resolved.
-    result: Mutex<Option<std::result::Result<Arc<String>, String>>>,
+    result: Mutex<Option<std::result::Result<Arc<String>, FlightError>>>,
     done: Condvar,
 }
 
@@ -172,7 +190,7 @@ impl ReportCache {
             }
             return match slot.as_ref().unwrap() {
                 Ok(v) => Ok((Arc::clone(v), CacheOutcome::Coalesced)),
-                Err(msg) => Err(Error::runtime(msg.clone())),
+                Err(e) => Err(e.to_error()),
             };
         }
 
@@ -214,14 +232,39 @@ impl ReportCache {
             inner.inflight.remove(key).expect("flight registered above")
         };
         {
+            // a drain may have resolved the flight already; overwriting is
+            // harmless (its waiters were woken and are gone)
             let mut slot = flight.result.lock().unwrap();
             *slot = Some(match &outcome {
                 Ok(v) => Ok(Arc::clone(v)),
-                Err(e) => Err(e.to_string()),
+                Err(e) => Err(FlightError::Runtime(e.to_string())),
             });
             flight.done.notify_all();
         }
         outcome.map(|v| (v, CacheOutcome::Miss))
+    }
+
+    /// Fail every waiter currently blocked on an in-flight computation
+    /// with a structured [`Error::Cancelled`](Error::Cancelled) — the
+    /// graceful-shutdown drain must never leave a handler hung on a
+    /// condvar. The flight entries themselves stay registered: the
+    /// threads actually computing finish normally and publish through
+    /// the usual path (their result just has no audience left), so the
+    /// `inflight` bookkeeping is never pulled out from under them.
+    pub fn drain(&self) {
+        let flights: Vec<Arc<Flight>> = {
+            let inner = self.inner.lock().unwrap();
+            inner.inflight.values().map(Arc::clone).collect()
+        };
+        for flight in flights {
+            let mut slot = flight.result.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(Err(FlightError::Cancelled(
+                    "daemon is draining; computation abandoned".to_string(),
+                )));
+                flight.done.notify_all();
+            }
+        }
     }
 
     /// Append the cache counters to a Prometheus text exposition. These
@@ -363,6 +406,64 @@ mod tests {
         assert!(out.contains("snapse_report_cache_misses_total 1\n"));
         assert!(out.contains("snapse_report_cache_entries 1\n"));
         assert!(out.contains("snapse_report_cache_capacity 4\n"));
+    }
+
+    #[test]
+    fn drain_fails_waiters_without_breaking_the_computer() {
+        let cache = Arc::new(ReportCache::new(8));
+        let k = key("slow", None);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        std::thread::scope(|scope| {
+            // the computing thread blocks on the gate until after drain
+            let computer = {
+                let cache = Arc::clone(&cache);
+                let k = k.clone();
+                let gate = Arc::clone(&gate);
+                scope.spawn(move || {
+                    cache.get_or_compute(&k, || {
+                        let (lock, cv) = &*gate;
+                        let mut open = lock.lock().unwrap();
+                        while !*open {
+                            open = cv.wait(open).unwrap();
+                        }
+                        Ok("late but fine".to_string())
+                    })
+                })
+            };
+            // a waiter coalesces onto the flight
+            let waiter = {
+                let cache = Arc::clone(&cache);
+                let k = k.clone();
+                scope.spawn(move || {
+                    // give the computer time to register the flight
+                    for _ in 0..200 {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                        if cache.stats.misses.load(Ordering::Relaxed) == 1 {
+                            break;
+                        }
+                    }
+                    cache.get_or_compute(&k, || unreachable!("flight is registered"))
+                })
+            };
+            // let the waiter park, then drain
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            cache.drain();
+            let err = waiter.join().unwrap().expect_err("drained waiter fails");
+            assert!(
+                matches!(err, Error::Cancelled(_)),
+                "structured cancellation, got: {err}"
+            );
+            // release the computer: it publishes normally
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+            let (v, o) = computer.join().unwrap().unwrap();
+            assert_eq!(o, CacheOutcome::Miss);
+            assert_eq!(v.as_str(), "late but fine");
+        });
+        // and the entry landed in the cache despite the drain
+        let (_, o) = cache.get_or_compute(&k, || unreachable!()).unwrap();
+        assert_eq!(o, CacheOutcome::Hit);
     }
 
     #[test]

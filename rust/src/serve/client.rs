@@ -1,9 +1,20 @@
 //! Minimal blocking HTTP client for the daemon — used by `snapse query`,
 //! the e2e tests, the serve bench, and the CI smoke job, so the daemon is
 //! exercisable without curl.
+//!
+//! Robustness: connections are established with a bounded
+//! [`CONNECT_TIMEOUT`] (a black-holed address fails in seconds, not at
+//! the kernel's whim), and **idempotent** requests — the `GET` helpers —
+//! take one jittered retry on transport failure, which rides out a
+//! daemon restart or a shed accept queue. `POST` queries are retried
+//! only when the caller opts in ([`post_with_retry`]): the daemon's
+//! query endpoints are semantically idempotent (content-addressed
+//! cache), but the conservative default never re-sends a body the
+//! caller didn't ask to re-send. `snapse query --no-retry` disables
+//! retries entirely.
 
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::error::{Error, Result};
@@ -11,11 +22,35 @@ use crate::error::{Error, Result};
 /// Per-connection I/O timeout. Generous: a cold exploration on a loaded
 /// machine can take a while before the response starts.
 const IO_TIMEOUT: Duration = Duration::from_secs(120);
+/// Bound on connection establishment (resolution + handshake per
+/// candidate address).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Base pause before the single retry; the actual pause is jittered to
+/// 1–2× this so a herd of retrying clients decorrelates.
+const RETRY_BASE: Duration = Duration::from_millis(50);
+
+/// Connect with a bounded timeout, trying each resolved address.
+fn connect(addr: &str) -> Result<TcpStream> {
+    let addrs = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::runtime(format!("resolve {addr} failed: {e}")))?;
+    let mut last: Option<std::io::Error> = None;
+    for a in addrs {
+        match TcpStream::connect_timeout(&a, CONNECT_TIMEOUT) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => Error::runtime(format!("connect to {addr} failed: {e}")),
+        None => Error::runtime(format!("{addr} resolved to no addresses")),
+    })
+}
 
 /// One `Connection: close` HTTP exchange. Returns `(status, body)`.
+/// Transport failures surface as errors; no retry happens at this layer.
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
-    let mut stream = TcpStream::connect(addr)
-        .map_err(|e| Error::runtime(format!("connect to {addr} failed: {e}")))?;
+    let mut stream = connect(addr)?;
     stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
     stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
 
@@ -36,14 +71,68 @@ pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Resu
     parse_response(&raw)
 }
 
-/// `GET` helper.
-pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
-    request(addr, "GET", path, None)
+/// `request` with one jittered retry on transport failure. HTTP error
+/// statuses (4xx/5xx) are *responses*, not transport failures — they are
+/// returned as-is, never retried (a 503 shed tells the caller to back
+/// off on its own schedule).
+fn request_retrying(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    match request(addr, method, path, body) {
+        Ok(ok) => Ok(ok),
+        Err(first) => {
+            std::thread::sleep(retry_pause(addr, path));
+            request(addr, method, path, body)
+                .map_err(|second| Error::runtime(format!("{second} (retry after: {first})")))
+        }
+    }
 }
 
-/// `POST` helper with a JSON body.
+/// 1–2× `RETRY_BASE`, jittered deterministically from the target and a
+/// wall-clock sample so concurrent clients spread out.
+fn retry_pause(addr: &str, path: &str) -> Duration {
+    let clock = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0, |d| d.subsec_nanos() as u64);
+    let mut seed = clock ^ 0x51_7c_c1_b7_27_22_0a_95;
+    for b in addr.bytes().chain(path.bytes()) {
+        seed = seed.rotate_left(7) ^ u64::from(b);
+    }
+    RETRY_BASE + Duration::from_millis(crate::util::Rng::new(seed).below(RETRY_BASE.as_millis() as u64 + 1))
+}
+
+/// `GET` helper — idempotent, so transport failures take one retry.
+pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
+    get_with_retry(addr, path, true)
+}
+
+/// `GET` with the retry policy explicit (`retry: false` = exactly one
+/// attempt — `snapse query --no-retry`).
+pub fn get_with_retry(addr: &str, path: &str, retry: bool) -> Result<(u16, String)> {
+    if retry {
+        request_retrying(addr, "GET", path, None)
+    } else {
+        request(addr, "GET", path, None)
+    }
+}
+
+/// `POST` helper with a JSON body. No retry by default.
 pub fn post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
     request(addr, "POST", path, Some(body))
+}
+
+/// `POST` with the retry policy explicit. The daemon's query endpoints
+/// are idempotent (content-addressed cache), so `snapse query` opts in
+/// unless `--no-retry` is given.
+pub fn post_with_retry(addr: &str, path: &str, body: &str, retry: bool) -> Result<(u16, String)> {
+    if retry {
+        request_retrying(addr, "POST", path, Some(body))
+    } else {
+        request(addr, "POST", path, Some(body))
+    }
 }
 
 fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
@@ -73,5 +162,45 @@ mod tests {
         assert_eq!(parse_response(raw).unwrap().0, 404);
         assert!(parse_response(b"no separator").is_err());
         assert!(parse_response(b"HTTP/1.1 abc\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn retry_pause_is_bounded_and_jittered() {
+        let p = retry_pause("127.0.0.1:7878", "/healthz");
+        assert!(p >= RETRY_BASE && p <= RETRY_BASE * 2, "{p:?}");
+    }
+
+    #[test]
+    fn dead_endpoint_fails_fast_with_and_without_retry() {
+        // a bound-then-dropped listener guarantees a refused port
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let addr = format!("127.0.0.1:{port}");
+        let start = std::time::Instant::now();
+        let err = get_with_retry(&addr, "/healthz", false).unwrap_err();
+        assert!(err.to_string().contains("connect"), "{err}");
+        let err = get(&addr, "/healthz").unwrap_err();
+        assert!(err.to_string().contains("retry after"), "retried error names both: {err}");
+        // refused connections fail immediately; the whole dance (two
+        // attempts + jittered pause) stays well under the I/O timeout
+        assert!(start.elapsed() < Duration::from_secs(10), "{:?}", start.elapsed());
+    }
+
+    #[test]
+    fn retrying_get_works_against_a_live_listener() {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            if let Ok((mut s, _)) = l.accept() {
+                let mut buf = [0u8; 1024];
+                let _ = s.read(&mut buf);
+                let _ = s.write_all(b"HTTP/1.1 200 OK\r\ncontent-length: 2\r\n\r\nok");
+            }
+        });
+        let (status, body) = get(&addr, "/healthz").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok"));
+        server.join().unwrap();
     }
 }

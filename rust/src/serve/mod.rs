@@ -58,11 +58,15 @@ pub struct ServeConfig {
     /// default: a serving daemon gets its parallelism from concurrent
     /// requests, and over-subscribing cores helps no one.
     pub explore_workers: usize,
-    /// Connection handler threads (also the bound on concurrent
-    /// explorations).
+    /// Connection handler threads (the bound on concurrently *served*
+    /// requests; concurrent explorations are bounded by `explore_slots`).
     pub handler_threads: usize,
     /// Report cache capacity (entries).
     pub cache_capacity: usize,
+    /// Concurrent exploration slots: requests that would compute beyond
+    /// this many in flight shed with 503 + `Retry-After` instead of
+    /// queueing (cache hits and coalesced waiters never consume one).
+    pub explore_slots: usize,
 }
 
 impl Default for ServeConfig {
@@ -72,6 +76,7 @@ impl Default for ServeConfig {
             explore_workers: 1,
             handler_threads: 8,
             cache_capacity: 256,
+            explore_slots: router::DEFAULT_EXPLORE_SLOTS,
         }
     }
 }
@@ -92,7 +97,10 @@ impl Server {
             TcpListener::bind(&cfg.addr).map_err(|e| Error::io(cfg.addr.clone(), e))?;
         Ok(Server {
             listener,
-            state: Arc::new(ServeState::new(cfg.explore_workers, cfg.cache_capacity)),
+            state: Arc::new(
+                ServeState::new(cfg.explore_workers, cfg.cache_capacity)
+                    .with_slots(cfg.explore_slots),
+            ),
             handler_threads: cfg.handler_threads.max(1),
         })
     }

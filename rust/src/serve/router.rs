@@ -17,14 +17,14 @@
 //! is a 4xx response, never a dead daemon.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::cache::{CacheKey, CacheOutcome, ReportCache};
 use super::http::{Request, Response};
 use crate::compute::{BackendPool, DeltaCache, HostBackendFactory, DEFAULT_DELTA_CACHE};
-use crate::engine::{ExploreOptions, Explorer};
+use crate::engine::{ExploreOptions, Explorer, StopReason};
 use crate::error::{Error, Result};
 use crate::matrix::{build_matrix, TransitionMatrix};
 use crate::snp::SnpSystem;
@@ -39,6 +39,60 @@ pub const MAX_RUN_BUDGET: usize = 1_000_000;
 /// Hard ceiling on `generated` distance bounds (the product-space sweep
 /// grows with the bound).
 pub const MAX_GENERATED_BOUND: u64 = 10_000;
+/// Default number of concurrent exploration slots (`snapse serve
+/// --slots`). Cache hits and coalesced waiters never consume a slot —
+/// only requests that actually compute.
+pub const DEFAULT_EXPLORE_SLOTS: usize = 4;
+
+/// Admission control: a fixed budget of in-flight exploration slots.
+/// A request that would *compute* claims one for the duration of the
+/// computation; when all slots are held the request sheds with
+/// [`Error::Overloaded`] (HTTP 503 + `Retry-After`) instead of queueing
+/// behind work it might never reach.
+pub struct ExploreSlots {
+    max: usize,
+    used: AtomicUsize,
+}
+
+impl ExploreSlots {
+    fn new(max: usize) -> Self {
+        ExploreSlots { max, used: AtomicUsize::new(0) }
+    }
+
+    /// Configured slot count.
+    pub fn capacity(&self) -> usize {
+        self.max
+    }
+
+    /// Slots currently held by running computations.
+    pub fn in_use(&self) -> usize {
+        self.used.load(Ordering::Relaxed).min(self.max)
+    }
+
+    /// Claim a slot, or `None` when the daemon is saturated (shed).
+    pub fn try_acquire(&self) -> Option<SlotGuard<'_>> {
+        let mut cur = self.used.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max {
+                return None;
+            }
+            match self.used.compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return Some(SlotGuard(self)),
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// RAII slot claim: released when the computation finishes, succeed or
+/// fail.
+pub struct SlotGuard<'a>(&'a ExploreSlots);
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        self.0.used.fetch_sub(1, Ordering::AcqRel);
+    }
+}
 
 /// Shared daemon state: the report cache, the per-system backend pools,
 /// and the lifecycle flags.
@@ -69,6 +123,9 @@ pub struct ServeState {
     /// Never attached to exploration runs (run traces stay run-private),
     /// so cached report bytes are untouched by its presence.
     pub trace: Arc<crate::obs::Trace>,
+    /// In-flight exploration slots (admission control; see
+    /// [`ExploreSlots`]).
+    pub slots: ExploreSlots,
 }
 
 impl ServeState {
@@ -86,7 +143,26 @@ impl ServeState {
             gauges: Mutex::new(HashMap::new()),
             registry: crate::obs::Registry::new(),
             trace: Arc::new(crate::obs::Trace::new()),
+            slots: ExploreSlots::new(DEFAULT_EXPLORE_SLOTS),
         }
+    }
+
+    /// Override the exploration-slot budget (`snapse serve --slots`).
+    /// `0` is legal and sheds every computing request — useful for
+    /// drills and tests; cache hits still serve normally.
+    pub fn with_slots(mut self, slots: usize) -> Self {
+        self.slots = ExploreSlots::new(slots);
+        self
+    }
+
+    /// Claim an exploration slot or shed with a structured 503.
+    fn acquire_slot(&self) -> Result<SlotGuard<'_>> {
+        self.slots.try_acquire().ok_or_else(|| {
+            Error::overloaded(format!(
+                "all {} exploration slots in use; retry shortly",
+                self.slots.capacity()
+            ))
+        })
     }
 
     /// The shared backend pool for a system, created on first use. Pool
@@ -210,7 +286,18 @@ pub fn route(state: &ServeState, req: &Request) -> Response {
     };
     let resp = match result {
         Ok(resp) => resp,
-        Err(e) => error_response(&e),
+        Err(e) => {
+            // robustness counters: one family per structured failure mode
+            match &e {
+                Error::Overloaded(_) => state.registry.counter("snapse_shed_total").inc(),
+                Error::Cancelled(_) => state.registry.counter("snapse_cancelled_total").inc(),
+                Error::DeadlineExceeded(_) => {
+                    state.registry.counter("snapse_deadline_exceeded_total").inc();
+                }
+                _ => {}
+            }
+            error_response(&e)
+        }
     };
     // cache outcome rides on the envelope header; "-" for endpoints
     // that never touch the report cache
@@ -247,7 +334,10 @@ fn not_found(path: &str) -> Response {
     Response::json(404, body.to_string_compact())
 }
 
-/// Map an error onto a status + structured JSON body.
+/// Map an error onto a status + structured JSON body. Load shedding
+/// (`Overloaded` → 503) carries a `Retry-After` header so well-behaved
+/// clients back off instead of hammering; an exceeded deadline is a 504
+/// (the daemon is the gateway to the exploration that timed out).
 pub fn error_response(e: &Error) -> Response {
     let (status, kind) = match e {
         Error::Parse { .. } => (400, "parse"),
@@ -259,12 +349,19 @@ pub fn error_response(e: &Error) -> Response {
         Error::Runtime(_) => (500, "runtime"),
         Error::Artifact(_) => (500, "artifact"),
         Error::Coordinator(_) => (500, "coordinator"),
+        Error::DeadlineExceeded(_) => (504, "deadline_exceeded"),
+        Error::Cancelled(_) => (503, "cancelled"),
+        Error::Overloaded(_) => (503, "overloaded"),
     };
     let body = J::obj([(
         "error",
         J::obj([("kind", J::str(kind)), ("message", J::str(e.to_string()))]),
     )]);
-    Response::json(status, body.to_string_compact())
+    let resp = Response::json(status, body.to_string_compact());
+    if matches!(e, Error::Overloaded(_)) {
+        return resp.with_header("retry-after", "1");
+    }
+    resp
 }
 
 // -- request parsing -------------------------------------------------------
@@ -374,6 +471,12 @@ fn run_query(state: &ServeState, raw: &str) -> Result<Response> {
         },
     };
 
+    // `deadline_ms` bounds the wall clock of an actual computation; it is
+    // deliberately NOT part of the cache key — a run that finishes inside
+    // its deadline is byte-identical to one that ran without, and a run
+    // that doesn't is an error, never cached
+    let deadline_ms = opt_u64(&body, "deadline_ms")?;
+
     let matrix = build_matrix(&sys);
     let hash = super::hash::system_hash_with_matrix(&sys, &matrix);
     let key = CacheKey {
@@ -384,6 +487,9 @@ fn run_query(state: &ServeState, raw: &str) -> Result<Response> {
         mode: mode.to_string(),
     };
     let (report, outcome) = state.cache.get_or_compute(&key, || {
+        // admission control only on actual computes: hits and coalesced
+        // waiters cost nothing and must never shed
+        let _slot = state.acquire_slot()?;
         // pool lookup only on actual computes — a cache hit must not
         // rebuild an LRU-evicted pool it will never use
         let pool = state.pool_for(&hash, &matrix);
@@ -397,7 +503,23 @@ fn run_query(state: &ServeState, raw: &str) -> Result<Response> {
         if let Some(c) = configs {
             opts = opts.max_configs(c);
         }
-        let rep = Explorer::with_pool_and_matrix(&sys, opts, pool, matrix).run();
+        if let Some(ms) = deadline_ms {
+            opts = opts
+                .cancel(crate::util::CancelToken::with_deadline(
+                    std::time::Duration::from_millis(ms),
+                ));
+        }
+        let rep = Explorer::with_pool_and_matrix(&sys, opts, pool, matrix).try_run()?;
+        match rep.stop {
+            StopReason::DeadlineExceeded => {
+                return Err(Error::deadline_exceeded(format!(
+                    "run exceeded its {} ms deadline",
+                    deadline_ms.unwrap_or(0)
+                )));
+            }
+            StopReason::Cancelled => return Err(Error::cancelled("run cancelled")),
+            _ => {}
+        }
         state.record_run_gauge(&hash, &rep);
         Ok(rep.to_json(&sys.name).to_string_compact())
     })?;
@@ -425,6 +547,7 @@ fn generated_query(state: &ServeState, raw: &str) -> Result<Response> {
     // bounds construction to once per cache entry). MAX_RUN_BUDGET caps
     // the state space so a pathological system cannot pin a handler.
     let (report, outcome) = state.cache.get_or_compute(&key, || {
+        let _slot = state.acquire_slot()?;
         let (set, complete) =
             crate::engine::generated_set_budgeted(&sys, max, workers, MAX_RUN_BUDGET);
         let missing: Vec<u64> = (1..=max).filter(|n| !set.contains(n)).collect();
@@ -456,6 +579,7 @@ fn analyze_query(state: &ServeState, raw: &str) -> Result<Response> {
         mode: format!("bound={bound}"),
     };
     let (report, outcome) = state.cache.get_or_compute(&key, || {
+        let _slot = state.acquire_slot()?;
         let pool = state.pool_for(&hash, &matrix);
         let rep = crate::engine::analyze_with_pool(&sys, budget, bound, pool, matrix);
         let doc = J::obj([
@@ -514,6 +638,16 @@ fn health(state: &ServeState) -> Response {
     // the daemon is alive and answering, so liveness probes keep
     // passing while dashboards surface the pressure
     let mut reasons: Vec<J> = Vec::new();
+    if state.shutdown.load(Ordering::SeqCst) {
+        reasons.push(J::str("draining: shutdown requested"));
+    }
+    let in_use = state.slots.in_use();
+    if in_use >= state.slots.capacity() {
+        reasons.push(J::str(format!(
+            "exploration slots saturated ({in_use}/{})",
+            state.slots.capacity()
+        )));
+    }
     for (hash, pool) in state.pool_snapshot() {
         if pool.available() == 0 {
             reasons.push(J::str(format!("pool {hash} exhausted ({} backends)", pool.size())));
@@ -541,6 +675,13 @@ fn health(state: &ServeState) -> Response {
 /// hash, then standalone daemon gauges.
 fn metrics(state: &ServeState) -> Response {
     use std::fmt::Write as _;
+    // touch the robustness counter families so they render (at 0) from
+    // the very first scrape, before any shed/cancel/deadline event
+    for family in
+        ["snapse_shed_total", "snapse_cancelled_total", "snapse_deadline_exceeded_total"]
+    {
+        state.registry.counter(family);
+    }
     let mut out = state.registry.render_prometheus();
     state.cache.write_prometheus(&mut out);
     // one `# TYPE` block per delta-cache family, one labelled sample per
@@ -566,6 +707,16 @@ fn metrics(state: &ServeState) -> Response {
     let _ = writeln!(out, "snapse_pools {}", state.pool_count());
     let _ = writeln!(out, "# TYPE snapse_uptime_seconds gauge");
     let _ = writeln!(out, "snapse_uptime_seconds {}", state.started.elapsed().as_secs());
+    let _ = writeln!(out, "# TYPE snapse_explore_slots gauge");
+    let _ = writeln!(out, "snapse_explore_slots {}", state.slots.capacity());
+    let _ = writeln!(out, "# TYPE snapse_explore_slots_in_use gauge");
+    let _ = writeln!(out, "snapse_explore_slots_in_use {}", state.slots.in_use());
+    let _ = writeln!(out, "# TYPE snapse_draining gauge");
+    let _ = writeln!(
+        out,
+        "snapse_draining {}",
+        u64::from(state.shutdown.load(Ordering::SeqCst))
+    );
     Response::json(200, out).with_header("content-type", "text/plain; version=0.0.4")
 }
 
@@ -588,6 +739,11 @@ fn stats(state: &ServeState) -> Response {
 
 fn shutdown(state: &ServeState) -> Response {
     state.shutdown.store(true, Ordering::SeqCst);
+    // graceful drain: handlers mid-response finish on their own; waiters
+    // parked on someone else's single-flight computation are failed now
+    // with a structured error instead of hanging on a condvar the accept
+    // loop will never service again
+    state.cache.drain();
     Response::json(200, r#"{"status":"shutting-down"}"#.to_string())
 }
 
@@ -843,5 +999,113 @@ mod tests {
         let r = route(&state, &post("/v1/shutdown", ""));
         assert_eq!(r.status, 200);
         assert!(state.shutdown.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn saturated_slots_shed_with_503_and_retry_after() {
+        let state = ServeState::new(1, 8).with_slots(1);
+        let held = state.slots.try_acquire().expect("one slot free");
+        let r = route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":3}"#));
+        assert_eq!(r.status, 503, "{}", r.body);
+        assert!(r.body.contains("\"kind\":\"overloaded\""), "{}", r.body);
+        assert!(
+            r.headers
+                .iter()
+                .any(|(n, v)| n.eq_ignore_ascii_case("retry-after") && !v.is_empty()),
+            "shed responses carry Retry-After: {:?}",
+            r.headers
+        );
+        // degraded while saturated, and the shed is counted
+        let h = route(&state, &get("/healthz"));
+        assert!(h.body.contains("exploration slots saturated"), "{}", h.body);
+        let m = route(&state, &get("/metrics"));
+        assert!(m.body.contains("snapse_shed_total 1"), "{}", m.body);
+        assert!(m.body.contains("snapse_explore_slots 1"), "{}", m.body);
+        assert!(m.body.contains("snapse_explore_slots_in_use 1"), "{}", m.body);
+        // release: the same query now computes
+        drop(held);
+        let r = route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":3}"#));
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert!(r.body.contains("\"cache\":\"miss\""), "{}", r.body);
+    }
+
+    #[test]
+    fn cache_hits_never_shed() {
+        let state = ServeState::new(1, 8).with_slots(1);
+        let body = r#"{"system":"paper_pi","depth":3}"#;
+        assert_eq!(route(&state, &post("/v1/run", body)).status, 200);
+        let held = state.slots.try_acquire().expect("slot free again");
+        let r = route(&state, &post("/v1/run", body));
+        assert_eq!(r.status, 200, "hit must bypass admission: {}", r.body);
+        assert!(r.body.contains("\"cache\":\"hit\""), "{}", r.body);
+        drop(held);
+    }
+
+    #[test]
+    fn zero_slots_shed_every_compute() {
+        let state = ServeState::new(1, 8).with_slots(0);
+        let r = route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":3}"#));
+        assert_eq!(r.status, 503, "{}", r.body);
+        let r = route(&state, &post("/v1/info", r#"{"system":"paper_pi"}"#));
+        assert_eq!(r.status, 200, "info is metadata-only and never computes an exploration");
+    }
+
+    #[test]
+    fn expired_deadline_returns_504_and_is_not_cached() {
+        let state = ServeState::new(1, 8);
+        let body = r#"{"system":"paper_pi","deadline_ms":0}"#;
+        let r = route(&state, &post("/v1/run", body));
+        assert_eq!(r.status, 504, "{}", r.body);
+        assert!(r.body.contains("\"kind\":\"deadline_exceeded\""), "{}", r.body);
+        assert!(r.body.contains("deadline"), "{}", r.body);
+        let m = route(&state, &get("/metrics"));
+        assert!(m.body.contains("snapse_deadline_exceeded_total 1"), "{}", m.body);
+        // the failed run was not cached: the same parameters without the
+        // deadline compute fresh and succeed
+        let r = route(&state, &post("/v1/run", r#"{"system":"paper_pi"}"#));
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert!(r.body.contains("\"cache\":\"miss\""), "{}", r.body);
+    }
+
+    #[test]
+    fn generous_deadline_yields_byte_identical_reports() {
+        let state = ServeState::new(1, 8);
+        let plain = route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":4}"#));
+        assert_eq!(plain.status, 200);
+        // a fresh state so the second run actually computes
+        let state2 = ServeState::new(1, 8);
+        let timed = route(
+            &state2,
+            &post("/v1/run", r#"{"system":"paper_pi","depth":4,"deadline_ms":3600000}"#),
+        );
+        assert_eq!(timed.status, 200, "{}", timed.body);
+        let tail = |b: &str| b[b.find("\"hash\"").unwrap()..].to_string();
+        assert_eq!(tail(&plain.body), tail(&timed.body), "armed deadline changes no bytes");
+    }
+
+    #[test]
+    fn metrics_exposes_robustness_families_from_first_scrape() {
+        let state = ServeState::new(1, 8);
+        let m = route(&state, &get("/metrics"));
+        for family in [
+            "snapse_shed_total 0",
+            "snapse_cancelled_total 0",
+            "snapse_deadline_exceeded_total 0",
+            "snapse_explore_slots",
+            "snapse_draining 0",
+        ] {
+            assert!(m.body.contains(family), "missing `{family}`:\n{}", m.body);
+        }
+    }
+
+    #[test]
+    fn shutdown_reports_draining_everywhere() {
+        let state = ServeState::new(1, 8);
+        route(&state, &post("/v1/shutdown", ""));
+        let h = route(&state, &get("/healthz"));
+        assert!(h.body.contains("\"status\":\"degraded\""), "{}", h.body);
+        assert!(h.body.contains("draining"), "{}", h.body);
+        let m = route(&state, &get("/metrics"));
+        assert!(m.body.contains("snapse_draining 1"), "{}", m.body);
     }
 }

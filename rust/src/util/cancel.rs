@@ -1,0 +1,162 @@
+//! Cooperative cancellation and deadlines.
+//!
+//! A [`CancelToken`] is a cheap, cloneable handle shared between a
+//! requester (CLI flag, serve handler, test) and a running exploration.
+//! Engines poll it at **batch granularity** — the same places the
+//! `time_budget` / `max_configs` checks already live — never per
+//! configuration, so an armed token costs one atomic load (plus one
+//! `Instant::now()` when a deadline is set) per batch and an absent
+//! token (`Option::None` in the engine options) costs nothing at all.
+//!
+//! Cancellation is *cooperative and observational*: the engine notices
+//! the token at its next check point, stops enqueueing work, folds what
+//! already completed, and reports a structured stop — it never tears
+//! down mid-batch, so partial state is dropped wholesale rather than
+//! half-applied.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a token fired: an explicit [`CancelToken::cancel`] call or an
+/// expired deadline. Explicit cancellation wins when both hold — the
+/// caller asked first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelKind {
+    /// [`CancelToken::cancel`] was called (client gone, shutdown drain…).
+    Cancelled,
+    /// The wall-clock deadline passed.
+    DeadlineExceeded,
+}
+
+#[derive(Debug)]
+struct Inner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+/// Shared cancellation + deadline handle (see module docs).
+#[derive(Debug, Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+impl CancelToken {
+    /// A token with no deadline; fires only on [`CancelToken::cancel`].
+    pub fn new() -> CancelToken {
+        CancelToken { inner: Arc::new(Inner { cancelled: AtomicBool::new(false), deadline: None }) }
+    }
+
+    /// A token that fires once `timeout` has elapsed from now (and on
+    /// explicit cancellation before that).
+    pub fn with_deadline(timeout: Duration) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: Some(Instant::now() + timeout),
+            }),
+        }
+    }
+
+    /// Request cancellation. Idempotent; wakes nothing by itself — the
+    /// running engine observes it at its next batch-granular check.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Release);
+    }
+
+    /// Has [`CancelToken::cancel`] been called? (Deadline expiry does
+    /// *not* flip this — use [`CancelToken::check`].)
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Poll the token: `None` means keep going, `Some(kind)` says why to
+    /// stop. One atomic load, plus one clock read iff a deadline is set.
+    pub fn check(&self) -> Option<CancelKind> {
+        if self.inner.cancelled.load(Ordering::Acquire) {
+            return Some(CancelKind::Cancelled);
+        }
+        match self.inner.deadline {
+            Some(d) if Instant::now() >= d => Some(CancelKind::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    /// Time left before the deadline fires; `None` when no deadline is
+    /// set, `Some(ZERO)` once it has passed.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.inner.deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+}
+
+/// The structured error a `Result`-returning layer (coordinator, serve
+/// router) reports when a token fires; the `Explorer` engines report the
+/// matching [`StopReason`](crate::engine::StopReason) instead.
+impl From<CancelKind> for crate::Error {
+    fn from(kind: CancelKind) -> crate::Error {
+        match kind {
+            CancelKind::Cancelled => crate::Error::cancelled("run cancelled by caller"),
+            CancelKind::DeadlineExceeded => {
+                crate::Error::deadline_exceeded("run exceeded its deadline")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_is_quiet() {
+        let t = CancelToken::new();
+        assert_eq!(t.check(), None);
+        assert!(!t.is_cancelled());
+        assert_eq!(t.remaining(), None);
+    }
+
+    #[test]
+    fn cancel_fires_and_is_idempotent() {
+        let t = CancelToken::new();
+        t.cancel();
+        t.cancel();
+        assert_eq!(t.check(), Some(CancelKind::Cancelled));
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        u.cancel();
+        assert_eq!(t.check(), Some(CancelKind::Cancelled));
+    }
+
+    #[test]
+    fn elapsed_deadline_fires() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        assert_eq!(t.check(), Some(CancelKind::DeadlineExceeded));
+        assert_eq!(t.remaining(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn distant_deadline_is_quiet_and_counts_down() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert_eq!(t.check(), None);
+        let left = t.remaining().expect("deadline set");
+        assert!(left > Duration::from_secs(3500));
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_expired_deadline() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        t.cancel();
+        assert_eq!(t.check(), Some(CancelKind::Cancelled));
+    }
+}

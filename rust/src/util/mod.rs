@@ -5,11 +5,13 @@
 //! implementations.
 
 pub mod bitvec;
+pub mod cancel;
 pub mod fmt;
 pub mod json;
 pub mod rng;
 
 pub use bitvec::BitVec;
+pub use cancel::{CancelKind, CancelToken};
 pub use json::JsonValue;
 pub use rng::Rng;
 

@@ -1,0 +1,225 @@
+//! Chaos suite: deterministic fault injection (`compute::faulty`) across
+//! the engine matrix {error, panic, latency} × {serial, 4 workers} ×
+//! {paper_pi, rule_heavy:6:12:2}, plus the daemon's shed/deadline wire
+//! contract.
+//!
+//! The contracts under test:
+//! - a **single** injected fault in the pipelined engine is survived by
+//!   quarantine-and-retry and the report stays **byte-identical** to a
+//!   fault-free run (the paper's reproducibility contract holds under
+//!   failure);
+//! - an **unretryable** fault (serial path, or a fault window that also
+//!   kills the retry) fails in bounded time with a structured error that
+//!   names the injected fault — never a hang, never an abort;
+//! - injected **latency** is only slow, never wrong: byte-identical
+//!   output on both engine paths;
+//! - over the wire, a saturated daemon sheds with 503/`overloaded` and
+//!   an expired deadline answers 504/`deadline_exceeded` — structured
+//!   bodies, daemon keeps serving.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use snapse::compute::{BackendFactory, FaultPlan, FaultyBackendFactory, HostBackendFactory};
+use snapse::engine::{ExploreOptions, Explorer, StopReason};
+use snapse::matrix::build_matrix;
+use snapse::snp::SnpSystem;
+
+/// Nothing in this suite is allowed to run away: every failure mode must
+/// resolve (Ok or structured Err) well inside this bound.
+const BOUNDED: Duration = Duration::from_secs(60);
+
+fn systems() -> Vec<SnpSystem> {
+    vec![
+        snapse::generators::paper_pi(),
+        snapse::generators::from_spec("rule_heavy:6:12:2")
+            .expect("spec grammar")
+            .expect("builtin spec"),
+    ]
+}
+
+/// Bounded exploration: deep enough that faults at call 2 always fire,
+/// bounded enough that the whole matrix stays fast.
+fn opts(workers: usize) -> ExploreOptions {
+    ExploreOptions::breadth_first().max_depth(7).max_configs(4000).workers(workers)
+}
+
+fn faulty(sys: &SnpSystem, plan: FaultPlan) -> Arc<FaultyBackendFactory> {
+    let host: Arc<dyn BackendFactory> = Arc::new(HostBackendFactory::new(build_matrix(sys)));
+    Arc::new(FaultyBackendFactory::new(host, plan))
+}
+
+/// Fault-free reference bytes at the given worker count.
+fn clean_json(sys: &SnpSystem, workers: usize) -> String {
+    Explorer::new(sys, opts(workers)).run().to_json(&sys.name).to_string_compact()
+}
+
+#[test]
+fn retried_parallel_faults_keep_reports_byte_identical() {
+    for sys in systems() {
+        let reference = clean_json(&sys, 4);
+        for plan in [
+            FaultPlan::error_at(2),
+            FaultPlan::panic_at(2),
+            FaultPlan::latency_at(2, 40),
+        ] {
+            let start = Instant::now();
+            let label = format!("{plan:?} on {}", sys.name);
+            let factory = faulty(&sys, plan);
+            let report = Explorer::with_factory(&sys, opts(4), Arc::clone(&factory))
+                .try_run()
+                .unwrap_or_else(|e| panic!("{label}: single fault must be survived: {e}"));
+            assert!(factory.injected() >= 1, "{label}: the fault never fired");
+            assert_eq!(
+                report.to_json(&sys.name).to_string_compact(),
+                reference,
+                "{label}: retried run must be byte-identical to fault-free"
+            );
+            assert!(start.elapsed() < BOUNDED, "{label}: took {:?}", start.elapsed());
+        }
+    }
+}
+
+#[test]
+fn serial_latency_is_slow_but_never_wrong() {
+    for sys in systems() {
+        let reference = clean_json(&sys, 1);
+        let factory = faulty(&sys, FaultPlan::latency_at(2, 40));
+        let report = Explorer::with_factory(&sys, opts(1), Arc::clone(&factory))
+            .try_run()
+            .expect("latency is not a failure");
+        assert!(factory.injected() >= 1, "{}: the sleep never fired", sys.name);
+        assert_eq!(report.to_json(&sys.name).to_string_compact(), reference);
+    }
+}
+
+#[test]
+fn serial_faults_fail_with_structured_errors_in_bounded_time() {
+    // the serial reference path has no retry machinery by design: one
+    // backend instance, one structured error, partial work discarded
+    for sys in systems() {
+        for (plan, needle) in [
+            (FaultPlan::error_at(2), "injected fault"),
+            (FaultPlan::panic_at(2), "injected panic"),
+        ] {
+            let start = Instant::now();
+            let label = format!("{plan:?} on {}", sys.name);
+            let err = Explorer::with_factory(&sys, opts(1), faulty(&sys, plan))
+                .try_run()
+                .expect_err("serial faults are unretryable and must surface");
+            let msg = err.to_string();
+            assert!(msg.contains(needle), "{label}: error names the fault: {msg}");
+            assert!(start.elapsed() < BOUNDED, "{label}: took {:?}", start.elapsed());
+        }
+    }
+}
+
+#[test]
+fn faults_that_outlive_the_retry_fail_cleanly_in_parallel() {
+    for sys in systems() {
+        // every call from 2 on faults: the quarantine retry is guaranteed
+        // to hit the window too, whatever the concurrent interleaving
+        let start = Instant::now();
+        let err = Explorer::with_factory(
+            &sys,
+            opts(4),
+            faulty(&sys, FaultPlan::error_at(2).repeated(u64::MAX / 2)),
+        )
+        .try_run()
+        .expect_err("fault + failed retry must fail the run");
+        let msg = err.to_string();
+        assert!(msg.contains("injected fault"), "{}: {msg}", sys.name);
+        assert!(msg.contains("retry after"), "{}: both attempts named: {msg}", sys.name);
+        assert!(start.elapsed() < BOUNDED, "{}: took {:?}", sys.name, start.elapsed());
+    }
+}
+
+#[test]
+fn fired_tokens_stop_both_engine_paths_as_stop_reasons() {
+    let sys = snapse::generators::paper_pi();
+    for workers in [1usize, 4] {
+        let token = snapse::util::CancelToken::new();
+        token.cancel();
+        let report = Explorer::new(&sys, opts(workers).cancel(token)).run();
+        assert_eq!(report.stop, StopReason::Cancelled, "workers={workers}");
+
+        let expired = snapse::util::CancelToken::with_deadline(Duration::from_millis(0));
+        let report = Explorer::new(&sys, opts(workers).cancel(expired)).run();
+        assert_eq!(report.stop, StopReason::DeadlineExceeded, "workers={workers}");
+    }
+}
+
+/// Over-the-wire shed + deadline contract (the in-process twin of the CI
+/// smoke probes): 503/`overloaded` when slots are saturated,
+/// 504/`deadline_exceeded` when the budget expires, structured bodies
+/// both ways, and the daemon keeps serving afterwards.
+#[test]
+fn daemon_sheds_and_times_out_with_structured_bodies() {
+    use snapse::serve::{client, ServeConfig, Server};
+
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        explore_slots: 0, // every compute sheds — the saturated extreme
+        ..ServeConfig::default()
+    })
+    .expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    let (status, body) =
+        client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":5}"#).unwrap();
+    assert_eq!(status, 503, "{body}");
+    let parsed = snapse::util::JsonValue::parse(&body).expect("structured shed body");
+    assert_eq!(
+        parsed.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str()),
+        Some("overloaded"),
+        "{body}"
+    );
+
+    // health degrades with a reason instead of lying
+    let (status, health) = client::get(&addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert!(health.contains("slots"), "degraded reason names the slots: {health}");
+
+    let (status, _) = client::post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(status, 200);
+    handle.join().expect("server thread").expect("clean exit");
+
+    // deadline: a fresh daemon with free slots, an impossible budget
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..ServeConfig::default()
+    })
+    .expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    let start = Instant::now();
+    let (status, body) = client::post(
+        &addr,
+        "/v1/run",
+        r#"{"system":"wide_ring:16:4:3","configs":200000,"deadline_ms":1}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 504, "{body}");
+    let parsed = snapse::util::JsonValue::parse(&body).expect("structured deadline body");
+    assert_eq!(
+        parsed.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str()),
+        Some("deadline_exceeded"),
+        "{body}"
+    );
+    assert!(
+        start.elapsed() < Duration::from_secs(2) + Duration::from_millis(1),
+        "deadline must bound the wait: {:?}",
+        start.elapsed()
+    );
+
+    // and the same query without a deadline still completes fine
+    let (status, body) =
+        client::post(&addr, "/v1/run", r#"{"system":"paper_pi","depth":4}"#).unwrap();
+    assert_eq!(status, 200, "daemon serves on after a 504: {body}");
+
+    let (status, _) = client::post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(status, 200);
+    handle.join().expect("server thread").expect("clean exit");
+}

@@ -23,6 +23,7 @@ fn boot(
         explore_workers,
         handler_threads: 8,
         cache_capacity: 64,
+        ..ServeConfig::default()
     })
     .expect("bind ephemeral port");
     let addr = server.local_addr().expect("local addr").to_string();
