@@ -1,0 +1,69 @@
+//! CLI for the in-tree contract linter.
+//!
+//! ```text
+//! snapse-lint [--check] [--json] [--root DIR] [PATHS...]
+//! ```
+//!
+//! With no `PATHS`, lints every `.rs` file under `<root>/rust/src`
+//! (default root: the current directory) plus the cross-file checks.
+//! With `PATHS`, lints exactly those files. `--json` prints the
+//! deterministic machine-readable report instead of the human table;
+//! `--check` exits non-zero when any rule fired (the CI gate mode).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use snapse::lint;
+
+fn main() -> ExitCode {
+    let mut check = false;
+    let mut json = false;
+    let mut root = PathBuf::from(".");
+    let mut paths: Vec<PathBuf> = Vec::new();
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--check" => check = true,
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("snapse-lint: --root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: snapse-lint [--check] [--json] [--root DIR] [PATHS...]");
+                println!("  --check   exit 1 when any finding is reported");
+                println!("  --json    machine-readable report (sorted, byte-stable)");
+                println!("  --root    repository root to scan (default: .)");
+                println!("  PATHS     lint only these files instead of <root>/rust/src");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("snapse-lint: unknown flag `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+
+    let report = if paths.is_empty() {
+        lint::run(&root)
+    } else {
+        lint::run_paths(&paths)
+    };
+
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.to_table());
+    }
+
+    if check && !report.is_clean() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

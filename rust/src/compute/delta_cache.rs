@@ -195,6 +195,34 @@ impl DeltaCache {
     pub fn snapshot(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
+
+    /// Structural audit: the key store's own invariants hold, the dense
+    /// delta rows track the dense key ids exactly, and the entry count
+    /// respects the capacity bound. Debug builds only — release builds
+    /// return immediately. Tests call this after concurrent workloads to
+    /// catch a torn publish at the source.
+    pub fn check_invariants(&self) {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        let g = self.inner.read().expect("delta cache poisoned");
+        g.keys.check_invariants();
+        assert_eq!(
+            g.deltas.len(),
+            g.keys.len() * self.n,
+            "each key id must own exactly one {}-wide delta row",
+            self.n
+        );
+        assert!(
+            g.keys.len() <= self.capacity,
+            "entry count {} exceeds the capacity bound {}",
+            g.keys.len(),
+            self.capacity
+        );
+        drop(g);
+        assert!(self.capacity > 0, "constructor rejects zero capacity");
+        assert_eq!(self.key_words, self.r.div_ceil(64).max(1), "key width matches rule count");
+    }
 }
 
 #[cfg(test)]

@@ -199,7 +199,7 @@ impl FaultyBackend {
             FaultKind::Panic => panic!("injected panic: step call {call}"),
             FaultKind::Latency(base) => {
                 // deterministic ±25 % jitter: seed ⊕ call keeps each
-                // injected sleep stable across replays
+               // injected sleep stable across replays
                 let mut rng = Rng::new(self.plan.seed ^ call);
                 let jitter = 0.75 + 0.5 * rng.f64();
                 std::thread::sleep(base.mul_f64(jitter));
@@ -324,6 +324,8 @@ mod tests {
 
         let f = FaultyBackendFactory::new(host_factory(), FaultPlan::latency_at(1, 30));
         let mut be = f.create().unwrap();
+        // lint: allow(L2) — deliberate wall-clock burn: this *is* the
+        // injected latency fault, not instrumentation
         let t0 = std::time::Instant::now();
         let got = batch_once(&mut *be).unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(20), "slept");

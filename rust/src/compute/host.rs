@@ -150,6 +150,7 @@ impl StepBackend for HostBackend {
         // within-batch memo path.
         let cache = self.run_cache.clone();
         self.miss_rows.clear();
+        // lint: hotpath — per-row work reuses key_buf/out slices only
         if let Some(cache) = &cache {
             let kw = cache.key_words();
             for b in 0..batch.b {
@@ -189,6 +190,7 @@ impl StepBackend for HostBackend {
             }
             accumulate_delta(&self.repr, batch, b, &mut out[b * n..(b + 1) * n]);
         }
+        // lint: hotpath-end
         // phase 3 — publish the fresh rows (write lock inside the cache;
         // duplicate keys within `miss` re-intern to the same id, no harm)
         if let Some(cache) = &cache {

@@ -29,6 +29,7 @@ use super::{HostBackend, StepBackend};
 use crate::obs::Trace;
 use crate::error::Result;
 use crate::matrix::TransitionMatrix;
+use crate::util::sync::LockExt;
 
 /// Resolve a requested worker count: `0` means all available
 /// parallelism (fallback 4 when the platform can't report it). The one
@@ -128,7 +129,7 @@ impl BackendFactory for XlaBackendFactory {
         // upload-once: the padded matrix is device-resident exactly once
         let rt = self.cache.runtime();
         let dev = {
-            let mut guard = self.matrix_dev.lock().unwrap();
+            let mut guard = self.matrix_dev.lock_recover();
             match *guard {
                 Some((buf, prp, pnp)) if prp == rp && pnp == np => buf,
                 _ => {
@@ -265,7 +266,7 @@ impl BackendPool {
     /// enforces exclusivity); backends that cannot use the cache ignore
     /// the attachment.
     pub fn set_delta_cache(&mut self, cache: Arc<DeltaCache>) {
-        for b in self.slots.get_mut().expect("pool lock poisoned").iter_mut() {
+        for b in self.slots.get_mut().unwrap_or_else(|e| e.into_inner()).iter_mut() {
             b.attach_delta_cache(Arc::clone(&cache));
         }
         self.delta_cache = Some(cache);
@@ -281,7 +282,7 @@ impl BackendPool {
     /// [`BackendPool::set_delta_cache`]: must run before check-outs
     /// begin, and attachment never changes results.
     pub fn set_trace(&mut self, trace: Arc<Trace>) {
-        for b in self.slots.get_mut().expect("pool lock poisoned").iter_mut() {
+        for b in self.slots.get_mut().unwrap_or_else(|e| e.into_inner()).iter_mut() {
             b.attach_trace(Arc::clone(&trace));
         }
         self.trace = Some(trace);
@@ -318,14 +319,16 @@ impl BackendPool {
 
     /// Instances currently available (not checked out).
     pub fn available(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        self.slots.lock_recover().len()
     }
 
     /// Check a backend out, blocking until one is free.
     pub fn acquire(&self) -> PooledBackend<'_> {
         // timer syscall only on traced runs
+        // lint: allow(L2) — checkout wait timing, taken only when a trace
+        // is attached (None keeps acquire free of timer syscalls)
         let wait_start = self.trace.as_ref().map(|_| Instant::now());
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = self.slots.lock_recover();
         loop {
             if let Some(b) = slots.pop() {
                 let free = slots.len();
@@ -342,13 +345,13 @@ impl BackendPool {
                 }
                 return PooledBackend { pool: self, backend: Some(b) };
             }
-            slots = self.freed.wait(slots).unwrap();
+            slots = crate::util::sync::condvar_wait_recover(&self.freed, slots);
         }
     }
 
     /// Check a backend out without blocking.
     pub fn try_acquire(&self) -> Option<PooledBackend<'_>> {
-        let b = self.slots.lock().unwrap().pop()?;
+        let b = self.slots.lock_recover().pop()?;
         Some(PooledBackend { pool: self, backend: Some(b) })
     }
 
@@ -359,7 +362,7 @@ impl BackendPool {
     }
 
     fn release(&self, backend: Box<dyn StepBackend>) {
-        self.slots.lock().unwrap().push(backend);
+        self.slots.lock_recover().push(backend);
         self.freed.notify_one();
     }
 

@@ -11,6 +11,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::util::sync::LockExt;
+
 use crate::compute::{BackendPool, SpikeBuf, SpikeRows, StepBackend, StepBatch, StepMode};
 use crate::engine::ConfigVector;
 use crate::error::Result;
@@ -217,13 +219,15 @@ impl Batcher {
                                 Ok(v)
                             })
                         };
-                        slots.lock().unwrap()[i] = Some(res);
+                        slots.lock_recover()[i] = Some(res);
                     }
                 });
             }
         });
         let mut out = Vec::with_capacity(total);
-        for slot in slots.into_inner().unwrap() {
+        for slot in slots.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            // lint: allow(L1) — the atomic chunk counter hands every index
+            // to exactly one worker before the scope joins
             out.extend(slot.expect("every chunk claimed by a worker")?);
         }
         Ok((out, total as u64, chunks as u64))

@@ -216,6 +216,8 @@ impl<'a> Coordinator<'a> {
         let mut metrics = Metrics::default();
         let mut stop = StopReason::Exhausted;
         let mut depth = 0u32;
+        // lint: allow(L2) — always-on run clock: feeds metrics.total_elapsed
+        // in every report, not an optional timing
         let start = std::time::Instant::now();
 
         while !level.is_empty() {

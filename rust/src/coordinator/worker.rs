@@ -186,6 +186,8 @@ impl<'a> LevelDriver<'a> {
                     }
                     handles
                         .into_iter()
+                        // lint: allow(L1) — a panicking expand worker is a library bug;
+                        // propagating the panic beats silently dropping its frontier slice
                         .map(|h| h.join().expect("expand worker panicked"))
                         .collect()
                 })

@@ -26,6 +26,7 @@ impl ConfigVector {
     /// stringify arena rows without building a `ConfigVector` first.
     pub fn render_dashed(counts: &[u64]) -> String {
         let mut s = String::with_capacity(counts.len() * 2);
+        // lint: allow(L1) — fmt::Write into String is infallible
         write_dashed(counts, &mut s).expect("writing to a String cannot fail");
         s
     }

@@ -12,6 +12,7 @@
 
 use super::config::ConfigVector;
 use super::store::{hash_counts, ConfigStore, RowCursor, StoreMode};
+use crate::util::sync::LockExt;
 
 /// Insertion-ordered set of configurations, arena-backed.
 ///
@@ -179,6 +180,7 @@ impl VisitedStore {
                 s.push_str(", ");
             }
             s.push('\'');
+            // lint: allow(L1) — fmt::Write into String is infallible
             super::config::write_dashed(c, &mut s).expect("writing to a String cannot fail");
             s.push('\'');
             i += 1;
@@ -263,7 +265,7 @@ impl ShardedVisitedStore {
     /// Insert a raw count slice; returns `true` when new.
     pub fn insert_slice(&self, counts: &[u64]) -> bool {
         let s = self.shard_of(counts);
-        self.shards[s].lock().unwrap().intern(counts).1
+        self.shards[s].lock_recover().intern(counts).1
     }
 
     /// Membership test (lock-striped; safe concurrently with `insert`).
@@ -276,12 +278,12 @@ impl ShardedVisitedStore {
     /// scratch — allocation-free in both storage modes.
     pub fn contains_slice(&self, counts: &[u64]) -> bool {
         let s = self.shard_of(counts);
-        self.shards[s].lock().unwrap().contains_probe(counts)
+        self.shards[s].lock_recover().contains_probe(counts)
     }
 
     /// Total entries across stripes.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.lock_recover().len()).sum()
     }
 
     /// True when no entries exist.
@@ -325,7 +327,7 @@ impl ShardedVisited {
     /// Insert with a sequence tag; returns `true` when new.
     pub fn insert(&self, c: &ConfigVector, tag: u32) -> bool {
         let s = self.shard_of(c);
-        let mut guard = self.shards[s].lock().unwrap();
+        let mut guard = self.shards[s].lock_recover();
         if guard.contains_key(c) {
             false
         } else {
@@ -337,12 +339,12 @@ impl ShardedVisited {
     /// Membership test.
     pub fn contains(&self, c: &ConfigVector) -> bool {
         let s = self.shard_of(c);
-        self.shards[s].lock().unwrap().contains_key(c)
+        self.shards[s].lock_recover().contains_key(c)
     }
 
     /// Total entries across shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.lock_recover().len()).sum()
     }
 
     /// True when no entries exist.
@@ -354,7 +356,7 @@ impl ShardedVisited {
     pub fn into_ordered(self) -> Vec<ConfigVector> {
         let mut all: Vec<(u32, ConfigVector)> = Vec::new();
         for s in self.shards {
-            let m = s.into_inner().unwrap();
+            let m = s.into_inner().unwrap_or_else(|e| e.into_inner());
             all.extend(m.into_iter().map(|(c, t)| (t, c)));
         }
         all.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));

@@ -449,6 +449,8 @@ impl<'a> Explorer<'a> {
     /// Run from an arbitrary start configuration (panicking twin of
     /// [`Explorer::try_run_from`] — see [`Explorer::run`]).
     pub fn run_from(&mut self, c0: ConfigVector) -> ExploreReport {
+        // lint: allow(L1) — documented panicking twin of try_run_from
+        // (see the # Panics section above)
         self.try_run_from(c0).unwrap_or_else(|e| panic!("exploration failed: {e}"))
     }
 
@@ -579,6 +581,8 @@ fn run_serial(
     c0: ConfigVector,
     cache: Option<&DeltaCache>,
 ) -> crate::error::Result<ExploreReport> {
+    // lint: allow(L2) — always-on run clock: enforces opts.time_budget
+    // and feeds stats.elapsed in every report
     let start = Instant::now();
     let n = sys.num_neurons();
     let r = sys.num_rules();
@@ -646,6 +650,7 @@ fn run_serial(
 
     let mut stop = StopReason::Exhausted;
     let mut depth_bounded = false;
+    // lint: hotpath — the steady-state loop allocates nothing per child
     'outer: while !queue.is_empty() {
         if let Some(budget) = opts.time_budget {
             if start.elapsed() > budget {
@@ -785,6 +790,8 @@ fn run_serial(
             let node = match tree.as_mut() {
                 Some(t) => {
                     let child = ConfigVector::from_slice(&child_buf);
+                    // lint: allow(L3) — tree recording owns its configurations; the
+                    // non-tree hot path never reaches this branch
                     t.add_edge(parent_node, spk_meta[row].clone(), child.clone());
                     if is_new {
                         t.node_of(&child).unwrap_or(0)
@@ -807,6 +814,7 @@ fn run_serial(
             lm.new_configs += new_in_batch;
         }
     }
+    // lint: hotpath-end
 
     if stop == StopReason::Exhausted && depth_bounded {
         stop = StopReason::MaxDepth;

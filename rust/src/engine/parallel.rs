@@ -51,6 +51,7 @@ use super::spiking::SpikingEnumeration;
 use super::stop::StopReason;
 use crate::compute::{BackendFactory, BackendPool, DeltaCache, PooledBackend, SpikeBuf, StepBatch};
 use crate::snp::SnpSystem;
+use crate::util::sync::LockExt;
 
 /// Rows per dispatched chunk when the caller didn't pin `batch_cap`.
 const DEFAULT_CHUNK_ROWS: usize = 512;
@@ -176,6 +177,8 @@ pub(crate) fn run_pipelined_on(
     c0: ConfigVector,
 ) -> crate::error::Result<ExploreReport> {
     let workers = pool.size();
+    // lint: allow(L2) — always-on run clock: enforces opts.time_budget
+    // and feeds stats.elapsed in every report
     let start = Instant::now();
     let n = sys.num_neurons();
     let r = sys.num_rules();
@@ -264,7 +267,7 @@ pub(crate) fn run_pipelined_on(
                     // time, splitting it from compute below)
                     let sw_wait =
                         trace.map(|_| crate::obs::Stopwatch::start(trace, root_span));
-                    let msg = work_rx.lock().unwrap().recv();
+                    let msg = work_rx.lock_recover().recv();
                     let Ok(chunk) = msg else { break };
                     if let Some(sw) = sw_wait {
                         sw.stop(trace, "wait", &[("rows", chunk.rows as u64)]);
@@ -375,6 +378,8 @@ pub(crate) fn run_pipelined_on(
                 let sw_fold =
                     timings_on.then(|| crate::obs::Stopwatch::start(trace, root_span));
                 let mut new_in_chunk = 0u64;
+                // lint: hotpath — canonical fold interns straight from the
+                // flat chunk payload, no per-child allocation
                 for (i, &depth) in res.depths.iter().enumerate() {
                     if let Some(maxc) = opts.max_configs {
                         if visited.len() >= maxc {
@@ -393,6 +398,7 @@ pub(crate) fn run_pipelined_on(
                         queue.push_back(PendingP { id, depth });
                     }
                 }
+                // lint: hotpath-end
                 if let Some(sw) = sw_fold {
                     let d = sw.stop(
                         trace,
@@ -614,6 +620,7 @@ fn collect_fresh(
     let mut counts = Vec::new();
     let mut depths = Vec::new();
     let mut parents = Vec::new();
+    // lint: hotpath — per-child work reuses row_buf; growth amortizes
     for row in 0..chunk.rows {
         row_buf.clear();
         for j in 0..n {
@@ -623,16 +630,7 @@ fn collect_fresh(
                 vals[row * n + j]
             };
             if v < 0 {
-                return ChunkResult {
-                    seq: chunk.seq,
-                    counts: Vec::new(),
-                    depths: Vec::new(),
-                    parents: Vec::new(),
-                    level: 0,
-                    rows: 0,
-                    eval_us: 0,
-                    error: Some(format!("negative step result: spike count {v}")),
-                };
+                return negative_count_result(chunk.seq, v);
             }
             row_buf.push(v as u64);
         }
@@ -643,6 +641,7 @@ fn collect_fresh(
             parents.push(chunk.parents[row]);
         }
     }
+    // lint: hotpath-end
     ChunkResult {
         seq: chunk.seq,
         counts,
@@ -652,6 +651,21 @@ fn collect_fresh(
         rows: 0,
         eval_us: 0,
         error: None,
+    }
+}
+
+/// Cold error path of [`collect_fresh`]: a negative spike count means a
+/// broken backend, so allocating the error result freely is fine.
+fn negative_count_result(seq: u64, v: i64) -> ChunkResult {
+    ChunkResult {
+        seq,
+        counts: Vec::new(),
+        depths: Vec::new(),
+        parents: Vec::new(),
+        level: 0,
+        rows: 0,
+        eval_us: 0,
+        error: Some(format!("negative step result: spike count {v}")),
     }
 }
 

@@ -67,6 +67,7 @@ impl<'a> RandomWalk<'a> {
         let mut trace = SpikeTrace::default();
         let mut halted = false;
         for step in 1..=max_steps {
+            // lint: allow(L1) — path starts non-empty and only grows
             let current = path.last().unwrap();
             let map = applicable_rules(self.sys, current);
             let s = if map.is_halting() {
@@ -78,6 +79,7 @@ impl<'a> RandomWalk<'a> {
             } else {
                 let psi = map.psi().min(u64::MAX as u128) as u64;
                 let pick = self.rng.below(psi);
+                // lint: allow(L1) — pick is drawn below psi, the enumeration length
                 SpikingEnumeration::new(&map, r).nth(pick as usize).expect("pick < psi")
             };
             if output_fires(self.sys, &s) {
@@ -105,6 +107,7 @@ impl<'a> RandomWalk<'a> {
         let mut trace = SpikeTrace::default();
         let mut halted = false;
         for step in 1..=max_steps {
+            // lint: allow(L1) — path starts non-empty and only grows
             let current = path.last().unwrap();
             let map = applicable_rules(self.sys, current);
             if map.is_halting() {
@@ -117,6 +120,7 @@ impl<'a> RandomWalk<'a> {
             let pick = self.rng.below(psi);
             let s = SpikingEnumeration::new(&map, r)
                 .nth(pick as usize)
+                // lint: allow(L1) — pick is drawn below psi, the enumeration length
                 .expect("pick < psi");
             if output_fires(self.sys, &s) {
                 trace.record(step as u64);
@@ -124,7 +128,9 @@ impl<'a> RandomWalk<'a> {
             let next = self
                 .matrix
                 .step(current.as_slice(), &s.to_bytes())
+                // lint: allow(L1) — shapes fixed by construction
                 .expect("shapes fixed");
+            // lint: allow(L1) — semantics guarantee non-negative counts
             path.push(ConfigVector::from_signed(&next).expect("non-negative"));
             choices.push(s);
         }

@@ -549,6 +549,7 @@ impl ConfigStore {
             self.segs.push(Vec::with_capacity(SEG_BYTES.max(need)));
         }
         let seg_idx = (self.segs.len() - 1) as u32;
+        // lint: allow(L1) — ensure_segment_for just guaranteed a live segment
         let seg = self.segs.last_mut().expect("segment just ensured");
         let off = seg.len() as u32;
         if use_delta {
@@ -619,6 +620,85 @@ impl ConfigStore {
             StoreMode::Compressed => {
                 self.segs.iter().map(|s| s.len()).sum::<usize>() + self.offsets.len() * 10
             }
+        }
+    }
+
+    /// Structural audit of the store's internals: id table ↔ arena
+    /// bijection (every id reachable from exactly one slot, every row
+    /// probes back to its own id), chain depths within [`MAX_CHAIN`],
+    /// and every compressed entry anchored inside a live segment.
+    /// Debug builds only — release builds return immediately — so
+    /// equivalence tests can call it after every fuzz step and a
+    /// corrupted arena fails at the source instead of surfacing as a
+    /// byte-diff downstream.
+    pub fn check_invariants(&self) {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        if self.len > 0 {
+            assert_ne!(self.width, WIDTH_UNSET, "non-empty store must have a fixed width");
+        }
+        match self.mode {
+            StoreMode::Plain => {
+                let width = if self.width == WIDTH_UNSET { 0 } else { self.width };
+                assert_eq!(
+                    self.counts.len(),
+                    self.len * width,
+                    "plain arena must hold exactly one {width}-word row per id"
+                );
+                assert!(
+                    self.segs.is_empty()
+                        && self.offsets.is_empty()
+                        && self.chain.is_empty()
+                        && self.tags.is_empty(),
+                    "plain mode must keep no compressed index"
+                );
+            }
+            StoreMode::Compressed => {
+                assert!(self.counts.is_empty(), "compressed mode must keep no word arena");
+                assert_eq!(self.offsets.len(), self.len, "one offset entry per id");
+                assert_eq!(self.chain.len(), self.len, "one chain depth per id");
+                assert_eq!(self.tags.len(), self.len, "one probe tag per id");
+                for (i, &(seg, off)) in self.offsets.iter().enumerate() {
+                    assert!(
+                        (seg as usize) < self.segs.len(),
+                        "entry {i}: segment {seg} out of range ({} segments)",
+                        self.segs.len()
+                    );
+                    assert!(
+                        (off as usize) < self.segs[seg as usize].len(),
+                        "entry {i}: offset {off} past the end of segment {seg}"
+                    );
+                }
+                for (i, &d) in self.chain.iter().enumerate() {
+                    assert!(d <= MAX_CHAIN, "entry {i}: chain depth {d} exceeds MAX_CHAIN");
+                }
+            }
+        }
+        let mut seen = vec![false; self.len];
+        for &slot in &self.table {
+            if slot == EMPTY {
+                continue;
+            }
+            let id = slot as usize;
+            assert!(id < self.len, "table slot points at unissued id {slot}");
+            assert!(!seen[id], "id {slot} appears in two table slots");
+            seen[id] = true;
+        }
+        let reachable = seen.iter().filter(|&&s| s).count();
+        assert_eq!(reachable, self.len, "every interned id must be reachable from the table");
+        // bijection part two: each stored row must probe back to its own
+        // id (hash, tag filter, and decode all agree)
+        let mut row = Vec::new();
+        let mut scratch = Vec::new();
+        let v = self.view();
+        for id in 0..self.len as u32 {
+            decode_into(&v, id, &mut row);
+            let found = match probe(&v, &row, hash_counts(&row), &mut scratch) {
+                Probe::Found(f) => Some(f),
+                Probe::Vacant(_) => None,
+            };
+            assert_eq!(found, Some(id), "row of id {id} must probe back to itself");
         }
     }
 

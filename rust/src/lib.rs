@@ -43,6 +43,7 @@
 //! | [`output`] | run reports, DOT export, text tables |
 //! | [`obs`] | observability: phase spans, JSONL traces, metrics registry, Prometheus export |
 //! | [`serve`] | exploration-serving daemon: content-addressed report cache, HTTP/1.1 |
+//! | [`lint`] | `snapse-lint`: in-tree contract linter for the crate's own invariants |
 
 pub mod baseline;
 pub mod cli;
@@ -51,6 +52,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod error;
 pub mod generators;
+pub mod lint;
 pub mod matrix;
 pub mod obs;
 pub mod output;

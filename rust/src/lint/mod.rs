@@ -1,0 +1,202 @@
+//! `snapse-lint` — an in-tree contract linter for the invariants the
+//! test suite can only sample: byte-identity of reports, zero-cost
+//! observability, daemon panic-safety, and the fixed phase vocabulary.
+//!
+//! The linter is std-only and dependency-free: [`scan`] tokenizes each
+//! Rust source line-by-line (comments and literal contents stripped,
+//! `#[cfg(test)]` regions tracked), and [`rules`] runs token-level
+//! checks over the result. Findings are deterministic — sorted by
+//! `(file, line, rule)` — so CI diffs and the golden self-test are
+//! stable across runs and machines.
+//!
+//! Escape hatches are in-source comment directives, all introduced by
+//! the `lint:` marker:
+//!
+//! * `allow(<rule>) — <justification>` on the flagged line or in the
+//!   comment block directly above excuses one site; a bare allow
+//!   without a justification is itself a finding.
+//! * `hotpath` / `hotpath-end` fence an allocation-free region (rule
+//!   L3 checks only fenced regions).
+//! * the word `module` followed by a path, in the first lines of a
+//!   file, overrides the module path derived from the file's location —
+//!   this is how fixture files under `rust/tests/lint_fixtures/`
+//!   impersonate `serve::`/`engine::` code.
+//!
+//! Run it as `cargo run --release --bin snapse-lint -- --check` (CI
+//! does, as the first gate) or programmatically via [`run`].
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+pub use report::LintReport;
+pub use rules::Finding;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Files that carry the engine's steady-state loops: each must declare
+/// at least one hotpath fence, so the zero-allocation contract cannot
+/// be silently dropped by deleting its fence comments.
+const REQUIRED_FENCE_FILES: &[&str] = &[
+    "rust/src/compute/host.rs",
+    "rust/src/engine/explorer.rs",
+    "rust/src/engine/parallel.rs",
+];
+
+/// Lint a whole repository checkout rooted at `root`: every `.rs` file
+/// under `rust/src` (sorted, so output order is deterministic), plus
+/// the cross-file checks — error-taxonomy completeness (L5) against the
+/// router, and the required-fence check for the known hot files.
+pub fn run(root: &Path) -> LintReport {
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust").join("src"), &mut files);
+
+    let vocab = fs::read_to_string(root.join("rust/src/obs/trace.rs"))
+        .ok()
+        .and_then(|text| rules::parse_phase_names(&text))
+        .unwrap_or_else(fallback_vocab);
+
+    let mut findings = Vec::new();
+    let mut files_scanned = 0usize;
+    for path in &files {
+        let Ok(text) = fs::read_to_string(path) else { continue };
+        files_scanned += 1;
+        let rel = rel_path(root, path);
+        let lines = scan::scan(&text);
+        lint_lines(&rel, &lines, &vocab, &mut findings);
+        if REQUIRED_FENCE_FILES.contains(&rel.as_str()) && !rules::has_hotpath_fence(&lines) {
+            findings.push(Finding {
+                rule: "L3",
+                file: rel.clone(),
+                line: 1,
+                message: "hot file declares no hotpath fence — the zero-allocation \
+                          contract for its steady-state loop is unenforced"
+                    .to_string(),
+            });
+        }
+    }
+
+    let error_src = fs::read_to_string(root.join("rust/src/error.rs"));
+    let router_src = fs::read_to_string(root.join("rust/src/serve/router.rs"));
+    if let (Ok(error_text), Ok(router_text)) = (error_src, router_src) {
+        findings.extend(rules::check_error_taxonomy(
+            &error_text,
+            &router_text,
+            "rust/src/error.rs",
+        ));
+    }
+
+    LintReport { findings, files_scanned }.canonicalize()
+}
+
+/// Lint an explicit list of files (fixture corpora, pre-commit hooks on
+/// changed paths). Uses the built-in fallback phase vocabulary; module
+/// paths come from each file's override directive or its path.
+pub fn run_paths(paths: &[PathBuf]) -> LintReport {
+    let vocab = fallback_vocab();
+    let mut findings = Vec::new();
+    let mut files_scanned = 0usize;
+    for path in paths {
+        let Ok(text) = fs::read_to_string(path) else { continue };
+        files_scanned += 1;
+        let rel: String = path.to_string_lossy().replace('\\', "/");
+        findings.extend(lint_source(&rel, &text, &vocab));
+    }
+    LintReport { findings, files_scanned }.canonicalize()
+}
+
+/// Lint a single source text under a repo-relative path. Runs every
+/// per-file rule (L1, L2, L3, L4, L6); the cross-file rule L5 lives in
+/// [`run`] / [`rules::check_error_taxonomy`].
+pub fn lint_source(rel_path: &str, text: &str, vocab: &[String]) -> Vec<Finding> {
+    let lines = scan::scan(text);
+    let mut out = Vec::new();
+    lint_lines(rel_path, &lines, vocab, &mut out);
+    out
+}
+
+fn lint_lines(rel_path: &str, lines: &[scan::Line], vocab: &[String], out: &mut Vec<Finding>) {
+    let module =
+        module_override(lines).unwrap_or_else(|| scan::module_path_of(rel_path));
+    rules::check_no_panics(rel_path, &module, lines, out);
+    rules::check_zero_cost_timers(rel_path, &module, lines, out);
+    rules::check_hotpath_fences(rel_path, lines, out);
+    rules::check_phase_vocabulary(rel_path, &module, lines, vocab, out);
+    rules::check_unsafe_safety(rel_path, lines, out);
+}
+
+/// Module-path override: a directive in the first lines of the file —
+/// the word `module` then a path, after the `lint:` marker.
+fn module_override(lines: &[scan::Line]) -> Option<String> {
+    for line in lines.iter().take(10) {
+        let Some(at) = line.comment.find("lint:") else { continue };
+        let rest = line.comment[at + 5..].trim_start();
+        if let Some(tail) = rest.strip_prefix("module ") {
+            if let Some(path) = tail.split_whitespace().next() {
+                return Some(path.to_string());
+            }
+        }
+    }
+    None
+}
+
+fn fallback_vocab() -> Vec<String> {
+    rules::FALLBACK_PHASES.iter().map(|s| s.to_string()).collect()
+}
+
+/// Repo-relative path with forward slashes, for stable reports.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let tail = path.strip_prefix(root).unwrap_or(path);
+    tail.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Recursively collect `.rs` files, directory entries sorted so the
+/// scan order (and thus `files_scanned` attribution) is deterministic.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_override_directive() {
+        let lines = scan::scan("// lint: module serve::fixture\nfn f() {}\n");
+        assert_eq!(module_override(&lines).as_deref(), Some("serve::fixture"));
+        let none = scan::scan("// ordinary comment\nfn f() {}\n");
+        assert!(module_override(&none).is_none());
+    }
+
+    #[test]
+    fn override_puts_file_in_l1_scope() {
+        let vocab = fallback_vocab();
+        let src = "// lint: module serve::fixture\nfn f() { x.unwrap(); }\n";
+        let findings = lint_source("anywhere/fixture.rs", src, &vocab);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, "L1");
+        // without the override the same text is out of L1 scope
+        let quiet = lint_source("anywhere/fixture.rs", "fn f() { x.unwrap(); }\n", &vocab);
+        assert!(quiet.is_empty());
+    }
+
+    #[test]
+    fn rel_paths_are_slash_separated() {
+        let root = Path::new("/repo");
+        let p = root.join("rust").join("src").join("lib.rs");
+        assert_eq!(rel_path(root, &p), "rust/src/lib.rs");
+    }
+}

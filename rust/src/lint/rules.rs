@@ -1,0 +1,567 @@
+//! The contract rules. Each rule is a pure function over scanned
+//! [`Line`]s (plus the file's module path), producing [`Finding`]s.
+//!
+//! | rule | contract it pins |
+//! |---|---|
+//! | L1 | no `.unwrap()`/`.expect()`/`panic!` in non-test `serve`/`engine`/`coordinator` code — a panicked request must not wedge the daemon |
+//! | L2 | `Instant::now()` only in `obs`, `util::cancel`, benches — observability is zero-cost when disabled |
+//! | L3 | `// lint: hotpath` fences forbid `Vec::new`/`to_vec`/`clone()`/`format!`/`collect()` — zero per-child allocation |
+//! | L4 | span/event names passed to `Trace` APIs must be in `obs::PHASE_NAMES` |
+//! | L5 | every `Error` variant appears in the router's status mapping |
+//! | L6 | every `unsafe` block carries a `// SAFETY:` comment |
+//!
+//! Escapes: `// lint: allow(<rule>) — <justification>` on the flagged
+//! line or in the contiguous comment block above it. An allow without a
+//! justification is itself a finding.
+
+use super::scan::Line;
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id (`"L1"`…`"L6"`).
+    pub rule: &'static str,
+    /// Repo-relative file path.
+    pub file: String,
+    /// 1-based line number.
+    pub line: u32,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+/// Module prefixes L1 applies to — the layers where a panic escapes to
+/// a daemon thread or a worker pool.
+const L1_SCOPE: &[&str] = &["serve", "engine", "coordinator"];
+
+/// Built-in fallback phase vocabulary, used when `obs/trace.rs` is not
+/// in the scanned tree (single-file runs, fixtures). Keep in sync with
+/// `obs::PHASE_NAMES` — the real run parses the source instead.
+pub const FALLBACK_PHASES: &[&str] = &[
+    "run", "level", "enumerate", "step", "fold", "expand", "wait", "request",
+    "delta_cache", "checkout",
+];
+
+/// Is `lines[at]` excused from `rule` by an allow directive on the same
+/// line or in the contiguous comment block directly above? Returns
+/// `Some(finding)` when an allow matches but lacks a justification.
+fn allowed(
+    lines: &[Line],
+    at: usize,
+    rule: &'static str,
+    file: &str,
+) -> (bool, Option<Finding>) {
+    let mut idx = at;
+    loop {
+        if let Some(rest) = allow_directive(&lines[idx].comment, rule) {
+            if rest.trim_start_matches(['—', '-', ':', ' ']).trim().is_empty() {
+                return (
+                    true,
+                    Some(Finding {
+                        rule,
+                        file: file.to_string(),
+                        line: lines[idx].number,
+                        message: format!(
+                            "`lint: allow({rule})` needs a justification after the rule id"
+                        ),
+                    }),
+                );
+            }
+            return (true, None);
+        }
+        if idx == 0 {
+            return (false, None);
+        }
+        idx -= 1;
+        if !lines[idx].is_code_free() {
+            return (false, None);
+        }
+    }
+}
+
+/// If `comment` contains `lint: allow(<rule>)`, return the text after
+/// the closing paren (the justification).
+fn allow_directive<'a>(comment: &'a str, rule: &str) -> Option<&'a str> {
+    let at = comment.find("lint:")?;
+    let rest = comment[at + 5..].trim_start();
+    let inner = rest.strip_prefix("allow(")?;
+    let close = inner.find(')')?;
+    if inner[..close].trim() == rule {
+        Some(&inner[close + 1..])
+    } else {
+        None
+    }
+}
+
+/// Does `code` contain `token` with a non-identifier char before it?
+/// (Catches `panic!` but not `dont_panic!`, `Vec::new` but not
+/// `SmallVec::new`.)
+fn token_with_boundary(code: &str, token: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(token) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok {
+            return true;
+        }
+        from = at + token.len();
+    }
+    false
+}
+
+/// Push `finding` unless excused; a justification-less allow surfaces as
+/// its own finding instead.
+fn emit(
+    out: &mut Vec<Finding>,
+    lines: &[Line],
+    at: usize,
+    file: &str,
+    rule: &'static str,
+    message: String,
+) {
+    let (is_allowed, bad_allow) = allowed(lines, at, rule, file);
+    if let Some(f) = bad_allow {
+        out.push(f);
+    } else if !is_allowed {
+        out.push(Finding { rule, file: file.to_string(), line: lines[at].number, message });
+    }
+}
+
+/// L1 — no panicking calls in non-test daemon/engine/coordinator code.
+pub fn check_no_panics(file: &str, module: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    let root = module.split("::").next().unwrap_or("");
+    if !L1_SCOPE.contains(&root) {
+        return;
+    }
+    const CALLS: &[&str] = &[".unwrap()", ".expect("];
+    const MACROS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for t in CALLS {
+            if line.code.contains(t) {
+                emit(out, lines, i, file, "L1", format!(
+                    "`{t}` in non-test `{module}` code: one panicked thread poisons shared \
+                     state — use a recovering/structured alternative (util::sync::LockExt, \
+                     Result) or justify with `lint: allow(L1)`",
+                    t = t.trim_end_matches('(')
+                ));
+                break;
+            }
+        }
+        for t in MACROS {
+            if token_with_boundary(&line.code, t) {
+                emit(out, lines, i, file, "L1", format!(
+                    "`{t}` in non-test `{module}` code — return a structured Error or \
+                     justify with `lint: allow(L1)`"
+                ));
+                break;
+            }
+        }
+    }
+}
+
+/// L2 — timer syscalls only where the zero-cost-observability contract
+/// permits them.
+pub fn check_zero_cost_timers(file: &str, module: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    let root = module.split("::").next().unwrap_or("");
+    if root == "obs" || module == "util::cancel" || file.starts_with("rust/benches/") {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if line.code.contains("Instant::now") {
+            emit(out, lines, i, file, "L2", format!(
+                "`Instant::now()` outside obs/util::cancel in `{module}`: disabled \
+                 observability must cost zero timer syscalls — gate behind a Stopwatch \
+                 (`timings_on.then(...)`) or justify with `lint: allow(L2)`"
+            ));
+        }
+    }
+}
+
+/// L3 — allocation fences: `// lint: hotpath` … `// lint: hotpath-end`
+/// regions must stay free of per-child allocation.
+pub fn check_hotpath_fences(file: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    const BANNED: &[(&str, bool)] = &[
+        // (token, needs leading identifier boundary)
+        ("Vec::new", true),
+        (".to_vec(", false),
+        (".clone()", false),
+        ("format!", true),
+        (".collect(", false),
+        (".collect::<", false),
+    ];
+    let mut open: Option<u32> = None;
+    for (i, line) in lines.iter().enumerate() {
+        match fence_directive(&line.comment) {
+            Some(Fence::Open) => {
+                if let Some(opened) = open {
+                    out.push(Finding {
+                        rule: "L3",
+                        file: file.to_string(),
+                        line: line.number,
+                        message: format!(
+                            "nested `lint: hotpath` fence (previous opened at line {opened})"
+                        ),
+                    });
+                }
+                open = Some(line.number);
+                continue;
+            }
+            Some(Fence::Close) => {
+                if open.is_none() {
+                    out.push(Finding {
+                        rule: "L3",
+                        file: file.to_string(),
+                        line: line.number,
+                        message: "`lint: hotpath-end` without an open fence".to_string(),
+                    });
+                }
+                open = None;
+                continue;
+            }
+            None => {}
+        }
+        if open.is_none() {
+            continue;
+        }
+        for (t, needs_boundary) in BANNED {
+            let hit = if *needs_boundary {
+                token_with_boundary(&line.code, t)
+            } else {
+                line.code.contains(t)
+            };
+            if hit {
+                emit(out, lines, i, file, "L3", format!(
+                    "`{t}` inside a hotpath fence: the steady-state loop must allocate \
+                     nothing per child — hoist the allocation or justify with \
+                     `lint: allow(L3)`",
+                    t = t.trim_end_matches(['(', '<', ':'])
+                ));
+                break;
+            }
+        }
+    }
+    if let Some(opened) = open {
+        out.push(Finding {
+            rule: "L3",
+            file: file.to_string(),
+            line: opened,
+            message: "unclosed `lint: hotpath` fence (no `lint: hotpath-end` before EOF)"
+                .to_string(),
+        });
+    }
+}
+
+enum Fence {
+    Open,
+    Close,
+}
+
+fn fence_directive(comment: &str) -> Option<Fence> {
+    let at = comment.find("lint:")?;
+    let rest = comment[at + 5..].trim_start();
+    // the directive word must end at a boundary, so prose that merely
+    // *mentions* the directive (e.g. backtick-quoted in a doc comment)
+    // does not open a fence
+    if let Some(tail) = rest.strip_prefix("hotpath-end") {
+        if !tail.starts_with(|c: char| c.is_alphanumeric() || c == '_' || c == '`') {
+            return Some(Fence::Close);
+        }
+        return None;
+    }
+    if let Some(tail) = rest.strip_prefix("hotpath") {
+        if !tail.starts_with(|c: char| c.is_alphanumeric() || c == '_' || c == '-' || c == '`') {
+            return Some(Fence::Open);
+        }
+    }
+    None
+}
+
+/// Does the file declare at least one hotpath fence? (Used by the
+/// driver to require fences in the known hot files.)
+pub fn has_hotpath_fence(lines: &[Line]) -> bool {
+    lines
+        .iter()
+        .any(|l| matches!(fence_directive(&l.comment), Some(Fence::Open)))
+}
+
+/// L4 — span/event names passed to `Trace` APIs must come from the
+/// fixed phase vocabulary (`obs::PHASE_NAMES`).
+pub fn check_phase_vocabulary(
+    file: &str,
+    module: &str,
+    lines: &[Line],
+    vocab: &[String],
+    out: &mut Vec<Finding>,
+) {
+    let root = module.split("::").next().unwrap_or("");
+    if root == "obs" {
+        return; // the vocabulary's own definition and its plumbing
+    }
+    const APIS: &[&str] = &[".event(", ".end(", ".end_detailed(", ".stop("];
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if !APIS.iter().any(|t| line.code.contains(t)) {
+            continue;
+        }
+        // the name is the first string literal on this line or shortly
+        // after (multi-line call layouts); no string at all means this
+        // call site names no phase (e.g. `Stopwatch::start`)
+        let name = lines[i..]
+            .iter()
+            .take(4)
+            .flat_map(|l| l.strings.iter())
+            .next();
+        let Some(name) = name else { continue };
+        if !vocab.iter().any(|v| v == name) {
+            emit(out, lines, i, file, "L4", format!(
+                "span/event name \"{name}\" is not in obs::PHASE_NAMES — extend the \
+                 vocabulary (and the README) before adding instrumentation points"
+            ));
+        }
+    }
+}
+
+/// L6 — `unsafe` requires a `// SAFETY:` comment on the same line or in
+/// the comment block directly above.
+pub fn check_unsafe_safety(file: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test || !token_with_boundary(&line.code, "unsafe") {
+            continue;
+        }
+        let mut idx = i;
+        let documented = loop {
+            if lines[idx].comment.contains("SAFETY:") {
+                break true;
+            }
+            if idx == 0 {
+                break false;
+            }
+            idx -= 1;
+            if !lines[idx].is_code_free() {
+                break false;
+            }
+        };
+        if !documented {
+            emit(out, lines, i, file, "L6",
+                "`unsafe` without a `// SAFETY:` comment — state the invariant that \
+                 makes this sound (the crate is expected to stay unsafe-free)"
+                    .to_string());
+        }
+    }
+}
+
+/// L5 — error-taxonomy completeness: every variant of `pub enum Error`
+/// in `error_text` must appear as `Error::<Variant>` somewhere in
+/// `router_text` (the status mapping). Findings anchor at the variant's
+/// line in `error_path`.
+pub fn check_error_taxonomy(
+    error_text: &str,
+    router_text: &str,
+    error_path: &str,
+) -> Vec<Finding> {
+    let lines = super::scan::scan(error_text);
+    let mut out = Vec::new();
+    let mut in_enum = false;
+    let mut depth = 0i32;
+    for (i, line) in lines.iter().enumerate() {
+        if !in_enum {
+            if line.code.contains("pub enum Error") {
+                in_enum = true;
+                depth = 0;
+            } else {
+                continue;
+            }
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if in_enum && depth <= 0 && line.code.contains('}') {
+            break;
+        }
+        let trimmed = line.code.trim();
+        let Some(first) = trimmed.chars().next() else { continue };
+        if !first.is_ascii_uppercase() {
+            continue;
+        }
+        let variant: String = trimmed
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if variant.is_empty() {
+            continue;
+        }
+        if !router_text.contains(&format!("Error::{variant}")) {
+            let (is_allowed, bad_allow) = allowed(&lines, i, "L5", error_path);
+            if let Some(f) = bad_allow {
+                out.push(f);
+            } else if !is_allowed {
+                out.push(Finding {
+                    rule: "L5",
+                    file: error_path.to_string(),
+                    line: line.number,
+                    message: format!(
+                        "Error::{variant} has no entry in the router's status mapping \
+                         (serve::router::error_response) — every variant needs an HTTP \
+                         status + kind"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Parse `obs::PHASE_NAMES` out of the trace module's source: collect
+/// every string literal between the `PHASE_NAMES` declaration and its
+/// closing `];`.
+pub fn parse_phase_names(trace_text: &str) -> Option<Vec<String>> {
+    let lines = super::scan::scan(trace_text);
+    let start = lines.iter().position(|l| l.code.contains("PHASE_NAMES"))?;
+    let mut vocab = Vec::new();
+    for line in &lines[start..] {
+        vocab.extend(line.strings.iter().cloned());
+        if line.code.contains("];") {
+            break;
+        }
+    }
+    if vocab.is_empty() {
+        None
+    } else {
+        Some(vocab)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan;
+
+    fn run_l1(src: &str) -> Vec<Finding> {
+        let lines = scan(src);
+        let mut out = Vec::new();
+        check_no_panics("f.rs", "serve::fixture", &lines, &mut out);
+        out
+    }
+
+    #[test]
+    fn l1_flags_unwrap_but_not_unwrap_or() {
+        assert_eq!(run_l1("fn f() { x.lock().unwrap(); }").len(), 1);
+        assert!(run_l1("fn f() { x.unwrap_or_else(|e| e.into_inner()); }").is_empty());
+        assert!(run_l1("fn f() { x.unwrap_or(3); }").is_empty());
+        assert!(run_l1("fn f() { x.expect_err(\"no\"); }").is_empty());
+        assert_eq!(run_l1("fn f() { panic!(\"boom\"); }").len(), 1);
+        assert!(run_l1("fn f() { std::panic::catch_unwind(g); }").is_empty());
+    }
+
+    #[test]
+    fn l1_respects_tests_and_allows() {
+        assert!(run_l1("#[cfg(test)]\nmod t {\n fn f() { x.unwrap(); }\n}").is_empty());
+        let allowed = "fn f() {\n // lint: allow(L1) — invariant: x is Some here\n x.unwrap();\n}";
+        assert!(run_l1(allowed).is_empty());
+        let bare = "fn f() {\n // lint: allow(L1)\n x.unwrap();\n}";
+        let out = run_l1(bare);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("justification"));
+    }
+
+    #[test]
+    fn l2_scope() {
+        let lines = scan("fn f() { let t = Instant::now(); }");
+        let mut out = Vec::new();
+        check_zero_cost_timers("rust/src/engine/x.rs", "engine::x", &lines, &mut out);
+        assert_eq!(out.len(), 1);
+        out.clear();
+        check_zero_cost_timers("rust/src/obs/trace.rs", "obs::trace", &lines, &mut out);
+        check_zero_cost_timers("rust/src/util/cancel.rs", "util::cancel", &lines, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn l3_fence_catches_allocations() {
+        let src = "// lint: hotpath\nfor x in v {\n let y = x.clone();\n}\n// lint: hotpath-end\nlet z = a.clone();";
+        let lines = scan(src);
+        let mut out = Vec::new();
+        check_hotpath_fences("f.rs", &lines, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn l3_prose_mentions_are_not_fences() {
+        // a doc comment *describing* the directive must not open a fence
+        let lines = scan("//! | L3 | `// lint: hotpath` fences forbid allocation |\nfn f() {}");
+        let mut out = Vec::new();
+        check_hotpath_fences("f.rs", &lines, &mut out);
+        assert!(out.is_empty());
+        assert!(!has_hotpath_fence(&lines));
+        assert!(has_hotpath_fence(&scan("// lint: hotpath — no per-child allocation\n")));
+        assert!(has_hotpath_fence(&scan("// lint: hotpath\n")));
+    }
+
+    #[test]
+    fn l3_unclosed_fence() {
+        let lines = scan("// lint: hotpath\nfor x in v {}\n");
+        let mut out = Vec::new();
+        check_hotpath_fences("f.rs", &lines, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("unclosed"));
+    }
+
+    #[test]
+    fn l4_vocabulary() {
+        let vocab: Vec<String> = FALLBACK_PHASES.iter().map(|s| s.to_string()).collect();
+        let bad = scan("t.event(None, \"warmup\", &[]);");
+        let ok = scan("t.event(None, \"checkout\", &[]);");
+        let multi = scan("t.event(\n None,\n \"warmup\",\n);");
+        let mut out = Vec::new();
+        check_phase_vocabulary("f.rs", "compute::x", &bad, &vocab, &mut out);
+        assert_eq!(out.len(), 1);
+        out.clear();
+        check_phase_vocabulary("f.rs", "compute::x", &ok, &vocab, &mut out);
+        assert!(out.is_empty());
+        check_phase_vocabulary("f.rs", "compute::x", &multi, &vocab, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn l5_taxonomy() {
+        let error = "pub enum Error {\n A(String),\n B { x: u32 },\n}\n";
+        let router = "match e { Error::A(_) => 1, _ => 2 }";
+        let out = check_error_taxonomy(error, router, "e.rs");
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("Error::B"));
+    }
+
+    #[test]
+    fn l6_safety_comments() {
+        let bad = scan("fn f() { unsafe { g() } }");
+        let ok = scan("// SAFETY: g has no preconditions\nfn f() { unsafe { g() } }");
+        let mut out = Vec::new();
+        check_unsafe_safety("f.rs", &bad, &mut out);
+        assert_eq!(out.len(), 1);
+        out.clear();
+        check_unsafe_safety("f.rs", &ok, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn phase_names_parse() {
+        let src = "pub const PHASE_NAMES: &[&str] = &[\n \"run\", \"step\",\n \"fold\",\n];\n";
+        assert_eq!(parse_phase_names(src).unwrap(), vec!["run", "step", "fold"]);
+    }
+}

@@ -1,0 +1,370 @@
+//! Line-aware Rust source scanner for `snapse-lint`.
+//!
+//! Not a parser: a character-level state machine that walks a source
+//! file once and produces, per line, the **code text** (string/char
+//! literal contents blanked, comments removed), the **comment text**
+//! (for directive parsing), the **string literals** opened on the line
+//! (for the span-name rule), and whether the line sits inside a
+//! `#[cfg(test)]` region. That is exactly the information the contract
+//! rules need, and nothing a full AST would add — token-level substring
+//! checks on comment-free, string-free code are precise enough for
+//! every rule in the set.
+//!
+//! Handled syntax: line comments, nested block comments, string
+//! literals with escapes, raw strings (`r"…"`, `r#"…"#`, any hash
+//! count, multi-line), byte strings, char literals vs. lifetimes, and
+//! brace-depth tracking for `#[cfg(test)]` region extents.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: u32,
+    /// Code with comments removed and literal contents blanked (string
+    /// literals collapse to `""`, char literals to `' '`).
+    pub code: String,
+    /// Concatenated comment text on this line (without `//` / `/* */`
+    /// markers) — where `lint:` directives live.
+    pub comment: String,
+    /// Contents of string literals *opened* on this line, in order.
+    pub strings: Vec<String>,
+    /// True when any part of the line lies in a `#[cfg(test)]` region.
+    pub in_test: bool,
+}
+
+impl Line {
+    /// True when the line carries no code (blank or comment-only).
+    pub fn is_code_free(&self) -> bool {
+        self.code.trim().is_empty()
+    }
+}
+
+/// Derive the crate-relative module path of a source file from its
+/// repo-relative path: `rust/src/serve/cache.rs` → `serve::cache`,
+/// `rust/src/serve/mod.rs` → `serve`, `rust/src/lib.rs` → `` (root).
+/// Files outside `rust/src` keep their stem as a best-effort path.
+pub fn module_path_of(rel_path: &str) -> String {
+    let norm = rel_path.replace('\\', "/");
+    let tail = norm.strip_prefix("rust/src/").unwrap_or(&norm);
+    let tail = tail.strip_suffix(".rs").unwrap_or(tail);
+    let mut parts: Vec<&str> = tail.split('/').collect();
+    match parts.last().copied() {
+        Some("mod") | Some("lib") | Some("main") => {
+            parts.pop();
+        }
+        _ => {}
+    }
+    parts.join("::")
+}
+
+/// Scanner state that survives line breaks.
+enum Carry {
+    None,
+    BlockComment { depth: u32 },
+    Str,
+    RawStr { hashes: u32 },
+}
+
+/// Scan a whole file into [`Line`]s.
+pub fn scan(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut carry = Carry::None;
+    let mut depth: i64 = 0; // brace depth across the file
+    let mut pending_test = false; // saw #[cfg(test)], region opens at next `{`
+    let mut test_floor: Option<i64> = None; // depth the region closes at
+
+    for (idx, raw) in text.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let mut strings = Vec::new();
+        let mut in_test = test_floor.is_some() || pending_test;
+        let mut i = 0usize;
+        'line: while i < chars.len() {
+            match carry {
+                Carry::BlockComment { ref mut depth } => {
+                    while i < chars.len() {
+                        if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                            *depth -= 1;
+                            i += 2;
+                            if *depth == 0 {
+                                carry = Carry::None;
+                                continue 'line;
+                            }
+                        } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                            *depth += 1;
+                            i += 2;
+                        } else {
+                            comment.push(chars[i]);
+                            i += 1;
+                        }
+                    }
+                    break 'line;
+                }
+                Carry::Str => {
+                    // continuation of a multi-line string literal; its
+                    // text is attributed to this line's `strings`
+                    let mut tail = String::new();
+                    while i < chars.len() {
+                        match chars[i] {
+                            '\\' => {
+                                tail.push(chars[i]);
+                                if i + 1 < chars.len() {
+                                    tail.push(chars[i + 1]);
+                                }
+                                i += 2;
+                            }
+                            '"' => {
+                                i += 1;
+                                carry = Carry::None;
+                                strings.push(std::mem::take(&mut tail));
+                                continue 'line;
+                            }
+                            c => {
+                                tail.push(c);
+                                i += 1;
+                            }
+                        }
+                    }
+                    strings.push(tail);
+                    break 'line;
+                }
+                Carry::RawStr { hashes } => {
+                    let mut tail = String::new();
+                    while i < chars.len() {
+                        if chars[i] == '"' && closes_raw(&chars, i + 1, hashes) {
+                            i += 1 + hashes as usize;
+                            carry = Carry::None;
+                            strings.push(std::mem::take(&mut tail));
+                            continue 'line;
+                        }
+                        tail.push(chars[i]);
+                        i += 1;
+                    }
+                    strings.push(tail);
+                    break 'line;
+                }
+                Carry::None => {}
+            }
+            let c = chars[i];
+            match c {
+                '/' if chars.get(i + 1) == Some(&'/') => {
+                    comment.push_str(&raw[byte_offset(raw, i + 2)..]);
+                    break 'line;
+                }
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    carry = Carry::BlockComment { depth: 1 };
+                    i += 2;
+                }
+                '"' => {
+                    // open a string literal; capture its contents
+                    i += 1;
+                    let mut body = String::new();
+                    let mut closed = false;
+                    while i < chars.len() {
+                        match chars[i] {
+                            '\\' => {
+                                body.push(chars[i]);
+                                if i + 1 < chars.len() {
+                                    body.push(chars[i + 1]);
+                                }
+                                i += 2;
+                            }
+                            '"' => {
+                                i += 1;
+                                closed = true;
+                                break;
+                            }
+                            ch => {
+                                body.push(ch);
+                                i += 1;
+                            }
+                        }
+                    }
+                    strings.push(body);
+                    code.push_str("\"\"");
+                    if !closed {
+                        carry = Carry::Str;
+                        break 'line;
+                    }
+                }
+                'r' if is_raw_start(&chars, i) && !ident_before(&chars, i) => {
+                    // r"…" / r#"…"# (also br…): count hashes, then scan
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    i = j + 1; // past the opening quote
+                    let mut body = String::new();
+                    let mut closed = false;
+                    while i < chars.len() {
+                        if chars[i] == '"' && closes_raw(&chars, i + 1, hashes) {
+                            i += 1 + hashes as usize;
+                            closed = true;
+                            break;
+                        }
+                        body.push(chars[i]);
+                        i += 1;
+                    }
+                    strings.push(body);
+                    code.push_str("\"\"");
+                    if !closed {
+                        carry = Carry::RawStr { hashes };
+                        break 'line;
+                    }
+                }
+                '\'' => {
+                    // char literal vs lifetime: 'x' / '\n' are chars,
+                    // 'a (no closing quote nearby) is a lifetime
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // escaped char: skip to the closing quote
+                        i += 2;
+                        while i < chars.len() && chars[i] != '\'' {
+                            i += 1;
+                        }
+                        i += 1;
+                        code.push_str("' '");
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        i += 3;
+                        code.push_str("' '");
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                '{' => {
+                    if pending_test && test_floor.is_none() {
+                        test_floor = Some(depth);
+                        pending_test = false;
+                        in_test = true;
+                    }
+                    depth += 1;
+                    code.push(c);
+                    i += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_floor == Some(depth) {
+                        test_floor = None;
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+                _ => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        if code.contains("#[cfg(test)]") {
+            pending_test = true;
+            in_test = true;
+        }
+        if test_floor.is_some() {
+            in_test = true;
+        }
+        out.push(Line { number: (idx + 1) as u32, code, comment, strings, in_test });
+    }
+    out
+}
+
+/// `"` at `quote_end..` closed by exactly `hashes` following `#`s?
+fn closes_raw(chars: &[char], after_quote: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(after_quote + k) == Some(&'#'))
+}
+
+/// Is `chars[i] == 'r'` the start of a raw string (`r"`, `r#`)?
+fn is_raw_start(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('"') => true,
+        Some('#') => {
+            let mut j = i + 1;
+            while chars.get(j) == Some(&'#') {
+                j += 1;
+            }
+            chars.get(j) == Some(&'"')
+        }
+        _ => false,
+    }
+}
+
+/// Is the char before index `i` part of an identifier (so `r` belongs to
+/// a name like `for` / `var`, not a raw-string prefix)?
+fn ident_before(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Byte offset of char index `i` in `s` (lines are scanned as chars but
+/// sliced as bytes for comment capture).
+fn byte_offset(s: &str, i: usize) -> usize {
+    s.char_indices().nth(i).map_or(s.len(), |(b, _)| b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path_of("rust/src/serve/cache.rs"), "serve::cache");
+        assert_eq!(module_path_of("rust/src/serve/mod.rs"), "serve");
+        assert_eq!(module_path_of("rust/src/lib.rs"), "");
+        assert_eq!(module_path_of("rust/src/engine/store.rs"), "engine::store");
+        assert_eq!(module_path_of("rust/src/bin/snapse-lint.rs"), "bin::snapse-lint");
+    }
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let lines = scan("let x = \"a.unwrap()\"; // .unwrap()\nlet y = 1; /* panic! */ z();");
+        assert!(!lines[0].code.contains("unwrap"));
+        assert_eq!(lines[0].strings, vec!["a.unwrap()".to_string()]);
+        assert!(lines[0].comment.contains(".unwrap()"));
+        assert!(lines[1].code.contains("z()"));
+        assert!(!lines[1].code.contains("panic"));
+        assert!(lines[1].comment.contains("panic!"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let lines = scan("let s = r#\"no \" escape.unwrap()\"#; let c = '\\n'; let l: &'a str = s;");
+        assert!(!lines[0].code.contains("unwrap"));
+        assert_eq!(lines[0].strings.len(), 1);
+        // lifetime survives as code, char literal is blanked
+        assert!(lines[0].code.contains("&'a str"));
+    }
+
+    #[test]
+    fn multiline_block_comment_and_string() {
+        let src = "a();\n/* one\ntwo .unwrap()\n*/ b();\nlet s = \"first\nsecond\";\nc();";
+        let lines = scan(src);
+        assert_eq!(lines[1].code.trim(), "");
+        assert!(lines[2].comment.contains(".unwrap()"));
+        assert!(lines[3].code.contains("b()"));
+        assert!(lines[4].code.contains("let s = \"\""));
+        assert_eq!(lines[5].code.trim(), ";");
+        assert_eq!(lines[5].strings, vec!["second".to_string()]);
+        assert!(lines[6].code.contains("c()"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracking() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n  fn t() { y.unwrap(); }\n}\nfn live2() {}";
+        let lines = scan(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test);
+        assert!(lines[2].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn nested_braces_inside_test_region() {
+        let src = "#[cfg(test)]\nmod tests {\n  fn a() { if x { y(); } }\n}\nfn out() {}";
+        let lines = scan(src);
+        assert!(lines[2].in_test);
+        assert!(!lines[4].in_test);
+    }
+}

@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::error::{Error, Result};
+use crate::util::sync::{condvar_wait_recover, LockExt};
 
 /// What a cached exploration is identified by.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -140,7 +141,7 @@ impl ReportCache {
 
     /// Entries currently cached.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.inner.lock_recover().map.len()
     }
 
     /// True when nothing is cached.
@@ -160,7 +161,7 @@ impl ReportCache {
     ) -> Result<(Arc<String>, CacheOutcome)> {
         // fast path / single-flight admission under one lock
         let flight = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock_recover();
             inner.tick += 1;
             let tick = inner.tick;
             if let Some(entry) = inner.map.get_mut(key) {
@@ -184,14 +185,14 @@ impl ReportCache {
         if let Some(flight) = flight {
             // someone else is computing: wait for their verdict
             self.stats.coalesced.fetch_add(1, Ordering::Relaxed);
-            let mut slot = flight.result.lock().unwrap();
-            while slot.is_none() {
-                slot = flight.done.wait(slot).unwrap();
+            let mut slot = flight.result.lock_recover();
+            loop {
+                match slot.as_ref() {
+                    Some(Ok(v)) => return Ok((Arc::clone(v), CacheOutcome::Coalesced)),
+                    Some(Err(e)) => return Err(e.to_error()),
+                    None => slot = condvar_wait_recover(&flight.done, slot),
+                }
             }
-            return match slot.as_ref().unwrap() {
-                Ok(v) => Ok((Arc::clone(v), CacheOutcome::Coalesced)),
-                Err(e) => Err(e.to_error()),
-            };
         }
 
         // this caller owns the flight
@@ -210,7 +211,7 @@ impl ReportCache {
 
         // publish: cache on success, resolve the flight either way
         let flight = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock_recover();
             if let Ok(value) = &outcome {
                 inner.tick += 1;
                 let tick = inner.tick;
@@ -229,12 +230,15 @@ impl ReportCache {
                     .map
                     .insert(key.clone(), Entry { value: Arc::clone(value), last_used: tick });
             }
-            inner.inflight.remove(key).expect("flight registered above")
+            inner.inflight.remove(key)
         };
-        {
+        // the flight was registered by this caller and only this publish
+        // removes it, so `flight` is always Some; if that invariant ever
+        // broke there would simply be no waiters to wake
+        if let Some(flight) = flight {
             // a drain may have resolved the flight already; overwriting is
             // harmless (its waiters were woken and are gone)
-            let mut slot = flight.result.lock().unwrap();
+            let mut slot = flight.result.lock_recover();
             *slot = Some(match &outcome {
                 Ok(v) => Ok(Arc::clone(v)),
                 Err(e) => Err(FlightError::Runtime(e.to_string())),
@@ -253,11 +257,11 @@ impl ReportCache {
     /// `inflight` bookkeeping is never pulled out from under them.
     pub fn drain(&self) {
         let flights: Vec<Arc<Flight>> = {
-            let inner = self.inner.lock().unwrap();
+            let inner = self.inner.lock_recover();
             inner.inflight.values().map(Arc::clone).collect()
         };
         for flight in flights {
-            let mut slot = flight.result.lock().unwrap();
+            let mut slot = flight.result.lock_recover();
             if slot.is_none() {
                 *slot = Some(Err(FlightError::Cancelled(
                     "daemon is draining; computation abandoned".to_string(),

@@ -48,6 +48,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use crate::error::{Error, Result};
+use crate::util::sync::LockExt;
 
 /// Daemon configuration (the `snapse serve` flags).
 #[derive(Debug, Clone)]
@@ -135,7 +136,7 @@ impl Server {
                     loop {
                         // hold the lock across recv: one idle handler
                         // waits productively, the rest queue on the mutex
-                        let conn = rx.lock().unwrap().recv();
+                        let conn = rx.lock_recover().recv();
                         let Ok(stream) = conn else { break };
                         handle_connection(&state, stream, addr);
                     }

@@ -28,6 +28,7 @@ use crate::engine::{ExploreOptions, Explorer, StopReason};
 use crate::error::{Error, Result};
 use crate::matrix::{build_matrix, TransitionMatrix};
 use crate::snp::SnpSystem;
+use crate::util::sync::LockExt;
 use crate::util::JsonValue as J;
 
 /// Configuration budget imposed when a `run` query gives neither `depth`
@@ -135,6 +136,8 @@ impl ServeState {
         ServeState {
             cache: ReportCache::new(cache_capacity),
             explore_workers,
+            // lint: allow(L2) — daemon start time for uptime reporting,
+            // taken once at construction; not a hot-path timer
             started: Instant::now(),
             requests: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
@@ -171,7 +174,7 @@ impl ServeState {
     pub fn pool_for(&self, system_hash: &str, matrix: &TransitionMatrix) -> Arc<BackendPool> {
         let tick = self.pool_tick.fetch_add(1, Ordering::Relaxed) + 1;
         {
-            let mut pools = self.pools.lock().unwrap();
+            let mut pools = self.pools.lock_recover();
             if let Some((pool, last_used)) = pools.get_mut(system_hash) {
                 *last_used = tick;
                 return Arc::clone(pool);
@@ -183,6 +186,8 @@ impl ServeState {
         // loser's Arc is dropped)
         let size = crate::compute::pool::resolve_workers(self.explore_workers);
         let mut fresh = BackendPool::build(&HostBackendFactory::new(matrix.clone()), size)
+            // lint: allow(L1) — HostBackendFactory::create is Ok by
+            // construction (pure allocation, no fallible I/O)
             .expect("host backend factory cannot fail");
         // every query against this system shares one S→S·M memo: repeat
         // queries (different depths, bfs/dfs) start with a warm cache
@@ -192,7 +197,7 @@ impl ServeState {
             DEFAULT_DELTA_CACHE,
         )));
         let pool = Arc::new(fresh);
-        let mut pools = self.pools.lock().unwrap();
+        let mut pools = self.pools.lock_recover();
         if let Some((existing, last_used)) = pools.get_mut(system_hash) {
             *last_used = tick;
             return Arc::clone(existing);
@@ -210,13 +215,13 @@ impl ServeState {
 
     /// Number of live per-system pools.
     pub fn pool_count(&self) -> usize {
-        self.pools.lock().unwrap().len()
+        self.pools.lock_recover().len()
     }
 
     /// Hash-sorted snapshot of the live pools (for `/metrics` and the
     /// health probe — both iterate outside the lock).
     fn pool_snapshot(&self) -> Vec<(String, Arc<BackendPool>)> {
-        let pools = self.pools.lock().unwrap();
+        let pools = self.pools.lock_recover();
         let mut v: Vec<_> =
             pools.iter().map(|(k, (p, _))| (k.clone(), Arc::clone(p))).collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
@@ -244,7 +249,7 @@ impl ServeState {
             ("delta_hits", J::num(s.delta_hits as f64)),
             ("delta_misses", J::num(s.delta_misses as f64)),
         ]);
-        let mut gauges = self.gauges.lock().unwrap();
+        let mut gauges = self.gauges.lock_recover();
         if gauges.len() >= self.cache.capacity() && !gauges.contains_key(system_hash) {
             if let Some(victim) = gauges.keys().next().cloned() {
                 gauges.remove(&victim);
@@ -255,7 +260,7 @@ impl ServeState {
 
     /// The per-system gauges as a JSON object keyed by system hash.
     fn gauges_json(&self) -> J {
-        let gauges = self.gauges.lock().unwrap();
+        let gauges = self.gauges.lock_recover();
         J::Obj(gauges.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
     }
 }

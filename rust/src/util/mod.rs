@@ -9,11 +9,13 @@ pub mod cancel;
 pub mod fmt;
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use bitvec::BitVec;
 pub use cancel::{CancelKind, CancelToken};
 pub use json::JsonValue;
 pub use rng::Rng;
+pub use sync::{condvar_wait_recover, LockExt};
 
 /// FxHash-style mixing hasher (Firefox/rustc's hash), used for the visited
 /// store: much faster than SipHash for the short integer keys we hash and

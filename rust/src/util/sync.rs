@@ -1,0 +1,79 @@
+//! Poison-recovering lock acquisition.
+//!
+//! The daemon's shared state (`serve::cache`, `serve::router`,
+//! `compute::pool`, the engine's sharded stores) must survive a panicking
+//! exploration thread: std's `Mutex` poisons itself when a holder panics,
+//! and the conventional `.lock().unwrap()` then propagates that panic into
+//! every *other* thread that touches the lock — one bad request wedges the
+//! whole daemon. Every structure guarded by these locks is kept
+//! consistent by construction (state transitions complete before guards
+//! drop, or torn state is benign — e.g. a cache entry that is simply
+//! absent), so the right response to poison is to take the lock anyway.
+//!
+//! [`LockExt::lock_recover`] and [`condvar_wait_recover`] encode that
+//! policy in one place; the `snapse-lint` L1 rule rejects fresh
+//! `.lock().unwrap()` sites so the policy stays applied.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Poison-recovering extension for [`Mutex`].
+pub trait LockExt<T> {
+    /// Acquire the lock, recovering the guard from a poisoned mutex
+    /// instead of panicking.
+    fn lock_recover(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn lock_recover(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// [`Condvar::wait`] that recovers the guard when the mutex was poisoned
+/// by another thread panicking mid-update. Spurious-wakeup semantics are
+/// unchanged; callers keep their usual `while` re-check loop.
+pub fn condvar_wait_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // a plain .lock().unwrap() would panic here; recovery proceeds
+        assert_eq!(*m.lock_recover(), 7);
+        *m.lock_recover() = 8;
+        assert_eq!(*m.lock_recover(), 8);
+    }
+
+    #[test]
+    fn condvar_wait_recovers_and_wakes() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let waker = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            *m.lock_recover() = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut done = m.lock_recover();
+        while !*done {
+            done = condvar_wait_recover(cv, done);
+        }
+        waker.join().unwrap();
+    }
+}

@@ -1,0 +1,8 @@
+// lint: module serve::fixture
+// Clean case: the same panicking call, excused by a justified allow.
+// This file is lint corpus only — it is never compiled.
+
+fn handler(xs: &[u32]) -> u32 {
+    // lint: allow(L1) — slice is non-empty by construction (caller validates)
+    *xs.first().unwrap()
+}

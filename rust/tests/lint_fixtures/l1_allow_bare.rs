@@ -1,0 +1,8 @@
+// lint: module serve::fixture
+// Bad-allow case: the allow matches but gives no justification, which
+// is itself a finding. This file is lint corpus only — never compiled.
+
+fn handler(xs: &[u32]) -> u32 {
+    // lint: allow(L1)
+    *xs.first().unwrap()
+}

@@ -1,0 +1,8 @@
+// lint: module serve::fixture
+// L1 trigger: a raw `.unwrap()` on a lock in daemon-scope code.
+// This file is lint corpus only — it is never compiled.
+
+fn handler(state: &std::sync::Mutex<u32>) -> u32 {
+    let guard = state.lock().unwrap();
+    *guard
+}

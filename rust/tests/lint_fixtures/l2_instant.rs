@@ -1,0 +1,10 @@
+// lint: module engine::fixture
+// L2 trigger: an ungated timer syscall outside obs/util::cancel.
+// This file is lint corpus only — it is never compiled.
+
+use std::time::Instant;
+
+fn step() -> u64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_micros() as u64
+}

@@ -1,0 +1,13 @@
+// lint: module engine::fixture
+// L3 trigger: a per-child allocation inside a hotpath fence.
+// This file is lint corpus only — it is never compiled.
+
+fn fold(children: &[Vec<u64>]) -> Vec<Vec<u64>> {
+    let mut out = Vec::new();
+    // lint: hotpath — steady-state loop must not allocate per child
+    for child in children {
+        out.push(child.clone());
+    }
+    // lint: hotpath-end
+    out
+}

@@ -1,0 +1,7 @@
+// lint: module compute::fixture
+// L4 trigger: a span name outside the fixed phase vocabulary.
+// This file is lint corpus only — it is never compiled.
+
+fn instrument(trace: &snapse::obs::Trace) {
+    trace.event(None, "warmup", &[]);
+}

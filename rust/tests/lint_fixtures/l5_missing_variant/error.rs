@@ -1,0 +1,9 @@
+// L5 fixture: a taxonomy with one variant the router never maps.
+// This file is lint corpus only — it is never compiled.
+
+#[derive(Debug)]
+pub enum Error {
+    Io(String),
+    Parse { line: u32 },
+    Unmapped(String),
+}

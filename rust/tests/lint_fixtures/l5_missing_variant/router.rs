@@ -1,0 +1,10 @@
+// L5 fixture: the status mapping that forgot `Unmapped`.
+// This file is lint corpus only — it is never compiled.
+
+fn error_response(e: &Error) -> (u16, &'static str) {
+    match e {
+        Error::Io(_) => (500, "io"),
+        Error::Parse { .. } => (400, "parse"),
+        _ => (500, "internal"),
+    }
+}

@@ -1,0 +1,7 @@
+// lint: module engine::fixture
+// L6 trigger: an `unsafe` block with no SAFETY comment.
+// This file is lint corpus only — it is never compiled.
+
+fn read_first(xs: &[u32]) -> u32 {
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,144 @@
+//! `snapse-lint` golden tests: the repository's own sources must pass
+//! the contract linter clean, and every rule must fire on its fixture.
+//!
+//! This is the same check CI runs as its first gate
+//! (`cargo run --release --bin snapse-lint -- --check`), kept in-suite
+//! so `cargo test` alone catches contract regressions.
+
+use std::path::{Path, PathBuf};
+
+use snapse::lint::{self, rules};
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> PathBuf {
+    repo_root().join("rust/tests/lint_fixtures").join(name)
+}
+
+/// The golden invariant: the tree this test compiled from is clean.
+#[test]
+fn repository_passes_clean() {
+    let report = lint::run(repo_root());
+    assert!(
+        report.files_scanned > 40,
+        "expected to scan the whole rust/src tree, saw {} files",
+        report.files_scanned
+    );
+    assert!(
+        report.is_clean(),
+        "snapse-lint found contract violations in the repository:\n{}",
+        report.to_table()
+    );
+}
+
+/// Every per-file rule fires on its dedicated fixture.
+#[test]
+fn fixtures_trigger_each_rule() {
+    for (file, rule, expect_msg) in [
+        ("l1_unwrap.rs", "L1", "non-test"),
+        ("l1_allow_bare.rs", "L1", "justification"),
+        ("l2_instant.rs", "L2", "zero timer syscalls"),
+        ("l3_alloc.rs", "L3", "hotpath"),
+        ("l4_phase.rs", "L4", "PHASE_NAMES"),
+        ("l6_unsafe.rs", "L6", "SAFETY"),
+    ] {
+        let report = lint::run_paths(&[fixture(file)]);
+        assert_eq!(
+            report.findings.len(),
+            1,
+            "{file}: expected exactly one finding, got:\n{}",
+            report.to_table()
+        );
+        let f = &report.findings[0];
+        assert_eq!(f.rule, rule, "{file}: wrong rule: {}", f.message);
+        assert!(
+            f.message.contains(expect_msg),
+            "{file}: message {:?} should mention {:?}",
+            f.message,
+            expect_msg
+        );
+    }
+}
+
+/// A justified allow silences the rule without any residual finding.
+#[test]
+fn justified_allow_is_clean() {
+    let report = lint::run_paths(&[fixture("l1_allow.rs")]);
+    assert!(
+        report.is_clean(),
+        "justified allow should produce no findings:\n{}",
+        report.to_table()
+    );
+}
+
+/// L5: a variant missing from the router's status mapping is reported
+/// at its declaration line.
+#[test]
+fn missing_error_variant_is_reported() {
+    let error_text =
+        std::fs::read_to_string(fixture("l5_missing_variant/error.rs")).expect("fixture");
+    let router_text =
+        std::fs::read_to_string(fixture("l5_missing_variant/router.rs")).expect("fixture");
+    let findings = rules::check_error_taxonomy(&error_text, &router_text, "error.rs");
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "L5");
+    assert!(findings[0].message.contains("Error::Unmapped"));
+    // the real taxonomy maps every variant, so the same check is silent
+    let real_error =
+        std::fs::read_to_string(repo_root().join("rust/src/error.rs")).expect("error.rs");
+    let real_router = std::fs::read_to_string(repo_root().join("rust/src/serve/router.rs"))
+        .expect("router.rs");
+    let real = rules::check_error_taxonomy(&real_error, &real_router, "rust/src/error.rs");
+    assert!(real.is_empty(), "{real:?}");
+}
+
+/// The JSON report is byte-stable across runs and sorted canonically.
+#[test]
+fn json_report_is_deterministic() {
+    let paths: Vec<PathBuf> = ["l6_unsafe.rs", "l1_unwrap.rs", "l2_instant.rs"]
+        .iter()
+        .map(|f| fixture(f))
+        .collect();
+    let a = lint::run_paths(&paths).to_json();
+    let b = lint::run_paths(&paths).to_json();
+    assert_eq!(a, b);
+    // findings come out sorted by (file, line, rule) regardless of the
+    // order the files were linted in
+    let l1 = a.find("\"L1\"").expect("L1 present");
+    let l2 = a.find("\"L2\"").expect("L2 present");
+    let l6 = a.find("\"L6\"").expect("L6 present");
+    assert!(l1 < l2 && l2 < l6, "findings not in canonical order: {a}");
+    // golden shape for a fixed single-file lint
+    let vocab: Vec<String> = rules::FALLBACK_PHASES.iter().map(|s| s.to_string()).collect();
+    let findings = lint::lint_source(
+        "fixture.rs",
+        "// lint: module serve::fixture\nfn f() { x.unwrap(); }\n",
+        &vocab,
+    );
+    let report = lint::LintReport { findings, files_scanned: 1 }.canonicalize();
+    assert_eq!(
+        report.to_json(),
+        "{\"count\":1,\"files_scanned\":1,\"findings\":[{\"rule\":\"L1\",\
+         \"file\":\"fixture.rs\",\"line\":2,\"message\":\"`.unwrap()` in non-test \
+         `serve::fixture` code: one panicked thread poisons shared state — use a \
+         recovering/structured alternative (util::sync::LockExt, Result) or justify \
+         with `lint: allow(L1)`\"}]}"
+    );
+}
+
+/// The phase vocabulary is parsed from the real `obs::trace` source and
+/// agrees with the exported constant.
+#[test]
+fn phase_vocabulary_parses_from_source() {
+    let trace_text =
+        std::fs::read_to_string(repo_root().join("rust/src/obs/trace.rs")).expect("trace.rs");
+    let vocab = rules::parse_phase_names(&trace_text).expect("PHASE_NAMES found");
+    let exported: Vec<String> =
+        snapse::obs::PHASE_NAMES.iter().map(|s| s.to_string()).collect();
+    assert_eq!(vocab, exported);
+    for phase in ["run", "step", "fold", "checkout", "delta_cache"] {
+        assert!(vocab.iter().any(|v| v == phase), "missing {phase}");
+    }
+}

@@ -184,6 +184,10 @@ fn compressed_round_trip_fuzz_against_plain_mirror() {
             assert_eq!(comp.find(want), Some(id as u32), "trial {trial}: find missed id {id}");
         }
         assert_eq!(comp.len(), plain.len());
+        // structural audit (debug builds): table↔arena bijection, chain
+        // caps, segment containment — in both modes
+        plain.check_invariants();
+        comp.check_invariants();
         // compressed cursor yields the exact interning order
         let mut cur = comp.rows();
         let mut i = 0usize;
@@ -220,4 +224,33 @@ fn edge_values_survive_long_parent_chains() {
         comp.get_into(id as u32, &mut buf);
         assert_eq!(&buf, want, "chain id {id}");
     }
+    comp.check_invariants();
+}
+
+#[test]
+fn delta_cache_invariants_hold_under_concurrent_use() {
+    use snapse::compute::DeltaCache;
+    use std::sync::Arc;
+    let cache = Arc::new(DeltaCache::new(96, 5, 32));
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let cache = Arc::clone(&cache);
+            scope.spawn(move || {
+                let mut row = vec![0i64; 5];
+                for i in 0..300usize {
+                    let bit = (t * 13 + i) % 96;
+                    let mut key = vec![0u64; cache.key_words()];
+                    key[bit >> 6] |= 1u64 << (bit & 63);
+                    if !cache.lookup(&key, &mut row) {
+                        let v = bit as i64 + 1;
+                        cache.insert(&key, &[v, -v, v, -v, v]);
+                    }
+                }
+            });
+        }
+    });
+    cache.check_invariants();
+    let stats = cache.stats();
+    assert!(stats.entries <= 32);
+    assert_eq!(stats.hits + stats.misses, 1200);
 }
