@@ -17,6 +17,11 @@
 //! compressed arena holds `rule_heavy` at ≥ 3× fewer bytes/config than
 //! plain — the acceptance bar for the compressed-store PR.
 //!
+//! A second sweep measures the disk-spillable tier (`--store-mode
+//! spill`) at resident budgets {unbounded, arena/4, arena/16}, reporting
+//! resident/spilled bytes, fault counts and configs/sec — asserting
+//! byte-identity and the resident ceiling before any number is timed.
+//!
 //! Results land in `BENCH_memory.json` in addition to the stdout table.
 //!
 //! ```bash
@@ -69,6 +74,40 @@ fn measure(
         misses = rep.stats.delta_misses;
     }
     (best, visited, arena, hits, misses)
+}
+
+/// One spill-mode exploration per `runs`, best wall-clock; returns
+/// `(seconds, visited, resident_bytes, spilled_bytes, faults)`.
+fn measure_spill(
+    sys: &SnpSystem,
+    budget: usize,
+    spill_budget: u64,
+    runs: u32,
+) -> (f64, usize, u64, u64, u64) {
+    let mut best = f64::INFINITY;
+    let mut visited = 0usize;
+    let mut resident = 0u64;
+    let mut spilled = 0u64;
+    let mut faults = 0u64;
+    for _ in 0..runs {
+        let t = Instant::now();
+        let rep = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first()
+                .max_configs(budget)
+                .store_mode(StoreMode::Spill)
+                .spill_budget(spill_budget),
+        )
+        .run();
+        let secs = t.elapsed().as_secs_f64();
+        std::hint::black_box(rep.visited.len());
+        best = best.min(secs);
+        visited = rep.visited.len();
+        resident = rep.stats.resident_bytes;
+        spilled = rep.stats.spilled_bytes;
+        faults = rep.stats.spill_faults;
+    }
+    (best, visited, resident, spilled, faults)
 }
 
 fn main() {
@@ -155,6 +194,65 @@ fn main() {
             cells[3].3 as f64 / cells[3].2,
             hit_rate,
         );
+        // --- spill tier: resident ceiling sweep over the same workload ---
+        // byte-identity first (the tightest budget is the adversarial
+        // case: maximal eviction/fault traffic), then timing
+        let comp_arena = cells[2].4;
+        let spill_check = Explorer::new(
+            sys,
+            ExploreOptions::breadth_first()
+                .max_configs(budget)
+                .store_mode(StoreMode::Spill)
+                .spill_budget((comp_arena / 16).max(1)),
+        )
+        .run();
+        assert_eq!(
+            spill_check.visited.in_order(),
+            reference.visited.in_order(),
+            "{}: spill output diverged from the plain reference",
+            sys.name
+        );
+        assert_eq!(
+            spill_check.visited.render_all_gen_ck(),
+            reference.visited.render_all_gen_ck(),
+            "{}: spill rendered allGenCk diverged",
+            sys.name
+        );
+        let spill_grid = [
+            ("spill_unbounded", u64::MAX),
+            ("spill_quarter", (comp_arena / 4).max(1)),
+            ("spill_sixteenth", (comp_arena / 16).max(1)),
+        ];
+        let mut spill_cells = Vec::new();
+        for (label, sb) in spill_grid {
+            let (secs, visited, resident, spilled, faults) =
+                measure_spill(sys, budget, sb, runs);
+            if sb != u64::MAX {
+                // the hot-segment cache honors its ceiling up to the
+                // unevictable open/protected segments (≤ 64 KiB each)
+                assert!(
+                    resident <= sb + 2 * 64 * 1024,
+                    "{label}: resident {resident} over budget {sb}",
+                );
+            }
+            spill_cells.push((label, sb, secs, visited, resident, spilled, faults));
+        }
+        assert!(
+            spill_cells[2].6 > 0,
+            "{}: arena/16 budget must fault segments back in",
+            sys.name
+        );
+        println!(
+            "{:<18} {:>8} spill: unbounded {:>9.0} cfg/s | arena/4 {:>9.0} cfg/s ({} faults) | arena/16 {:>9.0} cfg/s ({} faults)",
+            sys.name,
+            spill_cells[0].3,
+            spill_cells[0].3 as f64 / spill_cells[0].2,
+            spill_cells[1].3 as f64 / spill_cells[1].2,
+            spill_cells[1].6,
+            spill_cells[2].3 as f64 / spill_cells[2].2,
+            spill_cells[2].6,
+        );
+
         json_rows.push(JsonValue::obj([
             ("system", JsonValue::str(sys.name.clone())),
             ("note", JsonValue::str(note.to_string())),
@@ -179,6 +277,25 @@ fn main() {
                             ("configs_per_sec", JsonValue::num(*visited as f64 / *secs)),
                             ("delta_hits", JsonValue::num(*hits as f64)),
                             ("delta_misses", JsonValue::num(*misses as f64)),
+                        ])
+                    },
+                )),
+            ),
+            (
+                "spill_grid",
+                JsonValue::arr(spill_cells.iter().map(
+                    |(label, sb, secs, visited, resident, spilled, faults)| {
+                        JsonValue::obj([
+                            ("case", JsonValue::str(label.to_string())),
+                            (
+                                "spill_budget",
+                                JsonValue::num(if *sb == u64::MAX { -1.0 } else { *sb as f64 }),
+                            ),
+                            ("seconds", JsonValue::num(*secs)),
+                            ("resident_bytes", JsonValue::num(*resident as f64)),
+                            ("spilled_bytes", JsonValue::num(*spilled as f64)),
+                            ("spill_faults", JsonValue::num(*faults as f64)),
+                            ("configs_per_sec", JsonValue::num(*visited as f64 / *secs)),
                         ])
                     },
                 )),

@@ -23,13 +23,21 @@ pub fn run(args: &Args) -> Result<()> {
         None => crate::compute::StepMode::Auto,
         Some(v) => crate::compute::StepMode::parse(v)?,
     };
-    // `--store-mode {plain,compressed}`: visited-arena storage ablation
-    // override; ids, allGenCk and every report are byte-identical.
+    // `--store-mode {plain,compressed,spill}`: visited-arena storage
+    // ablation override; ids, allGenCk and every report are
+    // byte-identical.
     let store_mode = match args.opt("store-mode") {
         None => crate::engine::StoreMode::Plain,
         Some(v) => crate::engine::StoreMode::parse(v).ok_or_else(|| {
-            Error::parse("cli", 0, format!("unknown store mode `{v}` (plain|compressed)"))
+            Error::parse("cli", 0, format!("unknown store mode `{v}` (plain|compressed|spill)"))
         })?,
+    };
+    // `--spill-dir PATH` / `--spill-budget BYTES`: spill-file placement
+    // and the resident-byte ceiling for the hot-segment cache; only read
+    // under `--store-mode spill`.
+    let spill = crate::engine::SpillConfig {
+        dir: args.opt("spill-dir").map(std::path::PathBuf::from),
+        budget: args.opt_num::<u64>("spill-budget")?.unwrap_or(u64::MAX),
     };
     // `--delta-cache N`: run-scoped S→S·M memo bound (0 disables and
     // restores the per-batch-memo-only behavior exactly).
@@ -79,7 +87,11 @@ pub fn run(args: &Args) -> Result<()> {
             .spike_repr(spike_repr)
             .step_mode(step_mode)
             .store_mode(store_mode)
+            .spill_budget(spill.budget)
             .delta_cache(delta_cache);
+        if let Some(d) = &spill.dir {
+            opts = opts.spill_dir(d.clone());
+        }
         if let Some(d) = depth {
             opts = opts.max_depth(d);
         }
@@ -183,6 +195,7 @@ pub fn run(args: &Args) -> Result<()> {
         spike_repr,
         step_mode,
         store_mode,
+        spill,
         delta_cache,
         trace: trace.clone(),
         cancel: cancel.clone(),
@@ -210,6 +223,14 @@ pub fn run(args: &Args) -> Result<()> {
         report.metrics.steps_per_sec(),
         report.metrics.total_elapsed
     );
+    // spill_stats is Some only in spill mode, so plain/compressed output
+    // stays byte-identical; the CI spill-smoke greps this line
+    if let Some(sp) = report.visited.spill_stats() {
+        println!(
+            "spill: {} bytes spilled, {} resident, {} faults",
+            sp.spilled_bytes, sp.resident_bytes, sp.faults
+        );
+    }
     if args.flag("levels") {
         println!("{}", report.metrics.render_table());
     }

@@ -6,7 +6,9 @@
 //!                     [--tree FILE.dot] [--json]
 //!                     [--spike-repr auto|dense|sparse]
 //!                     [--step-mode auto|batch|delta]
-//!                     [--store-mode plain|compressed] [--delta-cache N]
+//!                     [--store-mode plain|compressed|spill]
+//!                     [--spill-dir PATH] [--spill-budget BYTES]
+//!                     [--delta-cache N]
 //!                     [--trace FILE.jsonl] [--timings]
 //!                     [--deadline-ms N]
 //!                     [--fault KIND@CALL[:COUNT]] [--fault-seed S]
@@ -160,7 +162,10 @@ fn help_text() -> String {
     s.push_str("      --artifacts DIR --paper-log --tree FILE.dot --json --single-thread\n");
     s.push_str("      --spike-repr auto|dense|sparse (spiking-row representation ablation)\n");
     s.push_str("      --step-mode auto|batch|delta (full successor rows vs S·M deltas)\n");
-    s.push_str("      --store-mode plain|compressed (visited arena: flat rows vs varint deltas)\n");
+    s.push_str("      --store-mode plain|compressed|spill (visited arena: flat rows, varint\n");
+    s.push_str("      deltas, or disk-spillable compressed segments with a hot-segment cache)\n");
+    s.push_str("      --spill-dir PATH --spill-budget BYTES (spill-file placement and the\n");
+    s.push_str("      resident ceiling; identical output at any budget)\n");
     s.push_str("      --delta-cache N (run-scoped S·M memo entries; 0 = off)\n");
     s.push_str("      --trace FILE.jsonl (per-phase span export) --timings (per-level table\n");
     s.push_str("      on stderr); neither changes any report byte\n");

@@ -31,7 +31,7 @@ use crate::compute::{
     BackendPool, DeltaCache, HostBackend, HostBackendFactory, StepBackend, XlaBackendFactory,
     DEFAULT_DELTA_CACHE,
 };
-use crate::engine::{ConfigVector, StopReason, StoreMode, VisitedStore};
+use crate::engine::{ConfigVector, SpillConfig, SpillShared, StopReason, StoreMode, VisitedStore};
 use crate::error::Result;
 use crate::matrix::{build_matrix, TransitionMatrix};
 use crate::snp::SnpSystem;
@@ -78,9 +78,13 @@ pub struct CoordinatorConfig {
     /// Stepping mode for dispatch (auto = delta on delta-native pools;
     /// output is identical either way).
     pub step_mode: crate::compute::StepMode,
-    /// Visited-arena storage mode (plain rows or varint parent-delta
-    /// compression; output is identical either way).
+    /// Visited-arena storage mode (plain rows, varint parent-delta
+    /// compression, or disk-spillable compressed segments; output is
+    /// identical either way).
     pub store_mode: StoreMode,
+    /// Spill-tier knobs (directory and resident-byte budget); only read
+    /// when `store_mode` is [`StoreMode::Spill`].
+    pub spill: SpillConfig,
     /// Run-scoped `S → S·M` delta-cache capacity (0 = off).
     pub delta_cache: usize,
     /// Optional span recorder: a `run` span with per-level `level`
@@ -108,6 +112,7 @@ impl Default for CoordinatorConfig {
             spike_repr: crate::compute::SpikeRepr::Auto,
             step_mode: crate::compute::StepMode::Auto,
             store_mode: StoreMode::Plain,
+            spill: SpillConfig::default(),
             delta_cache: DEFAULT_DELTA_CACHE,
             trace: None,
             cancel: None,
@@ -205,12 +210,19 @@ impl<'a> Coordinator<'a> {
         if let Some(token) = &self.cfg.cancel {
             driver = driver.with_cancel(token.clone());
         }
-        let mut visited = VisitedStore::with_mode(
-            self.cfg.store_mode,
-            self.sys.num_neurons(),
-            self.cfg.max_configs.unwrap_or(4096).min(1 << 16),
-        );
-        visited.insert(c0.clone());
+        let mut visited = match self.cfg.store_mode {
+            StoreMode::Spill => VisitedStore::with_spill(
+                self.sys.num_neurons(),
+                self.cfg.max_configs.unwrap_or(4096).min(1 << 16),
+                SpillShared::new(&self.cfg.spill),
+            ),
+            _ => VisitedStore::with_mode(
+                self.cfg.store_mode,
+                self.sys.num_neurons(),
+                self.cfg.max_configs.unwrap_or(4096).min(1 << 16),
+            ),
+        };
+        visited.try_intern(c0.as_slice())?;
         let mut level = vec![c0];
         let mut halting: Vec<ConfigVector> = Vec::new();
         let mut metrics = Metrics::default();
@@ -361,6 +373,7 @@ mod tests {
             (StoreMode::Plain, DEFAULT_DELTA_CACHE),
             (StoreMode::Compressed, DEFAULT_DELTA_CACHE),
             (StoreMode::Compressed, 0),
+            (StoreMode::Spill, DEFAULT_DELTA_CACHE),
         ] {
             let mut coord = Coordinator::new(
                 &sys,
@@ -379,6 +392,37 @@ mod tests {
         }
         assert_eq!(orders[0], orders[1]);
         assert_eq!(orders[1], orders[2]);
+        assert_eq!(orders[2], orders[3], "spill mode matches plain/compressed");
+    }
+
+    /// A resident budget of one byte forces every sealed segment to disk
+    /// mid-run; the coordinator's output must not change, and the fault
+    /// counters must show the eviction actually happened.
+    #[test]
+    fn spill_tiny_budget_is_byte_identical_and_faults() {
+        let sys = crate::generators::paper_pi();
+        let run = |store_mode, spill| {
+            Coordinator::new(
+                &sys,
+                CoordinatorConfig {
+                    workers: 3,
+                    max_configs: Some(400),
+                    store_mode,
+                    spill,
+                    ..Default::default()
+                },
+            )
+            .run()
+            .unwrap()
+        };
+        let plain = run(StoreMode::Plain, SpillConfig::default());
+        let spilled = run(StoreMode::Spill, SpillConfig { dir: None, budget: 1 });
+        assert_eq!(spilled.visited.in_order(), plain.visited.in_order());
+        assert_eq!(spilled.stop, plain.stop);
+        assert_eq!(spilled.halting, plain.halting);
+        let sp = spilled.visited.spill_stats().expect("spill store reports stats");
+        assert!(sp.spilled_bytes > 0, "tiny budget must evict: {sp:?}");
+        assert!(sp.faults > 0, "intern probes must fault segments back in: {sp:?}");
     }
 
     #[test]

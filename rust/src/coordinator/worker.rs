@@ -224,8 +224,9 @@ impl<'a> LevelDriver<'a> {
             for child in results {
                 // intern by slice: the admission check copies into the
                 // arena only when new, and the already-owned child moves
-                // into the next level without a clone
-                if visited.intern(child.as_slice()).1 {
+                // into the next level without a clone (a spill fault-in
+                // failure propagates as the level's Err)
+                if visited.try_intern(child.as_slice())?.1 {
                     out.next_level.push(child);
                 }
             }

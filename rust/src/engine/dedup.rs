@@ -10,8 +10,12 @@
 //! dense `u32`s in insertion order (so the id sequence *is* `allGenCk`),
 //! and the engine's hot loops pass ids instead of cloned `Vec<u64>`s.
 
+use std::sync::Arc;
+
 use super::config::ConfigVector;
+use super::spill::{SpillShared, SpillStats};
 use super::store::{hash_counts, ConfigStore, RowCursor, StoreMode};
+use crate::error::Result;
 use crate::util::sync::LockExt;
 
 /// Insertion-ordered set of configurations, arena-backed.
@@ -42,10 +46,29 @@ impl VisitedStore {
         VisitedStore { store: ConfigStore::with_mode_capacity(mode, width, configs) }
     }
 
+    /// Empty spill-mode store pre-sized for `configs` entries of `width`
+    /// neurons, charging `shared`'s resident budget. Every store of one
+    /// run passes the same accountant so the budget is global.
+    pub fn with_spill(width: usize, configs: usize, shared: Arc<SpillShared>) -> Self {
+        VisitedStore { store: ConfigStore::with_spill_capacity(width, configs, shared) }
+    }
+
     /// The storage mode of the backing arena.
     #[inline]
     pub fn store_mode(&self) -> StoreMode {
         self.store.mode()
+    }
+
+    /// Spill gauges of the backing accountant (`None` unless spill mode).
+    #[inline]
+    pub fn spill_stats(&self) -> Option<SpillStats> {
+        self.store.spill_stats()
+    }
+
+    /// Path of the spill file, once an eviction created one.
+    #[inline]
+    pub fn spill_file(&self) -> Option<std::path::PathBuf> {
+        self.store.spill_file()
     }
 
     /// Insert; returns `true` if the configuration was new.
@@ -70,6 +93,23 @@ impl VisitedStore {
         self.store.intern_with_parent(counts, parent)
     }
 
+    /// Fallible [`VisitedStore::intern`] for spill stores, where an
+    /// eviction or fault-in can fail with a structured I/O error.
+    #[inline]
+    pub fn try_intern(&mut self, counts: &[u64]) -> Result<(u32, bool)> {
+        self.store.try_intern(counts)
+    }
+
+    /// Fallible [`VisitedStore::intern_with_parent`] for spill stores.
+    #[inline]
+    pub fn try_intern_with_parent(
+        &mut self,
+        counts: &[u64],
+        parent: Option<u32>,
+    ) -> Result<(u32, bool)> {
+        self.store.try_intern_with_parent(counts, parent)
+    }
+
     /// Membership test.
     #[inline]
     pub fn contains(&self, c: &ConfigVector) -> bool {
@@ -80,6 +120,12 @@ impl VisitedStore {
     #[inline]
     pub fn contains_slice(&self, counts: &[u64]) -> bool {
         self.store.contains(counts)
+    }
+
+    /// Fallible membership test for spill stores.
+    #[inline]
+    pub fn try_contains_slice(&self, counts: &[u64]) -> Result<bool> {
+        self.store.try_contains(counts)
     }
 
     /// The count slice of an interned configuration (ids are handed out
@@ -96,6 +142,12 @@ impl VisitedStore {
     #[inline]
     pub fn read_counts(&self, id: u32, out: &mut Vec<u64>) {
         self.store.get_into(id, out);
+    }
+
+    /// Fallible [`VisitedStore::read_counts`] for spill stores.
+    #[inline]
+    pub fn try_read_counts(&self, id: u32, out: &mut Vec<u64>) -> Result<()> {
+        self.store.try_get_into(id, out)
     }
 
     /// Number of distinct configurations seen.
@@ -243,6 +295,23 @@ impl ShardedVisitedStore {
         ShardedVisitedStore::with_mode(6, mode)
     }
 
+    /// Create with `2^log2_shards` spill-mode stripes, every stripe
+    /// charging the same `shared` accountant — the resident budget is
+    /// global across stripes (and across the fold-side [`VisitedStore`]
+    /// when it shares the accountant too), so a run stays under one
+    /// figure no matter how the hash spreads the keys.
+    pub fn with_spill(log2_shards: u32, shared: Arc<SpillShared>) -> Self {
+        let n = 1usize << log2_shards;
+        ShardedVisitedStore {
+            shards: (0..n)
+                .map(|_| {
+                    std::sync::Mutex::new(ConfigStore::with_spill_shared(Arc::clone(&shared)))
+                })
+                .collect(),
+            mask: n - 1,
+        }
+    }
+
     fn shard_of(&self, counts: &[u64]) -> usize {
         // Each stripe's inner ConfigStore indexes its id table with the
         // LOW bits of this same hash; selecting the stripe from bits 32..
@@ -268,6 +337,12 @@ impl ShardedVisitedStore {
         self.shards[s].lock_recover().intern(counts).1
     }
 
+    /// Fallible [`ShardedVisitedStore::insert_slice`] for spill stripes.
+    pub fn try_insert_slice(&self, counts: &[u64]) -> Result<bool> {
+        let s = self.shard_of(counts);
+        Ok(self.shards[s].lock_recover().try_intern(counts)?.1)
+    }
+
     /// Membership test (lock-striped; safe concurrently with `insert`).
     pub fn contains(&self, c: &ConfigVector) -> bool {
         self.contains_slice(c.as_slice())
@@ -279,6 +354,13 @@ impl ShardedVisitedStore {
     pub fn contains_slice(&self, counts: &[u64]) -> bool {
         let s = self.shard_of(counts);
         self.shards[s].lock_recover().contains_probe(counts)
+    }
+
+    /// Fallible [`ShardedVisitedStore::contains_slice`] for spill
+    /// stripes, where a positive probe can fault a segment from disk.
+    pub fn try_contains_slice(&self, counts: &[u64]) -> Result<bool> {
+        let s = self.shard_of(counts);
+        self.shards[s].lock_recover().try_contains_probe(counts)
     }
 
     /// Total entries across stripes.
@@ -415,6 +497,39 @@ mod tests {
         assert!(comp.contains_slice(&[1, 1, 2]));
         assert!(comp.arena_bytes() > 0);
         assert_eq!(comp.store_mode(), StoreMode::Compressed);
+    }
+
+    #[test]
+    fn spill_mode_is_byte_identical_and_budget_is_shared() {
+        use super::super::spill::SpillConfig;
+        let shared = SpillShared::new(&SpillConfig { dir: None, budget: 1 });
+        let mut plain = VisitedStore::new();
+        let mut sp = VisitedStore::with_spill(3, 8, Arc::clone(&shared));
+        let striped = ShardedVisitedStore::with_spill(2, Arc::clone(&shared));
+        for i in 0..600u64 {
+            let row = [i, i % 7, i.wrapping_mul(0x9E37_79B9)];
+            let parent = if i == 0 { None } else { Some(0u32) };
+            assert_eq!(
+                plain.intern(&row),
+                sp.try_intern_with_parent(&row, parent).unwrap(),
+                "row {i}"
+            );
+            assert!(striped.try_insert_slice(&row).unwrap());
+            assert!(!striped.try_insert_slice(&row).unwrap(), "repeat rejected");
+            assert!(striped.try_contains_slice(&row).unwrap());
+        }
+        assert_eq!(plain.render_all_gen_ck(), sp.render_all_gen_ck());
+        assert_eq!(plain.in_order(), sp.in_order());
+        assert_eq!(striped.len(), 600);
+        // the 1-byte budget forced evictions across both stores
+        let stats = sp.spill_stats().unwrap();
+        assert!(stats.spilled_bytes > 0, "tiny budget must spill");
+        assert!(sp.spill_file().is_some());
+        let mut buf = Vec::new();
+        sp.try_read_counts(599, &mut buf).unwrap();
+        assert_eq!(buf, vec![599, 599 % 7, 599u64.wrapping_mul(0x9E37_79B9)]);
+        assert!(sp.try_contains_slice(&[1, 1, 0x9E37_79B9]).unwrap());
+        assert_eq!(sp.store_mode(), StoreMode::Spill);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use super::applicability::{applicable_rules_into, ApplicabilityMap};
 use super::config::ConfigVector;
 use super::dedup::VisitedStore;
 use super::spiking::{SpikingEnumeration, SpikingVector};
+use super::spill::{SpillConfig, SpillShared};
 use super::stop::StopReason;
 use super::store::StoreMode;
 use super::tree::ComputationTree;
@@ -84,10 +85,15 @@ pub struct ExploreOptions {
     /// every mode.
     pub step_mode: crate::compute::StepMode,
     /// Visited-arena storage mode (`--store-mode`): plain flat `u64`
-    /// rows or varint parent-delta compression. Another pure
-    /// execution-strategy knob — ids, `allGenCk` and every report are
-    /// byte-identical in both modes.
+    /// rows, varint parent-delta compression, or disk-spillable
+    /// compressed segments. Another pure execution-strategy knob — ids,
+    /// `allGenCk` and every report are byte-identical in every mode.
     pub store_mode: StoreMode,
+    /// Spill-tier knobs (`--spill-dir`, `--spill-budget`), effective
+    /// only with [`StoreMode::Spill`]: the resident budget is shared by
+    /// every store of the run (fold-side arena + pre-filter stripes),
+    /// and the spill file lands in `dir` (default: the OS temp dir).
+    pub spill: SpillConfig,
     /// Run-scoped `S → S·M` delta-cache capacity (`--delta-cache N`,
     /// distinct spiking vectors). `0` disables the cache, restoring the
     /// per-batch-memo-only behavior exactly. Ignored on shared-pool runs
@@ -126,6 +132,7 @@ impl ExploreOptions {
             spike_repr: crate::compute::SpikeRepr::Auto,
             step_mode: crate::compute::StepMode::Auto,
             store_mode: StoreMode::Plain,
+            spill: SpillConfig::default(),
             delta_cache: DEFAULT_DELTA_CACHE,
             trace: None,
             timings: false,
@@ -192,6 +199,19 @@ impl ExploreOptions {
         self
     }
 
+    /// Bound the spill tier's resident bytes (`--spill-budget`; spill
+    /// mode only — segments past the budget evict to disk).
+    pub fn spill_budget(mut self, bytes: u64) -> Self {
+        self.spill.budget = bytes;
+        self
+    }
+
+    /// Direct the spill file to `dir` (`--spill-dir`; spill mode only).
+    pub fn spill_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.spill.dir = Some(dir.into());
+        self
+    }
+
     /// Bound the run-scoped delta cache (`--delta-cache`; 0 disables).
     pub fn delta_cache(mut self, capacity: usize) -> Self {
         self.delta_cache = capacity;
@@ -239,12 +259,21 @@ pub struct ExploreStats {
     pub spike_repr: &'static str,
     /// Concrete stepping mode used (`"batch"`/`"delta"`).
     pub step_mode: &'static str,
-    /// Visited-arena storage mode used (`"plain"`/`"compressed"`).
+    /// Visited-arena storage mode used
+    /// (`"plain"`/`"compressed"`/`"spill"`).
     pub store_mode: &'static str,
     /// Bytes of configuration payload held by the visited arena at the
     /// end of the run (peak — the arena only grows). Divide by the
-    /// visited count for bytes/config.
+    /// visited count for bytes/config. In spill mode this is the
+    /// *logical* figure (resident + spilled); the split is below.
     pub arena_bytes: u64,
+    /// Spill mode: cumulative bytes written to the spill file (0 in the
+    /// in-RAM modes, and in spill runs that never exceeded the budget).
+    pub spilled_bytes: u64,
+    /// Spill mode: segment bytes resident in RAM at the end of the run.
+    pub resident_bytes: u64,
+    /// Spill mode: segments faulted back from the spill file.
+    pub spill_faults: u64,
     /// Run-scoped delta-cache capacity in effect (0 = cache off).
     pub delta_cache_capacity: usize,
     /// Delta-cache hits attributed to this run. On a shared (pool) cache
@@ -606,8 +635,14 @@ fn run_serial(
     // Pre-size the arena + id table toward the run's own bound (clamped —
     // a huge --configs cap must not pre-commit memory the exploration may
     // never touch); growth handles the tail.
-    let mut visited =
-        VisitedStore::with_mode(opts.store_mode, n, visited_capacity_hint(opts.max_configs));
+    let mut visited = match opts.store_mode {
+        StoreMode::Spill => VisitedStore::with_spill(
+            n,
+            visited_capacity_hint(opts.max_configs),
+            SpillShared::new(&opts.spill),
+        ),
+        _ => VisitedStore::with_mode(opts.store_mode, n, visited_capacity_hint(opts.max_configs)),
+    };
     let mut tree = if opts.record_tree { Some(ComputationTree::new()) } else { None };
     let mut halting_configs = Vec::new();
     let mut stats = ExploreStats {
@@ -621,7 +656,7 @@ fn run_serial(
     let mut saw_zero = false;
 
     let root_node = tree.as_mut().map(|t| t.set_root(c0.clone())).unwrap_or(0);
-    let (root_id, _) = visited.intern(c0.as_slice());
+    let (root_id, _) = visited.try_intern(c0.as_slice())?;
     let mut queue: std::collections::VecDeque<Pending> = std::collections::VecDeque::new();
     queue.push_back(Pending { id: root_id, depth: 0, node: root_node });
 
@@ -692,7 +727,7 @@ fn run_serial(
                     continue;
                 }
             }
-            visited.read_counts(pending.id, &mut parent_buf);
+            visited.try_read_counts(pending.id, &mut parent_buf)?;
             let cfg = parent_buf.as_slice();
             applicable_rules_into(sys, cfg, &mut map);
             stats.expanded += 1;
@@ -784,7 +819,7 @@ fn run_serial(
                 child_buf.push(v as u64);
             }
             let depth = parent_depth + 1;
-            let (child_id, is_new) = visited.intern_with_parent(&child_buf, Some(parent_id));
+            let (child_id, is_new) = visited.try_intern_with_parent(&child_buf, Some(parent_id))?;
             // tree mode owns its configurations: build the child once,
             // clone into the edge, reuse for the node lookup
             let node = match tree.as_mut() {
@@ -828,6 +863,22 @@ fn run_serial(
         t.end(r, "run", &[("steps", stats.steps), ("configs", visited.len() as u64)]);
     }
     stats.arena_bytes = visited.arena_bytes() as u64;
+    if let Some(sp) = visited.spill_stats() {
+        stats.resident_bytes = sp.resident_bytes;
+        stats.spilled_bytes = sp.spilled_bytes;
+        stats.spill_faults = sp.faults;
+        if let Some(t) = trace {
+            t.event(
+                root_span,
+                "spill",
+                &[
+                    ("resident_bytes", sp.resident_bytes),
+                    ("spilled_bytes", sp.spilled_bytes),
+                    ("faults", sp.faults),
+                ],
+            );
+        }
+    }
     if let (Some(c), Some((h0, m0))) = (cache, cache_base) {
         stats.delta_cache_capacity = c.capacity();
         let (h1, m1) = c.snapshot();
@@ -1104,6 +1155,44 @@ mod tests {
             (reference.visited.len() * sys.num_neurons() * 8) as u64,
             "plain arena is exactly 8 bytes per count"
         );
+    }
+
+    #[test]
+    fn spill_store_is_byte_identical_and_tiny_budget_faults() {
+        let sys = crate::generators::paper_pi();
+        let reference =
+            Explorer::new(&sys, ExploreOptions::breadth_first().max_configs(400)).run();
+        // unbounded budget: identical output, no file, no faults
+        let unbounded = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_configs(400).store_mode(StoreMode::Spill),
+        )
+        .run();
+        assert_eq!(
+            unbounded.to_json("paper_pi").to_string_pretty(),
+            reference.to_json("paper_pi").to_string_pretty()
+        );
+        assert_eq!(unbounded.stats.store_mode, "spill");
+        assert_eq!(unbounded.stats.spilled_bytes, 0, "unbounded budget never spills");
+        assert_eq!(unbounded.stats.spill_faults, 0);
+        assert!(unbounded.stats.resident_bytes > 0);
+        // 1-byte budget: sealed segments evict mid-run, probes and
+        // parent-chain decodes fault them back — output still identical
+        let spilled = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first()
+                .max_configs(400)
+                .store_mode(StoreMode::Spill)
+                .spill_budget(1),
+        )
+        .run();
+        assert_eq!(
+            spilled.to_json("paper_pi").to_string_pretty(),
+            reference.to_json("paper_pi").to_string_pretty()
+        );
+        assert_eq!(spilled.render_all_gen_ck(), reference.render_all_gen_ck());
+        assert!(spilled.stats.spilled_bytes > 0, "budget below arena size must evict");
+        assert!(spilled.stats.spill_faults > 0, "evicted segments must fault back");
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod input;
 mod parallel;
 mod random_walk;
 mod spiking;
+mod spill;
 mod stop;
 mod store;
 pub mod trace;
@@ -24,6 +25,7 @@ pub use dedup::{ShardedVisited, ShardedVisitedStore, VisitedStore};
 pub use explorer::{ExploreOptions, Explorer, ExploreReport, ExploreStats, SearchOrder};
 pub use random_walk::{RandomWalk, WalkRecord};
 pub use spiking::{SpikingEnumeration, SpikingVector};
+pub use spill::{SpillConfig, SpillShared, SpillStats, SpillTier};
 pub use stop::StopReason;
 pub use store::{ConfigStore, RowCursor, StoreMode};
 pub use trace::{generated_set, generated_set_budgeted, generated_set_with_workers, SpikeTrace};

@@ -48,7 +48,9 @@ use super::config::ConfigVector;
 use super::dedup::{ShardedVisitedStore, VisitedStore};
 use super::explorer::{level_slot, ExploreOptions, ExploreReport, ExploreStats, SearchOrder};
 use super::spiking::SpikingEnumeration;
+use super::spill::SpillShared;
 use super::stop::StopReason;
+use super::store::StoreMode;
 use crate::compute::{BackendFactory, BackendPool, DeltaCache, PooledBackend, SpikeBuf, StepBatch};
 use crate::snp::SnpSystem;
 use crate::util::sync::LockExt;
@@ -213,14 +215,32 @@ pub(crate) fn run_pipelined_on(
     // shared across runs; diffing attributes this window's traffic).
     let cache_base = pool.delta_cache().map(|c| c.snapshot());
 
-    let store = ShardedVisitedStore::with_default_shards_mode(opts.store_mode);
-    let mut visited = VisitedStore::with_mode(
-        opts.store_mode,
-        n,
-        super::explorer::visited_capacity_hint(opts.max_configs),
-    );
-    let (root_id, _) = visited.intern(c0.as_slice());
-    store.insert(&c0);
+    // In spill mode the striped pre-filter and the fold arena share one
+    // budget accountant (and one spill file), so the resident ceiling
+    // covers every tier in the run, not each tier separately.
+    let (store, mut visited) = match opts.store_mode {
+        StoreMode::Spill => {
+            let shared = SpillShared::new(&opts.spill);
+            (
+                ShardedVisitedStore::with_spill(6, Arc::clone(&shared)),
+                VisitedStore::with_spill(
+                    n,
+                    super::explorer::visited_capacity_hint(opts.max_configs),
+                    shared,
+                ),
+            )
+        }
+        _ => (
+            ShardedVisitedStore::with_default_shards_mode(opts.store_mode),
+            VisitedStore::with_mode(
+                opts.store_mode,
+                n,
+                super::explorer::visited_capacity_hint(opts.max_configs),
+            ),
+        ),
+    };
+    let (root_id, _) = visited.try_intern(c0.as_slice())?;
+    store.try_insert_slice(c0.as_slice())?;
 
     let mut stats = ExploreStats {
         workers,
@@ -388,11 +408,22 @@ pub(crate) fn run_pipelined_on(
                         }
                     }
                     // intern straight from the flat payload: one arena
-                    // copy when new, nothing when a late duplicate
+                    // copy when new, nothing when a late duplicate (a
+                    // spill-tier fault-in failure becomes the run's Err)
                     let slice = &res.counts[i * n..(i + 1) * n];
-                    let (id, is_new) = visited.intern_with_parent(slice, Some(res.parents[i]));
+                    let (id, is_new) =
+                        match visited.try_intern_with_parent(slice, Some(res.parents[i])) {
+                            Ok(v) => v,
+                            Err(e) => {
+                                run_error = Some(e);
+                                break 'outer;
+                            }
+                        };
                     if is_new {
-                        store.insert_slice(slice);
+                        if let Err(e) = store.try_insert_slice(slice) {
+                            run_error = Some(e);
+                            break 'outer;
+                        }
                         new_in_chunk += 1;
                         depth_reached = depth_reached.max(depth);
                         queue.push_back(PendingP { id, depth });
@@ -461,7 +492,10 @@ pub(crate) fn run_pipelined_on(
                     if round_depth.is_none() {
                         round_depth = Some(pending.depth);
                     }
-                    visited.read_counts(pending.id, &mut parent_buf);
+                    if let Err(e) = visited.try_read_counts(pending.id, &mut parent_buf) {
+                        run_error = Some(e);
+                        break 'outer;
+                    }
                     let cfg = parent_buf.as_slice();
                     applicable_rules_into(sys, cfg, &mut map);
                     stats.expanded += 1;
@@ -554,6 +588,24 @@ pub(crate) fn run_pipelined_on(
         t.end(rt, "run", &[("steps", stats.steps), ("configs", visited.len() as u64)]);
     }
     stats.arena_bytes = visited.arena_bytes() as u64;
+    if let Some(sp) = visited.spill_stats() {
+        // the shared accountant already aggregates the striped
+        // pre-filter and the fold arena, so these gauges cover both
+        stats.resident_bytes = sp.resident_bytes;
+        stats.spilled_bytes = sp.spilled_bytes;
+        stats.spill_faults = sp.faults;
+        if let Some(t) = trace {
+            t.event(
+                root_span,
+                "spill",
+                &[
+                    ("resident_bytes", sp.resident_bytes),
+                    ("spilled_bytes", sp.spilled_bytes),
+                    ("faults", sp.faults),
+                ],
+            );
+        }
+    }
     if let (Some(c), Some((h0, m0))) = (pool.delta_cache(), cache_base) {
         stats.delta_cache_capacity = c.capacity();
         let (h1, m1) = c.snapshot();
@@ -634,11 +686,16 @@ fn collect_fresh(
             }
             row_buf.push(v as u64);
         }
-        // definite-duplicate pre-filter (rule 2)
-        if !store.contains_slice(row_buf) {
-            counts.extend_from_slice(row_buf);
-            depths.push(chunk.depths[row]);
-            parents.push(chunk.parents[row]);
+        // definite-duplicate pre-filter (rule 2); a spill fault-in
+        // failure surfaces as a structured chunk error, never a panic
+        match store.try_contains_slice(row_buf) {
+            Ok(true) => {}
+            Ok(false) => {
+                counts.extend_from_slice(row_buf);
+                depths.push(chunk.depths[row]);
+                parents.push(chunk.parents[row]);
+            }
+            Err(e) => return store_error_result(chunk.seq, &e),
         }
     }
     // lint: hotpath-end
@@ -651,6 +708,22 @@ fn collect_fresh(
         rows: 0,
         eval_us: 0,
         error: None,
+    }
+}
+
+/// Cold error path of [`collect_fresh`]: the striped store's spill tier
+/// failed to fault a segment back in (truncated or corrupted spill
+/// file). Allocating the error result freely is fine off the hot path.
+fn store_error_result(seq: u64, e: &crate::Error) -> ChunkResult {
+    ChunkResult {
+        seq,
+        counts: Vec::new(),
+        depths: Vec::new(),
+        parents: Vec::new(),
+        level: 0,
+        rows: 0,
+        eval_us: 0,
+        error: Some(e.to_string()),
     }
 }
 
@@ -839,6 +912,46 @@ mod tests {
         assert_eq!(off.visited.in_order(), baseline.visited.in_order());
         assert_eq!(off.stats.delta_cache_capacity, 0);
         assert_eq!((off.stats.delta_hits, off.stats.delta_misses), (0, 0));
+    }
+
+    /// Spill mode at worker count 4: unbounded budget is byte-identical
+    /// with zero fault traffic; a 1-byte budget forces mid-run eviction
+    /// (shared across the striped pre-filter and the fold arena) and the
+    /// visited order still matches the serial plain reference exactly.
+    #[test]
+    fn spill_store_is_byte_identical_in_parallel_and_tiny_budget_faults() {
+        use super::super::store::StoreMode;
+        let sys = crate::generators::ring_with_branching(3, 2, 2);
+        let baseline = Explorer::new(&sys, ExploreOptions::breadth_first()).run();
+        let unbounded = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().workers(4).store_mode(StoreMode::Spill),
+        )
+        .run();
+        assert_eq!(unbounded.visited.in_order(), baseline.visited.in_order());
+        assert_eq!(unbounded.halting_configs, baseline.halting_configs);
+        assert_eq!(unbounded.stop, baseline.stop);
+        assert_eq!(unbounded.stats.store_mode, "spill");
+        assert!(unbounded.stats.resident_bytes > 0, "hot tier holds the arena");
+        assert_eq!(unbounded.stats.spilled_bytes, 0, "unbounded budget never spills");
+        assert_eq!(unbounded.stats.spill_faults, 0);
+
+        let pi = crate::generators::paper_pi();
+        let serial =
+            Explorer::new(&pi, ExploreOptions::breadth_first().max_configs(400)).run();
+        let spilled = Explorer::new(
+            &pi,
+            ExploreOptions::breadth_first()
+                .max_configs(400)
+                .workers(4)
+                .store_mode(StoreMode::Spill)
+                .spill_budget(1),
+        )
+        .run();
+        // under a max_configs cap the visited prefix is the contract
+        assert_eq!(spilled.visited.in_order(), serial.visited.in_order());
+        assert!(spilled.stats.spilled_bytes > 0, "tiny budget must evict");
+        assert!(spilled.stats.spill_faults > 0, "probes must fault segments back in");
     }
 
     #[test]

@@ -1,0 +1,700 @@
+//! Disk-spillable segment tier for the compressed visited arena.
+//!
+//! The compressed [`ConfigStore`](super::store::ConfigStore) already
+//! writes its varint parent-delta entries into fixed-size append-only
+//! segments precisely so the segment can become a paging unit. This
+//! module supplies that pager: a [`SpillTier`] keeps a bounded set of
+//! *hot* segments resident in RAM and evicts cold ones (clock
+//! second-chance over per-segment reference bits) to an append-only
+//! spill file, faulting them back on demand via
+//! [`std::os::unix::fs::FileExt::read_exact_at`]. std-only — no mmap,
+//! no new dependencies.
+//!
+//! The id table, the 1-byte probe tags, and the per-entry offset/chain
+//! index all stay resident in the owning store, so the common negative
+//! probe (a genuinely new configuration) almost never touches disk;
+//! positive probes and parent-chain decodes fault at most a handful of
+//! segments, and BFS locality keeps parents clustered in recently
+//! written segments.
+//!
+//! Every tier of one run shares a single [`SpillShared`] accountant: one
+//! global resident-byte budget, one append-only spill file (offsets
+//! reserved atomically, so the fold-side store and all sharded stripes
+//! interleave safely), and the `resident`/`spilled`/`fault` gauges the
+//! reports surface. The file is created lazily on the first eviction —
+//! an unbounded budget never touches the filesystem — and removed when
+//! the last tier holding the accountant drops.
+//!
+//! Durability is *not* a goal: the file is a cache extension, private to
+//! one run. Integrity *is*: each sealed segment carries an Fx checksum,
+//! verified on every fault-in, so a truncated or corrupted spill file
+//! surfaces as a structured [`Error`](crate::Error) — never a panic and
+//! never silently wrong decode bytes.
+
+use std::hash::Hasher;
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::util::sync::LockExt;
+
+use super::store::SEG_BYTES;
+
+/// Process-wide sequence for spill file names (uniqueness within the
+/// process; the pid distinguishes processes).
+static FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// User-facing spill knobs (`--spill-dir` / `--spill-budget`).
+#[derive(Debug, Clone)]
+pub struct SpillConfig {
+    /// Directory for the spill file (`None` = the OS temp directory).
+    pub dir: Option<PathBuf>,
+    /// Resident-byte budget across every tier sharing one accountant.
+    /// `u64::MAX` (the default) never evicts and never creates a file.
+    pub budget: u64,
+}
+
+impl Default for SpillConfig {
+    fn default() -> Self {
+        SpillConfig { dir: None, budget: u64::MAX }
+    }
+}
+
+/// Point-in-time spill gauges (see [`SpillShared::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Compressed segment bytes currently resident in RAM.
+    pub resident_bytes: u64,
+    /// Total bytes appended to the spill file (monotone; nonzero iff
+    /// eviction ever happened).
+    pub spilled_bytes: u64,
+    /// Segments faulted back from disk (monotone).
+    pub faults: u64,
+}
+
+/// The open spill file plus its path (for cleanup and error text).
+#[derive(Debug)]
+struct SpillFile {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+/// Run-scoped budget accountant and spill file, shared by every
+/// [`SpillTier`] of one run via `Arc`.
+#[derive(Debug)]
+pub struct SpillShared {
+    /// Resident-byte ceiling across all sharing tiers. Soft by one open
+    /// segment plus one protected (just-faulted) segment per tier.
+    budget: u64,
+    /// Segment size tiers roll over at. [`SEG_BYTES`] unbounded; scaled
+    /// down toward `budget / 4` (floor 512) when a budget is set, so a
+    /// tight budget still gets sealed — hence evictable — segments.
+    /// Purely an internal paging granularity: entry bytes, ids, and all
+    /// reports are identical for any value.
+    seg_bytes: usize,
+    /// Directory the spill file is created in.
+    dir: PathBuf,
+    /// Segment bytes currently resident across all sharing tiers.
+    resident: AtomicU64,
+    /// Fault-ins across all sharing tiers.
+    faults: AtomicU64,
+    /// Next free byte offset in the spill file (= bytes ever spilled).
+    cursor: AtomicU64,
+    /// Lazily created append-only spill file.
+    file: Mutex<Option<SpillFile>>,
+}
+
+impl SpillShared {
+    /// Fresh accountant for one run.
+    pub fn new(cfg: &SpillConfig) -> Arc<SpillShared> {
+        let seg_bytes = if cfg.budget == u64::MAX {
+            SEG_BYTES
+        } else {
+            (cfg.budget / 4).clamp(512, SEG_BYTES as u64) as usize
+        };
+        Arc::new(SpillShared {
+            budget: cfg.budget,
+            seg_bytes,
+            dir: cfg.dir.clone().unwrap_or_else(std::env::temp_dir),
+            resident: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            cursor: AtomicU64::new(0),
+            file: Mutex::new(None),
+        })
+    }
+
+    /// The configured resident-byte budget.
+    #[inline]
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// The segment size tiers roll over at (see the `seg_bytes` field).
+    #[inline]
+    pub fn seg_bytes(&self) -> usize {
+        self.seg_bytes
+    }
+
+    /// Current gauges.
+    pub fn stats(&self) -> SpillStats {
+        SpillStats {
+            resident_bytes: self.resident.load(Ordering::Relaxed),
+            spilled_bytes: self.cursor.load(Ordering::Relaxed),
+            faults: self.faults.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Path of the spill file, once the first eviction created it.
+    pub fn file_path(&self) -> Option<PathBuf> {
+        self.file.lock_recover().as_ref().map(|f| f.path.clone())
+    }
+
+    /// Open the spill file if it does not exist yet.
+    fn ensure_file(&self) -> Result<()> {
+        let mut guard = self.file.lock_recover();
+        if guard.is_some() {
+            return Ok(());
+        }
+        let seq = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path =
+            self.dir.join(format!("snapse-spill-{}-{seq}.bin", std::process::id()));
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        *guard = Some(SpillFile { file, path });
+        Ok(())
+    }
+
+    /// Append `bytes` to the spill file; returns their file offset.
+    /// Offsets are reserved atomically so concurrent tiers interleave
+    /// without coordination beyond the brief file-handle lock.
+    fn write_segment(&self, bytes: &[u8]) -> Result<u64> {
+        self.ensure_file()?;
+        let off = self.cursor.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let guard = self.file.lock_recover();
+        let Some(sf) = guard.as_ref() else {
+            return Err(Error::runtime("spill file vanished during eviction"));
+        };
+        sf.file
+            .write_all_at(bytes, off)
+            .map_err(|e| Error::io(sf.path.display().to_string(), e))?;
+        Ok(off)
+    }
+
+    /// Read `len` bytes at `off` from the spill file.
+    fn read_segment(&self, off: u64, len: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; len];
+        let guard = self.file.lock_recover();
+        let Some(sf) = guard.as_ref() else {
+            return Err(Error::runtime(
+                "spill segment recorded on disk but no spill file is open",
+            ));
+        };
+        sf.file
+            .read_exact_at(&mut buf, off)
+            .map_err(|e| Error::io(sf.path.display().to_string(), e))?;
+        Ok(buf)
+    }
+}
+
+impl Drop for SpillShared {
+    fn drop(&mut self) {
+        // best-effort cleanup: the spill file is run-private scratch
+        let guard = match self.file.get_mut() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(sf) = guard.take() {
+            drop(sf.file);
+            let _ = std::fs::remove_file(&sf.path);
+        }
+    }
+}
+
+/// Integrity checksum over a sealed segment's bytes.
+fn seg_checksum(bytes: &[u8]) -> u64 {
+    let mut h = crate::util::FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+/// One segment's residency state.
+#[derive(Debug)]
+struct SegSlot {
+    /// Resident bytes (`None` = evicted to disk).
+    bytes: Option<Vec<u8>>,
+    /// Logical segment length (fixed once sealed).
+    len: u32,
+    /// Fx checksum of the sealed bytes (meaningful once `sealed`).
+    checksum: u64,
+    /// File offset once written out (re-evictions reuse it — segments
+    /// are immutable after sealing, so one write is enough forever).
+    disk: Option<u64>,
+    /// Clock second-chance bit, set on every access.
+    referenced: bool,
+    /// Sealed segments are immutable and evictable; the open (last)
+    /// segment is neither.
+    sealed: bool,
+}
+
+/// Mutable tier state behind the lock.
+#[derive(Debug)]
+struct TierInner {
+    slots: Vec<SegSlot>,
+    /// Clock hand for eviction.
+    clock: usize,
+    /// Total logical bytes across all segments (resident or spilled).
+    logical: u64,
+}
+
+/// One store's segment cache over the shared spill accountant.
+///
+/// Interior-mutable (`&self` API) because decode paths run behind `&self`
+/// store borrows; the per-tier mutex is uncontended in the serial engine
+/// and per-stripe in the sharded store.
+#[derive(Debug)]
+pub struct SpillTier {
+    shared: Arc<SpillShared>,
+    inner: Mutex<TierInner>,
+}
+
+impl SpillTier {
+    /// Empty tier over `shared`.
+    pub fn new(shared: Arc<SpillShared>) -> Self {
+        SpillTier {
+            shared,
+            inner: Mutex::new(TierInner { slots: Vec::new(), clock: 0, logical: 0 }),
+        }
+    }
+
+    /// The shared accountant this tier charges against.
+    #[inline]
+    pub fn shared(&self) -> &Arc<SpillShared> {
+        &self.shared
+    }
+
+    /// Append one encoded entry; returns its `(segment, offset)`
+    /// address. Entries never span segments: when the open segment
+    /// cannot hold `entry`, it is sealed (checksummed, evictable) and a
+    /// fresh one opens — oversized entries get a dedicated segment.
+    pub fn append(&self, entry: &[u8]) -> Result<(u32, u32)> {
+        let need = entry.len();
+        let seg_bytes = self.shared.seg_bytes;
+        let mut inner = self.inner.lock_recover();
+        let start_new = match inner.slots.last() {
+            None => true,
+            Some(s) => s.len as usize + need > seg_bytes,
+        };
+        if start_new {
+            if let Some(open) = inner.slots.last_mut() {
+                if let Some(b) = open.bytes.as_deref() {
+                    open.checksum = seg_checksum(b);
+                }
+                open.sealed = true;
+            }
+            inner.slots.push(SegSlot {
+                bytes: Some(Vec::with_capacity(seg_bytes.max(need))),
+                len: 0,
+                checksum: 0,
+                disk: None,
+                referenced: true,
+                sealed: false,
+            });
+        }
+        let seg = inner.slots.len() - 1;
+        let slot = &mut inner.slots[seg];
+        let off = slot.len;
+        let Some(buf) = slot.bytes.as_mut() else {
+            return Err(Error::runtime("open spill segment is not resident"));
+        };
+        buf.extend_from_slice(entry);
+        slot.len += need as u32;
+        slot.referenced = true;
+        inner.logical += need as u64;
+        self.shared.resident.fetch_add(need as u64, Ordering::Relaxed);
+        self.enforce_budget(&mut inner, seg)?;
+        Ok((seg as u32, off))
+    }
+
+    /// Run `f` over segment `seg`'s bytes, faulting them in from the
+    /// spill file first if the segment was evicted. The resident fast
+    /// path is lock + ref-bit + call — no allocation, no I/O.
+    pub fn with_segment<T>(&self, seg: u32, f: impl FnOnce(&[u8]) -> T) -> Result<T> {
+        let idx = seg as usize;
+        let mut inner = self.inner.lock_recover();
+        if idx >= inner.slots.len() {
+            return Err(Error::runtime(format!(
+                "spill segment {seg} out of range ({} segments)",
+                inner.slots.len()
+            )));
+        }
+        // lint: hotpath
+        if inner.slots[idx].bytes.is_some() {
+            inner.slots[idx].referenced = true;
+            let slot = &inner.slots[idx];
+            let Some(b) = slot.bytes.as_deref() else {
+                return Err(Error::runtime("resident spill segment lost its bytes"));
+            };
+            return Ok(f(&b[..slot.len as usize]));
+        }
+        // lint: hotpath-end
+        // cold path: fault the segment back in and verify integrity
+        let len = inner.slots[idx].len as usize;
+        let Some(disk_off) = inner.slots[idx].disk else {
+            return Err(Error::runtime(format!(
+                "spill segment {seg} is neither resident nor on disk"
+            )));
+        };
+        let buf = self.shared.read_segment(disk_off, len)?;
+        if seg_checksum(&buf) != inner.slots[idx].checksum {
+            return Err(Error::runtime(format!(
+                "spill segment {seg} failed checksum verification at file offset \
+                 {disk_off} ({len} bytes): spill file truncated or corrupted"
+            )));
+        }
+        self.shared.faults.fetch_add(1, Ordering::Relaxed);
+        self.shared.resident.fetch_add(len as u64, Ordering::Relaxed);
+        inner.slots[idx].bytes = Some(buf);
+        inner.slots[idx].referenced = true;
+        self.enforce_budget(&mut inner, idx)?;
+        let slot = &inner.slots[idx];
+        let Some(b) = slot.bytes.as_deref() else {
+            return Err(Error::runtime("faulted spill segment lost its bytes"));
+        };
+        Ok(f(&b[..slot.len as usize]))
+    }
+
+    /// Evict cold sealed segments until the shared resident gauge fits
+    /// the budget (or nothing in *this* tier is evictable — the open
+    /// segment and `protect` never leave RAM, so the budget is soft by
+    /// up to two segments per tier).
+    fn enforce_budget(&self, inner: &mut TierInner, protect: usize) -> Result<()> {
+        if self.shared.budget == u64::MAX {
+            return Ok(());
+        }
+        while self.shared.resident.load(Ordering::Relaxed) > self.shared.budget {
+            let n = inner.slots.len();
+            let mut victim = None;
+            // clock second-chance: one forgiveness lap, then one take lap
+            for _ in 0..2 * n {
+                let i = inner.clock % n;
+                inner.clock = inner.clock.wrapping_add(1);
+                let s = &mut inner.slots[i];
+                if i == protect || !s.sealed || s.bytes.is_none() {
+                    continue;
+                }
+                if s.referenced {
+                    s.referenced = false;
+                    continue;
+                }
+                victim = Some(i);
+                break;
+            }
+            let Some(i) = victim else {
+                return Ok(()); // nothing evictable here; other tiers will shed
+            };
+            if inner.slots[i].disk.is_none() {
+                let Some(b) = inner.slots[i].bytes.as_deref() else {
+                    return Err(Error::runtime("eviction victim lost its bytes"));
+                };
+                let off = self.shared.write_segment(b)?;
+                inner.slots[i].disk = Some(off);
+            }
+            let len = inner.slots[i].len as u64;
+            inner.slots[i].bytes = None;
+            self.shared.resident.fetch_sub(len, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Total logical bytes held (resident or spilled) — the spill-mode
+    /// analogue of the compressed arena's summed segment lengths.
+    pub fn logical_bytes(&self) -> u64 {
+        self.inner.lock_recover().logical
+    }
+
+    /// Bytes of this tier currently resident in RAM.
+    pub fn resident_bytes(&self) -> u64 {
+        let inner = self.inner.lock_recover();
+        inner
+            .slots
+            .iter()
+            .filter(|s| s.bytes.is_some())
+            .map(|s| s.len as u64)
+            .sum()
+    }
+
+    /// Number of segments (resident + spilled).
+    pub fn segment_count(&self) -> usize {
+        self.inner.lock_recover().slots.len()
+    }
+
+    /// Logical length of segment `seg`, if it exists (invariant audits).
+    pub fn segment_len(&self, seg: u32) -> Option<u32> {
+        self.inner.lock_recover().slots.get(seg as usize).map(|s| s.len)
+    }
+
+    /// Drop every segment and release its resident accounting. Spill
+    /// file space already written stays orphaned until the accountant
+    /// drops — acceptable for the epoch-style cache resets `clear` is
+    /// used for, since the file is run-private scratch.
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock_recover();
+        let resident: u64 = inner
+            .slots
+            .iter()
+            .filter(|s| s.bytes.is_some())
+            .map(|s| s.len as u64)
+            .sum();
+        self.shared.resident.fetch_sub(resident, Ordering::Relaxed);
+        inner.slots.clear();
+        inner.clock = 0;
+        inner.logical = 0;
+    }
+}
+
+impl Clone for SpillTier {
+    /// Deep-clones the resident segments (charging them to the shared
+    /// accountant) and shares the accountant + spill file, so evicted
+    /// segments of the clone read from the same offsets — segments are
+    /// immutable once sealed, so the shared file stays consistent.
+    fn clone(&self) -> Self {
+        let inner = self.inner.lock_recover();
+        let mut cloned_resident = 0u64;
+        let slots: Vec<SegSlot> = inner
+            .slots
+            .iter()
+            .map(|s| {
+                if s.bytes.is_some() {
+                    cloned_resident += s.len as u64;
+                }
+                SegSlot {
+                    bytes: s.bytes.clone(),
+                    len: s.len,
+                    checksum: s.checksum,
+                    disk: s.disk,
+                    referenced: s.referenced,
+                    sealed: s.sealed,
+                }
+            })
+            .collect();
+        self.shared.resident.fetch_add(cloned_resident, Ordering::Relaxed);
+        SpillTier {
+            shared: Arc::clone(&self.shared),
+            inner: Mutex::new(TierInner {
+                slots,
+                clock: inner.clock,
+                logical: inner.logical,
+            }),
+        }
+    }
+}
+
+impl Drop for SpillTier {
+    fn drop(&mut self) {
+        let inner = match self.inner.get_mut() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let resident: u64 = inner
+            .slots
+            .iter()
+            .filter(|s| s.bytes.is_some())
+            .map(|s| s.len as u64)
+            .sum();
+        self.shared.resident.fetch_sub(resident, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_shared(budget: u64) -> Arc<SpillShared> {
+        SpillShared::new(&SpillConfig { dir: None, budget })
+    }
+
+    fn read_back(t: &SpillTier, seg: u32, off: u32, len: usize) -> Vec<u8> {
+        t.with_segment(seg, |b| b[off as usize..off as usize + len].to_vec()).unwrap()
+    }
+
+    #[test]
+    fn unbounded_budget_never_creates_a_file() {
+        let shared = tiny_shared(u64::MAX);
+        let t = SpillTier::new(Arc::clone(&shared));
+        for i in 0..100u8 {
+            t.append(&[i; 100]).unwrap();
+        }
+        assert!(shared.file_path().is_none());
+        assert_eq!(shared.stats().spilled_bytes, 0);
+        assert_eq!(shared.stats().faults, 0);
+        assert_eq!(shared.stats().resident_bytes, 100 * 100);
+        assert_eq!(t.logical_bytes(), 100 * 100);
+    }
+
+    #[test]
+    fn bounded_budget_shrinks_the_segment_size() {
+        assert_eq!(tiny_shared(u64::MAX).seg_bytes(), SEG_BYTES);
+        assert_eq!(tiny_shared(1).seg_bytes(), 512, "tight budgets floor at 512");
+        assert_eq!(tiny_shared(65_536).seg_bytes(), 16_384, "budget / 4");
+        assert_eq!(tiny_shared(u64::MAX - 1).seg_bytes(), SEG_BYTES, "ceiling");
+    }
+
+    #[test]
+    fn rollover_seals_segments_at_seg_bytes() {
+        let t = SpillTier::new(tiny_shared(u64::MAX));
+        let entry = vec![7u8; SEG_BYTES / 4 + 1];
+        let mut addrs = Vec::new();
+        for _ in 0..8 {
+            addrs.push(t.append(&entry).unwrap());
+        }
+        assert!(t.segment_count() > 1, "rollover happened");
+        for &(seg, off) in &addrs {
+            assert_eq!(read_back(&t, seg, off, entry.len()), entry);
+        }
+    }
+
+    #[test]
+    fn oversized_entry_gets_dedicated_segment() {
+        let t = SpillTier::new(tiny_shared(u64::MAX));
+        let big = vec![3u8; SEG_BYTES * 2 + 17];
+        let (seg, off) = t.append(&big).unwrap();
+        assert_eq!(off, 0);
+        assert_eq!(t.segment_len(seg), Some(big.len() as u32));
+        assert_eq!(read_back(&t, seg, off, big.len()), big);
+    }
+
+    #[test]
+    fn eviction_and_fault_in_round_trip() {
+        let dir = std::env::temp_dir();
+        let shared = SpillShared::new(&SpillConfig {
+            dir: Some(dir),
+            // budget below two sealed segments: forces steady eviction
+            budget: (SEG_BYTES + SEG_BYTES / 2) as u64,
+        });
+        let t = SpillTier::new(Arc::clone(&shared));
+        // fill several segments with recognizable patterns
+        let mut addrs = Vec::new();
+        let entry_len = SEG_BYTES / 3;
+        for i in 0..12u8 {
+            let entry = vec![i; entry_len];
+            addrs.push((t.append(&entry).unwrap(), i));
+        }
+        let stats = shared.stats();
+        assert!(stats.spilled_bytes > 0, "eviction must have written the file");
+        assert!(shared.file_path().is_some());
+        assert!(
+            stats.resident_bytes <= shared.budget() + 2 * SEG_BYTES as u64,
+            "resident {} way past budget {}",
+            stats.resident_bytes,
+            shared.budget()
+        );
+        // every entry reads back exactly, faulting as needed
+        for &((seg, off), i) in &addrs {
+            assert_eq!(read_back(&t, seg, off, entry_len), vec![i; entry_len]);
+        }
+        assert!(shared.stats().faults > 0, "reads of evicted segments fault");
+        // and again in reverse order (thrash the clock both ways)
+        for &((seg, off), i) in addrs.iter().rev() {
+            assert_eq!(read_back(&t, seg, off, entry_len), vec![i; entry_len]);
+        }
+    }
+
+    #[test]
+    fn truncated_file_surfaces_structured_error() {
+        let shared = SpillShared::new(&SpillConfig { dir: None, budget: 1 });
+        let t = SpillTier::new(Arc::clone(&shared));
+        let entry = vec![9u8; SEG_BYTES / 2];
+        let (seg0, off0) = t.append(&entry).unwrap();
+        for _ in 0..6 {
+            t.append(&entry).unwrap(); // push seg0 out
+        }
+        let path = shared.file_path().expect("eviction created the file");
+        // truncate the file: the fault-in read must fail structurally
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(1)
+            .unwrap();
+        let err = t.with_segment(seg0, |b| b[off0 as usize]).unwrap_err();
+        assert!(
+            matches!(err, Error::Io { .. }),
+            "truncated read must be a structured io error, got: {err}"
+        );
+    }
+
+    #[test]
+    fn corrupted_file_fails_checksum_with_structured_error() {
+        let shared = SpillShared::new(&SpillConfig { dir: None, budget: 1 });
+        let t = SpillTier::new(Arc::clone(&shared));
+        let entry = vec![5u8; SEG_BYTES / 2];
+        let (seg0, _) = t.append(&entry).unwrap();
+        for _ in 0..6 {
+            t.append(&entry).unwrap();
+        }
+        let path = shared.file_path().expect("eviction created the file");
+        // flip bytes at the start of the file (where seg0 landed)
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.write_all_at(&[0xFF, 0xFE, 0xFD, 0xFC], 0).unwrap();
+        let err = t.with_segment(seg0, |b| b.len()).unwrap_err();
+        assert!(
+            matches!(&err, Error::Runtime(m) if m.contains("checksum")),
+            "corruption must fail the checksum, got: {err}"
+        );
+    }
+
+    #[test]
+    fn spill_file_removed_when_last_holder_drops() {
+        let shared = SpillShared::new(&SpillConfig { dir: None, budget: 1 });
+        let t = SpillTier::new(Arc::clone(&shared));
+        for _ in 0..6 {
+            t.append(&vec![1u8; SEG_BYTES / 2]).unwrap();
+        }
+        let path = shared.file_path().expect("file exists");
+        assert!(path.exists());
+        drop(t);
+        assert!(path.exists(), "file outlives individual tiers");
+        drop(shared);
+        assert!(!path.exists(), "last holder removes the spill file");
+    }
+
+    #[test]
+    fn clone_and_drop_keep_the_resident_gauge_balanced() {
+        let shared = tiny_shared(u64::MAX);
+        let t = SpillTier::new(Arc::clone(&shared));
+        t.append(&[1u8; 1000]).unwrap();
+        let before = shared.stats().resident_bytes;
+        let t2 = t.clone();
+        assert_eq!(shared.stats().resident_bytes, 2 * before);
+        drop(t2);
+        assert_eq!(shared.stats().resident_bytes, before);
+        t.clear();
+        assert_eq!(shared.stats().resident_bytes, 0);
+        assert_eq!(t.logical_bytes(), 0);
+    }
+
+    #[test]
+    fn shared_file_interleaves_two_tiers() {
+        let shared = SpillShared::new(&SpillConfig { dir: None, budget: 1 });
+        let a = SpillTier::new(Arc::clone(&shared));
+        let b = SpillTier::new(Arc::clone(&shared));
+        let ea = vec![0xAAu8; SEG_BYTES / 2];
+        let eb = vec![0xBBu8; SEG_BYTES / 2];
+        let mut addrs = Vec::new();
+        for _ in 0..5 {
+            addrs.push((true, a.append(&ea).unwrap()));
+            addrs.push((false, b.append(&eb).unwrap()));
+        }
+        for &(is_a, (seg, off)) in &addrs {
+            let (tier, want) = if is_a { (&a, &ea) } else { (&b, &eb) };
+            assert_eq!(&read_back(tier, seg, off, want.len()), want);
+        }
+    }
+}

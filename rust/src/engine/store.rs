@@ -9,7 +9,7 @@
 //! assigned in intern order, so `0..len` *is* the paper's `allGenCk`
 //! insertion order — no separate order list.
 //!
-//! Two storage modes share one id table and one external contract
+//! Three storage modes share one id table and one external contract
 //! (ids, order, and every report are byte-identical across modes):
 //!
 //! - [`StoreMode::Plain`]: one flat `Vec<u64>`; configuration `id`
@@ -24,11 +24,19 @@
 //!   {delta, full-row} so a bad parent hint can never inflate an entry
 //!   past its varint full-row size. Reads reconstruct into a caller
 //!   buffer ([`ConfigStore::get_into`] / [`RowCursor`]).
+//! - [`StoreMode::Spill`]: the compressed layout with its segments held
+//!   by a [`SpillTier`] instead of plain `Vec`s — a budget-bounded hot
+//!   cache that evicts cold segments to an append-only spill file and
+//!   faults them back on demand, so exploration can scale past RAM.
+//!   Reads go through the fallible `try_*` surface, since a fault-in
+//!   can fail with a structured I/O error.
 //!
 //! The open-addressed (linear-probe) id table is mode-independent: it
 //! hashes and compares *decoded* rows, so dedup semantics never change.
-//! In compressed mode each entry also keeps a 1-byte hash tag that
-//! filters ~255/256 of probe collisions before paying for a decode.
+//! In compressed and spill modes each entry also keeps a 1-byte hash tag
+//! that filters ~255/256 of probe collisions before paying for a decode
+//! — and, in spill mode, before risking a disk fault: the tag array
+//! stays resident, so the common negative probe never touches disk.
 //!
 //! std-only, no unsafe: the arenas are ordinary `Vec`s, so `get` borrows
 //! are checked and interning while a slice is borrowed is a compile
@@ -36,6 +44,10 @@
 //! folding, which is the natural phase structure anyway).
 
 use std::hash::Hasher;
+use std::sync::Arc;
+
+use super::spill::{SpillConfig, SpillShared, SpillStats, SpillTier};
+use crate::error::{Error, Result};
 
 /// Empty-slot sentinel (also caps the store at `u32::MAX - 1` configs —
 /// two orders of magnitude past anything the explorer can hold).
@@ -47,8 +59,9 @@ const WIDTH_UNSET: usize = usize::MAX;
 /// Compressed-arena segment size. Segments are append-only and never
 /// reallocate once full, so decode offsets stay stable without pinning
 /// one giant allocation (an entry larger than this gets a dedicated
-/// oversized segment).
-const SEG_BYTES: usize = 64 * 1024;
+/// oversized segment). Shared with the spill tier, whose segments use
+/// the same rollover rule — the segment is the spill/paging unit.
+pub(crate) const SEG_BYTES: usize = 64 * 1024;
 
 /// Maximum parent-chain length in compressed mode. A decode replays at
 /// most this many delta entries on top of one full row; interns that
@@ -65,6 +78,10 @@ pub enum StoreMode {
     /// decode into a caller buffer, bytes/config scales with how much a
     /// configuration differs from its parent.
     Compressed,
+    /// The compressed layout with disk-spillable segments: a bounded hot
+    /// cache keeps recent segments resident, cold ones page to an
+    /// append-only spill file and fault back on demand.
+    Spill,
 }
 
 impl StoreMode {
@@ -73,6 +90,7 @@ impl StoreMode {
         match s {
             "plain" => Some(StoreMode::Plain),
             "compressed" => Some(StoreMode::Compressed),
+            "spill" => Some(StoreMode::Spill),
             _ => None,
         }
     }
@@ -82,6 +100,7 @@ impl StoreMode {
         match self {
             StoreMode::Plain => "plain",
             StoreMode::Compressed => "compressed",
+            StoreMode::Spill => "spill",
         }
     }
 }
@@ -118,6 +137,9 @@ fn write_varint(out: &mut Vec<u8>, mut v: u64) {
 }
 
 /// Read one LEB128 varint starting at `*pos`, advancing `*pos` past it.
+/// Callers only hand this bytes the encoder wrote (spill fault-ins are
+/// checksum-verified first), so out-of-bounds indexing cannot trigger on
+/// externally corrupted data.
 #[inline]
 fn read_varint(bytes: &[u8], pos: &mut usize) -> u64 {
     let mut v = 0u64;
@@ -159,18 +181,21 @@ struct View<'a> {
     offsets: &'a [(u32, u32)],
     tags: &'a [u8],
     table: &'a [u32],
+    spill: Option<&'a SpillTier>,
 }
 
 /// Decode configuration `id` into `out` (cleared first). Plain mode is a
-/// straight copy; compressed mode walks the parent chain to its full-row
-/// anchor, then replays the deltas oldest-first. Wrapping arithmetic
-/// makes the round trip exact for every `u64` count.
-fn decode_into(v: &View<'_>, id: u32, out: &mut Vec<u64>) {
+/// straight copy; compressed and spill modes walk the parent chain to
+/// its full-row anchor, then replay the deltas oldest-first. Wrapping
+/// arithmetic makes the round trip exact for every `u64` count. Only the
+/// spill arm can fail (a segment fault-in hits disk).
+fn decode_into(v: &View<'_>, id: u32, out: &mut Vec<u64>) -> Result<()> {
     match v.mode {
         StoreMode::Plain => {
             let i = id as usize;
             out.clear();
             out.extend_from_slice(&v.counts[i * v.width..(i + 1) * v.width]);
+            Ok(())
         }
         StoreMode::Compressed => {
             let mut stack = [0u32; MAX_CHAIN as usize + 1];
@@ -208,24 +233,82 @@ fn decode_into(v: &View<'_>, id: u32, out: &mut Vec<u64>) {
                     col += 1;
                 }
             }
+            Ok(())
+        }
+        StoreMode::Spill => {
+            let Some(tier) = v.spill else {
+                return Err(Error::runtime("spill-mode store has no segment tier"));
+            };
+            let width = v.width;
+            let mut stack = [0u32; MAX_CHAIN as usize + 1];
+            let mut depth = 0usize;
+            let mut cur = id;
+            loop {
+                let (seg, off) = v.offsets[cur as usize];
+                // one fault-in-aware access per chain entry; the closure
+                // fills `out` directly when it finds the full-row anchor
+                let back = tier.with_segment(seg, |seg_bytes| {
+                    let bytes = &seg_bytes[off as usize..];
+                    let mut pos = 0usize;
+                    let back = read_varint(bytes, &mut pos);
+                    if back == 0 {
+                        out.clear();
+                        out.reserve(width);
+                        for _ in 0..width {
+                            out.push(read_varint(bytes, &mut pos));
+                        }
+                    }
+                    back
+                })?;
+                if back == 0 {
+                    break;
+                }
+                stack[depth] = cur;
+                depth += 1;
+                cur -= back as u32;
+            }
+            for k in (0..depth).rev() {
+                let (seg, off) = v.offsets[stack[k] as usize];
+                tier.with_segment(seg, |seg_bytes| {
+                    let bytes = &seg_bytes[off as usize..];
+                    let mut pos = 0usize;
+                    let _back = read_varint(bytes, &mut pos);
+                    let m = read_varint(bytes, &mut pos) as usize;
+                    let mut col = 0usize;
+                    for _ in 0..m {
+                        col += read_varint(bytes, &mut pos) as usize;
+                        let d = unzigzag(read_varint(bytes, &mut pos));
+                        out[col] = out[col].wrapping_add(d as u64);
+                        col += 1;
+                    }
+                })?;
+            }
+            Ok(())
         }
     }
 }
 
 /// Does interned `id` hold exactly `c`? `tag` is the low hash byte of
-/// `c` (compressed mode filters on it before decoding).
-fn row_matches(v: &View<'_>, id: u32, c: &[u64], tag: u8, scratch: &mut Vec<u64>) -> bool {
+/// `c` (compressed and spill modes filter on it before decoding — the
+/// tag array is always resident, so a tag miss costs no disk access).
+fn row_matches(
+    v: &View<'_>,
+    id: u32,
+    c: &[u64],
+    tag: u8,
+    scratch: &mut Vec<u64>,
+) -> Result<bool> {
     match v.mode {
         StoreMode::Plain => {
             let i = id as usize;
-            &v.counts[i * v.width..(i + 1) * v.width] == c
+            Ok(&v.counts[i * v.width..(i + 1) * v.width] == c)
         }
-        StoreMode::Compressed => {
+        StoreMode::Compressed | StoreMode::Spill => {
             if v.tags[id as usize] != tag {
-                return false;
+                return Ok(false);
             }
-            decode_into(v, id, scratch);
-            scratch.as_slice() == c
+            decode_into(v, id, scratch)?;
+            Ok(scratch.as_slice() == c)
         }
     }
 }
@@ -237,16 +320,16 @@ enum Probe {
 }
 
 /// Linear-probe the id table for `c` (hash `h`).
-fn probe(v: &View<'_>, c: &[u64], h: u64, scratch: &mut Vec<u64>) -> Probe {
+fn probe(v: &View<'_>, c: &[u64], h: u64, scratch: &mut Vec<u64>) -> Result<Probe> {
     let mask = v.table.len() - 1;
     let tag = h as u8;
     let mut i = (h as usize) & mask;
     loop {
         match v.table[i] {
-            EMPTY => return Probe::Vacant(i),
+            EMPTY => return Ok(Probe::Vacant(i)),
             id => {
-                if row_matches(v, id, c, tag, scratch) {
-                    return Probe::Found(id);
+                if row_matches(v, id, c, tag, scratch)? {
+                    return Ok(Probe::Found(id));
                 }
             }
         }
@@ -265,11 +348,12 @@ pub struct ConfigStore {
     counts: Vec<u64>,
     /// Compressed mode: append-only byte segments (≈[`SEG_BYTES`] each).
     segs: Vec<Vec<u8>>,
-    /// Compressed mode: `(segment, byte offset)` of each entry.
+    /// Compressed/spill modes: `(segment, byte offset)` of each entry.
     offsets: Vec<(u32, u32)>,
-    /// Compressed mode: parent-chain depth of each entry (0 = full row).
+    /// Compressed/spill modes: parent-chain depth of each entry (0 =
+    /// full row).
     chain: Vec<u8>,
-    /// Compressed mode: low hash byte of each row (probe filter).
+    /// Compressed/spill modes: low hash byte of each row (probe filter).
     tags: Vec<u8>,
     /// Open-addressed id table (power-of-two; `EMPTY` = free slot).
     table: Vec<u32>,
@@ -283,6 +367,9 @@ pub struct ConfigStore {
     enc_full: Vec<u8>,
     /// Encode scratch: delta candidate entry.
     enc_delta: Vec<u8>,
+    /// Spill mode: the tiered segment cache (hot resident segments +
+    /// spill file). `None` in the other modes.
+    spill: Option<SpillTier>,
 }
 
 impl Default for ConfigStore {
@@ -298,6 +385,9 @@ impl ConfigStore {
     }
 
     /// Empty store in `mode`; the width locks in on the first intern.
+    /// A spill-mode store built this way owns a private, unbounded
+    /// accountant (never evicts); budgeted runs share one accountant
+    /// across stores via [`ConfigStore::with_spill_shared`].
     pub fn with_mode(mode: StoreMode) -> Self {
         ConfigStore {
             mode,
@@ -313,6 +403,12 @@ impl ConfigStore {
             prev_buf: Vec::new(),
             enc_full: Vec::new(),
             enc_delta: Vec::new(),
+            spill: match mode {
+                StoreMode::Spill => {
+                    Some(SpillTier::new(SpillShared::new(&SpillConfig::default())))
+                }
+                _ => None,
+            },
         }
     }
 
@@ -335,6 +431,27 @@ impl ConfigStore {
         s
     }
 
+    /// Empty spill-mode store charging `shared`'s budget; the width
+    /// locks in on the first intern. Every store of one run passes the
+    /// same accountant so the resident budget is global.
+    pub fn with_spill_shared(shared: Arc<SpillShared>) -> Self {
+        let mut s = ConfigStore::with_mode(StoreMode::Spill);
+        s.spill = Some(SpillTier::new(shared));
+        s
+    }
+
+    /// Empty spill-mode store over `width`-neuron configurations with
+    /// table capacity for about `configs`, charging `shared`'s budget.
+    pub fn with_spill_capacity(
+        width: usize,
+        configs: usize,
+        shared: Arc<SpillShared>,
+    ) -> Self {
+        let mut s = ConfigStore::with_mode_capacity(StoreMode::Spill, width, configs);
+        s.spill = Some(SpillTier::new(shared));
+        s
+    }
+
     /// The storage mode this store was built with.
     #[inline]
     pub fn mode(&self) -> StoreMode {
@@ -353,6 +470,18 @@ impl ConfigStore {
         self.len == 0
     }
 
+    /// Spill gauges of the backing accountant (`None` unless spill
+    /// mode). Shared-accountant stores report run-global figures.
+    pub fn spill_stats(&self) -> Option<SpillStats> {
+        self.spill.as_ref().map(|t| t.shared().stats())
+    }
+
+    /// Path of the spill file, once an eviction created one (`None`
+    /// otherwise — an unbounded budget never touches the filesystem).
+    pub fn spill_file(&self) -> Option<std::path::PathBuf> {
+        self.spill.as_ref().and_then(|t| t.shared().file_path())
+    }
+
     #[inline]
     fn view(&self) -> View<'_> {
         View {
@@ -364,6 +493,7 @@ impl ConfigStore {
             offsets: &self.offsets,
             tags: &self.tags,
             table: &self.table,
+            spill: self.spill.as_ref(),
         }
     }
 
@@ -386,29 +516,53 @@ impl ConfigStore {
     }
 
     /// Reconstruct the configuration of `id` into `out` (cleared first).
-    /// Works in both modes; compressed mode decodes the parent chain.
+    /// Works in every mode; compressed/spill modes decode the parent
+    /// chain. Panicking twin of [`ConfigStore::try_get_into`] — use the
+    /// fallible form on spill stores, where a fault-in can hit disk.
     ///
     /// # Panics
-    /// When `id` was never handed out by this store.
+    /// When `id` was never handed out by this store, or a spill fault-in
+    /// fails.
     pub fn get_into(&self, id: u32, out: &mut Vec<u64>) {
+        // lint: allow(L1) — documented panicking twin of try_get_into; only
+        // a spill-tier I/O failure can error, plain/compressed never do
+        self.try_get_into(id, out).expect("config store decode failed")
+    }
+
+    /// Reconstruct the configuration of `id` into `out` (cleared
+    /// first), surfacing spill fault-in failures as structured errors.
+    ///
+    /// # Panics
+    /// When `id` was never handed out by this store (a programming
+    /// error, unlike the I/O failures this returns).
+    pub fn try_get_into(&self, id: u32, out: &mut Vec<u64>) -> Result<()> {
         let i = id as usize;
         assert!(i < self.len, "config id {id} out of range ({} interned)", self.len);
-        decode_into(&self.view(), id, out);
+        decode_into(&self.view(), id, out)
     }
 
     /// The id of `c`, if interned. Zero-alloc in plain mode; compressed
     /// mode decodes probe candidates into a local buffer (use
     /// [`ConfigStore::contains_probe`] on a `&mut` store to reuse the
-    /// internal scratch instead).
+    /// internal scratch instead). Panicking twin of
+    /// [`ConfigStore::try_find`].
     pub fn find(&self, c: &[u64]) -> Option<u32> {
+        // lint: allow(L1) — documented panicking twin of try_find; only a
+        // spill-tier I/O failure can error
+        self.try_find(c).expect("config store probe failed")
+    }
+
+    /// The id of `c`, if interned — spill fault-in failures surface as
+    /// structured errors.
+    pub fn try_find(&self, c: &[u64]) -> Result<Option<u32>> {
         if self.len == 0 || c.len() != self.width {
-            return None;
+            return Ok(None);
         }
         let mut scratch = Vec::new();
-        match probe(&self.view(), c, hash_counts(c), &mut scratch) {
+        Ok(match probe(&self.view(), c, hash_counts(c), &mut scratch)? {
             Probe::Found(id) => Some(id),
             Probe::Vacant(_) => None,
-        }
+        })
     }
 
     /// Membership test. See [`ConfigStore::find`] for allocation notes.
@@ -417,40 +571,75 @@ impl ConfigStore {
         self.find(c).is_some()
     }
 
+    /// Fallible membership test (spill-aware form of
+    /// [`ConfigStore::contains`]).
+    #[inline]
+    pub fn try_contains(&self, c: &[u64]) -> Result<bool> {
+        Ok(self.try_find(c)?.is_some())
+    }
+
     /// Allocation-free membership test: probes with the store's own
     /// decode scratch. The hot-path form for lock-guarded stores, where
-    /// the guard hands out `&mut` anyway.
+    /// the guard hands out `&mut` anyway. Panicking twin of
+    /// [`ConfigStore::try_contains_probe`].
     pub fn contains_probe(&mut self, c: &[u64]) -> bool {
+        // lint: allow(L1) — documented panicking twin of try_contains_probe
+        self.try_contains_probe(c).expect("config store probe failed")
+    }
+
+    /// Allocation-free membership test, surfacing spill fault-in
+    /// failures as structured errors.
+    pub fn try_contains_probe(&mut self, c: &[u64]) -> Result<bool> {
         if self.len == 0 || c.len() != self.width {
-            return false;
+            return Ok(false);
         }
         let h = hash_counts(c);
         let mut scratch = std::mem::take(&mut self.dec_buf);
-        let found = matches!(probe(&self.view(), c, h, &mut scratch), Probe::Found(_));
+        let found = probe(&self.view(), c, h, &mut scratch);
         self.dec_buf = scratch;
-        found
+        Ok(matches!(found?, Probe::Found(_)))
     }
 
     /// Intern `c`: returns `(id, true)` when the configuration is new
     /// (stored exactly once) or `(id, false)` when it was already
     /// present. Ids are dense and assigned in intern order, identically
-    /// in both modes.
+    /// in every mode. Panicking twin of [`ConfigStore::try_intern`].
     ///
     /// # Panics
     /// When `c`'s width differs from the store's (one store serves one
-    /// system; mixing widths is a programming error, not a data error).
+    /// system; mixing widths is a programming error, not a data error),
+    /// or a spill fault-in fails.
     #[inline]
     pub fn intern(&mut self, c: &[u64]) -> (u32, bool) {
         self.intern_with_parent(c, None)
     }
 
+    /// Fallible form of [`ConfigStore::intern`] for spill stores.
+    #[inline]
+    pub fn try_intern(&mut self, c: &[u64]) -> Result<(u32, bool)> {
+        self.try_intern_with_parent(c, None)
+    }
+
     /// [`ConfigStore::intern`] with a delta-encoding hint: `parent` is
     /// the id of the BFS parent `c` was generated from. Plain mode
-    /// ignores the hint entirely; compressed mode tries a sparse delta
-    /// against it (falling back to the previous id, then to a full row —
-    /// whichever encodes smallest). The hint influences only the byte
-    /// layout, never ids or dedup results.
+    /// ignores the hint entirely; compressed/spill modes try a sparse
+    /// delta against it (falling back to the previous id, then to a full
+    /// row — whichever encodes smallest). The hint influences only the
+    /// byte layout, never ids or dedup results. Panicking twin of
+    /// [`ConfigStore::try_intern_with_parent`].
     pub fn intern_with_parent(&mut self, c: &[u64], parent: Option<u32>) -> (u32, bool) {
+        // lint: allow(L1) — documented panicking twin of
+        // try_intern_with_parent; only a spill-tier I/O failure can error
+        self.try_intern_with_parent(c, parent).expect("config store intern failed")
+    }
+
+    /// [`ConfigStore::intern_with_parent`], surfacing spill eviction and
+    /// fault-in failures as structured errors.
+    pub fn try_intern_with_parent(
+        &mut self,
+        c: &[u64],
+        parent: Option<u32>,
+    ) -> Result<(u32, bool)> {
         if self.width == WIDTH_UNSET {
             self.width = c.len();
         }
@@ -464,23 +653,23 @@ impl ConfigStore {
         if self.table.is_empty() {
             self.table = vec![EMPTY; 16];
         } else if (self.len + 1) * 8 > self.table.len() * 7 {
-            self.grow();
+            self.try_grow()?;
         }
         let h = hash_counts(c);
         let slot = {
             let mut scratch = std::mem::take(&mut self.dec_buf);
             let p = probe(&self.view(), c, h, &mut scratch);
             self.dec_buf = scratch;
-            p
+            p?
         };
-        match slot {
+        Ok(match slot {
             Probe::Found(id) => (id, false),
             Probe::Vacant(i) => {
                 let id = self.len as u32;
                 match self.mode {
                     StoreMode::Plain => self.counts.extend_from_slice(c),
-                    StoreMode::Compressed => {
-                        self.push_encoded(c, parent, id);
+                    StoreMode::Compressed | StoreMode::Spill => {
+                        self.try_push_encoded(c, parent, id)?;
                         self.tags.push(h as u8);
                     }
                 }
@@ -488,20 +677,28 @@ impl ConfigStore {
                 self.len += 1;
                 (id, true)
             }
-        }
+        })
     }
 
     /// Decode `id` into the `prev_buf` scratch (compressed-mode encoder
     /// helper).
-    fn decode_to_prev(&mut self, id: u32) {
+    fn try_decode_to_prev(&mut self, id: u32) -> Result<()> {
         let mut buf = std::mem::take(&mut self.prev_buf);
-        decode_into(&self.view(), id, &mut buf);
+        let res = decode_into(&self.view(), id, &mut buf);
         self.prev_buf = buf;
+        res
     }
 
     /// Append the compressed entry for `c` (id `id`), choosing the
-    /// smaller of a parent delta and a full varint row.
-    fn push_encoded(&mut self, c: &[u64], parent_hint: Option<u32>, id: u32) {
+    /// smaller of a parent delta and a full varint row. Compressed mode
+    /// appends into the in-RAM segment list; spill mode hands the entry
+    /// to the tier, which may evict a cold segment to stay on budget.
+    fn try_push_encoded(
+        &mut self,
+        c: &[u64],
+        parent_hint: Option<u32>,
+        id: u32,
+    ) -> Result<()> {
         // full-row candidate: back-tag 0, then `width` varint counts
         let mut full = std::mem::take(&mut self.enc_full);
         full.clear();
@@ -521,7 +718,7 @@ impl ConfigStore {
         if let Some(p) = parent {
             if self.chain[p as usize] < MAX_CHAIN {
                 delta_depth = self.chain[p as usize] + 1;
-                self.decode_to_prev(p);
+                self.try_decode_to_prev(p)?;
                 let mut enc = std::mem::take(&mut self.enc_delta);
                 enc.clear();
                 write_varint(&mut enc, (id - p) as u64);
@@ -541,24 +738,42 @@ impl ConfigStore {
         }
         let use_delta = have_delta && self.enc_delta.len() < self.enc_full.len();
         let need = if use_delta { self.enc_delta.len() } else { self.enc_full.len() };
-        let start_new_seg = match self.segs.last() {
-            None => true,
-            Some(s) => s.len() + need > SEG_BYTES,
+        let addr = match self.mode {
+            StoreMode::Plain => {
+                return Err(Error::runtime(
+                    "plain-mode store cannot hold encoded entries",
+                ))
+            }
+            StoreMode::Compressed => {
+                let start_new_seg = match self.segs.last() {
+                    None => true,
+                    Some(s) => s.len() + need > SEG_BYTES,
+                };
+                if start_new_seg {
+                    self.segs.push(Vec::with_capacity(SEG_BYTES.max(need)));
+                }
+                let seg_idx = (self.segs.len() - 1) as u32;
+                // lint: allow(L1) — a live segment was just ensured above
+                let seg = self.segs.last_mut().expect("segment just ensured");
+                let off = seg.len() as u32;
+                if use_delta {
+                    seg.extend_from_slice(&self.enc_delta);
+                } else {
+                    seg.extend_from_slice(&self.enc_full);
+                }
+                (seg_idx, off)
+            }
+            StoreMode::Spill => {
+                let Some(tier) = self.spill.as_ref() else {
+                    return Err(Error::runtime("spill-mode store has no segment tier"));
+                };
+                let entry = if use_delta { &self.enc_delta } else { &self.enc_full };
+                tier.append(entry)?
+            }
         };
-        if start_new_seg {
-            self.segs.push(Vec::with_capacity(SEG_BYTES.max(need)));
-        }
-        let seg_idx = (self.segs.len() - 1) as u32;
-        // lint: allow(L1) — ensure_segment_for just guaranteed a live segment
-        let seg = self.segs.last_mut().expect("segment just ensured");
-        let off = seg.len() as u32;
-        if use_delta {
-            seg.extend_from_slice(&self.enc_delta);
-        } else {
-            seg.extend_from_slice(&self.enc_full);
-        }
-        self.offsets.push((seg_idx, off));
+        self.offsets.push(addr);
         self.chain.push(if use_delta { delta_depth } else { 0 });
+        Ok(())
     }
 
     /// Iterate the interned configurations in id (= insertion) order.
@@ -573,30 +788,47 @@ impl ConfigStore {
     }
 
     /// Lending cursor over configurations in id order: plain mode lends
-    /// arena slices zero-copy, compressed mode decodes each row into an
-    /// internal buffer. Mode-neutral replacement for [`ConfigStore::iter`].
+    /// arena slices zero-copy, compressed/spill modes decode each row
+    /// into an internal buffer. Mode-neutral replacement for
+    /// [`ConfigStore::iter`].
     pub fn rows(&self) -> RowCursor<'_> {
         RowCursor { store: self, next: 0, buf: Vec::new() }
     }
 
-    /// Visit every configuration in id order as `(id, row)`.
-    pub fn for_each(&self, mut f: impl FnMut(u32, &[u64])) {
+    /// Visit every configuration in id order as `(id, row)`. Panicking
+    /// twin of [`ConfigStore::try_for_each`].
+    pub fn for_each(&self, f: impl FnMut(u32, &[u64])) {
+        // lint: allow(L1) — documented panicking twin of try_for_each; only
+        // a spill-tier I/O failure can error
+        self.try_for_each(f).expect("config store decode failed")
+    }
+
+    /// Visit every configuration in id order as `(id, row)`, surfacing
+    /// spill fault-in failures as structured errors.
+    pub fn try_for_each(&self, mut f: impl FnMut(u32, &[u64])) -> Result<()> {
         let mut cur = self.rows();
         let mut id = 0u32;
-        while let Some(row) = cur.next_row() {
+        while let Some(row) = cur.try_next_row()? {
             f(id, row);
             id += 1;
         }
+        Ok(())
     }
 
     /// Drop every entry but keep the table allocation (and mode/width),
-    /// ready to refill. Used for epoch-style cache eviction.
+    /// ready to refill. Used for epoch-style cache eviction. A spill
+    /// tier releases its resident accounting; file space it already
+    /// wrote stays orphaned until the accountant drops (the file is
+    /// run-private scratch, reclaimed then).
     pub fn clear(&mut self) {
         self.counts.clear();
         self.segs.clear();
         self.offsets.clear();
         self.chain.clear();
         self.tags.clear();
+        if let Some(tier) = &self.spill {
+            tier.clear();
+        }
         for s in &mut self.table {
             *s = EMPTY;
         }
@@ -613,12 +845,20 @@ impl ConfigStore {
     /// Bytes of configuration payload held (memory accounting; the
     /// compressed figure includes the 10 bytes/entry of offset + chain +
     /// tag index overhead so mode comparisons are honest; the id table
-    /// is identical across modes and excluded from both).
+    /// is identical across modes and excluded from both). Spill mode
+    /// reports *logical* bytes — resident plus spilled, the same figure
+    /// a compressed store would hold for the same entries; the resident
+    /// split lives in [`ConfigStore::spill_stats`].
     pub fn arena_bytes(&self) -> usize {
         match self.mode {
             StoreMode::Plain => self.counts.len() * 8,
             StoreMode::Compressed => {
                 self.segs.iter().map(|s| s.len()).sum::<usize>() + self.offsets.len() * 10
+            }
+            StoreMode::Spill => {
+                let logical =
+                    self.spill.as_ref().map(|t| t.logical_bytes()).unwrap_or(0) as usize;
+                logical + self.offsets.len() * 10
             }
         }
     }
@@ -674,6 +914,33 @@ impl ConfigStore {
                     assert!(d <= MAX_CHAIN, "entry {i}: chain depth {d} exceeds MAX_CHAIN");
                 }
             }
+            StoreMode::Spill => {
+                assert!(
+                    self.counts.is_empty() && self.segs.is_empty(),
+                    "spill mode must keep neither a word arena nor in-store segments"
+                );
+                assert_eq!(self.offsets.len(), self.len, "one offset entry per id");
+                assert_eq!(self.chain.len(), self.len, "one chain depth per id");
+                assert_eq!(self.tags.len(), self.len, "one probe tag per id");
+                // lint: allow(L1) — invariant audit: panicking on a broken
+                // store is this function's contract
+                let tier = self.spill.as_ref().expect("spill-mode store must own a tier");
+                for (i, &(seg, off)) in self.offsets.iter().enumerate() {
+                    let seg_len = tier.segment_len(seg);
+                    assert!(
+                        seg_len.is_some(),
+                        "entry {i}: segment {seg} out of range ({} segments)",
+                        tier.segment_count()
+                    );
+                    assert!(
+                        off < seg_len.unwrap_or(0),
+                        "entry {i}: offset {off} past the end of segment {seg}"
+                    );
+                }
+                for (i, &d) in self.chain.iter().enumerate() {
+                    assert!(d <= MAX_CHAIN, "entry {i}: chain depth {d} exceeds MAX_CHAIN");
+                }
+            }
         }
         let mut seen = vec![false; self.len];
         for &slot in &self.table {
@@ -693,16 +960,21 @@ impl ConfigStore {
         let mut scratch = Vec::new();
         let v = self.view();
         for id in 0..self.len as u32 {
-            decode_into(&v, id, &mut row);
+            let dec = decode_into(&v, id, &mut row);
+            assert!(dec.is_ok(), "row of id {id} must decode cleanly: {dec:?}");
             let found = match probe(&v, &row, hash_counts(&row), &mut scratch) {
-                Probe::Found(f) => Some(f),
-                Probe::Vacant(_) => None,
+                Ok(Probe::Found(f)) => Some(f),
+                Ok(Probe::Vacant(_)) => None,
+                Err(e) => {
+                    assert!(false, "probe of id {id} failed: {e}");
+                    None
+                }
             };
             assert_eq!(found, Some(id), "row of id {id} must probe back to itself");
         }
     }
 
-    fn grow(&mut self) {
+    fn try_grow(&mut self) -> Result<()> {
         let new_slots = (self.table.len() * 2).max(16);
         let mut table = vec![EMPTY; new_slots];
         let mask = new_slots - 1;
@@ -716,29 +988,32 @@ impl ConfigStore {
                     table[i] = id;
                 }
             }
-            StoreMode::Compressed => {
+            StoreMode::Compressed | StoreMode::Spill => {
                 let mut scratch = std::mem::take(&mut self.dec_buf);
-                {
+                let res = (|| {
                     let v = self.view();
                     for id in 0..v.len as u32 {
-                        decode_into(&v, id, &mut scratch);
+                        decode_into(&v, id, &mut scratch)?;
                         let mut i = (hash_counts(&scratch) as usize) & mask;
                         while table[i] != EMPTY {
                             i = (i + 1) & mask;
                         }
                         table[i] = id;
                     }
-                }
+                    Ok(())
+                })();
                 self.dec_buf = scratch;
+                res?;
             }
         }
         self.table = table;
+        Ok(())
     }
 }
 
 /// Lending row cursor from [`ConfigStore::rows`]: `next_row` hands out
 /// each configuration in id order, borrowing the arena directly in
-/// plain mode and an internal decode buffer in compressed mode.
+/// plain mode and an internal decode buffer in compressed/spill modes.
 pub struct RowCursor<'a> {
     store: &'a ConfigStore,
     next: u32,
@@ -748,18 +1023,27 @@ pub struct RowCursor<'a> {
 impl<'a> RowCursor<'a> {
     /// The next configuration, or `None` past the end. The returned
     /// slice borrows the cursor, so this is a lending iteration — copy
-    /// out anything that must outlive the next call.
+    /// out anything that must outlive the next call. Panicking twin of
+    /// [`RowCursor::try_next_row`].
     pub fn next_row(&mut self) -> Option<&[u64]> {
+        // lint: allow(L1) — documented panicking twin of try_next_row; only
+        // a spill-tier I/O failure can error
+        self.try_next_row().expect("config store decode failed")
+    }
+
+    /// The next configuration, or `None` past the end — spill fault-in
+    /// failures surface as structured errors.
+    pub fn try_next_row(&mut self) -> Result<Option<&[u64]>> {
         if (self.next as usize) >= self.store.len {
-            return None;
+            return Ok(None);
         }
         let id = self.next;
         self.next += 1;
         match self.store.mode {
-            StoreMode::Plain => Some(self.store.get(id)),
-            StoreMode::Compressed => {
-                self.store.get_into(id, &mut self.buf);
-                Some(self.buf.as_slice())
+            StoreMode::Plain => Ok(Some(self.store.get(id))),
+            StoreMode::Compressed | StoreMode::Spill => {
+                self.store.try_get_into(id, &mut self.buf)?;
+                Ok(Some(self.buf.as_slice()))
             }
         }
     }
@@ -950,6 +1234,77 @@ mod tests {
     }
 
     #[test]
+    fn spill_matches_plain_contract() {
+        let mut plain = ConfigStore::new();
+        let mut sp = ConfigStore::with_mode(StoreMode::Spill);
+        let rows: Vec<Vec<u64>> = vec![
+            vec![2, 1, 1],
+            vec![2, 1, 2],
+            vec![2, 1, 1], // dup
+            vec![0, 0, 0],
+            vec![u64::MAX, 1, 1 << 63],
+            vec![u64::MAX, 1, (1 << 63) + 1],
+            vec![2, 1, 2], // dup
+            vec![1, 1, 1],
+        ];
+        for (i, r) in rows.iter().enumerate() {
+            let hint = if i == 0 { None } else { Some(0u32) };
+            assert_eq!(
+                plain.intern(r),
+                sp.try_intern_with_parent(r, hint).unwrap(),
+                "row {i}: ids and newness agree across modes"
+            );
+        }
+        assert_eq!(plain.len(), sp.len());
+        let mut buf = Vec::new();
+        for id in 0..plain.len() as u32 {
+            sp.try_get_into(id, &mut buf).unwrap();
+            assert_eq!(plain.get(id), buf.as_slice(), "id {id} decodes identically");
+            assert_eq!(sp.try_find(&buf).unwrap(), Some(id));
+        }
+        assert!(sp.try_contains_probe(&[u64::MAX, 1, 1 << 63]).unwrap());
+        assert!(!sp.try_contains_probe(&[9, 9, 9]).unwrap());
+        // unbounded private accountant: no file, no evictions
+        assert_eq!(sp.spill_file(), None);
+        let stats = sp.spill_stats().unwrap();
+        assert_eq!((stats.spilled_bytes, stats.faults), (0, 0));
+        sp.check_invariants();
+    }
+
+    #[test]
+    fn spill_tiny_budget_evicts_and_round_trips() {
+        use super::super::spill::{SpillConfig, SpillShared};
+        // a budget of one byte forces eviction after every sealed segment
+        let shared = SpillShared::new(&SpillConfig { dir: None, budget: 1 });
+        let width = 32;
+        let mut s = ConfigStore::with_spill_capacity(width, 64, Arc::clone(&shared));
+        let mut expect = Vec::new();
+        for i in 0..5_000u64 {
+            let row: Vec<u64> = (0..width as u64)
+                .map(|j| (i * 0x9E37_79B9).wrapping_mul(j + 1) | (1 << 63))
+                .collect();
+            let (id, new) = s.try_intern(&row).unwrap();
+            assert!(new, "row {i}");
+            assert_eq!(id as u64, i);
+            expect.push(row);
+        }
+        let stats = shared.stats();
+        assert!(stats.spilled_bytes > 0, "tiny budget must evict");
+        assert!(stats.faults > 0, "interning probes fault evicted segments back");
+        assert!(s.spill_file().is_some());
+        let mut buf = Vec::new();
+        for (i, row) in expect.iter().enumerate() {
+            s.try_get_into(i as u32, &mut buf).unwrap();
+            assert_eq!(&buf, row, "row {i} after growth + rollover + eviction");
+            assert_eq!(s.try_find(row).unwrap(), Some(i as u32));
+        }
+        s.check_invariants();
+        // arena_bytes reports logical bytes: identical entries to a
+        // compressed store modulo the shared tier's segmentation
+        assert!(s.arena_bytes() > 0);
+    }
+
+    #[test]
     fn compressed_growth_and_segment_rollover() {
         // enough wide rows to force both table growth and several 64 KiB
         // segment rollovers (full rows of large values ≈ width*10 bytes)
@@ -1015,7 +1370,7 @@ mod tests {
 
     #[test]
     fn clear_keeps_mode_and_reuses_table() {
-        for mode in [StoreMode::Plain, StoreMode::Compressed] {
+        for mode in [StoreMode::Plain, StoreMode::Compressed, StoreMode::Spill] {
             let mut s = ConfigStore::with_mode_capacity(mode, 3, 64);
             for i in 0..50u64 {
                 s.intern(&[i, i + 1, i + 2]);
@@ -1033,7 +1388,7 @@ mod tests {
 
     #[test]
     fn rows_cursor_matches_iter_order() {
-        for mode in [StoreMode::Plain, StoreMode::Compressed] {
+        for mode in [StoreMode::Plain, StoreMode::Compressed, StoreMode::Spill] {
             let mut s = ConfigStore::with_mode(mode);
             s.intern(&[3, 0]);
             s.intern(&[1, 2]);
@@ -1055,8 +1410,10 @@ mod tests {
     fn store_mode_parse_names() {
         assert_eq!(StoreMode::parse("plain"), Some(StoreMode::Plain));
         assert_eq!(StoreMode::parse("compressed"), Some(StoreMode::Compressed));
+        assert_eq!(StoreMode::parse("spill"), Some(StoreMode::Spill));
         assert_eq!(StoreMode::parse("zip"), None);
         assert_eq!(StoreMode::Plain.name(), "plain");
         assert_eq!(StoreMode::Compressed.name(), "compressed");
+        assert_eq!(StoreMode::Spill.name(), "spill");
     }
 }

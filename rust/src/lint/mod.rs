@@ -42,6 +42,7 @@ const REQUIRED_FENCE_FILES: &[&str] = &[
     "rust/src/compute/host.rs",
     "rust/src/engine/explorer.rs",
     "rust/src/engine/parallel.rs",
+    "rust/src/engine/spill.rs",
 ];
 
 /// Lint a whole repository checkout rooted at `root`: every `.rs` file

@@ -38,7 +38,7 @@ const L1_SCOPE: &[&str] = &["serve", "engine", "coordinator"];
 /// `obs::PHASE_NAMES` — the real run parses the source instead.
 pub const FALLBACK_PHASES: &[&str] = &[
     "run", "level", "enumerate", "step", "fold", "expand", "wait", "request",
-    "delta_cache", "checkout",
+    "delta_cache", "checkout", "spill",
 ];
 
 /// Is `lines[at]` excused from `rule` by an allow directive on the same

@@ -47,7 +47,7 @@ pub const PHASE_NAMES: &[&str] = &[
     // spans
     "run", "level", "enumerate", "step", "fold", "expand", "wait", "request",
     // events
-    "delta_cache", "checkout",
+    "delta_cache", "checkout", "spill",
 ];
 
 /// An open span: an id and a start timestamp. `Copy`, so it crosses
@@ -404,7 +404,7 @@ mod tests {
 
     #[test]
     fn phase_vocabulary_is_closed() {
-        for name in ["run", "level", "enumerate", "step", "fold", "expand", "wait", "request", "delta_cache", "checkout"] {
+        for name in ["run", "level", "enumerate", "step", "fold", "expand", "wait", "request", "delta_cache", "checkout", "spill"] {
             assert!(PHASE_NAMES.contains(&name));
         }
     }

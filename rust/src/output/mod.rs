@@ -89,10 +89,21 @@ pub fn render_summary(sys: &SnpSystem, report: &ExploreReport) -> String {
             s.delta_hits, s.delta_misses, s.delta_cache_capacity
         )
     };
+    // Appended only in spill mode, so plain/compressed summaries stay
+    // byte-identical to every earlier release; the CI spill-smoke greps
+    // the fault count off this line.
+    let spill_line = if s.store_mode == "spill" {
+        format!(
+            "spill: {} bytes spilled, {} resident, {} faults\n",
+            s.spilled_bytes, s.resident_bytes, s.spill_faults
+        )
+    } else {
+        String::new()
+    };
     format!(
         "system `{}`: {} configs generated (depth {}), {} halting, stop: {}\n\
          {} expansions, {} steps in {} batches ({} spiking rows, {} stepping), Σψ = {}, elapsed {:?}\n\
-         {} store: {} arena bytes ({bytes_per_config:.1} bytes/config), {cache_line}\n",
+         {} store: {} arena bytes ({bytes_per_config:.1} bytes/config), {cache_line}\n{spill_line}",
         sys.name,
         report.visited.len(),
         report.depth_reached,
@@ -160,5 +171,20 @@ mod tests {
         .run();
         let s = render_summary(&sys, &rep);
         assert!(s.contains("delta cache off"));
+        assert!(!s.contains("spill:"), "non-spill summaries never grow the spill line");
+    }
+
+    #[test]
+    fn summary_spill_line_only_in_spill_mode() {
+        use crate::engine::StoreMode;
+        let sys = crate::generators::paper_pi();
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first().max_depth(4).store_mode(StoreMode::Spill),
+        )
+        .run();
+        let s = render_summary(&sys, &rep);
+        assert!(s.contains("spill: "), "spill mode appends its gauge line: {s}");
+        assert!(s.contains("faults\n"), "fault counter is grep-able: {s}");
     }
 }

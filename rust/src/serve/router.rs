@@ -248,6 +248,11 @@ impl ServeState {
             ("delta_cache_capacity", J::num(s.delta_cache_capacity as f64)),
             ("delta_hits", J::num(s.delta_hits as f64)),
             ("delta_misses", J::num(s.delta_misses as f64)),
+            // spill-tier gauges: all zero unless the run used the
+            // disk-spillable store mode
+            ("spilled_bytes", J::num(s.spilled_bytes as f64)),
+            ("resident_bytes", J::num(s.resident_bytes as f64)),
+            ("spill_faults_total", J::num(s.spill_faults as f64)),
         ]);
         let mut gauges = self.gauges.lock_recover();
         if gauges.len() >= self.cache.capacity() && !gauges.contains_key(system_hash) {
@@ -706,6 +711,25 @@ fn metrics(state: &ServeState) -> Response {
             }
         }
     }
+    // spill-tier families: one labelled sample per recorded system gauge
+    // (hash-sorted for deterministic scrapes; systems that never ran in
+    // spill mode report 0)
+    {
+        let gauges = state.gauges.lock_recover();
+        let mut rows: Vec<(&String, &J)> = gauges.iter().collect();
+        rows.sort_by(|a, b| a.0.cmp(b.0));
+        for (family, kind, key) in [
+            ("snapse_spilled_bytes", "gauge", "spilled_bytes"),
+            ("snapse_spill_resident_bytes", "gauge", "resident_bytes"),
+            ("snapse_spill_faults_total", "counter", "spill_faults_total"),
+        ] {
+            let _ = writeln!(out, "# TYPE {family} {kind}");
+            for (hash, g) in &rows {
+                let v = g.get(key).and_then(|j| j.as_f64()).unwrap_or(0.0);
+                let _ = writeln!(out, "{family}{{system=\"{hash}\"}} {v}");
+            }
+        }
+    }
     let _ = writeln!(out, "# TYPE snapse_requests_total counter");
     let _ = writeln!(out, "snapse_requests_total {}", state.requests.load(Ordering::Relaxed));
     let _ = writeln!(out, "# TYPE snapse_pools gauge");
@@ -899,6 +923,9 @@ mod tests {
         assert!(s.body.contains("\"arena_bytes\""), "{}", s.body);
         assert!(s.body.contains("\"bytes_per_config\""), "{}", s.body);
         assert!(s.body.contains("\"delta_hits\""), "{}", s.body);
+        assert!(s.body.contains("\"spilled_bytes\""), "{}", s.body);
+        assert!(s.body.contains("\"resident_bytes\""), "{}", s.body);
+        assert!(s.body.contains("\"spill_faults_total\""), "{}", s.body);
         // a cache hit computes nothing and must not disturb the gauge
         let before = route(&state, &get("/v1/stats")).body;
         route(&state, &post("/v1/run", r#"{"system":"paper_pi","depth":5}"#));
@@ -943,11 +970,15 @@ mod tests {
             "snapse_requests_total",
             "snapse_pools",
             "snapse_uptime_seconds",
+            "snapse_spilled_bytes",
+            "snapse_spill_resident_bytes",
+            "snapse_spill_faults_total",
         ] {
             assert!(r.body.contains(family), "missing {family}:\n{}", r.body);
         }
         // per-system families carry the system-hash label
         assert!(r.body.contains("snapse_delta_cache_entries{system=\""), "{}", r.body);
+        assert!(r.body.contains("snapse_spilled_bytes{system=\""), "{}", r.body);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! both search orders, with the cache on or off. Plus randomized round-trip
 //! fuzzing of the varint/parent-delta encoder itself on adversarial counts.
 
-use snapse::engine::{ConfigStore, ExploreOptions, Explorer, SearchOrder, StoreMode};
+use snapse::engine::{
+    ConfigStore, ExploreOptions, Explorer, SearchOrder, SpillConfig, SpillShared, StoreMode,
+};
 use snapse::snp::SnpSystem;
 use snapse::util::Rng;
 
@@ -62,6 +64,58 @@ fn compressed_store_identical_across_systems_workers_orders() {
                 );
             }
         }
+    }
+}
+
+/// The tentpole contract: the disk-spillable store is byte-identical to
+/// the plain reference at every observable surface, in both orders, at
+/// 1 and 4 workers — with budgets small enough that cold segments are
+/// demonstrably evicted to disk and faulted back mid-run.
+#[test]
+fn spill_store_identical_across_systems_workers_orders_and_budgets() {
+    for sys in systems() {
+        for order in [SearchOrder::BreadthFirst, SearchOrder::DepthFirst] {
+            let reference = observe(&sys, opts(order).max_configs(400));
+            for w in [1usize, 4] {
+                for budget in [1u64, 4096] {
+                    let got = observe(
+                        &sys,
+                        opts(order)
+                            .max_configs(400)
+                            .workers(w)
+                            .store_mode(StoreMode::Spill)
+                            .spill_budget(budget),
+                    );
+                    assert_eq!(
+                        got, reference,
+                        "{} {order:?}: spill store diverged at workers={w} budget={budget}",
+                        sys.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// At a 1-byte budget the spill tier must actually evict and fault on
+/// these workloads — identity alone could be trivially satisfied by a
+/// tier that never leaves RAM.
+#[test]
+fn tiny_budget_runs_do_evict_and_fault() {
+    // wide_ring(6,3,2) closes below one minimum segment (512 B) and can
+    // never seal, so the eviction assertion uses the two workloads whose
+    // capped arenas always exceed it
+    for sys in [snapse::generators::paper_pi(), snapse::generators::rule_heavy(6, 12, 2)] {
+        let rep = Explorer::new(
+            &sys,
+            ExploreOptions::breadth_first()
+                .max_configs(400)
+                .store_mode(StoreMode::Spill)
+                .spill_budget(1),
+        )
+        .run();
+        assert!(rep.stats.spilled_bytes > 0, "{}: nothing spilled", sys.name);
+        assert!(rep.stats.spill_faults > 0, "{}: nothing faulted back", sys.name);
     }
 }
 
@@ -127,10 +181,20 @@ fn compressed_round_trip_fuzz_against_plain_mirror() {
     let seed = 0xC0FF_EE11u64;
     println!("seed = {seed:#x}");
     let mut rng = Rng::new(seed);
+    // cumulative spill traffic: individual tiny-width trials may fit in
+    // one open segment, but across 50 trials eviction must have happened
+    let (mut spilled_total, mut faults_total) = (0u64, 0u64);
     for trial in 0..50 {
         let width = rng.range(1, 40);
         let mut plain = ConfigStore::with_mode(StoreMode::Plain);
         let mut comp = ConfigStore::with_mode(StoreMode::Compressed);
+        // third mirror: the spill store at a 1-byte budget, so cold
+        // segments are evicted to disk and faulted back all trial long
+        let mut sp = ConfigStore::with_spill_capacity(
+            width,
+            16,
+            SpillShared::new(&SpillConfig { dir: None, budget: 1 }),
+        );
         let mut rows: Vec<Vec<u64>> = Vec::new();
         let mut prev: Vec<u64> = (0..width).map(|_| *rng.choose(&EDGE)).collect();
         for step in 0..200 {
@@ -170,6 +234,14 @@ fn compressed_round_trip_fuzz_against_plain_mirror() {
                 (cid, cnew),
                 "trial {trial} step {step}: id/newness diverged for {row:?}"
             );
+            let (sid, snew) = sp
+                .try_intern_with_parent(&row, parent)
+                .expect("healthy spill file never errors");
+            assert_eq!(
+                (pid, pnew),
+                (sid, snew),
+                "trial {trial} step {step}: spill id/newness diverged for {row:?}"
+            );
             if pnew {
                 rows.push(row.clone());
             }
@@ -182,12 +254,24 @@ fn compressed_round_trip_fuzz_against_plain_mirror() {
             assert_eq!(&buf, want, "trial {trial}: id {id} decoded wrong");
             assert_eq!(plain.get(id as u32), want.as_slice());
             assert_eq!(comp.find(want), Some(id as u32), "trial {trial}: find missed id {id}");
+            sp.try_get_into(id as u32, &mut buf).expect("spill decode");
+            assert_eq!(&buf, want, "trial {trial}: spill id {id} decoded wrong");
+            assert_eq!(
+                sp.try_find(want).expect("spill find"),
+                Some(id as u32),
+                "trial {trial}: spill find missed id {id}"
+            );
         }
         assert_eq!(comp.len(), plain.len());
+        assert_eq!(sp.len(), plain.len());
         // structural audit (debug builds): table↔arena bijection, chain
-        // caps, segment containment — in both modes
+        // caps, segment containment — in all three modes
         plain.check_invariants();
         comp.check_invariants();
+        sp.check_invariants();
+        let st = sp.spill_stats().expect("spill store reports stats");
+        spilled_total += st.spilled_bytes;
+        faults_total += st.faults;
         // compressed cursor yields the exact interning order
         let mut cur = comp.rows();
         let mut i = 0usize;
@@ -197,6 +281,55 @@ fn compressed_round_trip_fuzz_against_plain_mirror() {
         }
         assert_eq!(i, rows.len());
     }
+    assert!(spilled_total > 0, "no trial ever evicted a segment");
+    assert!(faults_total > 0, "no trial ever faulted a segment back in");
+}
+
+/// A truncated spill file must surface a structured `Error` on fault-in
+/// — never a panic — and leave the store usable for resident segments.
+#[test]
+fn truncated_spill_file_surfaces_structured_error_not_panic() {
+    let shared = SpillShared::new(&SpillConfig { dir: None, budget: 1 });
+    let mut sp = ConfigStore::with_spill_capacity(16, 64, shared);
+    let mut rows: Vec<Vec<u64>> = Vec::new();
+    for i in 0..2_000u64 {
+        let row: Vec<u64> = (0..16).map(|j| i.wrapping_mul(0x9E37_79B9).wrapping_add(j)).collect();
+        sp.try_intern(&row).expect("healthy spill file never errors");
+        rows.push(row);
+    }
+    assert!(sp.spill_stats().expect("stats").spilled_bytes > 0, "budget 1 must spill");
+    let path = sp.spill_file().expect("an eviction created the file");
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&path)
+        .expect("open spill file")
+        .set_len(1)
+        .expect("truncate spill file");
+    let mut buf = Vec::new();
+    let err = (0..rows.len() as u32)
+        .find_map(|id| sp.try_get_into(id, &mut buf).err())
+        .expect("some id must fault from the truncated file");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("io error") || msg.contains("spill"),
+        "structured error names the failure: {msg}"
+    );
+}
+
+/// Dropping the last holder of a spill run removes its file — tiered
+/// runs never leak disk.
+#[test]
+fn spill_file_is_removed_when_the_store_drops() {
+    let shared = SpillShared::new(&SpillConfig { dir: None, budget: 1 });
+    let mut sp = ConfigStore::with_spill_capacity(8, 64, shared);
+    for i in 0..2_000u64 {
+        let row: Vec<u64> = (0..8).map(|j| i * 131 + j).collect();
+        sp.try_intern(&row).expect("healthy interning");
+    }
+    let path = sp.spill_file().expect("an eviction created the file");
+    assert!(path.exists(), "spill file on disk while the store lives");
+    drop(sp);
+    assert!(!path.exists(), "spill file removed with its last holder");
 }
 
 #[test]
